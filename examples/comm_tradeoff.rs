@@ -1,0 +1,81 @@
+//! Communication–performance tradeoff explorer.
+//!
+//! Sweeps the communication interval τ for Algorithm 1 on one preset and
+//! reports, per interconnect, the simulated time-to-final-loss breakdown
+//! — reproducing the paper's core motivation: as links get slower, larger
+//! τ wins even though each round makes slightly less optimization
+//! progress.
+//!
+//!     cargo run --release --example comm_tradeoff [--preset nano] [--budget 120]
+
+use anyhow::Result;
+
+use dsm::comm::CommModel;
+use dsm::config::{default_peak_lr, RunConfig};
+use dsm::outer::OuterConfig;
+use dsm::runtime::{Artifacts, ModelBundle, Runtime};
+use dsm::train::schedule::ScheduleConfig;
+use dsm::train::Trainer;
+use dsm::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
+    let preset = args.str_or("preset", "nano");
+    let budget = args.usize_or("budget", 120).map_err(anyhow::Error::msg)?;
+    let workers = 4usize;
+
+    let rt = Runtime::cpu()?;
+    let arts = Artifacts::load(&Artifacts::default_dir())?;
+    let bundle = std::rc::Rc::new(ModelBundle::load(&rt, arts.preset(&preset)?)?);
+    let bytes = bundle.info.param_count as u64 * 4;
+
+    println!("comm_tradeoff: preset={preset}, n={workers}, budget={budget} local steps\n");
+    let mut rows = Vec::new();
+    for tau in [1usize, 4, 12, 24, 36] {
+        let rounds = (budget / tau).max(1);
+        let mut cfg = RunConfig::paper_default(&preset);
+        cfg.tau = tau;
+        cfg.rounds = rounds;
+        cfg.n_workers = workers;
+        cfg.outer = OuterConfig::sign_momentum_paper(12.0);
+        cfg.schedule =
+            ScheduleConfig::cosine_paper(default_peak_lr(&preset), (rounds * tau) as u64);
+        cfg.eval_every = 0; // final eval only
+        cfg.tag = format!("tradeoff-tau{tau}");
+        let mut trainer = Trainer::with_bundle(cfg, bundle.clone(), &rt, &arts)?;
+        let res = trainer.run()?;
+        println!(
+            "tau {tau:>3}: val {:.4} | {} comm rounds | compute {:.1}s",
+            res.final_val, res.clock.comm_rounds, res.clock.compute_s
+        );
+        rows.push((tau, res));
+    }
+
+    println!("\nsimulated total seconds (compute + modeled comm):");
+    print!("{:>10}", "net\\tau");
+    for (tau, _) in &rows {
+        print!("{tau:>10}");
+    }
+    println!();
+    for net in ["nvlink", "infiniband", "ethernet", "wan"] {
+        let m = CommModel::preset(net).unwrap();
+        print!("{net:>10}");
+        let totals: Vec<f64> = rows
+            .iter()
+            .map(|(_, r)| r.clock.compute_s + r.clock.comm_rounds as f64 * m.allreduce_time(workers, bytes))
+            .collect();
+        for t in &totals {
+            print!("{t:>10.2}");
+        }
+        // best tau for this net
+        let best = rows
+            .iter()
+            .zip(&totals)
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|((tau, _), _)| *tau)
+            .unwrap();
+        println!("   <- best tau = {best}");
+    }
+    println!("\ncomm_tradeoff OK");
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the AOT'd `nano` GPT-2 artifacts, trains with **Algorithm 1**
+//! (distributed sign momentum, 4 workers, τ = 12) for a handful of
+//! communication rounds, and prints the loss curve.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use dsm::config::RunConfig;
+use dsm::runtime::{Artifacts, Runtime};
+use dsm::train::Trainer;
+
+fn main() -> Result<()> {
+    // 1. PJRT CPU client + AOT artifacts (produced once by `make artifacts`).
+    let rt = Runtime::cpu()?;
+    let arts = Artifacts::load(&Artifacts::default_dir())?;
+    println!("platform = {}, presets = {:?}", rt.platform(), arts.presets.keys());
+
+    // 2. A run configuration: the paper's defaults on the nano preset.
+    let mut cfg = RunConfig::paper_default("nano");
+    cfg.rounds = 8; // 8 communication rounds x tau=12 local steps x 4 workers
+    cfg.tag = "quickstart".into();
+    println!("config: {}", cfg.describe());
+
+    // 3. Train, watching validation loss fall from ~ln(256) = 5.55.
+    let mut trainer = Trainer::new(cfg, &rt, &arts)?;
+    let result = trainer.run_with_progress(|row| {
+        println!(
+            "round {:>2}  local steps {:>4}  train loss {:.4}  val loss {:.4}",
+            row.round, row.local_steps, row.train_loss, row.val_loss
+        );
+    })?;
+
+    println!(
+        "\nfinal validation loss {:.4} after {} comm rounds \
+         ({:.1} MB moved, {:.2}s simulated wall-clock)",
+        result.final_val,
+        result.clock.comm_rounds,
+        result.clock.bytes_communicated as f64 / 1e6,
+        result.clock.total_s(),
+    );
+    assert!(result.final_val < 5.0, "model should beat the uniform baseline");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,133 @@
+"""AOT compile path: lower the L2 model (+ L1 kernels) to HLO *text*.
+
+This is the only place Python touches the system; it runs once under
+`make artifacts` and never on the training hot path.  For every model
+preset it emits three executables plus one shared kernel artifact:
+
+    artifacts/<preset>_init.hlo.txt    init_step(seed u32[]) -> f32[P]
+    artifacts/<preset>_train.hlo.txt   train_step(params, tok, tgt) -> (loss, grads)
+    artifacts/<preset>_eval.hlo.txt    eval_step(params, tok, tgt) -> loss
+    artifacts/sign_update.hlo.txt      fused Algorithm-1 global step (chunked)
+    artifacts/manifest.json            shapes, param layout, file index
+
+Interchange format is HLO **text**, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+Lowering goes through stablehlo -> XlaComputation with return_tuple=True;
+the Rust runtime unwraps the tuple.
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import PRESETS, SIGN_UPDATE_BLOCK, SIGN_UPDATE_CHUNK
+from .kernels.sign_update import sign_update_chunk
+
+MANIFEST_VERSION = 1
+DEFAULT_PRESETS = ["nano", "small", "medium", "large"]
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax function -> HLO text via stablehlo -> XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: pathlib.Path, text: str) -> dict:
+    path.write_text(text)
+    return {
+        "file": path.name,
+        "bytes": len(text),
+        "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+    }
+
+
+def emit_preset(name: str, out: pathlib.Path, verbose: bool = True) -> dict:
+    cfg = PRESETS[name]
+    p = model.param_count(cfg)
+    fspec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tspec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    sspec = jax.ShapeDtypeStruct((), jnp.uint32)
+
+    entry = {"config": cfg.to_dict(), "param_count": p, "artifacts": {}}
+    lowerings = {
+        "init": jax.jit(lambda s: (model.init_step(cfg, s),)).lower(sspec),
+        "train": jax.jit(lambda f, a, b: model.train_step(cfg, f, a, b)).lower(
+            fspec, tspec, tspec
+        ),
+        "eval": jax.jit(lambda f, a, b: (model.eval_step(cfg, f, a, b),)).lower(
+            fspec, tspec, tspec
+        ),
+    }
+    for kind, lowered in lowerings.items():
+        t0 = time.time()
+        info = _write(out / f"{name}_{kind}.hlo.txt", to_hlo_text(lowered))
+        entry["artifacts"][kind] = info
+        if verbose:
+            print(
+                f"  {name}_{kind}: {info['bytes'] / 1e6:.2f} MB "
+                f"({time.time() - t0:.1f}s)"
+            )
+    entry["param_layout"] = [
+        {"name": n, "offset": off, "shape": list(shape)}
+        for n, (off, shape) in model.param_offsets(cfg).items()
+    ]
+    return entry
+
+
+def emit_sign_update(out: pathlib.Path) -> dict:
+    vspec = jax.ShapeDtypeStruct((SIGN_UPDATE_CHUNK,), jnp.float32)
+    sspec = jax.ShapeDtypeStruct((8,), jnp.float32)
+    lowered = jax.jit(
+        lambda x, m, d, s: sign_update_chunk(x, m, d, s)
+    ).lower(vspec, vspec, vspec, sspec)
+    info = _write(out / "sign_update.hlo.txt", to_hlo_text(lowered))
+    info.update({"chunk": SIGN_UPDATE_CHUNK, "block": SIGN_UPDATE_BLOCK})
+    return info
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument(
+        "--presets",
+        default=",".join(DEFAULT_PRESETS),
+        help="comma-separated preset names (see configs.PRESETS); 'all' "
+        "includes the full-size gpt2s proof-of-AOT",
+    )
+    args = ap.parse_args()
+    names = (
+        list(PRESETS) if args.presets == "all" else args.presets.split(",")
+    )
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {
+        "version": MANIFEST_VERSION,
+        "jax_version": jax.__version__,
+        "presets": {},
+    }
+    for name in names:
+        print(f"preset {name} ...")
+        manifest["presets"][name] = emit_preset(name, out)
+    print("sign_update kernel ...")
+    manifest["sign_update"] = emit_sign_update(out)
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    print(f"wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

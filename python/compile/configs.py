@@ -1,0 +1,67 @@
+"""Model presets shared by model.py, aot.py, and the pytest suite.
+
+Each preset fixes the *static* shapes baked into the AOT artifacts:
+(batch B, sequence S) for the train/eval steps, and the transformer
+dimensions.  The Rust side reads these back from artifacts/manifest.json.
+
+The `nano`..`large` presets are the scaled-down analogues of the paper's
+GPT-2 Small/Medium/Large (Table 1) sized for a single-CPU-core testbed;
+`gpt2s` is the paper's actual Small config (used to prove the full-size
+model AOTs; not swept in experiments). See DESIGN.md §3 "Scale".
+"""
+
+from dataclasses import dataclass, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_head: int
+    n_layer: int
+    seq: int
+    batch: int
+    # Pallas attention block sizes (queries / keys per tile).
+    block_q: int = 32
+    block_k: int = 32
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    def to_dict(self) -> dict:
+        d = asdict(self)
+        d["d_head"] = self.d_head
+        d["d_ff"] = self.d_ff
+        return d
+
+
+PRESETS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        # CI / unit-test scale.
+        ModelConfig("nano", vocab=256, d_model=96, n_head=3, n_layer=3, seq=64, batch=8),
+        # Paper-analogue sweep presets (Small / Medium / Large stand-ins).
+        ModelConfig("small", vocab=256, d_model=128, n_head=4, n_layer=4, seq=64, batch=8),
+        ModelConfig("medium", vocab=256, d_model=192, n_head=6, n_layer=6, seq=64, batch=8),
+        ModelConfig("large", vocab=256, d_model=256, n_head=8, n_layer=8, seq=64, batch=8),
+        # Paper's GPT-2 Small (Table 1); AOT-proof only on this testbed.
+        ModelConfig(
+            "gpt2s", vocab=50257, d_model=768, n_head=12, n_layer=12, seq=256, batch=1,
+            block_q=64, block_k=64,
+        ),
+    ]
+}
+
+# Chunk length for the fused sign-momentum update artifact: the Rust
+# coordinator applies the update over the flat parameter vector in chunks
+# of this many f32s (last chunk zero-padded), so ONE artifact serves every
+# model preset.
+SIGN_UPDATE_CHUNK = 65536
+SIGN_UPDATE_BLOCK = 4096

@@ -1,0 +1,215 @@
+"""L1 Pallas kernel: fused causal flash attention (forward + backward).
+
+The paper trains GPT-2; its compute hot-spot is causal self-attention.
+The authors ran CUDA/PyTorch — here the kernel is re-thought for the TPU
+execution model per DESIGN.md §6: instead of threadblocks staging tiles
+through shared memory, `BlockSpec`s express the HBM->VMEM schedule, the
+grid walks (batch, head, query-block), and the inner loop streams
+key/value tiles through VMEM with an online-softmax accumulator (the
+standard flash decomposition).  All matmuls are f32 `jnp.dot`s that map
+onto the MXU at full scale.
+
+`pallas_call` is not differentiable by default, so the public entry point
+`flash_attention` carries a custom VJP: the forward kernel saves the
+per-row logsumexp, and two backward kernels (one gridded over query
+blocks for dQ, one over key blocks for dK/dV) recompute probabilities
+flash-style instead of materializing the S x S matrix.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime loads.  Correctness is pinned to kernels/ref.py by pytest.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, *, block_q, block_k, scale):
+    """One (batch, head, q-block) program of the flash forward pass."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0] * scale  # (block_q, d_head)
+    seq = k_ref.shape[2]
+    d_head = q_ref.shape[3]
+    num_kb = seq // block_k
+
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[0, 0, pl.dslice(j * block_k, block_k), :]  # (block_k, d)
+        v = v_ref[0, 0, pl.dslice(j * block_k, block_k), :]
+        s = jnp.dot(q, k.T)  # (block_q, block_k)
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        # Fully-masked tiles contribute exp(NEG_INF - finite) == 0; keeping
+        # the loop bound static (num_kb, not qi+1) costs nothing under
+        # interpret and keeps the lowered HLO a fixed-trip-count loop.  On
+        # real TPU the bound would be qi+1 to skip above-diagonal tiles.
+        alpha = jnp.exp(m_i - m_new)
+        l_new = alpha * l_i + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + jnp.dot(p, v)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d_head), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(0, num_kb, body, (acc0, m0, l0))
+
+    o_ref[0, 0] = acc / l_i[:, None]
+    lse_ref[0, 0] = m_i + jnp.log(l_i)
+
+
+def _bwd_dq_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref, *, block_q, block_k, scale
+):
+    """dQ for one (batch, head, q-block): stream K/V tiles, recompute P."""
+    qi = pl.program_id(2)
+    q = q_ref[0, 0]
+    do = do_ref[0, 0]
+    lse = lse_ref[0, 0]  # (block_q,)
+    delta = delta_ref[0, 0]
+    seq = k_ref.shape[2]
+    num_kb = seq // block_k
+    q_pos = qi * block_q + jax.lax.iota(jnp.int32, block_q)
+
+    def body(j, dq):
+        k = k_ref[0, 0, pl.dslice(j * block_k, block_k), :]
+        v = v_ref[0, 0, pl.dslice(j * block_k, block_k), :]
+        s = jnp.dot(q, k.T) * scale
+        k_pos = j * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])  # masked entries -> 0
+        dp = jnp.dot(do, v.T)
+        ds = p * (dp - delta[:, None]) * scale
+        return dq + jnp.dot(ds, k)
+
+    dq = jax.lax.fori_loop(
+        0, num_kb, body, jnp.zeros((block_q, q_ref.shape[3]), jnp.float32)
+    )
+    dq_ref[0, 0] = dq
+
+
+def _bwd_dkv_kernel(
+    q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dk_ref, dv_ref, *, block_q, block_k, scale
+):
+    """dK/dV for one (batch, head, k-block): stream Q/dO tiles."""
+    kj = pl.program_id(2)
+    k = k_ref[0, 0]
+    v = v_ref[0, 0]
+    seq = q_ref.shape[2]
+    num_qb = seq // block_q
+    k_pos = kj * block_k + jax.lax.iota(jnp.int32, block_k)
+
+    def body(i, carry):
+        dk, dv = carry
+        q = q_ref[0, 0, pl.dslice(i * block_q, block_q), :]
+        do = do_ref[0, 0, pl.dslice(i * block_q, block_q), :]
+        lse = lse_ref[0, 0, pl.dslice(i * block_q, block_q)]
+        delta = delta_ref[0, 0, pl.dslice(i * block_q, block_q)]
+        s = jnp.dot(q, k.T) * scale  # (block_q, block_k)
+        q_pos = i * block_q + jax.lax.iota(jnp.int32, block_q)
+        mask = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(mask, s, NEG_INF)
+        p = jnp.exp(s - lse[:, None])
+        dv = dv + jnp.dot(p.T, do)
+        dp = jnp.dot(do, v.T)
+        ds = p * (dp - delta[:, None]) * scale
+        dk = dk + jnp.dot(ds.T, q)
+        return dk, dv
+
+    d_head = k_ref.shape[3]
+    dk0 = jnp.zeros((block_k, d_head), jnp.float32)
+    dv0 = jnp.zeros((block_k, d_head), jnp.float32)
+    dk, dv = jax.lax.fori_loop(0, num_qb, body, (dk0, dv0))
+    dk_ref[0, 0] = dk
+    dv_ref[0, 0] = dv
+
+
+def _flash_fwd(q, k, v, block_q, block_k):
+    b, h, s, d = q.shape
+    scale = 1.0 / (d**0.5)
+    grid = (b, h, s // block_q)
+    qspec = pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, qi: (bi, hi, qi, 0))
+    kvspec = pl.BlockSpec((1, 1, s, d), lambda bi, hi, qi: (bi, hi, 0, 0))
+    o, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, block_q=block_q, block_k=block_k, scale=scale),
+        grid=grid,
+        in_specs=[qspec, kvspec, kvspec],
+        out_specs=[
+            qspec,
+            pl.BlockSpec((1, 1, block_q), lambda bi, hi, qi: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+    return o, lse
+
+
+def _flash_bwd(q, k, v, o, lse, do, block_q, block_k):
+    b, h, s, d = q.shape
+    scale = 1.0 / (d**0.5)
+    delta = jnp.sum(do * o, axis=-1)  # (b, h, s)
+
+    full = pl.BlockSpec((1, 1, s, d), lambda bi, hi, i: (bi, hi, 0, 0))
+    full_row = pl.BlockSpec((1, 1, s), lambda bi, hi, i: (bi, hi, 0))
+    qblk = pl.BlockSpec((1, 1, block_q, d), lambda bi, hi, i: (bi, hi, i, 0))
+    qrow = pl.BlockSpec((1, 1, block_q), lambda bi, hi, i: (bi, hi, i))
+    kblk = pl.BlockSpec((1, 1, block_k, d), lambda bi, hi, i: (bi, hi, i, 0))
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, block_q=block_q, block_k=block_k, scale=scale),
+        grid=(b, h, s // block_q),
+        in_specs=[qblk, full, full, qblk, qrow, qrow],
+        out_specs=qblk,
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, block_q=block_q, block_k=block_k, scale=scale),
+        grid=(b, h, s // block_k),
+        in_specs=[full, kblk, kblk, full, full_row, full_row],
+        out_specs=[kblk, kblk],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def flash_attention(q, k, v, block_q=32, block_k=32):
+    """Causal flash attention. q/k/v: f32[B, H, S, Dh] -> f32[B, H, S, Dh].
+
+    S must be a multiple of both block sizes (model presets guarantee it).
+    """
+    o, _ = _flash_fwd(q, k, v, block_q, block_k)
+    return o
+
+
+def _vjp_fwd(q, k, v, block_q, block_k):
+    o, lse = _flash_fwd(q, k, v, block_q, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _vjp_bwd(block_q, block_k, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _flash_bwd(q, k, v, o, lse, do, block_q, block_k)
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_vjp_fwd, _vjp_bwd)

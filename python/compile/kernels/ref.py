@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORRECTNESS ground truth: every Pallas kernel in this
+package must match its oracle here to float32 tolerance (pytest +
+hypothesis sweeps in python/tests/test_kernels.py). They are also what
+the kernels' performance is judged against in the L1 perf pass.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array) -> jax.Array:
+    """Causal multi-head attention, materialized-softmax reference.
+
+    Args:
+      q, k, v: f32[B, H, S, Dh]
+    Returns:
+      f32[B, H, S, Dh]
+    """
+    s = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def attention_lse_ref(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Reference that also returns the per-row logsumexp (flash residual)."""
+    s = q.shape[2]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    probs = jnp.exp(logits - lse[..., None])
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v), lse
+
+
+def sign_update_ref(x, m, diff, gamma, eta, lam, beta1, beta2):
+    """Oracle for the fused global sign-momentum step (paper eqs. (6)-(8)).
+
+    u      = beta1 * m + (1 - beta1) / gamma * diff
+    x_new  = x - eta * gamma * (sign(u) + lam * x)
+    m_new  = beta2 * m + (1 - beta2) / gamma * diff
+
+    where diff = x_{t,0} - x_{t,tau} (aggregated local-step differences).
+    """
+    u = beta1 * m + (1.0 - beta1) / gamma * diff
+    x_new = x - eta * gamma * (jnp.sign(u) + lam * x)
+    m_new = beta2 * m + (1.0 - beta2) / gamma * diff
+    return x_new, m_new

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: fused global sign-momentum parameter update.
+
+This is the paper's own contribution rendered as a single fused kernel —
+eqs. (6)-(8) of Algorithm 1 (the Lion-style global step over aggregated
+local differences):
+
+    u     = beta1 * m + (1 - beta1) / gamma * diff
+    x_new = x - eta * gamma * (sign(u) + lambda * x)
+    m_new = beta2 * m + (1 - beta2) / gamma * diff
+
+One kernel performs the whole step with x, m, diff streamed through VMEM
+exactly once (three reads, two writes per element) — on TPU this is the
+memory-bandwidth-optimal schedule; a naive composition of elementwise ops
+would traverse HBM five-plus times unless XLA happens to fuse it.
+
+The artifact is chunked: it operates on a fixed-length f32[CHUNK] slab so
+one compiled executable serves every model size; the Rust coordinator
+walks the flat parameter vector in CHUNK-sized windows (zero-padding the
+tail).  Scalars arrive as an f32[8] operand so learning-rate schedules do
+not force recompilation.
+
+The production hot path in Rust implements the same update natively
+(rust/src/outer/sign_momentum.rs); this kernel is the TPU story plus a
+three-way equivalence anchor (pallas == jnp ref == rust, tested).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..configs import SIGN_UPDATE_BLOCK, SIGN_UPDATE_CHUNK
+
+
+def _kernel(s_ref, x_ref, m_ref, d_ref, xo_ref, mo_ref):
+    gamma = s_ref[0]
+    eta = s_ref[1]
+    lam = s_ref[2]
+    beta1 = s_ref[3]
+    beta2 = s_ref[4]
+    x = x_ref[...]
+    m = m_ref[...]
+    d = d_ref[...]
+    u = beta1 * m + (1.0 - beta1) / gamma * d
+    xo_ref[...] = x - eta * gamma * (jnp.sign(u) + lam * x)
+    mo_ref[...] = beta2 * m + (1.0 - beta2) / gamma * d
+
+
+def sign_update(x, m, diff, scalars, *, block=SIGN_UPDATE_BLOCK):
+    """Fused Algorithm-1 global step over one chunk.
+
+    Args:
+      x, m, diff: f32[N] with N % block == 0.
+      scalars: f32[8] = [gamma, eta, lambda, beta1, beta2, pad, pad, pad].
+    Returns:
+      (x_new, m_new): f32[N] each.
+    """
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    vspec = pl.BlockSpec((block,), lambda i: (i,))
+    sspec = pl.BlockSpec((8,), lambda i: (0,))
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block,),
+        in_specs=[sspec, vspec, vspec, vspec],
+        out_specs=[vspec, vspec],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(scalars, x, m, diff)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def sign_update_chunk(x, m, diff, scalars, chunk=SIGN_UPDATE_CHUNK):
+    """The AOT entry point: fixed-size chunk used by the Rust runtime."""
+    assert x.shape == (chunk,)
+    return sign_update(x, m, diff, scalars)

@@ -1,0 +1,103 @@
+"""L1 Pallas kernel: fused softmax cross-entropy over vocab blocks.
+
+The LM-head loss is the other memory-bound hot spot of GPT-2 training:
+materializing log-softmax over [B*S, V] writes the full logits tensor
+twice.  This kernel fuses the three passes flash-style — one grid
+program per row-block streams vocab tiles through VMEM keeping only the
+running (max, sumexp, picked-logit) triple, so the [rows, V] logits are
+read exactly once and nothing of that size is written.
+
+Used by `model.loss_fn` when a preset opts in (`use_xent_kernel`, an
+extension knob — default artifacts keep the jnp path so existing run
+caches stay valid); correctness is pinned to ref.py by pytest either
+way.  Forward-only by design: the backward of cross-entropy
+(softmax - onehot) is formed by XLA from the same streamed quantities
+via the custom VJP below.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(logits_ref, targets_ref, nll_ref, lse_ref, *, block_v):
+    """One row-block program: stream vocab tiles, keep (max, sum, picked)."""
+    rows = logits_ref.shape[0]
+    v = logits_ref.shape[1]
+    num_vb = v // block_v
+    tgt = targets_ref[...]  # (rows,)
+
+    def body(j, carry):
+        m, s, picked = carry
+        tile = logits_ref[:, pl.dslice(j * block_v, block_v)]  # (rows, bv)
+        m_new = jnp.maximum(m, jnp.max(tile, axis=-1))
+        s = s * jnp.exp(m - m_new) + jnp.sum(jnp.exp(tile - m_new[:, None]), axis=-1)
+        # pick the target logit if it lives in this tile
+        col = tgt - j * block_v
+        in_tile = (col >= 0) & (col < block_v)
+        idx = jnp.clip(col, 0, block_v - 1)
+        val = jnp.take_along_axis(tile, idx[:, None], axis=1)[:, 0]
+        picked = jnp.where(in_tile, val, picked)
+        return m_new, s, picked
+
+    m0 = jnp.full((rows,), NEG_INF, jnp.float32)
+    s0 = jnp.zeros((rows,), jnp.float32)
+    p0 = jnp.full((rows,), NEG_INF, jnp.float32)
+    m, s, picked = jax.lax.fori_loop(0, num_vb, body, (m0, s0, p0))
+    lse = m + jnp.log(s)
+    nll_ref[...] = lse - picked
+    lse_ref[...] = lse
+
+
+def _xent_fwd(logits, targets, block_rows, block_v):
+    rows, v = logits.shape
+    grid = (rows // block_rows,)
+    nll, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, block_v=block_v),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, v), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+            pl.BlockSpec((block_rows,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+            jax.ShapeDtypeStruct((rows,), jnp.float32),
+        ],
+        interpret=True,
+    )(logits, targets)
+    return nll, lse
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def softmax_xent(logits, targets, block_rows=64, block_v=128):
+    """Per-row NLL: f32[R, V], i32[R] -> f32[R].
+
+    R must be a multiple of block_rows and V of block_v (model presets
+    pad the row count; byte vocab 256 = 2 x 128).
+    """
+    nll, _ = _xent_fwd(logits, targets, block_rows, block_v)
+    return nll
+
+
+def _vjp_fwd(logits, targets, block_rows, block_v):
+    nll, lse = _xent_fwd(logits, targets, block_rows, block_v)
+    return nll, (logits, targets, lse)
+
+
+def _vjp_bwd(block_rows, block_v, res, g):
+    logits, targets, lse = res
+    # d/dlogits = softmax(logits) - onehot(target), scaled by upstream g
+    probs = jnp.exp(logits - lse[:, None])
+    onehot = jax.nn.one_hot(targets, logits.shape[1], dtype=logits.dtype)
+    return (g[:, None] * (probs - onehot), None)
+
+
+softmax_xent.defvjp(_vjp_fwd, _vjp_bwd)

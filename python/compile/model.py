@@ -1,0 +1,186 @@
+"""L2: GPT-2 forward/backward in JAX, calling the L1 Pallas kernels.
+
+The model follows the paper's experimental setup (GPT-2, Radford et al.
+2019, as in nanoGPT): learned token + position embeddings, pre-LayerNorm
+blocks of (causal self-attention, 4x GELU MLP) with residual connections,
+final LayerNorm and a weight-tied LM head; attention is the Pallas flash
+kernel from kernels/attention.py.
+
+**Flat-parameter ABI.**  Everything the Rust coordinator touches is ONE
+f32[P] vector.  `param_spec` fixes a deterministic (name, shape, offset)
+layout; `unflatten` slices it back into tensors *inside* the traced
+function, so the split is free after XLA compilation.  This is what makes
+the paper's algorithms trivial on the Rust side: every optimizer in
+rust/src/{optim,outer} is an elementwise loop over that vector.
+
+AOT surface (lowered to HLO text by aot.py):
+  init_step(seed: u32[])                          -> f32[P]
+  train_step(params: f32[P], tok, tgt: i32[B,S])  -> (loss f32[], grads f32[P])
+  eval_step (params: f32[P], tok, tgt: i32[B,S])  -> loss f32[]
+"""
+
+import functools
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.attention import flash_attention
+
+LN_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# Flat-parameter layout
+# --------------------------------------------------------------------------
+
+
+def param_spec(cfg: ModelConfig) -> list[tuple[str, tuple[int, ...]]]:
+    """Deterministic (name, shape) layout of the flat parameter vector."""
+    d, ff, v, s = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq
+    spec: list[tuple[str, tuple[int, ...]]] = [
+        ("wte", (v, d)),
+        ("wpe", (s, d)),
+    ]
+    for layer in range(cfg.n_layer):
+        p = f"h{layer}."
+        spec += [
+            (p + "ln1_g", (d,)),
+            (p + "ln1_b", (d,)),
+            (p + "qkv_w", (d, 3 * d)),
+            (p + "qkv_b", (3 * d,)),
+            (p + "proj_w", (d, d)),
+            (p + "proj_b", (d,)),
+            (p + "ln2_g", (d,)),
+            (p + "ln2_b", (d,)),
+            (p + "fc_w", (d, ff)),
+            (p + "fc_b", (ff,)),
+            (p + "fc2_w", (ff, d)),
+            (p + "fc2_b", (d,)),
+        ]
+    spec += [("lnf_g", (d,)), ("lnf_b", (d,))]
+    return spec
+
+
+def param_count(cfg: ModelConfig) -> int:
+    return sum(math.prod(shape) for _, shape in param_spec(cfg))
+
+
+def param_offsets(cfg: ModelConfig) -> dict[str, tuple[int, tuple[int, ...]]]:
+    """name -> (offset, shape) for the manifest and the Rust inspector."""
+    out, off = {}, 0
+    for name, shape in param_spec(cfg):
+        out[name] = (off, shape)
+        off += math.prod(shape)
+    return out
+
+
+def unflatten(cfg: ModelConfig, flat: jax.Array) -> dict[str, jax.Array]:
+    params, off = {}, 0
+    for name, shape in param_spec(cfg):
+        n = math.prod(shape)
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def flatten(cfg: ModelConfig, params: dict[str, jax.Array]) -> jax.Array:
+    return jnp.concatenate(
+        [params[name].reshape(-1) for name, _ in param_spec(cfg)]
+    )
+
+
+# --------------------------------------------------------------------------
+# Initialization (GPT-2 scheme, nanoGPT-compatible)
+# --------------------------------------------------------------------------
+
+
+def init_step(cfg: ModelConfig, seed: jax.Array) -> jax.Array:
+    """GPT-2 init as one flat vector; `seed` is a traced uint32 scalar so
+    the Rust launcher re-seeds without re-AOT-ing."""
+    key = jax.random.key(seed)
+    spec = param_spec(cfg)
+    keys = jax.random.split(key, len(spec))
+    # Residual-branch output projections get the 1/sqrt(2*n_layer) shrink.
+    resid_scale = 0.02 / jnp.sqrt(2.0 * cfg.n_layer)
+    parts = []
+    for (name, shape), k in zip(spec, keys):
+        base = name.split(".")[-1]
+        if base in ("ln1_g", "ln2_g", "lnf_g"):
+            t = jnp.ones(shape, jnp.float32)
+        elif base.endswith("_b") or base in ("qkv_b", "fc_b", "fc2_b", "proj_b"):
+            t = jnp.zeros(shape, jnp.float32)
+        elif base in ("proj_w", "fc2_w"):
+            t = jax.random.normal(k, shape, jnp.float32) * resid_scale
+        elif base == "wpe":
+            t = jax.random.normal(k, shape, jnp.float32) * 0.01
+        else:  # wte, qkv_w, fc_w
+            t = jax.random.normal(k, shape, jnp.float32) * 0.02
+        parts.append(t.reshape(-1))
+    return jnp.concatenate(parts)
+
+
+# --------------------------------------------------------------------------
+# Forward
+# --------------------------------------------------------------------------
+
+
+def _layer_norm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + LN_EPS) * g + b
+
+
+def _block(cfg: ModelConfig, p: dict, prefix: str, x: jax.Array) -> jax.Array:
+    """One pre-LN transformer block. x: f32[B, S, D]."""
+    b, s, d = x.shape
+    h, dh = cfg.n_head, cfg.d_head
+
+    # --- attention sub-block ---
+    a = _layer_norm(x, p[prefix + "ln1_g"], p[prefix + "ln1_b"])
+    qkv = a @ p[prefix + "qkv_w"] + p[prefix + "qkv_b"]  # (B,S,3D)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # (B,S,D) -> (B,H,S,Dh)
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    o = flash_attention(heads(q), heads(k), heads(v), cfg.block_q, cfg.block_k)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + o @ p[prefix + "proj_w"] + p[prefix + "proj_b"]
+
+    # --- MLP sub-block ---
+    m = _layer_norm(x, p[prefix + "ln2_g"], p[prefix + "ln2_b"])
+    m = jax.nn.gelu(m @ p[prefix + "fc_w"] + p[prefix + "fc_b"], approximate=True)
+    return x + m @ p[prefix + "fc2_w"] + p[prefix + "fc2_b"]
+
+
+def logits_fn(cfg: ModelConfig, flat: jax.Array, tokens: jax.Array) -> jax.Array:
+    """tokens: i32[B, S] -> logits f32[B, S, V] (weight-tied head)."""
+    p = unflatten(cfg, flat)
+    x = p["wte"][tokens] + p["wpe"][None, : tokens.shape[1]]
+    for layer in range(cfg.n_layer):
+        x = _block(cfg, p, f"h{layer}.", x)
+    x = _layer_norm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["wte"].T
+
+
+def loss_fn(
+    cfg: ModelConfig, flat: jax.Array, tokens: jax.Array, targets: jax.Array
+) -> jax.Array:
+    """Mean token-level cross entropy (the paper's validation metric is
+    exactly this: token-level log perplexity)."""
+    logits = logits_fn(cfg, flat, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def train_step(cfg: ModelConfig, flat, tokens, targets):
+    """(loss, grads) — the only thing a worker's local step needs."""
+    return jax.value_and_grad(functools.partial(loss_fn, cfg))(flat, tokens, targets)
+
+
+def eval_step(cfg: ModelConfig, flat, tokens, targets):
+    return loss_fn(cfg, flat, tokens, targets)

@@ -1,0 +1,72 @@
+"""AOT interchange: HLO text artifacts + manifest integrity.
+
+The heavy cross-language check (load artifact in Rust via PJRT, execute,
+compare numerics against jax) lives in rust/tests/runtime_roundtrip.rs;
+here we verify the python side of the contract.
+"""
+
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+from compile.configs import PRESETS, SIGN_UPDATE_CHUNK
+
+ART = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def test_to_hlo_text_basic_lowering():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert "f32[4]" in text
+
+
+def test_train_step_hlo_signature():
+    cfg = PRESETS["nano"]
+    p = model.param_count(cfg)
+    fspec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    tspec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    lowered = jax.jit(lambda f, a, b: model.train_step(cfg, f, a, b)).lower(
+        fspec, tspec, tspec
+    )
+    text = aot.to_hlo_text(lowered)
+    # flat params in, (loss, grads) tuple out — the ABI the Rust runtime assumes.
+    assert f"f32[{p}]" in text
+    assert f"s32[{cfg.batch},{cfg.seq}]" in text
+    assert "->(f32[], f32[%d]" % p in text.replace(" ", "").replace(
+        "{0}", ""
+    ) or "(f32[]" in text
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_manifest_matches_emitted_files():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    assert manifest["version"] == aot.MANIFEST_VERSION
+    for name, entry in manifest["presets"].items():
+        cfg = PRESETS[name]
+        assert entry["param_count"] == model.param_count(cfg)
+        assert entry["config"]["vocab"] == cfg.vocab
+        for kind in ("init", "train", "eval"):
+            f = ART / entry["artifacts"][kind]["file"]
+            assert f.exists(), f
+            assert f.stat().st_size == entry["artifacts"][kind]["bytes"]
+        layout = {e["name"]: (e["offset"], tuple(e["shape"])) for e in entry["param_layout"]}
+        assert layout == model.param_offsets(cfg)
+    su = manifest["sign_update"]
+    assert su["chunk"] == SIGN_UPDATE_CHUNK
+    assert (ART / su["file"]).exists()
+
+
+@pytest.mark.skipif(not (ART / "manifest.json").exists(), reason="run `make artifacts` first")
+def test_artifact_hlo_text_is_parseable_header():
+    manifest = json.loads((ART / "manifest.json").read_text())
+    for entry in manifest["presets"].values():
+        for kind in ("init", "train", "eval"):
+            head = (ART / entry["artifacts"][kind]["file"]).read_text()[:200]
+            assert head.startswith("HloModule"), head

@@ -1,0 +1,201 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/blocks/values; this is the core correctness
+signal for the AOT'd compute (the Rust integration tests then pin the
+same numbers through the PJRT path).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.attention import flash_attention, _flash_fwd
+from compile.kernels.sign_update import sign_update
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# attention forward
+# --------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 3),
+    s=st.sampled_from([32, 64, 128]),
+    d=st.sampled_from([8, 16, 32]),
+    blk=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_fwd_matches_ref(b, h, s, d, blk, seed):
+    keys = jax.random.split(jax.random.key(seed), 3)
+    q, k, v = (rand(kk, (b, h, s, d)) for kk in keys)
+    out = flash_attention(q, k, v, blk, blk)
+    expect = ref.attention_ref(q, k, v)
+    np.testing.assert_allclose(out, expect, atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bq=st.sampled_from([16, 32, 64]),
+    bk=st.sampled_from([16, 32, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_mixed_block_sizes(bq, bk, seed):
+    keys = jax.random.split(jax.random.key(seed), 3)
+    q, k, v = (rand(kk, (1, 2, 64, 16)) for kk in keys)
+    out = flash_attention(q, k, v, bq, bk)
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), atol=2e-5, rtol=2e-5)
+
+
+def test_attention_logsumexp_residual():
+    keys = jax.random.split(jax.random.key(7), 3)
+    q, k, v = (rand(kk, (2, 2, 64, 16)) for kk in keys)
+    o, lse = _flash_fwd(q, k, v, 32, 32)
+    o_ref, lse_ref = ref.attention_lse_ref(q, k, v)
+    np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(lse, lse_ref, atol=2e-5, rtol=2e-5)
+
+
+def test_attention_large_logits_stable():
+    # Online softmax must not overflow where a naive exp() would.
+    keys = jax.random.split(jax.random.key(3), 3)
+    q, k, v = (rand(kk, (1, 1, 64, 16), scale=30.0) for kk in keys)
+    out = flash_attention(q, k, v)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    # values are O(30); tolerance scales with the data magnitude.
+    np.testing.assert_allclose(out, ref.attention_ref(q, k, v), atol=1e-2, rtol=1e-3)
+
+
+def test_attention_is_causal():
+    # Perturbing position j must not change outputs at positions < j.
+    keys = jax.random.split(jax.random.key(11), 3)
+    q, k, v = (rand(kk, (1, 2, 64, 16)) for kk in keys)
+    out = flash_attention(q, k, v)
+    j = 40
+    k2 = k.at[:, :, j:].set(rand(jax.random.key(99), (1, 2, 64 - j, 16)))
+    v2 = v.at[:, :, j:].set(rand(jax.random.key(98), (1, 2, 64 - j, 16)))
+    out2 = flash_attention(q, k2, v2)
+    np.testing.assert_allclose(out[:, :, :j], out2[:, :, :j], atol=1e-6)
+    # ... and MUST change something at >= j (sanity that the test bites).
+    assert float(jnp.max(jnp.abs(out[:, :, j:] - out2[:, :, j:]))) > 1e-3
+
+
+def test_attention_first_row_attends_self_only():
+    keys = jax.random.split(jax.random.key(5), 3)
+    q, k, v = (rand(kk, (1, 1, 32, 8)) for kk in keys)
+    out = flash_attention(q, k, v, 16, 16)
+    np.testing.assert_allclose(out[0, 0, 0], v[0, 0, 0], atol=1e-5, rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# attention backward (custom VJP)
+# --------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    h=st.integers(1, 2),
+    s=st.sampled_from([32, 64]),
+    d=st.sampled_from([8, 16]),
+    blk=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_grads_match_ref(b, h, s, d, blk, seed):
+    keys = jax.random.split(jax.random.key(seed), 4)
+    q, k, v = (rand(kk, (b, h, s, d)) for kk in keys[:3])
+    ct = rand(keys[3], (b, h, s, d))
+
+    def f(q, k, v):
+        return jnp.vdot(flash_attention(q, k, v, blk, blk), ct)
+
+    def f_ref(q, k, v):
+        return jnp.vdot(ref.attention_ref(q, k, v), ct)
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, e in zip(g, g_ref):
+        np.testing.assert_allclose(a, e, atol=5e-5, rtol=5e-4)
+
+
+def test_attention_grad_under_jit_and_vmap_composition():
+    keys = jax.random.split(jax.random.key(13), 3)
+    q, k, v = (rand(kk, (2, 2, 32, 8)) for kk in keys)
+
+    @jax.jit
+    def f(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, 16, 16) ** 2)
+
+    g = jax.grad(f)(q, k, v)
+    assert g.shape == q.shape and bool(jnp.all(jnp.isfinite(g)))
+
+
+# --------------------------------------------------------------------------
+# fused sign-momentum update kernel (paper eqs. (6)-(8))
+# --------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([4096, 8192, 65536]),
+    gamma=st.floats(1e-5, 1.0),
+    eta=st.floats(0.01, 5.0),
+    lam=st.floats(0.0, 0.5),
+    beta1=st.floats(0.0, 0.99),
+    beta2=st.floats(0.0, 0.99),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sign_update_matches_ref(n, gamma, eta, lam, beta1, beta2, seed):
+    keys = jax.random.split(jax.random.key(seed), 3)
+    x, m, d = (rand(kk, (n,)) for kk in keys)
+    sc = jnp.array([gamma, eta, lam, beta1, beta2, 0, 0, 0], jnp.float32)
+    xn, mn = sign_update(x, m, d, sc)
+    xr, mr = ref.sign_update_ref(x, m, d, gamma, eta, lam, beta1, beta2)
+    np.testing.assert_allclose(xn, xr, atol=1e-5, rtol=1e-4)
+    np.testing.assert_allclose(mn, mr, atol=1e-4, rtol=1e-4)
+
+
+def test_sign_update_zero_momentum_is_pure_sign_step():
+    # beta1 = beta2 = 0, lam = 0: x' = x - eta*gamma*sign(diff/gamma).
+    x = jnp.zeros((4096,))
+    m = jnp.zeros((4096,))
+    d = jnp.concatenate([jnp.full((2048,), 2.0), jnp.full((2048,), -3.0)])
+    sc = jnp.array([0.5, 1.5, 0.0, 0.0, 0.0, 0, 0, 0], jnp.float32)
+    xn, mn = sign_update(x, m, d, sc)
+    np.testing.assert_allclose(xn[:2048], -1.5 * 0.5, rtol=1e-6)
+    np.testing.assert_allclose(xn[2048:], 1.5 * 0.5, rtol=1e-6)
+    np.testing.assert_allclose(mn, d / 0.5, rtol=1e-6)
+
+
+def test_sign_update_magnitude_invariance():
+    # sign step ignores |diff| when momentum is off: scaling diff by 100
+    # must not change x' (only m'). This is the defining sign property.
+    keys = jax.random.split(jax.random.key(21), 2)
+    x, d = (rand(kk, (4096,)) for kk in keys)
+    m = jnp.zeros_like(x)
+    sc = jnp.array([0.1, 1.0, 0.0, 0.0, 0.9, 0, 0, 0], jnp.float32)
+    x1, _ = sign_update(x, m, d, sc)
+    x2, _ = sign_update(x, m, 100.0 * d, sc)
+    np.testing.assert_allclose(x1, x2, atol=1e-7)
+
+
+def test_sign_update_decoupled_weight_decay():
+    # With diff = 0 and m = 0, sign(u) = 0: pure decay x' = x(1 - eta*gamma*lam).
+    x = rand(jax.random.key(2), (4096,))
+    z = jnp.zeros_like(x)
+    sc = jnp.array([0.5, 2.0, 0.1, 0.9, 0.9, 0, 0, 0], jnp.float32)
+    xn, mn = sign_update(x, z, z, sc)
+    np.testing.assert_allclose(xn, x * (1.0 - 2.0 * 0.5 * 0.1), rtol=1e-5)
+    np.testing.assert_allclose(mn, z, atol=0)

@@ -1,0 +1,47 @@
+//! Collective-arithmetic + comm-model benches.
+//!
+//!     cargo bench --bench collectives
+
+use dsm::comm::CommModel;
+use dsm::dist::collectives;
+use dsm::util::bench::{black_box, Bencher};
+use dsm::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(3);
+
+    for &(n, p) in &[(4usize, 1usize << 20), (8, 1 << 20), (8, 1 << 22)] {
+        let workers: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0f32; p];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let mut out = vec![0.0f32; p];
+        b.bench_with_bytes(
+            &format!("allreduce_mean n={n} P={p}"),
+            Some((n as u64 + 1) * p as u64 * 4),
+            || collectives::allreduce_mean(black_box(&workers), |w| w.as_slice(), &mut out),
+        );
+    }
+
+    let votes: Vec<Vec<f32>> = (0..8)
+        .map(|i| (0..1 << 20).map(|j| if (i + j) % 3 == 0 { 1.0 } else { -1.0 }).collect())
+        .collect();
+    let mut out = vec![0.0f32; 1 << 20];
+    b.bench_with_bytes("majority_vote n=8 P=1M", Some(9 << 22), || {
+        collectives::majority_vote(black_box(&votes), &mut out)
+    });
+
+    println!("\n== comm model (analytic, ns-scale) ==");
+    let m = CommModel::preset("ethernet").unwrap();
+    b.bench("allreduce_time()", || {
+        black_box(m.allreduce_time(black_box(8), black_box(500 << 20)));
+    });
+    let mut r = Rng::new(5);
+    b.bench("straggler_delay(n=16)", || {
+        black_box(m.straggler_delay(16, &mut r));
+    });
+}

@@ -1,0 +1,42 @@
+//! Data-pipeline benches: corpus synthesis, tokenizers, batch sampling.
+//!
+//!     cargo bench --bench data
+
+use dsm::data::corpus::{generate, CorpusConfig};
+use dsm::data::dataset::TokenDataset;
+use dsm::data::{Bpe, ByteTokenizer, Tokenizer};
+use dsm::util::bench::{black_box, Bencher};
+use dsm::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::default();
+
+    let cfg = CorpusConfig { bytes: 1 << 20, ..Default::default() };
+    b.bench_with_bytes("corpus::generate 1MB", Some(1 << 20), || {
+        black_box(generate(black_box(&cfg)));
+    });
+
+    let corpus = generate(&CorpusConfig { bytes: 4 << 20, ..Default::default() });
+    let byte_tok = ByteTokenizer;
+    b.bench_with_bytes("byte_tokenizer::encode 1MB", Some(1 << 20), || {
+        black_box(byte_tok.encode(black_box(&corpus[..1 << 20])));
+    });
+
+    let bpe = Bpe::train(&corpus[..256 << 10], 512);
+    b.bench_with_bytes("bpe(512)::encode 64KB", Some(64 << 10), || {
+        black_box(bpe.encode(black_box(&corpus[..64 << 10])));
+    });
+    let toks = bpe.encode(&corpus[..256 << 10]);
+    b.bench_with_bytes("bpe(512)::decode 256KB-of-text", Some(256 << 10), || {
+        black_box(bpe.decode(black_box(&toks)));
+    });
+
+    let ds = TokenDataset::from_text(&ByteTokenizer, &corpus, 0.05);
+    let mut rng = Rng::new(1);
+    b.bench_with_bytes("dataset::sample_train B=8 S=64", Some(8 * 64 * 8), || {
+        black_box(ds.sample_train(0, 4, 8, 64, &mut rng));
+    });
+    b.bench("dataset::val_batches(8)", || {
+        black_box(ds.val_batches(8, 64, 8));
+    });
+}

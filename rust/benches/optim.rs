@@ -1,0 +1,82 @@
+//! L3 hot-path benches: base optimizers, outer optimizers, sign ops.
+//!
+//! These are the per-element loops that run between PJRT executions;
+//! target is memory-bandwidth-bound behaviour (see EXPERIMENTS.md §Perf).
+//!
+//!     cargo bench --bench optim
+
+use dsm::optim::BaseOptConfig;
+use dsm::outer::{run_synthetic_round, OuterConfig};
+use dsm::sign::SignOp;
+use dsm::util::bench::{black_box, Bencher};
+use dsm::util::rng::Rng;
+
+const P: usize = 1 << 20; // 1M params ~ small preset
+
+fn main() {
+    let mut b = Bencher::default();
+    let mut rng = Rng::new(7);
+    let mut params = vec![0.0f32; P];
+    let mut grads = vec![0.0f32; P];
+    rng.fill_normal(&mut params, 0.02);
+    rng.fill_normal(&mut grads, 0.5);
+
+    println!("== base optimizers (P = {P}) ==");
+    for cfg in [
+        BaseOptConfig::sgd_plain(),
+        BaseOptConfig::Sgd { momentum: 0.9, nesterov: false, weight_decay: 0.0 },
+        BaseOptConfig::adamw_paper(),
+        BaseOptConfig::lion_paper(),
+        BaseOptConfig::sophia_paper(),
+    ] {
+        let mut opt = cfg.build(P);
+        let name = format!("{}::step", opt.name());
+        // bytes touched: params rw + grads r + state rw
+        let state_bufs = opt.state().len() as u64;
+        let bytes = (P as u64 * 4) * (3 + 2 * state_bufs.min(2));
+        b.bench_with_bytes(&name, Some(bytes), || {
+            opt.step(black_box(&mut params), black_box(&grads), 1e-4);
+        });
+    }
+
+    println!("\n== outer optimizers (one communication round, P = {P}) ==");
+    let diff = vec![1e-3f32; P];
+    for cfg in [
+        OuterConfig::sign_momentum_paper(1.0),
+        OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+        OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
+        OuterConfig::GlobalAdamW { eta: 1.0, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 },
+        OuterConfig::LocalAvg,
+    ] {
+        let mut opt = cfg.build(P);
+        let mut global = params.clone();
+        let name = format!("outer::{}", cfg.name());
+        let mut round = 0u64;
+        b.bench_with_bytes(&name, Some(P as u64 * 4 * 5), || {
+            run_synthetic_round(opt.as_mut(), black_box(&mut global), &diff, 1e-4, round);
+            round += 1;
+        });
+    }
+
+    println!("\n== sign operators (P = {P}) ==");
+    let mut out = vec![0.0f32; P];
+    let v = grads.clone();
+    for op in [SignOp::Exact, SignOp::RandPm, SignOp::RandZero] {
+        let mut r = Rng::new(1);
+        b.bench_with_bytes(&format!("sign::{op:?}"), Some(P as u64 * 8), || {
+            op.apply_into(black_box(&mut out), black_box(&v), 10.0, &mut r);
+        });
+    }
+
+    println!("\n== tensor primitives (P = {P}) ==");
+    let a = grads.clone();
+    b.bench_with_bytes("tensor::axpy", Some(P as u64 * 12), || {
+        dsm::tensor::axpy(black_box(&mut params), 1e-6, black_box(&a));
+    });
+    b.bench_with_bytes("tensor::ema", Some(P as u64 * 12), || {
+        dsm::tensor::ema(black_box(&mut params), 0.99, black_box(&a));
+    });
+    b.bench_with_bytes("tensor::dot(f64-acc)", Some(P as u64 * 8), || {
+        black_box(dsm::tensor::dot(black_box(&a), black_box(&grads)));
+    });
+}

@@ -1,0 +1,79 @@
+//! PJRT runtime benches: the real compute hot path (AOT'd GPT-2 steps,
+//! fused Pallas sign-update kernel, host<->device literal overhead).
+//!
+//! Requires `make artifacts`.  cargo bench --bench runtime
+
+use std::time::Duration;
+
+use dsm::data::corpus::{generate, CorpusConfig};
+use dsm::data::dataset::TokenDataset;
+use dsm::data::ByteTokenizer;
+use dsm::runtime::{Artifacts, ModelBundle, Runtime, SignUpdateKernel, SignUpdateScalars};
+use dsm::util::bench::{black_box, Bencher};
+use dsm::util::rng::Rng;
+
+fn main() {
+    let arts = match Artifacts::load(&Artifacts::default_dir()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("skipping runtime bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("PJRT CPU client");
+    // long-ish budget: each iteration is an entire fwd+bwd
+    let mut b = Bencher::new(Duration::from_secs(3), Duration::from_millis(500));
+
+    let corpus = generate(&CorpusConfig { bytes: 1 << 20, ..Default::default() });
+    let ds = TokenDataset::from_text(&ByteTokenizer, &corpus, 0.1);
+    let mut rng = Rng::new(1);
+
+    for preset in ["nano", "small", "medium"] {
+        let Ok(info) = arts.preset(preset) else { continue };
+        let bundle = ModelBundle::load(&rt, info).expect("compile");
+        let params = bundle.init_params(42).expect("init");
+        let batch = ds.sample_train(0, 1, info.batch, info.seq, &mut rng);
+        let tokens = (info.batch * info.seq) as u64;
+        // report tokens/s via bytes field (1 "byte" == 1 token)
+        b.bench_with_bytes(
+            &format!("{preset}::train_step ({}p, {} tok)", info.param_count, tokens),
+            None,
+            || {
+                black_box(bundle.train_step(black_box(&params), &batch).unwrap());
+            },
+        );
+        b.bench(&format!("{preset}::eval_loss"), || {
+            black_box(bundle.eval_loss(black_box(&params), &batch).unwrap());
+        });
+    }
+
+    // fused Pallas sign-update kernel vs the native Rust implementation
+    println!("\n== Algorithm-1 global step: Pallas kernel vs native Rust ==");
+    let kernel = SignUpdateKernel::load(&rt, &arts).expect("sign kernel");
+    let p = 1 << 20;
+    let mut rngk = Rng::new(9);
+    let mut x = vec![0.0f32; p];
+    let mut m = vec![0.0f32; p];
+    let mut d = vec![0.0f32; p];
+    rngk.fill_normal(&mut x, 0.02);
+    rngk.fill_normal(&mut d, 0.001);
+    let s = SignUpdateScalars { gamma: 1e-3, eta: 1.0, weight_decay: 0.1, beta1: 0.95, beta2: 0.98 };
+    b.bench_with_bytes(&format!("pallas sign_update P={p}"), Some(p as u64 * 20), || {
+        kernel.apply(black_box(&mut x), &mut m, &d, s).unwrap();
+    });
+    let mut opt = dsm::outer::SignMomentum::new(
+        p,
+        1.0,
+        0.95,
+        0.98,
+        0.1,
+        dsm::sign::SignOp::Exact,
+        1.0,
+    );
+    let mut global = x.clone();
+    let mut round = 0u64;
+    b.bench_with_bytes(&format!("rust   sign_update P={p}"), Some(p as u64 * 20), || {
+        dsm::outer::run_synthetic_round(&mut opt, black_box(&mut global), &d, 1e-3, round);
+        round += 1;
+    });
+}

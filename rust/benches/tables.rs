@@ -1,0 +1,120 @@
+//! End-to-end per-table benches: one *communication round* of every
+//! configuration the paper's tables compare, on the nano preset — i.e.
+//! the full system latency (τ local PJRT steps + all-reduce + global
+//! step) per outer algorithm.  One bench group per paper table.
+//!
+//! Requires `make artifacts`.  cargo bench --bench tables
+
+use std::time::Duration;
+
+use dsm::config::{RunConfig, TrainMode};
+use dsm::optim::BaseOptConfig;
+use dsm::outer::OuterConfig;
+use dsm::runtime::{Artifacts, ModelBundle, Runtime};
+use dsm::train::Trainer;
+use dsm::util::bench::Bencher;
+
+fn bench_round(
+    b: &mut Bencher,
+    rt: &Runtime,
+    arts: &Artifacts,
+    bundle: std::rc::Rc<ModelBundle>,
+    name: &str,
+    mode: TrainMode,
+    tau: usize,
+    base: BaseOptConfig,
+    outer: OuterConfig,
+) {
+    let mut cfg = RunConfig::paper_default("nano");
+    cfg.mode = mode;
+    cfg.tau = tau;
+    cfg.rounds = 1_000_000; // bench drives rounds manually
+    cfg.n_workers = 4;
+    cfg.base = base;
+    cfg.outer = outer;
+    cfg.eval_every = 0;
+    cfg.corpus_bytes = 1 << 20;
+    cfg.tag = name.to_string();
+    let mut trainer = Trainer::with_bundle(cfg, bundle, rt, arts).expect("trainer");
+    b.bench(name, || {
+        trainer.step_round().expect("round");
+    });
+}
+
+fn main() {
+    let arts = match Artifacts::load(&Artifacts::default_dir()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("skipping tables bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let rt = Runtime::cpu().expect("client");
+    let bundle =
+        std::rc::Rc::new(ModelBundle::load(&rt, arts.preset("nano").expect("nano")).unwrap());
+    let mut b = Bencher::new(Duration::from_secs(4), Duration::from_millis(600));
+    let adamw = BaseOptConfig::adamw_paper;
+
+    println!("== Table 2 / Figures 1-2: main methods, one comm round (nano, n=4) ==");
+    bench_round(
+        &mut b, &rt, &arts, bundle.clone(),
+        "tab2/adamw-standalone (tau=1)",
+        TrainMode::Standalone, 1, adamw(), OuterConfig::LocalAvg,
+    );
+    for tau in [12usize, 24] {
+        bench_round(
+            &mut b, &rt, &arts, bundle.clone(),
+            &format!("tab2/slowmo tau={tau}"),
+            TrainMode::LocalSteps, tau, adamw(), OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+        );
+        bench_round(
+            &mut b, &rt, &arts, bundle.clone(),
+            &format!("tab2/algorithm1 tau={tau}"),
+            TrainMode::LocalSteps, tau, adamw(), OuterConfig::sign_momentum_paper(1.0),
+        );
+    }
+
+    println!("\n== Table 3: Sophia base ==");
+    bench_round(
+        &mut b, &rt, &arts, bundle.clone(),
+        "tab3/algorithm1+sophia tau=12",
+        TrainMode::LocalSteps, 12, BaseOptConfig::sophia_paper(),
+        OuterConfig::sign_momentum_paper(1.0),
+    );
+
+    println!("\n== Tables 4-5: n=1 Lookahead variants ==");
+    for (name, signed) in [("tab4/lookahead", false), ("tab5/signed-lookahead", true)] {
+        let mut cfg = RunConfig::paper_default("nano");
+        cfg.tau = 12;
+        cfg.rounds = 1_000_000;
+        cfg.n_workers = 1;
+        cfg.outer = OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed };
+        cfg.eval_every = 0;
+        cfg.corpus_bytes = 1 << 20;
+        cfg.tag = name.to_string();
+        let mut trainer = Trainer::with_bundle(cfg, bundle.clone(), &rt, &arts).unwrap();
+        b.bench(&format!("{name} tau=12 (n=1)"), || {
+            trainer.step_round().unwrap();
+        });
+    }
+
+    println!("\n== Table 6: ablation outer steps ==");
+    bench_round(
+        &mut b, &rt, &arts, bundle.clone(),
+        "tab6/signed-slowmo tau=12",
+        TrainMode::LocalSteps, 12, adamw(), OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
+    );
+    bench_round(
+        &mut b, &rt, &arts, bundle.clone(),
+        "tab6/global-adamw tau=12",
+        TrainMode::LocalSteps, 12, adamw(),
+        OuterConfig::GlobalAdamW { eta: 1e-3, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 },
+    );
+
+    println!("\n== Figure 3: local averaging ==");
+    bench_round(
+        &mut b, &rt, &arts, bundle,
+        "fig3/local-avg tau=12",
+        TrainMode::LocalSteps, 12, adamw(), OuterConfig::LocalAvg,
+    );
+}

@@ -1,0 +1,334 @@
+//! Typed run configuration: TOML file + CLI overrides -> [`RunConfig`].
+//!
+//! A run is fully described by (model preset, worker count, τ, rounds,
+//! base optimizer, outer optimizer, LR schedule, comm model, data, seed).
+//! The experiment harness builds these programmatically; `repro train`
+//! builds them from a TOML file and/or flags.  Everything is plain data
+//! so runs are exactly reproducible from their logged config.
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, Result};
+
+use crate::comm::CommModel;
+use crate::optim::BaseOptConfig;
+use crate::outer::OuterConfig;
+use crate::train::schedule::ScheduleConfig;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+use crate::util::toml;
+
+/// How the distributed loop runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrainMode {
+    /// τ local steps per worker, then one outer round (Algorithm 1 & co.)
+    LocalSteps,
+    /// Per-step gradient all-reduce + ONE shared optimizer — the paper's
+    /// "standalone AdamW/Sophia" upper-bound baseline.
+    Standalone,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub preset: String,
+    pub n_workers: usize,
+    /// Communication interval τ (local steps per round).
+    pub tau: usize,
+    /// Outer rounds T.  Total local steps = T·τ per worker.
+    pub rounds: usize,
+    pub mode: TrainMode,
+    pub base: BaseOptConfig,
+    pub outer: OuterConfig,
+    pub schedule: ScheduleConfig,
+    pub comm: CommModel,
+    pub seed: u64,
+    /// Evaluate every k outer rounds (0 = only at the end).
+    pub eval_every: usize,
+    pub eval_batches: usize,
+    pub corpus_bytes: usize,
+    pub val_fraction: f64,
+    /// Where to write CSV logs (None = no files).
+    pub log_dir: Option<PathBuf>,
+    /// Human tag for logs/tables.
+    pub tag: String,
+    /// Use the AOT'd Pallas kernel for Algorithm 1's global step instead
+    /// of the native Rust path (equivalence/demo mode).
+    pub global_step_pallas: bool,
+    /// Non-IID data: each worker's shard is dominated by a different
+    /// corpus source (the Theorem-2(b) heterogeneity regime).
+    pub heterogeneous: bool,
+}
+
+/// Peak local LR per preset, scaled-down analogue of the paper's Table 1.
+pub fn default_peak_lr(preset: &str) -> f32 {
+    match preset {
+        "nano" => 1e-3,
+        "small" => 1e-3,
+        "medium" => 6e-4,
+        "large" => 5e-4,
+        "gpt2s" => 5e-4, // the paper's value
+        _ => 6e-4,
+    }
+}
+
+impl RunConfig {
+    /// The paper's headline configuration at repro scale: AdamW base,
+    /// Algorithm 1 outer, cosine schedule with warmup.
+    pub fn paper_default(preset: &str) -> RunConfig {
+        let rounds = 25;
+        let tau = 12;
+        RunConfig {
+            preset: preset.to_string(),
+            n_workers: 4,
+            tau,
+            rounds,
+            mode: TrainMode::LocalSteps,
+            base: BaseOptConfig::adamw_paper(),
+            outer: OuterConfig::sign_momentum_paper(1.0),
+            schedule: ScheduleConfig::cosine_paper(default_peak_lr(preset), (rounds * tau) as u64),
+            comm: CommModel::preset("ethernet").unwrap(),
+            seed: 42,
+            eval_every: 1,
+            eval_batches: 8,
+            corpus_bytes: 4 << 20,
+            val_fraction: 0.05,
+            log_dir: None,
+            tag: format!("{preset}-sign_momentum"),
+            global_step_pallas: false,
+            heterogeneous: false,
+        }
+    }
+
+    /// Total local steps across the run (drives the LR schedule).
+    pub fn total_local_steps(&self) -> u64 {
+        (self.rounds * self.tau) as u64
+    }
+
+    /// Parse a TOML config file, then apply CLI overrides.
+    pub fn from_toml_and_args(text: Option<&str>, args: &Args) -> Result<RunConfig> {
+        let doc = match text {
+            Some(t) => toml::parse(t).map_err(|e| anyhow!("{e}"))?,
+            None => Json::Obj(Default::default()),
+        };
+        let gs = |key: &str| doc.get(key).and_then(Json::as_str).map(str::to_string);
+        let gu = |key: &str| doc.get(key).and_then(Json::as_usize);
+        let gf = |key: &str| doc.get(key).and_then(Json::as_f64);
+
+        let preset = args.str_or("preset", &gs("preset").unwrap_or_else(|| "nano".into()));
+        let mut cfg = RunConfig::paper_default(&preset);
+
+        // file-level scalars
+        if let Some(v) = gu("workers") {
+            cfg.n_workers = v;
+        }
+        if let Some(v) = gu("tau") {
+            cfg.tau = v;
+        }
+        if let Some(v) = gu("rounds") {
+            cfg.rounds = v;
+        }
+        if let Some(v) = gu("seed") {
+            cfg.seed = v as u64;
+        }
+        if let Some(v) = gu("eval_every") {
+            cfg.eval_every = v;
+        }
+        if let Some(v) = gu("eval_batches") {
+            cfg.eval_batches = v;
+        }
+        if let Some(v) = gu("corpus_bytes") {
+            cfg.corpus_bytes = v;
+        }
+        if let Some(v) = gf("val_fraction") {
+            cfg.val_fraction = v;
+        }
+        if let Some(mode) = gs("mode") {
+            cfg.mode = parse_mode(&mode)?;
+        }
+        if let Some(t) = doc.get("base") {
+            cfg.base = BaseOptConfig::from_json(t).map_err(|e| anyhow!(e))?;
+        }
+        if let Some(t) = doc.get("outer") {
+            cfg.outer = OuterConfig::from_json(t).map_err(|e| anyhow!(e))?;
+        }
+        if let Some(t) = doc.get("schedule") {
+            cfg.schedule = ScheduleConfig::from_json(t, cfg.total_local_steps())
+                .map_err(|e| anyhow!(e))?;
+        }
+        if let Some(t) = doc.get("comm") {
+            if let Some(name) = t.get("preset").and_then(Json::as_str) {
+                cfg.comm = CommModel::preset(name)
+                    .ok_or_else(|| anyhow!("unknown comm preset `{name}`"))?;
+            }
+        }
+
+        // CLI overrides (take precedence over file)
+        cfg.n_workers = args.usize_or("workers", cfg.n_workers).map_err(|e| anyhow!(e))?;
+        cfg.tau = args.usize_or("tau", cfg.tau).map_err(|e| anyhow!(e))?;
+        cfg.rounds = args.usize_or("rounds", cfg.rounds).map_err(|e| anyhow!(e))?;
+        cfg.seed = args.u64_or("seed", cfg.seed).map_err(|e| anyhow!(e))?;
+        cfg.eval_every = args.usize_or("eval-every", cfg.eval_every).map_err(|e| anyhow!(e))?;
+        if let Some(m) = args.get("mode") {
+            cfg.mode = parse_mode(m)?;
+        }
+        if let Some(name) = args.get("comm") {
+            cfg.comm =
+                CommModel::preset(name).ok_or_else(|| anyhow!("unknown comm preset `{name}`"))?;
+        }
+        if let Some(algo) = args.get("outer") {
+            let eta = args.f32_or("global-lr", 1.0).map_err(|e| anyhow!(e))?;
+            cfg.outer = match algo {
+                "sign_momentum" => OuterConfig::sign_momentum_paper(eta),
+                "slowmo" => OuterConfig::SlowMo {
+                    alpha: eta,
+                    beta: args.f32_or("outer-beta", 0.5).map_err(|e| anyhow!(e))?,
+                },
+                "local_avg" => OuterConfig::LocalAvg,
+                other => {
+                    let table = toml::parse(&format!("algo = \"{other}\"")).unwrap();
+                    OuterConfig::from_json(&table).map_err(|e| anyhow!(e))?
+                }
+            };
+        }
+        if let Some(peak) = args.get("peak-lr") {
+            let peak: f32 = peak.parse().map_err(|_| anyhow!("--peak-lr: bad float"))?;
+            cfg.schedule = ScheduleConfig::cosine_paper(peak, cfg.total_local_steps());
+        }
+        if args.has("pallas-global-step") {
+            cfg.global_step_pallas = true;
+        }
+        if args.has("heterogeneous")
+            || doc.get("heterogeneous").and_then(Json::as_bool).unwrap_or(false)
+        {
+            cfg.heterogeneous = true;
+        }
+        if let Some(dir) = args.get("log-dir") {
+            cfg.log_dir = Some(PathBuf::from(dir));
+        }
+        if let Some(tag) = args.get("tag") {
+            cfg.tag = tag.to_string();
+        }
+        // schedule total must track (possibly overridden) rounds*tau
+        cfg.schedule.retarget_total(cfg.total_local_steps());
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.n_workers >= 1, "need >= 1 worker");
+        anyhow::ensure!(self.tau >= 1, "tau >= 1");
+        anyhow::ensure!(self.rounds >= 1, "rounds >= 1");
+        anyhow::ensure!((0.0..0.9).contains(&self.val_fraction), "val_fraction in [0, 0.9)");
+        anyhow::ensure!(self.corpus_bytes >= 1 << 14, "corpus too small");
+        if self.mode == TrainMode::Standalone {
+            anyhow::ensure!(self.tau == 1, "standalone mode communicates every step (tau=1)");
+        }
+        Ok(())
+    }
+
+    /// One-line summary for logs.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} n={} tau={} T={} base={} outer={} comm-rounds={} mode={:?}",
+            self.preset,
+            self.n_workers,
+            self.tau,
+            self.rounds,
+            self.base.name(),
+            self.outer.name(),
+            self.rounds,
+            self.mode
+        )
+    }
+}
+
+fn parse_mode(s: &str) -> Result<TrainMode> {
+    match s {
+        "local" | "local_steps" => Ok(TrainMode::LocalSteps),
+        "standalone" => Ok(TrainMode::Standalone),
+        other => Err(anyhow!("unknown mode `{other}`")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn paper_default_is_valid() {
+        let cfg = RunConfig::paper_default("medium");
+        cfg.validate().unwrap();
+        assert_eq!(cfg.tau, 12);
+        assert_eq!(cfg.outer.name(), "sign_momentum");
+        assert_eq!(cfg.base.name(), "adamw");
+    }
+
+    #[test]
+    fn toml_file_round_trip() {
+        let text = r#"
+preset = "small"
+workers = 8
+tau = 24
+rounds = 10
+mode = "local"
+
+[base]
+algo = "adamw"
+beta2 = 0.95
+
+[outer]
+algo = "slowmo"
+global_lr = 1.0
+beta = 0.6
+
+[comm]
+preset = "wan"
+"#;
+        let cfg = RunConfig::from_toml_and_args(Some(text), &args("")).unwrap();
+        assert_eq!(cfg.preset, "small");
+        assert_eq!(cfg.n_workers, 8);
+        assert_eq!(cfg.tau, 24);
+        assert_eq!(cfg.outer, OuterConfig::SlowMo { alpha: 1.0, beta: 0.6 });
+        assert_eq!(cfg.comm, CommModel::preset("wan").unwrap());
+    }
+
+    #[test]
+    fn cli_overrides_file() {
+        let text = "preset = \"small\"\ntau = 12\n";
+        let cfg =
+            RunConfig::from_toml_and_args(Some(text), &args("--tau 36 --workers 16")).unwrap();
+        assert_eq!(cfg.tau, 36);
+        assert_eq!(cfg.n_workers, 16);
+        // schedule retargeted to new rounds*tau
+        assert_eq!(cfg.schedule.total_steps(), cfg.total_local_steps());
+    }
+
+    #[test]
+    fn standalone_requires_tau_1() {
+        let cfg = RunConfig::from_toml_and_args(None, &args("--mode standalone --tau 12"));
+        assert!(cfg.is_err());
+        let ok = RunConfig::from_toml_and_args(None, &args("--mode standalone --tau 1"));
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        assert!(RunConfig::from_toml_and_args(Some("mode = \"bogus\""), &args("")).is_err());
+        assert!(RunConfig::from_toml_and_args(None, &args("--comm warpdrive")).is_err());
+        assert!(RunConfig::from_toml_and_args(None, &args("--workers 0")).is_err());
+    }
+
+    #[test]
+    fn outer_override_via_cli() {
+        let cfg = RunConfig::from_toml_and_args(
+            None,
+            &args("--outer slowmo --global-lr 0.8 --outer-beta 0.7"),
+        )
+        .unwrap();
+        assert_eq!(cfg.outer, OuterConfig::SlowMo { alpha: 0.8, beta: 0.7 });
+    }
+}

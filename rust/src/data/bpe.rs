@@ -1,0 +1,206 @@
+//! Byte-pair encoding: trainer + encoder/decoder.
+//!
+//! A real (if compact) BPE implementation: training iteratively merges
+//! the most frequent adjacent token pair (greatest count, ties broken by
+//! lowest pair ids for determinism); encoding applies merges in learned
+//! order, mirroring GPT-2's tokenizer semantics minus the regex
+//! pre-splitting (unnecessary for our synthetic corpus).  Used by the
+//! larger-vocab configurations and the `repro data` CLI; exercised
+//! end-to-end in tests and benches.
+
+use std::collections::HashMap;
+
+use super::tokenizer::Tokenizer;
+
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// Learned merges in order: (left, right) -> new token id.
+    merges: Vec<(u32, u32)>,
+    /// merge lookup: (left, right) -> rank (= index into merges).
+    ranks: HashMap<(u32, u32), u32>,
+    /// token id -> byte expansion.
+    vocab: Vec<Vec<u8>>,
+}
+
+impl Bpe {
+    /// Train on `corpus` until the vocabulary reaches `vocab_size`
+    /// (>= 256; ids 0-255 are the raw bytes).
+    pub fn train(corpus: &[u8], vocab_size: usize) -> Bpe {
+        assert!(vocab_size >= 256, "BPE vocab must include all bytes");
+        let mut vocab: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = Vec::new();
+        let mut ranks = HashMap::new();
+
+        let mut seq: Vec<u32> = corpus.iter().map(|&b| b as u32).collect();
+        while vocab.len() < vocab_size {
+            // count adjacent pairs
+            let mut counts: HashMap<(u32, u32), u64> = HashMap::new();
+            for w in seq.windows(2) {
+                *counts.entry((w[0], w[1])).or_insert(0) += 1;
+            }
+            // most frequent pair, deterministic tie-break
+            let Some((&pair, &count)) = counts
+                .iter()
+                .max_by_key(|(&(a, b), &c)| (c, std::cmp::Reverse((a, b))))
+            else {
+                break;
+            };
+            if count < 2 {
+                break; // no compression left
+            }
+            let new_id = vocab.len() as u32;
+            let mut bytes = vocab[pair.0 as usize].clone();
+            bytes.extend_from_slice(&vocab[pair.1 as usize]);
+            vocab.push(bytes);
+            ranks.insert(pair, merges.len() as u32);
+            merges.push(pair);
+
+            // apply the merge to the working sequence in one pass
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        Bpe { merges, ranks, vocab }
+    }
+
+    pub fn merges(&self) -> &[(u32, u32)] {
+        &self.merges
+    }
+
+    /// Compression ratio achieved on a text (bytes per token).
+    pub fn bytes_per_token(&self, text: &[u8]) -> f64 {
+        let toks = self.encode(text);
+        text.len() as f64 / toks.len().max(1) as f64
+    }
+}
+
+impl Tokenizer for Bpe {
+    fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    fn encode(&self, text: &[u8]) -> Vec<u32> {
+        let mut seq: Vec<u32> = text.iter().map(|&b| b as u32).collect();
+        // repeatedly apply the lowest-rank applicable merge (GPT-2 style)
+        loop {
+            let mut best: Option<(u32, usize)> = None; // (rank, position)
+            for (i, w) in seq.windows(2).enumerate() {
+                if let Some(&r) = self.ranks.get(&(w[0], w[1])) {
+                    if best.map(|(br, _)| r < br).unwrap_or(true) {
+                        best = Some((r, i));
+                    }
+                }
+            }
+            let Some((rank, _)) = best else { break };
+            let pair = self.merges[rank as usize];
+            let new_id = 256 + rank;
+            // merge ALL occurrences of this pair in one pass
+            let mut out = Vec::with_capacity(seq.len());
+            let mut i = 0;
+            while i < seq.len() {
+                if i + 1 < seq.len() && (seq[i], seq[i + 1]) == pair {
+                    out.push(new_id);
+                    i += 2;
+                } else {
+                    out.push(seq[i]);
+                    i += 1;
+                }
+            }
+            seq = out;
+        }
+        seq
+    }
+
+    fn decode(&self, tokens: &[u32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        for &t in tokens {
+            out.extend_from_slice(&self.vocab[t as usize]);
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "bpe"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate, CorpusConfig};
+
+    fn sample_corpus() -> Vec<u8> {
+        generate(&CorpusConfig { bytes: 60_000, ..Default::default() })
+    }
+
+    #[test]
+    fn roundtrip_on_training_text() {
+        let corpus = sample_corpus();
+        let bpe = Bpe::train(&corpus, 512);
+        let enc = bpe.encode(&corpus[..5000]);
+        assert_eq!(bpe.decode(&enc), &corpus[..5000]);
+    }
+
+    #[test]
+    fn roundtrip_on_unseen_text() {
+        let bpe = Bpe::train(&sample_corpus(), 384);
+        let unseen = b"completely novel zz@@qq bytes 42+58=100.".to_vec();
+        assert_eq!(bpe.decode(&bpe.encode(&unseen)), unseen);
+    }
+
+    #[test]
+    fn reaches_requested_vocab_and_compresses() {
+        let corpus = sample_corpus();
+        let bpe = Bpe::train(&corpus, 512);
+        assert_eq!(bpe.vocab_size(), 512);
+        let bpt = bpe.bytes_per_token(&corpus);
+        assert!(bpt > 1.5, "expected >1.5 bytes/token on Zipfian text, got {bpt}");
+    }
+
+    #[test]
+    fn merges_frequent_pairs_first() {
+        // "the" dominates the corpus -> 't','h' or 'h','e' or ' t' among
+        // the earliest merges.
+        let bpe = Bpe::train(&sample_corpus(), 300);
+        let early: Vec<Vec<u8>> = bpe.merges()[..8]
+            .iter()
+            .map(|&(a, b)| {
+                let mut v = bpe.decode(&[a]);
+                v.extend(bpe.decode(&[b]));
+                v
+            })
+            .collect();
+        assert!(
+            early.iter().any(|m| m == b"th" || m == b"he" || m == b" t" || m == b"e "),
+            "early merges: {:?}",
+            early.iter().map(|m| String::from_utf8_lossy(m).into_owned()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn training_is_deterministic() {
+        let corpus = sample_corpus();
+        let a = Bpe::train(&corpus, 320);
+        let b = Bpe::train(&corpus, 320);
+        assert_eq!(a.merges(), b.merges());
+    }
+
+    #[test]
+    fn encode_uses_merge_priority() {
+        // train on text where "ab" is merged before "bc"; encoding "abc"
+        // must then produce [ab, c] not [a, bc].
+        let text = b"ababababab bc".repeat(50);
+        let bpe = Bpe::train(&text, 258);
+        let enc = bpe.encode(b"abc");
+        assert_eq!(bpe.decode(&[enc[0]]), b"ab");
+    }
+}

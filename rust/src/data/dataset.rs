@@ -1,0 +1,216 @@
+//! Tokenized dataset with worker sharding and train/val split.
+//!
+//! Mirrors the paper's data-parallel setup: the token stream is split
+//! into a validation tail and a training head; the training head is
+//! partitioned into n *disjoint contiguous shards*, one per worker
+//! (distribution D_i in problem (1)); each worker samples (B, S) windows
+//! uniformly from its shard with its own RNG substream.  Batches are
+//! (tokens, targets) with targets = tokens shifted by one.
+
+use super::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+#[derive(Clone)]
+pub struct TokenDataset {
+    tokens: Vec<u32>,
+    val_start: usize,
+}
+
+/// One (tokens, targets) batch in the i32 layout the AOT'd model expects.
+#[derive(Clone, Debug)]
+pub struct Batch {
+    pub tokens: Vec<i32>,
+    pub targets: Vec<i32>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+impl TokenDataset {
+    pub fn from_text(tok: &dyn Tokenizer, text: &[u8], val_fraction: f64) -> Self {
+        let tokens = tok.encode(text);
+        Self::from_tokens(tokens, val_fraction)
+    }
+
+    pub fn from_tokens(tokens: Vec<u32>, val_fraction: f64) -> Self {
+        assert!(tokens.len() >= 64, "dataset too small");
+        assert!((0.0..0.9).contains(&val_fraction));
+        let val_start = ((tokens.len() as f64) * (1.0 - val_fraction)) as usize;
+        TokenDataset { tokens, val_start }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    pub fn train_len(&self) -> usize {
+        self.val_start
+    }
+
+    pub fn val_len(&self) -> usize {
+        self.tokens.len() - self.val_start
+    }
+
+    /// The contiguous training shard `[lo, hi)` for worker `i` of `n`.
+    pub fn shard_range(&self, worker: usize, n_workers: usize) -> (usize, usize) {
+        assert!(worker < n_workers);
+        let per = self.val_start / n_workers;
+        let lo = worker * per;
+        let hi = if worker + 1 == n_workers { self.val_start } else { lo + per };
+        (lo, hi)
+    }
+
+    fn window(&self, start: usize, batch_i: usize, seq: usize, out: &mut Batch) {
+        for j in 0..seq {
+            out.tokens[batch_i * seq + j] = self.tokens[start + j] as i32;
+            out.targets[batch_i * seq + j] = self.tokens[start + j + 1] as i32;
+        }
+    }
+
+    /// Sample a training batch from worker `i`'s shard.
+    pub fn sample_train(
+        &self,
+        worker: usize,
+        n_workers: usize,
+        batch: usize,
+        seq: usize,
+        rng: &mut Rng,
+    ) -> Batch {
+        let (lo, hi) = self.shard_range(worker, n_workers);
+        assert!(hi - lo > seq + 1, "shard smaller than one window");
+        let mut out = Batch {
+            tokens: vec![0; batch * seq],
+            targets: vec![0; batch * seq],
+            batch,
+            seq,
+        };
+        for b in 0..batch {
+            let start = lo + rng.below((hi - lo - seq - 1) as u64) as usize;
+            self.window(start, b, seq, &mut out);
+        }
+        out
+    }
+
+    /// Deterministic validation batches: fixed strided windows over the
+    /// validation tail, so every algorithm is evaluated on identical data.
+    pub fn val_batches(&self, batch: usize, seq: usize, max_batches: usize) -> Vec<Batch> {
+        let lo = self.val_start;
+        let hi = self.tokens.len();
+        let n_windows = (hi - lo - 1) / seq;
+        let n_batches = (n_windows / batch).min(max_batches);
+        let mut out = Vec::with_capacity(n_batches);
+        for bi in 0..n_batches {
+            let mut b = Batch {
+                tokens: vec![0; batch * seq],
+                targets: vec![0; batch * seq],
+                batch,
+                seq,
+            };
+            for j in 0..batch {
+                let start = lo + (bi * batch + j) * seq;
+                self.window(start, j, seq, &mut b);
+            }
+            out.push(b);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{generate, CorpusConfig};
+    use crate::data::tokenizer::ByteTokenizer;
+
+    fn ds() -> TokenDataset {
+        let text = generate(&CorpusConfig { bytes: 100_000, ..Default::default() });
+        TokenDataset::from_text(&ByteTokenizer, &text, 0.1)
+    }
+
+    #[test]
+    fn split_sizes() {
+        let d = ds();
+        assert_eq!(d.len(), 100_000);
+        assert_eq!(d.train_len(), 90_000);
+        assert_eq!(d.val_len(), 10_000);
+    }
+
+    #[test]
+    fn shards_are_disjoint_and_cover_train() {
+        let d = ds();
+        let n = 7;
+        let mut last_hi = 0;
+        for w in 0..n {
+            let (lo, hi) = d.shard_range(w, n);
+            assert_eq!(lo, last_hi);
+            assert!(hi > lo);
+            last_hi = hi;
+        }
+        assert_eq!(last_hi, d.train_len());
+    }
+
+    #[test]
+    fn targets_are_next_token() {
+        let d = ds();
+        let mut rng = Rng::new(0);
+        let b = d.sample_train(0, 4, 3, 32, &mut rng);
+        for i in 0..3 {
+            for j in 0..31 {
+                assert_eq!(b.tokens[i * 32 + j + 1], b.targets[i * 32 + j]);
+            }
+        }
+    }
+
+    #[test]
+    fn train_samples_stay_inside_worker_shard() {
+        // Construct a dataset where shard membership is detectable from
+        // the token values themselves.
+        let tokens: Vec<u32> = (0..10_000u32).map(|i| i / 2500).collect(); // 4 blocks
+        let d = TokenDataset::from_tokens(tokens, 0.0_f64.max(0.0) + 0.2);
+        let mut rng = Rng::new(1);
+        for w in 0..4 {
+            // 8000 train tokens -> 4 shards of 2000: worker w sees values
+            // from blocks floor(w*2000/2500)..; worker 0 only value 0.
+            let b = d.sample_train(w, 4, 4, 16, &mut rng);
+            let (lo, hi) = d.shard_range(w, 4);
+            for &t in &b.tokens {
+                assert!(
+                    (t as u32) >= (lo as u32 / 2500) && (t as u32) <= ((hi + 16) as u32 / 2500),
+                    "worker {w} saw token {t} outside shard [{lo},{hi})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn val_batches_are_deterministic_and_distinct() {
+        let d = ds();
+        let a = d.val_batches(4, 32, 8);
+        let b = d.val_batches(4, 32, 8);
+        assert_eq!(a.len(), 8);
+        assert_eq!(a[0].tokens, b[0].tokens);
+        assert_ne!(a[0].tokens, a[1].tokens);
+    }
+
+    #[test]
+    fn val_batches_use_only_validation_tail() {
+        let tokens: Vec<u32> = (0..1000u32).map(|i| if i < 800 { 1 } else { 2 }).collect();
+        let d = TokenDataset::from_tokens(tokens, 0.2);
+        for b in d.val_batches(2, 16, 4) {
+            assert!(b.tokens.iter().all(|&t| t == 2));
+        }
+    }
+
+    #[test]
+    fn different_rng_streams_give_different_batches() {
+        let d = ds();
+        let mut r1 = Rng::new(5).substream("worker", 0);
+        let mut r2 = Rng::new(5).substream("worker", 1);
+        let b1 = d.sample_train(0, 2, 2, 32, &mut r1);
+        let b2 = d.sample_train(0, 2, 2, 32, &mut r2);
+        assert_ne!(b1.tokens, b2.tokens);
+    }
+}

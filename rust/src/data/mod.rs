@@ -1,0 +1,17 @@
+//! Data pipeline: synthetic corpus, tokenizers, sharded token datasets.
+//!
+//! Substitutes the paper's OpenWebText (38 GB, unavailable offline) with
+//! a deterministic synthetic corpus that keeps the statistical properties
+//! LM-loss dynamics depend on — see corpus.rs.  A byte-level tokenizer is
+//! the default at repro scale (vocab 256); a real trainable BPE tokenizer
+//! is provided and exercised for fidelity at larger vocabularies.
+
+pub mod bpe;
+pub mod corpus;
+pub mod dataset;
+pub mod tokenizer;
+
+pub use bpe::Bpe;
+pub use corpus::CorpusConfig;
+pub use dataset::TokenDataset;
+pub use tokenizer::{ByteTokenizer, Tokenizer};

@@ -1,0 +1,57 @@
+//! Tokenizer trait + byte-level tokenizer.
+//!
+//! Repro-scale presets use byte-level tokens (vocab 256) so the embedding
+//! table stays small on the 1-core testbed; the BPE implementation in
+//! bpe.rs serves larger vocabularies (and the `gpt2s` preset's 50257-ish
+//! regime) and demonstrates the full pipeline the paper's setup uses.
+
+pub trait Tokenizer: Send + Sync {
+    fn vocab_size(&self) -> usize;
+    fn encode(&self, text: &[u8]) -> Vec<u32>;
+    fn decode(&self, tokens: &[u32]) -> Vec<u8>;
+    fn name(&self) -> &'static str;
+}
+
+/// Identity byte tokenizer: token id == byte value.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl Tokenizer for ByteTokenizer {
+    fn vocab_size(&self) -> usize {
+        256
+    }
+
+    fn encode(&self, text: &[u8]) -> Vec<u32> {
+        text.iter().map(|&b| b as u32).collect()
+    }
+
+    fn decode(&self, tokens: &[u32]) -> Vec<u8> {
+        tokens.iter().map(|&t| (t & 0xff) as u8).collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "byte"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn byte_roundtrip() {
+        let t = ByteTokenizer;
+        let text = b"Hello, world! 123".to_vec();
+        let enc = t.encode(&text);
+        assert_eq!(enc.len(), text.len());
+        assert_eq!(t.decode(&enc), text);
+        assert_eq!(t.vocab_size(), 256);
+    }
+
+    #[test]
+    fn all_bytes_covered() {
+        let t = ByteTokenizer;
+        let all: Vec<u8> = (0..=255).collect();
+        assert_eq!(t.decode(&t.encode(&all)), all);
+    }
+}

@@ -1,0 +1,79 @@
+//! Supplementary experiments beyond the paper's figures:
+//!
+//! * `hetero` — the Theorem-2(b) non-IID regime: every worker's shard is
+//!   dominated by a different corpus source (data/corpus.rs
+//!   `generate_heterogeneous`).  Compares Algorithm 1 / SlowMo / local
+//!   averaging under IID vs non-IID sharding: heterogeneity is the
+//!   δ²-term of the theory and the regime where naive local averaging
+//!   degrades hardest.
+//! * `remark1` — the Remark 1/2 comparison: Algorithm 1 (full-precision
+//!   aggregation, sign AFTER averaging) vs Federated MV-sto-signSGD-SIM
+//!   (randomized 1-bit signs + majority vote), which the paper proves
+//!   only converges to an O(dR/√n) neighborhood.
+
+use anyhow::Result;
+
+use super::gpt::{cell, Algo};
+use super::runner::{save_summary, Harness, Table};
+use crate::optim::BaseOptConfig;
+use crate::outer::OuterConfig;
+
+pub fn hetero(h: &Harness) -> Result<()> {
+    let budget = h.step_budget(120);
+    let (label, preset) = h.sizes()[0];
+    let mut t = Table::new(&["Alg.", "IID val", "non-IID val", "degradation"]);
+    let mut text = format!(
+        "Heterogeneous-data supplement ({label}, tau=12, n=4): Theorem 2(b)'s\n\
+         delta^2 regime — each worker's shard is dominated by one corpus source.\n\n"
+    );
+    for algo in [
+        Algo::Alg1 { eta: 12.0 },
+        Algo::SlowMo { alpha: 1.0, beta: 0.5 },
+        Algo::LocalAvg,
+    ] {
+        let iid = h.run(cell(h, preset, algo, 12, budget, 4, BaseOptConfig::adamw_paper()))?;
+        let mut cfg = cell(h, preset, algo, 12, budget, 4, BaseOptConfig::adamw_paper());
+        cfg.heterogeneous = true;
+        cfg.tag = format!("{}-hetero", cfg.tag);
+        let noniid = h.run(cfg)?;
+        t.row(vec![
+            algo.label(),
+            format!("{:.4}", iid.final_val),
+            format!("{:.4}", noniid.final_val),
+            format!("{:+.4}", noniid.final_val - iid.final_val),
+        ]);
+    }
+    text.push_str(&t.render());
+    println!("{text}");
+    save_summary(h, "hetero", &text)
+}
+
+pub fn remark1(h: &Harness) -> Result<()> {
+    let budget = h.step_budget(120);
+    let (label, preset) = h.sizes()[0];
+    let mut t = Table::new(&["Alg.", "communication", "Val."]);
+    let mut text = format!(
+        "Remark 1/2 supplement ({label}, tau=12, n=4): Algorithm 1's\n\
+         full-precision aggregation vs MV-sto-signSGD's 1-bit majority vote\n\
+         (converges only to an O(dR/sqrt(n)) neighborhood).\n\n"
+    );
+    let alg1 = h.run(cell(h, preset, Algo::Alg1 { eta: 12.0 }, 12, budget, 4,
+        BaseOptConfig::adamw_paper()))?;
+    t.row(vec!["Algorithm 1".into(), "full-precision".into(), format!("{:.4}", alg1.final_val)]);
+    // MV-signSGD per Alg. 6: SGD local steps, per-round movement = eta.
+    let mut cfg = cell(h, preset, Algo::Alg1 { eta: 1.0 }, 12, budget, 4,
+        BaseOptConfig::sgd_plain());
+    cfg.outer = OuterConfig::MvSignSgd { eta: 12e-3, beta: 0.9, alpha: 0.1, bound: 5.0 };
+    cfg.tag = format!("{preset}-mv_signsgd-tau12-n4-b{budget}");
+    let mv = h.run(cfg)?;
+    t.row(vec!["MV-sto-signSGD-SIM".into(), "1-bit majority vote".into(),
+        format!("{:.4}", mv.final_val)]);
+    text.push_str(&t.render());
+    text.push_str(
+        "\nExpected shape: MV's randomized-sign votes decorrelate when |m| << B,\n\
+         stalling in a neighborhood — Algorithm 1 reaches lower loss on the\n\
+         same budget (Remark 2).\n",
+    );
+    println!("{text}");
+    save_summary(h, "remark1", &text)
+}

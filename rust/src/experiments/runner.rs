@@ -1,0 +1,242 @@
+//! Shared experiment infrastructure: harness construction, run caching,
+//! table formatting.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::runtime::{Artifacts, ModelBundle, Runtime};
+use crate::train::metrics::RunLog;
+use crate::train::Trainer;
+
+pub struct Harness {
+    pub rt: Runtime,
+    pub arts: Artifacts,
+    pub runs_dir: PathBuf,
+    /// Multiplies every experiment's local-step budget.
+    pub scale: f64,
+    /// Shift the size trio up one preset (nano/small/medium -> small/medium/large).
+    pub big: bool,
+    pub use_cache: bool,
+    pub quiet: bool,
+    /// Compiled-executable cache: one ModelBundle per preset, shared by
+    /// every run in a sweep (XLA compilation is ~15 s per preset).
+    bundles: RefCell<HashMap<String, Rc<ModelBundle>>>,
+}
+
+impl Harness {
+    pub fn new(scale: f64, big: bool, use_cache: bool) -> Result<Harness> {
+        Ok(Harness {
+            rt: Runtime::cpu()?,
+            arts: Artifacts::load(&Artifacts::default_dir())?,
+            runs_dir: PathBuf::from("runs"),
+            scale,
+            big,
+            use_cache,
+            quiet: false,
+            bundles: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn bundle(&self, preset: &str) -> Result<Rc<ModelBundle>> {
+        if let Some(b) = self.bundles.borrow().get(preset) {
+            return Ok(b.clone());
+        }
+        let info = self.arts.preset(preset)?;
+        let b = Rc::new(ModelBundle::load(&self.rt, info)?);
+        self.bundles.borrow_mut().insert(preset.to_string(), b.clone());
+        Ok(b)
+    }
+
+    /// The "Small / Medium / Large" trio at the current scale.
+    pub fn sizes(&self) -> [(&'static str, &'static str); 3] {
+        if self.big {
+            [("Small", "small"), ("Medium", "medium"), ("Large", "large")]
+        } else {
+            [("Small", "nano"), ("Medium", "small"), ("Large", "medium")]
+        }
+    }
+
+    /// Local-step budget shared by all algorithms in a sweep (the paper
+    /// fixes 100k steps for every method; we fix `base·scale`).
+    pub fn step_budget(&self, base: usize) -> usize {
+        ((base as f64) * self.scale).round().max(2.0) as usize
+    }
+
+    /// Run (or load from cache) one configuration.
+    pub fn run(&self, mut cfg: RunConfig) -> Result<RunSummary> {
+        let key = cache_key(&cfg);
+        let cache_csv = self.runs_dir.join("cache").join(format!("{key}.csv"));
+        if self.use_cache && cache_csv.exists() {
+            let log = RunLog::read_csv(&cache_csv)?;
+            if let Some(final_val) = log.final_val_loss() {
+                if !self.quiet {
+                    println!("  [cached] {:<40} val {:.4}", cfg.tag, final_val);
+                }
+                return Ok(RunSummary {
+                    tag: cfg.tag.clone(),
+                    final_val,
+                    best_val: log.best_val_loss().unwrap_or(final_val),
+                    log,
+                });
+            }
+        }
+
+        cfg.log_dir = None;
+        if !self.quiet {
+            println!("  [run] {}", cfg.describe());
+        }
+        let t0 = std::time::Instant::now();
+        let bundle = self.bundle(&cfg.preset)?;
+        let mut trainer = Trainer::with_bundle(cfg.clone(), bundle, &self.rt, &self.arts)?;
+        let res = trainer.run()?;
+        if !self.quiet {
+            println!(
+                "        -> val {:.4} (best {:.4})  [{:.1}s wall, {:.1}s sim, {} comm rounds]",
+                res.final_val,
+                res.best_val,
+                t0.elapsed().as_secs_f64(),
+                res.clock.total_s(),
+                res.clock.comm_rounds
+            );
+        }
+        res.log.write_csv(&cache_csv)?;
+        Ok(RunSummary {
+            tag: cfg.tag,
+            final_val: res.final_val,
+            best_val: res.best_val,
+            log: res.log,
+        })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct RunSummary {
+    pub tag: String,
+    pub final_val: f64,
+    pub best_val: f64,
+    pub log: RunLog,
+}
+
+/// Content hash of everything that determines a run's trajectory.
+fn cache_key(cfg: &RunConfig) -> String {
+    let desc = format!(
+        "{}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{}|{}|{}",
+        cfg.describe(),
+        cfg.base,
+        cfg.outer,
+        cfg.schedule,
+        cfg.seed,
+        cfg.eval_every,
+        cfg.eval_batches,
+        cfg.corpus_bytes,
+        cfg.val_fraction,
+        cfg.comm.latency_s,
+        cfg.comm.bandwidth_bps,
+        cfg.global_step_pallas,
+    ) + if cfg.heterogeneous { "|hetero" } else { "" };
+    // FNV-1a 64
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in desc.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    format!("{}-{h:016x}", cfg.tag.replace(['/', ' '], "_"))
+}
+
+/// Perplexity improvement of `ours` over `baseline` in % — the paper's
+/// "Improv." column: e^(val_base - val_ours) - 1.
+pub fn ppl_improvement(baseline_val: f64, ours_val: f64) -> f64 {
+    ((baseline_val - ours_val).exp() - 1.0) * 100.0
+}
+
+/// Fixed-width table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for row in std::iter::once(&self.header).chain(self.rows.iter()) {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Persist an experiment's rendered output under runs/<id>/summary.txt.
+pub fn save_summary(h: &Harness, id: &str, text: &str) -> Result<()> {
+    let dir = h.runs_dir.join(id);
+    std::fs::create_dir_all(&dir)?;
+    std::fs::write(dir.join("summary.txt"), text)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ppl_improvement_matches_paper_arithmetic() {
+        // Table 2 medium τ=12: SlowMo 2.810, Alg1 2.709 -> 10.63%
+        let imp = ppl_improvement(2.810, 2.709);
+        assert!((imp - 10.63).abs() < 0.05, "{imp}");
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["Alg.", "Val."]);
+        t.row(vec!["AdamW".into(), "2.917".into()]);
+        t.row(vec!["Algorithm 1".into(), "2.942".into()]);
+        let s = t.render();
+        assert!(s.contains("Alg."));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    fn cache_key_distinguishes_configs() {
+        let a = RunConfig::paper_default("nano");
+        let mut b = a.clone();
+        b.seed += 1;
+        assert_ne!(cache_key(&a), cache_key(&b));
+        let mut c = a.clone();
+        c.tau = 24;
+        assert_ne!(cache_key(&a), cache_key(&c));
+        assert_eq!(cache_key(&a), cache_key(&a.clone()));
+    }
+}

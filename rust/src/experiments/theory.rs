@@ -1,0 +1,140 @@
+//! Theory validation (§3): empirical convergence-rate exponents for the
+//! instances analyzed in Theorems 1-3, on the analytic problems of
+//! `sim::problems` where every assumption holds by construction.
+//!
+//! * Thm 2 check — randomized sign (eq. 9), SGD base, parameters as in
+//!   Thm 1 (γ ∝ √(nτ/T)): the running mean of ‖∇f‖² should decay like
+//!   O(1/√T)  ⇒ log-log slope ≈ -0.5 in T.
+//! * Thm 3 check — exact sign, η = 1/(L T^{3/4}), 1-β = 1/√T: mean ℓ1
+//!   gradient norm decays like O(1/T^{1/4}) ⇒ slope ≈ -0.25.
+//! * Speedup check — the σ-term of Thm 3 is σ√(d/τn)/T^{1/4}: in the
+//!   noise-dominated regime the achieved ℓ1 norm should improve as n and
+//!   τ grow.
+
+use anyhow::Result;
+
+use super::runner::{save_summary, Harness, Table};
+use crate::sign::SignOp;
+use crate::sim::{loglog_slope, run_sign_momentum, HeterogeneousQuadratic, RastriginLike, SimSpec};
+
+pub fn run(h: &Harness) -> Result<()> {
+    let mut text = String::new();
+
+    // ---- Theorem 1/2: randomized sign, averaged squared norm ----------
+    {
+        let dim = 32;
+        let problem = HeterogeneousQuadratic::new(dim, 8, 0.4, 0.4, 9);
+        let (n, tau) = (8usize, 4usize);
+        let r_bound = 8.0f32; // generous Assumption-3 bound on this problem
+        let mut pts = Vec::new();
+        let mut t = Table::new(&["T (rounds)", "gamma (thm)", "mean ||grad||^2"]);
+        for rounds in [64usize, 256, 1024, 4096] {
+            // Theorem 1 step size: γ = (R/η)·√(nτ/T) with η = τR ⇒ α = √(n/τT).
+            let eta = tau as f32 * r_bound;
+            let gamma = (r_bound / eta) * ((n * tau) as f32 / rounds as f32).sqrt();
+            let spec = SimSpec {
+                n_workers: n,
+                tau,
+                rounds,
+                gamma,
+                eta,
+                beta1: 0.9,
+                beta2: 0.9,
+                sign_op: SignOp::RandPm,
+                sign_bound: tau as f32 * r_bound,
+                seed: 5,
+            };
+            let res = run_sign_momentum(&problem, &spec);
+            t.row(vec![
+                format!("{rounds}"),
+                format!("{gamma:.4}"),
+                format!("{:.4e}", res.mean_sq_grad_norm),
+            ]);
+            pts.push((rounds as f64, res.mean_sq_grad_norm));
+        }
+        let slope = loglog_slope(&pts);
+        text.push_str(&format!(
+            "Theorem 1/2 instance (randomized sign S_r, SGD base, quadratic, n={n}, tau={tau}):\n{}\
+             empirical rate: mean||grad||^2 ~ T^{slope:.3}   (theory: <= O(T^-0.5))\n\n",
+            t.render()
+        ));
+    }
+
+    // ---- Theorem 3: exact sign, l1 norms -------------------------------
+    {
+        let dim = 32;
+        let problem = RastriginLike::new(dim, 8, 0.5, 1.5, 0.3, 3);
+        let l = 2.5f32; // smoothness of the problem (1 + c)
+        let (n, tau) = (8usize, 4usize);
+        let mut pts = Vec::new();
+        let mut t = Table::new(&["T (rounds)", "eta (thm)", "1-beta", "mean ||grad||_1"]);
+        for rounds in [256usize, 1024, 4096, 16384] {
+            let eta = 1.0 / (l * (rounds as f32).powf(0.75));
+            let beta = 1.0 - 1.0 / (rounds as f32).sqrt();
+            let spec = SimSpec {
+                n_workers: n,
+                tau,
+                rounds,
+                gamma: 0.02,
+                // in Thm 3's parameterization the applied step is η·sign(m);
+                // our update applies η·γ·sign(m), so fold γ into η here.
+                eta: eta / 0.02,
+                beta1: beta,
+                beta2: beta,
+                sign_op: SignOp::Exact,
+                sign_bound: 1.0,
+                seed: 7,
+            };
+            let res = run_sign_momentum(&problem, &spec);
+            t.row(vec![
+                format!("{rounds}"),
+                format!("{eta:.5}"),
+                format!("{:.4}", 1.0 - beta),
+                format!("{:.4}", res.mean_l1_grad_norm),
+            ]);
+            pts.push((rounds as f64, res.mean_l1_grad_norm));
+        }
+        let slope = loglog_slope(&pts);
+        text.push_str(&format!(
+            "Theorem 3 instance (exact sign, eta=1/(L T^0.75), 1-beta=1/sqrt(T), nonconvex):\n{}\
+             empirical rate: mean||grad||_1 ~ T^{slope:.3}   (theory: <= O(T^-0.25))\n\n",
+            t.render()
+        ));
+    }
+
+    // ---- Linear speedup in n and tau (Thm 3's sigma-term) --------------
+    {
+        let dim = 32;
+        let rounds = 64;
+        let seeds = [13u64, 14, 15, 16, 17];
+        let mut t = Table::new(&["n", "tau", "final loss (5-seed mean)"]);
+        for (n, tau) in [(1usize, 4usize), (4, 4), (16, 4), (4, 1), (4, 16)] {
+            let mut acc = 0.0;
+            for &seed in &seeds {
+                let problem = HeterogeneousQuadratic::new(dim, n, 6.0, 0.0, 21);
+                let spec = SimSpec {
+                    n_workers: n,
+                    tau,
+                    rounds,
+                    gamma: 0.05,
+                    eta: 1.0,
+                    beta1: 0.9,
+                    beta2: 0.9,
+                    sign_op: SignOp::Exact,
+                    sign_bound: 1.0,
+                    seed,
+                };
+                acc += run_sign_momentum(&problem, &spec).final_loss;
+            }
+            t.row(vec![format!("{n}"), format!("{tau}"), format!("{:.3}", acc / seeds.len() as f64)]);
+        }
+        text.push_str(&format!(
+            "Speedup check (sigma = 6 noise-dominated quadratic, T = {rounds}, gamma = 0.05):\n\
+             Thm 3's sigma-term sigma*sqrt(d/(tau*n)) predicts progress improves in BOTH n and tau.\n{}\n",
+            t.render()
+        ));
+    }
+
+    println!("{text}");
+    save_summary(h, "theory", &text)
+}

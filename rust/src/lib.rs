@@ -1,0 +1,32 @@
+//! # dist-sign-momentum
+//!
+//! Production-grade reproduction of *"Distributed Sign Momentum with
+//! Local Steps for Training Transformers"* (Yu et al., 2024) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the distributed-training coordinator: local
+//!   steps with pluggable base optimizers ([`optim`]), periodic exact
+//!   averaging with a modeled communication cost ([`dist`], [`comm`]),
+//!   and the paper's global sign-momentum step plus every baseline /
+//!   ablation outer optimizer ([`outer`]).
+//! * **L2/L1 (python/compile/)** — GPT-2 fwd/bwd in JAX calling Pallas
+//!   kernels, AOT-lowered to HLO text loaded by [`runtime`] via PJRT.
+//!   Python never runs at training time.
+//!
+//! Entry points: the `repro` binary (train / experiment / data / inspect),
+//! the [`train::Trainer`] API, and `examples/`.
+
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod dist;
+pub mod optim;
+pub mod outer;
+pub mod runtime;
+pub mod sign;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+pub mod util;
+
+pub mod experiments;

@@ -1,0 +1,268 @@
+//! `repro` — launcher for the dist-sign-momentum training system.
+//!
+//! Subcommands:
+//!   train        run one training configuration (TOML file + flag overrides)
+//!   experiment   regenerate a paper table/figure (or `all`)
+//!   data         synthesize/inspect the corpus, train a BPE tokenizer
+//!   inspect      show manifest / artifact / checkpoint contents
+//!   sim          run the pure-Rust theory testbed once
+//!   list         list experiments and model presets
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use dsm::config::RunConfig;
+use dsm::data::corpus::{byte_entropy_bits, generate, CorpusConfig};
+use dsm::data::{Bpe, Tokenizer};
+use dsm::experiments::{self, runner::Harness};
+use dsm::runtime::{Artifacts, Runtime};
+use dsm::sign::SignOp;
+use dsm::sim::{run_sign_momentum, HeterogeneousQuadratic, SimSpec};
+use dsm::train::checkpoint::Checkpoint;
+use dsm::train::Trainer;
+use dsm::util::cli::Args;
+
+const BOOL_FLAGS: &[&str] =
+    &["verbose", "no-cache", "big", "pallas-global-step", "quiet", "nesterov", "signed", "heterogeneous"];
+
+const USAGE: &str = "\
+repro — Distributed Sign Momentum (Yu et al. 2024) training system
+
+USAGE:
+  repro train   [--config run.toml] [--preset P] [--workers N] [--tau K]
+                [--rounds T] [--outer ALGO] [--global-lr F] [--peak-lr F]
+                [--mode local|standalone] [--comm PRESET] [--seed S]
+                [--pallas-global-step] [--log-dir DIR] [--checkpoint F]
+                [--resume F]
+  repro experiment <id|all> [--scale F] [--big] [--no-cache]
+  repro data    [--bytes N] [--seed S] [--bpe-vocab V] [--out FILE]
+  repro inspect manifest|checkpoint [PATH]
+  repro sim     [--workers N] [--tau K] [--rounds T] [--sign exact|rand_pm|rand_zero]
+  repro list
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse_with_bools(argv, BOOL_FLAGS).map_err(|e| anyhow!(e))?;
+    let Some(cmd) = args.positional.first().map(String::as_str) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd {
+        "train" => cmd_train(&args),
+        "experiment" | "exp" => cmd_experiment(&args),
+        "data" => cmd_data(&args),
+        "inspect" => cmd_inspect(&args),
+        "sim" => cmd_sim(&args),
+        "list" => cmd_list(),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command `{other}`\n{USAGE}"),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let toml_text = match args.get("config") {
+        Some(path) => {
+            Some(std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?)
+        }
+        None => None,
+    };
+    let cfg = RunConfig::from_toml_and_args(toml_text.as_deref(), args)?;
+    warn_unknown(args);
+
+    let rt = Runtime::cpu()?;
+    let arts = Artifacts::load(&Artifacts::default_dir())?;
+    println!("platform: {}", rt.platform());
+    println!("run: {}", cfg.describe());
+
+    let log_dir = cfg.log_dir.clone();
+    let tag = cfg.tag.clone();
+    let ckpt_out = args.get("checkpoint").map(PathBuf::from);
+    let resume = args.get("resume").map(PathBuf::from);
+
+    let mut trainer = Trainer::new(cfg, &rt, &arts)?;
+    if let Some(path) = resume {
+        trainer.load_checkpoint(&path)?;
+        println!("resumed from {path:?}");
+    }
+    let t0 = std::time::Instant::now();
+    let res = trainer.run_with_progress(|row| {
+        println!(
+            "round {:>4}  steps {:>6}  train {:.4}  val {}  lr {:.2e}  sim {:.1}s",
+            row.round,
+            row.local_steps,
+            row.train_loss,
+            if row.val_loss.is_nan() {
+                "  --  ".to_string()
+            } else {
+                format!("{:.4}", row.val_loss)
+            },
+            row.lr,
+            row.sim_time_s,
+        );
+    })?;
+    println!(
+        "done: final val {:.4} (best {:.4}) | wall {:.1}s | sim {:.1}s \
+         ({:.1}s compute + {:.2}s comm + {:.2}s stragglers) | {} comm rounds, {:.1} MB moved",
+        res.final_val,
+        res.best_val,
+        t0.elapsed().as_secs_f64(),
+        res.clock.total_s(),
+        res.clock.compute_s,
+        res.clock.comm_s,
+        res.clock.straggler_s,
+        res.clock.comm_rounds,
+        res.clock.bytes_communicated as f64 / 1e6,
+    );
+    if let Some(dir) = log_dir {
+        let path = dir.join(format!("{tag}.csv"));
+        res.log.write_csv(&path)?;
+        println!("log: {path:?}");
+    }
+    if let Some(path) = ckpt_out {
+        trainer.save_checkpoint(&path)?;
+        println!("checkpoint: {path:?}");
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or_else(|| anyhow!("usage: repro experiment <id|all>; see `repro list`"))?
+        .clone();
+    let scale = args.f64_or("scale", 1.0).map_err(|e| anyhow!(e))?;
+    let h = Harness::new(scale, args.has("big"), !args.has("no-cache"))?;
+    warn_unknown(args);
+    experiments::run(&id, &h)
+}
+
+fn cmd_data(args: &Args) -> Result<()> {
+    let bytes = args.usize_or("bytes", 1 << 20).map_err(|e| anyhow!(e))?;
+    let seed = args.u64_or("seed", 1234).map_err(|e| anyhow!(e))?;
+    let corpus = generate(&CorpusConfig { bytes, seed, ..Default::default() });
+    println!(
+        "corpus: {} bytes, unigram entropy {:.3} bits/byte",
+        corpus.len(),
+        byte_entropy_bits(&corpus)
+    );
+    println!("sample: {}", String::from_utf8_lossy(&corpus[..200.min(corpus.len())]));
+    if let Some(v) = args.get("bpe-vocab") {
+        let vocab: usize = v.parse().map_err(|_| anyhow!("--bpe-vocab: bad integer"))?;
+        let t0 = std::time::Instant::now();
+        let bpe = Bpe::train(&corpus[..corpus.len().min(256 << 10)], vocab);
+        println!(
+            "bpe: trained vocab {} in {:.1}s, {:.2} bytes/token on held-out text",
+            bpe.vocab_size(),
+            t0.elapsed().as_secs_f64(),
+            bpe.bytes_per_token(&corpus[corpus.len() / 2..corpus.len() / 2 + 65536])
+        );
+    }
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &corpus)?;
+        println!("wrote {out}");
+    }
+    warn_unknown(args);
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(String::as_str) {
+        Some("manifest") => {
+            let arts = Artifacts::load(&Artifacts::default_dir())?;
+            arts.validate()?;
+            println!("artifacts dir: {:?}", arts.dir);
+            println!(
+                "sign_update kernel: {:?} (chunk {})",
+                arts.sign_update_file.file_name().unwrap(),
+                arts.sign_update_chunk
+            );
+            for (name, p) in &arts.presets {
+                println!(
+                    "preset {name:>8}: {:>10} params | d={} L={} H={} S={} B={} vocab={} | {} tensors",
+                    p.param_count,
+                    p.d_model,
+                    p.n_layer,
+                    p.n_head,
+                    p.seq,
+                    p.batch,
+                    p.vocab,
+                    p.layout.len()
+                );
+            }
+            Ok(())
+        }
+        Some("checkpoint") => {
+            let path = args
+                .positional
+                .get(2)
+                .ok_or_else(|| anyhow!("usage: repro inspect checkpoint <path>"))?;
+            let ck = Checkpoint::load(&PathBuf::from(path))?;
+            println!("checkpoint `{}` @ round {}", ck.tag, ck.round);
+            for (name, buf) in &ck.buffers {
+                println!("  {name:<24} {:>10} f32", buf.len());
+            }
+            Ok(())
+        }
+        _ => bail!("usage: repro inspect manifest|checkpoint [PATH]"),
+    }
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let spec = SimSpec {
+        n_workers: args.usize_or("workers", 8).map_err(|e| anyhow!(e))?,
+        tau: args.usize_or("tau", 4).map_err(|e| anyhow!(e))?,
+        rounds: args.usize_or("rounds", 1000).map_err(|e| anyhow!(e))?,
+        gamma: args.f32_or("gamma", 0.01).map_err(|e| anyhow!(e))?,
+        eta: args.f32_or("eta", 1.0).map_err(|e| anyhow!(e))?,
+        beta1: args.f32_or("beta1", 0.95).map_err(|e| anyhow!(e))?,
+        beta2: args.f32_or("beta2", 0.98).map_err(|e| anyhow!(e))?,
+        sign_op: SignOp::parse(&args.str_or("sign", "exact"))
+            .ok_or_else(|| anyhow!("--sign: exact|rand_pm|rand_zero"))?,
+        sign_bound: args.f32_or("bound", 50.0).map_err(|e| anyhow!(e))?,
+        seed: args.u64_or("seed", 1).map_err(|e| anyhow!(e))?,
+    };
+    let problem = HeterogeneousQuadratic::new(
+        args.usize_or("dim", 64).map_err(|e| anyhow!(e))?,
+        spec.n_workers,
+        args.f32_or("sigma", 0.5).map_err(|e| anyhow!(e))?,
+        args.f32_or("delta", 0.5).map_err(|e| anyhow!(e))?,
+        spec.seed,
+    );
+    warn_unknown(args);
+    let res = run_sign_momentum(&problem, &spec);
+    println!(
+        "sim: mean||grad||^2 {:.4e} | mean||grad||_1 {:.4} | final loss {:.4} | final ||grad|| {:.4e}",
+        res.mean_sq_grad_norm, res.mean_l1_grad_norm, res.final_loss, res.final_grad_norm
+    );
+    Ok(())
+}
+
+fn cmd_list() -> Result<()> {
+    println!("experiments:");
+    for (id, desc) in experiments::ALL {
+        println!("  {id:<8} {desc}");
+    }
+    println!("\nmodel presets (run `repro inspect manifest` for details):");
+    println!("  nano small medium large  — repro-scale GPT-2 analogues");
+    println!("  gpt2s                    — the paper's GPT-2 Small (AOT proof)");
+    Ok(())
+}
+
+fn warn_unknown(args: &Args) {
+    for flag in args.unknown_flags() {
+        eprintln!("warning: unused flag --{flag}");
+    }
+}

@@ -1,0 +1,99 @@
+//! Lion (Evolved Sign Momentum, Chen et al. 2024) — paper's Algorithm 4.
+//!
+//! Algorithm 1's global step is exactly a Lion step over pseudo-gradients
+//! (aggregated local differences); having the centralized optimizer here
+//! lets tests pin that correspondence: Algorithm 1 with n=1, τ=1, SGD
+//! base reduces to Lion on the same gradient stream
+//! (rust/tests/equivalence.rs).
+
+use super::BaseOptimizer;
+use crate::tensor::sign_f32;
+
+pub struct Lion {
+    beta1: f32,
+    beta2: f32,
+    weight_decay: f32,
+    m: Vec<f32>,
+}
+
+impl Lion {
+    pub fn new(dim: usize, beta1: f32, beta2: f32, weight_decay: f32) -> Self {
+        Lion { beta1, beta2, weight_decay, m: vec![0.0; dim] }
+    }
+}
+
+impl BaseOptimizer for Lion {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        let (b1, b2, wd) = (self.beta1, self.beta2, self.weight_decay);
+        for ((p, &g), m) in params.iter_mut().zip(grads).zip(self.m.iter_mut()) {
+            let u = b1 * *m + (1.0 - b1) * g;
+            *p -= lr * (sign_f32(u) + wd * *p);
+            *m = b2 * *m + (1.0 - b2) * g;
+        }
+    }
+
+    fn reset(&mut self) {
+        self.m.fill(0.0);
+    }
+
+    fn name(&self) -> &'static str {
+        "lion"
+    }
+
+    fn state(&self) -> Vec<&[f32]> {
+        vec![&self.m]
+    }
+
+    fn load_state(&mut self, bufs: &[Vec<f32>]) {
+        self.m.copy_from_slice(&bufs[0]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn updates_have_unit_magnitude() {
+        let mut opt = Lion::new(3, 0.9, 0.99, 0.0);
+        let mut p = vec![0.0f32; 3];
+        opt.step(&mut p, &[5.0, -0.001, 100.0], 0.1);
+        assert_eq!(p, vec![-0.1, 0.1, -0.1]);
+    }
+
+    #[test]
+    fn interpolation_uses_beta1_update_uses_beta2() {
+        let mut opt = Lion::new(1, 0.5, 0.9, 0.0);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 1.0); // u = 0.5*0 + 0.5*1 > 0 -> p=-1; m=0.1
+        assert_eq!(p[0], -1.0);
+        // strong negative gradient: u = 0.5*0.1 - 0.5*0.3 < 0 -> +1 step
+        opt.step(&mut p, &[-0.3], 1.0);
+        assert_eq!(p[0], 0.0);
+        // m now = 0.9*0.1 + 0.1*(-0.3) = 0.06
+        opt.step(&mut p, &[0.0], 1.0); // u = 0.5*0.06 > 0 -> p -= 1
+        assert_eq!(p[0], -1.0);
+    }
+
+    #[test]
+    fn weight_decay_is_decoupled_and_signless() {
+        let mut opt = Lion::new(1, 0.9, 0.99, 0.1);
+        let mut p = vec![10.0f32];
+        opt.step(&mut p, &[0.0], 0.5);
+        // sign(u)=0, so the move is purely decay: 10 - 0.5*0.1*10 = 9.5
+        assert_eq!(p[0], 9.5);
+    }
+
+    #[test]
+    fn converges_on_quadratic_with_decaying_lr() {
+        let mut opt = Lion::new(1, 0.9, 0.99, 0.0);
+        let mut p = vec![4.0f32];
+        for t in 0..400 {
+            let g = vec![p[0]];
+            let lr = 0.5 / (1.0 + t as f32).sqrt();
+            opt.step(&mut p, &g, lr);
+        }
+        assert!(p[0].abs() < 0.1, "{}", p[0]);
+    }
+}

@@ -1,0 +1,196 @@
+//! Base optimizers — the inner-loop "local step" engines of Algorithm 1.
+//!
+//! The paper's framework is agnostic to the base optimizer (§2): workers
+//! run τ local steps of *any* of these, and only the resulting parameter
+//! difference feeds the global sign-momentum step.  We provide the ones
+//! the paper evaluates or references: SGD (±momentum) for the theory
+//! instances (Theorems 2-3), AdamW for the main experiments (§4), Lion
+//! because Algorithm 1's global step mimics it, and a Sophia variant for
+//! Table 3.
+//!
+//! All optimizers operate on the flat `f32[P]` parameter vector produced
+//! by the AOT'd model; `step()` consumes the gradient for one minibatch
+//! and the current LR from the schedule.
+
+mod adamw;
+mod lion;
+mod sgd;
+mod sophia;
+
+pub use adamw::AdamW;
+pub use lion::Lion;
+pub use sgd::Sgd;
+pub use sophia::SophiaLite;
+
+use crate::util::json::Json;
+
+/// A local (per-worker) optimizer over the flat parameter vector.
+pub trait BaseOptimizer: Send {
+    /// Apply one update in place: `params <- params - lr * d(grads)`.
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
+
+    /// Reset internal state (momentum buffers etc.) to zero.
+    fn reset(&mut self);
+
+    /// Stable name, used in logs and checkpoints.
+    fn name(&self) -> &'static str;
+
+    /// Internal state as flat buffers for checkpointing, in a fixed order.
+    fn state(&self) -> Vec<&[f32]>;
+
+    /// Restore state saved by [`BaseOptimizer::state`].
+    fn load_state(&mut self, bufs: &[Vec<f32>]);
+}
+
+/// Configuration for constructing a base optimizer (paper §4 defaults).
+#[derive(Clone, Debug, PartialEq)]
+pub enum BaseOptConfig {
+    Sgd { momentum: f32, nesterov: bool, weight_decay: f32 },
+    AdamW { beta1: f32, beta2: f32, eps: f32, weight_decay: f32 },
+    Lion { beta1: f32, beta2: f32, weight_decay: f32 },
+    Sophia { beta1: f32, beta2: f32, rho: f32, eps: f32, weight_decay: f32 },
+}
+
+impl BaseOptConfig {
+    /// AdamW with the paper's pre-training hyper-parameters
+    /// (β1=0.9, β2=0.95, λ=0.1 — §4 "Implementations").
+    pub fn adamw_paper() -> Self {
+        BaseOptConfig::AdamW { beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 }
+    }
+
+    pub fn sgd_plain() -> Self {
+        BaseOptConfig::Sgd { momentum: 0.0, nesterov: false, weight_decay: 0.0 }
+    }
+
+    pub fn sophia_paper() -> Self {
+        BaseOptConfig::Sophia { beta1: 0.96, beta2: 0.99, rho: 0.05, eps: 1e-12, weight_decay: 0.1 }
+    }
+
+    pub fn lion_paper() -> Self {
+        BaseOptConfig::Lion { beta1: 0.95, beta2: 0.98, weight_decay: 0.1 }
+    }
+
+    pub fn build(&self, dim: usize) -> Box<dyn BaseOptimizer> {
+        match *self {
+            BaseOptConfig::Sgd { momentum, nesterov, weight_decay } => {
+                Box::new(Sgd::new(dim, momentum, nesterov, weight_decay))
+            }
+            BaseOptConfig::AdamW { beta1, beta2, eps, weight_decay } => {
+                Box::new(AdamW::new(dim, beta1, beta2, eps, weight_decay))
+            }
+            BaseOptConfig::Lion { beta1, beta2, weight_decay } => {
+                Box::new(Lion::new(dim, beta1, beta2, weight_decay))
+            }
+            BaseOptConfig::Sophia { beta1, beta2, rho, eps, weight_decay } => {
+                Box::new(SophiaLite::new(dim, beta1, beta2, rho, eps, weight_decay))
+            }
+        }
+    }
+
+    /// Parse from a config table like `{algo = "adamw", beta1 = 0.9, ...}`.
+    /// Unknown keys are ignored; missing keys take paper defaults.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let algo = v
+            .get("algo")
+            .and_then(Json::as_str)
+            .ok_or("base optimizer table needs `algo`")?;
+        let f = |key: &str, default: f32| -> f32 {
+            v.get(key).and_then(Json::as_f64).map(|x| x as f32).unwrap_or(default)
+        };
+        Ok(match algo {
+            "sgd" => BaseOptConfig::Sgd {
+                momentum: f("momentum", 0.0),
+                nesterov: v.get("nesterov").and_then(Json::as_bool).unwrap_or(false),
+                weight_decay: f("weight_decay", 0.0),
+            },
+            "adamw" => BaseOptConfig::AdamW {
+                beta1: f("beta1", 0.9),
+                beta2: f("beta2", 0.95),
+                eps: f("eps", 1e-8),
+                weight_decay: f("weight_decay", 0.1),
+            },
+            "lion" => BaseOptConfig::Lion {
+                beta1: f("beta1", 0.95),
+                beta2: f("beta2", 0.98),
+                weight_decay: f("weight_decay", 0.1),
+            },
+            "sophia" => BaseOptConfig::Sophia {
+                beta1: f("beta1", 0.96),
+                beta2: f("beta2", 0.99),
+                rho: f("rho", 0.05),
+                eps: f("eps", 1e-12),
+                weight_decay: f("weight_decay", 0.1),
+            },
+            other => return Err(format!("unknown base optimizer `{other}`")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BaseOptConfig::Sgd { .. } => "sgd",
+            BaseOptConfig::AdamW { .. } => "adamw",
+            BaseOptConfig::Lion { .. } => "lion",
+            BaseOptConfig::Sophia { .. } => "sophia",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml;
+
+    #[test]
+    fn build_all_kinds() {
+        for cfg in [
+            BaseOptConfig::sgd_plain(),
+            BaseOptConfig::adamw_paper(),
+            BaseOptConfig::lion_paper(),
+            BaseOptConfig::sophia_paper(),
+        ] {
+            let mut opt = cfg.build(8);
+            let mut p = vec![1.0f32; 8];
+            let g = vec![0.5f32; 8];
+            opt.step(&mut p, &g, 0.1);
+            assert!(p.iter().all(|&x| x < 1.0), "{} did not descend", opt.name());
+        }
+    }
+
+    #[test]
+    fn from_json_parses_and_defaults() {
+        let t = toml::parse("algo = \"adamw\"\nbeta2 = 0.999\n").unwrap();
+        let cfg = BaseOptConfig::from_json(&t).unwrap();
+        assert_eq!(
+            cfg,
+            BaseOptConfig::AdamW { beta1: 0.9, beta2: 0.999, eps: 1e-8, weight_decay: 0.1 }
+        );
+        assert!(BaseOptConfig::from_json(&toml::parse("algo = \"nope\"").unwrap()).is_err());
+        assert!(BaseOptConfig::from_json(&toml::parse("x = 1").unwrap()).is_err());
+    }
+
+    #[test]
+    fn state_roundtrip_every_kind() {
+        for cfg in [
+            BaseOptConfig::Sgd { momentum: 0.9, nesterov: true, weight_decay: 0.0 },
+            BaseOptConfig::adamw_paper(),
+            BaseOptConfig::lion_paper(),
+            BaseOptConfig::sophia_paper(),
+        ] {
+            let mut a = cfg.build(16);
+            let mut b = cfg.build(16);
+            let mut pa = vec![0.3f32; 16];
+            let mut pb = pa.clone();
+            let g: Vec<f32> = (0..16).map(|i| (i as f32 - 8.0) / 4.0).collect();
+            for _ in 0..5 {
+                a.step(&mut pa, &g, 0.01);
+            }
+            // transplant state a -> b, then both must evolve identically
+            let saved: Vec<Vec<f32>> = a.state().iter().map(|s| s.to_vec()).collect();
+            b.load_state(&saved);
+            pb.copy_from_slice(&pa);
+            a.step(&mut pa, &g, 0.01);
+            b.step(&mut pb, &g, 0.01);
+            assert_eq!(pa, pb, "{}", a.name());
+        }
+    }
+}

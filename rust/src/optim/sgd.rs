@@ -1,0 +1,131 @@
+//! SGD with optional (Polyak / Nesterov) momentum and decoupled weight
+//! decay — the base optimizer of the paper's theory (Theorems 2-3).
+
+use super::BaseOptimizer;
+
+pub struct Sgd {
+    momentum: f32,
+    nesterov: bool,
+    weight_decay: f32,
+    /// Velocity buffer; empty when momentum == 0 (saves P floats).
+    v: Vec<f32>,
+}
+
+impl Sgd {
+    pub fn new(dim: usize, momentum: f32, nesterov: bool, weight_decay: f32) -> Self {
+        assert!((0.0..1.0).contains(&momentum) || momentum == 0.0);
+        let v = if momentum != 0.0 { vec![0.0; dim] } else { Vec::new() };
+        Sgd { momentum, nesterov, weight_decay, v }
+    }
+}
+
+impl BaseOptimizer for Sgd {
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len());
+        if self.momentum == 0.0 {
+            for (p, &g) in params.iter_mut().zip(grads) {
+                *p -= lr * (g + self.weight_decay * *p);
+            }
+            return;
+        }
+        assert_eq!(self.v.len(), params.len());
+        let beta = self.momentum;
+        for ((p, &g), v) in params.iter_mut().zip(grads).zip(self.v.iter_mut()) {
+            // Polyak: v <- beta v + g (paper Alg. 3 convention).
+            *v = beta * *v + g;
+            let d = if self.nesterov { g + beta * *v } else { *v };
+            *p -= lr * (d + self.weight_decay * *p);
+        }
+    }
+
+    fn reset(&mut self) {
+        self.v.fill(0.0);
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn state(&self) -> Vec<&[f32]> {
+        if self.v.is_empty() {
+            vec![]
+        } else {
+            vec![&self.v]
+        }
+    }
+
+    fn load_state(&mut self, bufs: &[Vec<f32>]) {
+        if !self.v.is_empty() {
+            self.v.copy_from_slice(&bufs[0]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_sgd_is_exact() {
+        let mut opt = Sgd::new(3, 0.0, false, 0.0);
+        let mut p = vec![1.0, 2.0, 3.0];
+        opt.step(&mut p, &[1.0, 0.5, -1.0], 0.1);
+        assert_eq!(p, vec![0.9, 1.95, 3.1]);
+    }
+
+    #[test]
+    fn momentum_accumulates_polyak() {
+        // constant gradient g: after k steps, v_k = g * (1-beta^k)/(1-beta)
+        let beta = 0.5f32;
+        let mut opt = Sgd::new(1, beta, false, 0.0);
+        let mut p = vec![0.0f32];
+        let lr = 1.0;
+        opt.step(&mut p, &[1.0], lr); // v=1, p=-1
+        opt.step(&mut p, &[1.0], lr); // v=1.5, p=-2.5
+        opt.step(&mut p, &[1.0], lr); // v=1.75, p=-4.25
+        assert!((p[0] + 4.25).abs() < 1e-6, "{}", p[0]);
+    }
+
+    #[test]
+    fn nesterov_differs_from_polyak() {
+        let mut a = Sgd::new(1, 0.9, false, 0.0);
+        let mut b = Sgd::new(1, 0.9, true, 0.0);
+        let (mut pa, mut pb) = (vec![0.0f32], vec![0.0f32]);
+        for _ in 0..3 {
+            a.step(&mut pa, &[1.0], 0.1);
+            b.step(&mut pb, &[1.0], 0.1);
+        }
+        assert!(pb[0] < pa[0], "nesterov should look ahead: {} vs {}", pb[0], pa[0]);
+    }
+
+    #[test]
+    fn decoupled_weight_decay_shrinks_without_gradient() {
+        let mut opt = Sgd::new(2, 0.0, false, 0.1);
+        let mut p = vec![1.0, -1.0];
+        opt.step(&mut p, &[0.0, 0.0], 0.5);
+        assert_eq!(p, vec![0.95, -0.95]);
+    }
+
+    #[test]
+    fn reset_zeroes_velocity() {
+        let mut opt = Sgd::new(1, 0.9, false, 0.0);
+        let mut p = vec![0.0f32];
+        opt.step(&mut p, &[1.0], 0.1);
+        opt.reset();
+        let mut q = vec![0.0f32];
+        opt.step(&mut q, &[1.0], 0.1);
+        assert_eq!(q[0], -0.1);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // f(x) = 0.5 * x^2, grad = x
+        let mut opt = Sgd::new(1, 0.9, false, 0.0);
+        let mut p = vec![10.0f32];
+        for _ in 0..200 {
+            let g = vec![p[0]];
+            opt.step(&mut p, &g, 0.05);
+        }
+        assert!(p[0].abs() < 1e-3, "{}", p[0]);
+    }
+}

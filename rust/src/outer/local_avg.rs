@@ -1,0 +1,55 @@
+//! Plain periodic parameter averaging — "Local AdamW" in the paper's
+//! Figure 3 (local SGD / FedAvg-style): the global step IS the all-reduce.
+
+use super::{OuterOptimizer, RoundCtx};
+use crate::util::rng::Rng;
+
+pub struct LocalAvg;
+
+impl LocalAvg {
+    pub fn new() -> Self {
+        LocalAvg
+    }
+}
+
+impl Default for LocalAvg {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl OuterOptimizer for LocalAvg {
+    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, _rng: &mut Rng) {
+        global.copy_from_slice(ctx.avg_end);
+    }
+
+    fn name(&self) -> &'static str {
+        "local_avg"
+    }
+
+    fn state(&self) -> Vec<&[f32]> {
+        vec![]
+    }
+
+    fn load_state(&mut self, _bufs: &[Vec<f32>]) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::outer::run_synthetic_round;
+
+    #[test]
+    fn sets_global_to_average() {
+        let mut opt = LocalAvg::new();
+        let mut global = vec![1.0f32, 2.0, 3.0];
+        run_synthetic_round(&mut opt, &mut global, &[0.5, -0.5, 0.0], 0.1, 0);
+        assert_eq!(global, vec![0.5, 2.5, 3.0]);
+    }
+
+    #[test]
+    fn is_stateless() {
+        let opt = LocalAvg::new();
+        assert!(opt.state().is_empty());
+    }
+}

@@ -1,0 +1,297 @@
+//! Outer (global, per-communication-round) optimizers.
+//!
+//! This module is the paper's system contribution.  After each worker
+//! runs τ local steps of its base optimizer, the trainer aggregates and
+//! hands this module the round context; the outer optimizer transforms
+//! the accumulated local differences into a global update:
+//!
+//! * [`SignMomentum`] — **Algorithm 1**, the paper's method: a Lion-style
+//!   sign-momentum step over pseudo-gradients (eqs. 6-8).
+//! * [`SlowMo`] — Wang et al. 2019 (paper's Algorithm 5), the main baseline.
+//! * [`SignedSlowMo`] — §4.1 ablation: sign *inside* the momentum.
+//! * [`Lookahead`] / signed Lookahead — n=1 ablations (Tables 4-5).
+//! * [`GlobalAdamW`] — Algorithm 7 ablation (adaptive global step).
+//! * [`LocalAvg`] — plain periodic parameter averaging ("Local AdamW").
+//! * [`MvSignSgd`] — Federated MV-sto-signSGD-SIM (Algorithm 6), the
+//!   related method of Sun et al. 2023 discussed in Remarks 1-2.
+//!
+//! All operate on the flat `f32[P]` vector; every implementation is
+//! cross-checked against the jnp/Pallas references where one exists
+//! (rust/tests/equivalence.rs, python kernels/ref.py).
+
+mod global_adamw;
+mod local_avg;
+mod lookahead;
+mod mv_signsgd;
+mod sign_momentum;
+mod slowmo;
+
+pub use global_adamw::GlobalAdamW;
+pub use local_avg::LocalAvg;
+pub use lookahead::Lookahead;
+pub use mv_signsgd::MvSignSgd;
+pub use sign_momentum::SignMomentum;
+pub use slowmo::{SignedSlowMo, SlowMo};
+
+use crate::sign::SignOp;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Everything an outer optimizer may consume at a communication round.
+pub struct RoundCtx<'a> {
+    /// x_{t,0}: global parameters at the start of the round.
+    pub start: &'a [f32],
+    /// x_{t,τ} = (1/n) Σ_i x_{t,τ}^{(i)}: exact average of worker ends.
+    pub avg_end: &'a [f32],
+    /// Per-worker end parameters x_{t,τ}^{(i)} (majority-vote methods).
+    pub worker_end: &'a [&'a [f32]],
+    /// Per-worker last local stochastic gradient (Algorithm 6's momentum).
+    pub worker_last_grad: &'a [&'a [f32]],
+    /// γ_t: local learning rate in effect this round (schedules vary it).
+    pub gamma: f32,
+    /// Outer round index t.
+    pub round: u64,
+}
+
+pub trait OuterOptimizer: Send {
+    /// Apply the global step, updating `global` (== ctx.start on entry).
+    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng);
+
+    /// Starting point handed to workers for the *next* local phase.
+    /// Default: the global iterate itself.  MV-sto-signSGD overrides this
+    /// with its extrapolated y_t = x_t + α (x_t - x_{t-1}).
+    fn local_start(&mut self, global: &[f32]) -> Vec<f32> {
+        global.to_vec()
+    }
+
+    fn name(&self) -> &'static str;
+
+    /// Flat state buffers for checkpointing.
+    fn state(&self) -> Vec<&[f32]>;
+    fn load_state(&mut self, bufs: &[Vec<f32>]);
+}
+
+/// Construction-time description of an outer optimizer (config file /
+/// CLI / experiment harness).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OuterConfig {
+    /// Algorithm 1 with Lion-recommended defaults (§4: β1=0.95, β2=0.98, λ=0.1).
+    SignMomentum { eta: f32, beta1: f32, beta2: f32, weight_decay: f32, sign_op: SignOp, sign_bound: f32 },
+    SlowMo { alpha: f32, beta: f32 },
+    SignedSlowMo { eta: f32, beta: f32 },
+    /// β1=β2=β, λ=0, unsigned update (Table 4) or signed (Table 5).
+    Lookahead { eta: f32, beta: f32, signed: bool },
+    GlobalAdamW { eta: f32, beta1: f32, beta2: f32, eps: f32, weight_decay: f32 },
+    LocalAvg,
+    MvSignSgd { eta: f32, beta: f32, alpha: f32, bound: f32 },
+}
+
+impl OuterConfig {
+    pub fn sign_momentum_paper(eta: f32) -> Self {
+        OuterConfig::SignMomentum {
+            eta,
+            beta1: 0.95,
+            beta2: 0.98,
+            weight_decay: 0.1,
+            sign_op: SignOp::Exact,
+            sign_bound: 1.0,
+        }
+    }
+
+    pub fn slowmo_paper(alpha: f32, beta: f32) -> Self {
+        OuterConfig::SlowMo { alpha, beta }
+    }
+
+    pub fn build(&self, dim: usize) -> Box<dyn OuterOptimizer> {
+        match *self {
+            OuterConfig::SignMomentum { eta, beta1, beta2, weight_decay, sign_op, sign_bound } => {
+                Box::new(SignMomentum::new(dim, eta, beta1, beta2, weight_decay, sign_op, sign_bound))
+            }
+            OuterConfig::SlowMo { alpha, beta } => Box::new(SlowMo::new(dim, alpha, beta)),
+            OuterConfig::SignedSlowMo { eta, beta } => Box::new(SignedSlowMo::new(dim, eta, beta)),
+            OuterConfig::Lookahead { eta, beta, signed } => {
+                Box::new(Lookahead::new(dim, eta, beta, signed))
+            }
+            OuterConfig::GlobalAdamW { eta, beta1, beta2, eps, weight_decay } => {
+                Box::new(GlobalAdamW::new(dim, eta, beta1, beta2, eps, weight_decay))
+            }
+            OuterConfig::LocalAvg => Box::new(LocalAvg::new()),
+            OuterConfig::MvSignSgd { eta, beta, alpha, bound } => {
+                Box::new(MvSignSgd::new(dim, eta, beta, alpha, bound))
+            }
+        }
+    }
+
+    /// Parse from a `[outer]` config table.
+    pub fn from_json(v: &Json) -> Result<Self, String> {
+        let algo = v.get("algo").and_then(Json::as_str).ok_or("outer table needs `algo`")?;
+        let f = |key: &str, default: f32| -> f32 {
+            v.get(key).and_then(Json::as_f64).map(|x| x as f32).unwrap_or(default)
+        };
+        Ok(match algo {
+            "sign_momentum" | "algorithm1" => OuterConfig::SignMomentum {
+                eta: f("global_lr", 1.0),
+                beta1: f("beta1", 0.95),
+                beta2: f("beta2", 0.98),
+                weight_decay: f("weight_decay", 0.1),
+                sign_op: v
+                    .get("sign_op")
+                    .and_then(Json::as_str)
+                    .and_then(SignOp::parse)
+                    .unwrap_or(SignOp::Exact),
+                sign_bound: f("sign_bound", 1.0),
+            },
+            "slowmo" => OuterConfig::SlowMo { alpha: f("global_lr", 1.0), beta: f("beta", 0.5) },
+            "signed_slowmo" => {
+                OuterConfig::SignedSlowMo { eta: f("global_lr", 1.0), beta: f("beta", 0.5) }
+            }
+            "lookahead" => OuterConfig::Lookahead {
+                eta: f("global_lr", 1.0),
+                beta: f("beta", 0.2),
+                signed: v.get("signed").and_then(Json::as_bool).unwrap_or(false),
+            },
+            "global_adamw" => OuterConfig::GlobalAdamW {
+                eta: f("global_lr", 1.0),
+                beta1: f("beta1", 0.9),
+                beta2: f("beta2", 0.95),
+                eps: f("eps", 1e-8),
+                weight_decay: f("weight_decay", 0.1),
+            },
+            "local_avg" => OuterConfig::LocalAvg,
+            "mv_signsgd" => OuterConfig::MvSignSgd {
+                eta: f("global_lr", 1e-3),
+                beta: f("beta", 0.9),
+                alpha: f("alpha", 0.1),
+                bound: f("bound", 10.0),
+            },
+            other => return Err(format!("unknown outer optimizer `{other}`")),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OuterConfig::SignMomentum { .. } => "sign_momentum",
+            OuterConfig::SlowMo { .. } => "slowmo",
+            OuterConfig::SignedSlowMo { .. } => "signed_slowmo",
+            OuterConfig::Lookahead { signed: false, .. } => "lookahead",
+            OuterConfig::Lookahead { signed: true, .. } => "signed_lookahead",
+            OuterConfig::GlobalAdamW { .. } => "global_adamw",
+            OuterConfig::LocalAvg => "local_avg",
+            OuterConfig::MvSignSgd { .. } => "mv_signsgd",
+        }
+    }
+}
+
+/// Drive one outer round on a synthetic context where the averaged local
+/// difference is `diff` (workers ended at start - diff).  Shared by unit
+/// tests here and the cross-implementation equivalence suite.
+pub fn run_synthetic_round(
+    opt: &mut dyn OuterOptimizer,
+    global: &mut Vec<f32>,
+    diff: &[f32],
+    gamma: f32,
+    round: u64,
+) {
+    let start = global.clone();
+    let avg_end: Vec<f32> = start.iter().zip(diff).map(|(&s, &d)| s - d).collect();
+    let worker_end: Vec<&[f32]> = vec![&avg_end];
+    // expose the applied difference as the "last local gradient" so
+    // gradient-momentum methods (Alg. 6) also see a consistent signal
+    let worker_last_grad: Vec<&[f32]> = vec![diff];
+    let ctx = RoundCtx {
+        start: &start,
+        avg_end: &avg_end,
+        worker_end: &worker_end,
+        worker_last_grad: &worker_last_grad,
+        gamma,
+        round,
+    };
+    let mut rng = Rng::new(round ^ 0xABCD);
+    opt.round(global, &ctx, &mut rng);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml;
+
+    #[test]
+    fn build_all_kinds_and_descend() {
+        let configs = [
+            OuterConfig::sign_momentum_paper(1.0),
+            OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+            OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
+            OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: false },
+            OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: true },
+            OuterConfig::GlobalAdamW { eta: 1.0, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0 },
+            OuterConfig::LocalAvg,
+            // bound == |pseudo-grad| makes the randomized vote deterministic
+            // here (a single synthetic worker would otherwise coin-flip —
+            // exactly the Remark-2 neighborhood effect).
+            OuterConfig::MvSignSgd { eta: 0.1, beta: 0.9, alpha: 0.1, bound: 0.0101 },
+        ];
+        for cfg in configs {
+            let mut opt = cfg.build(4);
+            let mut global = vec![1.0f32; 4];
+            // positive accumulated difference = descent direction
+            run_synthetic_round(opt.as_mut(), &mut global, &[0.1, 0.1, 0.1, 0.1], 0.1, 0);
+            assert!(
+                global.iter().all(|&x| x < 1.0),
+                "{}: {global:?} did not move down",
+                opt.name()
+            );
+        }
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let t = toml::parse(
+            "algo = \"sign_momentum\"\nglobal_lr = 1.2\nbeta1 = 0.9\nsign_op = \"rand_pm\"\n",
+        )
+        .unwrap();
+        let cfg = OuterConfig::from_json(&t).unwrap();
+        match cfg {
+            OuterConfig::SignMomentum { eta, beta1, beta2, sign_op, .. } => {
+                assert_eq!(eta, 1.2);
+                assert_eq!(beta1, 0.9);
+                assert_eq!(beta2, 0.98); // default
+                assert_eq!(sign_op, SignOp::RandPm);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(OuterConfig::from_json(&toml::parse("algo = \"zzz\"").unwrap()).is_err());
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(OuterConfig::LocalAvg.name(), "local_avg");
+        assert_eq!(
+            OuterConfig::Lookahead { eta: 1.0, beta: 0.1, signed: true }.name(),
+            "signed_lookahead"
+        );
+    }
+
+    #[test]
+    fn state_roundtrip_all_kinds() {
+        for cfg in [
+            OuterConfig::sign_momentum_paper(1.0),
+            OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+            OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
+            OuterConfig::GlobalAdamW { eta: 1.0, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0 },
+        ] {
+            let mut a = cfg.build(8);
+            let mut b = cfg.build(8);
+            let mut ga = vec![0.5f32; 8];
+            let diff = vec![0.01f32; 8];
+            for r in 0..4 {
+                run_synthetic_round(a.as_mut(), &mut ga, &diff, 0.1, r);
+            }
+            let saved: Vec<Vec<f32>> = a.state().iter().map(|s| s.to_vec()).collect();
+            b.load_state(&saved);
+            let mut gb = ga.clone();
+            run_synthetic_round(a.as_mut(), &mut ga, &diff, 0.1, 4);
+            run_synthetic_round(b.as_mut(), &mut gb, &diff, 0.1, 4);
+            assert_eq!(ga, gb, "{}", a.name());
+        }
+    }
+}

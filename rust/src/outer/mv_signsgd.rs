@@ -1,0 +1,189 @@
+//! Federated MV-sto-signSGD-SIM — the paper's Algorithm 6 (Sun et al.
+//! 2023), the closest prior method (Remarks 1-2).
+//!
+//! Structure per outer round t:
+//!   y_t          = x_t + α (x_t - x_{t-1})          (outer extrapolation)
+//!   workers run τ SGD steps from y_t, ending at y_t^{(i)}
+//!   m_{t+1}^{(i)} = β m_t^{(i)} + (1-β) ∇f_i(y_t^{(i)}, ξ)   (LOCAL grad momentum)
+//!   x_{t+1}      = x_t - η sign( Σ_i S_r(m_{t+1}^{(i)}) )    (majority vote)
+//!
+//! The contrasts with Algorithm 1 that Remark 1 highlights are all here:
+//! momentum is built from local stochastic *gradients* (not aggregated
+//! local differences), and worker→server communication is 1-bit via the
+//! randomized sign S_r (eq. 9) + majority vote, which is why it only
+//! converges to an O(dR/√n) neighborhood (Remark 2).
+
+use super::{OuterOptimizer, RoundCtx};
+use crate::sign::SignOp;
+use crate::tensor::sign_f32;
+use crate::util::rng::Rng;
+
+pub struct MvSignSgd {
+    eta: f32,
+    beta: f32,
+    alpha: f32,
+    /// Norm bound B for the randomized sign operator (Alg. 6 requires the
+    /// uniform stochastic-gradient bound).
+    bound: f32,
+    /// Per-worker momentum buffers m^{(i)}, created lazily at first round
+    /// (worker count is only known then).
+    m: Vec<Vec<f32>>,
+    x_prev: Vec<f32>,
+    dim: usize,
+}
+
+impl MvSignSgd {
+    pub fn new(dim: usize, eta: f32, beta: f32, alpha: f32, bound: f32) -> Self {
+        MvSignSgd { eta, beta, alpha, bound, m: Vec::new(), x_prev: vec![0.0; dim], dim }
+    }
+}
+
+impl OuterOptimizer for MvSignSgd {
+    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng) {
+        let n = ctx.worker_last_grad.len();
+        assert!(n > 0);
+        if self.m.is_empty() {
+            self.m = vec![vec![0.0; self.dim]; n];
+            self.x_prev = ctx.start.to_vec();
+        }
+        assert_eq!(self.m.len(), n, "worker count changed mid-run");
+
+        // local momentum update + randomized-sign vote accumulation
+        let mut vote = vec![0.0f32; self.dim];
+        let mut signs = vec![0.0f32; self.dim];
+        for (w, grad) in ctx.worker_last_grad.iter().enumerate() {
+            let m = &mut self.m[w];
+            for i in 0..self.dim {
+                m[i] = self.beta * m[i] + (1.0 - self.beta) * grad[i];
+            }
+            SignOp::RandPm.apply_into(&mut signs, m, self.bound, rng);
+            for i in 0..self.dim {
+                vote[i] += signs[i];
+            }
+        }
+
+        // x_{t+1} = x_t - η sign(vote); note x_t here is the un-extrapolated
+        // iterate: `global` holds x_t (local_start produced y_t separately).
+        let x_t = ctx.start; // == x_t by construction of the trainer loop
+        for i in 0..self.dim {
+            let x_new = x_t[i] - self.eta * sign_f32(vote[i]);
+            self.x_prev[i] = x_t[i];
+            global[i] = x_new;
+        }
+    }
+
+    fn local_start(&mut self, global: &[f32]) -> Vec<f32> {
+        if self.m.is_empty() {
+            // round 0: x_{-1} = x_0 ⇒ y_0 = x_0
+            return global.to_vec();
+        }
+        global
+            .iter()
+            .zip(&self.x_prev)
+            .map(|(&x, &xp)| x + self.alpha * (x - xp))
+            .collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "mv_signsgd"
+    }
+
+    fn state(&self) -> Vec<&[f32]> {
+        let mut out: Vec<&[f32]> = vec![&self.x_prev];
+        for m in &self.m {
+            out.push(m);
+        }
+        out
+    }
+
+    fn load_state(&mut self, bufs: &[Vec<f32>]) {
+        self.x_prev.copy_from_slice(&bufs[0]);
+        self.m = bufs[1..].to_vec();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_with_grads<'a>(
+        start: &'a [f32],
+        grads: &'a [&'a [f32]],
+        ends: &'a [&'a [f32]],
+        avg: &'a [f32],
+        round: u64,
+    ) -> RoundCtx<'a> {
+        RoundCtx {
+            start,
+            avg_end: avg,
+            worker_end: ends,
+            worker_last_grad: grads,
+            gamma: 0.1,
+            round,
+        }
+    }
+
+    #[test]
+    fn unanimous_vote_moves_by_eta() {
+        let mut opt = MvSignSgd::new(3, 0.5, 0.0, 0.0, 10.0);
+        let mut global = vec![0.0f32; 3];
+        let start = global.clone();
+        // all workers see strong positive gradients on coord 0, negative on 1,
+        // zero on 2 (bound >> |g| keeps the randomized flip probability low
+        // but with 8 workers the vote is still decisively correct).
+        let grads_own = vec![vec![9.9f32, -9.9, 0.0]; 8];
+        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
+        let ends: Vec<&[f32]> = (0..8).map(|_| start.as_slice()).collect();
+        let mut rng = Rng::new(3);
+        opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
+        assert_eq!(global[0], -0.5);
+        assert_eq!(global[1], 0.5);
+        // coord 2: m = 0 -> S_r(0) = ±0 ... sign(0 votes) = 0
+        assert_eq!(global[2], 0.0);
+    }
+
+    #[test]
+    fn extrapolation_kicks_in_after_first_round() {
+        let mut opt = MvSignSgd::new(1, 1.0, 0.0, 0.5, 10.0);
+        let mut global = vec![4.0f32];
+        let start = global.clone();
+        assert_eq!(opt.local_start(&global), vec![4.0]); // y_0 = x_0
+        let grads_own = vec![vec![9.9f32]; 4];
+        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
+        let ends: Vec<&[f32]> = (0..4).map(|_| start.as_slice()).collect();
+        let mut rng = Rng::new(1);
+        opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
+        assert_eq!(global, vec![3.0]); // 4 - 1
+        // y_1 = x_1 + 0.5 (x_1 - x_0) = 3 + 0.5*(-1) = 2.5
+        assert_eq!(opt.local_start(&global), vec![2.5]);
+    }
+
+    #[test]
+    fn majority_vote_suppresses_minority_noise() {
+        // 7 workers say +, 1 worker says - strongly: update must follow +.
+        let mut opt = MvSignSgd::new(1, 0.1, 0.0, 0.0, 10.0);
+        let mut global = vec![0.0f32];
+        let start = global.clone();
+        let mut grads_own = vec![vec![9.5f32]; 7];
+        grads_own.push(vec![-9.5f32]);
+        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
+        let ends: Vec<&[f32]> = (0..8).map(|_| start.as_slice()).collect();
+        let mut rng = Rng::new(7);
+        opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
+        assert_eq!(global[0], -0.1);
+    }
+
+    #[test]
+    fn momentum_buffers_are_per_worker() {
+        let mut opt = MvSignSgd::new(1, 0.1, 0.9, 0.0, 10.0);
+        let mut global = vec![0.0f32];
+        let start = global.clone();
+        let grads_own = vec![vec![1.0f32], vec![-1.0f32]];
+        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
+        let ends: Vec<&[f32]> = (0..2).map(|_| start.as_slice()).collect();
+        let mut rng = Rng::new(0);
+        opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
+        assert!((opt.m[0][0] - 0.1).abs() < 1e-6);
+        assert!((opt.m[1][0] + 0.1).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,239 @@
+//! **Algorithm 1** — the paper's distributed sign-momentum global step.
+//!
+//! After τ local steps and the exact averaging all-reduce, with
+//! diff = x_{t,0} - x_{t,τ} (the aggregated local progress scaled into a
+//! pseudo-gradient by 1/γ_t):
+//!
+//! ```text
+//!     u_{t+1} = β1 m_t + (1-β1)/γ_t · diff            (eq. 6)
+//!     x_{t+1} = x_t - η γ_t (sign(u_{t+1}) + λ x_t)   (eq. 7)
+//!     m_{t+1} = β2 m_t + (1-β2)/γ_t · diff            (eq. 8)
+//! ```
+//!
+//! This mimics Lion over pseudo-gradients; β2 > β1 weights the fresh
+//! difference more in the applied direction than in the stored momentum,
+//! the acceleration the paper credits for beating signed SlowMo (§4.1).
+//! The 1/γ_t scaling keeps the momentum buffer LR-schedule-invariant.
+//!
+//! `sign_op` selects the deterministic operator (deployment, default) or
+//! the randomized analogs of §3.1 used by the theory experiments.
+
+use super::{OuterOptimizer, RoundCtx};
+use crate::sign::SignOp;
+use crate::tensor::sign_f32;
+use crate::util::rng::Rng;
+
+pub struct SignMomentum {
+    eta: f32,
+    beta1: f32,
+    beta2: f32,
+    weight_decay: f32,
+    sign_op: SignOp,
+    /// B for the randomized operators (Theorem 1 uses B = τR). Unused by
+    /// SignOp::Exact.
+    sign_bound: f32,
+    m: Vec<f32>,
+    /// scratch for randomized sign output (avoids per-round allocation)
+    scratch: Vec<f32>,
+}
+
+impl SignMomentum {
+    pub fn new(
+        dim: usize,
+        eta: f32,
+        beta1: f32,
+        beta2: f32,
+        weight_decay: f32,
+        sign_op: SignOp,
+        sign_bound: f32,
+    ) -> Self {
+        assert!((0.0..=1.0).contains(&beta1) && (0.0..=1.0).contains(&beta2));
+        SignMomentum {
+            eta,
+            beta1,
+            beta2,
+            weight_decay,
+            sign_op,
+            sign_bound,
+            m: vec![0.0; dim],
+            scratch: vec![0.0; dim],
+        }
+    }
+
+    pub fn momentum(&self) -> &[f32] {
+        &self.m
+    }
+}
+
+impl OuterOptimizer for SignMomentum {
+    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng) {
+        let p = global.len();
+        assert_eq!(ctx.start.len(), p);
+        assert_eq!(self.m.len(), p);
+        let inv_gamma = 1.0 / ctx.gamma;
+        let (b1, b2, eta, lam, g) = (self.beta1, self.beta2, self.eta, self.weight_decay, ctx.gamma);
+
+        match self.sign_op {
+            SignOp::Exact => {
+                // fused single pass: u, sign, x-update, m-update per element
+                for i in 0..p {
+                    let diff = (ctx.start[i] - ctx.avg_end[i]) * inv_gamma;
+                    let u = b1 * self.m[i] + (1.0 - b1) * diff;
+                    global[i] = ctx.start[i] - eta * g * (sign_f32(u) + lam * ctx.start[i]);
+                    self.m[i] = b2 * self.m[i] + (1.0 - b2) * diff;
+                }
+            }
+            op => {
+                // two-pass: build u in scratch, apply randomized sign, update
+                for i in 0..p {
+                    let diff = (ctx.start[i] - ctx.avg_end[i]) * inv_gamma;
+                    self.scratch[i] = b1 * self.m[i] + (1.0 - b1) * diff;
+                    self.m[i] = b2 * self.m[i] + (1.0 - b2) * diff;
+                }
+                let u = std::mem::take(&mut self.scratch);
+                let mut signs = vec![0.0f32; p];
+                op.apply_into(&mut signs, &u, self.sign_bound, rng);
+                self.scratch = u;
+                for i in 0..p {
+                    global[i] = ctx.start[i] - eta * g * (signs[i] + lam * ctx.start[i]);
+                }
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sign_momentum"
+    }
+
+    fn state(&self) -> Vec<&[f32]> {
+        vec![&self.m]
+    }
+
+    fn load_state(&mut self, bufs: &[Vec<f32>]) {
+        self.m.copy_from_slice(&bufs[0]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::outer::run_synthetic_round;
+
+    fn new_default(dim: usize, eta: f32, b1: f32, b2: f32, wd: f32) -> SignMomentum {
+        SignMomentum::new(dim, eta, b1, b2, wd, SignOp::Exact, 1.0)
+    }
+
+    /// Hand-checked single round against the paper's eqs. (6)-(8).
+    #[test]
+    fn matches_hand_computed_round() {
+        let mut opt = new_default(2, 2.0, 0.5, 0.8, 0.1);
+        // preload momentum
+        opt.m = vec![1.0, -3.0];
+        let mut global = vec![1.0f32, 2.0];
+        let gamma = 0.5;
+        // diff(applied) = [0.2, -0.4] -> pseudo-grad = diff/gamma = [0.4, -0.8]
+        run_synthetic_round(&mut opt, &mut global, &[0.2, -0.4], gamma, 0);
+        // u = 0.5*m + 0.5*pg = [0.5+0.2, -1.5-0.4] = [0.7, -1.9]
+        // x = x - eta*gamma*(sign(u) + 0.1 x) = [1 - 1*(1+0.1), 2 - 1*(-1+0.2)]
+        assert!((global[0] - (1.0 - 1.0 * 1.1)).abs() < 1e-6, "{global:?}");
+        assert!((global[1] - (2.0 - 1.0 * (-0.8))).abs() < 1e-6, "{global:?}");
+        // m = 0.8*m + 0.2*pg = [0.8+0.08, -2.4-0.16]
+        assert!((opt.m[0] - 0.88).abs() < 1e-6);
+        assert!((opt.m[1] + 2.56).abs() < 1e-6);
+    }
+
+    /// Matches the jnp oracle sign_update_ref (same numbers as the Pallas
+    /// kernel test test_sign_update_zero_momentum_is_pure_sign_step).
+    #[test]
+    fn matches_pallas_oracle_case() {
+        let mut opt = new_default(4096, 1.5, 0.0, 0.0, 0.0);
+        let mut global = vec![0.0f32; 4096];
+        let gamma = 0.5;
+        // applied diff = gamma * pseudo-grad; oracle used diff(pg) 2.0 / -3.0
+        let mut diff = vec![2.0f32 * gamma; 2048];
+        diff.extend(vec![-3.0f32 * gamma; 2048]);
+        run_synthetic_round(&mut opt, &mut global, &diff, gamma, 0);
+        assert!((global[0] - (-1.5 * 0.5)).abs() < 1e-6);
+        assert!((global[4095] - (1.5 * 0.5)).abs() < 1e-6);
+        assert!((opt.m[0] - 2.0 / 0.5 * 0.5).abs() < 1e-5); // pg=4? no: see below
+    }
+
+    /// Momentum buffer is invariant to the LR schedule: halving gamma with
+    /// the same *pseudo-gradient* leaves m identical (paper's rationale
+    /// for the 1/γ_t scaling).
+    #[test]
+    fn momentum_is_lr_schedule_invariant() {
+        let pg = [0.3f32, -0.7, 0.1];
+        let mut results = Vec::new();
+        for gamma in [0.5f32, 0.05] {
+            let mut opt = new_default(3, 1.0, 0.95, 0.98, 0.0);
+            let mut global = vec![0.0f32; 3];
+            let diff: Vec<f32> = pg.iter().map(|&d| d * gamma).collect();
+            run_synthetic_round(&mut opt, &mut global, &diff, gamma, 0);
+            results.push(opt.m.clone());
+        }
+        for (a, b) in results[0].iter().zip(&results[1]) {
+            assert!((a - b).abs() < 1e-6, "{results:?}");
+        }
+    }
+
+    /// With β1=β2=β, λ=0, n=1, τ=1, SGD base: one Algorithm-1 round equals
+    /// one signSGD-with-momentum step (eq. 3 of the paper).
+    #[test]
+    fn reduces_to_signsgd_momentum() {
+        let beta = 0.9f32;
+        let mut opt = new_default(2, 1.0, beta, beta, 0.0);
+        let mut global = vec![0.5f32, -0.5];
+        let mut m_ref = vec![0.0f32; 2];
+        let mut x_ref = global.clone();
+        let gamma = 0.1;
+        let grads = [[1.0f32, -2.0], [-0.5, 0.3], [0.2, 0.2]];
+        for (t, gr) in grads.iter().enumerate() {
+            // reference eq. (3)
+            for i in 0..2 {
+                m_ref[i] = beta * m_ref[i] + (1.0 - beta) * gr[i];
+                x_ref[i] -= 1.0 * gamma * sign_f32(m_ref[i]);
+            }
+            // Algorithm 1 round: τ=1 SGD local step means diff = γ g.
+            let diff: Vec<f32> = gr.iter().map(|&g| g * gamma).collect();
+            run_synthetic_round(&mut opt, &mut global, &diff, gamma, t as u64);
+        }
+        for (a, e) in global.iter().zip(&x_ref) {
+            assert!((a - e).abs() < 1e-6, "{global:?} vs {x_ref:?}");
+        }
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let mut opt = new_default(1, 1.0, 0.9, 0.99, 0.5);
+        let mut global = vec![2.0f32];
+        // zero progress: sign(u)=0, so pure decoupled decay
+        run_synthetic_round(&mut opt, &mut global, &[0.0], 0.1, 0);
+        assert!((global[0] - (2.0 - 1.0 * 0.1 * 0.5 * 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn randomized_ops_agree_with_exact_in_expectation() {
+        let dim = 2048;
+        let gamma = 0.1f32;
+        let diff: Vec<f32> = (0..dim).map(|i| if i % 2 == 0 { 0.05 } else { -0.05 }).collect();
+        // exact
+        let mut ex = new_default(dim, 1.0, 0.0, 0.0, 0.0);
+        let mut gx = vec![0.0f32; dim];
+        run_synthetic_round(&mut ex, &mut gx, &diff, gamma, 0);
+        // randomized, averaged over repeats (B=1 so E[S_r] = u with |u|=0.5)
+        let mut acc = vec![0.0f64; dim];
+        let reps = 400;
+        for r in 0..reps {
+            let mut op = SignMomentum::new(dim, 1.0, 0.0, 0.0, 0.0, SignOp::RandPm, 1.0);
+            let mut g = vec![0.0f32; dim];
+            run_synthetic_round(&mut op, &mut g, &diff, gamma, r);
+            for (a, &v) in acc.iter_mut().zip(&g) {
+                *a += v as f64;
+            }
+        }
+        // E[x_rand] = -eta*gamma*u/B = 0.5 * x_exact here (|u|=0.5, B=1)
+        let mean0 = acc[0] / reps as f64;
+        assert!((mean0 - 0.5 * gx[0] as f64).abs() < 0.02, "{mean0} vs {}", gx[0]);
+    }
+}

@@ -1,0 +1,167 @@
+//! SlowMo (paper's Algorithm 5, Wang et al. 2019) and the signed-SlowMo
+//! ablation of §4.1.
+//!
+//! SlowMo:        u_{t+1} = β u_t + (1/γ_t)(x_{t,0} - x_{t,τ})
+//! ```text
+//!                x_{t+1} = x_{t,0} - α γ_t u_{t+1}
+//! ```
+//!
+//! Signed SlowMo: u_{t+1} = β u_t + (1-β)/γ_t · sign(x_{t,0} - x_{t,τ})
+//! ```text
+//!                x_{t+1} = x_{t,0} - η γ_t u_{t+1}
+//! ```
+//!
+//! Note the asymmetry the paper inherits: SlowMo's momentum uses weight 1
+//! on the fresh difference (classical momentum), signed SlowMo uses
+//! (1-β) (EMA), exactly as §4.1 defines them.
+
+use super::{OuterOptimizer, RoundCtx};
+use crate::tensor::sign_f32;
+use crate::util::rng::Rng;
+
+pub struct SlowMo {
+    alpha: f32,
+    beta: f32,
+    u: Vec<f32>,
+}
+
+impl SlowMo {
+    pub fn new(dim: usize, alpha: f32, beta: f32) -> Self {
+        SlowMo { alpha, beta, u: vec![0.0; dim] }
+    }
+
+    pub fn momentum(&self) -> &[f32] {
+        &self.u
+    }
+}
+
+impl OuterOptimizer for SlowMo {
+    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, _rng: &mut Rng) {
+        let inv_gamma = 1.0 / ctx.gamma;
+        for i in 0..global.len() {
+            let diff = (ctx.start[i] - ctx.avg_end[i]) * inv_gamma;
+            self.u[i] = self.beta * self.u[i] + diff;
+            global[i] = ctx.start[i] - self.alpha * ctx.gamma * self.u[i];
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "slowmo"
+    }
+
+    fn state(&self) -> Vec<&[f32]> {
+        vec![&self.u]
+    }
+
+    fn load_state(&mut self, bufs: &[Vec<f32>]) {
+        self.u.copy_from_slice(&bufs[0]);
+    }
+}
+
+pub struct SignedSlowMo {
+    eta: f32,
+    beta: f32,
+    u: Vec<f32>,
+}
+
+impl SignedSlowMo {
+    pub fn new(dim: usize, eta: f32, beta: f32) -> Self {
+        SignedSlowMo { eta, beta, u: vec![0.0; dim] }
+    }
+}
+
+impl OuterOptimizer for SignedSlowMo {
+    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, _rng: &mut Rng) {
+        let inv_gamma = 1.0 / ctx.gamma;
+        for i in 0..global.len() {
+            let s = sign_f32(ctx.start[i] - ctx.avg_end[i]);
+            self.u[i] = self.beta * self.u[i] + (1.0 - self.beta) * s * inv_gamma;
+            global[i] = ctx.start[i] - self.eta * ctx.gamma * self.u[i];
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "signed_slowmo"
+    }
+
+    fn state(&self) -> Vec<&[f32]> {
+        vec![&self.u]
+    }
+
+    fn load_state(&mut self, bufs: &[Vec<f32>]) {
+        self.u.copy_from_slice(&bufs[0]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::outer::run_synthetic_round;
+
+    #[test]
+    fn slowmo_hand_computed_round() {
+        let mut opt = SlowMo::new(2, 0.5, 0.8);
+        opt.u = vec![2.0, -1.0];
+        let mut global = vec![1.0f32, 1.0];
+        let gamma = 0.25;
+        // applied diff [0.5, -0.25] -> pg = [2.0, -1.0]
+        run_synthetic_round(&mut opt, &mut global, &[0.5, -0.25], gamma, 0);
+        // u = 0.8*u + pg = [3.6, -1.8]; x = 1 - 0.5*0.25*u
+        assert!((opt.u[0] - 3.6).abs() < 1e-6 && (opt.u[1] + 1.8).abs() < 1e-6);
+        assert!((global[0] - (1.0 - 0.125 * 3.6)).abs() < 1e-6);
+        assert!((global[1] - (1.0 + 0.125 * 1.8)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slowmo_beta_zero_is_plain_averaging_with_alpha_one() {
+        // β=0, α=1: x_{t+1} = x_t - (x_t - avg) = avg.
+        let mut opt = SlowMo::new(3, 1.0, 0.0);
+        let mut global = vec![1.0f32, 2.0, 3.0];
+        run_synthetic_round(&mut opt, &mut global, &[0.1, -0.2, 0.3], 0.5, 0);
+        let expect = [0.9f32, 2.2, 2.7];
+        for (a, e) in global.iter().zip(expect) {
+            assert!((a - e).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn signed_slowmo_momentum_bounded() {
+        // |u| <= (1-β) Σ β^k / γ = 1/γ: the signed pseudo-grad is ±1/γ.
+        let mut opt = SignedSlowMo::new(1, 1.0, 0.5);
+        let mut global = vec![0.0f32];
+        for r in 0..50 {
+            run_synthetic_round(&mut opt, &mut global, &[1.0], 0.1, r);
+            assert!(opt.u[0].abs() <= 10.0 + 1e-4);
+        }
+        assert!((opt.u[0] - 10.0).abs() < 1e-3, "{}", opt.u[0]);
+    }
+
+    #[test]
+    fn signed_slowmo_ignores_diff_magnitude() {
+        let mut a = SignedSlowMo::new(2, 1.0, 0.5);
+        let mut b = SignedSlowMo::new(2, 1.0, 0.5);
+        let mut ga = vec![0.0f32; 2];
+        let mut gb = vec![0.0f32; 2];
+        run_synthetic_round(&mut a, &mut ga, &[0.001, -5.0], 0.1, 0);
+        run_synthetic_round(&mut b, &mut gb, &[7.0, -0.002], 0.1, 0);
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn slowmo_accelerates_vs_plain_averaging_on_quadratic() {
+        // local step = gradient step on f(x)=0.5x²; SlowMo's momentum
+        // should reach the optimum faster than plain local averaging.
+        let run = |beta: f32| -> f32 {
+            let mut opt = SlowMo::new(1, 1.0, beta);
+            let mut x = vec![8.0f32];
+            let gamma = 0.05;
+            for r in 0..40 {
+                // one local step of SGD from x: end = x - γ x
+                let diff = vec![gamma * x[0]];
+                run_synthetic_round(&mut opt, &mut x, &diff, gamma, r);
+            }
+            x[0].abs()
+        };
+        assert!(run(0.5) < run(0.0), "momentum should help: {} vs {}", run(0.5), run(0.0));
+    }
+}

@@ -1,0 +1,226 @@
+//! Manifest loader: the contract between `make artifacts` (python) and
+//! the Rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static description of one AOT'd model preset.
+#[derive(Clone, Debug)]
+pub struct PresetInfo {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_head: usize,
+    pub n_layer: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub param_count: usize,
+    pub init_file: PathBuf,
+    pub train_file: PathBuf,
+    pub eval_file: PathBuf,
+    pub layout: Vec<ParamEntry>,
+}
+
+impl PresetInfo {
+    /// Tokens consumed per train step (for tokens/sec reporting).
+    pub fn tokens_per_step(&self) -> usize {
+        self.batch * self.seq
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.param_count as u64 * 4
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub presets: BTreeMap<String, PresetInfo>,
+    pub sign_update_file: PathBuf,
+    pub sign_update_chunk: usize,
+}
+
+impl Artifacts {
+    pub fn load(dir: &Path) -> Result<Artifacts> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}; run `make artifacts` first"))?;
+        let root = Json::parse(&text).map_err(|e| anyhow!("{manifest_path:?}: {e}"))?;
+
+        let version = root.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version} (expected 1)");
+        }
+
+        let mut presets = BTreeMap::new();
+        let preset_obj = root
+            .get("presets")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing `presets`"))?;
+        for (name, entry) in preset_obj {
+            let cfg = entry.get("config").ok_or_else(|| anyhow!("{name}: no config"))?;
+            let u = |key: &str| -> Result<usize> {
+                cfg.get(key)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| anyhow!("{name}: config.{key} missing"))
+            };
+            let file = |kind: &str| -> Result<PathBuf> {
+                let f = entry
+                    .get("artifacts")
+                    .and_then(|a| a.get(kind))
+                    .and_then(|k| k.get("file"))
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("{name}: artifacts.{kind}.file missing"))?;
+                let path = dir.join(f);
+                if !path.exists() {
+                    bail!("{name}: artifact file {path:?} missing; re-run `make artifacts`");
+                }
+                Ok(path)
+            };
+            let layout = entry
+                .get("param_layout")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|e| {
+                            Some(ParamEntry {
+                                name: e.get("name")?.as_str()?.to_string(),
+                                offset: e.get("offset")?.as_usize()?,
+                                shape: e
+                                    .get("shape")?
+                                    .as_arr()?
+                                    .iter()
+                                    .filter_map(Json::as_usize)
+                                    .collect(),
+                            })
+                        })
+                        .collect::<Vec<_>>()
+                })
+                .unwrap_or_default();
+            presets.insert(
+                name.clone(),
+                PresetInfo {
+                    name: name.clone(),
+                    vocab: u("vocab")?,
+                    d_model: u("d_model")?,
+                    n_head: u("n_head")?,
+                    n_layer: u("n_layer")?,
+                    seq: u("seq")?,
+                    batch: u("batch")?,
+                    param_count: entry
+                        .get("param_count")
+                        .and_then(Json::as_usize)
+                        .ok_or_else(|| anyhow!("{name}: param_count missing"))?,
+                    init_file: file("init")?,
+                    train_file: file("train")?,
+                    eval_file: file("eval")?,
+                    layout,
+                },
+            );
+        }
+
+        let su = root
+            .get("sign_update")
+            .ok_or_else(|| anyhow!("manifest missing `sign_update`"))?;
+        let sign_update_file = dir.join(
+            su.get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("sign_update.file missing"))?,
+        );
+        let sign_update_chunk = su
+            .get("chunk")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow!("sign_update.chunk missing"))?;
+
+        Ok(Artifacts { dir: dir.to_path_buf(), presets, sign_update_file, sign_update_chunk })
+    }
+
+    /// Default artifacts dir: `$REPO/artifacts` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        let cand = PathBuf::from("artifacts");
+        if cand.exists() {
+            cand
+        } else {
+            PathBuf::from("../artifacts")
+        }
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetInfo> {
+        self.presets.get(name).ok_or_else(|| {
+            anyhow!(
+                "preset `{name}` not in manifest (have: {:?}); re-run `make artifacts`",
+                self.presets.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Consistency invariant: layout offsets must tile [0, param_count).
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in &self.presets {
+            let mut entries = p.layout.clone();
+            entries.sort_by_key(|e| e.offset);
+            let mut off = 0;
+            for e in &entries {
+                if e.offset != off {
+                    bail!("{name}: layout gap at {off} (entry {} at {})", e.name, e.offset);
+                }
+                off += e.numel();
+            }
+            if off != p.param_count {
+                bail!("{name}: layout covers {off} of {} params", p.param_count);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = Artifacts::default_dir();
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest_and_validates() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        };
+        let arts = Artifacts::load(&dir).unwrap();
+        arts.validate().unwrap();
+        let nano = arts.preset("nano").unwrap();
+        assert_eq!(nano.vocab, 256);
+        assert_eq!(nano.seq, 64);
+        assert!(nano.param_count > 100_000);
+        assert!(nano.layout.iter().any(|e| e.name == "wte"));
+        assert!(arts.sign_update_chunk >= 4096);
+        assert!(arts.preset("nonexistent").is_err());
+    }
+
+    #[test]
+    fn param_entry_numel() {
+        let e = ParamEntry { name: "x".into(), offset: 0, shape: vec![3, 4, 5] };
+        assert_eq!(e.numel(), 60);
+    }
+}

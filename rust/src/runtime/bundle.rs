@@ -1,0 +1,107 @@
+//! Typed wrapper over one preset's init/train/eval executables.
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{anyhow_xla, PresetInfo, Runtime};
+use crate::data::dataset::Batch;
+
+/// Result of one training step on one worker's minibatch.
+pub struct StepOutput {
+    pub loss: f32,
+    pub grads: Vec<f32>,
+}
+
+/// Compiled init/train/eval for a model preset.
+///
+/// NOT `Sync`: PJRT executables are driven from the coordinator thread.
+/// The simulated workers share this bundle (data-parallel workers run the
+/// same program on different data — exactly how a real cluster shares a
+/// compiled step function).
+pub struct ModelBundle {
+    pub info: PresetInfo,
+    init: xla::PjRtLoadedExecutable,
+    train: xla::PjRtLoadedExecutable,
+    eval: xla::PjRtLoadedExecutable,
+}
+
+impl ModelBundle {
+    pub fn load(rt: &Runtime, info: &PresetInfo) -> Result<ModelBundle> {
+        let compile = |p: &std::path::Path| {
+            rt.compile_hlo_text(p).with_context(|| format!("compiling {p:?}"))
+        };
+        Ok(ModelBundle {
+            info: info.clone(),
+            init: compile(&info.init_file)?,
+            train: compile(&info.train_file)?,
+            eval: compile(&info.eval_file)?,
+        })
+    }
+
+    /// Run the AOT'd GPT-2 initializer: seed -> flat f32[P].
+    pub fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        let lit = xla::Literal::scalar(seed);
+        let out = self.init.execute::<xla::Literal>(&[lit]).map_err(anyhow_xla)?;
+        let tuple = out[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let flat = tuple.to_tuple1().map_err(anyhow_xla)?;
+        let params = flat.to_vec::<f32>().map_err(anyhow_xla)?;
+        anyhow::ensure!(
+            params.len() == self.info.param_count,
+            "init returned {} params, manifest says {}",
+            params.len(),
+            self.info.param_count
+        );
+        Ok(params)
+    }
+
+    fn batch_literals(&self, batch: &Batch) -> Result<(xla::Literal, xla::Literal)> {
+        anyhow::ensure!(
+            batch.batch == self.info.batch && batch.seq == self.info.seq,
+            "batch shape ({}, {}) does not match AOT shape ({}, {})",
+            batch.batch,
+            batch.seq,
+            self.info.batch,
+            self.info.seq
+        );
+        let dims = [batch.batch as i64, batch.seq as i64];
+        let tok = xla::Literal::vec1(&batch.tokens).reshape(&dims).map_err(anyhow_xla)?;
+        let tgt = xla::Literal::vec1(&batch.targets).reshape(&dims).map_err(anyhow_xla)?;
+        Ok((tok, tgt))
+    }
+
+    /// One fwd+bwd: (params, batch) -> (loss, flat grads).
+    pub fn train_step(&self, params: &[f32], batch: &Batch) -> Result<StepOutput> {
+        anyhow::ensure!(params.len() == self.info.param_count, "param size mismatch");
+        let p = xla::Literal::vec1(params);
+        let (tok, tgt) = self.batch_literals(batch)?;
+        let out = self.train.execute::<xla::Literal>(&[p, tok, tgt]).map_err(anyhow_xla)?;
+        let tuple = out[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let parts = tuple.to_tuple().map_err(anyhow_xla)?;
+        let [loss_lit, grads_lit]: [xla::Literal; 2] = parts
+            .try_into()
+            .map_err(|v: Vec<_>| anyhow!("train artifact returned {}-tuple, expected 2", v.len()))?;
+        let loss = loss_lit.to_vec::<f32>().map_err(anyhow_xla)?[0];
+        let grads = grads_lit.to_vec::<f32>().map_err(anyhow_xla)?;
+        Ok(StepOutput { loss, grads })
+    }
+
+    /// Loss-only forward pass (validation).
+    pub fn eval_loss(&self, params: &[f32], batch: &Batch) -> Result<f32> {
+        anyhow::ensure!(params.len() == self.info.param_count, "param size mismatch");
+        let p = xla::Literal::vec1(params);
+        let (tok, tgt) = self.batch_literals(batch)?;
+        let out = self.eval.execute::<xla::Literal>(&[p, tok, tgt]).map_err(anyhow_xla)?;
+        let tuple = out[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let loss = tuple.to_tuple1().map_err(anyhow_xla)?;
+        Ok(loss.to_vec::<f32>().map_err(anyhow_xla)?[0])
+    }
+
+    /// Mean eval loss over several batches.
+    pub fn eval_loss_many(&self, params: &[f32], batches: &[Batch]) -> Result<f64> {
+        anyhow::ensure!(!batches.is_empty());
+        let mut acc = 0.0f64;
+        for b in batches {
+            acc += self.eval_loss(params, b)? as f64;
+        }
+        Ok(acc / batches.len() as f64)
+    }
+}

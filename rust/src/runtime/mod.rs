@@ -1,0 +1,66 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them from the
+//! training hot path.  Python is never invoked here — `make artifacts`
+//! produced the HLO text once; this module compiles it on the PJRT CPU
+//! client and provides typed wrappers:
+//!
+//! * [`Artifacts`] — parses `artifacts/manifest.json` (shapes, parameter
+//!   layout, file index) via the in-tree JSON substrate.
+//! * [`ModelBundle`] — init/train/eval executables for one model preset
+//!   with `Vec<f32>`-level ergonomics (flat params ABI).
+//! * [`SignUpdateKernel`] — the AOT'd fused Pallas sign-momentum kernel,
+//!   applied chunk-wise over arbitrarily sized parameter vectors.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits 64-bit instruction ids that
+//! xla_extension 0.5.1's proto path rejects; the text parser reassigns
+//! ids (see python/compile/aot.py and /opt/xla-example/README.md).
+
+mod artifacts;
+mod bundle;
+mod sign_kernel;
+
+pub use artifacts::{Artifacts, ParamEntry, PresetInfo};
+pub use bundle::{ModelBundle, StepOutput};
+pub use sign_kernel::{SignUpdateKernel, SignUpdateScalars};
+
+use anyhow::Result;
+
+/// Shared PJRT CPU client.  One per process; executables keep an internal
+/// clone handle, so `Runtime` is cheap to pass around by reference.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact into a loaded executable.
+    pub fn compile_hlo_text(&self, path: &std::path::Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(anyhow_xla)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).map_err(anyhow_xla)
+    }
+}
+
+/// The xla crate's error type does not implement std::error::Error's
+/// source chain the way anyhow wants; stringify at the boundary.
+pub(crate) fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_boots() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+}

@@ -1,0 +1,115 @@
+//! The AOT'd fused Pallas sign-momentum kernel (Algorithm 1's global
+//! step), applied chunk-wise over arbitrary-length parameter vectors.
+//!
+//! The production L3 hot path uses the native Rust implementation in
+//! outer/sign_momentum.rs; this wrapper exists to (a) prove the paper's
+//! update runs as ONE fused TPU-style kernel end-to-end through PJRT, and
+//! (b) anchor a three-way equivalence test rust == pallas == jnp-ref
+//! (rust/tests/runtime_roundtrip.rs).  `repro train --global-step=pallas`
+//! switches the real trainer onto this path.
+
+use anyhow::{Context, Result};
+
+use super::{anyhow_xla, Artifacts, Runtime};
+
+#[derive(Clone, Copy, Debug)]
+pub struct SignUpdateScalars {
+    pub gamma: f32,
+    pub eta: f32,
+    pub weight_decay: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+}
+
+pub struct SignUpdateKernel {
+    exe: xla::PjRtLoadedExecutable,
+    chunk: usize,
+}
+
+impl SignUpdateKernel {
+    pub fn load(rt: &Runtime, arts: &Artifacts) -> Result<SignUpdateKernel> {
+        let exe = rt
+            .compile_hlo_text(&arts.sign_update_file)
+            .with_context(|| format!("compiling {:?}", arts.sign_update_file))?;
+        Ok(SignUpdateKernel { exe, chunk: arts.sign_update_chunk })
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    /// Apply eqs. (6)-(8) in place over `x` and `m`, streaming CHUNK-sized
+    /// windows through the kernel; the tail is zero-padded (sign(0) = 0 and
+    /// x = m = 0 on the pad, so padding is exact, not approximate).
+    pub fn apply(
+        &self,
+        x: &mut [f32],
+        m: &mut [f32],
+        diff: &[f32],
+        s: SignUpdateScalars,
+    ) -> Result<()> {
+        assert_eq!(x.len(), m.len());
+        assert_eq!(x.len(), diff.len());
+        let scal =
+            xla::Literal::vec1(&[s.gamma, s.eta, s.weight_decay, s.beta1, s.beta2, 0.0, 0.0, 0.0]);
+        let mut xpad = vec![0.0f32; self.chunk];
+        let mut mpad = vec![0.0f32; self.chunk];
+        let mut dpad = vec![0.0f32; self.chunk];
+        let mut off = 0;
+        while off < x.len() {
+            let len = (x.len() - off).min(self.chunk);
+            let (xw, mw, dw): (&mut [f32], &mut [f32], &[f32]);
+            if len == self.chunk {
+                xw = &mut x[off..off + len];
+                mw = &mut m[off..off + len];
+                dw = &diff[off..off + len];
+                self.apply_chunk(xw, mw, dw, &scal)?;
+            } else {
+                xpad[..len].copy_from_slice(&x[off..off + len]);
+                mpad[..len].copy_from_slice(&m[off..off + len]);
+                dpad[..len].copy_from_slice(&diff[off..off + len]);
+                xpad[len..].fill(0.0);
+                mpad[len..].fill(0.0);
+                dpad[len..].fill(0.0);
+                // split borrows: run on the scratch buffers
+                let (xs, ms, ds) = (&mut xpad, &mut mpad, &dpad);
+                Self::apply_chunk_static(&self.exe, xs, ms, ds, &scal)?;
+                x[off..off + len].copy_from_slice(&xs[..len]);
+                m[off..off + len].copy_from_slice(&ms[..len]);
+            }
+            off += len;
+        }
+        Ok(())
+    }
+
+    fn apply_chunk(
+        &self,
+        x: &mut [f32],
+        m: &mut [f32],
+        d: &[f32],
+        scal: &xla::Literal,
+    ) -> Result<()> {
+        Self::apply_chunk_static(&self.exe, x, m, d, scal)
+    }
+
+    fn apply_chunk_static(
+        exe: &xla::PjRtLoadedExecutable,
+        x: &mut [f32],
+        m: &mut [f32],
+        d: &[f32],
+        scal: &xla::Literal,
+    ) -> Result<()> {
+        let xl = xla::Literal::vec1(&*x);
+        let ml = xla::Literal::vec1(&*m);
+        let dl = xla::Literal::vec1(d);
+        let out = exe.execute::<xla::Literal>(&[xl, ml, dl, scal.clone()]).map_err(anyhow_xla)?;
+        let tuple = out[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        let parts = tuple.to_tuple().map_err(anyhow_xla)?;
+        anyhow::ensure!(parts.len() == 2, "sign_update returned {}-tuple", parts.len());
+        let xn = parts[0].to_vec::<f32>().map_err(anyhow_xla)?;
+        let mn = parts[1].to_vec::<f32>().map_err(anyhow_xla)?;
+        x.copy_from_slice(&xn);
+        m.copy_from_slice(&mn);
+        Ok(())
+    }
+}

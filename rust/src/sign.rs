@@ -1,0 +1,171 @@
+//! Sign operators: the deterministic `sign` used by Algorithm 1 and the
+//! two *randomized* sign operators of the paper's §3.1 (eqs. (9), (10)).
+//!
+//! The randomized operators are the analytical device behind Theorems 1-2:
+//! for ‖v‖ ≤ B they are unbiased up to scale, E[S_r(v)] = v / B, with
+//! per-coordinate variance ≤ 1 (Lemma 1).  The theory-validation harness
+//! (`sim/`, `experiments/theory.rs`) runs Algorithm 1 under all three
+//! operators; `dist/collectives.rs` uses the ±1 variant for the
+//! MV-sto-signSGD baseline's majority vote.
+
+use crate::tensor::sign_f32;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SignOp {
+    /// Deterministic sign (what Algorithm 1 actually deploys).
+    Exact,
+    /// Eq. (9): outputs ±sign(v_j), flipping with prob 1/2 - |v_j|/(2B).
+    RandPm,
+    /// Eq. (10): outputs sign(v_j) w.p. |v_j|/B, else 0.
+    RandZero,
+}
+
+impl SignOp {
+    pub fn parse(s: &str) -> Option<SignOp> {
+        match s {
+            "exact" | "sign" => Some(SignOp::Exact),
+            "rand_pm" | "pm" => Some(SignOp::RandPm),
+            "rand_zero" | "zero" => Some(SignOp::RandZero),
+            _ => None,
+        }
+    }
+
+    /// Apply the operator to `v` with scale bound `b`, writing into `out`.
+    ///
+    /// `b` must satisfy ‖v‖ ≥ ... the *caller* guarantees ‖v‖ ≤ b (the
+    /// paper uses B = τR from Assumption 3); we debug-assert per
+    /// coordinate, which is implied.
+    pub fn apply_into(&self, out: &mut [f32], v: &[f32], b: f32, rng: &mut Rng) {
+        assert_eq!(out.len(), v.len());
+        match self {
+            SignOp::Exact => {
+                for (o, &x) in out.iter_mut().zip(v) {
+                    *o = sign_f32(x);
+                }
+            }
+            SignOp::RandPm => {
+                debug_assert!(b > 0.0);
+                for (o, &x) in out.iter_mut().zip(v) {
+                    debug_assert!(x.abs() <= b * 1.0001, "|v_j|={} > B={}", x.abs(), b);
+                    let p_keep = 0.5 + 0.5 * (x.abs() / b) as f64;
+                    let s = sign_f32(x);
+                    // sign(0) = 0: both branches yield 0, matching ±sign(0).
+                    *o = if rng.f64() < p_keep { s } else { -s };
+                }
+            }
+            SignOp::RandZero => {
+                debug_assert!(b > 0.0);
+                for (o, &x) in out.iter_mut().zip(v) {
+                    debug_assert!(x.abs() <= b * 1.0001);
+                    *o = if rng.f64() < (x.abs() / b) as f64 {
+                        sign_f32(x)
+                    } else {
+                        0.0
+                    };
+                }
+            }
+        }
+    }
+
+    pub fn apply(&self, v: &[f32], b: f32, rng: &mut Rng) -> Vec<f32> {
+        let mut out = vec![0.0; v.len()];
+        self.apply_into(&mut out, v, b, rng);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Empirical check of Lemma 1: E[S_r(v)] = v/B for both randomized ops.
+    #[test]
+    fn lemma1_unbiasedness() {
+        let v = vec![0.8, -0.5, 0.0, 0.3, -1.0];
+        let b = 1.0;
+        for op in [SignOp::RandPm, SignOp::RandZero] {
+            let mut rng = Rng::new(17);
+            let trials = 200_000;
+            let mut acc = vec![0.0f64; v.len()];
+            let mut out = vec![0.0f32; v.len()];
+            for _ in 0..trials {
+                op.apply_into(&mut out, &v, b, &mut rng);
+                for (a, &o) in acc.iter_mut().zip(&out) {
+                    *a += o as f64;
+                }
+            }
+            for (j, a) in acc.iter().enumerate() {
+                let mean = a / trials as f64;
+                assert!(
+                    (mean - v[j] as f64 / b as f64).abs() < 0.01,
+                    "{op:?} coord {j}: mean {mean} vs {}",
+                    v[j]
+                );
+            }
+        }
+    }
+
+    /// Lemma 1 second part: E‖S_r(v) - v/B‖² ≤ d.
+    #[test]
+    fn lemma1_variance_bound() {
+        let v = vec![0.7, -0.2, 0.9, -0.4];
+        let b = 1.0;
+        for op in [SignOp::RandPm, SignOp::RandZero] {
+            let mut rng = Rng::new(29);
+            let trials = 50_000;
+            let mut acc = 0.0f64;
+            let mut out = vec![0.0f32; v.len()];
+            for _ in 0..trials {
+                op.apply_into(&mut out, &v, b, &mut rng);
+                acc += out
+                    .iter()
+                    .zip(&v)
+                    .map(|(&o, &x)| {
+                        let d = o as f64 - x as f64 / b as f64;
+                        d * d
+                    })
+                    .sum::<f64>();
+            }
+            let var = acc / trials as f64;
+            assert!(var <= v.len() as f64, "{op:?}: E-dist {var} > d {}", v.len());
+        }
+    }
+
+    #[test]
+    fn exact_matches_tensor_sign() {
+        let v = vec![3.0, -2.0, 0.0];
+        let mut rng = Rng::new(0);
+        assert_eq!(SignOp::Exact.apply(&v, 1.0, &mut rng), vec![1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn outputs_are_ternary() {
+        let mut rng = Rng::new(5);
+        let v: Vec<f32> = (0..256).map(|_| rng.normal_f32(0.0, 0.3)).collect();
+        for op in [SignOp::Exact, SignOp::RandPm, SignOp::RandZero] {
+            let out = op.apply(&v, 2.0, &mut rng);
+            assert!(out.iter().all(|&o| o == 0.0 || o == 1.0 || o == -1.0), "{op:?}");
+        }
+    }
+
+    #[test]
+    fn saturated_input_is_deterministic() {
+        // |v_j| = B: RandPm keeps sign w.p. 1; RandZero emits sign w.p. 1.
+        let v = vec![2.0, -2.0];
+        let mut rng = Rng::new(1);
+        for op in [SignOp::RandPm, SignOp::RandZero] {
+            for _ in 0..100 {
+                assert_eq!(op.apply(&v, 2.0, &mut rng), vec![1.0, -1.0], "{op:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(SignOp::parse("exact"), Some(SignOp::Exact));
+        assert_eq!(SignOp::parse("rand_pm"), Some(SignOp::RandPm));
+        assert_eq!(SignOp::parse("rand_zero"), Some(SignOp::RandZero));
+        assert_eq!(SignOp::parse("bogus"), None);
+    }
+}

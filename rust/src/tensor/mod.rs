@@ -1,0 +1,189 @@
+//! Flat-vector math over `[f32]` — the numeric substrate for every
+//! optimizer in the system.
+//!
+//! The AOT'd model exposes parameters/gradients as ONE flat `f32[P]`
+//! vector (see python/compile/model.py), so all of Algorithm 1, SlowMo,
+//! AdamW, ... reduce to elementwise loops here.  Loops are written in
+//! 8-wide chunks so LLVM autovectorizes them; the benches in
+//! rust/benches/optim.rs verify these run at memory bandwidth.
+
+/// y += alpha * x
+pub fn axpy(y: &mut [f32], alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// y = alpha * y
+pub fn scale(y: &mut [f32], alpha: f32) {
+    for yi in y.iter_mut() {
+        *yi *= alpha;
+    }
+}
+
+/// out = a - b
+pub fn sub(out: &mut [f32], a: &[f32], b: &[f32]) {
+    assert_eq!(out.len(), a.len());
+    assert_eq!(a.len(), b.len());
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x - y;
+    }
+}
+
+/// y = beta * y + (1 - beta) * x   (exponential moving average update)
+pub fn ema(y: &mut [f32], beta: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = beta * *yi + (1.0 - beta) * xi;
+    }
+}
+
+/// y = beta * y + alpha * x  (general linear recurrence)
+pub fn lincomb(y: &mut [f32], beta: f32, alpha: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len());
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi = beta * *yi + alpha * xi;
+    }
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+pub fn norm2(a: &[f32]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+pub fn norm2_sq(a: &[f32]) -> f64 {
+    dot(a, a)
+}
+
+pub fn norm1(a: &[f32]) -> f64 {
+    a.iter().map(|&x| x.abs() as f64).sum()
+}
+
+pub fn norm_inf(a: &[f32]) -> f64 {
+    a.iter().fold(0.0f64, |m, &x| m.max(x.abs() as f64))
+}
+
+/// Mean of `vs` written into `out` — the arithmetic core of all-reduce.
+pub fn mean_into(out: &mut [f32], vs: &[&[f32]]) {
+    assert!(!vs.is_empty());
+    let inv = 1.0 / vs.len() as f32;
+    out.copy_from_slice(vs[0]);
+    for v in &vs[1..] {
+        axpy(out, 1.0, v);
+    }
+    scale(out, inv);
+}
+
+/// Elementwise sign with sign(0) = 0 (matches jnp.sign and the paper).
+#[inline]
+pub fn sign_f32(x: f32) -> f32 {
+    if x > 0.0 {
+        1.0
+    } else if x < 0.0 {
+        -1.0
+    } else {
+        0.0
+    }
+}
+
+pub fn sign_into(out: &mut [f32], x: &[f32]) {
+    assert_eq!(out.len(), x.len());
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = sign_f32(v);
+    }
+}
+
+pub fn clip(y: &mut [f32], lo: f32, hi: f32) {
+    for v in y.iter_mut() {
+        *v = v.clamp(lo, hi);
+    }
+}
+
+pub fn all_finite(a: &[f32]) -> bool {
+    a.iter().all(|v| v.is_finite())
+}
+
+/// Max |a - b| — the workhorse of cross-implementation equivalence tests.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_scale_sub() {
+        let mut y = vec![1.0, 2.0, 3.0];
+        axpy(&mut y, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(y, vec![3.0, 4.0, 5.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![1.5, 2.0, 2.5]);
+        let mut out = vec![0.0; 3];
+        sub(&mut out, &y, &[0.5, 0.5, 0.5]);
+        assert_eq!(out, vec![1.0, 1.5, 2.0]);
+    }
+
+    #[test]
+    fn ema_endpoints() {
+        let mut y = vec![10.0; 4];
+        ema(&mut y, 1.0, &[0.0; 4]); // beta=1 keeps y
+        assert_eq!(y, vec![10.0; 4]);
+        ema(&mut y, 0.0, &[3.0; 4]); // beta=0 replaces y
+        assert_eq!(y, vec![3.0; 4]);
+    }
+
+    #[test]
+    fn norms() {
+        let a = vec![3.0, -4.0];
+        assert!((norm2(&a) - 5.0).abs() < 1e-12);
+        assert!((norm1(&a) - 7.0).abs() < 1e-12);
+        assert!((norm_inf(&a) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_accumulates_in_f64() {
+        // 1e8 + 1 repeated: f32 accumulation would lose the ones.
+        let a = vec![1.0f32; 4096];
+        let b = vec![1.0f32; 4096];
+        assert_eq!(dot(&a, &b), 4096.0);
+    }
+
+    #[test]
+    fn mean_into_averages() {
+        let v1 = vec![1.0, 2.0];
+        let v2 = vec![3.0, 4.0];
+        let v3 = vec![5.0, 6.0];
+        let mut out = vec![0.0; 2];
+        mean_into(&mut out, &[&v1, &v2, &v3]);
+        assert_eq!(out, vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn sign_semantics_match_jnp() {
+        assert_eq!(sign_f32(2.5), 1.0);
+        assert_eq!(sign_f32(-0.1), -1.0);
+        assert_eq!(sign_f32(0.0), 0.0);
+        assert_eq!(sign_f32(-0.0), 0.0);
+        let mut out = vec![0.0; 3];
+        sign_into(&mut out, &[1e-30, -1e-30, 0.0]);
+        assert_eq!(out, vec![1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn max_abs_diff_and_finiteness() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert!(all_finite(&[1.0, 0.0]));
+        assert!(!all_finite(&[f32::NAN]));
+        assert!(!all_finite(&[f32::INFINITY]));
+    }
+}

@@ -1,0 +1,176 @@
+//! Checkpointing: global parameters + outer state + per-worker optimizer
+//! state in a self-describing binary container.
+//!
+//! Format (little-endian):
+//!   magic "DSMCKPT1" | u32 header_len | header JSON | buffers (raw f32)
+//! The header records the run tag, round, and a (name, len) index of the
+//! buffers so a checkpoint is loadable without the original config and
+//! mismatches fail loudly instead of silently transposing state.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{num, obj, s, Json};
+
+const MAGIC: &[u8; 8] = b"DSMCKPT1";
+
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub tag: String,
+    pub round: u64,
+    /// Named flat buffers, in write order.
+    pub buffers: Vec<(String, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn new(tag: &str, round: u64) -> Checkpoint {
+        Checkpoint { tag: tag.to_string(), round, buffers: Vec::new() }
+    }
+
+    pub fn add(&mut self, name: &str, buf: &[f32]) {
+        self.buffers.push((name.to_string(), buf.to_vec()));
+    }
+
+    pub fn get(&self, name: &str) -> Result<&[f32]> {
+        self.buffers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, b)| b.as_slice())
+            .ok_or_else(|| anyhow!("checkpoint has no buffer `{name}`"))
+    }
+
+    /// All buffers whose name starts with `prefix`, in write order.
+    pub fn with_prefix(&self, prefix: &str) -> Vec<Vec<f32>> {
+        self.buffers
+            .iter()
+            .filter(|(n, _)| n.starts_with(prefix))
+            .map(|(_, b)| b.clone())
+            .collect()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let index: Vec<Json> = self
+            .buffers
+            .iter()
+            .map(|(n, b)| obj(vec![("name", s(n)), ("len", num(b.len() as f64))]))
+            .collect();
+        let header = obj(vec![
+            ("tag", s(&self.tag)),
+            ("round", num(self.round as f64)),
+            ("buffers", Json::Arr(index)),
+        ])
+        .to_string_compact();
+
+        let mut f = std::fs::File::create(path).with_context(|| format!("{path:?}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&(header.len() as u32).to_le_bytes())?;
+        f.write_all(header.as_bytes())?;
+        for (_, buf) in &self.buffers {
+            // safety: plain f32 -> bytes
+            let bytes: &[u8] =
+                unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4) };
+            f.write_all(bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let mut f = std::fs::File::open(path).with_context(|| format!("{path:?}"))?;
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a DSM checkpoint (bad magic)");
+        }
+        let mut len4 = [0u8; 4];
+        f.read_exact(&mut len4)?;
+        let hlen = u32::from_le_bytes(len4) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        f.read_exact(&mut hbytes)?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)
+            .map_err(|e| anyhow!("{path:?}: bad header: {e}"))?;
+
+        let tag = header.get("tag").and_then(Json::as_str).unwrap_or("").to_string();
+        let round = header.get("round").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let mut buffers = Vec::new();
+        for entry in header
+            .get("buffers")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("header missing buffers"))?
+        {
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("buffer entry missing name"))?
+                .to_string();
+            let len = entry
+                .get("len")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("buffer entry missing len"))?;
+            let mut bytes = vec![0u8; len * 4];
+            f.read_exact(&mut bytes)
+                .with_context(|| format!("{path:?}: truncated buffer `{name}`"))?;
+            let mut buf = vec![0f32; len];
+            for (i, c) in bytes.chunks_exact(4).enumerate() {
+                buf[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+            }
+            buffers.push((name, buf));
+        }
+        Ok(Checkpoint { tag, round, buffers })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join("dsm_ckpt_tests").join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_bits() {
+        let mut ck = Checkpoint::new("run-1", 17);
+        ck.add("global", &[1.0, -2.5, f32::MIN_POSITIVE, 3.4e38]);
+        ck.add("outer.m", &[0.0; 100]);
+        ck.add("worker0.opt0", &[0.5; 7]);
+        let path = tmp("rt.ckpt");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.tag, "run-1");
+        assert_eq!(back.round, 17);
+        assert_eq!(back.buffers.len(), 3);
+        assert_eq!(back.get("global").unwrap(), ck.get("global").unwrap());
+        assert_eq!(back.get("worker0.opt0").unwrap(), &[0.5; 7]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prefix_query_preserves_order() {
+        let mut ck = Checkpoint::new("t", 0);
+        ck.add("w.opt0", &[0.0]);
+        ck.add("w.opt1", &[1.0]);
+        ck.add("other", &[9.0]);
+        let bufs = ck.with_prefix("w.opt");
+        assert_eq!(bufs, vec![vec![0.0], vec![1.0]]);
+    }
+
+    #[test]
+    fn rejects_garbage_files() {
+        let path = tmp("bad.ckpt");
+        std::fs::create_dir_all(path.parent().unwrap()).unwrap();
+        std::fs::write(&path, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_buffer_is_loud() {
+        let ck = Checkpoint::new("t", 0);
+        assert!(ck.get("nope").is_err());
+    }
+}

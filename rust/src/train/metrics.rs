@@ -1,0 +1,242 @@
+//! Run metrics: in-memory curves + CSV persistence.
+//!
+//! Every experiment consumes [`RunLog`] rows keyed by *three* x-axes —
+//! computation rounds (local steps), communication rounds, and simulated
+//! wall-clock — because the paper plots Figure 1 against communication
+//! rounds and Figure 2 against computation rounds for the same runs.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogRow {
+    /// Outer round index t.
+    pub round: u64,
+    /// Cumulative local (computation) steps per worker: t·τ.
+    pub local_steps: u64,
+    /// Cumulative communication rounds.
+    pub comm_rounds: u64,
+    /// Simulated wall-clock (measured compute + modeled comm), seconds.
+    pub sim_time_s: f64,
+    /// Mean training loss across workers since the previous row.
+    pub train_loss: f64,
+    /// Validation loss (NaN when this row did not evaluate).
+    pub val_loss: f64,
+    /// Local learning rate in effect.
+    pub lr: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct RunLog {
+    pub tag: String,
+    pub rows: Vec<LogRow>,
+}
+
+impl RunLog {
+    pub fn new(tag: &str) -> RunLog {
+        RunLog { tag: tag.to_string(), rows: Vec::new() }
+    }
+
+    pub fn push(&mut self, row: LogRow) {
+        self.rows.push(row);
+    }
+
+    /// Last non-NaN validation loss.
+    pub fn final_val_loss(&self) -> Option<f64> {
+        self.rows.iter().rev().find(|r| !r.val_loss.is_nan()).map(|r| r.val_loss)
+    }
+
+    /// Best (minimum) validation loss over the run.
+    pub fn best_val_loss(&self) -> Option<f64> {
+        self.rows
+            .iter()
+            .filter(|r| !r.val_loss.is_nan())
+            .map(|r| r.val_loss)
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// (x, val_loss) curve against the chosen axis.
+    pub fn val_curve(&self, axis: Axis) -> Vec<(f64, f64)> {
+        self.rows
+            .iter()
+            .filter(|r| !r.val_loss.is_nan())
+            .map(|r| (axis.of(r), r.val_loss))
+            .collect()
+    }
+
+    pub fn train_curve(&self, axis: Axis) -> Vec<(f64, f64)> {
+        self.rows
+            .iter()
+            .filter(|r| !r.train_loss.is_nan())
+            .map(|r| (axis.of(r), r.train_loss))
+            .collect()
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path).with_context(|| format!("{path:?}"))?;
+        writeln!(f, "round,local_steps,comm_rounds,sim_time_s,train_loss,val_loss,lr")?;
+        for r in &self.rows {
+            writeln!(
+                f,
+                "{},{},{},{:.6},{:.6},{:.6},{:.6e}",
+                r.round, r.local_steps, r.comm_rounds, r.sim_time_s, r.train_loss, r.val_loss, r.lr
+            )?;
+        }
+        Ok(())
+    }
+
+    pub fn read_csv(path: &Path) -> Result<RunLog> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+        let mut rows = Vec::new();
+        for line in text.lines().skip(1) {
+            let p: Vec<&str> = line.split(',').collect();
+            if p.len() != 7 {
+                continue;
+            }
+            rows.push(LogRow {
+                round: p[0].parse()?,
+                local_steps: p[1].parse()?,
+                comm_rounds: p[2].parse()?,
+                sim_time_s: p[3].parse()?,
+                train_loss: p[4].parse()?,
+                val_loss: p[5].parse()?,
+                lr: p[6].parse()?,
+            });
+        }
+        Ok(RunLog {
+            tag: path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default(),
+            rows,
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+pub enum Axis {
+    CommRounds,
+    LocalSteps,
+    SimTime,
+}
+
+impl Axis {
+    fn of(&self, r: &LogRow) -> f64 {
+        match self {
+            Axis::CommRounds => r.comm_rounds as f64,
+            Axis::LocalSteps => r.local_steps as f64,
+            Axis::SimTime => r.sim_time_s,
+        }
+    }
+}
+
+/// Render a compact ASCII chart of (x, y) curves — the harness's stand-in
+/// for the paper's matplotlib figures.
+pub fn ascii_chart(title: &str, curves: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+    let mut all: Vec<(f64, f64)> = curves.iter().flat_map(|(_, c)| c.iter().copied()).collect();
+    all.retain(|(x, y)| x.is_finite() && y.is_finite());
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (xmin, xmax) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &(x, _)| (lo.min(x), hi.max(x)));
+    let (ymin, ymax) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &(_, y)| (lo.min(y), hi.max(y)));
+    let yspan = (ymax - ymin).max(1e-12);
+    let xspan = (xmax - xmin).max(1e-12);
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = [b'*', b'+', b'o', b'x', b'#', b'@'];
+    for (ci, (_, curve)) in curves.iter().enumerate() {
+        for &(x, y) in curve {
+            if !x.is_finite() || !y.is_finite() {
+                continue;
+            }
+            let col = (((x - xmin) / xspan) * (width - 1) as f64).round() as usize;
+            let row = height - 1 - (((y - ymin) / yspan) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = marks[ci % marks.len()];
+        }
+    }
+    let mut out = format!("{title}\n");
+    for (i, row) in grid.iter().enumerate() {
+        let label = if i == 0 {
+            format!("{ymax:8.3} |")
+        } else if i == height - 1 {
+            format!("{ymin:8.3} |")
+        } else {
+            "         |".to_string()
+        };
+        out.push_str(&label);
+        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push('\n');
+    }
+    out.push_str(&format!("          +{}\n", "-".repeat(width)));
+    out.push_str(&format!("           x: {xmin:.1} .. {xmax:.1}   "));
+    for (ci, (name, _)) in curves.iter().enumerate() {
+        out.push_str(&format!("[{}] {}  ", marks[ci % marks.len()] as char, name));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(round: u64, val: f64) -> LogRow {
+        LogRow {
+            round,
+            local_steps: round * 12,
+            comm_rounds: round,
+            sim_time_s: round as f64 * 0.5,
+            train_loss: 5.0 - round as f64 * 0.1,
+            val_loss: val,
+            lr: 1e-3,
+        }
+    }
+
+    #[test]
+    fn final_and_best_val() {
+        let mut log = RunLog::new("t");
+        log.push(row(1, 4.0));
+        log.push(row(2, 3.5));
+        log.push(row(3, f64::NAN));
+        log.push(row(4, 3.7));
+        assert_eq!(log.final_val_loss(), Some(3.7));
+        assert_eq!(log.best_val_loss(), Some(3.5));
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut log = RunLog::new("rt");
+        log.push(row(1, 4.0));
+        log.push(row(2, f64::NAN));
+        let dir = std::env::temp_dir().join("dsm_test_metrics");
+        let path = dir.join("rt.csv");
+        log.write_csv(&path).unwrap();
+        let back = RunLog::read_csv(&path).unwrap();
+        assert_eq!(back.rows.len(), 2);
+        assert_eq!(back.rows[0].round, 1);
+        assert!((back.rows[0].val_loss - 4.0).abs() < 1e-9);
+        assert!(back.rows[1].val_loss.is_nan());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn curves_respect_axis() {
+        let mut log = RunLog::new("ax");
+        log.push(row(2, 4.0));
+        let c = log.val_curve(Axis::LocalSteps);
+        assert_eq!(c, vec![(24.0, 4.0)]);
+        let c = log.val_curve(Axis::CommRounds);
+        assert_eq!(c, vec![(2.0, 4.0)]);
+    }
+
+    #[test]
+    fn ascii_chart_renders_all_series() {
+        let a = vec![(0.0, 1.0), (1.0, 0.5), (2.0, 0.2)];
+        let b = vec![(0.0, 1.0), (1.0, 0.8), (2.0, 0.6)];
+        let s = ascii_chart("demo", &[("fast", a), ("slow", b)], 30, 8);
+        assert!(s.contains('*') && s.contains('+'));
+        assert!(s.contains("fast") && s.contains("slow"));
+    }
+}

@@ -1,0 +1,11 @@
+//! Training loop: schedules, metrics, checkpoints, and the trainer that
+//! wires workers + PJRT runtime + outer optimizers + comm model together.
+
+pub mod checkpoint;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use metrics::{LogRow, RunLog};
+pub use schedule::{Schedule, ScheduleConfig};
+pub use trainer::{RunResult, Trainer};

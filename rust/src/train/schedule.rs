@@ -1,0 +1,153 @@
+//! Learning-rate schedules.  The paper uses cosine decay with a linear
+//! warm-up (2k steps at full scale) and final LR = 0.05 × peak (§4
+//! "Implementations"); warm-up is scaled proportionally here.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum ScheduleConfig {
+    Constant { lr: f32 },
+    /// Linear warmup to `peak` over `warmup` steps, then cosine decay to
+    /// `final_frac * peak` at `total` steps.
+    Cosine { peak: f32, final_frac: f32, warmup: u64, total: u64 },
+}
+
+impl ScheduleConfig {
+    /// Paper schedule scaled to a run of `total` local steps: warmup is
+    /// 2% of the run (the paper's 2k/100k), floor at final 5% of peak.
+    pub fn cosine_paper(peak: f32, total: u64) -> ScheduleConfig {
+        ScheduleConfig::Cosine {
+            peak,
+            final_frac: 0.05,
+            warmup: (total / 50).max(1),
+            total: total.max(2),
+        }
+    }
+
+    pub fn from_json(v: &Json, default_total: u64) -> Result<ScheduleConfig, String> {
+        let kind = v.get("kind").and_then(Json::as_str).unwrap_or("cosine");
+        let f = |key: &str, default: f32| -> f32 {
+            v.get(key).and_then(Json::as_f64).map(|x| x as f32).unwrap_or(default)
+        };
+        match kind {
+            "constant" => Ok(ScheduleConfig::Constant { lr: f("lr", 1e-3) }),
+            "cosine" => Ok(ScheduleConfig::Cosine {
+                peak: f("peak", 1e-3),
+                final_frac: f("final_frac", 0.05),
+                warmup: v
+                    .get("warmup")
+                    .and_then(Json::as_usize)
+                    .map(|x| x as u64)
+                    .unwrap_or((default_total / 50).max(1)),
+                total: v
+                    .get("total")
+                    .and_then(Json::as_usize)
+                    .map(|x| x as u64)
+                    .unwrap_or(default_total),
+            }),
+            other => Err(format!("unknown schedule `{other}`")),
+        }
+    }
+
+    /// Re-point the schedule horizon (CLI may change rounds/tau after the
+    /// schedule was first constructed).
+    pub fn retarget_total(&mut self, new_total: u64) {
+        if let ScheduleConfig::Cosine { total, warmup, .. } = self {
+            *total = new_total.max(2);
+            *warmup = (*warmup).min(new_total / 2).max(1);
+        }
+    }
+
+    pub fn total_steps(&self) -> u64 {
+        match self {
+            ScheduleConfig::Constant { .. } => u64::MAX,
+            ScheduleConfig::Cosine { total, .. } => *total,
+        }
+    }
+
+    pub fn build(&self) -> Schedule {
+        Schedule { cfg: self.clone() }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    cfg: ScheduleConfig,
+}
+
+impl Schedule {
+    /// γ_t for local step index `step` (0-based).
+    pub fn lr(&self, step: u64) -> f32 {
+        match self.cfg {
+            ScheduleConfig::Constant { lr } => lr,
+            ScheduleConfig::Cosine { peak, final_frac, warmup, total } => {
+                if step < warmup {
+                    // linear 0 -> peak, never exactly 0 (step+1)
+                    return peak * (step + 1) as f32 / warmup as f32;
+                }
+                let t = (step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64;
+                let t = t.min(1.0);
+                let floor = (peak * final_frac) as f64;
+                let cos = 0.5 * (1.0 + (std::f64::consts::PI * t).cos());
+                (floor + (peak as f64 - floor) * cos) as f32
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::toml;
+
+    #[test]
+    fn warmup_rises_linearly_then_decays() {
+        let s = ScheduleConfig::Cosine { peak: 1.0, final_frac: 0.1, warmup: 10, total: 100 }
+            .build();
+        assert!((s.lr(0) - 0.1).abs() < 1e-6);
+        assert!((s.lr(9) - 1.0).abs() < 1e-6);
+        assert!(s.lr(9) >= s.lr(50));
+        assert!(s.lr(50) > s.lr(99));
+        // final LR = final_frac * peak
+        assert!((s.lr(99) - 0.1).abs() < 0.02, "{}", s.lr(99));
+        // never below the floor, even past the horizon
+        assert!(s.lr(10_000) >= 0.1 - 1e-6);
+    }
+
+    #[test]
+    fn never_zero() {
+        let s = ScheduleConfig::cosine_paper(5e-4, 300).build();
+        for t in 0..400 {
+            assert!(s.lr(t) > 0.0, "step {t}");
+        }
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = ScheduleConfig::Constant { lr: 0.25 }.build();
+        assert_eq!(s.lr(0), 0.25);
+        assert_eq!(s.lr(1_000_000), 0.25);
+    }
+
+    #[test]
+    fn paper_defaults_proportions() {
+        // 2% warmup of the paper's 100k = 2k steps.
+        match ScheduleConfig::cosine_paper(5e-4, 100_000) {
+            ScheduleConfig::Cosine { warmup, final_frac, .. } => {
+                assert_eq!(warmup, 2000);
+                assert_eq!(final_frac, 0.05);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn from_json_and_retarget() {
+        let t = toml::parse("kind = \"cosine\"\npeak = 0.01\nwarmup = 5\n").unwrap();
+        let mut cfg = ScheduleConfig::from_json(&t, 200).unwrap();
+        assert_eq!(cfg.total_steps(), 200);
+        cfg.retarget_total(50);
+        assert_eq!(cfg.total_steps(), 50);
+        assert!(ScheduleConfig::from_json(&toml::parse("kind = \"x\"").unwrap(), 1).is_err());
+    }
+}

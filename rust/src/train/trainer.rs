@@ -1,0 +1,382 @@
+//! The coordinator loop: Algorithm 1's outer structure with pluggable
+//! base/outer optimizers, standalone per-step baselines, modeled
+//! communication, validation, and logging.
+//!
+//! One `Trainer` drives n simulated workers through T outer rounds of τ
+//! local steps each.  The PJRT executables do the real compute (GPT-2
+//! fwd/bwd through the Pallas attention kernel); everything around them —
+//! sharded batch sampling, base optimizer steps, exact averaging, the
+//! global sign-momentum step — is native Rust on the flat f32[P] vector.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::comm::SimClock;
+use crate::config::{RunConfig, TrainMode};
+use crate::data::corpus::{self, CorpusConfig};
+use crate::data::dataset::{Batch, TokenDataset};
+use crate::data::tokenizer::ByteTokenizer;
+use crate::dist::{collectives, Worker};
+use crate::outer::{OuterConfig, OuterOptimizer, RoundCtx};
+use crate::runtime::{
+    Artifacts, ModelBundle, Runtime, SignUpdateKernel, SignUpdateScalars,
+};
+use crate::tensor;
+use crate::train::checkpoint::Checkpoint;
+use crate::train::metrics::{LogRow, RunLog};
+use crate::train::schedule::Schedule;
+use crate::util::rng::Rng;
+
+pub struct Trainer {
+    pub cfg: RunConfig,
+    bundle: std::rc::Rc<ModelBundle>,
+    dataset: TokenDataset,
+    workers: Vec<Worker>,
+    global: Vec<f32>,
+    outer: Box<dyn OuterOptimizer>,
+    /// AOT'd Pallas kernel path for Algorithm 1's global step (optional).
+    pallas_step: Option<(SignUpdateKernel, PallasSignState)>,
+    schedule: Schedule,
+    clock: SimClock,
+    rng: Rng,
+    val_batches: Vec<Batch>,
+    log: RunLog,
+    local_step: u64,
+    round: u64,
+}
+
+/// Momentum state for the Pallas-kernel global-step path.
+struct PallasSignState {
+    m: Vec<f32>,
+    eta: f32,
+    beta1: f32,
+    beta2: f32,
+    weight_decay: f32,
+}
+
+pub struct RunResult {
+    pub log: RunLog,
+    pub clock: SimClock,
+    pub final_val: f64,
+    pub best_val: f64,
+}
+
+impl Trainer {
+    pub fn new(cfg: RunConfig, rt: &Runtime, arts: &Artifacts) -> Result<Trainer> {
+        let info = arts.preset(&cfg.preset)?;
+        let bundle = std::rc::Rc::new(ModelBundle::load(rt, info)?);
+        Trainer::with_bundle(cfg, bundle, rt, arts)
+    }
+
+    /// Build a trainer around an already-compiled bundle (the experiment
+    /// harness shares one compiled bundle per preset across dozens of runs
+    /// — XLA compilation costs ~15 s per preset on this host).
+    pub fn with_bundle(
+        cfg: RunConfig,
+        bundle: std::rc::Rc<ModelBundle>,
+        rt: &Runtime,
+        arts: &Artifacts,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        anyhow::ensure!(bundle.info.name == cfg.preset, "bundle/preset mismatch");
+        let info = &bundle.info;
+        let p = info.param_count;
+
+        // data: deterministic synthetic corpus, byte tokenizer, n shards.
+        // In heterogeneous mode the training region is built from one
+        // differently-weighted segment per worker (non-IID shards), while
+        // the validation tail keeps the default mixture so every method
+        // is scored on the same balanced distribution.
+        let text = if cfg.heterogeneous {
+            let train_bytes =
+                ((cfg.corpus_bytes as f64) * (1.0 - cfg.val_fraction)) as usize;
+            let mut t = corpus::generate_heterogeneous(
+                train_bytes,
+                cfg.seed ^ 0xC0FFEE,
+                cfg.n_workers,
+            );
+            t.extend(corpus::generate(&CorpusConfig {
+                bytes: cfg.corpus_bytes - train_bytes,
+                seed: cfg.seed ^ 0xBEEF,
+                ..Default::default()
+            }));
+            t
+        } else {
+            corpus::generate(&CorpusConfig {
+                bytes: cfg.corpus_bytes,
+                seed: cfg.seed ^ 0xC0FFEE,
+                ..Default::default()
+            })
+        };
+        let dataset = TokenDataset::from_text(&ByteTokenizer, &text, cfg.val_fraction);
+        let val_batches = dataset.val_batches(info.batch, info.seq, cfg.eval_batches);
+        anyhow::ensure!(!val_batches.is_empty(), "validation split too small");
+
+        let root_rng = Rng::new(cfg.seed);
+        let workers: Vec<Worker> =
+            (0..cfg.n_workers).map(|i| Worker::new(i, p, &cfg.base, &root_rng)).collect();
+
+        let global = bundle.init_params(cfg.seed as u32)?;
+        let outer = cfg.outer.build(p);
+
+        let pallas_step = if cfg.global_step_pallas {
+            let OuterConfig::SignMomentum { eta, beta1, beta2, weight_decay, .. } = cfg.outer
+            else {
+                anyhow::bail!("--pallas-global-step requires the sign_momentum outer optimizer");
+            };
+            let kernel = SignUpdateKernel::load(rt, arts)?;
+            Some((kernel, PallasSignState { m: vec![0.0; p], eta, beta1, beta2, weight_decay }))
+        } else {
+            None
+        };
+
+        Ok(Trainer {
+            schedule: cfg.schedule.build(),
+            log: RunLog::new(&cfg.tag),
+            rng: root_rng.substream("trainer", 0),
+            cfg,
+            bundle,
+            dataset,
+            workers,
+            global,
+            outer,
+            pallas_step,
+            clock: SimClock::default(),
+            val_batches,
+            local_step: 0,
+            round: 0,
+        })
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.global
+    }
+
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    pub fn dim(&self) -> usize {
+        self.global.len()
+    }
+
+    /// Run all configured rounds, returning the curves and final metrics.
+    pub fn run(&mut self) -> Result<RunResult> {
+        self.run_with_progress(|_| {})
+    }
+
+    pub fn run_with_progress<F: FnMut(&LogRow)>(&mut self, mut progress: F) -> Result<RunResult> {
+        while self.round < self.cfg.rounds as u64 {
+            let row = self.step_round()?;
+            progress(&row);
+        }
+        let final_val = match self.log.final_val_loss() {
+            Some(v) => v,
+            None => self.evaluate()?,
+        };
+        Ok(RunResult {
+            log: self.log.clone(),
+            clock: self.clock.clone(),
+            final_val,
+            best_val: self.log.best_val_loss().unwrap_or(final_val),
+        })
+    }
+
+    /// Execute one outer round (or one standalone step when tau == 1 in
+    /// standalone mode), returning the log row it produced.
+    pub fn step_round(&mut self) -> Result<LogRow> {
+        match self.cfg.mode {
+            TrainMode::LocalSteps => self.local_round(),
+            TrainMode::Standalone => self.standalone_step(),
+        }?;
+        self.round += 1;
+
+        // evaluate on schedule (always on the final round)
+        let do_eval = self.cfg.eval_every > 0 && self.round % self.cfg.eval_every as u64 == 0
+            || self.round == self.cfg.rounds as u64;
+        let val_loss = if do_eval { self.evaluate()? } else { f64::NAN };
+
+        let train_loss = {
+            let mut acc = 0.0;
+            let mut n = 0;
+            for w in &mut self.workers {
+                let l = w.take_mean_loss();
+                if !l.is_nan() {
+                    acc += l;
+                    n += 1;
+                }
+            }
+            if n == 0 {
+                f64::NAN
+            } else {
+                acc / n as f64
+            }
+        };
+
+        let row = LogRow {
+            round: self.round,
+            local_steps: self.local_step,
+            comm_rounds: self.clock.comm_rounds,
+            sim_time_s: self.clock.total_s(),
+            train_loss,
+            val_loss,
+            lr: self.schedule.lr(self.local_step.saturating_sub(1)),
+        };
+        self.log.push(row.clone());
+        Ok(row)
+    }
+
+    /// One round of Algorithm 1's outer loop (lines 3-11).
+    fn local_round(&mut self) -> Result<()> {
+        let n = self.cfg.n_workers;
+        let p = self.global.len();
+        let tau = self.cfg.tau;
+        let info = &self.bundle.info;
+        // γ_t for the outer step: LR at the round's first local step.
+        let gamma_t = self.schedule.lr(self.local_step);
+
+        let start = self.outer.local_start(&self.global);
+        let mut per_worker_secs = vec![0.0f64; n];
+
+        for w in 0..n {
+            let worker = &mut self.workers[w];
+            worker.params.copy_from_slice(&start);
+            for k in 0..tau {
+                let lr = self.schedule.lr(self.local_step + k as u64);
+                let batch =
+                    self.dataset.sample_train(w, n, info.batch, info.seq, &mut worker.rng);
+                let t0 = Instant::now();
+                let out = self.bundle.train_step(&worker.params, &batch)?;
+                per_worker_secs[w] += t0.elapsed().as_secs_f64();
+                anyhow::ensure!(
+                    out.loss.is_finite(),
+                    "worker {w} diverged at round {} (loss={})",
+                    self.round,
+                    out.loss
+                );
+                worker.observe(out.loss, &out.grads);
+                worker.opt.step(&mut worker.params, &out.grads, lr);
+            }
+        }
+        self.local_step += tau as u64;
+
+        // all-reduce: exact average + modeled cost of moving P f32s
+        let mut avg_end = vec![0.0f32; p];
+        collectives::allreduce_mean(&self.workers, |w| w.params.as_slice(), &mut avg_end);
+        self.clock.charge_parallel_compute(&per_worker_secs);
+        self.clock.charge_allreduce(&self.cfg.comm, n, info.param_bytes(), &mut self.rng);
+
+        // global step
+        if let Some((kernel, st)) = &mut self.pallas_step {
+            // Algorithm 1 via the AOT'd fused Pallas kernel.
+            let mut diff = vec![0.0f32; p];
+            tensor::sub(&mut diff, &start, &avg_end);
+            self.global.copy_from_slice(&start);
+            kernel.apply(
+                &mut self.global,
+                &mut st.m,
+                &diff,
+                SignUpdateScalars {
+                    gamma: gamma_t,
+                    eta: st.eta,
+                    weight_decay: st.weight_decay,
+                    beta1: st.beta1,
+                    beta2: st.beta2,
+                },
+            )?;
+        } else {
+            let worker_end: Vec<&[f32]> =
+                self.workers.iter().map(|w| w.params.as_slice()).collect();
+            let worker_last_grad: Vec<&[f32]> =
+                self.workers.iter().map(|w| w.last_grad.as_slice()).collect();
+            let ctx = RoundCtx {
+                start: &start,
+                avg_end: &avg_end,
+                worker_end: &worker_end,
+                worker_last_grad: &worker_last_grad,
+                gamma: gamma_t,
+                round: self.round,
+            };
+            self.global.copy_from_slice(&start);
+            self.outer.round(&mut self.global, &ctx, &mut self.rng);
+        }
+        anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
+        Ok(())
+    }
+
+    /// One step of the standalone baseline: per-step gradient all-reduce,
+    /// single shared optimizer (the paper's "AdamW / Sophia" rows).
+    fn standalone_step(&mut self) -> Result<()> {
+        let n = self.cfg.n_workers;
+        let info = &self.bundle.info;
+        let lr = self.schedule.lr(self.local_step);
+        let mut per_worker_secs = vec![0.0f64; n];
+        let mut grads = vec![vec![0.0f32; self.global.len()]; 0];
+        grads.reserve(n);
+        for w in 0..n {
+            let worker = &mut self.workers[w];
+            let batch = self.dataset.sample_train(w, n, info.batch, info.seq, &mut worker.rng);
+            let t0 = Instant::now();
+            let out = self.bundle.train_step(&self.global, &batch)?;
+            per_worker_secs[w] = t0.elapsed().as_secs_f64();
+            worker.observe(out.loss, &out.grads);
+            grads.push(out.grads);
+        }
+        let mut mean_grad = vec![0.0f32; self.global.len()];
+        collectives::allreduce_mean(&grads, |g| g.as_slice(), &mut mean_grad);
+        self.clock.charge_parallel_compute(&per_worker_secs);
+        self.clock.charge_allreduce(&self.cfg.comm, n, info.param_bytes(), &mut self.rng);
+        // shared optimizer state lives in worker 0's optimizer
+        self.workers[0].opt.step(&mut self.global, &mean_grad, lr);
+        self.local_step += 1;
+        anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
+        Ok(())
+    }
+
+    pub fn evaluate(&mut self) -> Result<f64> {
+        self.bundle.eval_loss_many(&self.global, &self.val_batches)
+    }
+
+    // ---- checkpointing ----
+
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let mut ck = Checkpoint::new(&self.cfg.tag, self.round);
+        ck.add("global", &self.global);
+        ck.add("meta.local_step", &[self.local_step as f32]);
+        for (i, buf) in self.outer.state().iter().enumerate() {
+            ck.add(&format!("outer.{i}"), buf);
+        }
+        for w in &self.workers {
+            for (i, buf) in w.opt.state().iter().enumerate() {
+                ck.add(&format!("worker{}.opt{i}", w.id), buf);
+            }
+        }
+        ck.save(path)
+    }
+
+    pub fn load_checkpoint(&mut self, path: &std::path::Path) -> Result<()> {
+        let ck = Checkpoint::load(path)?;
+        let global = ck.get("global")?;
+        anyhow::ensure!(
+            global.len() == self.global.len(),
+            "checkpoint has {} params, model needs {}",
+            global.len(),
+            self.global.len()
+        );
+        self.global.copy_from_slice(global);
+        self.local_step = ck.get("meta.local_step")?[0] as u64;
+        self.round = ck.round;
+        let outer_bufs = ck.with_prefix("outer.");
+        if !outer_bufs.is_empty() {
+            self.outer.load_state(&outer_bufs);
+        }
+        for w in &mut self.workers {
+            let bufs = ck.with_prefix(&format!("worker{}.opt", w.id));
+            if !bufs.is_empty() {
+                w.opt.load_state(&bufs);
+            }
+        }
+        Ok(())
+    }
+}

@@ -1,0 +1,165 @@
+//! Micro-benchmark harness substrate (criterion is unavailable offline).
+//!
+//! `cargo bench` targets declare `harness = false` and drive this: each
+//! benchmark warms up, then runs timed batches until a wall-clock budget
+//! is spent, reporting mean / p50 / p95 per-iteration times and derived
+//! throughput.  Deliberately simple, but the statistics are honest:
+//! batch-level medians over many batches, not a single hot loop.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    /// Optional bytes processed per iteration (enables GB/s reporting).
+    pub bytes_per_iter: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput_gbs(&self) -> Option<f64> {
+        self.bytes_per_iter
+            .map(|b| b as f64 / self.mean_ns)
+    }
+
+    pub fn report(&self) -> String {
+        let human = |ns: f64| -> String {
+            if ns < 1e3 {
+                format!("{ns:.1} ns")
+            } else if ns < 1e6 {
+                format!("{:.2} µs", ns / 1e3)
+            } else if ns < 1e9 {
+                format!("{:.2} ms", ns / 1e6)
+            } else {
+                format!("{:.3} s", ns / 1e9)
+            }
+        };
+        let mut line = format!(
+            "{:<44} {:>12}/iter  p50 {:>10}  p95 {:>10}  ({} iters)",
+            self.name,
+            human(self.mean_ns),
+            human(self.p50_ns),
+            human(self.p95_ns),
+            self.iters
+        );
+        if let Some(gbs) = self.throughput_gbs() {
+            line.push_str(&format!("  {gbs:.2} GB/s"));
+        }
+        line
+    }
+}
+
+pub struct Bencher {
+    budget: Duration,
+    warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher::new(Duration::from_millis(800), Duration::from_millis(120))
+    }
+}
+
+impl Bencher {
+    pub fn new(budget: Duration, warmup: Duration) -> Self {
+        Bencher { budget, warmup, results: Vec::new() }
+    }
+
+    /// Quick harness for CI-ish runs (shorter budget).
+    pub fn quick() -> Self {
+        Bencher::new(Duration::from_millis(250), Duration::from_millis(50))
+    }
+
+    pub fn bench<F: FnMut()>(&mut self, name: &str, f: F) -> &BenchResult {
+        self.bench_with_bytes(name, None, f)
+    }
+
+    /// `bytes` is the data volume touched per iteration, for GB/s output.
+    pub fn bench_with_bytes<F: FnMut()>(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        mut f: F,
+    ) -> &BenchResult {
+        // Warmup + batch-size calibration.
+        let w0 = Instant::now();
+        let mut warm_iters: u64 = 0;
+        while w0.elapsed() < self.warmup || warm_iters == 0 {
+            f();
+            warm_iters += 1;
+        }
+        let est_ns = (self.warmup.as_nanos() as f64 / warm_iters as f64).max(1.0);
+        // Aim for ~1ms per batch so Instant overhead is negligible.
+        let batch = ((1e6 / est_ns).ceil() as u64).clamp(1, 1 << 20);
+
+        let mut samples: Vec<f64> = Vec::new();
+        let mut total_iters = 0u64;
+        let start = Instant::now();
+        while start.elapsed() < self.budget || samples.is_empty() {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+            total_iters += batch;
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let result = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: mean,
+            p50_ns: pct(0.50),
+            p95_ns: pct(0.95),
+            bytes_per_iter: bytes,
+        };
+        println!("{}", result.report());
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value (std::hint
+/// black_box is stable but we keep a volatile-read fallback semantics).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bencher::new(Duration::from_millis(30), Duration::from_millis(5));
+        let mut acc = 0u64;
+        let r = b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 100);
+    }
+
+    #[test]
+    fn percentiles_ordered_and_throughput() {
+        let mut b = Bencher::new(Duration::from_millis(30), Duration::from_millis(5));
+        let data = vec![1.0f32; 4096];
+        let r = b
+            .bench_with_bytes("sum4k", Some(4096 * 4), || {
+                black_box(data.iter().sum::<f32>());
+            })
+            .clone();
+        assert!(r.p50_ns <= r.p95_ns * 1.0001);
+        assert!(r.throughput_gbs().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,140 @@
+//! Minimal CLI argument substrate (no clap offline).
+//!
+//! `Args` wraps `--key value` / `--key=value` flags plus positionals, with
+//! typed getters that accumulate a usage error instead of panicking.  The
+//! launcher (`main.rs`) builds its subcommands on top of this.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    bools: Vec<String>,
+    used: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse a raw argv tail (everything after the subcommand).
+    ///
+    /// `--key value` is ambiguous with `--boolean positional`; callers
+    /// that use boolean flags pass their names in `known_bools` (the
+    /// registry clap would otherwise provide).
+    pub fn parse_with_bools<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_bools: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(flag) = a.strip_prefix("--") {
+                if let Some((k, v)) = flag.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if known_bools.contains(&flag) {
+                    out.bools.push(flag.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(flag.to_string(), v);
+                } else {
+                    out.bools.push(flag.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        Self::parse_with_bools(argv, &[])
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.used.borrow_mut().push(key.to_string());
+        self.bools.iter().any(|b| b == key) || self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.used.borrow_mut().push(key.to_string());
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected integer, got `{v}`")),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{key}: expected float, got `{v}`")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32, String> {
+        self.f64_or(key, default as f64).map(|v| v as f32)
+    }
+
+    /// Flags that were provided but never consumed — typo detection.
+    pub fn unknown_flags(&self) -> Vec<String> {
+        let used = self.used.borrow();
+        self.flags
+            .keys()
+            .chain(self.bools.iter())
+            .filter(|k| !used.contains(k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse_with_bools(s.split_whitespace().map(String::from), &["verbose"]).unwrap()
+    }
+
+    #[test]
+    fn mixed_styles() {
+        let a = args("train --preset medium --tau=24 --verbose pos1");
+        assert_eq!(a.positional, vec!["train", "pos1"]);
+        assert_eq!(a.get("preset"), Some("medium"));
+        assert_eq!(a.usize_or("tau", 1).unwrap(), 24);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = args("--tau twelve");
+        assert!(a.usize_or("tau", 1).is_err());
+        assert_eq!(a.f64_or("lr", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let a = args("--mu=-0.5");
+        assert_eq!(a.f64_or("mu", 0.0).unwrap(), -0.5);
+    }
+
+    #[test]
+    fn unknown_flag_detection() {
+        let a = args("--known 1 --misspelled 2");
+        let _ = a.get("known");
+        assert_eq!(a.unknown_flags(), vec!["misspelled".to_string()]);
+    }
+}

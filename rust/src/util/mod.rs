@@ -1,0 +1,8 @@
+//! In-tree substrates replacing the unavailable crates-io stack
+//! (see Cargo.toml note): PRNG, JSON, TOML-subset, CLI args, bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod toml;

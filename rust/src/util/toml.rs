@@ -1,0 +1,249 @@
+//! Minimal TOML-subset parser for run configuration files.
+//!
+//! Supports the subset real training configs need (and nothing more):
+//! `[section]` / `[a.b]` tables, `key = value` with strings, integers,
+//! floats, booleans, and flat arrays of those; `#` comments; blank lines.
+//! Values land in the same [`Json`] tree the rest of the system uses, so
+//! `config/` has a single typed-accessor path for both formats.
+
+use std::collections::BTreeMap;
+
+use super::json::Json;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "toml parse error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root: BTreeMap<String, Json> = BTreeMap::new();
+    let mut path: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(section) = line.strip_prefix('[') {
+            let section = section
+                .strip_suffix(']')
+                .ok_or_else(|| err("unterminated section header"))?
+                .trim();
+            if section.is_empty() {
+                return Err(err("empty section name"));
+            }
+            path = section.split('.').map(|s| s.trim().to_string()).collect();
+            // materialize the table so empty sections still exist
+            ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+            continue;
+        }
+
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| err("expected `key = value`"))?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(err("empty key"));
+        }
+        let value = parse_value(value.trim()).map_err(|m| err(&m))?;
+        let table = ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+        if table.insert(key.to_string(), value).is_some() {
+            return Err(err(&format!("duplicate key `{key}`")));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string must not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(m) => m,
+            _ => return Err(format!("`{part}` is both a value and a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| "unterminated string".to_string())?;
+        return unescape(inner);
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| "unterminated array".to_string())?
+            .trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        return split_top_level(inner)
+            .into_iter()
+            .map(|item| parse_value(item.trim()))
+            .collect::<Result<Vec<_>, _>>()
+            .map(Json::Arr);
+    }
+    // number (TOML allows underscores)
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value `{s}`"))
+}
+
+/// Split array items on commas that are not inside quotes.
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+fn unescape(s: &str) -> Result<Json, String> {
+    let mut out = String::new();
+    let mut chars = s.chars();
+    while let Some(c) = chars.next() {
+        if c != '\\' {
+            out.push(c);
+            continue;
+        }
+        match chars.next() {
+            Some('n') => out.push('\n'),
+            Some('t') => out.push('\t'),
+            Some('r') => out.push('\r'),
+            Some('"') => out.push('"'),
+            Some('\\') => out.push('\\'),
+            other => return Err(format!("unknown escape \\{other:?}")),
+        }
+    }
+    Ok(Json::Str(out))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_typical_run_config() {
+        let cfg = parse(
+            r#"
+# run config
+preset = "medium"
+workers = 8
+tau = 12
+
+[outer]
+algo = "sign_momentum"   # Algorithm 1
+beta1 = 0.95
+beta2 = 0.98
+global_lr = 1.0
+weight_decay = 0.1
+
+[base]
+algo = "adamw"
+betas = [0.9, 0.95]
+
+[comm]
+preset = "ethernet"
+"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.get("preset").unwrap().as_str(), Some("medium"));
+        assert_eq!(cfg.get("tau").unwrap().as_usize(), Some(12));
+        let outer = cfg.get("outer").unwrap();
+        assert_eq!(outer.get("beta2").unwrap().as_f64(), Some(0.98));
+        let betas = cfg.get("base").unwrap().get("betas").unwrap().as_arr().unwrap();
+        assert_eq!(betas[1].as_f64(), Some(0.95));
+    }
+
+    #[test]
+    fn nested_sections() {
+        let cfg = parse("[a.b]\nx = 1\n[a.c]\ny = 2\n").unwrap();
+        assert_eq!(cfg.get("a").unwrap().get("b").unwrap().get("x").unwrap().as_usize(), Some(1));
+        assert_eq!(cfg.get("a").unwrap().get("c").unwrap().get("y").unwrap().as_usize(), Some(2));
+    }
+
+    #[test]
+    fn strings_with_hash_and_escapes() {
+        let cfg = parse(r#"s = "a # not comment\n""#).unwrap();
+        assert_eq!(cfg.get("s").unwrap().as_str(), Some("a # not comment\n"));
+    }
+
+    #[test]
+    fn numbers_with_underscores_and_floats() {
+        let cfg = parse("big = 100_000\nlr = 5e-4\nneg = -3\n").unwrap();
+        assert_eq!(cfg.get("big").unwrap().as_usize(), Some(100_000));
+        assert_eq!(cfg.get("lr").unwrap().as_f64(), Some(5e-4));
+        assert_eq!(cfg.get("neg").unwrap().as_f64(), Some(-3.0));
+    }
+
+    #[test]
+    fn error_reporting_includes_line() {
+        let e = parse("ok = 1\nbroken\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(parse("[x\n").is_err());
+        assert!(parse("a = 1\na = 2\n").is_err(), "duplicate keys rejected");
+    }
+
+    #[test]
+    fn empty_and_comment_only_lines() {
+        let cfg = parse("\n\n# only comments\n\n").unwrap();
+        assert_eq!(cfg, Json::Obj(Default::default()));
+    }
+}

@@ -1,0 +1,97 @@
+//! Algorithmic equivalences the paper states, verified numerically
+//! (no PJRT needed — pure Rust).
+
+use dsm::optim::{BaseOptimizer, Lion};
+use dsm::outer::{run_synthetic_round, Lookahead, OuterOptimizer, SignMomentum, SlowMo};
+use dsm::sign::SignOp;
+use dsm::tensor;
+use dsm::util::rng::Rng;
+
+/// §2 "Algorithm instances": with n=1, τ=1, SGD base and γ-scaled
+/// pseudo-gradients, Algorithm 1's global step IS a Lion step on the
+/// same gradient stream (same β1, β2, λ, LR = η·γ).
+#[test]
+fn algorithm1_with_tau1_sgd_is_lion() {
+    let d = 64;
+    let (b1, b2, lam) = (0.9f32, 0.99, 0.1);
+    let (eta, gamma) = (2.0f32, 0.05f32);
+
+    let mut rng = Rng::new(3);
+    let mut x_lion: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let mut x_alg1 = x_lion.clone();
+
+    let mut lion = Lion::new(d, b1, b2, lam);
+    let mut alg1 = SignMomentum::new(d, eta, b1, b2, lam, SignOp::Exact, 1.0);
+
+    for round in 0..20 {
+        let grads: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        // Lion with LR η·γ on gradient g
+        lion.step(&mut x_lion, &grads, eta * gamma);
+        // Algorithm 1: one SGD local step produces diff = γ·g
+        let diff: Vec<f32> = grads.iter().map(|&g| g * gamma).collect();
+        run_synthetic_round(&mut alg1, &mut x_alg1, &diff, gamma, round);
+    }
+    assert!(
+        tensor::max_abs_diff(&x_lion, &x_alg1) < 1e-5,
+        "max diff {}",
+        tensor::max_abs_diff(&x_lion, &x_alg1)
+    );
+}
+
+/// §4.1: signed Lookahead == Algorithm 1 with β1 = β2, λ = 0 — already
+/// unit-tested per-round; here over a long trajectory with varying γ_t.
+#[test]
+fn signed_lookahead_tracks_algorithm1_under_lr_schedule() {
+    let d = 32;
+    let beta = 0.7f32;
+    let mut la = Lookahead::new(d, 3.0, beta, true);
+    let mut sm = SignMomentum::new(d, 3.0, beta, beta, 0.0, SignOp::Exact, 1.0);
+    let mut xa = vec![0.4f32; d];
+    let mut xb = xa.clone();
+    let mut rng = Rng::new(9);
+    for round in 0..50 {
+        let gamma = 0.1 / (1.0 + round as f32 * 0.1); // decaying schedule
+        let diff: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 0.01)).collect();
+        run_synthetic_round(&mut la, &mut xa, &diff, gamma, round);
+        run_synthetic_round(&mut sm, &mut xb, &diff, gamma, round);
+    }
+    assert!(tensor::max_abs_diff(&xa, &xb) < 1e-5);
+}
+
+/// SlowMo with β=0, α=1 degenerates to plain local averaging over any
+/// trajectory (the "LocalAvg is SlowMo's ancestor" relation).
+#[test]
+fn slowmo_beta0_alpha1_is_local_averaging() {
+    let d = 16;
+    let mut slowmo = SlowMo::new(d, 1.0, 0.0);
+    let mut x = vec![1.0f32; d];
+    let mut rng = Rng::new(4);
+    for round in 0..10 {
+        let diff: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 0.1)).collect();
+        let expect: Vec<f32> = x.iter().zip(&diff).map(|(&xi, &di)| xi - di).collect();
+        run_synthetic_round(&mut slowmo, &mut x, &diff, 0.5, round);
+        assert!(tensor::max_abs_diff(&x, &expect) < 1e-6);
+    }
+}
+
+/// The momentum buffer of Algorithm 1 must be invariant to rescaling
+/// (γ, diff) jointly — the 1/γ_t normalization working as eq. (6)-(8)
+/// intend across an entire schedule.
+#[test]
+fn momentum_schedule_invariance_over_trajectory() {
+    let d = 8;
+    let pseudo_grads: Vec<Vec<f32>> =
+        (0..30).map(|r| (0..d).map(|j| ((r * d + j) as f32).sin() * 0.1).collect()).collect();
+    let mut finals = Vec::new();
+    for scale in [1.0f32, 0.37] {
+        let mut sm = SignMomentum::new(d, 1.0, 0.95, 0.98, 0.0, SignOp::Exact, 1.0);
+        let mut x = vec![0.0f32; d];
+        for (r, pg) in pseudo_grads.iter().enumerate() {
+            let gamma = 0.05 * scale;
+            let diff: Vec<f32> = pg.iter().map(|&g| g * gamma).collect();
+            run_synthetic_round(&mut sm, &mut x, &diff, gamma, r as u64);
+        }
+        finals.push(sm.state()[0].to_vec());
+    }
+    assert!(tensor::max_abs_diff(&finals[0], &finals[1]) < 1e-5);
+}

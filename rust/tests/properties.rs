@@ -1,0 +1,230 @@
+//! Property-based tests over randomized inputs (in-tree substitute for
+//! proptest, which is unavailable offline): each property draws many
+//! random cases from a seeded generator and asserts an invariant; on
+//! failure the seed + case index pinpoint the reproduction.
+
+use dsm::data::corpus::{generate, CorpusConfig};
+use dsm::data::dataset::TokenDataset;
+use dsm::data::{Bpe, ByteTokenizer, Tokenizer};
+use dsm::outer::{run_synthetic_round, OuterConfig};
+use dsm::sign::SignOp;
+use dsm::tensor;
+use dsm::train::checkpoint::Checkpoint;
+use dsm::train::schedule::ScheduleConfig;
+use dsm::util::json::Json;
+use dsm::util::rng::Rng;
+
+/// Mini property harness: run `f` on `cases` random inputs.
+fn forall<F: FnMut(u64, &mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0xD5A1 ^ case);
+        f(case, &mut rng);
+    }
+    let _ = name;
+}
+
+#[test]
+fn prop_outer_rounds_preserve_finiteness_and_dimension() {
+    forall("outer-finite", 40, |case, rng| {
+        let d = 1 + rng.below(200) as usize;
+        let configs = [
+            OuterConfig::SignMomentum {
+                eta: rng.f32() * 2.0,
+                beta1: rng.f32() * 0.99,
+                beta2: rng.f32() * 0.99,
+                weight_decay: rng.f32() * 0.2,
+                sign_op: *rng.choose(&[SignOp::Exact, SignOp::RandPm, SignOp::RandZero]),
+                sign_bound: 100.0,
+            },
+            OuterConfig::SlowMo { alpha: rng.f32() * 2.0, beta: rng.f32() * 0.99 },
+            OuterConfig::SignedSlowMo { eta: rng.f32() * 2.0, beta: rng.f32() * 0.99 },
+            OuterConfig::GlobalAdamW {
+                eta: rng.f32(),
+                beta1: 0.9,
+                beta2: 0.95,
+                eps: 1e-8,
+                weight_decay: 0.1,
+            },
+            OuterConfig::LocalAvg,
+        ];
+        let cfg = rng.choose(&configs).clone();
+        let mut opt = cfg.build(d);
+        let mut x: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        for round in 0..8 {
+            let diff: Vec<f32> = (0..d).map(|_| rng.normal_f32(0.0, 0.05)).collect();
+            let gamma = 1e-4 + rng.f32() * 0.5;
+            run_synthetic_round(opt.as_mut(), &mut x, &diff, gamma, round);
+            assert_eq!(x.len(), d);
+            assert!(tensor::all_finite(&x), "case {case}: {} produced non-finite", cfg.name());
+        }
+    });
+}
+
+#[test]
+fn prop_sign_ops_are_ternary_and_exact_dominates_magnitude() {
+    forall("sign-ternary", 60, |case, rng| {
+        let d = 1 + rng.below(500) as usize;
+        let bound = 1.0 + rng.f32() * 100.0;
+        let v: Vec<f32> =
+            (0..d).map(|_| (rng.f32() * 2.0 - 1.0) * bound * 0.999).collect();
+        for op in [SignOp::Exact, SignOp::RandPm, SignOp::RandZero] {
+            let out = op.apply(&v, bound, rng);
+            for (j, (&o, &x)) in out.iter().zip(&v).enumerate() {
+                assert!(o == 0.0 || o == 1.0 || o == -1.0, "case {case} coord {j}");
+                // randomized-zero never flips the sign; ±-flip may, exact never
+                if op == SignOp::RandZero && o != 0.0 {
+                    assert_eq!(o, tensor::sign_f32(x));
+                }
+                if op == SignOp::Exact {
+                    assert_eq!(o, tensor::sign_f32(x));
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_bpe_roundtrips_arbitrary_bytes() {
+    let corpus = generate(&CorpusConfig { bytes: 40_000, ..Default::default() });
+    let bpe = Bpe::train(&corpus, 300 + 64);
+    forall("bpe-roundtrip", 30, |case, rng| {
+        let len = rng.below(2000) as usize;
+        let text: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let enc = bpe.encode(&text);
+        assert_eq!(bpe.decode(&enc), text, "case {case}");
+        assert!(enc.len() <= text.len(), "BPE must never expand");
+    });
+}
+
+#[test]
+fn prop_json_roundtrips_random_values() {
+    fn random_json(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bernoulli(0.5)),
+            2 => Json::Num((rng.range(-1_000_000, 1_000_000) as f64) / 64.0),
+            3 => Json::Str(
+                (0..rng.below(20)).map(|_| rng.choose(&['a', 'β', '"', '\\', '\n', ' ', '7']))
+                    .collect::<String>(),
+            ),
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth + 1)))
+                    .collect(),
+            ),
+        }
+    }
+    forall("json-roundtrip", 60, |case, rng| {
+        let v = random_json(rng, 0);
+        let text = v.to_string_compact();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}: {text}");
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrips_random_buffers() {
+    let dir = std::env::temp_dir().join("dsm_prop_ckpt");
+    std::fs::create_dir_all(&dir).unwrap();
+    forall("ckpt-roundtrip", 15, |case, rng| {
+        let mut ck = Checkpoint::new(&format!("prop-{case}"), rng.below(1000));
+        let n_bufs = 1 + rng.below(6) as usize;
+        for i in 0..n_bufs {
+            let len = rng.below(4000) as usize;
+            let buf: Vec<f32> = (0..len).map(|_| rng.normal_f32(0.0, 10.0)).collect();
+            ck.add(&format!("buf{i}"), &buf);
+        }
+        let path = dir.join(format!("{case}.ckpt"));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.buffers.len(), ck.buffers.len());
+        for ((na, ba), (nb, bb)) in ck.buffers.iter().zip(&back.buffers) {
+            assert_eq!(na, nb);
+            assert_eq!(ba, bb, "case {case}: buffer {na} bits changed");
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
+
+#[test]
+fn prop_schedule_is_positive_bounded_and_warmup_monotone() {
+    forall("schedule", 40, |case, rng| {
+        let peak = 10f32.powf(-(1.0 + rng.f32() * 4.0));
+        let total = 10 + rng.below(100_000);
+        let cfg = ScheduleConfig::cosine_paper(peak, total);
+        let s = cfg.build();
+        let warmup = match cfg {
+            ScheduleConfig::Cosine { warmup, .. } => warmup,
+            _ => unreachable!(),
+        };
+        let mut prev = 0.0f32;
+        for t in 0..warmup {
+            let lr = s.lr(t);
+            assert!(lr > prev || t == 0, "case {case}: warmup not increasing at {t}");
+            prev = lr;
+        }
+        for t in (0..total + 100).step_by((total as usize / 50).max(1)) {
+            let lr = s.lr(t);
+            assert!(lr > 0.0 && lr <= peak * 1.0001, "case {case}: lr {lr} out of range at {t}");
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_shards_partition_and_targets_shift() {
+    forall("dataset", 20, |case, rng| {
+        let len = 2_000 + rng.below(20_000) as usize;
+        let tokens: Vec<u32> = (0..len).map(|_| rng.below(256) as u32).collect();
+        let ds = TokenDataset::from_tokens(tokens, 0.1);
+        let n = 1 + rng.below(7) as usize;
+        let mut covered = 0;
+        for w in 0..n {
+            let (lo, hi) = ds.shard_range(w, n);
+            assert_eq!(lo, covered, "case {case}");
+            covered = hi;
+        }
+        assert_eq!(covered, ds.train_len());
+        let seq = 16 + 8 * rng.below(4) as usize;
+        if ds.shard_range(0, n).1 > seq + 2 {
+            let b = ds.sample_train(0, n, 2, seq, rng);
+            for i in 0..2 {
+                for j in 0..seq - 1 {
+                    assert_eq!(b.tokens[i * seq + j + 1], b.targets[i * seq + j]);
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_allreduce_mean_bounds_and_permutation_invariance() {
+    forall("allreduce", 30, |case, rng| {
+        let d = 1 + rng.below(100) as usize;
+        let n = 1 + rng.below(8) as usize;
+        let mut workers: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..d).map(|_| rng.normal_f32(0.0, 5.0)).collect())
+            .collect();
+        let mut out = vec![0.0f32; d];
+        dsm::dist::collectives::allreduce_mean(&workers, |w| w.as_slice(), &mut out);
+        for j in 0..d {
+            let lo = workers.iter().map(|w| w[j]).fold(f32::MAX, f32::min);
+            let hi = workers.iter().map(|w| w[j]).fold(f32::MIN, f32::max);
+            assert!(out[j] >= lo - 1e-4 && out[j] <= hi + 1e-4, "case {case}");
+        }
+        rng.shuffle(&mut workers);
+        let mut out2 = vec![0.0f32; d];
+        dsm::dist::collectives::allreduce_mean(&workers, |w| w.as_slice(), &mut out2);
+        assert!(tensor::max_abs_diff(&out, &out2) < 1e-5, "case {case}");
+    });
+}
+
+#[test]
+fn prop_byte_tokenizer_is_total_bijection() {
+    forall("byte-tok", 20, |_case, rng| {
+        let len = rng.below(4096) as usize;
+        let text: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let t = ByteTokenizer;
+        assert_eq!(t.decode(&t.encode(&text)), text);
+    });
+}

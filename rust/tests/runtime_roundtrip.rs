@@ -1,0 +1,156 @@
+//! Cross-language integration: the AOT'd HLO artifacts executed through
+//! PJRT from Rust must reproduce the jax-side semantics.
+//!
+//! Requires `make artifacts` (tests self-skip when artifacts are absent,
+//! mirroring the pytest suite's skip behaviour).
+
+use dsm::data::corpus::{generate, CorpusConfig};
+use dsm::data::dataset::TokenDataset;
+use dsm::data::ByteTokenizer;
+use dsm::outer::{run_synthetic_round, SignMomentum};
+use dsm::runtime::{Artifacts, ModelBundle, Runtime, SignUpdateKernel, SignUpdateScalars};
+use dsm::sign::SignOp;
+use dsm::tensor;
+use dsm::util::rng::Rng;
+
+fn setup() -> Option<(Runtime, Artifacts)> {
+    let dir = Artifacts::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some((Runtime::cpu().unwrap(), Artifacts::load(&dir).unwrap()))
+}
+
+fn nano_bundle(rt: &Runtime, arts: &Artifacts) -> ModelBundle {
+    ModelBundle::load(rt, arts.preset("nano").unwrap()).unwrap()
+}
+
+fn batch(bundle: &ModelBundle, seed: u64) -> dsm::data::dataset::Batch {
+    let corpus = generate(&CorpusConfig { bytes: 1 << 18, seed, ..Default::default() });
+    let ds = TokenDataset::from_text(&ByteTokenizer, &corpus, 0.1);
+    let mut rng = Rng::new(seed);
+    ds.sample_train(0, 1, bundle.info.batch, bundle.info.seq, &mut rng)
+}
+
+#[test]
+fn init_is_deterministic_and_seed_sensitive() {
+    let Some((rt, arts)) = setup() else { return };
+    let bundle = nano_bundle(&rt, &arts);
+    let a = bundle.init_params(7).unwrap();
+    let b = bundle.init_params(7).unwrap();
+    let c = bundle.init_params(8).unwrap();
+    assert_eq!(a, b);
+    assert!(tensor::max_abs_diff(&a, &c) > 1e-3);
+    assert_eq!(a.len(), bundle.info.param_count);
+    // GPT-2 init statistics survive the trip: embeddings ~N(0, 0.02)
+    let wte = arts.preset("nano").unwrap().layout.iter().find(|e| e.name == "wte").unwrap();
+    let emb = &a[wte.offset..wte.offset + wte.numel()];
+    let std = (tensor::norm2_sq(emb) / emb.len() as f64).sqrt();
+    assert!((std - 0.02).abs() < 0.003, "wte std {std}");
+}
+
+#[test]
+fn initial_loss_is_near_uniform_and_grads_flow() {
+    let Some((rt, arts)) = setup() else { return };
+    let bundle = nano_bundle(&rt, &arts);
+    let params = bundle.init_params(42).unwrap();
+    let b = batch(&bundle, 1);
+    let out = bundle.train_step(&params, &b).unwrap();
+    // ln(256) = 5.545; GPT-2 init is near-uniform over the vocab
+    assert!((out.loss - 5.545).abs() < 0.3, "loss {}", out.loss);
+    assert!(tensor::all_finite(&out.grads));
+    assert!(tensor::norm2(&out.grads) > 1e-3);
+    // eval artifact agrees with the train artifact's loss
+    let eval = bundle.eval_loss(&params, &b).unwrap();
+    assert!((eval - out.loss).abs() < 1e-4, "{eval} vs {}", out.loss);
+}
+
+#[test]
+fn gradients_match_finite_differences() {
+    let Some((rt, arts)) = setup() else { return };
+    let bundle = nano_bundle(&rt, &arts);
+    let mut params = bundle.init_params(3).unwrap();
+    let b = batch(&bundle, 2);
+    let out = bundle.train_step(&params, &b).unwrap();
+    // probe a few well-spread coordinates with central differences
+    let p = params.len();
+    for &idx in &[10usize, p / 3, p / 2 + 17, p - 5] {
+        let h = 2e-2f32; // f32 eval noise ~1e-4 on the loss; need a big h
+        let orig = params[idx];
+        params[idx] = orig + h;
+        let lp = bundle.eval_loss(&params, &b).unwrap();
+        params[idx] = orig - h;
+        let lm = bundle.eval_loss(&params, &b).unwrap();
+        params[idx] = orig;
+        let fd = (lp - lm) / (2.0 * h);
+        let ad = out.grads[idx];
+        assert!(
+            (fd - ad).abs() < 2e-2_f32.max(0.2 * ad.abs()),
+            "coord {idx}: fd {fd} vs autodiff {ad}"
+        );
+    }
+}
+
+#[test]
+fn one_round_of_training_reduces_loss() {
+    let Some((rt, arts)) = setup() else { return };
+    let bundle = nano_bundle(&rt, &arts);
+    let mut params = bundle.init_params(5).unwrap();
+    let b = batch(&bundle, 3);
+    let before = bundle.eval_loss(&params, &b).unwrap();
+    for _ in 0..3 {
+        let out = bundle.train_step(&params, &b).unwrap();
+        tensor::axpy(&mut params, -0.05, &out.grads);
+    }
+    let after = bundle.eval_loss(&params, &b).unwrap();
+    assert!(after < before, "{before} -> {after}");
+}
+
+/// Three-way equivalence: the AOT'd Pallas sign-update kernel == the
+/// native Rust Algorithm-1 implementation (both already pinned to the
+/// jnp oracle on the python side).
+#[test]
+fn pallas_kernel_matches_rust_sign_momentum() {
+    let Some((rt, arts)) = setup() else { return };
+    let kernel = SignUpdateKernel::load(&rt, &arts).unwrap();
+    // deliberately NOT a multiple of the chunk size: exercises padding
+    let p = arts.sign_update_chunk + 12_345;
+    let mut rng = Rng::new(17);
+    let mut x = vec![0.0f32; p];
+    let mut m = vec![0.0f32; p];
+    let mut diff_applied = vec![0.0f32; p];
+    rng.fill_normal(&mut x, 0.05);
+    rng.fill_normal(&mut m, 0.3);
+    rng.fill_normal(&mut diff_applied, 0.002);
+    let gamma = 3e-3f32;
+
+    // native Rust path
+    let mut rust_opt = SignMomentum::new(p, 1.2, 0.95, 0.98, 0.1, SignOp::Exact, 1.0);
+    rust_opt.load_state(&[m.clone()]);
+    let mut x_rust = x.clone();
+    run_synthetic_round(&mut rust_opt, &mut x_rust, &diff_applied, gamma, 0);
+
+    // Pallas kernel path
+    let mut x_pallas = x.clone();
+    let mut m_pallas = m.clone();
+    kernel
+        .apply(
+            &mut x_pallas,
+            &mut m_pallas,
+            &diff_applied,
+            SignUpdateScalars { gamma, eta: 1.2, weight_decay: 0.1, beta1: 0.95, beta2: 0.98 },
+        )
+        .unwrap();
+
+    assert!(
+        tensor::max_abs_diff(&x_rust, &x_pallas) < 1e-5,
+        "x diverged: {}",
+        tensor::max_abs_diff(&x_rust, &x_pallas)
+    );
+    let m_rust = rust_opt.state()[0].to_vec();
+    // m update involves diff/gamma ~ O(1); allow f32 rounding
+    assert!(tensor::max_abs_diff(&m_rust, &m_pallas) < 1e-3);
+}
+
+use dsm::outer::OuterOptimizer; // for load_state/state on SignMomentum
