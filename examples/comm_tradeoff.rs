@@ -62,7 +62,9 @@ fn main() -> Result<()> {
         print!("{net:>10}");
         let totals: Vec<f64> = rows
             .iter()
-            .map(|(_, r)| r.clock.compute_s + r.clock.comm_rounds as f64 * m.allreduce_time(workers, bytes))
+            .map(|(_, r)| {
+                r.clock.compute_s + r.clock.comm_rounds as f64 * m.allreduce_time(workers, bytes)
+            })
             .collect();
         for t in &totals {
             print!("{t:>10.2}");

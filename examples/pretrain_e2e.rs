@@ -112,7 +112,8 @@ fn main() -> Result<()> {
         let m = CommModel::preset(net).unwrap();
         print!("  {net:>9}: ");
         for (name, r) in &results {
-            let total = r.clock.compute_s + r.clock.comm_rounds as f64 * m.allreduce_time(workers, bytes);
+            let total = r.clock.compute_s
+                + r.clock.comm_rounds as f64 * m.allreduce_time(workers, bytes);
             print!("{name} {total:>7.1}s   ");
         }
         println!();

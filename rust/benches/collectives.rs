@@ -1,9 +1,12 @@
-//! Collective-arithmetic + comm-model benches.
+//! Collective-arithmetic + comm-model benches: both reduction backends
+//! (sequential reference vs chunked threads), the packed-sign codec,
+//! and the analytic comm model.
 //!
 //!     cargo bench --bench collectives
 
 use dsm::comm::CommModel;
-use dsm::dist::collectives;
+use dsm::dist::codec;
+use dsm::dist::collectives::{self, Backend};
 use dsm::util::bench::{black_box, Bencher};
 use dsm::util::rng::Rng;
 
@@ -26,6 +29,49 @@ fn main() {
             || collectives::allreduce_mean(black_box(&workers), |w| w.as_slice(), &mut out),
         );
     }
+
+    println!("\n== backends (n=8, P=4M) ==");
+    let n = 8usize;
+    let p = 1usize << 22;
+    let workers: Vec<Vec<f32>> = (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; p];
+            rng.fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let mut out = vec![0.0f32; p];
+    let bytes = Some((n as u64 + 1) * p as u64 * 4);
+    b.bench_with_bytes("allreduce sequential reference", bytes, || {
+        collectives::allreduce_mean_with(
+            Backend::Sequential,
+            black_box(&workers),
+            |w| w.as_slice(),
+            &mut out,
+        )
+    });
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    for threads in [2usize, 4, cores] {
+        b.bench_with_bytes(&format!("allreduce threaded x{threads}"), bytes, || {
+            collectives::allreduce_mean_with(
+                Backend::Threaded { threads },
+                black_box(&workers),
+                |w| w.as_slice(),
+                &mut out,
+            )
+        });
+    }
+
+    println!("\n== packed-sign codec (P=4M, 32x payload compression) ==");
+    let mut signs = vec![0.0f32; p];
+    rng.fill_normal(&mut signs, 1.0);
+    b.bench_with_bytes("pack_signs", Some(p as u64 * 4), || {
+        black_box(codec::pack_signs(black_box(&signs)));
+    });
+    let packed = codec::pack_signs(&signs);
+    b.bench_with_bytes("unpack_signs", Some(p as u64 * 4), || {
+        black_box(codec::unpack_signs(black_box(&packed), p));
+    });
 
     let votes: Vec<Vec<f32>> = (0..8)
         .map(|i| (0..1 << 20).map(|j| if (i + j) % 3 == 0 { 1.0 } else { -1.0 }).collect())

@@ -45,7 +45,13 @@ fn main() {
         OuterConfig::sign_momentum_paper(1.0),
         OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
         OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
-        OuterConfig::GlobalAdamW { eta: 1.0, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 },
+        OuterConfig::GlobalAdamW {
+            eta: 1.0,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+        },
         OuterConfig::LocalAvg,
     ] {
         let mut opt = cfg.build(P);

@@ -57,7 +57,13 @@ fn main() {
     let mut d = vec![0.0f32; p];
     rngk.fill_normal(&mut x, 0.02);
     rngk.fill_normal(&mut d, 0.001);
-    let s = SignUpdateScalars { gamma: 1e-3, eta: 1.0, weight_decay: 0.1, beta1: 0.95, beta2: 0.98 };
+    let s = SignUpdateScalars {
+        gamma: 1e-3,
+        eta: 1.0,
+        weight_decay: 0.1,
+        beta1: 0.95,
+        beta2: 0.98,
+    };
     b.bench_with_bytes(&format!("pallas sign_update P={p}"), Some(p as u64 * 20), || {
         kernel.apply(black_box(&mut x), &mut m, &d, s).unwrap();
     });

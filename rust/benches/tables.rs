@@ -108,7 +108,13 @@ fn main() {
         &mut b, &rt, &arts, bundle.clone(),
         "tab6/global-adamw tau=12",
         TrainMode::LocalSteps, 12, adamw(),
-        OuterConfig::GlobalAdamW { eta: 1e-3, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 },
+        OuterConfig::GlobalAdamW {
+            eta: 1e-3,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+        },
     );
 
     println!("\n== Figure 3: local averaging ==");

@@ -118,6 +118,29 @@ impl SimClock {
         self.compute_s + self.comm_s + self.straggler_s
     }
 
+    /// Charge one *sign-compressed* all-reduce over `n` workers: the
+    /// payload is 1 bit per coordinate plus a small header
+    /// ([`crate::dist::codec::sign_allreduce_bytes`]) instead of 4
+    /// bytes per f32 — the wire cost of majority-vote sign exchange
+    /// (MV-sto-signSGD and other signSGD-style methods).
+    ///
+    /// Deliberately optimistic: it reuses the ring α-β formula, i.e. an
+    /// idealized lower bound. A real majority vote is not ring-reducible
+    /// bit-by-bit — practical topologies pay a gather+broadcast (~n·P/8
+    /// server bytes) or ship ⌈log2(n+1)⌉-bit tallies — so at large n
+    /// this *understates* sign-vote traffic; refining the topology model
+    /// is a ROADMAP follow-up.
+    pub fn charge_sign_allreduce(
+        &mut self,
+        model: &CommModel,
+        n: usize,
+        n_params: usize,
+        rng: &mut Rng,
+    ) {
+        let bytes = crate::dist::codec::sign_allreduce_bytes(n_params);
+        self.charge_allreduce(model, n, bytes, rng);
+    }
+
     /// Charge one all-reduce of `bytes` over `n` workers.
     pub fn charge_allreduce(&mut self, model: &CommModel, n: usize, bytes: u64, rng: &mut Rng) {
         self.comm_s += model.allreduce_time(n, bytes);
@@ -159,7 +182,12 @@ mod tests {
 
     #[test]
     fn allreduce_alpha_beta_formula() {
-        let m = CommModel { latency_s: 1e-3, bandwidth_bps: 1e9, straggler_sigma: 0.0, straggler_scale_s: 0.0 };
+        let m = CommModel {
+            latency_s: 1e-3,
+            bandwidth_bps: 1e9,
+            straggler_sigma: 0.0,
+            straggler_scale_s: 0.0,
+        };
         // n=2: 2*1*1ms + 2*(1/2)*1e9B/1e9 = 2ms + 1s
         let t = m.allreduce_time(2, 1_000_000_000);
         assert!((t - 1.002).abs() < 1e-9, "{t}");
@@ -176,7 +204,12 @@ mod tests {
     #[test]
     fn bandwidth_term_saturates_with_n() {
         // 2(n-1)/n -> 2: large-n all-reduce transfers at most ~2x the data.
-        let m = CommModel { latency_s: 0.0, bandwidth_bps: 1e9, straggler_sigma: 0.0, straggler_scale_s: 0.0 };
+        let m = CommModel {
+            latency_s: 0.0,
+            bandwidth_bps: 1e9,
+            straggler_sigma: 0.0,
+            straggler_scale_s: 0.0,
+        };
         let t_inf = 2.0 * 1e9 / 1e9;
         assert!(m.allreduce_time(1024, 1_000_000_000) < t_inf);
         assert!(m.allreduce_time(1024, 1_000_000_000) > 0.99 * t_inf);
@@ -206,6 +239,52 @@ mod tests {
         assert!(clock.comm_s > 0.0);
         assert!(clock.total_s() >= clock.compute_s + clock.comm_s);
         assert!(clock.bytes_communicated > 1 << 20);
+    }
+
+    #[test]
+    fn sign_allreduce_charges_packed_bytes() {
+        use crate::dist::codec;
+        let m = CommModel::preset("eth").unwrap();
+        let mut rng = Rng::new(2);
+        let p = 1 << 20;
+        let n = 4;
+
+        let mut compressed = SimClock::default();
+        compressed.charge_sign_allreduce(&m, n, p, &mut rng);
+        // payload is ~P/8 bytes plus the fixed header ...
+        let payload = codec::sign_allreduce_bytes(p);
+        assert_eq!(payload, (p as u64) / 8 + codec::HEADER_BYTES);
+        // ... and the ring all-reduce moves 2(n-1)/n of it.
+        let expected_moved = payload * 2 * (n as u64 - 1) / n as u64;
+        assert_eq!(compressed.bytes_communicated, expected_moved);
+        assert_eq!(compressed.comm_rounds, 1);
+
+        // ~32x cheaper than the uncompressed f32 exchange in both bytes
+        // and modeled time (same latency term, 1/32 the bandwidth term).
+        let mut full = SimClock::default();
+        full.charge_allreduce(&m, n, p as u64 * 4, &mut rng);
+        assert!(compressed.bytes_communicated * 30 < full.bytes_communicated);
+        assert!(compressed.comm_s < full.comm_s);
+    }
+
+    #[test]
+    fn bytes_communicated_is_monotone() {
+        let m = CommModel::preset("wan").unwrap();
+        let mut clock = SimClock::default();
+        let mut rng = Rng::new(9);
+        let mut prev_bytes = 0;
+        let mut prev_rounds = 0;
+        for i in 0..20 {
+            if i % 2 == 0 {
+                clock.charge_sign_allreduce(&m, 2 + i % 5, 1000 + 100 * i, &mut rng);
+            } else {
+                clock.charge_allreduce(&m, 2 + i % 5, (4000 + i) as u64, &mut rng);
+            }
+            assert!(clock.bytes_communicated > prev_bytes, "step {i}: bytes must grow");
+            assert!(clock.comm_rounds > prev_rounds, "step {i}: rounds must grow");
+            prev_bytes = clock.bytes_communicated;
+            prev_rounds = clock.comm_rounds;
+        }
     }
 
     #[test]

@@ -1,0 +1,118 @@
+//! 1-bit sign codec: the wire format for sign-exchange collectives.
+//!
+//! signSGD-style methods (majority vote, MV-sto-signSGD) only move the
+//! *sign* of each coordinate, which packs to 1 bit instead of an f32's
+//! 32 — the 32× communication reduction that motivates them (Bernstein
+//! et al. 2018). [`pack_signs`]/[`unpack_signs`] implement the payload;
+//! [`sign_allreduce_bytes`] is the byte model the simulated clock
+//! charges ([`crate::comm::SimClock::charge_sign_allreduce`]).
+//!
+//! # Wire format
+//!
+//! Little-endian bit order: element `i` lives in bit `i % 8` of byte
+//! `i / 8`. A **set** bit encodes a non-negative sign (decodes to
+//! `+1.0`), a **clear** bit a negative sign (`-1.0`). Zeros carry their
+//! IEEE sign bit (`+0.0 → +1`, `-0.0 → -1`): one bit has no zero
+//! symbol, and decoding to ±1 matches how sign steps consume the value
+//! (a ±1 multiplied into the learning rate). Consequently
+//! `unpack_signs(pack_signs(v))[i] == copysign(1.0, v[i])`, and any
+//! vector already in {-1, +1} round-trips exactly.
+
+/// Fixed per-message framing overhead (element count as a u64), charged
+/// on top of the packed payload by [`sign_allreduce_bytes`].
+pub const HEADER_BYTES: u64 = 8;
+
+/// Packed payload size for `n` sign coordinates: ⌈n / 8⌉ bytes.
+pub fn packed_len(n: usize) -> usize {
+    (n + 7) / 8
+}
+
+/// Total bytes one sign message of `n_params` coordinates puts on the
+/// wire: packed payload plus the fixed header.
+pub fn sign_allreduce_bytes(n_params: usize) -> u64 {
+    packed_len(n_params) as u64 + HEADER_BYTES
+}
+
+/// Pack the sign bit of every coordinate (1 bit each, 32× smaller than
+/// the f32 payload). See the module docs for the exact bit layout.
+pub fn pack_signs(v: &[f32]) -> Vec<u8> {
+    let mut out = vec![0u8; packed_len(v.len())];
+    for (i, &x) in v.iter().enumerate() {
+        if !x.is_sign_negative() {
+            out[i / 8] |= 1 << (i % 8);
+        }
+    }
+    out
+}
+
+/// Decode `len` coordinates packed by [`pack_signs`] back to ±1.0.
+pub fn unpack_signs(packed: &[u8], len: usize) -> Vec<f32> {
+    assert_eq!(
+        packed.len(),
+        packed_len(len),
+        "packed buffer is {} bytes, {} coordinates need {}",
+        packed.len(),
+        len,
+        packed_len(len)
+    );
+    (0..len)
+        .map(|i| if (packed[i / 8] >> (i % 8)) & 1 == 1 { 1.0 } else { -1.0 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_len_rounds_up() {
+        assert_eq!(packed_len(0), 0);
+        assert_eq!(packed_len(1), 1);
+        assert_eq!(packed_len(8), 1);
+        assert_eq!(packed_len(9), 2);
+        assert_eq!(packed_len(1 << 20), 1 << 17);
+    }
+
+    #[test]
+    fn sign_message_is_32x_smaller_than_f32_plus_header() {
+        let p = 1 << 20;
+        assert_eq!(sign_allreduce_bytes(p), (p as u64) / 8 + HEADER_BYTES);
+        assert!(sign_allreduce_bytes(p) * 30 < (p as u64) * 4);
+    }
+
+    #[test]
+    fn pm_one_patterns_roundtrip_exactly() {
+        let v: Vec<f32> = (0..67).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        assert_eq!(unpack_signs(&pack_signs(&v), v.len()), v);
+    }
+
+    #[test]
+    fn arbitrary_floats_decode_to_their_copysign() {
+        let v = vec![3.5f32, -0.25, 0.0, -0.0, 1e-30, -1e30, f32::MAX, f32::MIN];
+        let decoded = unpack_signs(&pack_signs(&v), v.len());
+        for (&x, &d) in v.iter().zip(&decoded) {
+            assert_eq!(d, 1.0f32.copysign(x), "input {x}");
+        }
+    }
+
+    #[test]
+    fn bit_layout_is_little_endian_within_bytes() {
+        // element 0 -> bit 0 of byte 0; element 8 -> bit 0 of byte 1
+        let mut v = vec![-1.0f32; 9];
+        v[0] = 1.0;
+        v[8] = 1.0;
+        assert_eq!(pack_signs(&v), vec![0b0000_0001, 0b0000_0001]);
+    }
+
+    #[test]
+    fn empty_input_packs_to_empty() {
+        assert_eq!(pack_signs(&[]), Vec::<u8>::new());
+        assert_eq!(unpack_signs(&[], 0), Vec::<f32>::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "packed buffer")]
+    fn wrong_packed_length_panics() {
+        unpack_signs(&[0u8; 2], 32);
+    }
+}

@@ -1,0 +1,199 @@
+//! Collective arithmetic over worker state: exact-mean all-reduce and
+//! sign majority vote, with a sequential reference backend and a
+//! chunked multi-threaded backend that is bitwise identical to it.
+//!
+//! The network *cost* of these collectives is modeled separately by
+//! [`crate::comm`]; here we do the actual math the simulated cluster
+//! would perform.
+//!
+//! # Backend determinism
+//!
+//! Every element `out[j]` is computed by the same expression in both
+//! backends — accumulate `slices[0][j], slices[1][j], ...` in f64 in
+//! worker order, then scale — and the threaded backend only partitions
+//! the *output index range* across `std::thread::scope` threads. No
+//! reduction-tree reassociation happens, so `Sequential` and
+//! `Threaded { .. }` agree bit-for-bit for any thread count (property-
+//! tested in `rust/tests/collectives.rs`), and runs stay reproducible
+//! regardless of the host's core count.
+
+use crate::tensor::sign_f32;
+
+/// How a collective executes on the host.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Single-threaded reference implementation.
+    Sequential,
+    /// Split the output across up to `threads` scoped OS threads.
+    Threaded { threads: usize },
+}
+
+/// Below this output length the spawn overhead dominates any speedup.
+const PARALLEL_THRESHOLD: usize = 1 << 16;
+
+impl Backend {
+    /// Pick a backend for an output of length `len`: threaded on
+    /// multi-core hosts for large vectors, sequential otherwise.
+    pub fn auto(len: usize) -> Backend {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        if len >= PARALLEL_THRESHOLD && cores > 1 {
+            Backend::Threaded { threads: cores.min(8) }
+        } else {
+            Backend::Sequential
+        }
+    }
+}
+
+/// Run `body(base_index, chunk)` over `out`, either whole (sequential)
+/// or split into contiguous chunks across scoped threads.
+fn run_chunked<F>(backend: Backend, out: &mut [f32], body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let threads = match backend {
+        Backend::Sequential => 1,
+        Backend::Threaded { threads } => threads.clamp(1, out.len().max(1)),
+    };
+    if threads <= 1 || out.len() <= 1 {
+        body(0, out);
+        return;
+    }
+    let chunk = (out.len() + threads - 1) / threads;
+    let body = &body;
+    std::thread::scope(|scope| {
+        for (ci, window) in out.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || body(ci * chunk, window));
+        }
+    });
+}
+
+fn check_shapes(slices: &[&[f32]], out: &[f32]) {
+    assert!(!slices.is_empty(), "collective over zero workers");
+    for (i, s) in slices.iter().enumerate() {
+        assert_eq!(s.len(), out.len(), "worker {i}: length {} != output {}", s.len(), out.len());
+    }
+}
+
+/// Exact mean of one slice per item into `out`, auto-picking a backend.
+///
+/// `get` projects each item to its f32 slice (e.g. `|w| w.params
+/// .as_slice()` over a `&[Worker]` fleet, or `|g| g.as_slice()` over
+/// raw gradient vectors).
+pub fn allreduce_mean<T, F>(items: &[T], get: F, out: &mut [f32])
+where
+    F: Fn(&T) -> &[f32],
+{
+    allreduce_mean_with(Backend::auto(out.len()), items, get, out)
+}
+
+/// [`allreduce_mean`] with an explicit [`Backend`].
+pub fn allreduce_mean_with<T, F>(backend: Backend, items: &[T], get: F, out: &mut [f32])
+where
+    F: Fn(&T) -> &[f32],
+{
+    let slices: Vec<&[f32]> = items.iter().map(get).collect();
+    allreduce_mean_slices(backend, &slices, out);
+}
+
+/// Core mean reduction over pre-projected slices.
+pub fn allreduce_mean_slices(backend: Backend, slices: &[&[f32]], out: &mut [f32]) {
+    check_shapes(slices, out);
+    let inv_n = 1.0f64 / slices.len() as f64;
+    run_chunked(backend, out, |base, chunk| {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let idx = base + j;
+            let mut acc = 0.0f64;
+            for s in slices {
+                acc += s[idx] as f64;
+            }
+            *o = (acc * inv_n) as f32;
+        }
+    });
+}
+
+/// Element-wise sign majority vote over per-worker vote vectors,
+/// auto-picking a backend.
+///
+/// Each vote contributes `sign(v) ∈ {-1, 0, +1}` to the tally; the
+/// output is **always ±1** — a tied (or all-zero) coordinate resolves
+/// to **+1**, because the 1-bit wire format ([`super::codec`]) has no
+/// zero symbol. (Algorithm 6's in-memory reference keeps `sign(0) = 0`
+/// via [`crate::tensor::sign_f32`]; this collective models the decoded
+/// wire value.)
+pub fn majority_vote<V: AsRef<[f32]>>(votes: &[V], out: &mut [f32]) {
+    majority_vote_with(Backend::auto(out.len()), votes, out)
+}
+
+/// [`majority_vote`] with an explicit [`Backend`].
+pub fn majority_vote_with<V: AsRef<[f32]>>(backend: Backend, votes: &[V], out: &mut [f32]) {
+    let slices: Vec<&[f32]> = votes.iter().map(|v| v.as_ref()).collect();
+    check_shapes(&slices, out);
+    let slices = &slices;
+    run_chunked(backend, out, |base, chunk| {
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let idx = base + j;
+            let mut tally = 0i64;
+            for s in slices {
+                tally += sign_f32(s[idx]) as i64;
+            }
+            *o = if tally >= 0 { 1.0 } else { -1.0 };
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_constant_vectors_is_exact() {
+        let workers = vec![vec![2.0f32; 5], vec![4.0f32; 5]];
+        let mut out = vec![0.0f32; 5];
+        allreduce_mean(&workers, |w| w.as_slice(), &mut out);
+        assert_eq!(out, vec![3.0f32; 5]);
+    }
+
+    #[test]
+    fn single_worker_mean_is_identity() {
+        let workers = vec![vec![1.0f32, -2.5, 3.25]];
+        let mut out = vec![0.0f32; 3];
+        allreduce_mean_with(Backend::Sequential, &workers, |w| w.as_slice(), &mut out);
+        assert_eq!(out, workers[0]);
+    }
+
+    #[test]
+    fn threaded_equals_sequential_on_small_input() {
+        let workers = vec![vec![1.0f32, 2.0, 3.0], vec![-1.0, 0.5, 9.0], vec![0.0, 0.0, 1.0]];
+        let mut seq = vec![0.0f32; 3];
+        let mut thr = vec![0.0f32; 3];
+        allreduce_mean_with(Backend::Sequential, &workers, |w| w.as_slice(), &mut seq);
+        allreduce_mean_with(Backend::Threaded { threads: 7 }, &workers, |w| w.as_slice(), &mut thr);
+        assert_eq!(seq, thr);
+    }
+
+    #[test]
+    fn majority_vote_is_plus_minus_one_with_positive_ties() {
+        let votes = vec![
+            vec![1.0f32, -1.0, 1.0, 0.0],
+            vec![1.0f32, -1.0, -1.0, 0.0],
+            vec![-1.0f32, -1.0, 0.0, 0.0],
+        ];
+        let mut out = vec![0.0f32; 4];
+        majority_vote(&votes, &mut out);
+        // 2-1 positive; 0-3 negative; 1-1 tie -> +1; all-zero tie -> +1
+        assert_eq!(out, vec![1.0, -1.0, 1.0, 1.0]);
+    }
+
+    #[test]
+    fn auto_backend_picks_sequential_for_tiny_outputs() {
+        assert_eq!(Backend::auto(8), Backend::Sequential);
+    }
+
+    #[test]
+    #[should_panic(expected = "length")]
+    fn shape_mismatch_panics() {
+        let workers = vec![vec![1.0f32; 3], vec![1.0f32; 4]];
+        let mut out = vec![0.0f32; 3];
+        allreduce_mean(&workers, |w| w.as_slice(), &mut out);
+    }
+}

@@ -1,0 +1,55 @@
+//! The distributed-worker subsystem: simulated workers, collective
+//! operations over their state, and the 1-bit sign codec that makes
+//! sign-exchange methods cheap on the wire.
+//!
+//! # Worker lifecycle
+//!
+//! One [`Worker`] models one data-parallel rank of Algorithm 1. The
+//! trainer drives all of them through each outer round:
+//!
+//! ```text
+//!            Trainer::local_round  (Algorithm 1, lines 3-11, round t)
+//!   ┌───────────────────────────────────────────────────────────────┐
+//!   │ for each Worker i = 0..n:                                     │
+//!   │     params ← x_{t,0}                 (outer.local_start)      │
+//!   │     τ × { rng → sample batch                                  │
+//!   │           bundle.train_step          (PJRT fwd+bwd)           │
+//!   │           observe(loss, grads)       (loss acc + last_grad)   │
+//!   │           opt.step(params, grads)  } (base optimizer, γ_t,k)  │
+//!   │                                                               │
+//!   │ collectives::allreduce_mean(workers) → x̄_{t,τ}               │
+//!   │ SimClock charge: f32 payload, or packed-sign payload when the │
+//!   │     outer optimizer exchanges 1-bit votes (dist::codec)       │
+//!   │ outer.round(global, Δ_t)             (global sign-momentum)   │
+//!   │ take_mean_loss() per worker          (round's train loss)     │
+//!   └───────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Each worker's RNG is an independent substream of the run's root seed
+//! (`root.substream("worker", i)`), so fleets rebuilt from the same root
+//! are bit-identical and workers never share a stream — the
+//! seed-determinism property in `rust/tests/properties.rs` guards this.
+//!
+//! # Collective backends
+//!
+//! [`collectives`] reduces worker state with a [`collectives::Backend`]:
+//! `Sequential` is the bitwise reference; `Threaded` splits the *output*
+//! vector into contiguous chunks across scoped OS threads, computing
+//! every element with the identical worker-order arithmetic — so the two
+//! backends are bitwise identical by construction (property-tested in
+//! `rust/tests/collectives.rs`). `Backend::auto` picks threads only when
+//! the vector is large enough to amortize spawning.
+//!
+//! # Compression semantics
+//!
+//! [`codec`] packs sign vectors at 1 bit/coordinate (32× vs f32):
+//! the IEEE sign bit is kept (`+0 → +1`, `-0 → -1`), decoding always
+//! yields ±1. `codec::sign_allreduce_bytes` is the wire-cost model the
+//! [`crate::comm::SimClock`] charges for majority-vote exchanges.
+
+pub mod codec;
+pub mod collectives;
+mod worker;
+
+pub use collectives::Backend;
+pub use worker::Worker;

@@ -1,0 +1,141 @@
+//! One simulated data-parallel worker: local iterate, base-optimizer
+//! state, private RNG substream, and per-round loss bookkeeping.
+
+use crate::optim::{BaseOptConfig, BaseOptimizer};
+use crate::util::rng::Rng;
+
+/// The state of rank `i` in the simulated fleet. Fields are public:
+/// the trainer *is* the coordinator and manipulates workers directly
+/// (copying the round's start point in, stepping the base optimizer,
+/// borrowing `params` for the all-reduce).
+pub struct Worker {
+    /// Worker index i in 0..n (stable across the run; keys checkpoints).
+    pub id: usize,
+    /// Local iterate x^{(i)} as the flat f32[P] vector.
+    pub params: Vec<f32>,
+    /// Most recent local stochastic gradient — consumed by outer
+    /// optimizers that build momentum from per-worker gradients
+    /// (MV-sto-signSGD, Algorithm 6).
+    pub last_grad: Vec<f32>,
+    /// Private RNG substream for this worker's batch sampling.
+    pub rng: Rng,
+    /// Local base optimizer (AdamW / SGD / Lion / Sophia).
+    pub opt: Box<dyn BaseOptimizer>,
+    loss_acc: f64,
+    loss_n: u64,
+}
+
+impl Worker {
+    /// Build rank `id` over a `p`-dimensional parameter vector. The RNG
+    /// is derived as `root.substream("worker", id)`, so a fleet rebuilt
+    /// from the same root seed is bit-identical and distinct ranks get
+    /// disjoint streams.
+    pub fn new(id: usize, p: usize, base: &BaseOptConfig, root: &Rng) -> Worker {
+        Worker {
+            id,
+            params: vec![0.0; p],
+            last_grad: vec![0.0; p],
+            rng: root.substream("worker", id as u64),
+            opt: base.build(p),
+            loss_acc: 0.0,
+            loss_n: 0,
+        }
+    }
+
+    /// Parameter-vector dimension P.
+    pub fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Record one local step: accumulate the loss for this round's
+    /// report and stash the gradient for gradient-consuming outer
+    /// optimizers.
+    pub fn observe(&mut self, loss: f32, grads: &[f32]) {
+        self.loss_acc += loss as f64;
+        self.loss_n += 1;
+        self.last_grad.copy_from_slice(grads);
+    }
+
+    /// Mean loss over the steps observed since the previous call; NaN
+    /// when no step ran (e.g. a round this worker sat out). Resets the
+    /// accumulator.
+    pub fn take_mean_loss(&mut self) -> f64 {
+        if self.loss_n == 0 {
+            return f64::NAN;
+        }
+        let mean = self.loss_acc / self.loss_n as f64;
+        self.loss_acc = 0.0;
+        self.loss_n = 0;
+        mean
+    }
+
+    /// Clear optimizer state and loss bookkeeping (parameters are left
+    /// as-is; the trainer overwrites them at the next round start).
+    pub fn reset(&mut self) {
+        self.opt.reset();
+        self.loss_acc = 0.0;
+        self.loss_n = 0;
+        self.last_grad.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn worker(p: usize) -> Worker {
+        Worker::new(0, p, &BaseOptConfig::sgd_plain(), &Rng::new(7))
+    }
+
+    #[test]
+    fn new_worker_is_zeroed_with_right_dims() {
+        let w = worker(16);
+        assert_eq!(w.dim(), 16);
+        assert_eq!(w.params, vec![0.0; 16]);
+        assert_eq!(w.last_grad, vec![0.0; 16]);
+        assert_eq!(w.id, 0);
+    }
+
+    #[test]
+    fn mean_loss_accumulates_and_resets() {
+        let mut w = worker(4);
+        assert!(w.take_mean_loss().is_nan());
+        let g = vec![1.0f32; 4];
+        w.observe(2.0, &g);
+        w.observe(4.0, &g);
+        assert_eq!(w.take_mean_loss(), 3.0);
+        assert!(w.take_mean_loss().is_nan(), "second take must see a reset accumulator");
+    }
+
+    #[test]
+    fn observe_stashes_last_grad() {
+        let mut w = worker(3);
+        w.observe(1.0, &[1.0, -2.0, 3.0]);
+        w.observe(1.0, &[4.0, 5.0, 6.0]);
+        assert_eq!(w.last_grad, vec![4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn workers_get_disjoint_deterministic_rng_substreams() {
+        let root = Rng::new(42);
+        let base = BaseOptConfig::sgd_plain();
+        let mut a0 = Worker::new(0, 4, &base, &root);
+        let mut a0b = Worker::new(0, 4, &base, &root);
+        let mut a1 = Worker::new(1, 4, &base, &root);
+        let draw = |w: &mut Worker| -> Vec<u64> { (0..4).map(|_| w.rng.next_u64()).collect() };
+        let s0 = draw(&mut a0);
+        assert_eq!(s0, draw(&mut a0b), "same (root, id) must give the same stream");
+        assert_ne!(s0, draw(&mut a1), "different ids must give different streams");
+    }
+
+    #[test]
+    fn reset_clears_state_but_not_params() {
+        let mut w = worker(2);
+        w.params.copy_from_slice(&[5.0, 6.0]);
+        w.observe(1.0, &[1.0, 1.0]);
+        w.reset();
+        assert_eq!(w.params, vec![5.0, 6.0]);
+        assert_eq!(w.last_grad, vec![0.0, 0.0]);
+        assert!(w.take_mean_loss().is_nan());
+    }
+}

@@ -219,8 +219,15 @@ pub fn table2(h: &Harness) -> Result<()> {
                 WORKERS,
                 adamw(),
             ))?;
-            let alg1 =
-                h.run(cell(h, preset, Algo::Alg1 { eta: ETA_ALG1 }, tau, budget, WORKERS, adamw()))?;
+            let alg1 = h.run(cell(
+                h,
+                preset,
+                Algo::Alg1 { eta: ETA_ALG1 },
+                tau,
+                budget,
+                WORKERS,
+                adamw(),
+            ))?;
             table.row(vec![
                 "SlowMo".into(),
                 format!("{tau}x"),
@@ -258,7 +265,8 @@ pub fn fig5(h: &Harness) -> Result<()> {
             WORKERS,
             adamw(),
         ))?;
-        let alg1 = h.run(cell(h, preset, Algo::Alg1 { eta: ETA_ALG1 }, 24, budget, WORKERS, adamw()))?;
+        let alg1 =
+            h.run(cell(h, preset, Algo::Alg1 { eta: ETA_ALG1 }, 24, budget, WORKERS, adamw()))?;
         let curves = vec![
             ("AdamW", adamw_run.log.val_curve(Axis::LocalSteps)),
             ("SlowMo", slowmo.log.val_curve(Axis::LocalSteps)),
@@ -289,7 +297,8 @@ pub fn fig3(h: &Harness) -> Result<()> {
             WORKERS,
             adamw(),
         ))?;
-        let alg1 = h.run(cell(h, preset, Algo::Alg1 { eta: ETA_ALG1 }, tau, budget, WORKERS, adamw()))?;
+        let alg1 =
+            h.run(cell(h, preset, Algo::Alg1 { eta: ETA_ALG1 }, tau, budget, WORKERS, adamw()))?;
         let curves = vec![
             ("Local AdamW", local.log.val_curve(Axis::LocalSteps)),
             ("SlowMo", slowmo.log.val_curve(Axis::LocalSteps)),
@@ -423,7 +432,8 @@ pub fn table6(h: &Harness) -> Result<()> {
     let mut t = Table::new(&["Alg.", "beta", "Val.", "Improv. vs SlowMo"]);
     t.row(vec!["AdamW".into(), "N.A.".into(), format!("{:.4}", adamw_run.final_val), "".into()]);
     t.row(vec!["SlowMo".into(), "0.5".into(), format!("{:.4}", slowmo.final_val), "".into()]);
-    let mut text = format!("Table 6: signed SlowMo and Global AdamW ablations ({label}, tau=12)\n\n");
+    let mut text =
+        format!("Table 6: signed SlowMo and Global AdamW ablations ({label}, tau=12)\n\n");
     for beta in [0.5f32, 0.8] {
         let ss = h.run(cell(
             h,
@@ -441,7 +451,15 @@ pub fn table6(h: &Harness) -> Result<()> {
             format!("{:+.2}%", ppl_improvement(slowmo.final_val, ss.final_val)),
         ]);
     }
-    let ga = h.run(cell(h, preset, Algo::GlobalAdamW { eta: ETA_GLOBAL_ADAMW }, 12, budget, WORKERS, adamw()))?;
+    let ga = h.run(cell(
+        h,
+        preset,
+        Algo::GlobalAdamW { eta: ETA_GLOBAL_ADAMW },
+        12,
+        budget,
+        WORKERS,
+        adamw(),
+    ))?;
     t.row(vec![
         "Global AdamW".into(),
         "N.A.".into(),

@@ -126,11 +126,16 @@ pub fn run(h: &Harness) -> Result<()> {
                 };
                 acc += run_sign_momentum(&problem, &spec).final_loss;
             }
-            t.row(vec![format!("{n}"), format!("{tau}"), format!("{:.3}", acc / seeds.len() as f64)]);
+            t.row(vec![
+                format!("{n}"),
+                format!("{tau}"),
+                format!("{:.3}", acc / seeds.len() as f64),
+            ]);
         }
         text.push_str(&format!(
             "Speedup check (sigma = 6 noise-dominated quadratic, T = {rounds}, gamma = 0.05):\n\
-             Thm 3's sigma-term sigma*sqrt(d/(tau*n)) predicts progress improves in BOTH n and tau.\n{}\n",
+             Thm 3's sigma-term sigma*sqrt(d/(tau*n)) predicts progress improves in BOTH n \
+             and tau.\n{}\n",
             t.render()
         ));
     }

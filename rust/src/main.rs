@@ -23,8 +23,16 @@ use dsm::train::checkpoint::Checkpoint;
 use dsm::train::Trainer;
 use dsm::util::cli::Args;
 
-const BOOL_FLAGS: &[&str] =
-    &["verbose", "no-cache", "big", "pallas-global-step", "quiet", "nesterov", "signed", "heterogeneous"];
+const BOOL_FLAGS: &[&str] = &[
+    "verbose",
+    "no-cache",
+    "big",
+    "pallas-global-step",
+    "quiet",
+    "nesterov",
+    "signed",
+    "heterogeneous",
+];
 
 const USAGE: &str = "\
 repro — Distributed Sign Momentum (Yu et al. 2024) training system

@@ -108,7 +108,10 @@ mod tests {
 
     #[test]
     fn config_names() {
-        assert_eq!(OuterConfig::Lookahead { eta: 1.0, beta: 0.1, signed: false }.build(1).name(), "lookahead");
-        assert_eq!(OuterConfig::Lookahead { eta: 1.0, beta: 0.1, signed: true }.build(1).name(), "signed_lookahead");
+        let name = |signed: bool| {
+            OuterConfig::Lookahead { eta: 1.0, beta: 0.1, signed }.build(1).name()
+        };
+        assert_eq!(name(false), "lookahead");
+        assert_eq!(name(true), "signed_lookahead");
     }
 }

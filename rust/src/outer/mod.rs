@@ -66,6 +66,15 @@ pub trait OuterOptimizer: Send {
 
     fn name(&self) -> &'static str;
 
+    /// True when this optimizer's round exchange is 1-bit sign traffic
+    /// (worker→server majority-vote votes, Algorithm 6) rather than
+    /// full-precision parameters. The trainer then charges the packed
+    /// wire cost ([`crate::comm::SimClock::charge_sign_allreduce`],
+    /// backed by [`crate::dist::codec`]) instead of 4 bytes per f32.
+    fn sign_compressed_comm(&self) -> bool {
+        false
+    }
+
     /// Flat state buffers for checkpointing.
     fn state(&self) -> Vec<&[f32]>;
     fn load_state(&mut self, bufs: &[Vec<f32>]);
@@ -76,7 +85,14 @@ pub trait OuterOptimizer: Send {
 #[derive(Clone, Debug, PartialEq)]
 pub enum OuterConfig {
     /// Algorithm 1 with Lion-recommended defaults (§4: β1=0.95, β2=0.98, λ=0.1).
-    SignMomentum { eta: f32, beta1: f32, beta2: f32, weight_decay: f32, sign_op: SignOp, sign_bound: f32 },
+    SignMomentum {
+        eta: f32,
+        beta1: f32,
+        beta2: f32,
+        weight_decay: f32,
+        sign_op: SignOp,
+        sign_bound: f32,
+    },
     SlowMo { alpha: f32, beta: f32 },
     SignedSlowMo { eta: f32, beta: f32 },
     /// β1=β2=β, λ=0, unsigned update (Table 4) or signed (Table 5).
@@ -105,7 +121,15 @@ impl OuterConfig {
     pub fn build(&self, dim: usize) -> Box<dyn OuterOptimizer> {
         match *self {
             OuterConfig::SignMomentum { eta, beta1, beta2, weight_decay, sign_op, sign_bound } => {
-                Box::new(SignMomentum::new(dim, eta, beta1, beta2, weight_decay, sign_op, sign_bound))
+                Box::new(SignMomentum::new(
+                    dim,
+                    eta,
+                    beta1,
+                    beta2,
+                    weight_decay,
+                    sign_op,
+                    sign_bound,
+                ))
             }
             OuterConfig::SlowMo { alpha, beta } => Box::new(SlowMo::new(dim, alpha, beta)),
             OuterConfig::SignedSlowMo { eta, beta } => Box::new(SignedSlowMo::new(dim, eta, beta)),
@@ -223,7 +247,13 @@ mod tests {
             OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
             OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: false },
             OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: true },
-            OuterConfig::GlobalAdamW { eta: 1.0, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0 },
+            OuterConfig::GlobalAdamW {
+                eta: 1.0,
+                beta1: 0.9,
+                beta2: 0.95,
+                eps: 1e-8,
+                weight_decay: 0.0,
+            },
             OuterConfig::LocalAvg,
             // bound == |pseudo-grad| makes the randomized vote deterministic
             // here (a single synthetic worker would otherwise coin-flip —
@@ -277,7 +307,13 @@ mod tests {
             OuterConfig::sign_momentum_paper(1.0),
             OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
             OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
-            OuterConfig::GlobalAdamW { eta: 1.0, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.0 },
+            OuterConfig::GlobalAdamW {
+                eta: 1.0,
+                beta1: 0.9,
+                beta2: 0.95,
+                eps: 1e-8,
+                weight_decay: 0.0,
+            },
         ] {
             let mut a = cfg.build(8);
             let mut b = cfg.build(8);

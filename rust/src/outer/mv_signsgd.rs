@@ -88,6 +88,13 @@ impl OuterOptimizer for MvSignSgd {
         "mv_signsgd"
     }
 
+    /// Algorithm 6's worker→server traffic is the randomized sign votes
+    /// — 1 bit per coordinate on the wire (Remark 1), so the simulated
+    /// clock charges the packed payload instead of f32 parameters.
+    fn sign_compressed_comm(&self) -> bool {
+        true
+    }
+
     fn state(&self) -> Vec<&[f32]> {
         let mut out: Vec<&[f32]> = vec![&self.x_prev];
         for m in &self.m {
@@ -171,6 +178,15 @@ mod tests {
         let mut rng = Rng::new(7);
         opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
         assert_eq!(global[0], -0.1);
+    }
+
+    #[test]
+    fn reports_sign_compressed_communication() {
+        let opt = MvSignSgd::new(4, 0.1, 0.9, 0.1, 10.0);
+        assert!(opt.sign_compressed_comm());
+        // the default for every other outer optimizer is full-precision
+        let sm = crate::outer::OuterConfig::sign_momentum_paper(1.0).build(4);
+        assert!(!sm.sign_compressed_comm());
     }
 
     #[test]

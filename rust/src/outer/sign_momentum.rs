@@ -71,7 +71,8 @@ impl OuterOptimizer for SignMomentum {
         assert_eq!(ctx.start.len(), p);
         assert_eq!(self.m.len(), p);
         let inv_gamma = 1.0 / ctx.gamma;
-        let (b1, b2, eta, lam, g) = (self.beta1, self.beta2, self.eta, self.weight_decay, ctx.gamma);
+        let (b1, b2, eta, lam, g) =
+            (self.beta1, self.beta2, self.eta, self.weight_decay, ctx.gamma);
 
         match self.sign_op {
             SignOp::Exact => {

@@ -200,7 +200,8 @@ mod tests {
     fn loglog_slope_recovers_powers() {
         let pts: Vec<(f64, f64)> = (1..20).map(|i| (i as f64, (i as f64).powf(-0.5))).collect();
         assert!((loglog_slope(&pts) + 0.5).abs() < 1e-9);
-        let pts: Vec<(f64, f64)> = (1..20).map(|i| (i as f64, 3.0 * (i as f64).powf(-0.25))).collect();
+        let pts: Vec<(f64, f64)> =
+            (1..20).map(|i| (i as f64, 3.0 * (i as f64).powf(-0.25))).collect();
         assert!((loglog_slope(&pts) + 0.25).abs() < 1e-9);
     }
 }

@@ -134,14 +134,21 @@ impl Axis {
 
 /// Render a compact ASCII chart of (x, y) curves — the harness's stand-in
 /// for the paper's matplotlib figures.
-pub fn ascii_chart(title: &str, curves: &[(&str, Vec<(f64, f64)>)], width: usize, height: usize) -> String {
+pub fn ascii_chart(
+    title: &str,
+    curves: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
     let mut all: Vec<(f64, f64)> = curves.iter().flat_map(|(_, c)| c.iter().copied()).collect();
     all.retain(|(x, y)| x.is_finite() && y.is_finite());
     if all.is_empty() {
         return format!("{title}\n(no data)\n");
     }
-    let (xmin, xmax) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &(x, _)| (lo.min(x), hi.max(x)));
-    let (ymin, ymax) = all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &(_, y)| (lo.min(y), hi.max(y)));
+    let (xmin, xmax) =
+        all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &(x, _)| (lo.min(x), hi.max(x)));
+    let (ymin, ymax) =
+        all.iter().fold((f64::MAX, f64::MIN), |(lo, hi), &(_, y)| (lo.min(y), hi.max(y)));
     let yspan = (ymax - ymin).max(1e-12);
     let xspan = (xmax - xmin).max(1e-12);
     let mut grid = vec![vec![b' '; width]; height];

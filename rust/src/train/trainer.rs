@@ -261,11 +261,16 @@ impl Trainer {
         }
         self.local_step += tau as u64;
 
-        // all-reduce: exact average + modeled cost of moving P f32s
+        // all-reduce: exact average + modeled cost of the exchange —
+        // P f32s, or the packed 1-bit payload for sign-vote methods
         let mut avg_end = vec![0.0f32; p];
         collectives::allreduce_mean(&self.workers, |w| w.params.as_slice(), &mut avg_end);
         self.clock.charge_parallel_compute(&per_worker_secs);
-        self.clock.charge_allreduce(&self.cfg.comm, n, info.param_bytes(), &mut self.rng);
+        if self.outer.sign_compressed_comm() {
+            self.clock.charge_sign_allreduce(&self.cfg.comm, n, p, &mut self.rng);
+        } else {
+            self.clock.charge_allreduce(&self.cfg.comm, n, info.param_bytes(), &mut self.rng);
+        }
 
         // global step
         if let Some((kernel, st)) = &mut self.pallas_step {

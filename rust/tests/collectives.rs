@@ -1,0 +1,170 @@
+//! Property tests for the `dist` collectives backends and the 1-bit
+//! sign codec (same in-tree randomized-property style as properties.rs;
+//! proptest is unavailable offline).
+//!
+//! The headline invariant is the acceptance criterion of the subsystem:
+//! the threaded chunked-reduction backend must be **bitwise identical**
+//! to the sequential reference for any (n, P, thread-count).
+
+use dsm::dist::codec;
+use dsm::dist::collectives::{self, Backend};
+use dsm::tensor;
+use dsm::util::rng::Rng;
+
+/// Mini property harness: run `f` on `cases` random inputs.
+fn forall<F: FnMut(u64, &mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0xC011_EC71 ^ case);
+        f(case, &mut rng);
+    }
+    let _ = name;
+}
+
+fn random_fleet(rng: &mut Rng, n: usize, p: usize, std: f32) -> Vec<Vec<f32>> {
+    (0..n)
+        .map(|_| {
+            let mut v = vec![0.0f32; p];
+            rng.fill_normal(&mut v, std);
+            v
+        })
+        .collect()
+}
+
+#[test]
+fn prop_threaded_allreduce_is_bitwise_identical_to_sequential() {
+    forall("allreduce-backends", 25, |case, rng| {
+        let p = 1 + rng.below(10_000) as usize;
+        let n = 1 + rng.below(8) as usize;
+        let workers = random_fleet(rng, n, p, 3.0);
+        let mut seq = vec![0.0f32; p];
+        collectives::allreduce_mean_with(Backend::Sequential, &workers, |w| w.as_slice(), &mut seq);
+        for threads in [1usize, 2, 3, 5, 16] {
+            let backend = Backend::Threaded { threads };
+            let mut thr = vec![0.0f32; p];
+            collectives::allreduce_mean_with(backend, &workers, |w| w.as_slice(), &mut thr);
+            for j in 0..p {
+                assert_eq!(
+                    seq[j].to_bits(),
+                    thr[j].to_bits(),
+                    "case {case}: coord {j} differs with {threads} threads (n={n}, P={p})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_auto_backend_matches_sequential_above_parallel_threshold() {
+    // Large enough that Backend::auto goes threaded on multi-core hosts,
+    // deliberately not a multiple of any chunk size.
+    let p = (1 << 17) + 13;
+    let mut rng = Rng::new(1234);
+    let workers = random_fleet(&mut rng, 4, p, 1.0);
+    let mut seq = vec![0.0f32; p];
+    let mut auto = vec![0.0f32; p];
+    collectives::allreduce_mean_with(Backend::Sequential, &workers, |w| w.as_slice(), &mut seq);
+    collectives::allreduce_mean(&workers, |w| w.as_slice(), &mut auto);
+    assert!(
+        seq.iter().zip(&auto).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "auto backend must be bitwise-equal to the sequential reference"
+    );
+}
+
+#[test]
+fn prop_threaded_majority_vote_matches_sequential() {
+    forall("vote-backends", 20, |case, rng| {
+        let p = 1 + rng.below(5_000) as usize;
+        let n = 1 + rng.below(9) as usize;
+        let votes: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..p).map(|_| *rng.choose(&[-1.0f32, 0.0, 1.0])).collect())
+            .collect();
+        let mut seq = vec![0.0f32; p];
+        collectives::majority_vote_with(Backend::Sequential, &votes, &mut seq);
+        for threads in [2usize, 4, 11] {
+            let mut thr = vec![0.0f32; p];
+            collectives::majority_vote_with(Backend::Threaded { threads }, &votes, &mut thr);
+            assert_eq!(seq, thr, "case {case}: threads={threads}");
+        }
+    });
+}
+
+#[test]
+fn prop_majority_vote_is_pm_one_and_follows_the_tally() {
+    forall("vote-semantics", 30, |case, rng| {
+        let p = 1 + rng.below(500) as usize;
+        let n = 1 + rng.below(8) as usize;
+        let votes = random_fleet(rng, n, p, 1.0);
+        let mut out = vec![0.0f32; p];
+        collectives::majority_vote(&votes, &mut out);
+        for j in 0..p {
+            assert!(out[j] == 1.0 || out[j] == -1.0, "case {case}: coord {j} = {}", out[j]);
+            let tally: i64 = votes.iter().map(|v| tensor::sign_f32(v[j]) as i64).sum();
+            // documented tie behavior: zero tallies resolve to +1
+            let expect = if tally >= 0 { 1.0 } else { -1.0 };
+            assert_eq!(out[j], expect, "case {case}: coord {j}, tally {tally}");
+        }
+    });
+}
+
+#[test]
+fn majority_vote_tie_cases_resolve_positive() {
+    // exact tie between one +1 and one -1, and an all-zero column
+    let votes = vec![vec![1.0f32, 0.0], vec![-1.0f32, 0.0]];
+    let mut out = vec![0.0f32; 2];
+    collectives::majority_vote(&votes, &mut out);
+    assert_eq!(out, vec![1.0, 1.0]);
+}
+
+#[test]
+fn prop_sign_codec_roundtrips_every_pattern_including_zeros() {
+    forall("codec-roundtrip", 40, |case, rng| {
+        let p = rng.below(2_000) as usize;
+        // arbitrary floats with exact zeros (and negative zeros) mixed in
+        let v: Vec<f32> = (0..p)
+            .map(|_| match rng.below(5) {
+                0 => 0.0,
+                1 => -0.0,
+                _ => rng.normal_f32(0.0, 2.0),
+            })
+            .collect();
+        let packed = codec::pack_signs(&v);
+        assert_eq!(packed.len(), codec::packed_len(p), "case {case}");
+        let back = codec::unpack_signs(&packed, p);
+        for (j, (&x, &b)) in v.iter().zip(&back).enumerate() {
+            assert_eq!(b, 1.0f32.copysign(x), "case {case}: coord {j} (input {x})");
+        }
+        // pure ±1 sign patterns round-trip exactly
+        let signs: Vec<f32> = v.iter().map(|&x| 1.0f32.copysign(x)).collect();
+        assert_eq!(codec::unpack_signs(&codec::pack_signs(&signs), p), signs, "case {case}");
+    });
+}
+
+#[test]
+fn prop_codec_compresses_32x_modulo_rounding() {
+    forall("codec-size", 20, |case, rng| {
+        let p = 1 + rng.below(100_000) as usize;
+        let packed = codec::packed_len(p);
+        assert!(packed * 8 >= p, "case {case}");
+        assert!(packed * 8 < p + 8, "case {case}");
+        assert_eq!(codec::sign_allreduce_bytes(p), packed as u64 + codec::HEADER_BYTES);
+    });
+}
+
+#[test]
+fn prop_allreduce_backends_agree_with_plain_mean() {
+    forall("allreduce-oracle", 20, |case, rng| {
+        let p = 1 + rng.below(300) as usize;
+        let n = 1 + rng.below(6) as usize;
+        let workers = random_fleet(rng, n, p, 5.0);
+        let mut out = vec![0.0f32; p];
+        collectives::allreduce_mean(&workers, |w| w.as_slice(), &mut out);
+        for j in 0..p {
+            let mean: f64 = workers.iter().map(|w| w[j] as f64).sum::<f64>() / n as f64;
+            assert!(
+                (out[j] as f64 - mean).abs() <= 1e-6 * mean.abs().max(1.0),
+                "case {case}: coord {j}: {} vs {mean}",
+                out[j]
+            );
+        }
+    });
+}

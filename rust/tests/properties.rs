@@ -6,6 +6,8 @@
 use dsm::data::corpus::{generate, CorpusConfig};
 use dsm::data::dataset::TokenDataset;
 use dsm::data::{Bpe, ByteTokenizer, Tokenizer};
+use dsm::dist::Worker;
+use dsm::optim::BaseOptConfig;
 use dsm::outer::{run_synthetic_round, OuterConfig};
 use dsm::sign::SignOp;
 use dsm::tensor;
@@ -216,6 +218,66 @@ fn prop_allreduce_mean_bounds_and_permutation_invariance() {
         let mut out2 = vec![0.0f32; d];
         dsm::dist::collectives::allreduce_mean(&workers, |w| w.as_slice(), &mut out2);
         assert!(tensor::max_abs_diff(&out, &out2) < 1e-5, "case {case}");
+    });
+}
+
+/// Seed determinism across the dist::Worker substream plumbing the
+/// trainer relies on: two fleets built from the same root `Rng` must
+/// produce bit-identical parameters after identical observe/step
+/// sequences, while distinct ranks draw distinct data streams.
+#[test]
+fn prop_worker_fleets_from_same_root_rng_are_identical() {
+    forall("worker-determinism", 12, |case, rng| {
+        let p = 4 + rng.below(200) as usize;
+        let n = 1 + rng.below(6) as usize;
+        let seed = rng.next_u64();
+        let base = rng
+            .choose(&[
+                BaseOptConfig::sgd_plain(),
+                BaseOptConfig::Sgd { momentum: 0.9, nesterov: true, weight_decay: 0.01 },
+                BaseOptConfig::adamw_paper(),
+                BaseOptConfig::lion_paper(),
+            ])
+            .clone();
+        let root_a = Rng::new(seed);
+        let root_b = Rng::new(seed);
+        let mut fleet_a: Vec<Worker> =
+            (0..n).map(|i| Worker::new(i, p, &base, &root_a)).collect();
+        let mut fleet_b: Vec<Worker> =
+            (0..n).map(|i| Worker::new(i, p, &base, &root_b)).collect();
+
+        for step in 0..5 {
+            for w in 0..n {
+                // each worker synthesizes its "gradient" from its own
+                // substream — exactly how the trainer's data sampling
+                // consumes worker RNGs
+                let mut ga = vec![0.0f32; p];
+                let mut gb = vec![0.0f32; p];
+                fleet_a[w].rng.fill_normal(&mut ga, 0.5);
+                fleet_b[w].rng.fill_normal(&mut gb, 0.5);
+                assert_eq!(ga, gb, "case {case}: substreams diverged at step {step}");
+                let lr = 1e-2 / (1.0 + step as f32);
+                let wa = &mut fleet_a[w];
+                wa.observe(1.5, &ga);
+                wa.opt.step(&mut wa.params, &ga, lr);
+                let wb = &mut fleet_b[w];
+                wb.observe(1.5, &gb);
+                wb.opt.step(&mut wb.params, &gb, lr);
+            }
+        }
+
+        for (wa, wb) in fleet_a.iter_mut().zip(fleet_b.iter_mut()) {
+            assert_eq!(wa.params, wb.params, "case {case}: worker {} params", wa.id);
+            assert_eq!(wa.last_grad, wb.last_grad, "case {case}: worker {}", wa.id);
+            let (la, lb) = (wa.take_mean_loss(), wb.take_mean_loss());
+            assert_eq!(la.to_bits(), lb.to_bits(), "case {case}: worker {}", wa.id);
+        }
+        if n >= 2 {
+            assert_ne!(
+                fleet_a[0].params, fleet_a[1].params,
+                "case {case}: distinct ranks must see distinct data"
+            );
+        }
     });
 }
 

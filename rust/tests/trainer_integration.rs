@@ -52,7 +52,13 @@ fn every_outer_optimizer_trains_and_reduces_loss() {
         OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
         OuterConfig::SignedSlowMo { eta: 0.01, beta: 0.5 },
         OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: false },
-        OuterConfig::GlobalAdamW { eta: 1e-3, beta1: 0.9, beta2: 0.95, eps: 1e-8, weight_decay: 0.1 },
+        OuterConfig::GlobalAdamW {
+            eta: 1e-3,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+        },
         OuterConfig::LocalAvg,
         OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 },
     ] {

@@ -1,0 +1,201 @@
+//! In-tree minimal substitute for the `anyhow` crate (crates.io is
+//! unreachable in this build environment, so the workspace vendors the
+//! exact surface it uses — nothing more):
+//!
+//! * [`Error`] — a message-chain error type; like the real `anyhow::Error`
+//!   it deliberately does **not** implement `std::error::Error`, which is
+//!   what makes the blanket `From<E: std::error::Error>` impl coherent.
+//! * [`Result`] — `Result<T, Error>` with the `E` parameter defaulted.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — the construction macros.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on any
+//!   `Result<T, E>` whose error converts into [`Error`].
+//!
+//! Formatting matches the shapes callers rely on: `{e}` prints the
+//! outermost message, `{e:#}` prints the full chain joined by `": "`,
+//! and `{e:?}` prints the anyhow-style "Caused by:" report.
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A chain of error messages, outermost context first, root cause last.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: std::fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: std::fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The messages in the chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root-cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().expect("error chain is never empty")
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Coherent for the same reason the real anyhow's impl is: `Error` itself
+// does not implement `std::error::Error`, so this blanket impl cannot
+// overlap with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// Attach context to the error branch of a `Result`.
+pub trait Context<T, E>: Sized {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for std::result::Result<T, E> {
+    fn context<C: std::fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: std::fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string (with inline captures), a
+/// format string plus arguments, or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`] built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(concat!(
+                "condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing")
+    }
+
+    #[test]
+    fn msg_and_macro_forms() {
+        let x = 3;
+        assert_eq!(anyhow!("plain").to_string(), "plain");
+        assert_eq!(anyhow!("x = {x}").to_string(), "x = 3");
+        assert_eq!(anyhow!("x = {}", x + 1).to_string(), "x = 4");
+        assert_eq!(anyhow!(String::from("owned")).to_string(), "owned");
+        assert_eq!(Error::msg("direct").to_string(), "direct");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = f().unwrap_err();
+        assert_eq!(e.to_string(), "missing");
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| "reading config").unwrap_err();
+        assert_eq!(e.to_string(), "reading config");
+        assert_eq!(format!("{e:#}"), "reading config: missing");
+        assert!(format!("{e:?}").contains("Caused by:"));
+        assert_eq!(e.root_cause(), "missing");
+        // context also applies to Result<_, Error>
+        let r2: Result<()> = Err(e);
+        let e2 = r2.context("loading run").unwrap_err();
+        assert_eq!(e2.chain().count(), 3);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(v: usize) -> Result<usize> {
+            ensure!(v > 1);
+            ensure!(v > 2, "v too small: {v}");
+            if v > 100 {
+                bail!("v too big: {}", v);
+            }
+            Ok(v)
+        }
+        assert_eq!(f(0).unwrap_err().to_string(), "condition failed: `v > 1`");
+        assert_eq!(f(2).unwrap_err().to_string(), "v too small: 2");
+        assert_eq!(f(101).unwrap_err().to_string(), "v too big: 101");
+        assert_eq!(f(3).unwrap(), 3);
+    }
+}

@@ -1,0 +1,273 @@
+//! In-tree API stub of the `xla` (xla_extension / PJRT) bindings.
+//!
+//! See README.md: host-side [`Literal`] plumbing is real; `compile` /
+//! `execute` report the backend as unavailable. The surface mirrors
+//! exactly what `dsm::runtime` consumes, so swapping in the real
+//! bindings is a Cargo.toml-only change.
+
+use std::path::Path;
+
+/// Error type; the real crate's error also only promises `Debug` at the
+/// `dsm` boundary (stringified by `runtime::anyhow_xla`).
+#[derive(Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl std::fmt::Debug for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Typed storage behind a [`Literal`]. Public only so the sealed
+/// [`NativeType`] trait can name it; not part of the stable surface.
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U32(Vec<u32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized + 'static {
+    #[doc(hidden)]
+    const NAME: &'static str;
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+macro_rules! native {
+    ($ty:ty, $variant:ident, $name:literal) => {
+        impl NativeType for $ty {
+            const NAME: &'static str = $name;
+            fn wrap(v: Vec<Self>) -> Data {
+                Data::$variant(v)
+            }
+            fn unwrap(d: &Data) -> Option<Vec<Self>> {
+                match d {
+                    Data::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+        }
+    };
+}
+
+native!(f32, F32, "f32");
+native!(i32, I32, "i32");
+native!(u32, U32, "u32");
+
+/// A host-side typed array (or tuple of arrays) with a shape.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal { data: Data::Tuple(parts), dims: vec![n] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::U32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret the shape; the element count must be preserved.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n != self.element_count() as i64 {
+            return Err(Error::new(format!(
+                "reshape: {} elements do not fit {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .ok_or_else(|| Error::new(format!("literal does not hold {} elements", T::NAME)))
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(t) => Ok(t),
+            _ => Err(Error::new("literal is not a tuple")),
+        }
+    }
+
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut t = self.to_tuple()?;
+        if t.len() != 1 {
+            return Err(Error::new(format!("expected a 1-tuple, got {} parts", t.len())));
+        }
+        Ok(t.pop().expect("length checked above"))
+    }
+}
+
+/// Parsed HLO module text (the real crate re-parses instruction ids; the
+/// stub just retains the text so errors can reference it).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(path: P) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .map_err(|e| Error::new(format!("{:?}: {e}", path.as_ref())))?;
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn from_text(text: &str) -> HloModuleProto {
+        HloModuleProto { text: text.to_string() }
+    }
+}
+
+/// An HLO computation ready for compilation.
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    hlo_text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { hlo_text: proto.text.clone() }
+    }
+}
+
+const BACKEND_UNAVAILABLE: &str = "xla stub: no PJRT backend in this build — swap in the real \
+     xla_extension bindings (see rust/vendor/xla/README.md) to compile/execute HLO";
+
+/// PJRT client handle. The stub client boots (so smoke tests and
+/// platform reporting work) but cannot compile programs.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _private: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu (xla stub, no PJRT backend)".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(BACKEND_UNAVAILABLE))
+    }
+}
+
+/// A compiled executable. Unconstructible through the stub (compile
+/// always errors), but the type and its API exist for the callers.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[T],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new(BACKEND_UNAVAILABLE))
+    }
+}
+
+/// A device buffer holding one execution output.
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_boots_with_platform_name() {
+        let c = PjRtClient::cpu().unwrap();
+        assert!(!c.platform_name().is_empty());
+    }
+
+    #[test]
+    fn literal_vec_roundtrip_per_type() {
+        let f = Literal::vec1(&[1.0f32, -2.0, 3.5]);
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.0, -2.0, 3.5]);
+        assert!(f.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[3i32, -4]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![3, -4]);
+        let s = Literal::scalar(7u32);
+        assert_eq!(s.to_vec::<u32>().unwrap(), vec![7]);
+        assert_eq!(s.dims(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn reshape_checks_element_count() {
+        let l = Literal::vec1(&[0i32; 6]);
+        let r = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(r.dims(), &[2, 3]);
+        assert_eq!(r.element_count(), 6);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_destructuring() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32)]);
+        let inner = t.clone().to_tuple1().unwrap();
+        assert_eq!(inner.to_vec::<f32>().unwrap(), vec![1.0]);
+        let two = Literal::tuple(vec![Literal::scalar(1i32), Literal::scalar(2i32)]);
+        assert!(two.clone().to_tuple1().is_err());
+        assert_eq!(two.to_tuple().unwrap().len(), 2);
+        assert!(Literal::scalar(0.0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn compile_reports_backend_unavailable() {
+        let c = PjRtClient::cpu().unwrap();
+        let comp = XlaComputation::from_proto(&HloModuleProto::from_text("HloModule m"));
+        let err = c.compile(&comp).unwrap_err();
+        assert!(format!("{err:?}").contains("xla stub"));
+    }
+}
