@@ -1,12 +1,15 @@
 //! Collective-arithmetic + comm-model benches: both reduction backends
-//! (sequential reference vs chunked threads), the packed-sign codec,
-//! and the analytic comm model.
+//! (sequential reference vs pooled threads, plus the historical
+//! spawn-per-call baseline), the packed-sign codec, the word-level
+//! packed majority tally vs the f32 vote, and the analytic comm model.
 //!
 //!     cargo bench --bench collectives
 
 use dsm::comm::CommModel;
 use dsm::dist::codec;
 use dsm::dist::collectives::{self, Backend};
+use dsm::dist::pool;
+use dsm::dist::votes::{self, PackedVotes};
 use dsm::util::bench::{black_box, Bencher};
 use dsm::util::rng::Rng;
 
@@ -73,13 +76,60 @@ fn main() {
         black_box(codec::unpack_signs(black_box(&packed), p));
     });
 
-    let votes: Vec<Vec<f32>> = (0..8)
-        .map(|i| (0..1 << 20).map(|j| if (i + j) % 3 == 0 { 1.0 } else { -1.0 }).collect())
-        .collect();
-    let mut out = vec![0.0f32; 1 << 20];
-    b.bench_with_bytes("majority_vote n=8 P=1M", Some(9 << 22), || {
-        collectives::majority_vote(black_box(&votes), &mut out)
-    });
+    println!("\n== packed tally vs f32 majority vote (n=8) ==");
+    let n_votes = 8usize;
+    for &p in &[1usize << 16, 1 << 20] {
+        let raw: Vec<Vec<f32>> = (0..n_votes)
+            .map(|i| (0..p).map(|j| if (i + j) % 3 == 0 { 1.0 } else { -1.0 }).collect())
+            .collect();
+        let packed: Vec<PackedVotes> =
+            raw.iter().map(|v| PackedVotes::pack(v)).collect();
+        let mut out = vec![0.0f32; p];
+        let f32_bytes = Some((n_votes as u64 + 1) * p as u64 * 4);
+        b.bench_with_bytes(&format!("majority_vote f32 n=8 P={p}"), f32_bytes, || {
+            collectives::majority_vote(black_box(&raw), &mut out)
+        });
+        // reads n packed payloads, writes P f32s
+        let packed_bytes = Some(n_votes as u64 * (p as u64 / 8) + p as u64 * 4);
+        b.bench_with_bytes(
+            &format!("majority_vote_packed n=8 P={p}"),
+            packed_bytes,
+            || votes::majority_vote_packed(black_box(&packed), &mut out),
+        );
+    }
+
+    println!("\n== persistent pool vs spawn-per-call (allreduce, 4 threads) ==");
+    for &p in &[1usize << 16, 1 << 20] {
+        let workers: Vec<Vec<f32>> = (0..8)
+            .map(|_| {
+                let mut v = vec![0.0f32; p];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let slices: Vec<&[f32]> = workers.iter().map(|w| w.as_slice()).collect();
+        let mut out = vec![0.0f32; p];
+        let bytes = Some(9 * p as u64 * 4);
+        // identical chunk body through both executors, so the delta is
+        // pure dispatch cost (pool hand-off vs per-call thread spawn)
+        let inv_n = 1.0f64 / slices.len() as f64;
+        let mean_body = |base: usize, chunk: &mut [f32]| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                let idx = base + j;
+                let mut acc = 0.0f64;
+                for s in black_box(&slices) {
+                    acc += s[idx] as f64;
+                }
+                *o = (acc * inv_n) as f32;
+            }
+        };
+        b.bench_with_bytes(&format!("allreduce pooled x4 P={p}"), bytes, || {
+            pool::run_chunked_mut(4, 1, &mut out, mean_body)
+        });
+        b.bench_with_bytes(&format!("allreduce spawned x4 P={p}"), bytes, || {
+            pool::run_chunked_mut_spawn(4, 1, &mut out, mean_body)
+        });
+    }
 
     println!("\n== comm model (analytic, ns-scale) ==");
     let m = CommModel::preset("ethernet").unwrap();

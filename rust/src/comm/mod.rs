@@ -138,7 +138,22 @@ impl SimClock {
         rng: &mut Rng,
     ) {
         let bytes = crate::dist::codec::sign_allreduce_bytes(n_params);
-        self.charge_allreduce(model, n, bytes, rng);
+        self.charge_vote_allreduce(model, n, bytes, rng);
+    }
+
+    /// Charge a vote exchange whose per-message wire payload is
+    /// `wire_bytes` — the packed data path bills the byte count of the
+    /// [`crate::dist::PackedVotes`] buffers actually exchanged
+    /// ([`crate::dist::PackedVotes::wire_bytes`]), so accounting and
+    /// data path cannot drift apart.
+    pub fn charge_vote_allreduce(
+        &mut self,
+        model: &CommModel,
+        n: usize,
+        wire_bytes: u64,
+        rng: &mut Rng,
+    ) {
+        self.charge_allreduce(model, n, wire_bytes, rng);
     }
 
     /// Charge one all-reduce of `bytes` over `n` workers.

@@ -57,6 +57,11 @@ pub struct RunConfig {
     /// Non-IID data: each worker's shard is dominated by a different
     /// corpus source (the Theorem-2(b) heterogeneity regime).
     pub heterogeneous: bool,
+    /// Differential-testing hook: route sign-compressed outer
+    /// optimizers through the f32 `RoundCtx` reference path instead of
+    /// the packed 1-bit data path (wire accounting is unchanged; the
+    /// two paths are bitwise-identical by construction).
+    pub reference_votes: bool,
 }
 
 /// Peak local LR per preset, scaled-down analogue of the paper's Table 1.
@@ -96,6 +101,7 @@ impl RunConfig {
             tag: format!("{preset}-sign_momentum"),
             global_step_pallas: false,
             heterogeneous: false,
+            reference_votes: false,
         }
     }
 
@@ -201,6 +207,11 @@ impl RunConfig {
             || doc.get("heterogeneous").and_then(Json::as_bool).unwrap_or(false)
         {
             cfg.heterogeneous = true;
+        }
+        if args.has("reference-votes")
+            || doc.get("reference_votes").and_then(Json::as_bool).unwrap_or(false)
+        {
+            cfg.reference_votes = true;
         }
         if let Some(dir) = args.get("log-dir") {
             cfg.log_dir = Some(PathBuf::from(dir));

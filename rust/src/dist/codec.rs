@@ -17,6 +17,17 @@
 //! (a ±1 multiplied into the learning rate). Consequently
 //! `unpack_signs(pack_signs(v))[i] == copysign(1.0, v[i])`, and any
 //! vector already in {-1, +1} round-trips exactly.
+//!
+//! # Tally protocol
+//!
+//! The majority-vote exchange built on this format ([`super::votes`])
+//! is worker→server: each rank sends one packed payload, the server
+//! tallies set bits per coordinate directly on the packed words
+//! (never unpacking to f32) and decodes coordinate `i` to `+1` iff at
+//! least half the ranks set bit `i` — a tie has no zero symbol to fall
+//! back to, so it resolves to `+1`. Sign-compressed outer optimizers
+//! (`OuterOptimizer::sign_compressed_comm`) therefore use wire-tie
+//! semantics *everywhere*, including their in-memory reference paths.
 
 /// Fixed per-message framing overhead (element count as a u64), charged
 /// on top of the packed payload by [`sign_allreduce_bytes`].
@@ -24,7 +35,7 @@ pub const HEADER_BYTES: u64 = 8;
 
 /// Packed payload size for `n` sign coordinates: ⌈n / 8⌉ bytes.
 pub fn packed_len(n: usize) -> usize {
-    (n + 7) / 8
+    super::div_up(n, 8)
 }
 
 /// Total bytes one sign message of `n_params` coordinates puts on the

@@ -11,12 +11,14 @@
 //! Every element `out[j]` is computed by the same expression in both
 //! backends — accumulate `slices[0][j], slices[1][j], ...` in f64 in
 //! worker order, then scale — and the threaded backend only partitions
-//! the *output index range* across `std::thread::scope` threads. No
-//! reduction-tree reassociation happens, so `Sequential` and
-//! `Threaded { .. }` agree bit-for-bit for any thread count (property-
-//! tested in `rust/tests/collectives.rs`), and runs stay reproducible
-//! regardless of the host's core count.
+//! the *output index range* across the persistent worker pool
+//! ([`super::pool`]; the chunk→thread mapping is irrelevant to the
+//! result). No reduction-tree reassociation happens, so `Sequential`
+//! and `Threaded { .. }` agree bit-for-bit for any thread count
+//! (property-tested in `rust/tests/collectives.rs`), and runs stay
+//! reproducible regardless of the host's core count.
 
+use super::pool;
 use crate::tensor::sign_f32;
 
 /// How a collective executes on the host.
@@ -24,11 +26,11 @@ use crate::tensor::sign_f32;
 pub enum Backend {
     /// Single-threaded reference implementation.
     Sequential,
-    /// Split the output across up to `threads` scoped OS threads.
+    /// Split the output across up to `threads` pool workers.
     Threaded { threads: usize },
 }
 
-/// Below this output length the spawn overhead dominates any speedup.
+/// Below this output length the dispatch overhead dominates any speedup.
 const PARALLEL_THRESHOLD: usize = 1 << 16;
 
 impl Backend {
@@ -37,7 +39,7 @@ impl Backend {
     pub fn auto(len: usize) -> Backend {
         let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
         if len >= PARALLEL_THRESHOLD && cores > 1 {
-            Backend::Threaded { threads: cores.min(8) }
+            Backend::Threaded { threads: cores.min(pool::MAX_THREADS) }
         } else {
             Backend::Sequential
         }
@@ -45,26 +47,16 @@ impl Backend {
 }
 
 /// Run `body(base_index, chunk)` over `out`, either whole (sequential)
-/// or split into contiguous chunks across scoped threads.
+/// or split into contiguous chunks executed on the persistent pool.
 fn run_chunked<F>(backend: Backend, out: &mut [f32], body: F)
 where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     let threads = match backend {
         Backend::Sequential => 1,
-        Backend::Threaded { threads } => threads.clamp(1, out.len().max(1)),
+        Backend::Threaded { threads } => threads,
     };
-    if threads <= 1 || out.len() <= 1 {
-        body(0, out);
-        return;
-    }
-    let chunk = (out.len() + threads - 1) / threads;
-    let body = &body;
-    std::thread::scope(|scope| {
-        for (ci, window) in out.chunks_mut(chunk).enumerate() {
-            scope.spawn(move || body(ci * chunk, window));
-        }
-    });
+    pool::run_chunked_mut(threads, 1, out, body);
 }
 
 fn check_shapes(slices: &[&[f32]], out: &[f32]) {
@@ -117,9 +109,10 @@ pub fn allreduce_mean_slices(backend: Backend, slices: &[&[f32]], out: &mut [f32
 /// Each vote contributes `sign(v) ∈ {-1, 0, +1}` to the tally; the
 /// output is **always ±1** — a tied (or all-zero) coordinate resolves
 /// to **+1**, because the 1-bit wire format ([`super::codec`]) has no
-/// zero symbol. (Algorithm 6's in-memory reference keeps `sign(0) = 0`
-/// via [`crate::tensor::sign_f32`]; this collective models the decoded
-/// wire value.)
+/// zero symbol. Sign-compressed methods use these wire-tie semantics
+/// everywhere — Algorithm 6's in-memory reference path routes through
+/// the same packed tally ([`super::votes`]), so it never sits still on
+/// a zero tally either.
 pub fn majority_vote<V: AsRef<[f32]>>(votes: &[V], out: &mut [f32]) {
     majority_vote_with(Backend::auto(out.len()), votes, out)
 }

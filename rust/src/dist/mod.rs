@@ -34,22 +34,40 @@
 //!
 //! [`collectives`] reduces worker state with a [`collectives::Backend`]:
 //! `Sequential` is the bitwise reference; `Threaded` splits the *output*
-//! vector into contiguous chunks across scoped OS threads, computing
+//! vector into contiguous chunks executed on the persistent worker pool
+//! ([`pool`], created lazily, reused for every collective), computing
 //! every element with the identical worker-order arithmetic — so the two
 //! backends are bitwise identical by construction (property-tested in
 //! `rust/tests/collectives.rs`). `Backend::auto` picks threads only when
-//! the vector is large enough to amortize spawning.
+//! the vector is large enough to amortize the dispatch.
 //!
-//! # Compression semantics
+//! # The 1-bit vote wire
 //!
-//! [`codec`] packs sign vectors at 1 bit/coordinate (32× vs f32):
-//! the IEEE sign bit is kept (`+0 → +1`, `-0 → -1`), decoding always
-//! yields ±1. `codec::sign_allreduce_bytes` is the wire-cost model the
-//! [`crate::comm::SimClock`] charges for majority-vote exchanges.
+//! [`codec`] defines the wire format: sign vectors pack at
+//! 1 bit/coordinate (32× vs f32), the IEEE sign bit is kept
+//! (`+0 → +1`, `-0 → -1`), and decoding always yields ±1 — the wire has
+//! no zero symbol, so a tied majority tally resolves to +1 everywhere.
+//! [`votes`] is the *data path* over that format: workers produce
+//! [`PackedVotes`] and the server runs [`votes::majority_vote_packed`],
+//! a word-level popcount tally that never unpacks to f32 and is
+//! bitwise-identical to [`collectives::majority_vote`] over the decoded
+//! votes (property-tested in `rust/tests/packed_vote.rs`).
+//! `codec::sign_allreduce_bytes` remains the wire-cost model the
+//! [`crate::comm::SimClock`] charges for these exchanges, and on the
+//! packed path it is exactly the byte count of the buffers exchanged.
 
 pub mod codec;
 pub mod collectives;
+pub mod pool;
+pub mod votes;
 mod worker;
 
 pub use collectives::Backend;
+pub use votes::PackedVotes;
 pub use worker::Worker;
+
+/// Ceiling division shared by the wire codec and the pool chunking
+/// (spelled out to stay lint- and MSRV-friendly).
+pub(crate) fn div_up(a: usize, b: usize) -> usize {
+    a / b + usize::from(a % b != 0)
+}

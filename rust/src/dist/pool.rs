@@ -1,0 +1,343 @@
+//! Persistent worker pool backing the threaded collective backend.
+//!
+//! `Backend::Threaded` originally spawned fresh OS threads through
+//! `std::thread::scope` on every collective call; at P = 2^20+ with
+//! several collectives per outer round the per-call spawn cost is a
+//! measurable fraction of the reduction itself (ROADMAP follow-up (c)).
+//! This module keeps a process-wide set of parked helper threads,
+//! created lazily on the first threaded collective and reused for every
+//! subsequent call: [`run_chunked_mut`] splits the output slice into
+//! contiguous chunks and executes them on the pool, with the calling
+//! thread participating — a `threads = k` request uses up to `k - 1`
+//! helpers plus the caller.
+//!
+//! # Determinism
+//!
+//! The pool decides only *which OS thread* executes a chunk. Chunk
+//! boundaries are a pure function of `(len, threads, align)` and every
+//! chunk's arithmetic is fixed by the caller, so results are bitwise
+//! independent of scheduling — the same contract the spawn-per-call
+//! implementation (kept as [`run_chunked_mut_spawn`], the benchmark
+//! baseline) provided.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+use super::div_up;
+
+/// Hard cap on pool parallelism: the collectives are memory-bound and
+/// show no win past this many threads. `Backend::auto` references this
+/// same constant so the auto backend never requests more threads than
+/// the pool can serve.
+pub const MAX_THREADS: usize = 8;
+
+/// One in-flight pool job. Every helper that pops a copy pulls chunk
+/// indices from `next` until exhausted, then reports through `pending`.
+struct Shared {
+    /// Chunk runner with the caller's borrow lifetime erased.
+    /// [`ThreadPool::run`] blocks until `pending` reaches zero, which
+    /// keeps the underlying closure alive for as long as any helper
+    /// can still dereference this.
+    run: &'static (dyn Fn(usize) + Sync),
+    /// Next chunk index to claim (work-stealing dispenser).
+    next: AtomicUsize,
+    n_chunks: usize,
+    /// Helpers that were handed a copy and have not finished yet.
+    pending: Mutex<usize>,
+    done: Condvar,
+    /// A helper's chunk panicked; the caller re-raises after the join.
+    panicked: AtomicBool,
+}
+
+/// Blocks until every helper signed off — also during a panic unwind,
+/// because the lifetime-erased closure must outlive all helpers (the
+/// same join-on-unwind contract `std::thread::scope` provides).
+struct WaitGuard<'a>(&'a Shared);
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        let mut pending = self.0.pending.lock().unwrap();
+        while *pending > 0 {
+            pending = self.0.done.wait(pending).unwrap();
+        }
+    }
+}
+
+struct Injector {
+    jobs: Mutex<Vec<Arc<Shared>>>,
+    available: Condvar,
+}
+
+/// The process-wide pool: parked helpers plus a job queue.
+pub struct ThreadPool {
+    queue: Arc<Injector>,
+    helpers: usize,
+}
+
+thread_local! {
+    /// Set inside pool helpers: nested `run` calls execute inline
+    /// instead of re-entering the queue.
+    static IS_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+/// The process-wide pool, created lazily on first use.
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(ThreadPool::with_default_size)
+}
+
+impl ThreadPool {
+    fn with_default_size() -> ThreadPool {
+        let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        ThreadPool::new(cores.min(MAX_THREADS).saturating_sub(1))
+    }
+
+    /// Pool with `helpers` parked worker threads (callers participate in
+    /// their own jobs, so peak parallelism is `helpers + 1`).
+    fn new(helpers: usize) -> ThreadPool {
+        let queue =
+            Arc::new(Injector { jobs: Mutex::new(Vec::new()), available: Condvar::new() });
+        for _ in 0..helpers {
+            let q = Arc::clone(&queue);
+            std::thread::Builder::new()
+                .name("dsm-collective".into())
+                .spawn(move || helper_loop(&q))
+                .expect("spawning collective pool helper");
+        }
+        ThreadPool { queue, helpers }
+    }
+
+    /// Parked helper threads (0 on single-core hosts: [`ThreadPool::run`]
+    /// then executes inline).
+    pub fn helpers(&self) -> usize {
+        self.helpers
+    }
+
+    /// Execute `job(chunk_index)` for every index in `0..n_chunks`,
+    /// blocking until all chunks complete. Chunks run concurrently on up
+    /// to `helpers + 1` threads; the chunk→thread mapping is
+    /// unspecified, so chunks must be mutually independent.
+    pub fn run<F: Fn(usize) + Sync>(&self, n_chunks: usize, job: F) {
+        let inline =
+            self.helpers == 0 || n_chunks <= 1 || IS_POOL_WORKER.with(|w| w.get());
+        if inline {
+            for i in 0..n_chunks {
+                job(i);
+            }
+            return;
+        }
+        let run_ref: &(dyn Fn(usize) + Sync) = &job;
+        // SAFETY: lifetime erasure only. The wait on `pending` below
+        // does not return until every helper that received a copy of
+        // this job has finished running it, so the borrow of `job`
+        // outlives every dereference.
+        let run_static: &'static (dyn Fn(usize) + Sync) =
+            unsafe { std::mem::transmute(run_ref) };
+        let copies = self.helpers.min(n_chunks - 1);
+        let shared = Arc::new(Shared {
+            run: run_static,
+            next: AtomicUsize::new(0),
+            n_chunks,
+            pending: Mutex::new(copies),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut jobs = self.queue.jobs.lock().unwrap();
+            for _ in 0..copies {
+                jobs.push(Arc::clone(&shared));
+            }
+        }
+        self.queue.available.notify_all();
+        // The caller works too: by the time the helpers wake it may
+        // already have drained everything — they then just sign off.
+        let guard = WaitGuard(&shared);
+        drain(&shared);
+        drop(guard);
+        if shared.panicked.load(Ordering::Relaxed) {
+            panic!("a collective pool chunk panicked on a helper thread");
+        }
+    }
+}
+
+/// Claim and run chunks until the dispenser is exhausted.
+fn drain(shared: &Shared) {
+    loop {
+        let i = shared.next.fetch_add(1, Ordering::Relaxed);
+        if i >= shared.n_chunks {
+            return;
+        }
+        (shared.run)(i);
+    }
+}
+
+fn helper_loop(queue: &Injector) {
+    IS_POOL_WORKER.with(|w| w.set(true));
+    loop {
+        let job = {
+            let mut jobs = queue.jobs.lock().unwrap();
+            loop {
+                if let Some(job) = jobs.pop() {
+                    break job;
+                }
+                jobs = queue.available.wait(jobs).unwrap();
+            }
+        };
+        let result =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| drain(&job)));
+        if result.is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        // The unlock ordering makes the chunk writes (and the panic
+        // flag) visible to the caller before its wait observes zero.
+        let mut pending = job.pending.lock().unwrap();
+        *pending -= 1;
+        if *pending == 0 {
+            job.done.notify_all();
+        }
+    }
+}
+
+/// Raw output pointer crossing the closure boundary; sound because each
+/// chunk index owns exactly one disjoint sub-slice.
+#[derive(Clone, Copy)]
+struct OutPtr(*mut f32);
+unsafe impl Send for OutPtr {}
+unsafe impl Sync for OutPtr {}
+
+fn chunk_len(len: usize, threads: usize, align: usize) -> usize {
+    let mut chunk = div_up(len, threads);
+    if align > 1 {
+        chunk = div_up(chunk, align) * align;
+    }
+    chunk
+}
+
+/// Split `out` into contiguous chunks — one per requested thread,
+/// lengths rounded up to a multiple of `align` — and run
+/// `body(base_index, chunk)` over them on the global pool. `align = 1`
+/// reproduces the historical chunking of the f32 collectives; the
+/// packed vote tally passes 64 so no u64 tally word straddles chunks.
+pub fn run_chunked_mut<F>(threads: usize, align: usize, out: &mut [f32], body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let len = out.len();
+    let threads = threads.clamp(1, len.max(1));
+    let chunk = chunk_len(len, threads, align);
+    if threads <= 1 || chunk >= len {
+        body(0, out);
+        return;
+    }
+    let n_chunks = div_up(len, chunk);
+    let ptr = OutPtr(out.as_mut_ptr());
+    let body = &body;
+    global().run(n_chunks, move |ci| {
+        let start = ci * chunk;
+        let end = (start + chunk).min(len);
+        // SAFETY: chunk ranges [start, end) are disjoint across `ci`
+        // and stay within `out`'s bounds.
+        let window =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), end - start) };
+        body(start, window);
+    });
+}
+
+/// The pre-pool implementation — scoped threads spawned on every call —
+/// kept only as the benchmark baseline so `benches/collectives.rs` can
+/// quantify the pool's win.
+pub fn run_chunked_mut_spawn<F>(threads: usize, align: usize, out: &mut [f32], body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let len = out.len();
+    let threads = threads.clamp(1, len.max(1));
+    let chunk = chunk_len(len, threads, align);
+    if threads <= 1 || chunk >= len {
+        body(0, out);
+        return;
+    }
+    let body = &body;
+    std::thread::scope(|scope| {
+        for (ci, window) in out.chunks_mut(chunk).enumerate() {
+            scope.spawn(move || body(ci * chunk, window));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_covers_every_chunk_exactly_once() {
+        let hits: Vec<AtomicUsize> = (0..23).map(|_| AtomicUsize::new(0)).collect();
+        global().run(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "chunk {i}");
+        }
+    }
+
+    #[test]
+    fn chunked_writes_match_inline_execution() {
+        for (len, threads, align) in
+            [(1usize, 4usize, 1usize), (100, 3, 1), (1000, 7, 64), (64, 2, 64), (130, 16, 64)]
+        {
+            let fill = |base: usize, chunk: &mut [f32]| {
+                for (j, o) in chunk.iter_mut().enumerate() {
+                    *o = (base + j) as f32 * 0.5;
+                }
+            };
+            let mut pooled = vec![0.0f32; len];
+            run_chunked_mut(threads, align, &mut pooled, fill);
+            let mut spawned = vec![0.0f32; len];
+            run_chunked_mut_spawn(threads, align, &mut spawned, fill);
+            let mut inline = vec![0.0f32; len];
+            fill(0, &mut inline);
+            assert_eq!(pooled, inline, "pool: len={len} threads={threads} align={align}");
+            assert_eq!(spawned, inline, "spawn: len={len} threads={threads} align={align}");
+        }
+    }
+
+    #[test]
+    fn aligned_chunks_start_on_align_boundaries() {
+        let mut out = vec![0.0f32; 1000];
+        let bases = Mutex::new(Vec::new());
+        run_chunked_mut(7, 64, &mut out, |base, _| bases.lock().unwrap().push(base));
+        for base in bases.into_inner().unwrap() {
+            assert_eq!(base % 64, 0, "chunk base {base} not 64-aligned");
+        }
+    }
+
+    #[test]
+    fn nested_run_does_not_deadlock() {
+        let total = AtomicUsize::new(0);
+        global().run(4, |_| {
+            global().run(3, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn pool_is_reused_across_many_calls() {
+        // regression guard for the spawn-per-call behavior: hammering
+        // the pool must not accumulate threads or leak jobs
+        let mut out = vec![0.0f32; 4096];
+        for round in 0..200 {
+            let r = round as f32;
+            run_chunked_mut(4, 1, &mut out, |base, chunk| {
+                for (j, o) in chunk.iter_mut().enumerate() {
+                    *o = r + (base + j) as f32;
+                }
+            });
+        }
+        assert_eq!(out[0], 199.0);
+        assert_eq!(out[4095], 199.0 + 4095.0);
+    }
+}

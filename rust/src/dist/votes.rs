@@ -1,0 +1,286 @@
+//! Packed 1-bit vote buffers and the word-level majority tally — the
+//! *data path* of sign-compressed collectives (the codec in
+//! [`super::codec`] defines the wire format; this module actually moves
+//! and tallies the packed bytes).
+//!
+//! # Wire protocol
+//!
+//! Each worker packs its randomized-sign vote vector with
+//! [`codec::pack_signs`] (1 bit per coordinate, little-endian bit
+//! order, plus the fixed [`codec::HEADER_BYTES`] frame) and ships the
+//! resulting [`PackedVotes`] to the server. The server never unpacks:
+//! [`majority_vote_packed`] tallies per-coordinate set-bit counts
+//! across ranks directly on the `u64` words of the payload with a
+//! bit-sliced carry-save adder, and a coordinate decodes to `+1` iff
+//! at least half the ranks set its bit (`2·count ≥ n`). Ties — possible
+//! only for even worker counts — decode to `+1`, exactly like
+//! [`super::collectives::majority_vote`] over the unpacked ±1 votes:
+//! the two tallies are bitwise-identical by construction, which
+//! `rust/tests/packed_vote.rs` property-tests across backends.
+
+use super::codec;
+use super::collectives::Backend;
+use super::pool;
+
+/// One worker's sign votes, packed at 1 bit/coordinate — exactly the
+/// bytes that cross the simulated wire (plus the fixed length header
+/// accounted by [`PackedVotes::wire_bytes`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedVotes {
+    bytes: Vec<u8>,
+    len: usize,
+}
+
+impl PackedVotes {
+    /// Pack the sign bit of every coordinate ([`codec::pack_signs`]).
+    /// Note the 1-bit wire has no zero symbol: ±0.0 votes encode their
+    /// IEEE sign and decode to ±1.
+    pub fn pack(votes: &[f32]) -> PackedVotes {
+        PackedVotes { bytes: codec::pack_signs(votes), len: votes.len() }
+    }
+
+    /// Adopt an already-packed payload of `len` coordinates.
+    pub fn from_bytes(bytes: Vec<u8>, len: usize) -> PackedVotes {
+        assert_eq!(
+            bytes.len(),
+            codec::packed_len(len),
+            "payload is {} bytes, {} coordinates need {}",
+            bytes.len(),
+            len,
+            codec::packed_len(len)
+        );
+        PackedVotes { bytes, len }
+    }
+
+    /// Number of vote coordinates.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The packed payload (⌈len/8⌉ bytes).
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.bytes
+    }
+
+    /// Total bytes this vote message puts on the wire: payload plus the
+    /// fixed header ([`codec::sign_allreduce_bytes`]).
+    pub fn wire_bytes(&self) -> u64 {
+        codec::sign_allreduce_bytes(self.len)
+    }
+
+    /// Decode back to ±1.0 f32 votes (reference/debug path only — the
+    /// tally itself never unpacks).
+    pub fn unpack(&self) -> Vec<f32> {
+        codec::unpack_signs(&self.bytes, self.len)
+    }
+
+    /// The 64 coordinates starting at `w * 64` as one little-endian
+    /// word (bit `b` = coordinate `w*64 + b`), zero-padded past the
+    /// end of the payload.
+    fn word(&self, w: usize) -> u64 {
+        let start = w * 8;
+        if start >= self.bytes.len() {
+            return 0;
+        }
+        let end = (start + 8).min(self.bytes.len());
+        let mut buf = [0u8; 8];
+        buf[..end - start].copy_from_slice(&self.bytes[start..end]);
+        u64::from_le_bytes(buf)
+    }
+}
+
+/// Add one rank's vote word into the bit-sliced per-lane counters:
+/// `counts[k]` holds bit `k` of every lane's running set-bit count, so
+/// adding a word is a 64-lane ripple-carry increment in a handful of
+/// bitwise ops instead of 64 scalar adds.
+fn add_word(counts: &mut [u64], word: u64) {
+    let mut carry = word;
+    for c in counts.iter_mut() {
+        if carry == 0 {
+            return;
+        }
+        let t = *c & carry;
+        *c ^= carry;
+        carry = t;
+    }
+    debug_assert_eq!(carry, 0, "counter width must cover the rank count");
+}
+
+/// Per-lane `count >= t` over the bit-sliced counters: bit `b` of the
+/// result is set iff lane `b`'s count is at least `t` (MSB-down
+/// comparison against the broadcast constant).
+fn lanes_ge(counts: &[u64], t: u64) -> u64 {
+    let mut ge = 0u64;
+    let mut eq = !0u64;
+    for (k, &c) in counts.iter().enumerate().rev() {
+        let tk = if (t >> k) & 1 == 1 { !0u64 } else { 0 };
+        ge |= eq & c & !tk;
+        eq &= !(c ^ tk);
+    }
+    ge | eq
+}
+
+/// Element-wise sign majority over packed vote payloads, auto-picking a
+/// backend. The output is always ±1 with ties decoding to +1 — see the
+/// module docs; bitwise-identical to running
+/// [`super::collectives::majority_vote`] on the unpacked votes.
+pub fn majority_vote_packed(votes: &[PackedVotes], out: &mut [f32]) {
+    majority_vote_packed_with(Backend::auto(out.len()), votes, out)
+}
+
+/// [`majority_vote_packed`] with an explicit [`Backend`].
+pub fn majority_vote_packed_with(backend: Backend, votes: &[PackedVotes], out: &mut [f32]) {
+    assert!(!votes.is_empty(), "majority vote over zero workers");
+    for (i, v) in votes.iter().enumerate() {
+        assert_eq!(
+            v.len(),
+            out.len(),
+            "worker {i}: vote length {} != output {}",
+            v.len(),
+            out.len()
+        );
+    }
+    let n = votes.len();
+    // bits needed to hold a set-bit count in 0..=n
+    let levels = (64 - (n as u64).leading_zeros()) as usize;
+    // 2·count ≥ n  ⇔  count ≥ ⌈n/2⌉ (ties, even n only, decode +1)
+    let threshold = (n / 2 + n % 2) as u64;
+    let threads = match backend {
+        Backend::Sequential => 1,
+        Backend::Threaded { threads } => threads,
+    };
+    // align 64 so every u64 tally word lives in exactly one chunk
+    pool::run_chunked_mut(threads, 64, out, |base, chunk| {
+        debug_assert_eq!(base % 64, 0);
+        let mut counts = vec![0u64; levels];
+        let mut wi = base / 64;
+        let mut done = 0;
+        while done < chunk.len() {
+            counts.fill(0);
+            for v in votes {
+                add_word(&mut counts, v.word(wi));
+            }
+            let winners = lanes_ge(&counts, threshold);
+            let lanes = (chunk.len() - done).min(64);
+            for (b, o) in chunk[done..done + lanes].iter_mut().enumerate() {
+                *o = if (winners >> b) & 1 == 1 { 1.0 } else { -1.0 };
+            }
+            wi += 1;
+            done += lanes;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::collectives;
+    use super::*;
+
+    fn reference(votes: &[PackedVotes]) -> Vec<f32> {
+        let unpacked: Vec<Vec<f32>> = votes.iter().map(|v| v.unpack()).collect();
+        let mut out = vec![0.0f32; votes[0].len()];
+        collectives::majority_vote_with(Backend::Sequential, &unpacked, &mut out);
+        out
+    }
+
+    #[test]
+    fn pack_roundtrips_through_unpack() {
+        let v = vec![3.5f32, -0.25, 0.0, -0.0, 1e-30, -1e30];
+        let p = PackedVotes::pack(&v);
+        assert_eq!(p.len(), 6);
+        assert_eq!(p.unpack(), vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(p.as_bytes().len(), codec::packed_len(6));
+        assert_eq!(p.wire_bytes(), codec::sign_allreduce_bytes(6));
+    }
+
+    #[test]
+    fn word_layout_is_little_endian_across_bytes() {
+        let mut v = vec![-1.0f32; 130];
+        v[0] = 1.0;
+        v[63] = 1.0;
+        v[64] = 1.0;
+        v[129] = 1.0;
+        let p = PackedVotes::pack(&v);
+        assert_eq!(p.word(0), (1u64 << 63) | 1);
+        assert_eq!(p.word(1), 1);
+        assert_eq!(p.word(2), 1 << 1); // coordinate 129 = word 2, bit 1
+        assert_eq!(p.word(3), 0); // past the payload: zero padding
+    }
+
+    #[test]
+    fn tally_matches_f32_reference_on_small_patterns() {
+        for p in [1usize, 7, 8, 9, 63, 64, 65, 127, 130] {
+            for n in [1usize, 2, 3, 4, 5, 8] {
+                let votes: Vec<PackedVotes> = (0..n)
+                    .map(|w| {
+                        let v: Vec<f32> = (0..p)
+                            .map(|j| if (w * 31 + j * 7) % 3 == 0 { 1.0 } else { -1.0 })
+                            .collect();
+                        PackedVotes::pack(&v)
+                    })
+                    .collect();
+                let mut out = vec![0.0f32; p];
+                majority_vote_packed_with(Backend::Sequential, &votes, &mut out);
+                assert_eq!(out, reference(&votes), "n={n} P={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_tie_decodes_to_plus_one() {
+        let votes =
+            vec![PackedVotes::pack(&[1.0, -1.0]), PackedVotes::pack(&[-1.0, 1.0])];
+        let mut out = vec![0.0f32; 2];
+        majority_vote_packed(&votes, &mut out);
+        assert_eq!(out, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn single_worker_vote_is_identity_on_signs() {
+        let v = vec![1.0f32, -1.0, -1.0, 1.0, 1.0];
+        let votes = vec![PackedVotes::pack(&v)];
+        let mut out = vec![0.0f32; 5];
+        majority_vote_packed(&votes, &mut out);
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn bit_sliced_comparator_is_exact() {
+        // lane b of word w has count = number of ranks whose bit is set;
+        // cross-check lanes_ge against scalar counting for all thresholds
+        let words = [0b1011u64, 0b1110, 0b0101, 0b1111, 0b0000];
+        for t in 0..=5u64 {
+            let mut counts = vec![0u64; 3];
+            for &w in &words {
+                add_word(&mut counts, w);
+            }
+            let mask = lanes_ge(&counts, t);
+            for lane in 0..4 {
+                let count = words.iter().filter(|&&w| (w >> lane) & 1 == 1).count() as u64;
+                assert_eq!(
+                    (mask >> lane) & 1 == 1,
+                    count >= t,
+                    "lane {lane}: count {count}, threshold {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "vote length")]
+    fn mismatched_vote_lengths_panic() {
+        let votes = vec![PackedVotes::pack(&[1.0; 4]), PackedVotes::pack(&[1.0; 5])];
+        let mut out = vec![0.0f32; 4];
+        majority_vote_packed(&votes, &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "payload")]
+    fn from_bytes_validates_length() {
+        PackedVotes::from_bytes(vec![0u8; 2], 32);
+    }
+}

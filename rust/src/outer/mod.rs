@@ -33,6 +33,7 @@ pub use mv_signsgd::MvSignSgd;
 pub use sign_momentum::SignMomentum;
 pub use slowmo::{SignedSlowMo, SlowMo};
 
+use crate::dist::votes::PackedVotes;
 use crate::sign::SignOp;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -53,6 +54,21 @@ pub struct RoundCtx<'a> {
     pub round: u64,
 }
 
+/// Context for the packed 1-bit exchange
+/// ([`OuterOptimizer::round_packed`]). Unlike [`RoundCtx`] there is no
+/// f32 aggregate: the round's only worker→server payload is the packed
+/// votes themselves, so nothing else exists server-side to hand over.
+pub struct PackedRoundCtx<'a> {
+    /// The round's start point — what [`OuterOptimizer::local_start`]
+    /// returned (the global iterate itself, or e.g. MV-sto-signSGD's
+    /// extrapolated y_t).
+    pub start: &'a [f32],
+    /// γ_t: local learning rate in effect this round.
+    pub gamma: f32,
+    /// Outer round index t.
+    pub round: u64,
+}
+
 pub trait OuterOptimizer: Send {
     /// Apply the global step, updating `global` (== ctx.start on entry).
     fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng);
@@ -68,11 +84,56 @@ pub trait OuterOptimizer: Send {
 
     /// True when this optimizer's round exchange is 1-bit sign traffic
     /// (worker→server majority-vote votes, Algorithm 6) rather than
-    /// full-precision parameters. The trainer then charges the packed
-    /// wire cost ([`crate::comm::SimClock::charge_sign_allreduce`],
-    /// backed by [`crate::dist::codec`]) instead of 4 bytes per f32.
+    /// full-precision parameters. The trainer then routes the round
+    /// through the packed data path — [`make_votes`](Self::make_votes)
+    /// per rank, then [`round_packed`](Self::round_packed) — and
+    /// charges the packed wire cost
+    /// ([`crate::comm::SimClock::charge_sign_allreduce`], backed by
+    /// [`crate::dist::codec`]) instead of 4 bytes per f32.
+    ///
+    /// Returning `true` **obligates** implementing
+    /// [`make_votes`](Self::make_votes) and
+    /// [`round_packed`](Self::round_packed): billing 1-bit traffic
+    /// while exchanging f32 votes is exactly the accounting/data-path
+    /// divergence the packed path exists to close, so the defaults
+    /// fail fast (panic naming the optimizer) rather than silently
+    /// falling back to the f32 wire.
     fn sign_compressed_comm(&self) -> bool {
         false
+    }
+
+    /// Worker-side half of the packed 1-bit exchange (only called when
+    /// [`sign_compressed_comm`](Self::sign_compressed_comm) is true):
+    /// fold rank `worker`'s last local stochastic gradient into its
+    /// local state and emit the packed randomized-sign vote that
+    /// crosses the simulated wire. The trainer calls this once per
+    /// rank, in rank order, before
+    /// [`round_packed`](Self::round_packed).
+    fn make_votes(
+        &mut self,
+        worker: usize,
+        n_workers: usize,
+        last_grad: &[f32],
+        rng: &mut Rng,
+    ) -> PackedVotes {
+        let _ = (worker, n_workers, last_grad, rng);
+        unimplemented!("{}: no packed-vote data path", self.name())
+    }
+
+    /// Server-side half of the packed exchange: majority-tally `votes`
+    /// word-level ([`crate::dist::votes::majority_vote_packed`]) and
+    /// apply the global step to `global` (== ctx.start on entry).
+    /// Must be bitwise-identical to routing the same votes through
+    /// [`round`](Self::round)'s f32 reference path.
+    fn round_packed(
+        &mut self,
+        global: &mut [f32],
+        ctx: &PackedRoundCtx,
+        votes: &[PackedVotes],
+        rng: &mut Rng,
+    ) {
+        let _ = (global, ctx, votes, rng);
+        unimplemented!("{}: no packed-vote data path", self.name())
     }
 
     /// Flat state buffers for checkpointing.

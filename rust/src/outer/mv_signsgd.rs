@@ -5,17 +5,29 @@
 //!   y_t          = x_t + α (x_t - x_{t-1})          (outer extrapolation)
 //!   workers run τ SGD steps from y_t, ending at y_t^{(i)}
 //!   m_{t+1}^{(i)} = β m_t^{(i)} + (1-β) ∇f_i(y_t^{(i)}, ξ)   (LOCAL grad momentum)
-//!   x_{t+1}      = x_t - η sign( Σ_i S_r(m_{t+1}^{(i)}) )    (majority vote)
+//!   x_{t+1}      = x_t - η MV( S_r(m_{t+1}^{(i)}) )          (majority vote)
 //!
 //! The contrasts with Algorithm 1 that Remark 1 highlights are all here:
 //! momentum is built from local stochastic *gradients* (not aggregated
 //! local differences), and worker→server communication is 1-bit via the
 //! randomized sign S_r (eq. 9) + majority vote, which is why it only
 //! converges to an O(dR/√n) neighborhood (Remark 2).
+//!
+//! # Wire semantics
+//!
+//! Votes really are 1-bit here: [`MvSignSgd::make_votes`] packs each
+//! rank's randomized signs ([`PackedVotes`]) and
+//! [`MvSignSgd::round_packed`] tallies the packed words without ever
+//! unpacking ([`votes::majority_vote_packed`]). Two consequences of the
+//! wire having no zero symbol: `S_r(0)` keeps the IEEE sign of its ±0
+//! output — a fair ±1 coin, exactly eq. (9) at v = 0 — and a tied
+//! majority decodes to +1, so the iterate always moves by η per
+//! coordinate. The f32 reference path ([`MvSignSgd::round`]) shares
+//! this code and is bitwise-identical by construction.
 
-use super::{OuterOptimizer, RoundCtx};
+use super::{OuterOptimizer, PackedRoundCtx, RoundCtx};
+use crate::dist::votes::{self, PackedVotes};
 use crate::sign::SignOp;
-use crate::tensor::sign_f32;
 use crate::util::rng::Rng;
 
 pub struct MvSignSgd {
@@ -29,47 +41,100 @@ pub struct MvSignSgd {
     /// (worker count is only known then).
     m: Vec<Vec<f32>>,
     x_prev: Vec<f32>,
+    /// Dim-sized scratch reused across ranks and rounds: the
+    /// randomized-sign output in `produce_vote`, the decoded winner in
+    /// `apply_votes` (not checkpointed — overwritten before every use).
+    scratch: Vec<f32>,
     dim: usize,
 }
 
 impl MvSignSgd {
     pub fn new(dim: usize, eta: f32, beta: f32, alpha: f32, bound: f32) -> Self {
-        MvSignSgd { eta, beta, alpha, bound, m: Vec::new(), x_prev: vec![0.0; dim], dim }
+        MvSignSgd {
+            eta,
+            beta,
+            alpha,
+            bound,
+            m: Vec::new(),
+            x_prev: vec![0.0; dim],
+            scratch: vec![0.0; dim],
+            dim,
+        }
+    }
+
+    /// Lazily size the per-worker momentum buffers.
+    fn ensure_workers(&mut self, n: usize) {
+        assert!(n > 0);
+        if self.m.is_empty() {
+            self.m = vec![vec![0.0; self.dim]; n];
+        }
+        assert_eq!(self.m.len(), n, "worker count changed mid-run");
+    }
+
+    /// Worker-side vote production: fold the rank's last stochastic
+    /// gradient into its momentum, apply the randomized sign S_r, and
+    /// pack to the 1-bit wire format.
+    fn produce_vote(&mut self, worker: usize, grad: &[f32], rng: &mut Rng) -> PackedVotes {
+        assert_eq!(grad.len(), self.dim, "worker {worker}: gradient length");
+        let m = &mut self.m[worker];
+        for (mi, &g) in m.iter_mut().zip(grad) {
+            *mi = self.beta * *mi + (1.0 - self.beta) * g;
+        }
+        SignOp::RandPm.apply_into(&mut self.scratch, m, self.bound, rng);
+        PackedVotes::pack(&self.scratch)
+    }
+
+    /// Server-side step: word-level majority tally over the packed
+    /// votes, then a step of -η · winner from the round's start point.
+    /// NOTE: `start` is what `local_start` produced — y_t when α > 0 —
+    /// so with extrapolation the update and the stored x_prev anchor at
+    /// y_t rather than x_t. This preserves the seed's semantics
+    /// bit-for-bit; auditing it against Algorithm 6's exact recursion
+    /// is ROADMAP follow-up (g).
+    fn apply_votes(&mut self, global: &mut [f32], start: &[f32], packed: &[PackedVotes]) {
+        votes::majority_vote_packed(packed, &mut self.scratch);
+        self.x_prev.copy_from_slice(start);
+        for ((g, &x), &w) in global.iter_mut().zip(start).zip(&self.scratch) {
+            *g = x - self.eta * w;
+        }
     }
 }
 
 impl OuterOptimizer for MvSignSgd {
+    /// f32 reference path: produce every rank's vote locally, then run
+    /// the identical packed tally — `round` and the trainer's
+    /// `make_votes`/`round_packed` split execute the same code in the
+    /// same order, so the two paths are bitwise-identical.
     fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng) {
         let n = ctx.worker_last_grad.len();
-        assert!(n > 0);
-        if self.m.is_empty() {
-            self.m = vec![vec![0.0; self.dim]; n];
-            self.x_prev = ctx.start.to_vec();
-        }
-        assert_eq!(self.m.len(), n, "worker count changed mid-run");
-
-        // local momentum update + randomized-sign vote accumulation
-        let mut vote = vec![0.0f32; self.dim];
-        let mut signs = vec![0.0f32; self.dim];
+        self.ensure_workers(n);
+        let mut packed = Vec::with_capacity(n);
         for (w, grad) in ctx.worker_last_grad.iter().enumerate() {
-            let m = &mut self.m[w];
-            for i in 0..self.dim {
-                m[i] = self.beta * m[i] + (1.0 - self.beta) * grad[i];
-            }
-            SignOp::RandPm.apply_into(&mut signs, m, self.bound, rng);
-            for i in 0..self.dim {
-                vote[i] += signs[i];
-            }
+            packed.push(self.produce_vote(w, grad, rng));
         }
+        self.apply_votes(global, ctx.start, &packed);
+    }
 
-        // x_{t+1} = x_t - η sign(vote); note x_t here is the un-extrapolated
-        // iterate: `global` holds x_t (local_start produced y_t separately).
-        let x_t = ctx.start; // == x_t by construction of the trainer loop
-        for i in 0..self.dim {
-            let x_new = x_t[i] - self.eta * sign_f32(vote[i]);
-            self.x_prev[i] = x_t[i];
-            global[i] = x_new;
-        }
+    fn make_votes(
+        &mut self,
+        worker: usize,
+        n_workers: usize,
+        last_grad: &[f32],
+        rng: &mut Rng,
+    ) -> PackedVotes {
+        self.ensure_workers(n_workers);
+        self.produce_vote(worker, last_grad, rng)
+    }
+
+    fn round_packed(
+        &mut self,
+        global: &mut [f32],
+        ctx: &PackedRoundCtx,
+        votes: &[PackedVotes],
+        _rng: &mut Rng,
+    ) {
+        self.ensure_workers(votes.len());
+        self.apply_votes(global, ctx.start, votes);
     }
 
     fn local_start(&mut self, global: &[f32]) -> Vec<f32> {
@@ -89,8 +154,9 @@ impl OuterOptimizer for MvSignSgd {
     }
 
     /// Algorithm 6's worker→server traffic is the randomized sign votes
-    /// — 1 bit per coordinate on the wire (Remark 1), so the simulated
-    /// clock charges the packed payload instead of f32 parameters.
+    /// — 1 bit per coordinate on the wire (Remark 1). The trainer
+    /// routes rounds through `make_votes`/`round_packed` and charges
+    /// the packed payload instead of f32 parameters.
     fn sign_compressed_comm(&self) -> bool {
         true
     }
@@ -145,8 +211,73 @@ mod tests {
         opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
         assert_eq!(global[0], -0.5);
         assert_eq!(global[1], 0.5);
-        // coord 2: m = 0 -> S_r(0) = ±0 ... sign(0 votes) = 0
-        assert_eq!(global[2], 0.0);
+        // coord 2: m = 0 -> S_r(0) is a fair ±1 coin on the wire (the
+        // 1-bit format has no zero symbol), so the iterate moves by a
+        // full ±η — it can never sit still under wire semantics.
+        assert_eq!(global[2].abs(), 0.5);
+    }
+
+    #[test]
+    fn tie_decodes_to_plus_one_on_both_paths() {
+        // |m| == bound makes S_r deterministic: two workers with exactly
+        // opposite momenta produce an exact 1-1 tie on every coordinate.
+        // The wire has no zero symbol, so the tally decodes +1 and the
+        // iterate moves by -η (the old f32 path would have sat still).
+        let eta = 0.25f32;
+        let grads_own = vec![vec![1.0f32, 1.0], vec![-1.0f32, -1.0]];
+        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
+        let start = vec![1.0f32, -1.0];
+        let ends: Vec<&[f32]> = (0..2).map(|_| start.as_slice()).collect();
+
+        // path 1: the f32 reference round
+        let mut a = MvSignSgd::new(2, eta, 0.0, 0.0, 1.0);
+        let mut ga = start.clone();
+        let mut rng_a = Rng::new(11);
+        a.round(&mut ga, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng_a);
+        assert_eq!(ga, vec![1.0 - eta, -1.0 - eta]);
+
+        // path 2: the packed make_votes/round_packed split
+        let mut b = MvSignSgd::new(2, eta, 0.0, 0.0, 1.0);
+        let mut gb = start.clone();
+        let mut rng_b = Rng::new(11);
+        let votes: Vec<PackedVotes> = (0..2)
+            .map(|w| b.make_votes(w, 2, &grads_own[w], &mut rng_b))
+            .collect();
+        let ctx = PackedRoundCtx { start: &start, gamma: 0.1, round: 0 };
+        b.round_packed(&mut gb, &ctx, &votes, &mut rng_b);
+        assert_eq!(gb, ga);
+    }
+
+    #[test]
+    fn round_and_packed_split_agree_bitwise() {
+        // dim deliberately not a multiple of 8 or 64
+        let dim = 37;
+        let n = 3;
+        let start: Vec<f32> = (0..dim).map(|i| (i as f32).sin()).collect();
+        let grads_own: Vec<Vec<f32>> = (0..n)
+            .map(|w| (0..dim).map(|i| ((w * dim + i) as f32).cos() * 3.0).collect())
+            .collect();
+        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
+        let ends: Vec<&[f32]> = (0..n).map(|_| start.as_slice()).collect();
+
+        let mut a = MvSignSgd::new(dim, 0.3, 0.5, 0.0, 4.0);
+        let mut ga = start.clone();
+        let mut rng_a = Rng::new(99);
+        a.round(&mut ga, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng_a);
+
+        let mut b = MvSignSgd::new(dim, 0.3, 0.5, 0.0, 4.0);
+        let mut gb = start.clone();
+        let mut rng_b = Rng::new(99);
+        let votes: Vec<PackedVotes> = (0..n)
+            .map(|w| b.make_votes(w, n, &grads_own[w], &mut rng_b))
+            .collect();
+        let ctx = PackedRoundCtx { start: &start, gamma: 0.1, round: 0 };
+        b.round_packed(&mut gb, &ctx, &votes, &mut rng_b);
+
+        assert_eq!(ga, gb);
+        // and the two optimizers carry identical state forward
+        assert_eq!(a.x_prev, b.x_prev);
+        assert_eq!(a.m, b.m);
     }
 
     #[test]

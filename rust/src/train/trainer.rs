@@ -17,8 +17,8 @@ use crate::config::{RunConfig, TrainMode};
 use crate::data::corpus::{self, CorpusConfig};
 use crate::data::dataset::{Batch, TokenDataset};
 use crate::data::tokenizer::ByteTokenizer;
-use crate::dist::{collectives, Worker};
-use crate::outer::{OuterConfig, OuterOptimizer, RoundCtx};
+use crate::dist::{codec, collectives, PackedVotes, Worker};
+use crate::outer::{OuterConfig, OuterOptimizer, PackedRoundCtx, RoundCtx};
 use crate::runtime::{
     Artifacts, ModelBundle, Runtime, SignUpdateKernel, SignUpdateScalars,
 };
@@ -260,12 +260,43 @@ impl Trainer {
             }
         }
         self.local_step += tau as u64;
+        self.clock.charge_parallel_compute(&per_worker_secs);
 
-        // all-reduce: exact average + modeled cost of the exchange —
-        // P f32s, or the packed 1-bit payload for sign-vote methods
+        if self.outer.sign_compressed_comm() && !self.cfg.reference_votes {
+            // Packed 1-bit data path (Remark 1): the round's only
+            // worker→server payload is each rank's randomized-sign vote,
+            // packed by dist::codec — no f32 vector crosses the simulated
+            // wire, so there is no averaged end point to compute either.
+            // The clock is charged before vote production so this path
+            // consumes the trainer RNG in the same order as the reference
+            // path below (straggler draw first, then per-rank sign draws).
+            self.clock.charge_vote_allreduce(
+                &self.cfg.comm,
+                n,
+                codec::sign_allreduce_bytes(p),
+                &mut self.rng,
+            );
+            let mut votes: Vec<PackedVotes> = Vec::with_capacity(n);
+            for w in 0..n {
+                let vote =
+                    self.outer.make_votes(w, n, &self.workers[w].last_grad, &mut self.rng);
+                // ties the billed wire cost to the buffers actually
+                // exchanged: same length ⇒ same sign_allreduce_bytes
+                assert_eq!(vote.len(), p, "worker {w}: vote length");
+                votes.push(vote);
+            }
+            let ctx = PackedRoundCtx { start: &start, gamma: gamma_t, round: self.round };
+            self.global.copy_from_slice(&start);
+            self.outer.round_packed(&mut self.global, &ctx, &votes, &mut self.rng);
+            anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
+            return Ok(());
+        }
+
+        // f32 path: exact average + modeled cost of the exchange — P
+        // f32s (sign-compressed methods forced onto this reference path
+        // by cfg.reference_votes still bill the packed payload).
         let mut avg_end = vec![0.0f32; p];
         collectives::allreduce_mean(&self.workers, |w| w.params.as_slice(), &mut avg_end);
-        self.clock.charge_parallel_compute(&per_worker_secs);
         if self.outer.sign_compressed_comm() {
             self.clock.charge_sign_allreduce(&self.cfg.comm, n, p, &mut self.rng);
         } else {
@@ -348,7 +379,12 @@ impl Trainer {
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         let mut ck = Checkpoint::new(&self.cfg.tag, self.round);
         ck.add("global", &self.global);
-        ck.add("meta.local_step", &[self.local_step as f32]);
+        // local_step as four exact 16-bit limbs — an f32 only holds
+        // integers up to 2^24 exactly, and long runs exceed that
+        let step_limbs: Vec<f32> =
+            (0..4).map(|k| ((self.local_step >> (16 * k)) & 0xFFFF) as f32).collect();
+        ck.add("meta.local_step64", &step_limbs);
+        ck.add("meta.local_step", &[self.local_step as f32]); // legacy readers
         for (i, buf) in self.outer.state().iter().enumerate() {
             ck.add(&format!("outer.{i}"), buf);
         }
@@ -357,6 +393,13 @@ impl Trainer {
                 ck.add(&format!("worker{}.opt{i}", w.id), buf);
             }
         }
+        // RNG streams: with these restored, a resumed run replays the
+        // uninterrupted one bit-for-bit (workers resample identically,
+        // randomized sign votes and straggler draws continue in place).
+        for w in &self.workers {
+            ck.add(&format!("worker{}.rng", w.id), &w.rng.to_f32_words());
+        }
+        ck.add("trainer.rng", &self.rng.to_f32_words());
         ck.save(path)
     }
 
@@ -370,7 +413,15 @@ impl Trainer {
             self.global.len()
         );
         self.global.copy_from_slice(global);
-        self.local_step = ck.get("meta.local_step")?[0] as u64;
+        self.local_step = if let Ok(limbs) = ck.get("meta.local_step64") {
+            limbs
+                .iter()
+                .enumerate()
+                .fold(0u64, |acc, (k, &x)| acc | ((x as u64) << (16 * k)))
+        } else {
+            // pre-limb checkpoints: exact only below 2^24 steps
+            ck.get("meta.local_step")?[0] as u64
+        };
         self.round = ck.round;
         let outer_bufs = ck.with_prefix("outer.");
         if !outer_bufs.is_empty() {
@@ -380,6 +431,19 @@ impl Trainer {
             let bufs = ck.with_prefix(&format!("worker{}.opt", w.id));
             if !bufs.is_empty() {
                 w.opt.load_state(&bufs);
+            }
+        }
+        // RNG streams are present in newer checkpoints; older ones
+        // still load (workers then resample from their fresh streams).
+        if let Ok(words) = ck.get("trainer.rng") {
+            self.rng = Rng::from_f32_words(words)
+                .ok_or_else(|| anyhow::anyhow!("corrupt trainer.rng buffer"))?;
+        }
+        for w in &mut self.workers {
+            if let Ok(words) = ck.get(&format!("worker{}.rng", w.id)) {
+                w.rng = Rng::from_f32_words(words).ok_or_else(|| {
+                    anyhow::anyhow!("corrupt worker{}.rng buffer", w.id)
+                })?;
             }
         }
         Ok(())

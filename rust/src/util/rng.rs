@@ -138,6 +138,63 @@ impl Rng {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.below(xs.len() as u64) as usize]
     }
+
+    /// Number of f32 words [`Rng::to_f32_words`] produces.
+    pub const F32_WORDS: usize = 21;
+
+    /// Serialize the full generator state to f32 words for the
+    /// checkpoint container (which stores flat f32 buffers): each u64
+    /// state word becomes four 16-bit limbs — exactly representable in
+    /// f32 — followed by the cached Box-Muller spare (presence flag
+    /// plus the f64's bits as four more limbs). Checkpointing the RNG
+    /// streams is what makes a resumed run bit-identical to the
+    /// uninterrupted one.
+    pub fn to_f32_words(&self) -> Vec<f32> {
+        fn push_u64(out: &mut Vec<f32>, w: u64) {
+            for k in 0..4 {
+                out.push(((w >> (16 * k)) & 0xFFFF) as f32);
+            }
+        }
+        let mut out = Vec::with_capacity(Self::F32_WORDS);
+        for &w in &self.s {
+            push_u64(&mut out, w);
+        }
+        out.push(if self.gauss_spare.is_some() { 1.0 } else { 0.0 });
+        push_u64(&mut out, self.gauss_spare.map_or(0, f64::to_bits));
+        out
+    }
+
+    /// Rebuild a generator from [`Rng::to_f32_words`] output; `None` on
+    /// a malformed buffer (wrong length or non-limb values).
+    pub fn from_f32_words(words: &[f32]) -> Option<Rng> {
+        fn read_u64(words: &[f32]) -> Option<u64> {
+            let mut w = 0u64;
+            for (k, &x) in words.iter().enumerate() {
+                if !(0.0..65536.0).contains(&x) || x.fract() != 0.0 {
+                    return None;
+                }
+                w |= (x as u64) << (16 * k);
+            }
+            Some(w)
+        }
+        if words.len() != Self::F32_WORDS {
+            return None;
+        }
+        let s = [
+            read_u64(&words[0..4])?,
+            read_u64(&words[4..8])?,
+            read_u64(&words[8..12])?,
+            read_u64(&words[12..16])?,
+        ];
+        let gauss_spare = if words[16] == 1.0 {
+            Some(f64::from_bits(read_u64(&words[17..21])?))
+        } else if words[16] == 0.0 {
+            None
+        } else {
+            return None;
+        };
+        Some(Rng { s, gauss_spare })
+    }
 }
 
 /// Zipf(s) sampler over ranks 0..n by inverse-CDF on a precomputed table.
@@ -259,6 +316,37 @@ mod tests {
         assert!(counts[0] > counts[4] && counts[4] > counts[20]);
         // rank-0 frequency for s=1.1, n=50 is ~22%.
         assert!((counts[0] as f64 / 100_000.0 - 0.22).abs() < 0.05);
+    }
+
+    #[test]
+    fn state_words_roundtrip_bitwise() {
+        let mut rng = Rng::new(77);
+        for _ in 0..13 {
+            rng.next_u64();
+        }
+        rng.normal(); // populate the Box-Muller spare
+        let words = rng.to_f32_words();
+        assert_eq!(words.len(), Rng::F32_WORDS);
+        let mut orig = rng.clone();
+        let mut back = Rng::from_f32_words(&words).unwrap();
+        // spare must replay first, then the streams stay in lockstep
+        assert_eq!(orig.normal().to_bits(), back.normal().to_bits());
+        for _ in 0..32 {
+            assert_eq!(orig.next_u64(), back.next_u64());
+        }
+    }
+
+    #[test]
+    fn state_words_reject_garbage() {
+        let rng = Rng::new(5);
+        let words = rng.to_f32_words();
+        assert!(Rng::from_f32_words(&words[1..]).is_none(), "wrong length");
+        let mut bad = words.clone();
+        bad[3] = 0.5; // not a 16-bit integer limb
+        assert!(Rng::from_f32_words(&bad).is_none());
+        let mut bad_flag = words;
+        bad_flag[16] = 2.0;
+        assert!(Rng::from_f32_words(&bad_flag).is_none());
     }
 
     #[test]

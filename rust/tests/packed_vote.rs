@@ -1,0 +1,154 @@
+//! Differential property suite for the packed 1-bit vote data path
+//! (same in-tree randomized-property style as collectives.rs; proptest
+//! is unavailable offline).
+//!
+//! The headline invariant is ISSUE 2's acceptance criterion: for any
+//! (n workers, P dims, thread count) — including signed zeros, exact
+//! ties, and P not divisible by 8 or 64 — `majority_vote_packed` over
+//! the packed payloads is **bitwise identical** to the f32
+//! `majority_vote` over the unpacked votes, on both backends.
+
+use dsm::dist::codec;
+use dsm::dist::collectives::{self, Backend};
+use dsm::dist::votes::{self, PackedVotes};
+use dsm::util::rng::Rng;
+
+/// Mini property harness: run `f` on `cases` random inputs.
+fn forall<F: FnMut(u64, &mut Rng)>(name: &str, cases: u64, mut f: F) {
+    for case in 0..cases {
+        let mut rng = Rng::new(0x9AC4_ED00 ^ case);
+        f(case, &mut rng);
+    }
+    let _ = name;
+}
+
+/// Random vote vector mixing arbitrary magnitudes with ±0.0 (the wire
+/// encodes the IEEE sign bit, so signed zeros are first-class votes).
+fn random_votes(rng: &mut Rng, p: usize) -> Vec<f32> {
+    (0..p)
+        .map(|_| match rng.below(6) {
+            0 => 0.0,
+            1 => -0.0,
+            2 => 1.0,
+            3 => -1.0,
+            _ => rng.normal_f32(0.0, 2.0),
+        })
+        .collect()
+}
+
+#[test]
+fn prop_packed_tally_is_bitwise_identical_to_f32_majority_vote() {
+    forall("packed-vs-f32", 30, |case, rng| {
+        // deliberately hit P % 8 != 0 and P % 64 != 0 often
+        let p = 1 + rng.below(3_000) as usize;
+        let n = 1 + rng.below(9) as usize;
+        let raw: Vec<Vec<f32>> = (0..n).map(|_| random_votes(rng, p)).collect();
+        let packed: Vec<PackedVotes> = raw.iter().map(|v| PackedVotes::pack(v)).collect();
+        let unpacked: Vec<Vec<f32>> = packed.iter().map(|v| v.unpack()).collect();
+        for backend in [
+            Backend::Sequential,
+            Backend::Threaded { threads: 2 },
+            Backend::Threaded { threads: 3 },
+            Backend::Threaded { threads: 16 },
+        ] {
+            let mut from_packed = vec![0.0f32; p];
+            votes::majority_vote_packed_with(backend, &packed, &mut from_packed);
+            let mut from_f32 = vec![0.0f32; p];
+            collectives::majority_vote_with(backend, &unpacked, &mut from_f32);
+            for j in 0..p {
+                assert_eq!(
+                    from_packed[j].to_bits(),
+                    from_f32[j].to_bits(),
+                    "case {case}: coord {j} differs ({backend:?}, n={n}, P={p})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_threaded_packed_tally_matches_sequential() {
+    forall("packed-backends", 20, |case, rng| {
+        let p = 1 + rng.below(10_000) as usize;
+        let n = 1 + rng.below(8) as usize;
+        let packed: Vec<PackedVotes> =
+            (0..n).map(|_| PackedVotes::pack(&random_votes(rng, p))).collect();
+        let mut seq = vec![0.0f32; p];
+        votes::majority_vote_packed_with(Backend::Sequential, &packed, &mut seq);
+        for threads in [1usize, 2, 5, 11] {
+            let mut thr = vec![0.0f32; p];
+            votes::majority_vote_packed_with(
+                Backend::Threaded { threads },
+                &packed,
+                &mut thr,
+            );
+            assert_eq!(seq, thr, "case {case}: threads={threads} (n={n}, P={p})");
+        }
+    });
+}
+
+#[test]
+fn auto_backend_packed_tally_matches_sequential_above_threshold() {
+    // large enough that Backend::auto goes threaded on multi-core
+    // hosts, deliberately not a multiple of 64
+    let p = (1 << 17) + 13;
+    let mut rng = Rng::new(4242);
+    let packed: Vec<PackedVotes> =
+        (0..5).map(|_| PackedVotes::pack(&random_votes(&mut rng, p))).collect();
+    let mut seq = vec![0.0f32; p];
+    votes::majority_vote_packed_with(Backend::Sequential, &packed, &mut seq);
+    let mut auto = vec![0.0f32; p];
+    votes::majority_vote_packed(&packed, &mut auto);
+    assert!(
+        seq.iter().zip(&auto).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "auto backend must be bitwise-equal to the sequential reference"
+    );
+}
+
+#[test]
+fn exact_ties_and_signed_zeros_decode_like_the_wire() {
+    // one +1 vs one -1, +0.0 vs -0.0, and unanimous ±0.0 columns: every
+    // tie decodes +1 on both paths, zeros vote their sign bit
+    let a = vec![1.0f32, 0.0, 0.0, -0.0];
+    let b = vec![-1.0f32, -0.0, 0.0, -0.0];
+    let packed = vec![PackedVotes::pack(&a), PackedVotes::pack(&b)];
+    let mut out = vec![0.0f32; 4];
+    votes::majority_vote_packed(&packed, &mut out);
+    // tie -> +1; (+0,-0) tie -> +1; (+0,+0) -> +1; (-0,-0) -> -1
+    assert_eq!(out, vec![1.0, 1.0, 1.0, -1.0]);
+    let unpacked: Vec<Vec<f32>> = packed.iter().map(|v| v.unpack()).collect();
+    let mut reference = vec![0.0f32; 4];
+    collectives::majority_vote(&unpacked, &mut reference);
+    assert_eq!(out, reference);
+}
+
+#[test]
+fn prop_every_packed_result_is_pm_one_and_follows_the_popcount() {
+    forall("packed-oracle", 25, |case, rng| {
+        let p = 1 + rng.below(400) as usize;
+        let n = 1 + rng.below(10) as usize;
+        let raw: Vec<Vec<f32>> = (0..n).map(|_| random_votes(rng, p)).collect();
+        let packed: Vec<PackedVotes> = raw.iter().map(|v| PackedVotes::pack(v)).collect();
+        let mut out = vec![0.0f32; p];
+        votes::majority_vote_packed(&packed, &mut out);
+        for j in 0..p {
+            assert!(out[j] == 1.0 || out[j] == -1.0, "case {case}: coord {j}");
+            // scalar oracle: count ranks voting +1 (sign bit clear)
+            let count = raw.iter().filter(|v| !v[j].is_sign_negative()).count();
+            let expect = if 2 * count >= n { 1.0 } else { -1.0 };
+            assert_eq!(out[j], expect, "case {case}: coord {j} ({count}/{n} positive)");
+        }
+    });
+}
+
+#[test]
+fn wire_bytes_match_the_codec_cost_model() {
+    forall("wire-bytes", 15, |case, rng| {
+        let p = rng.below(50_000) as usize;
+        let v = random_votes(rng, p);
+        let packed = PackedVotes::pack(&v);
+        assert_eq!(packed.len(), p, "case {case}");
+        assert_eq!(packed.as_bytes().len(), codec::packed_len(p), "case {case}");
+        assert_eq!(packed.wire_bytes(), codec::sign_allreduce_bytes(p), "case {case}");
+    });
+}

@@ -154,16 +154,91 @@ fn checkpoint_resume_reproduces_uninterrupted_run() {
     let resumed = t2.run().unwrap();
     std::fs::remove_file(&path).ok();
 
-    // Data RNG state is not checkpointed (workers resample), so exact
-    // bitwise equality is not expected — but params at resume equal the
-    // checkpoint and the resumed run must land in the same regime.
+    // Worker and trainer RNG streams ride along in the checkpoint, so
+    // the resumed tail replays the uninterrupted run bit-for-bit.
     assert_eq!(resumed.log.rows.last().unwrap().round, 6);
-    assert!(
-        (resumed.final_val - full.final_val).abs() < 0.35,
+    assert_eq!(
+        resumed.final_val.to_bits(),
+        full.final_val.to_bits(),
         "resumed {} vs full {}",
         resumed.final_val,
         full.final_val
     );
+}
+
+#[test]
+fn mv_packed_path_matches_f32_reference_votes_bitwise() {
+    let Some(env) = setup() else { return };
+    // the packed wire path (default) and the f32 RoundCtx reference
+    // path are the same votes, tallied two ways — the loss curves must
+    // agree to the last bit for several rounds
+    let mut packed = tiny_cfg("mv-packed");
+    packed.outer = OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 };
+    packed.rounds = 5;
+    let mut reference = packed.clone();
+    reference.tag = "mv-reference".into();
+    reference.reference_votes = true;
+    let rp = run(&env, packed);
+    let rr = run(&env, reference);
+    assert_eq!(rp.log.rows.len(), rr.log.rows.len());
+    for (a, b) in rp.log.rows.iter().zip(&rr.log.rows) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "round {}", a.round);
+    }
+    assert_eq!(rp.final_val.to_bits(), rr.final_val.to_bits());
+    // identical *wire accounting* too: both paths bill the packed bytes
+    assert_eq!(rp.clock.bytes_communicated, rr.clock.bytes_communicated);
+}
+
+#[test]
+fn mv_checkpoint_resume_is_bit_identical() {
+    let Some(env) = setup() else { return };
+    let mut cfg = tiny_cfg("mv-ck");
+    cfg.outer = OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 };
+    cfg.rounds = 6;
+    cfg.eval_every = 0;
+    let full = run(&env, cfg.clone());
+
+    let mut cfg_half = cfg.clone();
+    cfg_half.rounds = 3;
+    let mut t1 =
+        Trainer::with_bundle(cfg_half, env.bundle.clone(), &env.rt, &env.arts).unwrap();
+    t1.run().unwrap();
+    let path = std::env::temp_dir().join("dsm_it_mv_resume.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+
+    let mut t2 =
+        Trainer::with_bundle(cfg, env.bundle.clone(), &env.rt, &env.arts).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    let resumed = t2.run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // per-worker momentum, x_prev, and every RNG stream are restored,
+    // so the randomized sign votes of rounds 4-6 replay exactly
+    // (simulated-clock fields restart from zero and are not compared)
+    let (a, b) = (resumed.log.rows.last().unwrap(), full.log.rows.last().unwrap());
+    assert_eq!(a.round, b.round);
+    assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
+    assert_eq!(resumed.final_val.to_bits(), full.final_val.to_bits());
+}
+
+#[test]
+fn mv_packed_path_charges_exact_codec_bytes() {
+    let Some(env) = setup() else { return };
+    let mut cfg = tiny_cfg("mv-bytes");
+    cfg.outer = OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 };
+    let n = cfg.n_workers as u64;
+    let rounds = cfg.rounds as u64;
+    let mut t = Trainer::with_bundle(cfg, env.bundle.clone(), &env.rt, &env.arts).unwrap();
+    let p = t.dim();
+    let res = t.run().unwrap();
+    // the clock must bill exactly the codec's packed payload — the same
+    // bytes the PackedVotes buffers actually carry — per round, moved
+    // through the ring model's 2(n-1)/n factor
+    let payload = dsm::dist::codec::sign_allreduce_bytes(p);
+    let moved_per_round = payload * 2 * (n - 1) / n;
+    assert_eq!(res.clock.comm_rounds, rounds);
+    assert_eq!(res.clock.bytes_communicated, rounds * moved_per_round);
 }
 
 #[test]
