@@ -26,7 +26,7 @@ fn main() -> Result<()> {
 
     let rt = Runtime::cpu()?;
     let arts = Artifacts::load(&Artifacts::default_dir())?;
-    let bundle = std::rc::Rc::new(ModelBundle::load(&rt, arts.preset(&preset)?)?);
+    let bundle = std::sync::Arc::new(ModelBundle::load(&rt, arts.preset(&preset)?)?);
     let bytes = bundle.info.param_count as u64 * 4;
 
     println!("comm_tradeoff: preset={preset}, n={workers}, budget={budget} local steps\n");

@@ -31,7 +31,7 @@ fn main() -> Result<()> {
 
     let rt = Runtime::cpu()?;
     let arts = Artifacts::load(&Artifacts::default_dir())?;
-    let bundle = std::rc::Rc::new(ModelBundle::load(&rt, arts.preset(&preset)?)?);
+    let bundle = std::sync::Arc::new(ModelBundle::load(&rt, arts.preset(&preset)?)?);
     println!(
         "pretrain_e2e: preset={preset} ({} params), n={workers}, tau={tau}, {budget} local steps/alg\n",
         bundle.info.param_count

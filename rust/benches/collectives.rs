@@ -96,6 +96,46 @@ fn main() {
             packed_bytes,
             || votes::majority_vote_packed(black_box(&packed), &mut out),
         );
+        // ROADMAP (e): the word-level tally chunks onto the persistent
+        // pool — the sequential/threaded delta is the pooled win
+        b.bench_with_bytes(
+            &format!("majority_vote_packed seq-ref n=8 P={p}"),
+            packed_bytes,
+            || {
+                votes::majority_vote_packed_with(
+                    Backend::Sequential,
+                    black_box(&packed),
+                    &mut out,
+                )
+            },
+        );
+        b.bench_with_bytes(
+            &format!("majority_vote_packed pooled x4 n=8 P={p}"),
+            packed_bytes,
+            || {
+                votes::majority_vote_packed_with(
+                    Backend::Threaded { threads: 4 },
+                    black_box(&packed),
+                    &mut out,
+                )
+            },
+        );
+    }
+
+    println!("\n== vote packing: fresh allocation vs persistent buffer (P=1M) ==");
+    {
+        let p = 1usize << 20;
+        let mut signs = vec![0.0f32; p];
+        rng.fill_normal(&mut signs, 1.0);
+        b.bench_with_bytes("PackedVotes::pack (alloc/round)", Some(p as u64 * 4), || {
+            black_box(PackedVotes::pack(black_box(&signs)));
+        });
+        let mut buf = PackedVotes::empty();
+        buf.pack_into(&signs);
+        b.bench_with_bytes("PackedVotes::pack_into (persistent)", Some(p as u64 * 4), || {
+            buf.pack_into(black_box(&signs));
+        });
+        black_box(&buf);
     }
 
     println!("\n== persistent pool vs spawn-per-call (allreduce, 4 threads) ==");

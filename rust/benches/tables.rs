@@ -18,7 +18,7 @@ fn bench_round(
     b: &mut Bencher,
     rt: &Runtime,
     arts: &Artifacts,
-    bundle: std::rc::Rc<ModelBundle>,
+    bundle: std::sync::Arc<ModelBundle>,
     name: &str,
     mode: TrainMode,
     tau: usize,
@@ -51,7 +51,7 @@ fn main() {
     };
     let rt = Runtime::cpu().expect("client");
     let bundle =
-        std::rc::Rc::new(ModelBundle::load(&rt, arts.preset("nano").expect("nano")).unwrap());
+        std::sync::Arc::new(ModelBundle::load(&rt, arts.preset("nano").expect("nano")).unwrap());
     let mut b = Bencher::new(Duration::from_secs(4), Duration::from_millis(600));
     let adamw = BaseOptConfig::adamw_paper;
 

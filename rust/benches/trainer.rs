@@ -1,0 +1,99 @@
+//! Round wall-clock of the worker fleet: sequential reference vs
+//! parallel execution on the persistent pool, at n ∈ {4, 8}.
+//!
+//!     cargo bench --bench trainer              # human-readable table
+//!     cargo bench --bench trainer -- --json    # also write BENCH_trainer.json
+//!     cargo bench --bench trainer -- --quick   # fewer timed rounds (CI)
+//!
+//! Runs on the pure-Rust [`NativeBundle`] backend, so no PJRT artifacts
+//! are required — this is the repo's recorded perf trajectory for the
+//! fleet fan-out (`BENCH_trainer.json` at the workspace root). Both
+//! modes compute bit-identical trajectories (rust/tests/parallel_fleet.rs);
+//! only wall-clock differs.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use dsm::config::RunConfig;
+use dsm::dist::pool;
+use dsm::runtime::NativeBundle;
+use dsm::train::Trainer;
+
+const PRESET: &str = "native";
+
+/// Heavier than the test backend so per-rank compute dominates pool
+/// dispatch: batch 4 × seq 32 × d_model 48 -> P = 24576, ~128 positions
+/// of a 48×256 MLP per step.
+fn backend() -> Arc<NativeBundle> {
+    Arc::new(NativeBundle::new(PRESET, 4, 32, 48))
+}
+
+fn cfg(n: usize, tau: usize, sequential: bool) -> RunConfig {
+    let mut cfg = RunConfig::paper_default(PRESET);
+    cfg.n_workers = n;
+    cfg.tau = tau;
+    cfg.rounds = 1_000_000; // the bench drives rounds manually
+    cfg.eval_every = 0;
+    cfg.corpus_bytes = 1 << 18;
+    cfg.sequential_workers = sequential;
+    cfg.tag = format!("bench-n{n}-{}", if sequential { "seq" } else { "par" });
+    cfg
+}
+
+/// Mean seconds per outer round over `rounds` timed rounds (after one
+/// warmup round that also faults in the pool and page cache).
+fn time_rounds(n: usize, tau: usize, sequential: bool, rounds: usize) -> f64 {
+    let mut trainer = Trainer::with_backend(cfg(n, tau, sequential), backend()).unwrap();
+    trainer.step_round().expect("warmup round");
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        trainer.step_round().expect("timed round");
+    }
+    t0.elapsed().as_secs_f64() / rounds as f64
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json = args.iter().any(|a| a == "--json");
+    let quick = args.iter().any(|a| a == "--quick");
+    let rounds = if quick { 3 } else { 8 };
+    let tau = 6;
+
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let threads = pool::global().helpers() + 1;
+    println!(
+        "fleet round wall-clock (native backend, tau={tau}, {rounds} timed rounds, \
+         {cores} cores, pool {threads} threads)"
+    );
+
+    let mut entries = Vec::new();
+    for n in [4usize, 8] {
+        let seq_s = time_rounds(n, tau, true, rounds);
+        let par_s = time_rounds(n, tau, false, rounds);
+        let speedup = seq_s / par_s;
+        println!(
+            "n={n}: sequential {:>8.2} ms/round | parallel {:>8.2} ms/round | speedup {speedup:.2}x",
+            seq_s * 1e3,
+            par_s * 1e3
+        );
+        entries.push(format!(
+            "    {{\"n\": {n}, \"tau\": {tau}, \"sequential_round_s\": {seq_s:.6}, \
+             \"parallel_round_s\": {par_s:.6}, \"speedup\": {speedup:.3}}}"
+        ));
+    }
+
+    if json {
+        let body = format!(
+            "{{\n  \"bench\": \"trainer_fleet_round\",\n  \"backend\": \"native\",\n  \
+             \"host_cores\": {cores},\n  \"pool_threads\": {threads},\n  \
+             \"timed_rounds\": {rounds},\n  \"results\": [\n{}\n  ]\n}}\n",
+            entries.join(",\n")
+        );
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("workspace root")
+            .join("BENCH_trainer.json");
+        std::fs::write(&path, body).expect("writing BENCH_trainer.json");
+        println!("wrote {path:?}");
+    }
+}

@@ -14,6 +14,10 @@
 //!
 //! plus an optional straggler term: per round, the slowest of n i.i.d.
 //! log-normal worker delays (Dean et al. 2012's tail-latency story).
+//! Sign-vote rounds are the exception: a majority tally is not
+//! ring-reducible on the 1-bit wire, so
+//! [`SimClock::charge_vote_allreduce`] models the practical
+//! gather+broadcast server topology instead.
 //! Compute time is *measured* (the PJRT executions are real); comm time
 //! is *modeled*; the trainer adds both onto a [`SimClock`].
 
@@ -92,6 +96,18 @@ impl CommModel {
         rounds * (self.latency_s + bytes as f64 / self.bandwidth_bps)
     }
 
+    /// Flat gather (all-to-one): the server's link serializes the n-1
+    /// incoming payloads, paying one latency + one transfer each. This
+    /// is the worker→server half of a majority-vote round — a sign
+    /// tally is not ring-reducible bit-by-bit, so the server really
+    /// does ingest every rank's packed votes.
+    pub fn gather_time(&self, n: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        (n as f64 - 1.0) * (self.latency_s + bytes as f64 / self.bandwidth_bps)
+    }
+
     /// Synchronization-barrier penalty: max of n log-normal delays.
     pub fn straggler_delay(&self, n: usize, rng: &mut Rng) -> f64 {
         if self.straggler_sigma == 0.0 || self.straggler_scale_s == 0.0 {
@@ -118,18 +134,11 @@ impl SimClock {
         self.compute_s + self.comm_s + self.straggler_s
     }
 
-    /// Charge one *sign-compressed* all-reduce over `n` workers: the
+    /// Charge one *sign-compressed* vote exchange over `n` workers: the
     /// payload is 1 bit per coordinate plus a small header
     /// ([`crate::dist::codec::sign_allreduce_bytes`]) instead of 4
     /// bytes per f32 — the wire cost of majority-vote sign exchange
     /// (MV-sto-signSGD and other signSGD-style methods).
-    ///
-    /// Deliberately optimistic: it reuses the ring α-β formula, i.e. an
-    /// idealized lower bound. A real majority vote is not ring-reducible
-    /// bit-by-bit — practical topologies pay a gather+broadcast (~n·P/8
-    /// server bytes) or ship ⌈log2(n+1)⌉-bit tallies — so at large n
-    /// this *understates* sign-vote traffic; refining the topology model
-    /// is a ROADMAP follow-up.
     pub fn charge_sign_allreduce(
         &mut self,
         model: &CommModel,
@@ -146,6 +155,23 @@ impl SimClock {
     /// [`crate::dist::PackedVotes`] buffers actually exchanged
     /// ([`crate::dist::PackedVotes::wire_bytes`]), so accounting and
     /// data path cannot drift apart.
+    ///
+    /// Topology: a majority vote is not ring-reducible bit-by-bit (a
+    /// partial tally does not fit the 1-bit wire format), so unlike
+    /// [`charge_allreduce`](Self::charge_allreduce) this models the
+    /// practical server topology — a flat **gather** of the n-1 rank
+    /// payloads ([`CommModel::gather_time`]) followed by a binomial-tree
+    /// **broadcast** of the winner ([`CommModel::broadcast_time`]):
+    ///
+    /// ```text
+    ///     T(n, b) = (n-1)(α + b/β)  +  ⌈log2 n⌉(α + b/β)
+    /// ```
+    ///
+    /// and `2(n-1)·b` total wire bytes (n-1 payloads up, the winner to
+    /// n-1 receivers). The earlier ring α-β formula was an optimistic
+    /// lower bound that understated sign-vote traffic at large n
+    /// (ROADMAP follow-up (d)); `comm::tests::vote_allreduce_*` pin the
+    /// new formula.
     pub fn charge_vote_allreduce(
         &mut self,
         model: &CommModel,
@@ -153,7 +179,15 @@ impl SimClock {
         wire_bytes: u64,
         rng: &mut Rng,
     ) {
-        self.charge_allreduce(model, n, wire_bytes, rng);
+        self.comm_s += model.gather_time(n, wire_bytes) + model.broadcast_time(n, wire_bytes);
+        self.straggler_s += model.straggler_delay(n, rng);
+        self.comm_rounds += 1;
+        if n > 1 {
+            let moved = (wire_bytes as u128) * 2 * (n as u128 - 1);
+            self.bytes_communicated = self
+                .bytes_communicated
+                .saturating_add(moved.min(u64::MAX as u128) as u64);
+        }
     }
 
     /// Charge one all-reduce of `bytes` over `n` workers.
@@ -169,13 +203,73 @@ impl SimClock {
         }
     }
 
-    /// Charge measured compute time.  In the data-parallel simulation all
-    /// n workers compute concurrently on real hardware sequentially, so
-    /// the simulated elapsed time for one "parallel" local step is the
-    /// max over workers ≈ the mean single-worker time (workers are
-    /// homogeneous here); the caller passes the per-worker measurement.
+    /// Charge measured compute time.  The simulated elapsed time for one
+    /// "parallel" local phase is the max over the per-worker
+    /// measurements (the barrier waits for the slowest rank); the
+    /// caller passes one measured duration per worker. The f64 max is
+    /// order-independent, so the *aggregation* does not depend on how
+    /// the fleet executed — but the measurements themselves are wall
+    /// clock, and ranks running concurrently on the host pool can
+    /// inflate each other's readings through cache/bandwidth/core
+    /// contention. Measured time was never reproducible across hosts
+    /// or loads (only the modeled comm/straggler terms are exact);
+    /// runs that care about an uncontended compute axis should use
+    /// `cfg.sequential_workers`, which trades wall-clock for
+    /// contention-free per-rank readings while leaving the trajectory
+    /// bit-identical.
     pub fn charge_parallel_compute(&mut self, per_worker_s: &[f64]) {
         self.compute_s += per_worker_s.iter().copied().fold(0.0, f64::max);
+    }
+
+    /// Number of f32 words [`SimClock::to_f32_words`] produces (five
+    /// 64-bit fields × four 16-bit limbs).
+    pub const F32_WORDS: usize = 20;
+
+    /// Serialize the clock to f32 words for the checkpoint container
+    /// (which stores flat f32 buffers): each 64-bit field — the three
+    /// f64 accumulators via `to_bits`, then the two u64 counters —
+    /// becomes four exactly-representable 16-bit limbs, the same
+    /// encoding as `local_step64` and the RNG streams. With the clock
+    /// checkpointed, a resumed run continues the simulated time axis
+    /// instead of restarting it at zero.
+    pub fn to_f32_words(&self) -> Vec<f32> {
+        fn push_u64(out: &mut Vec<f32>, w: u64) {
+            for k in 0..4 {
+                out.push(((w >> (16 * k)) & 0xFFFF) as f32);
+            }
+        }
+        let mut out = Vec::with_capacity(Self::F32_WORDS);
+        push_u64(&mut out, self.compute_s.to_bits());
+        push_u64(&mut out, self.comm_s.to_bits());
+        push_u64(&mut out, self.straggler_s.to_bits());
+        push_u64(&mut out, self.comm_rounds);
+        push_u64(&mut out, self.bytes_communicated);
+        out
+    }
+
+    /// Rebuild a clock from [`SimClock::to_f32_words`] output; `None`
+    /// on a malformed buffer (wrong length or non-limb values).
+    pub fn from_f32_words(words: &[f32]) -> Option<SimClock> {
+        fn read_u64(words: &[f32]) -> Option<u64> {
+            let mut w = 0u64;
+            for (k, &x) in words.iter().enumerate() {
+                if !(0.0..65536.0).contains(&x) || x.fract() != 0.0 {
+                    return None;
+                }
+                w |= (x as u64) << (16 * k);
+            }
+            Some(w)
+        }
+        if words.len() != Self::F32_WORDS {
+            return None;
+        }
+        Some(SimClock {
+            compute_s: f64::from_bits(read_u64(&words[0..4])?),
+            comm_s: f64::from_bits(read_u64(&words[4..8])?),
+            straggler_s: f64::from_bits(read_u64(&words[8..12])?),
+            comm_rounds: read_u64(&words[12..16])?,
+            bytes_communicated: read_u64(&words[16..20])?,
+        })
     }
 }
 
@@ -269,17 +363,93 @@ mod tests {
         // payload is ~P/8 bytes plus the fixed header ...
         let payload = codec::sign_allreduce_bytes(p);
         assert_eq!(payload, (p as u64) / 8 + codec::HEADER_BYTES);
-        // ... and the ring all-reduce moves 2(n-1)/n of it.
-        let expected_moved = payload * 2 * (n as u64 - 1) / n as u64;
+        // ... and gather+broadcast moves 2(n-1) copies of it (n-1 rank
+        // payloads up to the server, the winner out to n-1 receivers).
+        let expected_moved = payload * 2 * (n as u64 - 1);
         assert_eq!(compressed.bytes_communicated, expected_moved);
         assert_eq!(compressed.comm_rounds, 1);
 
-        // ~32x cheaper than the uncompressed f32 exchange in both bytes
-        // and modeled time (same latency term, 1/32 the bandwidth term).
+        // still far cheaper than the uncompressed f32 ring exchange:
+        // the 32x payload compression dominates the topology penalty
+        // (ring moves 2(n-1)/n ~= 2 payloads, gather+broadcast 2(n-1)),
+        // so at n=4 the byte advantage is 32/n = 8x.
         let mut full = SimClock::default();
         full.charge_allreduce(&m, n, p as u64 * 4, &mut rng);
-        assert!(compressed.bytes_communicated * 30 < full.bytes_communicated);
+        assert!(compressed.bytes_communicated * 7 < full.bytes_communicated);
         assert!(compressed.comm_s < full.comm_s);
+    }
+
+    #[test]
+    fn vote_allreduce_pins_gather_broadcast_formula() {
+        // deterministic model so the latency/bandwidth split is exact
+        let m = CommModel {
+            latency_s: 1e-3,
+            bandwidth_bps: 1e6,
+            straggler_sigma: 0.0,
+            straggler_scale_s: 0.0,
+        };
+        let mut clock = SimClock::default();
+        let mut rng = Rng::new(0);
+        let (n, bytes) = (4usize, 10_000u64);
+        clock.charge_vote_allreduce(&m, n, bytes, &mut rng);
+        // gather: (n-1)(alpha + b/beta) = 3 * (1e-3 + 0.01) = 0.033
+        // broadcast: ceil(log2 4)(alpha + b/beta) = 2 * 0.011 = 0.022
+        let per_msg = 1e-3 + bytes as f64 / 1e6;
+        let expected = 3.0 * per_msg + 2.0 * per_msg;
+        assert!((clock.comm_s - expected).abs() < 1e-12, "{} vs {expected}", clock.comm_s);
+        assert_eq!(clock.bytes_communicated, 2 * 3 * bytes);
+        assert_eq!(clock.comm_rounds, 1);
+        assert_eq!(clock.straggler_s, 0.0);
+
+        // n = 1: nothing crosses any wire
+        let mut solo = SimClock::default();
+        solo.charge_vote_allreduce(&m, 1, bytes, &mut rng);
+        assert_eq!(solo.comm_s, 0.0);
+        assert_eq!(solo.bytes_communicated, 0);
+    }
+
+    #[test]
+    fn vote_topology_grows_linearly_in_n_unlike_the_ring() {
+        // the whole point of follow-up (d): at large n the server gather
+        // dominates, while a ring's bandwidth term saturates at ~2 b/beta
+        let m = CommModel {
+            latency_s: 0.0,
+            bandwidth_bps: 1e9,
+            straggler_sigma: 0.0,
+            straggler_scale_s: 0.0,
+        };
+        let b = 1u64 << 20;
+        let vote = |n: usize| {
+            let mut c = SimClock::default();
+            let mut rng = Rng::new(1);
+            c.charge_vote_allreduce(&m, n, b, &mut rng);
+            c.comm_s
+        };
+        assert!(vote(64) > 6.0 * vote(8), "{} vs {}", vote(64), vote(8));
+        assert!(vote(64) > m.allreduce_time(64, b), "vote exchange must not undercut the ring");
+    }
+
+    #[test]
+    fn clock_f32_words_roundtrip_bitwise() {
+        let m = CommModel::preset("wan").unwrap();
+        let mut clock = SimClock::default();
+        let mut rng = Rng::new(7);
+        clock.charge_parallel_compute(&[0.125, 3.75]);
+        clock.charge_allreduce(&m, 8, 123_456_789, &mut rng);
+        clock.charge_vote_allreduce(&m, 8, 54_321, &mut rng);
+        let words = clock.to_f32_words();
+        assert_eq!(words.len(), SimClock::F32_WORDS);
+        let back = SimClock::from_f32_words(&words).unwrap();
+        assert_eq!(back.compute_s.to_bits(), clock.compute_s.to_bits());
+        assert_eq!(back.comm_s.to_bits(), clock.comm_s.to_bits());
+        assert_eq!(back.straggler_s.to_bits(), clock.straggler_s.to_bits());
+        assert_eq!(back.comm_rounds, clock.comm_rounds);
+        assert_eq!(back.bytes_communicated, clock.bytes_communicated);
+
+        assert!(SimClock::from_f32_words(&words[1..]).is_none(), "wrong length");
+        let mut bad = words;
+        bad[2] = 0.5;
+        assert!(SimClock::from_f32_words(&bad).is_none(), "non-limb value");
     }
 
     #[test]

@@ -62,6 +62,18 @@ pub struct RunConfig {
     /// the packed 1-bit data path (wire accounting is unchanged; the
     /// two paths are bitwise-identical by construction).
     pub reference_votes: bool,
+    /// Differential-testing / benchmarking hook: run the simulated
+    /// ranks of each round serially on the coordinator thread instead
+    /// of concurrently on the persistent pool. Every trajectory is
+    /// bitwise-identical either way (workers own disjoint RNG
+    /// substreams and optimizer state; `rust/tests/parallel_fleet.rs`
+    /// proves it), which is why the flag is excluded from the
+    /// experiment cache key. What does differ is measured wall-clock:
+    /// concurrent ranks can inflate each other's per-step timings
+    /// through host contention, so time-axis studies that want
+    /// uncontended `compute_s` readings should set this (losing the
+    /// round-level speedup, keeping the exact same losses).
+    pub sequential_workers: bool,
 }
 
 /// Peak local LR per preset, scaled-down analogue of the paper's Table 1.
@@ -102,6 +114,7 @@ impl RunConfig {
             global_step_pallas: false,
             heterogeneous: false,
             reference_votes: false,
+            sequential_workers: false,
         }
     }
 
@@ -212,6 +225,11 @@ impl RunConfig {
             || doc.get("reference_votes").and_then(Json::as_bool).unwrap_or(false)
         {
             cfg.reference_votes = true;
+        }
+        if args.has("sequential-workers")
+            || doc.get("sequential_workers").and_then(Json::as_bool).unwrap_or(false)
+        {
+            cfg.sequential_workers = true;
         }
         if let Some(dir) = args.get("log-dir") {
             cfg.log_dir = Some(PathBuf::from(dir));

@@ -47,13 +47,23 @@ pub fn sign_allreduce_bytes(n_params: usize) -> u64 {
 /// Pack the sign bit of every coordinate (1 bit each, 32× smaller than
 /// the f32 payload). See the module docs for the exact bit layout.
 pub fn pack_signs(v: &[f32]) -> Vec<u8> {
-    let mut out = vec![0u8; packed_len(v.len())];
+    let mut out = Vec::new();
+    pack_signs_into(v, &mut out);
+    out
+}
+
+/// [`pack_signs`] into a caller-owned buffer, reusing its capacity —
+/// the allocation-free path for persistent per-rank vote buffers
+/// ([`super::votes::PackedVotes::pack_into`]). The buffer is resized
+/// to exactly [`packed_len`] bytes.
+pub fn pack_signs_into(v: &[f32], out: &mut Vec<u8>) {
+    out.clear();
+    out.resize(packed_len(v.len()), 0);
     for (i, &x) in v.iter().enumerate() {
         if !x.is_sign_negative() {
             out[i / 8] |= 1 << (i % 8);
         }
     }
-    out
 }
 
 /// Decode `len` coordinates packed by [`pack_signs`] back to ±1.0.

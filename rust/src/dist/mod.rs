@@ -10,12 +10,14 @@
 //! ```text
 //!            Trainer::local_round  (Algorithm 1, lines 3-11, round t)
 //!   ┌───────────────────────────────────────────────────────────────┐
-//!   │ for each Worker i = 0..n:                                     │
+//!   │ all Workers i = 0..n, CONCURRENTLY on the persistent pool     │
+//!   │ (pool::run_indexed_mut; each job owns a disjoint &mut Worker):│
 //!   │     params ← x_{t,0}                 (outer.local_start)      │
 //!   │     τ × { rng → sample batch                                  │
-//!   │           bundle.train_step          (PJRT fwd+bwd)           │
+//!   │           backend.train_step         (PJRT / native fwd+bwd)  │
 //!   │           observe(loss, grads)       (loss acc + last_grad)   │
 //!   │           opt.step(params, grads)  } (base optimizer, γ_t,k)  │
+//!   │ join, per-rank results gathered by rank index                 │
 //!   │                                                               │
 //!   │ collectives::allreduce_mean(workers) → x̄_{t,τ}               │
 //!   │ SimClock charge: f32 payload, or packed-sign payload when the │
@@ -24,6 +26,12 @@
 //!   │ take_mean_loss() per worker          (round's train loss)     │
 //!   └───────────────────────────────────────────────────────────────┘
 //! ```
+//!
+//! The fan-out is bitwise-identical to a serial loop (workers own
+//! disjoint RNG substreams and optimizer state; the trainer RNG is
+//! only consumed after the join) — `cfg.sequential_workers` keeps the
+//! serial reference path and `rust/tests/parallel_fleet.rs` proves the
+//! equivalence.
 //!
 //! Each worker's RNG is an independent substream of the run's root seed
 //! (`root.substream("worker", i)`), so fleets rebuilt from the same root

@@ -11,6 +11,12 @@
 //! thread participating — a `threads = k` request uses up to `k - 1`
 //! helpers plus the caller.
 //!
+//! Beyond the chunked-output API, [`run_indexed_mut`] is a scoped
+//! fan-out over a fleet of items: each job receives a disjoint
+//! `&mut T` and its results are collected per index with a panic-safe
+//! join. The trainer runs the n simulated ranks of one outer round
+//! concurrently through it.
+//!
 //! # Determinism
 //!
 //! The pool decides only *which OS thread* executes a chunk. Chunk
@@ -245,6 +251,53 @@ where
     });
 }
 
+/// Raw item/result-slot pointer crossing the closure boundary; sound
+/// because the pool's dispenser hands each index to exactly one thread,
+/// so every slot is touched by at most one job.
+struct SlotPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SlotPtr<T> {}
+unsafe impl<T: Send> Sync for SlotPtr<T> {}
+
+/// Scoped fan-out over a fleet of worker-like items: execute
+/// `job(i, &mut items[i])` for every index concurrently on the global
+/// pool (the caller participates) and return the results in index
+/// order. This is the API the trainer uses to run all n simulated
+/// ranks of one outer round in parallel — each job owns a disjoint
+/// `&mut T`, so no locking is involved and the per-item arithmetic is
+/// exactly what a sequential loop would compute.
+///
+/// # Panic safety
+///
+/// If a job panics on a helper thread the remaining jobs still run,
+/// every helper signs off (the same join-on-unwind contract as
+/// [`run_chunked_mut`]), and the panic is re-raised on the calling
+/// thread; the pool itself is not poisoned and stays usable.
+pub fn run_indexed_mut<T, R, F>(items: &mut [T], job: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let n = items.len();
+    let mut results: Vec<Option<R>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+    let item_ptr = SlotPtr(items.as_mut_ptr());
+    let slot_ptr = SlotPtr(results.as_mut_ptr());
+    global().run(n, move |i| {
+        // SAFETY: the dispenser yields each index exactly once, so the
+        // item and result slot at `i` are accessed by one thread only,
+        // and both stay in bounds (i < n). The caller's `run` blocks
+        // until every helper finished, keeping both borrows alive.
+        let item = unsafe { &mut *item_ptr.0.add(i) };
+        let out = job(i, item);
+        unsafe { *slot_ptr.0.add(i) = Some(out) };
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("pool ran every job index exactly once"))
+        .collect()
+}
+
 /// The pre-pool implementation — scoped threads spawned on every call —
 /// kept only as the benchmark baseline so `benches/collectives.rs` can
 /// quantify the pool's win.
@@ -322,6 +375,77 @@ mod tests {
             });
         });
         assert_eq!(total.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn run_indexed_collects_results_in_index_order() {
+        let mut items: Vec<u64> = (0..37).collect();
+        let doubled = run_indexed_mut(&mut items, |i, x| {
+            *x += 1;
+            (i as u64, *x * 2)
+        });
+        for (i, (idx, d)) in doubled.iter().enumerate() {
+            assert_eq!(*idx, i as u64, "result {i} out of order");
+            assert_eq!(*d, (i as u64 + 1) * 2);
+        }
+        assert_eq!(items[0], 1);
+        assert_eq!(items[36], 37);
+    }
+
+    #[test]
+    fn run_indexed_matches_sequential_loop() {
+        let job = |i: usize, x: &mut f64| {
+            *x = (*x + i as f64).sqrt();
+            *x * 3.0
+        };
+        let mut par: Vec<f64> = (0..23).map(|i| i as f64 * 0.7).collect();
+        let mut seq = par.clone();
+        let rp = run_indexed_mut(&mut par, job);
+        let rs: Vec<f64> = seq.iter_mut().enumerate().map(|(i, x)| job(i, x)).collect();
+        assert_eq!(par, seq);
+        for (a, b) in rp.iter().zip(&rs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn run_indexed_handles_empty_and_single() {
+        let mut none: Vec<u8> = Vec::new();
+        assert!(run_indexed_mut(&mut none, |_, _| 1).is_empty());
+        let mut one = vec![5u8];
+        assert_eq!(run_indexed_mut(&mut one, |_, x| *x as usize + 1), vec![6]);
+    }
+
+    #[test]
+    fn run_indexed_panic_does_not_deadlock_or_poison_the_pool() {
+        // mirror of the run_chunked_mut panic-safety contract: one rank's
+        // job panicking must re-raise on the caller after a full join...
+        let mut items = vec![0u32; 16];
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_indexed_mut(&mut items, |i, x| {
+                if i == 7 {
+                    panic!("rank 7 exploded");
+                }
+                *x = i as u32;
+                i
+            });
+        }));
+        assert!(caught.is_err(), "the job panic must surface to the caller");
+        // ...and the pool must stay fully usable afterwards.
+        let mut again = vec![0u32; 16];
+        let results = run_indexed_mut(&mut again, |i, x| {
+            *x = i as u32 + 1;
+            i + 1
+        });
+        assert_eq!(results, (1..=16).collect::<Vec<_>>());
+        assert_eq!(again[15], 16);
+        let mut out = vec![0.0f32; 512];
+        run_chunked_mut(4, 1, &mut out, |base, chunk| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = (base + j) as f32;
+            }
+        });
+        assert_eq!(out[511], 511.0);
     }
 
     #[test]

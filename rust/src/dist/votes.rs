@@ -39,6 +39,21 @@ impl PackedVotes {
         PackedVotes { bytes: codec::pack_signs(votes), len: votes.len() }
     }
 
+    /// A zero-coordinate placeholder — the initial state of persistent
+    /// per-rank vote buffers before their first [`pack_into`](Self::pack_into).
+    pub fn empty() -> PackedVotes {
+        PackedVotes { bytes: Vec::new(), len: 0 }
+    }
+
+    /// Re-pack in place, reusing this buffer's allocation
+    /// ([`codec::pack_signs_into`]). Persistent per-rank buffers call
+    /// this every round, so the steady-state packed data path allocates
+    /// nothing.
+    pub fn pack_into(&mut self, votes: &[f32]) {
+        codec::pack_signs_into(votes, &mut self.bytes);
+        self.len = votes.len();
+    }
+
     /// Adopt an already-packed payload of `len` coordinates.
     pub fn from_bytes(bytes: Vec<u8>, len: usize) -> PackedVotes {
         assert_eq!(
@@ -195,6 +210,27 @@ mod tests {
         assert_eq!(p.unpack(), vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0]);
         assert_eq!(p.as_bytes().len(), codec::packed_len(6));
         assert_eq!(p.wire_bytes(), codec::sign_allreduce_bytes(6));
+    }
+
+    #[test]
+    fn pack_into_reuses_the_buffer_and_matches_pack() {
+        let mut buf = PackedVotes::empty();
+        assert!(buf.is_empty());
+        for len in [5usize, 130, 64, 7] {
+            let v: Vec<f32> =
+                (0..len).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+            buf.pack_into(&v);
+            assert_eq!(buf, PackedVotes::pack(&v), "len={len}");
+        }
+        // steady state at a fixed length: capacity is reused, so
+        // repacking must not grow the allocation
+        let v = vec![-1.0f32; 1024];
+        buf.pack_into(&v);
+        let cap = buf.bytes.capacity();
+        for _ in 0..10 {
+            buf.pack_into(&v);
+        }
+        assert_eq!(buf.bytes.capacity(), cap);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -24,8 +24,10 @@ pub struct Harness {
     pub use_cache: bool,
     pub quiet: bool,
     /// Compiled-executable cache: one ModelBundle per preset, shared by
-    /// every run in a sweep (XLA compilation is ~15 s per preset).
-    bundles: RefCell<HashMap<String, Rc<ModelBundle>>>,
+    /// every run in a sweep (XLA compilation is ~15 s per preset). The
+    /// `Arc` is what the trainer's parallel worker fleet clones across
+    /// pool threads.
+    bundles: RefCell<HashMap<String, Arc<ModelBundle>>>,
 }
 
 impl Harness {
@@ -42,12 +44,12 @@ impl Harness {
         })
     }
 
-    pub fn bundle(&self, preset: &str) -> Result<Rc<ModelBundle>> {
+    pub fn bundle(&self, preset: &str) -> Result<Arc<ModelBundle>> {
         if let Some(b) = self.bundles.borrow().get(preset) {
             return Ok(b.clone());
         }
         let info = self.arts.preset(preset)?;
-        let b = Rc::new(ModelBundle::load(&self.rt, info)?);
+        let b = Arc::new(ModelBundle::load(&self.rt, info)?);
         self.bundles.borrow_mut().insert(preset.to_string(), b.clone());
         Ok(b)
     }
@@ -122,10 +124,19 @@ pub struct RunSummary {
     pub log: RunLog,
 }
 
+/// Bump whenever the *models* behind a run change (comm topology,
+/// clock accounting, data path) so stale cache CSVs computed under the
+/// old formulas are not mixed into new tables. v2: sign-vote rounds
+/// moved from the ring α-β formula to gather+broadcast (PR 3).
+const CACHE_MODEL_VERSION: &str = "v2";
+
 /// Content hash of everything that determines a run's trajectory.
+/// `cfg.sequential_workers` is deliberately excluded: the parallel and
+/// sequential fleets produce bit-identical trajectories (only measured
+/// wall-clock differs, and measured time was never part of the key).
 fn cache_key(cfg: &RunConfig) -> String {
     let desc = format!(
-        "{}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{}|{}|{}",
+        "{CACHE_MODEL_VERSION}|{}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{}|{}|{}",
         cfg.describe(),
         cfg.base,
         cfg.outer,

@@ -32,6 +32,8 @@ const BOOL_FLAGS: &[&str] = &[
     "nesterov",
     "signed",
     "heterogeneous",
+    "reference-votes",
+    "sequential-workers",
 ];
 
 const USAGE: &str = "\
@@ -41,8 +43,8 @@ USAGE:
   repro train   [--config run.toml] [--preset P] [--workers N] [--tau K]
                 [--rounds T] [--outer ALGO] [--global-lr F] [--peak-lr F]
                 [--mode local|standalone] [--comm PRESET] [--seed S]
-                [--pallas-global-step] [--log-dir DIR] [--checkpoint F]
-                [--resume F]
+                [--pallas-global-step] [--sequential-workers]
+                [--log-dir DIR] [--checkpoint F] [--resume F]
   repro experiment <id|all> [--scale F] [--big] [--no-cache]
   repro data    [--bytes N] [--seed S] [--bpe-vocab V] [--out FILE]
   repro inspect manifest|checkpoint [PATH]

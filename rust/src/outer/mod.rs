@@ -105,9 +105,12 @@ pub trait OuterOptimizer: Send {
     /// Worker-side half of the packed 1-bit exchange (only called when
     /// [`sign_compressed_comm`](Self::sign_compressed_comm) is true):
     /// fold rank `worker`'s last local stochastic gradient into its
-    /// local state and emit the packed randomized-sign vote that
-    /// crosses the simulated wire. The trainer calls this once per
-    /// rank, in rank order, before
+    /// local state and pack the randomized-sign vote that crosses the
+    /// simulated wire into `out` — a persistent per-rank buffer the
+    /// trainer owns and re-passes every round, so the steady-state
+    /// packed path allocates nothing
+    /// ([`PackedVotes::pack_into`](crate::dist::PackedVotes::pack_into)).
+    /// The trainer calls this once per rank, in rank order, before
     /// [`round_packed`](Self::round_packed).
     fn make_votes(
         &mut self,
@@ -115,8 +118,9 @@ pub trait OuterOptimizer: Send {
         n_workers: usize,
         last_grad: &[f32],
         rng: &mut Rng,
-    ) -> PackedVotes {
-        let _ = (worker, n_workers, last_grad, rng);
+        out: &mut PackedVotes,
+    ) {
+        let _ = (worker, n_workers, last_grad, rng, out);
         unimplemented!("{}: no packed-vote data path", self.name())
     }
 

@@ -42,9 +42,15 @@ pub struct MvSignSgd {
     m: Vec<Vec<f32>>,
     x_prev: Vec<f32>,
     /// Dim-sized scratch reused across ranks and rounds: the
-    /// randomized-sign output in `produce_vote`, the decoded winner in
-    /// `apply_votes` (not checkpointed — overwritten before every use).
+    /// randomized-sign output in `fold_and_sign`, the decoded winner in
+    /// `apply_packed` (not checkpointed — overwritten before every use).
     scratch: Vec<f32>,
+    /// Persistent per-rank packed vote buffers for the f32 reference
+    /// path (`round`): reused every round via [`PackedVotes::pack_into`],
+    /// so the steady state allocates nothing. Not checkpointed — fully
+    /// overwritten before every tally. (On the packed wire path the
+    /// trainer owns the equivalent persistent buffers.)
+    packed: Vec<PackedVotes>,
     dim: usize,
 }
 
@@ -58,6 +64,7 @@ impl MvSignSgd {
             m: Vec::new(),
             x_prev: vec![0.0; dim],
             scratch: vec![0.0; dim],
+            packed: Vec::new(),
             dim,
         }
     }
@@ -71,32 +78,43 @@ impl MvSignSgd {
         assert_eq!(self.m.len(), n, "worker count changed mid-run");
     }
 
-    /// Worker-side vote production: fold the rank's last stochastic
-    /// gradient into its momentum, apply the randomized sign S_r, and
-    /// pack to the 1-bit wire format.
-    fn produce_vote(&mut self, worker: usize, grad: &[f32], rng: &mut Rng) -> PackedVotes {
+    /// Worker-side half of vote production: fold the rank's last
+    /// stochastic gradient into its momentum and apply the randomized
+    /// sign S_r into `self.scratch` (packing is the caller's step, so
+    /// the destination buffer can be caller-owned and persistent).
+    fn fold_and_sign(&mut self, worker: usize, grad: &[f32], rng: &mut Rng) {
         assert_eq!(grad.len(), self.dim, "worker {worker}: gradient length");
         let m = &mut self.m[worker];
         for (mi, &g) in m.iter_mut().zip(grad) {
             *mi = self.beta * *mi + (1.0 - self.beta) * g;
         }
         SignOp::RandPm.apply_into(&mut self.scratch, m, self.bound, rng);
-        PackedVotes::pack(&self.scratch)
     }
+}
 
-    /// Server-side step: word-level majority tally over the packed
-    /// votes, then a step of -η · winner from the round's start point.
-    /// NOTE: `start` is what `local_start` produced — y_t when α > 0 —
-    /// so with extrapolation the update and the stored x_prev anchor at
-    /// y_t rather than x_t. This preserves the seed's semantics
-    /// bit-for-bit; auditing it against Algorithm 6's exact recursion
-    /// is ROADMAP follow-up (g).
-    fn apply_votes(&mut self, global: &mut [f32], start: &[f32], packed: &[PackedVotes]) {
-        votes::majority_vote_packed(packed, &mut self.scratch);
-        self.x_prev.copy_from_slice(start);
-        for ((g, &x), &w) in global.iter_mut().zip(start).zip(&self.scratch) {
-            *g = x - self.eta * w;
-        }
+/// Server-side step: word-level majority tally over the packed votes
+/// into `winner`, then a step of -η · winner from the round's start
+/// point. A free function over the individual buffers so both the f32
+/// reference path (tallying `self.packed`) and the trainer's packed
+/// wire path (tallying external votes) can borrow `MvSignSgd`'s fields
+/// disjointly.
+/// NOTE: `start` is what `local_start` produced — y_t when α > 0 —
+/// so with extrapolation the update and the stored x_prev anchor at
+/// y_t rather than x_t. This preserves the seed's semantics
+/// bit-for-bit; auditing it against Algorithm 6's exact recursion
+/// is ROADMAP follow-up (g).
+fn apply_packed(
+    global: &mut [f32],
+    start: &[f32],
+    packed: &[PackedVotes],
+    winner: &mut [f32],
+    x_prev: &mut [f32],
+    eta: f32,
+) {
+    votes::majority_vote_packed(packed, winner);
+    x_prev.copy_from_slice(start);
+    for ((g, &x), &w) in global.iter_mut().zip(start).zip(winner.iter()) {
+        *g = x - eta * w;
     }
 }
 
@@ -108,11 +126,21 @@ impl OuterOptimizer for MvSignSgd {
     fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng) {
         let n = ctx.worker_last_grad.len();
         self.ensure_workers(n);
-        let mut packed = Vec::with_capacity(n);
-        for (w, grad) in ctx.worker_last_grad.iter().enumerate() {
-            packed.push(self.produce_vote(w, grad, rng));
+        if self.packed.len() != n {
+            self.packed = vec![PackedVotes::empty(); n];
         }
-        self.apply_votes(global, ctx.start, &packed);
+        for (w, grad) in ctx.worker_last_grad.iter().enumerate() {
+            self.fold_and_sign(w, grad, rng);
+            self.packed[w].pack_into(&self.scratch);
+        }
+        apply_packed(
+            global,
+            ctx.start,
+            &self.packed,
+            &mut self.scratch,
+            &mut self.x_prev,
+            self.eta,
+        );
     }
 
     fn make_votes(
@@ -121,9 +149,11 @@ impl OuterOptimizer for MvSignSgd {
         n_workers: usize,
         last_grad: &[f32],
         rng: &mut Rng,
-    ) -> PackedVotes {
+        out: &mut PackedVotes,
+    ) {
         self.ensure_workers(n_workers);
-        self.produce_vote(worker, last_grad, rng)
+        self.fold_and_sign(worker, last_grad, rng);
+        out.pack_into(&self.scratch);
     }
 
     fn round_packed(
@@ -134,7 +164,7 @@ impl OuterOptimizer for MvSignSgd {
         _rng: &mut Rng,
     ) {
         self.ensure_workers(votes.len());
-        self.apply_votes(global, ctx.start, votes);
+        apply_packed(global, ctx.start, votes, &mut self.scratch, &mut self.x_prev, self.eta);
     }
 
     fn local_start(&mut self, global: &[f32]) -> Vec<f32> {
@@ -240,9 +270,10 @@ mod tests {
         let mut b = MvSignSgd::new(2, eta, 0.0, 0.0, 1.0);
         let mut gb = start.clone();
         let mut rng_b = Rng::new(11);
-        let votes: Vec<PackedVotes> = (0..2)
-            .map(|w| b.make_votes(w, 2, &grads_own[w], &mut rng_b))
-            .collect();
+        let mut votes = vec![PackedVotes::empty(); 2];
+        for w in 0..2 {
+            b.make_votes(w, 2, &grads_own[w], &mut rng_b, &mut votes[w]);
+        }
         let ctx = PackedRoundCtx { start: &start, gamma: 0.1, round: 0 };
         b.round_packed(&mut gb, &ctx, &votes, &mut rng_b);
         assert_eq!(gb, ga);
@@ -268,9 +299,10 @@ mod tests {
         let mut b = MvSignSgd::new(dim, 0.3, 0.5, 0.0, 4.0);
         let mut gb = start.clone();
         let mut rng_b = Rng::new(99);
-        let votes: Vec<PackedVotes> = (0..n)
-            .map(|w| b.make_votes(w, n, &grads_own[w], &mut rng_b))
-            .collect();
+        let mut votes = vec![PackedVotes::empty(); n];
+        for w in 0..n {
+            b.make_votes(w, n, &grads_own[w], &mut rng_b, &mut votes[w]);
+        }
         let ctx = PackedRoundCtx { start: &start, gamma: 0.1, round: 0 };
         b.round_packed(&mut gb, &ctx, &votes, &mut rng_b);
 

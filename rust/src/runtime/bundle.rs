@@ -2,7 +2,7 @@
 
 use anyhow::{anyhow, Context, Result};
 
-use super::{anyhow_xla, PresetInfo, Runtime};
+use super::{anyhow_xla, PresetInfo, Runtime, StepBackend};
 use crate::data::dataset::Batch;
 
 /// Result of one training step on one worker's minibatch.
@@ -13,15 +13,30 @@ pub struct StepOutput {
 
 /// Compiled init/train/eval for a model preset.
 ///
-/// NOT `Sync`: PJRT executables are driven from the coordinator thread.
-/// The simulated workers share this bundle (data-parallel workers run the
-/// same program on different data — exactly how a real cluster shares a
-/// compiled step function).
+/// `Send + Sync`: the parallel worker fleet executes `train_step`
+/// concurrently from several pool threads, one simulated rank per
+/// thread, all sharing this bundle through an `Arc` (data-parallel
+/// workers run the same program on different data — exactly how a real
+/// cluster shares a compiled step function). PJRT loaded executables
+/// are thread-safe (`execute` takes `&self` and the client serializes
+/// device access internally), so sharing the compiled artifacts is the
+/// cheap-replica strategy: zero copies, no recompilation per thread.
+/// The `assert_threaded_fleet_contract` check below fails compilation
+/// if a future binding swap silently loses this property.
 pub struct ModelBundle {
     pub info: PresetInfo,
     init: xla::PjRtLoadedExecutable,
     train: xla::PjRtLoadedExecutable,
     eval: xla::PjRtLoadedExecutable,
+}
+
+/// Compile-time guard for the fleet threading contract (see the
+/// [`ModelBundle`] docs): the trainer hands `Arc<dyn StepBackend>`
+/// clones to pool threads, which requires `ModelBundle: Send + Sync`.
+#[allow(dead_code)]
+fn assert_threaded_fleet_contract() {
+    fn requires_send_sync<T: Send + Sync>() {}
+    requires_send_sync::<ModelBundle>();
 }
 
 impl ModelBundle {
@@ -95,13 +110,24 @@ impl ModelBundle {
         Ok(loss.to_vec::<f32>().map_err(anyhow_xla)?[0])
     }
 
-    /// Mean eval loss over several batches.
-    pub fn eval_loss_many(&self, params: &[f32], batches: &[Batch]) -> Result<f64> {
-        anyhow::ensure!(!batches.is_empty());
-        let mut acc = 0.0f64;
-        for b in batches {
-            acc += self.eval_loss(params, b)? as f64;
-        }
-        Ok(acc / batches.len() as f64)
+}
+
+// Batched eval (`eval_loss_many`) deliberately has no override or
+// inherent twin: the trait default is the single copy of that loop.
+impl StepBackend for ModelBundle {
+    fn info(&self) -> &PresetInfo {
+        &self.info
+    }
+
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        ModelBundle::init_params(self, seed)
+    }
+
+    fn train_step(&self, params: &[f32], batch: &Batch) -> Result<StepOutput> {
+        ModelBundle::train_step(self, params, batch)
+    }
+
+    fn eval_loss(&self, params: &[f32], batch: &Batch) -> Result<f32> {
+        ModelBundle::eval_loss(self, params, batch)
     }
 }

@@ -9,6 +9,10 @@
 //!   with `Vec<f32>`-level ergonomics (flat params ABI).
 //! * [`SignUpdateKernel`] — the AOT'd fused Pallas sign-momentum kernel,
 //!   applied chunk-wise over arbitrarily sized parameter vectors.
+//! * [`StepBackend`] — the compute contract the trainer drives
+//!   (`Send + Sync`: the parallel worker fleet shares one backend
+//!   across pool threads); implemented by [`ModelBundle`] and by
+//!   [`NativeBundle`], a pure-Rust MLP LM that needs no PJRT at all.
 //!
 //! Interchange is HLO *text*: jax ≥ 0.5 emits 64-bit instruction ids that
 //! xla_extension 0.5.1's proto path rejects; the text parser reassigns
@@ -16,13 +20,56 @@
 
 mod artifacts;
 mod bundle;
+mod native;
 mod sign_kernel;
 
 pub use artifacts::{Artifacts, ParamEntry, PresetInfo};
 pub use bundle::{ModelBundle, StepOutput};
+pub use native::NativeBundle;
 pub use sign_kernel::{SignUpdateKernel, SignUpdateScalars};
 
 use anyhow::Result;
+
+use crate::data::dataset::Batch;
+
+/// The compute contract the trainer drives: init / fwd+bwd / eval over
+/// the flat `f32[P]` parameter vector.
+///
+/// # Threading contract
+///
+/// `Send + Sync` is part of the trait: the parallel worker fleet
+/// (`dist::pool::run_indexed_mut`) calls [`StepBackend::train_step`]
+/// concurrently from several pool threads, one simulated rank per
+/// thread, all sharing one backend through an `Arc`. Implementations
+/// must therefore be safe to execute from any thread with `&self` —
+/// PJRT loaded executables satisfy this (PJRT clients are thread-safe
+/// and `execute` takes shared references); a binding that is not
+/// thread-safe must synchronize internally rather than relying on the
+/// coordinator thread, because there no longer is a single compute
+/// thread.
+pub trait StepBackend: Send + Sync {
+    /// Static model description (shapes, parameter count, preset name).
+    fn info(&self) -> &PresetInfo;
+
+    /// Deterministic parameter initialization: seed -> flat f32[P].
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>>;
+
+    /// One fwd+bwd pass: (params, batch) -> (loss, flat grads).
+    fn train_step(&self, params: &[f32], batch: &Batch) -> Result<StepOutput>;
+
+    /// Loss-only forward pass (validation).
+    fn eval_loss(&self, params: &[f32], batch: &Batch) -> Result<f32>;
+
+    /// Mean eval loss over several batches.
+    fn eval_loss_many(&self, params: &[f32], batches: &[Batch]) -> Result<f64> {
+        anyhow::ensure!(!batches.is_empty());
+        let mut acc = 0.0f64;
+        for b in batches {
+            acc += self.eval_loss(params, b)? as f64;
+        }
+        Ok(acc / batches.len() as f64)
+    }
+}
 
 /// Shared PJRT CPU client.  One per process; executables keep an internal
 /// clone handle, so `Runtime` is cheap to pass around by reference.

@@ -1,0 +1,294 @@
+//! Native (pure-Rust) [`StepBackend`]: a one-hidden-layer MLP language
+//! model with exact gradients, no PJRT required.
+//!
+//! The AOT'd GPT-2 artifacts need a real PJRT backend; this in-tree
+//! fallback gives every trainer-level code path — the parallel worker
+//! fleet, checkpoint resume, the simulated clock, all outer optimizers —
+//! a fully deterministic compute engine that runs anywhere the crate
+//! builds. Differential tests (`rust/tests/parallel_fleet.rs`) and the
+//! trainer bench (`benches/trainer.rs`, which records sequential- vs
+//! parallel-fleet round wall-clock) drive the trainer through it.
+//!
+//! The model is deliberately simple but *real*: per position, a tanh
+//! hidden layer over a byte embedding followed by a softmax over the
+//! 256-way vocabulary,
+//!
+//! ```text
+//!     h = tanh(E[x])          E: 256 × D   (embedding)
+//!     z = hᵀ W                W: D × 256   (output projection)
+//!     loss = CE(softmax(z), y)
+//! ```
+//!
+//! with exact backward passes for both matrices. Compute per step is
+//! O(B·S·D·256) — enough arithmetic that the per-round fleet fan-out
+//! has something to parallelize. Every operation is scalar f32/f64
+//! with a fixed accumulation order, so `train_step` is bit-deterministic
+//! for a given (params, batch) on a given host — the property the
+//! parallel ≡ sequential differential tests pin.
+
+use anyhow::Result;
+
+use super::{PresetInfo, StepBackend, StepOutput};
+use crate::data::dataset::Batch;
+use crate::util::rng::Rng;
+
+const VOCAB: usize = 256;
+
+/// Pure-Rust MLP LM backend. Stateless across steps (all state lives in
+/// the flat parameter vector), hence trivially `Send + Sync`.
+pub struct NativeBundle {
+    info: PresetInfo,
+    d_model: usize,
+}
+
+impl NativeBundle {
+    /// Build a native backend whose [`PresetInfo`] advertises
+    /// `param_count = 2 · 256 · d_model` (embedding + output matrices).
+    pub fn new(name: &str, batch: usize, seq: usize, d_model: usize) -> NativeBundle {
+        assert!(d_model >= 1 && batch >= 1 && seq >= 1);
+        let param_count = 2 * VOCAB * d_model;
+        let layout = vec![
+            super::ParamEntry {
+                name: "native.embed".into(),
+                offset: 0,
+                shape: vec![VOCAB, d_model],
+            },
+            super::ParamEntry {
+                name: "native.out".into(),
+                offset: VOCAB * d_model,
+                shape: vec![d_model, VOCAB],
+            },
+        ];
+        NativeBundle {
+            info: PresetInfo {
+                name: name.to_string(),
+                vocab: VOCAB,
+                d_model,
+                n_head: 1,
+                n_layer: 1,
+                seq,
+                batch,
+                param_count,
+                init_file: std::path::PathBuf::new(),
+                train_file: std::path::PathBuf::new(),
+                eval_file: std::path::PathBuf::new(),
+                layout,
+            },
+            d_model,
+        }
+    }
+
+    fn check_shapes(&self, params: &[f32], batch: &Batch) -> Result<()> {
+        anyhow::ensure!(
+            params.len() == self.info.param_count,
+            "param size mismatch: {} vs {}",
+            params.len(),
+            self.info.param_count
+        );
+        anyhow::ensure!(
+            batch.batch == self.info.batch && batch.seq == self.info.seq,
+            "batch shape ({}, {}) does not match native shape ({}, {})",
+            batch.batch,
+            batch.seq,
+            self.info.batch,
+            self.info.seq
+        );
+        Ok(())
+    }
+
+    /// Forward (and optionally backward) over every position. Returns
+    /// the mean cross-entropy; fills `grads` when given.
+    fn pass(&self, params: &[f32], batch: &Batch, mut grads: Option<&mut [f32]>) -> Result<f64> {
+        let d = self.d_model;
+        let (embed, out_w) = params.split_at(VOCAB * d);
+        let positions = batch.batch * batch.seq;
+        let inv_pos = 1.0f32 / positions as f32;
+
+        let mut h = vec![0.0f32; d];
+        let mut logits = vec![0.0f32; VOCAB];
+        let mut loss_acc = 0.0f64;
+
+        for pos in 0..positions {
+            let x = batch.tokens[pos];
+            let y = batch.targets[pos];
+            anyhow::ensure!(
+                (0..VOCAB as i32).contains(&x) && (0..VOCAB as i32).contains(&y),
+                "token {x}/{y} outside the byte vocabulary"
+            );
+            let (x, y) = (x as usize, y as usize);
+
+            // h = tanh(E[x]);  z = hᵀ W
+            for (hj, &e) in h.iter_mut().zip(&embed[x * d..(x + 1) * d]) {
+                *hj = e.tanh();
+            }
+            logits.fill(0.0);
+            for (j, &hj) in h.iter().enumerate() {
+                for (zl, &w) in logits.iter_mut().zip(&out_w[j * VOCAB..(j + 1) * VOCAB]) {
+                    *zl += hj * w;
+                }
+            }
+
+            // stable softmax cross-entropy
+            let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut z_sum = 0.0f32;
+            for zl in logits.iter_mut() {
+                *zl = (*zl - m).exp();
+                z_sum += *zl;
+            }
+            // -ln p_y with logits[l] now holding exp(z_l - m)
+            loss_acc += (z_sum.ln() - logits[y].ln()) as f64;
+            let Some(g) = grads.as_deref_mut() else { continue };
+
+            // dz = softmax(z) - onehot(y), scaled to the positional mean
+            let inv_z = 1.0 / z_sum;
+            for zl in logits.iter_mut() {
+                *zl *= inv_z * inv_pos;
+            }
+            logits[y] -= inv_pos;
+
+            let (g_embed, g_out) = g.split_at_mut(VOCAB * d);
+            // dW[j, :] += h[j] · dz ;  dh[j] = Σ_l W[j, l] dz[l]
+            for (j, &hj) in h.iter().enumerate() {
+                let w_row = &out_w[j * VOCAB..(j + 1) * VOCAB];
+                let gw_row = &mut g_out[j * VOCAB..(j + 1) * VOCAB];
+                let mut dh = 0.0f32;
+                for ((gw, &w), &dz) in gw_row.iter_mut().zip(w_row).zip(logits.iter()) {
+                    *gw += hj * dz;
+                    dh += w * dz;
+                }
+                // dE[x, j] = dh[j] · (1 - h[j]²)
+                g_embed[x * d + j] += dh * (1.0 - hj * hj);
+            }
+        }
+        Ok(loss_acc / positions as f64)
+    }
+}
+
+impl StepBackend for NativeBundle {
+    fn info(&self) -> &PresetInfo {
+        &self.info
+    }
+
+    fn init_params(&self, seed: u32) -> Result<Vec<f32>> {
+        let mut rng = Rng::new(seed as u64).substream("native-init", 0);
+        let mut params = vec![0.0f32; self.info.param_count];
+        rng.fill_normal(&mut params, 0.08);
+        Ok(params)
+    }
+
+    fn train_step(&self, params: &[f32], batch: &Batch) -> Result<StepOutput> {
+        self.check_shapes(params, batch)?;
+        let mut grads = vec![0.0f32; self.info.param_count];
+        let loss = self.pass(params, batch, Some(&mut grads))?;
+        Ok(StepOutput { loss: loss as f32, grads })
+    }
+
+    fn eval_loss(&self, params: &[f32], batch: &Batch) -> Result<f32> {
+        self.check_shapes(params, batch)?;
+        Ok(self.pass(params, batch, None)? as f32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batch_of(tokens: Vec<i32>, targets: Vec<i32>, b: usize, s: usize) -> Batch {
+        Batch { tokens, targets, batch: b, seq: s }
+    }
+
+    fn tiny() -> (NativeBundle, Vec<f32>, Batch) {
+        let nb = NativeBundle::new("native-test", 2, 3, 4);
+        let params = nb.init_params(7).unwrap();
+        let batch = batch_of(vec![1, 2, 3, 250, 0, 9], vec![2, 3, 4, 0, 9, 1], 2, 3);
+        (nb, params, batch)
+    }
+
+    #[test]
+    fn info_and_init_are_consistent() {
+        let (nb, params, _) = tiny();
+        assert_eq!(nb.info().param_count, 2 * 256 * 4);
+        assert_eq!(params.len(), nb.info().param_count);
+        let again = nb.init_params(7).unwrap();
+        assert_eq!(params, again, "init must be deterministic in the seed");
+        assert_ne!(params, nb.init_params(8).unwrap());
+    }
+
+    #[test]
+    fn initial_loss_is_near_uniform() {
+        let (nb, params, batch) = tiny();
+        let loss = nb.eval_loss(&params, &batch).unwrap();
+        let uniform = (256f32).ln();
+        assert!((loss - uniform).abs() < 0.5, "loss {loss} vs uniform {uniform}");
+    }
+
+    #[test]
+    fn train_step_is_bit_deterministic() {
+        let (nb, params, batch) = tiny();
+        let a = nb.train_step(&params, &batch).unwrap();
+        let b = nb.train_step(&params, &batch).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        for (x, y) in a.grads.iter().zip(&b.grads) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let nb = NativeBundle::new("native-fd", 1, 2, 3);
+        let mut params = nb.init_params(3).unwrap();
+        let batch = batch_of(vec![5, 6], vec![6, 7], 1, 2);
+        let out = nb.train_step(&params, &batch).unwrap();
+        // probe a handful of coordinates in both matrices, including the
+        // embedding rows actually touched (tokens 5 and 6)
+        let d = 3;
+        let probes =
+            [5 * d, 5 * d + 2, 6 * d + 1, 256 * d + 6, 256 * d + 3 * 256 / 2, 2 * 256 * d - 1];
+        let h = 1e-3f32;
+        for &i in &probes {
+            let orig = params[i];
+            params[i] = orig + h;
+            let lp = nb.eval_loss(&params, &batch).unwrap();
+            params[i] = orig - h;
+            let lm = nb.eval_loss(&params, &batch).unwrap();
+            params[i] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (out.grads[i] - fd).abs() < 2e-2_f32.max(0.1 * fd.abs()),
+                "coord {i}: analytic {} vs fd {fd}",
+                out.grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sgd_on_repeated_batch_reduces_loss() {
+        let nb = NativeBundle::new("native-sgd", 2, 4, 6);
+        let mut params = nb.init_params(1).unwrap();
+        let batch = batch_of(
+            vec![10, 20, 30, 40, 50, 60, 70, 80],
+            vec![20, 30, 40, 50, 60, 70, 80, 90],
+            2,
+            4,
+        );
+        let before = nb.eval_loss(&params, &batch).unwrap();
+        for _ in 0..50 {
+            let out = nb.train_step(&params, &batch).unwrap();
+            for (p, g) in params.iter_mut().zip(&out.grads) {
+                *p -= 0.5 * g;
+            }
+        }
+        let after = nb.eval_loss(&params, &batch).unwrap();
+        assert!(after < before - 0.5, "{before} -> {after}");
+    }
+
+    #[test]
+    fn shape_mismatches_fail_loudly() {
+        let (nb, params, batch) = tiny();
+        assert!(nb.train_step(&params[1..], &batch).is_err());
+        let bad = batch_of(vec![0; 4], vec![0; 4], 2, 2);
+        assert!(nb.eval_loss(&params, &bad).is_err());
+        let oob = batch_of(vec![999; 6], vec![0; 6], 2, 3);
+        assert!(nb.train_step(&params, &oob).is_err());
+    }
+}

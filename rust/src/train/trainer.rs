@@ -3,11 +3,31 @@
 //! communication, validation, and logging.
 //!
 //! One `Trainer` drives n simulated workers through T outer rounds of τ
-//! local steps each.  The PJRT executables do the real compute (GPT-2
-//! fwd/bwd through the Pallas attention kernel); everything around them —
+//! local steps each.  The backend ([`StepBackend`]: PJRT executables or
+//! the native MLP LM) does the real compute; everything around it —
 //! sharded batch sampling, base optimizer steps, exact averaging, the
 //! global sign-momentum step — is native Rust on the flat f32[P] vector.
+//!
+//! # Parallel fleet execution
+//!
+//! The n simulated ranks of one round execute **concurrently** on the
+//! persistent pool ([`crate::dist::pool::run_indexed_mut`]): each rank
+//! job owns a disjoint `&mut Worker` (its iterate, RNG substream, and
+//! base-optimizer state) and shares the compiled backend through the
+//! `Send + Sync` contract on [`StepBackend`]. This is bitwise-identical
+//! to the serial loop — per-rank arithmetic is unchanged, per-rank
+//! results are gathered by rank index, and the trainer RNG is only
+//! consumed on the coordinator after the fleet joins — so loss curves,
+//! checkpoints, and RNG streams match the `cfg.sequential_workers`
+//! reference path to the last bit (`rust/tests/parallel_fleet.rs`).
+//! Only wall-clock changes: one round costs ~max(rank) instead of
+//! Σ(rank) (`benches/trainer.rs` records the speedup). The measured
+//! per-rank compute seconds that feed `SimClock` are wall clock, so
+//! concurrent ranks can include host-contention inflation — see
+//! `SimClock::charge_parallel_compute` and `cfg.sequential_workers`
+//! for the uncontended-measurement reference.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
@@ -17,10 +37,10 @@ use crate::config::{RunConfig, TrainMode};
 use crate::data::corpus::{self, CorpusConfig};
 use crate::data::dataset::{Batch, TokenDataset};
 use crate::data::tokenizer::ByteTokenizer;
-use crate::dist::{codec, collectives, PackedVotes, Worker};
+use crate::dist::{codec, collectives, pool, PackedVotes, Worker};
 use crate::outer::{OuterConfig, OuterOptimizer, PackedRoundCtx, RoundCtx};
 use crate::runtime::{
-    Artifacts, ModelBundle, Runtime, SignUpdateKernel, SignUpdateScalars,
+    Artifacts, Runtime, SignUpdateKernel, SignUpdateScalars, StepBackend,
 };
 use crate::tensor;
 use crate::train::checkpoint::Checkpoint;
@@ -30,7 +50,7 @@ use crate::util::rng::Rng;
 
 pub struct Trainer {
     pub cfg: RunConfig,
-    bundle: std::rc::Rc<ModelBundle>,
+    backend: Arc<dyn StepBackend>,
     dataset: TokenDataset,
     workers: Vec<Worker>,
     global: Vec<f32>,
@@ -41,9 +61,32 @@ pub struct Trainer {
     clock: SimClock,
     rng: Rng,
     val_batches: Vec<Batch>,
+    /// Persistent per-rank packed vote buffers (sign-compressed outer
+    /// optimizers): reused every round, so the steady-state packed data
+    /// path allocates nothing.
+    vote_bufs: Vec<PackedVotes>,
     log: RunLog,
     local_step: u64,
     round: u64,
+}
+
+/// Run one closure per rank over the whole fleet — concurrently on the
+/// persistent pool by default, serially on the calling thread when
+/// `sequential` asks for the reference path — gathering the per-rank
+/// results in rank order. The two execution modes are bitwise-identical
+/// by construction: each job touches only its own `Worker` plus shared
+/// read-only state (backend, dataset, schedule), and the trainer RNG is
+/// never consumed inside a job.
+fn run_fleet<R, F>(sequential: bool, workers: &mut [Worker], job: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize, &mut Worker) -> R + Sync,
+{
+    if sequential {
+        workers.iter_mut().enumerate().map(|(w, worker)| job(w, worker)).collect()
+    } else {
+        pool::run_indexed_mut(workers, job)
+    }
 }
 
 /// Momentum state for the Pallas-kernel global-step path.
@@ -65,22 +108,55 @@ pub struct RunResult {
 impl Trainer {
     pub fn new(cfg: RunConfig, rt: &Runtime, arts: &Artifacts) -> Result<Trainer> {
         let info = arts.preset(&cfg.preset)?;
-        let bundle = std::rc::Rc::new(ModelBundle::load(rt, info)?);
+        let bundle = Arc::new(crate::runtime::ModelBundle::load(rt, info)?);
         Trainer::with_bundle(cfg, bundle, rt, arts)
     }
 
     /// Build a trainer around an already-compiled bundle (the experiment
     /// harness shares one compiled bundle per preset across dozens of runs
-    /// — XLA compilation costs ~15 s per preset on this host).
+    /// — XLA compilation costs ~15 s per preset on this host). `rt`/`arts`
+    /// are only consulted for the optional Pallas global-step kernel.
     pub fn with_bundle(
         cfg: RunConfig,
-        bundle: std::rc::Rc<ModelBundle>,
+        bundle: Arc<dyn StepBackend>,
         rt: &Runtime,
         arts: &Artifacts,
     ) -> Result<Trainer> {
+        let pallas_step = if cfg.global_step_pallas {
+            let OuterConfig::SignMomentum { eta, beta1, beta2, weight_decay, .. } = cfg.outer
+            else {
+                anyhow::bail!("--pallas-global-step requires the sign_momentum outer optimizer");
+            };
+            let p = bundle.info().param_count;
+            let kernel = SignUpdateKernel::load(rt, arts)?;
+            Some((kernel, PallasSignState { m: vec![0.0; p], eta, beta1, beta2, weight_decay }))
+        } else {
+            None
+        };
+        Trainer::build(cfg, bundle, pallas_step)
+    }
+
+    /// Build a trainer over any [`StepBackend`] — e.g. the pure-Rust
+    /// [`crate::runtime::NativeBundle`] — with no PJRT runtime or
+    /// artifacts directory required. The Pallas global-step path needs
+    /// the AOT'd kernel, so it is only reachable through
+    /// [`Trainer::with_bundle`].
+    pub fn with_backend(cfg: RunConfig, backend: Arc<dyn StepBackend>) -> Result<Trainer> {
+        anyhow::ensure!(
+            !cfg.global_step_pallas,
+            "--pallas-global-step requires Trainer::with_bundle (AOT'd kernel)"
+        );
+        Trainer::build(cfg, backend, None)
+    }
+
+    fn build(
+        cfg: RunConfig,
+        bundle: Arc<dyn StepBackend>,
+        pallas_step: Option<(SignUpdateKernel, PallasSignState)>,
+    ) -> Result<Trainer> {
         cfg.validate()?;
-        anyhow::ensure!(bundle.info.name == cfg.preset, "bundle/preset mismatch");
-        let info = &bundle.info;
+        anyhow::ensure!(bundle.info().name == cfg.preset, "bundle/preset mismatch");
+        let info = bundle.info();
         let p = info.param_count;
 
         // data: deterministic synthetic corpus, byte tokenizer, n shards.
@@ -120,23 +196,12 @@ impl Trainer {
         let global = bundle.init_params(cfg.seed as u32)?;
         let outer = cfg.outer.build(p);
 
-        let pallas_step = if cfg.global_step_pallas {
-            let OuterConfig::SignMomentum { eta, beta1, beta2, weight_decay, .. } = cfg.outer
-            else {
-                anyhow::bail!("--pallas-global-step requires the sign_momentum outer optimizer");
-            };
-            let kernel = SignUpdateKernel::load(rt, arts)?;
-            Some((kernel, PallasSignState { m: vec![0.0; p], eta, beta1, beta2, weight_decay }))
-        } else {
-            None
-        };
-
         Ok(Trainer {
             schedule: cfg.schedule.build(),
             log: RunLog::new(&cfg.tag),
             rng: root_rng.substream("trainer", 0),
             cfg,
-            bundle,
+            backend: bundle,
             dataset,
             workers,
             global,
@@ -144,6 +209,7 @@ impl Trainer {
             pallas_step,
             clock: SimClock::default(),
             val_batches,
+            vote_bufs: Vec::new(),
             local_step: 0,
             round: 0,
         })
@@ -232,32 +298,48 @@ impl Trainer {
         let n = self.cfg.n_workers;
         let p = self.global.len();
         let tau = self.cfg.tau;
-        let info = &self.bundle.info;
         // γ_t for the outer step: LR at the round's first local step.
         let gamma_t = self.schedule.lr(self.local_step);
 
         let start = self.outer.local_start(&self.global);
-        let mut per_worker_secs = vec![0.0f64; n];
 
-        for w in 0..n {
-            let worker = &mut self.workers[w];
-            worker.params.copy_from_slice(&start);
-            for k in 0..tau {
-                let lr = self.schedule.lr(self.local_step + k as u64);
-                let batch =
-                    self.dataset.sample_train(w, n, info.batch, info.seq, &mut worker.rng);
-                let t0 = Instant::now();
-                let out = self.bundle.train_step(&worker.params, &batch)?;
-                per_worker_secs[w] += t0.elapsed().as_secs_f64();
-                anyhow::ensure!(
-                    out.loss.is_finite(),
-                    "worker {w} diverged at round {} (loss={})",
-                    self.round,
-                    out.loss
-                );
-                worker.observe(out.loss, &out.grads);
-                worker.opt.step(&mut worker.params, &out.grads, lr);
-            }
+        // Lines 4-7: every rank runs its τ-step local phase. The jobs
+        // fan out onto the pool; each returns its measured compute
+        // seconds (or the first error it hit), gathered by rank index.
+        let per_rank: Vec<Result<f64>> = {
+            let backend = &self.backend;
+            let dataset = &self.dataset;
+            let schedule = &self.schedule;
+            let start = &start;
+            let (batch_sz, seq) = {
+                let info = backend.info();
+                (info.batch, info.seq)
+            };
+            let (base_step, round) = (self.local_step, self.round);
+            let sequential = self.cfg.sequential_workers;
+            run_fleet(sequential, &mut self.workers, move |w, worker| -> Result<f64> {
+                worker.params.copy_from_slice(start);
+                let mut secs = 0.0f64;
+                for k in 0..tau {
+                    let lr = schedule.lr(base_step + k as u64);
+                    let batch = dataset.sample_train(w, n, batch_sz, seq, &mut worker.rng);
+                    let t0 = Instant::now();
+                    let out = backend.train_step(&worker.params, &batch)?;
+                    secs += t0.elapsed().as_secs_f64();
+                    anyhow::ensure!(
+                        out.loss.is_finite(),
+                        "worker {w} diverged at round {round} (loss={})",
+                        out.loss
+                    );
+                    worker.observe(out.loss, &out.grads);
+                    worker.opt.step(&mut worker.params, &out.grads, lr);
+                }
+                Ok(secs)
+            })
+        };
+        let mut per_worker_secs = Vec::with_capacity(n);
+        for r in per_rank {
+            per_worker_secs.push(r?);
         }
         self.local_step += tau as u64;
         self.clock.charge_parallel_compute(&per_worker_secs);
@@ -276,18 +358,26 @@ impl Trainer {
                 codec::sign_allreduce_bytes(p),
                 &mut self.rng,
             );
-            let mut votes: Vec<PackedVotes> = Vec::with_capacity(n);
+            // persistent per-rank buffers: sized once, repacked in place
+            // every round (no steady-state allocation)
+            if self.vote_bufs.len() != n {
+                self.vote_bufs = vec![PackedVotes::empty(); n];
+            }
             for w in 0..n {
-                let vote =
-                    self.outer.make_votes(w, n, &self.workers[w].last_grad, &mut self.rng);
+                self.outer.make_votes(
+                    w,
+                    n,
+                    &self.workers[w].last_grad,
+                    &mut self.rng,
+                    &mut self.vote_bufs[w],
+                );
                 // ties the billed wire cost to the buffers actually
                 // exchanged: same length ⇒ same sign_allreduce_bytes
-                assert_eq!(vote.len(), p, "worker {w}: vote length");
-                votes.push(vote);
+                assert_eq!(self.vote_bufs[w].len(), p, "worker {w}: vote length");
             }
             let ctx = PackedRoundCtx { start: &start, gamma: gamma_t, round: self.round };
             self.global.copy_from_slice(&start);
-            self.outer.round_packed(&mut self.global, &ctx, &votes, &mut self.rng);
+            self.outer.round_packed(&mut self.global, &ctx, &self.vote_bufs, &mut self.rng);
             anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
             return Ok(());
         }
@@ -300,7 +390,8 @@ impl Trainer {
         if self.outer.sign_compressed_comm() {
             self.clock.charge_sign_allreduce(&self.cfg.comm, n, p, &mut self.rng);
         } else {
-            self.clock.charge_allreduce(&self.cfg.comm, n, info.param_bytes(), &mut self.rng);
+            let param_bytes = self.backend.info().param_bytes();
+            self.clock.charge_allreduce(&self.cfg.comm, n, param_bytes, &mut self.rng);
         }
 
         // global step
@@ -342,27 +433,41 @@ impl Trainer {
     }
 
     /// One step of the standalone baseline: per-step gradient all-reduce,
-    /// single shared optimizer (the paper's "AdamW / Sophia" rows).
+    /// single shared optimizer (the paper's "AdamW / Sophia" rows). The
+    /// per-rank gradient passes fan out onto the pool exactly like
+    /// `local_round`'s local phases.
     fn standalone_step(&mut self) -> Result<()> {
         let n = self.cfg.n_workers;
-        let info = &self.bundle.info;
         let lr = self.schedule.lr(self.local_step);
-        let mut per_worker_secs = vec![0.0f64; n];
-        let mut grads = vec![vec![0.0f32; self.global.len()]; 0];
-        grads.reserve(n);
-        for w in 0..n {
-            let worker = &mut self.workers[w];
-            let batch = self.dataset.sample_train(w, n, info.batch, info.seq, &mut worker.rng);
-            let t0 = Instant::now();
-            let out = self.bundle.train_step(&self.global, &batch)?;
-            per_worker_secs[w] = t0.elapsed().as_secs_f64();
-            worker.observe(out.loss, &out.grads);
-            grads.push(out.grads);
+        let per_rank: Vec<Result<(f64, Vec<f32>)>> = {
+            let backend = &self.backend;
+            let dataset = &self.dataset;
+            let global = &self.global;
+            let (batch_sz, seq) = {
+                let info = backend.info();
+                (info.batch, info.seq)
+            };
+            run_fleet(self.cfg.sequential_workers, &mut self.workers, move |w, worker| {
+                let batch = dataset.sample_train(w, n, batch_sz, seq, &mut worker.rng);
+                let t0 = Instant::now();
+                let out = backend.train_step(global, &batch)?;
+                let secs = t0.elapsed().as_secs_f64();
+                worker.observe(out.loss, &out.grads);
+                Ok((secs, out.grads))
+            })
+        };
+        let mut per_worker_secs = Vec::with_capacity(n);
+        let mut grads = Vec::with_capacity(n);
+        for r in per_rank {
+            let (secs, g) = r?;
+            per_worker_secs.push(secs);
+            grads.push(g);
         }
         let mut mean_grad = vec![0.0f32; self.global.len()];
         collectives::allreduce_mean(&grads, |g| g.as_slice(), &mut mean_grad);
         self.clock.charge_parallel_compute(&per_worker_secs);
-        self.clock.charge_allreduce(&self.cfg.comm, n, info.param_bytes(), &mut self.rng);
+        let param_bytes = self.backend.info().param_bytes();
+        self.clock.charge_allreduce(&self.cfg.comm, n, param_bytes, &mut self.rng);
         // shared optimizer state lives in worker 0's optimizer
         self.workers[0].opt.step(&mut self.global, &mean_grad, lr);
         self.local_step += 1;
@@ -371,7 +476,7 @@ impl Trainer {
     }
 
     pub fn evaluate(&mut self) -> Result<f64> {
-        self.bundle.eval_loss_many(&self.global, &self.val_batches)
+        self.backend.eval_loss_many(&self.global, &self.val_batches)
     }
 
     // ---- checkpointing ----
@@ -400,6 +505,10 @@ impl Trainer {
             ck.add(&format!("worker{}.rng", w.id), &w.rng.to_f32_words());
         }
         ck.add("trainer.rng", &self.rng.to_f32_words());
+        // simulated clock: a resumed run continues the time axis
+        // (compute/comm/straggler seconds, comm rounds, wire bytes)
+        // instead of restarting it at zero.
+        ck.add("trainer.clock", &self.clock.to_f32_words());
         ck.save(path)
     }
 
@@ -445,6 +554,12 @@ impl Trainer {
                     anyhow::anyhow!("corrupt worker{}.rng buffer", w.id)
                 })?;
             }
+        }
+        // simulated clock (newer checkpoints); pre-clock checkpoints
+        // still load and restart the time axis at zero.
+        if let Ok(words) = ck.get("trainer.clock") {
+            self.clock = SimClock::from_f32_words(words)
+                .ok_or_else(|| anyhow::anyhow!("corrupt trainer.clock buffer"))?;
         }
         Ok(())
     }

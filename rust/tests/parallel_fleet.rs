@@ -1,0 +1,281 @@
+//! Differential proof of the parallel worker fleet: executing the n
+//! simulated ranks concurrently on the persistent pool is
+//! **bitwise-identical** to the `cfg.sequential_workers` reference path
+//! — loss curves, final parameters, checkpoints (base/outer optimizer
+//! state), and every RNG stream — for every outer optimizer, several
+//! worker counts, both train modes, and both vote data paths.
+//!
+//! Everything here runs on the pure-Rust [`NativeBundle`] backend, so
+//! the suite needs no PJRT artifacts and exercises the real `Trainer`
+//! end to end in any build environment.
+
+use std::sync::Arc;
+
+use dsm::config::{RunConfig, TrainMode};
+use dsm::outer::OuterConfig;
+use dsm::runtime::NativeBundle;
+use dsm::train::{RunResult, Trainer};
+
+const PRESET: &str = "native";
+
+fn backend() -> Arc<NativeBundle> {
+    // batch 2 × seq 24 × d_model 8 -> P = 4096: small enough to keep the
+    // whole suite fast, big enough that every code path does real work
+    Arc::new(NativeBundle::new(PRESET, 2, 24, 8))
+}
+
+fn base_cfg(tag: &str) -> RunConfig {
+    let mut cfg = RunConfig::paper_default(PRESET);
+    cfg.rounds = 4;
+    cfg.tau = 3;
+    cfg.n_workers = 4;
+    cfg.corpus_bytes = 1 << 16;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.comm = dsm::comm::CommModel::preset("ethernet").unwrap();
+    cfg.tag = tag.to_string();
+    cfg
+}
+
+fn run_cfg(cfg: RunConfig) -> RunResult {
+    let mut t = Trainer::with_backend(cfg, backend()).unwrap();
+    t.run().unwrap()
+}
+
+/// Run `cfg` twice — parallel fleet vs sequential reference — and
+/// assert the trajectories agree to the last bit: every log row, the
+/// final validation loss, and the full checkpoint contents (global
+/// params, outer state, per-worker optimizer state, all RNG streams).
+fn assert_parallel_equals_sequential(cfg: RunConfig) {
+    let label = cfg.tag.clone();
+    let mut par_cfg = cfg.clone();
+    par_cfg.sequential_workers = false;
+    let mut seq_cfg = cfg;
+    seq_cfg.sequential_workers = true;
+
+    let mut par = Trainer::with_backend(par_cfg, backend()).unwrap();
+    let rp = par.run().unwrap();
+    let mut seq = Trainer::with_backend(seq_cfg, backend()).unwrap();
+    let rs = seq.run().unwrap();
+
+    assert_eq!(rp.log.rows.len(), rs.log.rows.len(), "{label}: row count");
+    for (a, b) in rp.log.rows.iter().zip(&rs.log.rows) {
+        assert_eq!(
+            a.train_loss.to_bits(),
+            b.train_loss.to_bits(),
+            "{label}: train loss, round {}",
+            a.round
+        );
+        assert_eq!(
+            a.val_loss.to_bits(),
+            b.val_loss.to_bits(),
+            "{label}: val loss, round {}",
+            a.round
+        );
+        // modeled comm/straggler charges draw from the trainer RNG, so
+        // they too must be unaffected by the execution mode (compute
+        // seconds are measured wall-clock and are excluded)
+        assert_eq!(a.comm_rounds, b.comm_rounds, "{label}: comm rounds");
+        assert_eq!(a.local_steps, b.local_steps, "{label}: local steps");
+    }
+    assert_eq!(rp.final_val.to_bits(), rs.final_val.to_bits(), "{label}: final val");
+    assert_eq!(
+        rp.clock.comm_s.to_bits(),
+        rs.clock.comm_s.to_bits(),
+        "{label}: modeled comm seconds"
+    );
+    assert_eq!(
+        rp.clock.straggler_s.to_bits(),
+        rs.clock.straggler_s.to_bits(),
+        "{label}: straggler seconds"
+    );
+    assert_eq!(rp.clock.bytes_communicated, rs.clock.bytes_communicated, "{label}: wire bytes");
+
+    // checkpoints capture params + optimizer state + RNG streams; the
+    // two must be byte-for-byte interchangeable
+    let dir = std::env::temp_dir().join("dsm_parallel_fleet");
+    std::fs::create_dir_all(&dir).unwrap();
+    let pp = dir.join(format!("{}-par.ckpt", label.replace('/', "_")));
+    let sp = dir.join(format!("{}-seq.ckpt", label.replace('/', "_")));
+    par.save_checkpoint(&pp).unwrap();
+    seq.save_checkpoint(&sp).unwrap();
+    let ck_par = dsm::train::checkpoint::Checkpoint::load(&pp).unwrap();
+    let ck_seq = dsm::train::checkpoint::Checkpoint::load(&sp).unwrap();
+    std::fs::remove_file(&pp).ok();
+    std::fs::remove_file(&sp).ok();
+    assert_eq!(ck_par.buffers.len(), ck_seq.buffers.len(), "{label}: buffer count");
+    for ((na, ba), (nb, bb)) in ck_par.buffers.iter().zip(&ck_seq.buffers) {
+        assert_eq!(na, nb, "{label}: buffer order");
+        // the clock buffer holds measured compute seconds (wall-clock,
+        // legitimately different between modes); everything else —
+        // params, optimizer state, RNG streams — must match exactly
+        if na == "trainer.clock" {
+            continue;
+        }
+        let same = ba.len() == bb.len()
+            && ba.iter().zip(bb).all(|(x, y)| x.to_bits() == y.to_bits());
+        assert!(same, "{label}: buffer `{na}` differs between parallel and sequential");
+    }
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_for_every_outer_optimizer() {
+    for outer in [
+        OuterConfig::sign_momentum_paper(1.0),
+        OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+        OuterConfig::SignedSlowMo { eta: 0.01, beta: 0.5 },
+        OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: false },
+        OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: true },
+        OuterConfig::GlobalAdamW {
+            eta: 1e-3,
+            beta1: 0.9,
+            beta2: 0.95,
+            eps: 1e-8,
+            weight_decay: 0.1,
+        },
+        OuterConfig::LocalAvg,
+        OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 },
+    ] {
+        let mut cfg = base_cfg(&format!("pf-{}", outer.name()));
+        cfg.outer = outer;
+        assert_parallel_equals_sequential(cfg);
+    }
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_across_worker_counts() {
+    for n in [1usize, 2, 3, 8] {
+        let mut cfg = base_cfg(&format!("pf-n{n}"));
+        cfg.n_workers = n;
+        assert_parallel_equals_sequential(cfg);
+    }
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_in_standalone_mode() {
+    let mut cfg = base_cfg("pf-standalone");
+    cfg.mode = TrainMode::Standalone;
+    cfg.tau = 1;
+    cfg.rounds = 8;
+    assert_parallel_equals_sequential(cfg);
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_on_heterogeneous_shards() {
+    let mut cfg = base_cfg("pf-hetero");
+    cfg.heterogeneous = true;
+    assert_parallel_equals_sequential(cfg);
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_on_mv_reference_votes() {
+    // the f32 RoundCtx reference path of the sign-compressed optimizer,
+    // under parallel local phases
+    let mut cfg = base_cfg("pf-mv-refvotes");
+    cfg.outer = OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 };
+    cfg.reference_votes = true;
+    assert_parallel_equals_sequential(cfg);
+}
+
+#[test]
+fn mv_packed_equals_reference_votes_on_the_native_backend() {
+    // packed 1-bit wire path vs f32 reference votes — previously only
+    // verifiable with PJRT artifacts, now pinned natively
+    let mut packed = base_cfg("pf-mv-packed");
+    packed.outer = OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 };
+    packed.rounds = 5;
+    let mut reference = packed.clone();
+    reference.tag = "pf-mv-ref".into();
+    reference.reference_votes = true;
+    let rp = run_cfg(packed);
+    let rr = run_cfg(reference);
+    for (a, b) in rp.log.rows.iter().zip(&rr.log.rows) {
+        assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {}", a.round);
+        assert_eq!(a.val_loss.to_bits(), b.val_loss.to_bits(), "round {}", a.round);
+    }
+    assert_eq!(rp.final_val.to_bits(), rr.final_val.to_bits());
+    assert_eq!(rp.clock.bytes_communicated, rr.clock.bytes_communicated);
+}
+
+#[test]
+fn clock_checkpoint_resumes_the_simulated_time_axis() {
+    // ROADMAP (f): the SimClock rides in the checkpoint, so a resumed
+    // run continues simulated time instead of restarting at zero
+    let mut cfg = base_cfg("pf-clock");
+    cfg.rounds = 6;
+    cfg.eval_every = 0;
+    cfg.comm = dsm::comm::CommModel::preset("wan").unwrap(); // stragglers on
+    let full = run_cfg(cfg.clone());
+
+    let mut cfg_half = cfg.clone();
+    cfg_half.rounds = 3;
+    let mut t1 = Trainer::with_backend(cfg_half, backend()).unwrap();
+    t1.run().unwrap();
+    let saved_compute = t1.clock().compute_s;
+    let saved_comm = t1.clock().comm_s;
+    assert!(saved_comm > 0.0, "three rounds must have charged comm time");
+    let path = std::env::temp_dir().join("dsm_pf_clock_resume.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+
+    let mut t2 = Trainer::with_backend(cfg, backend()).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    // the time axis resumes in place, not at zero
+    assert_eq!(t2.clock().comm_s.to_bits(), saved_comm.to_bits());
+    assert_eq!(t2.clock().compute_s.to_bits(), saved_compute.to_bits());
+    let resumed = t2.run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    // modeled charges are deterministic (straggler draws replay from
+    // the checkpointed trainer RNG): resumed ≡ uninterrupted, bit-level
+    assert_eq!(resumed.clock.comm_s.to_bits(), full.clock.comm_s.to_bits());
+    assert_eq!(resumed.clock.straggler_s.to_bits(), full.clock.straggler_s.to_bits());
+    assert_eq!(resumed.clock.comm_rounds, full.clock.comm_rounds);
+    assert_eq!(resumed.clock.bytes_communicated, full.clock.bytes_communicated);
+    // measured compute is wall-clock, but it must accumulate on top of
+    // the checkpointed value rather than restarting from zero
+    assert!(resumed.clock.compute_s > saved_compute);
+    // and the loss trajectory still replays exactly
+    assert_eq!(resumed.final_val.to_bits(), full.final_val.to_bits());
+}
+
+#[test]
+fn pre_clock_checkpoints_still_load() {
+    // forward compatibility: a checkpoint without trainer.clock loads
+    // fine and restarts the time axis at zero
+    let cfg = base_cfg("pf-oldckpt");
+    let mut t1 = Trainer::with_backend(cfg.clone(), backend()).unwrap();
+    t1.run().unwrap();
+    let path = std::env::temp_dir().join("dsm_pf_old_clock.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+    let mut ck = dsm::train::checkpoint::Checkpoint::load(&path).unwrap();
+    ck.buffers.retain(|(name, _)| name != "trainer.clock");
+    ck.save(&path).unwrap();
+
+    let mut t2 = Trainer::with_backend(cfg, backend()).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(t2.clock().comm_s, 0.0);
+    assert_eq!(t2.clock().comm_rounds, 0);
+}
+
+#[test]
+fn divergence_still_fails_loudly_under_parallel_execution() {
+    let mut cfg = base_cfg("pf-diverge");
+    cfg.schedule = dsm::train::schedule::ScheduleConfig::Constant { lr: 1e9 };
+    let mut t = Trainer::with_backend(cfg, backend()).unwrap();
+    let err = t.run();
+    assert!(err.is_err(), "expected a divergence error from the fleet");
+}
+
+#[test]
+fn deterministic_across_repeated_parallel_runs() {
+    // scheduling nondeterminism must never leak into results: the same
+    // parallel config twice is bit-identical
+    let a = run_cfg(base_cfg("pf-repeat"));
+    let b = run_cfg(base_cfg("pf-repeat"));
+    assert_eq!(a.final_val.to_bits(), b.final_val.to_bits());
+    for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+        assert_eq!(ra.train_loss.to_bits(), rb.train_loss.to_bits());
+        assert_eq!(ra.val_loss.to_bits(), rb.val_loss.to_bits());
+    }
+}

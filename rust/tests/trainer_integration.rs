@@ -1,7 +1,7 @@
 //! End-to-end trainer integration over the real PJRT runtime (nano).
 //! Requires `make artifacts`; tests self-skip otherwise.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use dsm::config::{RunConfig, TrainMode};
 use dsm::outer::OuterConfig;
@@ -11,7 +11,7 @@ use dsm::train::Trainer;
 struct Env {
     rt: Runtime,
     arts: Artifacts,
-    bundle: Rc<ModelBundle>,
+    bundle: Arc<ModelBundle>,
 }
 
 fn setup() -> Option<Env> {
@@ -22,7 +22,7 @@ fn setup() -> Option<Env> {
     }
     let rt = Runtime::cpu().unwrap();
     let arts = Artifacts::load(&dir).unwrap();
-    let bundle = Rc::new(ModelBundle::load(&rt, arts.preset("nano").unwrap()).unwrap());
+    let bundle = Arc::new(ModelBundle::load(&rt, arts.preset("nano").unwrap()).unwrap());
     Some(Env { rt, arts, bundle })
 }
 
@@ -213,9 +213,10 @@ fn mv_checkpoint_resume_is_bit_identical() {
     let resumed = t2.run().unwrap();
     std::fs::remove_file(&path).ok();
 
-    // per-worker momentum, x_prev, and every RNG stream are restored,
-    // so the randomized sign votes of rounds 4-6 replay exactly
-    // (simulated-clock fields restart from zero and are not compared)
+    // per-worker momentum, x_prev, every RNG stream, and the simulated
+    // clock are restored, so the randomized sign votes of rounds 4-6
+    // replay exactly and the time axis continues in place
+    // (rust/tests/parallel_fleet.rs pins the clock equality natively)
     let (a, b) = (resumed.log.rows.last().unwrap(), full.log.rows.last().unwrap());
     assert_eq!(a.round, b.round);
     assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits());
@@ -234,9 +235,10 @@ fn mv_packed_path_charges_exact_codec_bytes() {
     let res = t.run().unwrap();
     // the clock must bill exactly the codec's packed payload — the same
     // bytes the PackedVotes buffers actually carry — per round, moved
-    // through the ring model's 2(n-1)/n factor
+    // through gather+broadcast's 2(n-1) messages (n-1 rank payloads up
+    // to the server, the winner out to n-1 receivers)
     let payload = dsm::dist::codec::sign_allreduce_bytes(p);
-    let moved_per_round = payload * 2 * (n - 1) / n;
+    let moved_per_round = payload * 2 * (n - 1);
     assert_eq!(res.clock.comm_rounds, rounds);
     assert_eq!(res.clock.bytes_communicated, rounds * moved_per_round);
 }
