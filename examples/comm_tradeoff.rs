@@ -4,7 +4,9 @@
 //! reports, per interconnect, the simulated time-to-final-loss breakdown
 //! — reproducing the paper's core motivation: as links get slower, larger
 //! τ wins even though each round makes slightly less optimization
-//! progress.
+//! progress. A second sweep varies the round's WIRE FORMAT at fixed τ
+//! (dense f32 vs the 8-bit quantized exchange), the payload-level axis
+//! the typed `WirePayload` contract opens.
 //!
 //!     cargo run --release --example comm_tradeoff [--preset nano] [--budget 120]
 
@@ -12,11 +14,23 @@ use anyhow::Result;
 
 use dsm::comm::CommModel;
 use dsm::config::{default_peak_lr, RunConfig};
+use dsm::dist::WireFormat;
 use dsm::outer::OuterConfig;
 use dsm::runtime::{Artifacts, ModelBundle, Runtime};
 use dsm::train::schedule::ScheduleConfig;
 use dsm::train::Trainer;
 use dsm::util::cli::Args;
+
+/// Modeled seconds of one round exchange in `wire` format — mirrors
+/// `SimClock::charge_exchange`'s topology choice.
+fn exchange_time(m: &CommModel, n: usize, wire: WireFormat, p: usize) -> f64 {
+    let bytes = wire.wire_bytes(p);
+    if wire.ring_reducible() {
+        m.allreduce_time(n, bytes)
+    } else {
+        m.gather_time(n, bytes) + m.broadcast_time(n, bytes)
+    }
+}
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
@@ -27,11 +41,10 @@ fn main() -> Result<()> {
     let rt = Runtime::cpu()?;
     let arts = Artifacts::load(&Artifacts::default_dir())?;
     let bundle = std::sync::Arc::new(ModelBundle::load(&rt, arts.preset(&preset)?)?);
-    let bytes = bundle.info.param_count as u64 * 4;
+    let p = bundle.info.param_count;
+    let bytes = p as u64 * 4;
 
-    println!("comm_tradeoff: preset={preset}, n={workers}, budget={budget} local steps\n");
-    let mut rows = Vec::new();
-    for tau in [1usize, 4, 12, 24, 36] {
+    let make_cfg = |tau: usize, wire: Option<WireFormat>| {
         let rounds = (budget / tau).max(1);
         let mut cfg = RunConfig::paper_default(&preset);
         cfg.tau = tau;
@@ -41,8 +54,15 @@ fn main() -> Result<()> {
         cfg.schedule =
             ScheduleConfig::cosine_paper(default_peak_lr(&preset), (rounds * tau) as u64);
         cfg.eval_every = 0; // final eval only
-        cfg.tag = format!("tradeoff-tau{tau}");
-        let mut trainer = Trainer::with_bundle(cfg, bundle.clone(), &rt, &arts)?;
+        cfg.wire = wire;
+        cfg.tag = format!("tradeoff-tau{tau}-{}", wire.map(|w| w.name()).unwrap_or("dense"));
+        cfg
+    };
+
+    println!("comm_tradeoff: preset={preset}, n={workers}, budget={budget} local steps\n");
+    let mut rows = Vec::new();
+    for tau in [1usize, 4, 12, 24, 36] {
+        let mut trainer = Trainer::with_bundle(make_cfg(tau, None), bundle.clone(), &rt, &arts)?;
         let res = trainer.run()?;
         println!(
             "tau {tau:>3}: val {:.4} | {} comm rounds | compute {:.1}s",
@@ -78,6 +98,47 @@ fn main() -> Result<()> {
             .unwrap();
         println!("   <- best tau = {best}");
     }
+
+    // ---- wire-format sweep at fixed tau = 12 -------------------------
+    // Same algorithm, same schedule; only the round payload changes:
+    // dense f32 (ring) vs 8-bit quantized differences (gather+broadcast,
+    // 4x smaller messages, bounded rounding error in the exchange).
+    let fixed_tau = 12usize;
+    let dense_res = rows
+        .iter()
+        .find(|(tau, _)| *tau == fixed_tau)
+        .map(|(_, r)| r)
+        .expect("tau=12 is in the sweep");
+    let mut q8_trainer = Trainer::with_bundle(
+        make_cfg(fixed_tau, Some(WireFormat::QuantizedI8)),
+        bundle.clone(),
+        &rt,
+        &arts,
+    )?;
+    let q8_res = q8_trainer.run()?;
+
+    println!("\nwire-format tradeoff at tau = {fixed_tau} (Algorithm 1, simulated total seconds):");
+    println!("{:>10}{:>12}{:>12}", "net", "dense", "q8");
+    for net in ["nvlink", "infiniband", "ethernet", "wan"] {
+        let m = CommModel::preset(net).unwrap();
+        let total = |res: &dsm::train::RunResult, wire: WireFormat| {
+            res.clock.compute_s
+                + res.clock.comm_rounds as f64 * exchange_time(&m, workers, wire, p)
+        };
+        println!(
+            "{net:>10}{:>12.2}{:>12.2}",
+            total(dense_res, WireFormat::DenseF32),
+            total(&q8_res, WireFormat::QuantizedI8),
+        );
+    }
+    println!(
+        "final val: dense {:.4} | q8 {:.4}  (per-rank message: {} vs {} bytes)",
+        dense_res.final_val,
+        q8_res.final_val,
+        WireFormat::DenseF32.wire_bytes(p),
+        WireFormat::QuantizedI8.wire_bytes(p),
+    );
+
     println!("\ncomm_tradeoff OK");
     Ok(())
 }

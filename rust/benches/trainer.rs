@@ -1,5 +1,7 @@
-//! Round wall-clock of the worker fleet: sequential reference vs
-//! parallel execution on the persistent pool, at n ∈ {4, 8}.
+//! Round wall-clock of the worker fleet — sequential reference vs
+//! parallel execution on the persistent pool, at n ∈ {4, 8} — plus the
+//! eval pass (serial `eval_loss_many` vs batches fanned across the
+//! pool).
 //!
 //!     cargo bench --bench trainer              # human-readable table
 //!     cargo bench --bench trainer -- --json    # also write BENCH_trainer.json
@@ -8,8 +10,8 @@
 //! Runs on the pure-Rust [`NativeBundle`] backend, so no PJRT artifacts
 //! are required — this is the repo's recorded perf trajectory for the
 //! fleet fan-out (`BENCH_trainer.json` at the workspace root). Both
-//! modes compute bit-identical trajectories (rust/tests/parallel_fleet.rs);
-//! only wall-clock differs.
+//! execution modes of either pass compute bit-identical results
+//! (rust/tests/parallel_fleet.rs); only wall-clock differs.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -52,6 +54,20 @@ fn time_rounds(n: usize, tau: usize, sequential: bool, rounds: usize) -> f64 {
     t0.elapsed().as_secs_f64() / rounds as f64
 }
 
+/// Mean seconds per full eval pass (`eval_batches` batches): serial
+/// reference vs batches fanned across the persistent pool.
+fn time_eval(eval_batches: usize, sequential: bool, reps: usize) -> f64 {
+    let mut c = cfg(4, 1, sequential);
+    c.eval_batches = eval_batches;
+    let mut trainer = Trainer::with_backend(c, backend()).unwrap();
+    trainer.evaluate().expect("warmup eval");
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        trainer.evaluate().expect("timed eval");
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let json = args.iter().any(|a| a == "--json");
@@ -82,11 +98,25 @@ fn main() {
         ));
     }
 
+    // eval pass: serial vs pooled over the same validation batches
+    let eval_batches = 16usize;
+    let eval_reps = if quick { 3 } else { 8 };
+    let eval_seq_s = time_eval(eval_batches, true, eval_reps);
+    let eval_par_s = time_eval(eval_batches, false, eval_reps);
+    let eval_speedup = eval_seq_s / eval_par_s;
+    println!(
+        "eval ({eval_batches} batches): sequential {:>8.2} ms | pooled {:>8.2} ms | speedup {eval_speedup:.2}x",
+        eval_seq_s * 1e3,
+        eval_par_s * 1e3
+    );
+
     if json {
         let body = format!(
             "{{\n  \"bench\": \"trainer_fleet_round\",\n  \"backend\": \"native\",\n  \
              \"host_cores\": {cores},\n  \"pool_threads\": {threads},\n  \
-             \"timed_rounds\": {rounds},\n  \"results\": [\n{}\n  ]\n}}\n",
+             \"timed_rounds\": {rounds},\n  \"results\": [\n{}\n  ],\n  \
+             \"eval\": {{\"batches\": {eval_batches}, \"sequential_s\": {eval_seq_s:.6}, \
+             \"pooled_s\": {eval_par_s:.6}, \"speedup\": {eval_speedup:.3}}}\n}}\n",
             entries.join(",\n")
         );
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))

@@ -14,13 +14,19 @@
 //!
 //! plus an optional straggler term: per round, the slowest of n i.i.d.
 //! log-normal worker delays (Dean et al. 2012's tail-latency story).
-//! Sign-vote rounds are the exception: a majority tally is not
-//! ring-reducible on the 1-bit wire, so
+//! Compressed rounds are the exception: neither a majority tally nor a
+//! per-rank-scaled i8 sum is ring-reducible in its own wire format, so
 //! [`SimClock::charge_vote_allreduce`] models the practical
 //! gather+broadcast server topology instead.
+//!
+//! Round billing is payload-driven: the trainer hands
+//! [`SimClock::charge_exchange`] the [`crate::dist::WirePayload`] the
+//! ranks exchange, and the clock reads the byte count and topology off
+//! the payload itself — accounting and data path cannot drift apart.
 //! Compute time is *measured* (the PJRT executions are real); comm time
 //! is *modeled*; the trainer adds both onto a [`SimClock`].
 
+use crate::dist::WirePayload;
 use crate::util::rng::Rng;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -134,20 +140,32 @@ impl SimClock {
         self.compute_s + self.comm_s + self.straggler_s
     }
 
-    /// Charge one *sign-compressed* vote exchange over `n` workers: the
-    /// payload is 1 bit per coordinate plus a small header
-    /// ([`crate::dist::codec::sign_allreduce_bytes`]) instead of 4
-    /// bytes per f32 — the wire cost of majority-vote sign exchange
-    /// (MV-sto-signSGD and other signSGD-style methods).
-    pub fn charge_sign_allreduce(
+    /// Charge one round exchange over `n` workers from the payload that
+    /// actually crosses the wire: the billed byte count is
+    /// [`WirePayload::wire_bytes`], so the accounting and the exchanged
+    /// data cannot diverge — there is no caller-side byte formula left
+    /// to pick by optimizer flag.
+    ///
+    /// Topology follows the format
+    /// ([`WirePayload::ring_reducible`]): a dense f32 mean is
+    /// ring-reducible and bills [`charge_allreduce`](Self::charge_allreduce);
+    /// packed sign votes and per-rank-scaled i8 payloads cannot be
+    /// partially aggregated in their own encoding, so they bill the
+    /// gather+broadcast server topology
+    /// ([`charge_vote_allreduce`](Self::charge_vote_allreduce)).
+    pub fn charge_exchange(
         &mut self,
         model: &CommModel,
         n: usize,
-        n_params: usize,
+        payload: &WirePayload,
         rng: &mut Rng,
     ) {
-        let bytes = crate::dist::codec::sign_allreduce_bytes(n_params);
-        self.charge_vote_allreduce(model, n, bytes, rng);
+        let bytes = payload.wire_bytes();
+        if payload.ring_reducible() {
+            self.charge_allreduce(model, n, bytes, rng);
+        } else {
+            self.charge_vote_allreduce(model, n, bytes, rng);
+        }
     }
 
     /// Charge a vote exchange whose per-message wire payload is
@@ -351,18 +369,20 @@ mod tests {
     }
 
     #[test]
-    fn sign_allreduce_charges_packed_bytes() {
-        use crate::dist::codec;
+    fn packed_sign_exchange_charges_packed_bytes() {
+        use crate::dist::{codec, WireFormat};
         let m = CommModel::preset("eth").unwrap();
         let mut rng = Rng::new(2);
         let p = 1 << 20;
         let n = 4;
 
         let mut compressed = SimClock::default();
-        compressed.charge_sign_allreduce(&m, n, p, &mut rng);
+        let votes = WirePayload::with_len(WireFormat::PackedSigns, p);
+        compressed.charge_exchange(&m, n, &votes, &mut rng);
         // payload is ~P/8 bytes plus the fixed header ...
         let payload = codec::sign_allreduce_bytes(p);
         assert_eq!(payload, (p as u64) / 8 + codec::HEADER_BYTES);
+        assert_eq!(votes.wire_bytes(), payload);
         // ... and gather+broadcast moves 2(n-1) copies of it (n-1 rank
         // payloads up to the server, the winner out to n-1 receivers).
         let expected_moved = payload * 2 * (n as u64 - 1);
@@ -374,9 +394,39 @@ mod tests {
         // (ring moves 2(n-1)/n ~= 2 payloads, gather+broadcast 2(n-1)),
         // so at n=4 the byte advantage is 32/n = 8x.
         let mut full = SimClock::default();
-        full.charge_allreduce(&m, n, p as u64 * 4, &mut rng);
+        full.charge_exchange(&m, n, &WirePayload::with_len(WireFormat::DenseF32, p), &mut rng);
         assert!(compressed.bytes_communicated * 7 < full.bytes_communicated);
         assert!(compressed.comm_s < full.comm_s);
+    }
+
+    #[test]
+    fn charge_exchange_routes_topology_by_payload_format() {
+        use crate::dist::WireFormat;
+        let m = CommModel::preset("eth").unwrap();
+        let p = 1 << 18;
+        let n = 4;
+
+        // dense bills exactly like the classic f32 ring all-reduce
+        let mut dense = SimClock::default();
+        let dense_payload = WirePayload::with_len(WireFormat::DenseF32, p);
+        dense.charge_exchange(&m, n, &dense_payload, &mut Rng::new(3));
+        let mut ring = SimClock::default();
+        ring.charge_allreduce(&m, n, p as u64 * 4, &mut Rng::new(3));
+        assert_eq!(dense.comm_s.to_bits(), ring.comm_s.to_bits());
+        assert_eq!(dense.bytes_communicated, ring.bytes_communicated);
+
+        // q8 bills the gather+broadcast of its own byte model
+        let mut q8 = SimClock::default();
+        let q8_payload = WirePayload::with_len(WireFormat::QuantizedI8, p);
+        q8.charge_exchange(&m, n, &q8_payload, &mut Rng::new(3));
+        let mut gather = SimClock::default();
+        gather.charge_vote_allreduce(&m, n, q8_payload.wire_bytes(), &mut Rng::new(3));
+        assert_eq!(q8.comm_s.to_bits(), gather.comm_s.to_bits());
+        assert_eq!(q8.bytes_communicated, gather.bytes_communicated);
+
+        // at the default fleet size the q8 exchange undercuts dense on
+        // modeled time even though its topology moves more total bytes
+        assert!(q8.comm_s < dense.comm_s, "{} vs {}", q8.comm_s, dense.comm_s);
     }
 
     #[test]
@@ -461,7 +511,7 @@ mod tests {
         let mut prev_rounds = 0;
         for i in 0..20 {
             if i % 2 == 0 {
-                clock.charge_sign_allreduce(&m, 2 + i % 5, 1000 + 100 * i, &mut rng);
+                clock.charge_vote_allreduce(&m, 2 + i % 5, (1000 + 100 * i) as u64, &mut rng);
             } else {
                 clock.charge_allreduce(&m, 2 + i % 5, (4000 + i) as u64, &mut rng);
             }

@@ -11,6 +11,7 @@ use std::path::PathBuf;
 use anyhow::{anyhow, Result};
 
 use crate::comm::CommModel;
+use crate::dist::WireFormat;
 use crate::optim::BaseOptConfig;
 use crate::outer::OuterConfig;
 use crate::train::schedule::ScheduleConfig;
@@ -57,11 +58,12 @@ pub struct RunConfig {
     /// Non-IID data: each worker's shard is dominated by a different
     /// corpus source (the Theorem-2(b) heterogeneity regime).
     pub heterogeneous: bool,
-    /// Differential-testing hook: route sign-compressed outer
-    /// optimizers through the f32 `RoundCtx` reference path instead of
-    /// the packed 1-bit data path (wire accounting is unchanged; the
-    /// two paths are bitwise-identical by construction).
-    pub reference_votes: bool,
+    /// Round-exchange wire format override (`[outer] wire = "dense" |
+    /// "packed_signs" | "q8"` / `--wire`). `None` = the outer
+    /// optimizer's native format ([`OuterConfig::default_wire`]);
+    /// validation rejects formats the optimizer does not speak
+    /// ([`OuterConfig::supported_wires`]).
+    pub wire: Option<WireFormat>,
     /// Differential-testing / benchmarking hook: run the simulated
     /// ranks of each round serially on the coordinator thread instead
     /// of concurrently on the persistent pool. Every trajectory is
@@ -113,9 +115,16 @@ impl RunConfig {
             tag: format!("{preset}-sign_momentum"),
             global_step_pallas: false,
             heterogeneous: false,
-            reference_votes: false,
+            wire: None,
             sequential_workers: false,
         }
+    }
+
+    /// The wire format this run's round exchange uses: the config
+    /// override when present, the outer optimizer's native format
+    /// otherwise.
+    pub fn resolved_wire(&self) -> WireFormat {
+        self.wire.unwrap_or_else(|| self.outer.default_wire())
     }
 
     /// Total local steps across the run (drives the LR schedule).
@@ -169,6 +178,9 @@ impl RunConfig {
         }
         if let Some(t) = doc.get("outer") {
             cfg.outer = OuterConfig::from_json(t).map_err(|e| anyhow!(e))?;
+            if let Some(w) = t.get("wire").and_then(Json::as_str) {
+                cfg.wire = Some(parse_wire(w)?);
+            }
         }
         if let Some(t) = doc.get("schedule") {
             cfg.schedule = ScheduleConfig::from_json(t, cfg.total_local_steps())
@@ -213,6 +225,9 @@ impl RunConfig {
             let peak: f32 = peak.parse().map_err(|_| anyhow!("--peak-lr: bad float"))?;
             cfg.schedule = ScheduleConfig::cosine_paper(peak, cfg.total_local_steps());
         }
+        if let Some(w) = args.get("wire") {
+            cfg.wire = Some(parse_wire(w)?);
+        }
         if args.has("pallas-global-step") {
             cfg.global_step_pallas = true;
         }
@@ -220,11 +235,6 @@ impl RunConfig {
             || doc.get("heterogeneous").and_then(Json::as_bool).unwrap_or(false)
         {
             cfg.heterogeneous = true;
-        }
-        if args.has("reference-votes")
-            || doc.get("reference_votes").and_then(Json::as_bool).unwrap_or(false)
-        {
-            cfg.reference_votes = true;
         }
         if args.has("sequential-workers")
             || doc.get("sequential_workers").and_then(Json::as_bool).unwrap_or(false)
@@ -251,20 +261,42 @@ impl RunConfig {
         anyhow::ensure!(self.corpus_bytes >= 1 << 14, "corpus too small");
         if self.mode == TrainMode::Standalone {
             anyhow::ensure!(self.tau == 1, "standalone mode communicates every step (tau=1)");
+            // standalone has no outer round exchange: a wire override
+            // would label the run (and its cache key) with a format the
+            // per-step dense gradient all-reduce never uses
+            anyhow::ensure!(
+                self.wire.is_none(),
+                "standalone mode exchanges dense per-step gradients; drop the `wire` override"
+            );
         }
+        let wire = self.resolved_wire();
+        anyhow::ensure!(
+            self.outer.supported_wires().contains(&wire),
+            "outer optimizer `{}` does not speak wire format `{}` (supported: {})",
+            self.outer.name(),
+            wire.name(),
+            self.outer
+                .supported_wires()
+                .iter()
+                .map(|w| w.name())
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
         Ok(())
     }
 
-    /// One-line summary for logs.
+    /// One-line summary for logs (also feeds the experiment cache key,
+    /// so everything trajectory-determining belongs here).
     pub fn describe(&self) -> String {
         format!(
-            "{} n={} tau={} T={} base={} outer={} comm-rounds={} mode={:?}",
+            "{} n={} tau={} T={} base={} outer={} wire={} comm-rounds={} mode={:?}",
             self.preset,
             self.n_workers,
             self.tau,
             self.rounds,
             self.base.name(),
             self.outer.name(),
+            self.resolved_wire().name(),
             self.rounds,
             self.mode
         )
@@ -277,6 +309,10 @@ fn parse_mode(s: &str) -> Result<TrainMode> {
         "standalone" => Ok(TrainMode::Standalone),
         other => Err(anyhow!("unknown mode `{other}`")),
     }
+}
+
+fn parse_wire(s: &str) -> Result<WireFormat> {
+    WireFormat::parse(s).ok_or_else(|| anyhow!("unknown wire format `{s}`"))
 }
 
 #[cfg(test)]
@@ -349,6 +385,44 @@ preset = "wan"
         assert!(RunConfig::from_toml_and_args(Some("mode = \"bogus\""), &args("")).is_err());
         assert!(RunConfig::from_toml_and_args(None, &args("--comm warpdrive")).is_err());
         assert!(RunConfig::from_toml_and_args(None, &args("--workers 0")).is_err());
+        assert!(RunConfig::from_toml_and_args(None, &args("--wire morse")).is_err());
+    }
+
+    #[test]
+    fn wire_format_parses_resolves_and_validates() {
+        let parse = |text: &str, cli: &str| RunConfig::from_toml_and_args(Some(text), &args(cli));
+
+        // default: the optimizer's native format
+        let cfg = RunConfig::from_toml_and_args(None, &args("")).unwrap();
+        assert_eq!(cfg.wire, None);
+        assert_eq!(cfg.resolved_wire(), WireFormat::DenseF32);
+        let mv = parse("[outer]\nalgo = \"mv_signsgd\"\n", "").unwrap();
+        assert_eq!(mv.resolved_wire(), WireFormat::PackedSigns);
+
+        // file-level selection in the [outer] table, CLI override wins
+        let toml_q8 = "[outer]\nalgo = \"slowmo\"\nwire = \"q8\"\n";
+        let q8 = parse(toml_q8, "").unwrap();
+        assert_eq!(q8.wire, Some(WireFormat::QuantizedI8));
+        assert_eq!(q8.resolved_wire(), WireFormat::QuantizedI8);
+        let cli = parse(toml_q8, "--wire dense").unwrap();
+        assert_eq!(cli.resolved_wire(), WireFormat::DenseF32);
+
+        // unsupported pairings are rejected, not silently mis-billed
+        assert!(parse("[outer]\nalgo = \"mv_signsgd\"\nwire = \"dense\"\n", "").is_err());
+        assert!(parse("[outer]\nalgo = \"sign_momentum\"\nwire = \"1bit\"\n", "").is_err());
+        // ...and so is a wire override in standalone mode, which never
+        // runs the outer exchange the override would re-format
+        let standalone_q8 =
+            RunConfig::from_toml_and_args(None, &args("--mode standalone --tau 1 --wire q8"));
+        assert!(standalone_q8.is_err());
+    }
+
+    #[test]
+    fn describe_names_the_wire_format() {
+        let mut cfg = RunConfig::paper_default("nano");
+        assert!(cfg.describe().contains("wire=dense"));
+        cfg.wire = Some(WireFormat::QuantizedI8);
+        assert!(cfg.describe().contains("wire=q8"));
     }
 
     #[test]

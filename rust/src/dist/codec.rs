@@ -1,11 +1,16 @@
-//! 1-bit sign codec: the wire format for sign-exchange collectives.
+//! Compressed wire codecs: the byte formats behind the typed round
+//! exchange ([`super::wire::WirePayload`]).
 //!
-//! signSGD-style methods (majority vote, MV-sto-signSGD) only move the
-//! *sign* of each coordinate, which packs to 1 bit instead of an f32's
-//! 32 — the 32× communication reduction that motivates them (Bernstein
-//! et al. 2018). [`pack_signs`]/[`unpack_signs`] implement the payload;
-//! [`sign_allreduce_bytes`] is the byte model the simulated clock
-//! charges ([`crate::comm::SimClock::charge_sign_allreduce`]).
+//! Two compressed formats live here. signSGD-style methods (majority
+//! vote, MV-sto-signSGD) only move the *sign* of each coordinate, which
+//! packs to 1 bit instead of an f32's 32 — the 32× communication
+//! reduction that motivates them (Bernstein et al. 2018);
+//! [`pack_signs`]/[`unpack_signs`] implement that payload. The 8-bit
+//! quantized format ([`quantize_diff_into`]/[`dequantize_i8`]) trades a
+//! 4× payload reduction for a bounded rounding error on dense
+//! pseudo-gradient exchanges. [`sign_allreduce_bytes`] and [`q8_bytes`]
+//! are the byte models the simulated clock bills through
+//! [`crate::comm::SimClock::charge_exchange`].
 //!
 //! # Wire format
 //!
@@ -25,9 +30,10 @@
 //! tallies set bits per coordinate directly on the packed words
 //! (never unpacking to f32) and decodes coordinate `i` to `+1` iff at
 //! least half the ranks set bit `i` — a tie has no zero symbol to fall
-//! back to, so it resolves to `+1`. Sign-compressed outer optimizers
-//! (`OuterOptimizer::sign_compressed_comm`) therefore use wire-tie
-//! semantics *everywhere*, including their in-memory reference paths.
+//! back to, so it resolves to `+1`. Sign-vote outer optimizers (the
+//! `packed_signs` wire format, [`super::wire::WireFormat`]) therefore
+//! use wire-tie semantics *everywhere*, including their in-memory
+//! reference paths.
 
 /// Fixed per-message framing overhead (element count as a u64), charged
 /// on top of the packed payload by [`sign_allreduce_bytes`].
@@ -64,6 +70,68 @@ pub fn pack_signs_into(v: &[f32], out: &mut Vec<u8>) {
             out[i / 8] |= 1 << (i % 8);
         }
     }
+}
+
+/// Framing overhead of one [`quantize_diff_into`] message on top of the
+/// 1-byte-per-coordinate payload: the element count as a u64 plus the
+/// f32 quantization scale.
+pub const Q8_OVERHEAD_BYTES: u64 = HEADER_BYTES + 4;
+
+/// Total bytes one 8-bit quantized message of `n_params` coordinates
+/// puts on the wire: 1 byte per coordinate plus the fixed framing.
+pub fn q8_bytes(n_params: usize) -> u64 {
+    n_params as u64 + Q8_OVERHEAD_BYTES
+}
+
+/// Quantize the local difference `start - end` to symmetric i8 with a
+/// per-message scale, writing the two's-complement bytes into `out`
+/// (capacity reused — the allocation-free path for persistent payload
+/// buffers) and returning the scale.
+///
+/// Encoding: `scale = max_i |start_i - end_i| / 127` and
+/// `byte_i = round((start_i - end_i) / scale)` clamped to ±127, so the
+/// extreme coordinate is exact and every coordinate decodes within
+/// `scale / 2` of its true value ([`dequantize_i8`]). An all-zero
+/// difference encodes `scale = 0` with an all-zero payload and decodes
+/// exactly. Any non-finite difference poisons the message: the scale is
+/// encoded as NaN, every byte decodes to NaN (rather than silently
+/// saturating to a finite value), and the trainer's divergence check
+/// fires exactly as it would on the dense wire.
+pub fn quantize_diff_into(start: &[f32], end: &[f32], out: &mut Vec<u8>) -> f32 {
+    assert_eq!(
+        start.len(),
+        end.len(),
+        "quantize: start has {} coordinates, end {}",
+        start.len(),
+        end.len()
+    );
+    // f32::max skips NaN operands, so track finiteness explicitly — a
+    // diverged worker must not encode as an innocuous finite payload
+    let mut max = 0.0f32;
+    let mut finite = true;
+    for (&s, &e) in start.iter().zip(end) {
+        let d = s - e;
+        finite &= d.is_finite();
+        max = max.max(d.abs());
+    }
+    let scale = if finite { max / 127.0 } else { f32::NAN };
+    out.clear();
+    if scale == 0.0 {
+        out.resize(start.len(), 0);
+        return 0.0;
+    }
+    let inv = 1.0 / scale;
+    out.reserve(start.len());
+    for (&s, &e) in start.iter().zip(end) {
+        let q = ((s - e) * inv).round().clamp(-127.0, 127.0);
+        out.push(q as i8 as u8);
+    }
+    scale
+}
+
+/// Decode one byte produced by [`quantize_diff_into`] back to f32.
+pub fn dequantize_i8(byte: u8, scale: f32) -> f32 {
+    (byte as i8) as f32 * scale
 }
 
 /// Decode `len` coordinates packed by [`pack_signs`] back to ±1.0.
@@ -135,5 +203,88 @@ mod tests {
     #[should_panic(expected = "packed buffer")]
     fn wrong_packed_length_panics() {
         unpack_signs(&[0u8; 2], 32);
+    }
+
+    #[test]
+    fn q8_message_is_4x_smaller_than_f32_plus_framing() {
+        let p = 1 << 20;
+        assert_eq!(q8_bytes(p), p as u64 + Q8_OVERHEAD_BYTES);
+        assert!(q8_bytes(p) * 3 < (p as u64) * 4);
+    }
+
+    #[test]
+    fn q8_extreme_coordinate_is_exact_and_error_is_bounded() {
+        let start = vec![1.0f32, 0.5, -0.25, 0.0, 2.0];
+        let end = vec![0.0f32, 0.75, -0.25, 0.254, 2.001];
+        let mut bytes = Vec::new();
+        let scale = quantize_diff_into(&start, &end, &mut bytes);
+        assert_eq!(bytes.len(), 5);
+        assert_eq!(scale, 1.0 / 127.0); // max |diff| = 1.0
+        for ((&s, &e), &b) in start.iter().zip(&end).zip(&bytes) {
+            let err = (dequantize_i8(b, scale) - (s - e)).abs();
+            assert!(err <= scale / 2.0 + 1e-6, "diff {} decoded with err {err}", s - e);
+        }
+        // the max-magnitude coordinate round-trips exactly (q = ±127)
+        assert_eq!(dequantize_i8(bytes[0], scale), 1.0);
+    }
+
+    #[test]
+    fn q8_zero_difference_encodes_scale_zero_and_decodes_exactly() {
+        let x = vec![3.0f32, -1.0, 0.0];
+        let mut bytes = vec![0xFFu8; 1]; // stale content must be overwritten
+        let scale = quantize_diff_into(&x, &x, &mut bytes);
+        assert_eq!(scale, 0.0);
+        assert_eq!(bytes, vec![0u8; 3]);
+        for &b in &bytes {
+            assert_eq!(dequantize_i8(b, scale), 0.0);
+        }
+    }
+
+    #[test]
+    fn q8_non_finite_differences_poison_the_message() {
+        // a diverged worker must decode non-finite everywhere so the
+        // trainer's all_finite check fires, exactly like the dense wire
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let start = vec![1.0f32, 2.0, 3.0];
+            let end = vec![0.5f32, bad, 3.25];
+            let mut bytes = Vec::new();
+            let scale = quantize_diff_into(&start, &end, &mut bytes);
+            assert!(scale.is_nan(), "scale for bad={bad}");
+            assert_eq!(bytes.len(), 3);
+            for &b in &bytes {
+                assert!(!dequantize_i8(b, scale).is_finite(), "bad={bad}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_buffer_is_reused_across_repacks() {
+        let start = vec![1.0f32; 512];
+        let end = vec![0.25f32; 512];
+        let mut bytes = Vec::new();
+        quantize_diff_into(&start, &end, &mut bytes);
+        let cap = bytes.capacity();
+        for _ in 0..8 {
+            quantize_diff_into(&start, &end, &mut bytes);
+        }
+        assert_eq!(bytes.capacity(), cap);
+        assert_eq!(bytes.len(), 512);
+    }
+
+    #[test]
+    fn q8_negative_differences_round_trip_with_sign() {
+        let start = vec![0.0f32; 4];
+        let end = vec![1.0f32, -1.0, 0.5, -0.5];
+        let mut bytes = Vec::new();
+        let scale = quantize_diff_into(&start, &end, &mut bytes);
+        let decoded: Vec<f32> = bytes.iter().map(|&b| dequantize_i8(b, scale)).collect();
+        // both extremes are exact; interior values keep their sign and
+        // land within half a quantization step
+        assert_eq!(decoded[0], -1.0);
+        assert_eq!(decoded[1], 1.0);
+        for (d, expect) in decoded.iter().zip([-1.0f32, 1.0, -0.5, 0.5]) {
+            assert_eq!(d.signum(), expect.signum());
+            assert!((d - expect).abs() <= scale / 2.0 + 1e-6);
+        }
     }
 }

@@ -19,10 +19,10 @@
 //!   │           opt.step(params, grads)  } (base optimizer, γ_t,k)  │
 //!   │ join, per-rank results gathered by rank index                 │
 //!   │                                                               │
-//!   │ collectives::allreduce_mean(workers) → x̄_{t,τ}               │
-//!   │ SimClock charge: f32 payload, or packed-sign payload when the │
-//!   │     outer optimizer exchanges 1-bit votes (dist::codec)       │
-//!   │ outer.round(global, Δ_t)             (global sign-momentum)   │
+//!   │ SimClock.charge_exchange(payload)    (bills wire::WirePayload │
+//!   │     bytes — ring for dense f32, gather+broadcast otherwise)   │
+//!   │ outer.contribute(w, view) per rank   (pack into the payload)  │
+//!   │ outer.apply(global, payloads)        (global sign-momentum)   │
 //!   │ take_mean_loss() per worker          (round's train loss)     │
 //!   └───────────────────────────────────────────────────────────────┘
 //! ```
@@ -49,29 +49,34 @@
 //! `rust/tests/collectives.rs`). `Backend::auto` picks threads only when
 //! the vector is large enough to amortize the dispatch.
 //!
-//! # The 1-bit vote wire
+//! # The typed wire
 //!
-//! [`codec`] defines the wire format: sign vectors pack at
+//! [`wire`] defines the round-exchange contract: every worker→server
+//! message is a [`WirePayload`] (dense f32 parameters, packed 1-bit
+//! sign votes, or 8-bit quantized differences), billed by its own
+//! [`WirePayload::wire_bytes`] so accounting and data path cannot
+//! drift. [`codec`] holds the byte formats: sign vectors pack at
 //! 1 bit/coordinate (32× vs f32), the IEEE sign bit is kept
 //! (`+0 → +1`, `-0 → -1`), and decoding always yields ±1 — the wire has
-//! no zero symbol, so a tied majority tally resolves to +1 everywhere.
-//! [`votes`] is the *data path* over that format: workers produce
-//! [`PackedVotes`] and the server runs [`votes::majority_vote_packed`],
-//! a word-level popcount tally that never unpacks to f32 and is
-//! bitwise-identical to [`collectives::majority_vote`] over the decoded
-//! votes (property-tested in `rust/tests/packed_vote.rs`).
-//! `codec::sign_allreduce_bytes` remains the wire-cost model the
-//! [`crate::comm::SimClock`] charges for these exchanges, and on the
-//! packed path it is exactly the byte count of the buffers exchanged.
+//! no zero symbol, so a tied majority tally resolves to +1 everywhere;
+//! the i8 format quantizes each rank's local difference against a
+//! per-message scale. [`votes`] is the *data path* over the 1-bit
+//! format: workers produce [`PackedVotes`] and the server runs
+//! [`votes::majority_vote_packed`], a word-level popcount tally that
+//! never unpacks to f32 and is bitwise-identical to
+//! [`collectives::majority_vote`] over the decoded votes
+//! (property-tested in `rust/tests/packed_vote.rs`).
 
 pub mod codec;
 pub mod collectives;
 pub mod pool;
 pub mod votes;
+pub mod wire;
 mod worker;
 
 pub use collectives::Backend;
 pub use votes::PackedVotes;
+pub use wire::{WireFormat, WirePayload};
 pub use worker::Worker;
 
 /// Ceiling division shared by the wire codec and the pool chunking

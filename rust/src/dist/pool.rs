@@ -298,6 +298,42 @@ where
         .collect()
 }
 
+/// Read-only sibling of [`run_indexed_mut`]: execute `job(i, &items[i])`
+/// for every index concurrently on the global pool (the caller
+/// participates) and return the results in index order. The trainer
+/// fans the validation batches of one eval pass across the pool with
+/// this — each job only reads shared state (backend, params, batch), so
+/// no `&mut` fleet is needed.
+///
+/// Determinism and panic safety match [`run_indexed_mut`]: each index
+/// runs exactly once on some thread, results are gathered by index (so
+/// any order-sensitive reduction the caller does afterwards sees the
+/// sequential order), and a panicking job re-raises on the caller after
+/// a full join.
+pub fn run_indexed<T, R, F>(items: &[T], job: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    let mut results: Vec<Option<R>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+    let slot_ptr = SlotPtr(results.as_mut_ptr());
+    global().run(n, move |i| {
+        // SAFETY: the dispenser yields each index exactly once, so the
+        // result slot at `i` is written by one thread only and stays in
+        // bounds (i < n); the caller's `run` blocks until every helper
+        // finished, keeping the borrow alive.
+        let out = job(i, &items[i]);
+        unsafe { *slot_ptr.0.add(i) = Some(out) };
+    });
+    results
+        .into_iter()
+        .map(|r| r.expect("pool ran every job index exactly once"))
+        .collect()
+}
+
 /// The pre-pool implementation — scoped threads spawned on every call —
 /// kept only as the benchmark baseline so `benches/collectives.rs` can
 /// quantify the pool's win.
@@ -406,6 +442,19 @@ mod tests {
         for (a, b) in rp.iter().zip(&rs) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn run_indexed_readonly_matches_sequential_map() {
+        let items: Vec<f64> = (0..29).map(|i| i as f64 * 1.3).collect();
+        let job = |i: usize, x: &f64| (x + i as f64).sqrt();
+        let pooled = run_indexed(&items, job);
+        let serial: Vec<f64> = items.iter().enumerate().map(|(i, x)| job(i, x)).collect();
+        assert_eq!(pooled.len(), serial.len());
+        for (a, b) in pooled.iter().zip(&serial) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert!(run_indexed(&Vec::<u8>::new(), |_, _| 0).is_empty());
     }
 
     #[test]

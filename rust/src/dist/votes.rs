@@ -45,6 +45,15 @@ impl PackedVotes {
         PackedVotes { bytes: Vec::new(), len: 0 }
     }
 
+    /// A sized all-clear buffer of `len` coordinates (every vote −1):
+    /// the initial state of the trainer's persistent payload buffers.
+    /// Its [`wire_bytes`](Self::wire_bytes) is already the final round
+    /// cost — the byte count depends only on `len`, so the clock can
+    /// bill an exchange before the ranks re-pack the buffer.
+    pub fn with_len(len: usize) -> PackedVotes {
+        PackedVotes { bytes: vec![0; codec::packed_len(len)], len }
+    }
+
     /// Re-pack in place, reusing this buffer's allocation
     /// ([`codec::pack_signs_into`]). Persistent per-rank buffers call
     /// this every round, so the steady-state packed data path allocates
@@ -143,19 +152,30 @@ fn lanes_ge(counts: &[u64], t: u64) -> u64 {
 /// backend. The output is always ±1 with ties decoding to +1 — see the
 /// module docs; bitwise-identical to running
 /// [`super::collectives::majority_vote`] on the unpacked votes.
-pub fn majority_vote_packed(votes: &[PackedVotes], out: &mut [f32]) {
+///
+/// Generic over owned buffers and references (`&[PackedVotes]` or
+/// `&[&PackedVotes]`): the server-side tally borrows the trainer's
+/// persistent [`super::wire::WirePayload`] buffers without copying.
+pub fn majority_vote_packed<V: std::borrow::Borrow<PackedVotes> + Sync>(
+    votes: &[V],
+    out: &mut [f32],
+) {
     majority_vote_packed_with(Backend::auto(out.len()), votes, out)
 }
 
 /// [`majority_vote_packed`] with an explicit [`Backend`].
-pub fn majority_vote_packed_with(backend: Backend, votes: &[PackedVotes], out: &mut [f32]) {
+pub fn majority_vote_packed_with<V: std::borrow::Borrow<PackedVotes> + Sync>(
+    backend: Backend,
+    votes: &[V],
+    out: &mut [f32],
+) {
     assert!(!votes.is_empty(), "majority vote over zero workers");
     for (i, v) in votes.iter().enumerate() {
         assert_eq!(
-            v.len(),
+            v.borrow().len(),
             out.len(),
             "worker {i}: vote length {} != output {}",
-            v.len(),
+            v.borrow().len(),
             out.len()
         );
     }
@@ -177,7 +197,7 @@ pub fn majority_vote_packed_with(backend: Backend, votes: &[PackedVotes], out: &
         while done < chunk.len() {
             counts.fill(0);
             for v in votes {
-                add_word(&mut counts, v.word(wi));
+                add_word(&mut counts, v.borrow().word(wi));
             }
             let winners = lanes_ge(&counts, threshold);
             let lanes = (chunk.len() - done).min(64);
@@ -318,5 +338,32 @@ mod tests {
     #[should_panic(expected = "payload")]
     fn from_bytes_validates_length() {
         PackedVotes::from_bytes(vec![0u8; 2], 32);
+    }
+
+    #[test]
+    fn with_len_is_sized_all_minus_one_and_costs_like_a_packed_round() {
+        let v = PackedVotes::with_len(70);
+        assert_eq!(v.len(), 70);
+        assert_eq!(v.as_bytes().len(), codec::packed_len(70));
+        assert_eq!(v.wire_bytes(), codec::sign_allreduce_bytes(70));
+        assert_eq!(v.unpack(), vec![-1.0f32; 70]);
+        assert!(PackedVotes::with_len(0).is_empty());
+    }
+
+    #[test]
+    fn tally_accepts_references_and_matches_owned_buffers() {
+        let owned: Vec<PackedVotes> = (0..3)
+            .map(|w| {
+                let v: Vec<f32> =
+                    (0..100).map(|j| if (w + j) % 2 == 0 { 1.0 } else { -1.0 }).collect();
+                PackedVotes::pack(&v)
+            })
+            .collect();
+        let refs: Vec<&PackedVotes> = owned.iter().collect();
+        let mut from_owned = vec![0.0f32; 100];
+        majority_vote_packed(&owned, &mut from_owned);
+        let mut from_refs = vec![0.0f32; 100];
+        majority_vote_packed(&refs, &mut from_refs);
+        assert_eq!(from_owned, from_refs);
     }
 }

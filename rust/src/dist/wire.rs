@@ -1,0 +1,426 @@
+//! The typed round-exchange payload: what one rank actually puts on the
+//! simulated wire at a communication round.
+//!
+//! Every outer optimizer's worker→server exchange is a [`WirePayload`]
+//! — full-precision parameters, packed 1-bit sign votes, or 8-bit
+//! quantized differences — and the clock bills the payload's own
+//! [`WirePayload::wire_bytes`] ([`crate::comm::SimClock::charge_exchange`]).
+//! Because the billed object IS the exchanged object, the accounting
+//! and the data path cannot diverge: there is no per-optimizer flag
+//! left to choose a byte formula from, and adding a format means adding
+//! a variant here (its byte cost and topology come with it) rather than
+//! a new `if` in the trainer.
+//!
+//! # Formats
+//!
+//! | format | payload | bytes/message | topology |
+//! |---|---|---|---|
+//! | [`WireFormat::DenseF32`] | rank's end parameters `x_{t,τ}^{(i)}` | `4P` | ring all-reduce |
+//! | [`WireFormat::PackedSigns`] | 1-bit randomized sign votes | `⌈P/8⌉ + 8` | gather + broadcast |
+//! | [`WireFormat::QuantizedI8`] | i8-quantized local difference | `P + 12` | gather + broadcast |
+//!
+//! A mean over dense payloads is ring-reducible, so `DenseF32` keeps
+//! the classic α-β ring model. Neither a majority tally nor a
+//! per-rank-scaled i8 sum fits its own wire format mid-reduction (a
+//! partial tally has no 1-bit encoding; summing i8 payloads with
+//! different scales requires dequantizing first), so the compressed
+//! formats bill the practical server topology — a flat gather of the
+//! n−1 rank payloads plus a binomial-tree broadcast of the result. At
+//! the default n = 4 the q8 exchange beats dense on both the latency
+//! and bandwidth terms; at large n the linear gather overtakes the
+//! saturating ring — an honest tradeoff the comm-tradeoff example
+//! tabulates.
+
+use super::codec;
+use super::collectives;
+use super::votes::PackedVotes;
+
+/// Construction-time name of a [`WirePayload`] variant: what a config
+/// file selects (`wire = "dense" | "packed_signs" | "q8"`) and what the
+/// trainer sizes its persistent per-rank buffers with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Full-precision f32 parameters (the classic exchange).
+    DenseF32,
+    /// 1-bit sign votes ([`codec::pack_signs`], Algorithm 6's wire).
+    PackedSigns,
+    /// 8-bit symmetric-quantized local differences
+    /// ([`codec::quantize_diff_into`]).
+    QuantizedI8,
+}
+
+impl WireFormat {
+    /// Parse a config-file / CLI name.
+    pub fn parse(s: &str) -> Option<WireFormat> {
+        match s {
+            "dense" | "f32" => Some(WireFormat::DenseF32),
+            "packed_signs" | "signs" | "1bit" => Some(WireFormat::PackedSigns),
+            "q8" | "i8" | "quantized_i8" => Some(WireFormat::QuantizedI8),
+            _ => None,
+        }
+    }
+
+    /// Stable config-facing name (inverse of [`WireFormat::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            WireFormat::DenseF32 => "dense",
+            WireFormat::PackedSigns => "packed_signs",
+            WireFormat::QuantizedI8 => "q8",
+        }
+    }
+
+    /// Bytes one message of `len` coordinates puts on the wire in this
+    /// format (what a sized [`WirePayload`] will report).
+    pub fn wire_bytes(&self, len: usize) -> u64 {
+        match self {
+            WireFormat::DenseF32 => len as u64 * 4,
+            WireFormat::PackedSigns => codec::sign_allreduce_bytes(len),
+            WireFormat::QuantizedI8 => codec::q8_bytes(len),
+        }
+    }
+
+    /// Whether a partial aggregate of this format fits back into the
+    /// format itself — true only for dense f32, which therefore bills
+    /// the ring all-reduce; compressed formats bill gather+broadcast
+    /// (see the module docs).
+    pub fn ring_reducible(&self) -> bool {
+        matches!(self, WireFormat::DenseF32)
+    }
+}
+
+/// One rank's round contribution, in exactly the bytes that cross the
+/// simulated wire. Trainer-owned and persistent: the same buffers are
+/// re-packed in place every round, so the steady-state exchange
+/// allocates nothing in any format.
+#[derive(Clone, Debug, PartialEq)]
+pub enum WirePayload {
+    /// The rank's end-of-round parameters, full precision.
+    DenseF32(Vec<f32>),
+    /// The rank's packed 1-bit sign votes.
+    PackedSigns(PackedVotes),
+    /// The rank's local difference `start - end`, quantized to i8 with
+    /// a per-message scale ([`codec::quantize_diff_into`]).
+    QuantizedI8 {
+        /// Symmetric quantization step (`max |diff| / 127`).
+        scale: f32,
+        /// One two's-complement i8 per coordinate.
+        bytes: Vec<u8>,
+    },
+}
+
+impl WirePayload {
+    /// A zeroed payload of `len` coordinates in `format` — the initial
+    /// state of the trainer's persistent buffers. Its
+    /// [`wire_bytes`](Self::wire_bytes) is already final: the byte cost
+    /// is a function of (format, len) only, never of the packed
+    /// contents, which is what lets the clock bill a round before the
+    /// ranks pack into it.
+    pub fn with_len(format: WireFormat, len: usize) -> WirePayload {
+        match format {
+            WireFormat::DenseF32 => WirePayload::DenseF32(vec![0.0; len]),
+            WireFormat::PackedSigns => WirePayload::PackedSigns(PackedVotes::with_len(len)),
+            WireFormat::QuantizedI8 => {
+                WirePayload::QuantizedI8 { scale: 0.0, bytes: vec![0; len] }
+            }
+        }
+    }
+
+    pub fn format(&self) -> WireFormat {
+        match self {
+            WirePayload::DenseF32(_) => WireFormat::DenseF32,
+            WirePayload::PackedSigns(_) => WireFormat::PackedSigns,
+            WirePayload::QuantizedI8 { .. } => WireFormat::QuantizedI8,
+        }
+    }
+
+    /// Number of coordinates this payload carries.
+    pub fn len(&self) -> usize {
+        match self {
+            WirePayload::DenseF32(v) => v.len(),
+            WirePayload::PackedSigns(p) => p.len(),
+            WirePayload::QuantizedI8 { bytes, .. } => bytes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total bytes this message puts on the wire — the number the clock
+    /// bills. By construction equal to
+    /// `self.format().wire_bytes(self.len())`.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            WirePayload::DenseF32(v) => v.len() as u64 * 4,
+            WirePayload::PackedSigns(p) => p.wire_bytes(),
+            WirePayload::QuantizedI8 { bytes, .. } => codec::q8_bytes(bytes.len()),
+        }
+    }
+
+    /// See [`WireFormat::ring_reducible`].
+    pub fn ring_reducible(&self) -> bool {
+        self.format().ring_reducible()
+    }
+
+    /// The dense f32 view, when this is a [`WirePayload::DenseF32`].
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            WirePayload::DenseF32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    /// The packed-vote view, when this is a [`WirePayload::PackedSigns`].
+    pub fn as_packed_signs(&self) -> Option<&PackedVotes> {
+        match self {
+            WirePayload::PackedSigns(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Worker-side packing shared by every dense-exchange outer
+    /// optimizer: fill this payload with rank's end-of-round state in
+    /// the payload's own format — the parameters themselves for
+    /// `DenseF32`, the quantized difference `start - end` for
+    /// `QuantizedI8`. Buffer capacity is reused; no allocation in
+    /// steady state.
+    ///
+    /// # Panics
+    ///
+    /// On a `PackedSigns` buffer: a dense parameter exchange has no
+    /// 1-bit encoding (config validation keeps this combination from
+    /// ever being built — [`crate::config::RunConfig::validate`]).
+    pub fn pack_end(&mut self, start: &[f32], end: &[f32]) {
+        match self {
+            WirePayload::DenseF32(buf) => {
+                buf.clear();
+                buf.extend_from_slice(end);
+            }
+            WirePayload::QuantizedI8 { scale, bytes } => {
+                *scale = codec::quantize_diff_into(start, end, bytes);
+            }
+            WirePayload::PackedSigns(_) => {
+                panic!("a dense parameter exchange cannot pack into a packed_signs payload")
+            }
+        }
+    }
+
+    /// Worker-side packing for sign-vote optimizers: pack the ±1 vote
+    /// vector at 1 bit/coordinate ([`PackedVotes::pack_into`]).
+    ///
+    /// # Panics
+    ///
+    /// On a dense or quantized buffer — sign votes only have the 1-bit
+    /// encoding (again unreachable under a validated config).
+    pub fn pack_sign_votes(&mut self, votes: &[f32]) {
+        match self {
+            WirePayload::PackedSigns(p) => p.pack_into(votes),
+            other => panic!(
+                "sign votes need a packed_signs payload, got {}",
+                other.format().name()
+            ),
+        }
+    }
+
+    /// Server-side reconstruction of the round's average end point
+    /// `x̄_{t,τ}` from the gathered payloads, into `out`:
+    ///
+    /// * `DenseF32` — the exact mean of the rank parameters, computed
+    ///   by the same [`collectives::allreduce_mean`] arithmetic (f64
+    ///   accumulation in rank order) the trainer historically used, so
+    ///   the dense path is bitwise-identical to the pre-payload
+    ///   semantics by construction.
+    /// * `QuantizedI8` — `start - mean_i(dequantize(payload_i))`: each
+    ///   rank's difference decodes with its own scale, is averaged in
+    ///   f64 in rank order, and re-anchors at the round start.
+    ///
+    /// # Panics
+    ///
+    /// On `PackedSigns` payloads (a majority tally has no mean end
+    /// point — tally them with
+    /// [`crate::dist::votes::majority_vote_packed`]), on mixed formats,
+    /// or on length mismatches.
+    pub fn mean_end_into(payloads: &[WirePayload], start: &[f32], out: &mut [f32]) {
+        assert!(!payloads.is_empty(), "exchange over zero workers");
+        for (i, p) in payloads.iter().enumerate() {
+            assert_eq!(p.format(), payloads[0].format(), "worker {i}: mixed wire formats");
+            assert_eq!(
+                p.len(),
+                out.len(),
+                "worker {i}: payload length {} != output {}",
+                p.len(),
+                out.len()
+            );
+        }
+        match payloads[0] {
+            WirePayload::DenseF32(_) => {
+                collectives::allreduce_mean(
+                    payloads,
+                    |p| p.as_dense().expect("format checked above"),
+                    out,
+                );
+            }
+            WirePayload::QuantizedI8 { .. } => {
+                assert_eq!(start.len(), out.len(), "start length {} != output", start.len());
+                let inv_n = 1.0f64 / payloads.len() as f64;
+                for (i, o) in out.iter_mut().enumerate() {
+                    let mut acc = 0.0f64;
+                    for p in payloads {
+                        let WirePayload::QuantizedI8 { scale, bytes } = p else {
+                            unreachable!("format checked above")
+                        };
+                        acc += codec::dequantize_i8(bytes[i], *scale) as f64;
+                    }
+                    *o = start[i] - (acc * inv_n) as f32;
+                }
+            }
+            WirePayload::PackedSigns(_) => {
+                panic!("packed sign votes have no mean end point; run the majority tally")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_len_builds_sized_zeroed_payloads_in_every_format() {
+        for format in [WireFormat::DenseF32, WireFormat::PackedSigns, WireFormat::QuantizedI8] {
+            let p = WirePayload::with_len(format, 37);
+            assert_eq!(p.format(), format);
+            assert_eq!(p.len(), 37);
+            assert!(!p.is_empty());
+            assert_eq!(p.wire_bytes(), format.wire_bytes(37), "{}", format.name());
+            assert!(WirePayload::with_len(format, 0).is_empty());
+        }
+    }
+
+    #[test]
+    fn wire_bytes_match_the_codec_models() {
+        let p = 1 << 20;
+        assert_eq!(WireFormat::DenseF32.wire_bytes(p), p as u64 * 4);
+        assert_eq!(WireFormat::PackedSigns.wire_bytes(p), codec::sign_allreduce_bytes(p));
+        assert_eq!(WireFormat::QuantizedI8.wire_bytes(p), codec::q8_bytes(p));
+    }
+
+    #[test]
+    fn parse_and_name_round_trip() {
+        for format in [WireFormat::DenseF32, WireFormat::PackedSigns, WireFormat::QuantizedI8] {
+            assert_eq!(WireFormat::parse(format.name()), Some(format));
+        }
+        assert_eq!(WireFormat::parse("q8"), Some(WireFormat::QuantizedI8));
+        assert_eq!(WireFormat::parse("1bit"), Some(WireFormat::PackedSigns));
+        assert_eq!(WireFormat::parse("warpdrive"), None);
+    }
+
+    #[test]
+    fn only_dense_is_ring_reducible() {
+        assert!(WireFormat::DenseF32.ring_reducible());
+        assert!(!WireFormat::PackedSigns.ring_reducible());
+        assert!(!WireFormat::QuantizedI8.ring_reducible());
+    }
+
+    #[test]
+    fn dense_mean_matches_allreduce_mean_bitwise() {
+        let ends = [vec![1.0f32, 2.0, -3.0], vec![0.5f32, -2.0, 9.0], vec![0.25f32, 0.1, 1.0]];
+        let payloads: Vec<WirePayload> = ends
+            .iter()
+            .map(|e| {
+                let mut p = WirePayload::with_len(WireFormat::DenseF32, 3);
+                p.pack_end(&[0.0; 3], e);
+                p
+            })
+            .collect();
+        let mut from_payloads = vec![0.0f32; 3];
+        WirePayload::mean_end_into(&payloads, &[0.0; 3], &mut from_payloads);
+        let mut reference = vec![0.0f32; 3];
+        collectives::allreduce_mean(&ends, |e| e.as_slice(), &mut reference);
+        for (a, b) in from_payloads.iter().zip(&reference) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn q8_mean_reconstructs_the_average_end_within_quantization_error() {
+        let start = vec![1.0f32, -0.5, 0.25, 2.0];
+        let ends = [vec![0.9f32, -0.45, 0.30, 1.90], vec![0.8f32, -0.55, 0.20, 2.05]];
+        let payloads: Vec<WirePayload> = ends
+            .iter()
+            .map(|e| {
+                let mut p = WirePayload::with_len(WireFormat::QuantizedI8, 4);
+                p.pack_end(&start, e);
+                p
+            })
+            .collect();
+        let mut avg = vec![0.0f32; 4];
+        WirePayload::mean_end_into(&payloads, &start, &mut avg);
+        let mut exact = vec![0.0f32; 4];
+        collectives::allreduce_mean(&ends, |e| e.as_slice(), &mut exact);
+        // per-rank quantization step: scale = max|diff|/127; the mean's
+        // error is at most the mean of the per-rank half-steps
+        for (j, (a, e)) in avg.iter().zip(&exact).enumerate() {
+            assert!((a - e).abs() < 2e-3, "coord {j}: {a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn q8_exchange_with_zero_difference_is_exact() {
+        let start = vec![0.5f32, -3.0, 7.0];
+        let mut p = WirePayload::with_len(WireFormat::QuantizedI8, 3);
+        p.pack_end(&start, &start);
+        let mut avg = vec![9.0f32; 3];
+        WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut avg);
+        assert_eq!(avg, start);
+    }
+
+    #[test]
+    fn pack_end_reuses_buffers_across_rounds() {
+        let start = vec![1.0f32; 256];
+        let end = vec![0.75f32; 256];
+        for format in [WireFormat::DenseF32, WireFormat::QuantizedI8] {
+            let mut p = WirePayload::with_len(format, 256);
+            p.pack_end(&start, &end);
+            let bytes_before = p.wire_bytes();
+            for _ in 0..5 {
+                p.pack_end(&start, &end);
+            }
+            assert_eq!(p.len(), 256, "{}", format.name());
+            assert_eq!(p.wire_bytes(), bytes_before);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "packed_signs")]
+    fn dense_pack_into_sign_buffer_panics() {
+        let mut p = WirePayload::with_len(WireFormat::PackedSigns, 8);
+        p.pack_end(&[0.0; 8], &[1.0; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "sign votes")]
+    fn sign_votes_into_dense_buffer_panic() {
+        let mut p = WirePayload::with_len(WireFormat::DenseF32, 8);
+        p.pack_sign_votes(&[1.0; 8]);
+    }
+
+    #[test]
+    #[should_panic(expected = "majority tally")]
+    fn mean_over_sign_votes_panics() {
+        let payloads = vec![WirePayload::with_len(WireFormat::PackedSigns, 8)];
+        let mut out = vec![0.0f32; 8];
+        WirePayload::mean_end_into(&payloads, &[0.0; 8], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed wire formats")]
+    fn mixed_formats_panic() {
+        let payloads = vec![
+            WirePayload::with_len(WireFormat::DenseF32, 4),
+            WirePayload::with_len(WireFormat::QuantizedI8, 4),
+        ];
+        let mut out = vec![0.0f32; 4];
+        WirePayload::mean_end_into(&payloads, &[0.0; 4], &mut out);
+    }
+}

@@ -127,8 +127,12 @@ pub struct RunSummary {
 /// Bump whenever the *models* behind a run change (comm topology,
 /// clock accounting, data path) so stale cache CSVs computed under the
 /// old formulas are not mixed into new tables. v2: sign-vote rounds
-/// moved from the ring α-β formula to gather+broadcast (PR 3).
-const CACHE_MODEL_VERSION: &str = "v2";
+/// moved from the ring α-β formula to gather+broadcast (PR 3). v3: the
+/// typed WirePayload exchange landed (wire format now in the key via
+/// `describe()`) and MV-sto-signSGD's update anchors at x_t per the
+/// literal Algorithm 6 recursion (ROADMAP (g)) — pre-fix MV CSVs are
+/// stale.
+const CACHE_MODEL_VERSION: &str = "v3";
 
 /// Content hash of everything that determines a run's trajectory.
 /// `cfg.sequential_workers` is deliberately excluded: the parallel and
@@ -249,5 +253,10 @@ mod tests {
         c.tau = 24;
         assert_ne!(cache_key(&a), cache_key(&c));
         assert_eq!(cache_key(&a), cache_key(&a.clone()));
+        // the wire format determines the trajectory (q8 quantizes the
+        // exchange), so it must split the cache
+        let mut d = a.clone();
+        d.wire = Some(crate::dist::WireFormat::QuantizedI8);
+        assert_ne!(cache_key(&a), cache_key(&d));
     }
 }

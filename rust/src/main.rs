@@ -32,7 +32,6 @@ const BOOL_FLAGS: &[&str] = &[
     "nesterov",
     "signed",
     "heterogeneous",
-    "reference-votes",
     "sequential-workers",
 ];
 
@@ -42,7 +41,8 @@ repro — Distributed Sign Momentum (Yu et al. 2024) training system
 USAGE:
   repro train   [--config run.toml] [--preset P] [--workers N] [--tau K]
                 [--rounds T] [--outer ALGO] [--global-lr F] [--peak-lr F]
-                [--mode local|standalone] [--comm PRESET] [--seed S]
+                [--wire dense|packed_signs|q8] [--mode local|standalone]
+                [--comm PRESET] [--seed S]
                 [--pallas-global-step] [--sequential-workers]
                 [--log-dir DIR] [--checkpoint F] [--resume F]
   repro experiment <id|all> [--scale F] [--big] [--no-cache]

@@ -1,13 +1,16 @@
 //! Global AdamW with local steps — the paper's Algorithm 7 (§4.1
 //! "Adaptive global update" ablation, Table 6 row "Global AdamW").
 //!
-//! Treats g_t = (x_{t,0} - x_{t,τ})/γ_t as a pseudo-gradient and applies
+//! Treats g_t = (x_{t,0} - x̄_{t,τ})/γ_t as a pseudo-gradient (the
+//! average end point reconstructed from the dense payloads) and applies
 //! one bias-corrected AdamW step with decoupled weight decay.  Balles &
 //! Hennig's reading of Adam as variance-adapted sign momentum makes this
 //! the natural adaptive comparator for Algorithm 1's pure sign step; the
 //! paper finds the adaptivity buys little here.
 
-use super::{OuterOptimizer, RoundCtx};
+use anyhow::Result;
+
+use super::{OuterOptimizer, RoundCtx, WireFormat, WirePayload, WorkerView};
 use crate::util::rng::Rng;
 
 pub struct GlobalAdamW {
@@ -20,6 +23,8 @@ pub struct GlobalAdamW {
     t_buf: Vec<f32>,
     m: Vec<f32>,
     v: Vec<f32>,
+    /// round scratch: reconstructed average end point (not checkpointed)
+    avg: Vec<f32>,
 }
 
 impl GlobalAdamW {
@@ -34,12 +39,35 @@ impl GlobalAdamW {
             t_buf: vec![0.0],
             m: vec![0.0; dim],
             v: vec![0.0; dim],
+            avg: vec![0.0; dim],
         }
     }
 }
 
 impl OuterOptimizer for GlobalAdamW {
-    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, _rng: &mut Rng) {
+    fn wire(&self) -> WireFormat {
+        WireFormat::DenseF32
+    }
+
+    fn contribute(
+        &mut self,
+        _worker: usize,
+        _n_workers: usize,
+        view: &WorkerView,
+        _rng: &mut Rng,
+        out: &mut WirePayload,
+    ) {
+        out.pack_end(view.start, view.end);
+    }
+
+    fn apply(
+        &mut self,
+        global: &mut [f32],
+        ctx: &RoundCtx,
+        payloads: &[WirePayload],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg);
         self.t += 1;
         self.t_buf[0] = self.t as f32;
         let inv_gamma = 1.0 / ctx.gamma;
@@ -47,7 +75,7 @@ impl OuterOptimizer for GlobalAdamW {
         let inv_bc1 = 1.0 / (1.0 - b1.powi(self.t as i32));
         let inv_sqrt_bc2 = 1.0 / (1.0 - b2.powi(self.t as i32)).sqrt();
         for i in 0..global.len() {
-            let g = (ctx.start[i] - ctx.avg_end[i]) * inv_gamma;
+            let g = (ctx.start[i] - self.avg[i]) * inv_gamma;
             self.m[i] = b1 * self.m[i] + (1.0 - b1) * g;
             self.v[i] = b2 * self.v[i] + (1.0 - b2) * g * g;
             let mhat = self.m[i] * inv_bc1;
@@ -55,6 +83,7 @@ impl OuterOptimizer for GlobalAdamW {
             global[i] =
                 ctx.start[i] - self.eta * (mhat / denom + self.weight_decay * ctx.start[i]);
         }
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

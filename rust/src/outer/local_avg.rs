@@ -1,7 +1,10 @@
 //! Plain periodic parameter averaging — "Local AdamW" in the paper's
-//! Figure 3 (local SGD / FedAvg-style): the global step IS the all-reduce.
+//! Figure 3 (local SGD / FedAvg-style): the global step IS the exchange
+//! mean, reconstructed straight into the iterate from the payloads.
 
-use super::{OuterOptimizer, RoundCtx};
+use anyhow::Result;
+
+use super::{OuterOptimizer, RoundCtx, WireFormat, WirePayload, WorkerView};
 use crate::util::rng::Rng;
 
 pub struct LocalAvg;
@@ -19,8 +22,30 @@ impl Default for LocalAvg {
 }
 
 impl OuterOptimizer for LocalAvg {
-    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, _rng: &mut Rng) {
-        global.copy_from_slice(ctx.avg_end);
+    fn wire(&self) -> WireFormat {
+        WireFormat::DenseF32
+    }
+
+    fn contribute(
+        &mut self,
+        _worker: usize,
+        _n_workers: usize,
+        view: &WorkerView,
+        _rng: &mut Rng,
+        out: &mut WirePayload,
+    ) {
+        out.pack_end(view.start, view.end);
+    }
+
+    fn apply(
+        &mut self,
+        global: &mut [f32],
+        ctx: &RoundCtx,
+        payloads: &[WirePayload],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        WirePayload::mean_end_into(payloads, ctx.start, global);
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

@@ -9,8 +9,13 @@
 //!
 //! (The unsigned variant with β momentum generalizes Zhang et al. 2019's
 //! "k steps forward, 1 step back".)
+//!
+//! Dense-exchange method: `contribute` ships the rank's end parameters,
+//! `apply` reconstructs the average end point from the payloads.
 
-use super::{OuterOptimizer, RoundCtx};
+use anyhow::Result;
+
+use super::{OuterOptimizer, RoundCtx, WireFormat, WirePayload, WorkerView};
 use crate::tensor::sign_f32;
 use crate::util::rng::Rng;
 
@@ -19,24 +24,49 @@ pub struct Lookahead {
     beta: f32,
     signed: bool,
     m: Vec<f32>,
+    /// round scratch: reconstructed average end point (not checkpointed)
+    avg: Vec<f32>,
 }
 
 impl Lookahead {
     pub fn new(dim: usize, eta: f32, beta: f32, signed: bool) -> Self {
-        Lookahead { eta, beta, signed, m: vec![0.0; dim] }
+        Lookahead { eta, beta, signed, m: vec![0.0; dim], avg: vec![0.0; dim] }
     }
 }
 
 impl OuterOptimizer for Lookahead {
-    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, _rng: &mut Rng) {
+    fn wire(&self) -> WireFormat {
+        WireFormat::DenseF32
+    }
+
+    fn contribute(
+        &mut self,
+        _worker: usize,
+        _n_workers: usize,
+        view: &WorkerView,
+        _rng: &mut Rng,
+        out: &mut WirePayload,
+    ) {
+        out.pack_end(view.start, view.end);
+    }
+
+    fn apply(
+        &mut self,
+        global: &mut [f32],
+        ctx: &RoundCtx,
+        payloads: &[WirePayload],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg);
         let inv_gamma = 1.0 / ctx.gamma;
         for i in 0..global.len() {
-            let pg = (ctx.start[i] - ctx.avg_end[i]) * inv_gamma;
+            let pg = (ctx.start[i] - self.avg[i]) * inv_gamma;
             let u = self.beta * self.m[i] + (1.0 - self.beta) * pg;
             let step = if self.signed { sign_f32(u) } else { u };
             global[i] = ctx.start[i] - self.eta * ctx.gamma * step;
             self.m[i] = u; // β1 == β2 means m_{t+1} == u_{t+1}
         }
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

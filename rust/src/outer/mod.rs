@@ -1,23 +1,51 @@
 //! Outer (global, per-communication-round) optimizers.
 //!
 //! This module is the paper's system contribution.  After each worker
-//! runs τ local steps of its base optimizer, the trainer aggregates and
-//! hands this module the round context; the outer optimizer transforms
-//! the accumulated local differences into a global update:
+//! runs τ local steps of its base optimizer, the trainer drives the
+//! outer optimizer through one **typed round exchange** — a symmetric
+//! two-phase contract over [`WirePayload`]:
 //!
-//! * [`SignMomentum`] — **Algorithm 1**, the paper's method: a Lion-style
-//!   sign-momentum step over pseudo-gradients (eqs. 6-8).
-//! * [`SlowMo`] — Wang et al. 2019 (paper's Algorithm 5), the main baseline.
-//! * [`SignedSlowMo`] — §4.1 ablation: sign *inside* the momentum.
-//! * [`Lookahead`] / signed Lookahead — n=1 ablations (Tables 4-5).
-//! * [`GlobalAdamW`] — Algorithm 7 ablation (adaptive global step).
-//! * [`LocalAvg`] — plain periodic parameter averaging ("Local AdamW").
-//! * [`MvSignSgd`] — Federated MV-sto-signSGD-SIM (Algorithm 6), the
-//!   related method of Sun et al. 2023 discussed in Remarks 1-2.
+//! 1. **Worker side** — [`OuterOptimizer::contribute`] runs once per
+//!    rank, in rank order, packing that rank's contribution (its
+//!    end-of-round view, [`WorkerView`]) into a trainer-owned
+//!    persistent payload buffer: full-precision parameters, 1-bit sign
+//!    votes, or 8-bit quantized differences.
+//! 2. **Server side** — [`OuterOptimizer::apply`] consumes the gathered
+//!    payloads and applies the global step to the iterate.
+//!
+//! The payloads are the *only* worker→server channel, and the clock
+//! bills their own byte count
+//! ([`crate::comm::SimClock::charge_exchange`]), so the simulated wire
+//! cost and the exchanged data agree by construction — there is no
+//! per-optimizer billing flag and no parallel method family per format.
+//!
+//! # Optimizers and their wire formats
+//!
+//! | optimizer | paper algorithm | wire formats | bytes / rank message |
+//! |---|---|---|---|
+//! | [`SignMomentum`] | Algorithm 1 (eqs. 6-8) | `dense` (default), `q8` | `4P` / `P + 12` |
+//! | [`SlowMo`] | Algorithm 5 (Wang et al. 2019) | `dense` (default), `q8` | `4P` / `P + 12` |
+//! | [`SignedSlowMo`] | §4.1 ablation | `dense` (default), `q8` | `4P` / `P + 12` |
+//! | [`Lookahead`] (± signed) | Tables 4-5 (n = 1) | `dense` (default), `q8` | `4P` / `P + 12` |
+//! | [`GlobalAdamW`] | Algorithm 7 | `dense` (default), `q8` | `4P` / `P + 12` |
+//! | [`LocalAvg`] | "Local AdamW" (Fig. 3) | `dense` (default), `q8` | `4P` / `P + 12` |
+//! | [`MvSignSgd`] | Algorithm 6 (Sun et al. 2023) | `packed_signs` only | `⌈P/8⌉ + 8` |
+//!
+//! The dense-exchange methods all reconstruct the round's average end
+//! point from the payloads ([`WirePayload::mean_end_into`]) and then
+//! run their own elementwise update, which is why every one of them
+//! supports the `q8` format for free: selecting `wire = "q8"` in the
+//! `[outer]` config table swaps the payload variant, nothing else.
+//! MV-sto-signSGD's exchange *is* the 1-bit majority vote, so it pins
+//! `packed_signs` ([`crate::config::RunConfig::validate`] rejects the
+//! rest).
 //!
 //! All operate on the flat `f32[P]` vector; every implementation is
 //! cross-checked against the jnp/Pallas references where one exists
-//! (rust/tests/equivalence.rs, python kernels/ref.py).
+//! (rust/tests/equivalence.rs, python kernels/ref.py), and the payload
+//! contract is pinned to the historical semantics by the hand-computed
+//! unit tests below plus the golden differential suites in
+//! rust/tests/parallel_fleet.rs.
 
 mod global_adamw;
 mod local_avg;
@@ -33,45 +61,85 @@ pub use mv_signsgd::MvSignSgd;
 pub use sign_momentum::SignMomentum;
 pub use slowmo::{SignedSlowMo, SlowMo};
 
-use crate::dist::votes::PackedVotes;
+use anyhow::Result;
+
+pub use crate::dist::{WireFormat, WirePayload};
 use crate::sign::SignOp;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
 
-/// Everything an outer optimizer may consume at a communication round.
-pub struct RoundCtx<'a> {
-    /// x_{t,0}: global parameters at the start of the round.
+/// What one rank exposes to [`OuterOptimizer::contribute`] at a round
+/// boundary. Everything here is rank-local: nothing crosses the
+/// simulated wire except what `contribute` packs into the payload.
+pub struct WorkerView<'a> {
+    /// The round's start point — what [`OuterOptimizer::local_start`]
+    /// handed every rank (the global iterate, or e.g. MV-sto-signSGD's
+    /// extrapolated y_t).
     pub start: &'a [f32],
-    /// x_{t,τ} = (1/n) Σ_i x_{t,τ}^{(i)}: exact average of worker ends.
-    pub avg_end: &'a [f32],
-    /// Per-worker end parameters x_{t,τ}^{(i)} (majority-vote methods).
-    pub worker_end: &'a [&'a [f32]],
-    /// Per-worker last local stochastic gradient (Algorithm 6's momentum).
-    pub worker_last_grad: &'a [&'a [f32]],
+    /// x_{t,τ}^{(i)}: this rank's parameters after its τ local steps.
+    pub end: &'a [f32],
+    /// This rank's last local stochastic gradient (Algorithm 6's
+    /// momentum input).
+    pub last_grad: &'a [f32],
+}
+
+/// Server-side context for [`OuterOptimizer::apply`]. Deliberately
+/// slim: per-rank state only reaches the server through the payloads.
+pub struct RoundCtx<'a> {
+    /// x_{t,0}: the round's start point (== `global` on entry to
+    /// `apply`); what [`OuterOptimizer::local_start`] returned.
+    pub start: &'a [f32],
     /// γ_t: local learning rate in effect this round (schedules vary it).
     pub gamma: f32,
     /// Outer round index t.
     pub round: u64,
 }
 
-/// Context for the packed 1-bit exchange
-/// ([`OuterOptimizer::round_packed`]). Unlike [`RoundCtx`] there is no
-/// f32 aggregate: the round's only worker→server payload is the packed
-/// votes themselves, so nothing else exists server-side to hand over.
-pub struct PackedRoundCtx<'a> {
-    /// The round's start point — what [`OuterOptimizer::local_start`]
-    /// returned (the global iterate itself, or e.g. MV-sto-signSGD's
-    /// extrapolated y_t).
-    pub start: &'a [f32],
-    /// γ_t: local learning rate in effect this round.
-    pub gamma: f32,
-    /// Outer round index t.
-    pub round: u64,
-}
-
+/// The round-exchange contract every outer optimizer implements — one
+/// symmetric two-phase API for all wire formats (see the module docs).
+///
+/// # Execution order and determinism
+///
+/// Per round the trainer calls [`local_start`](Self::local_start), runs
+/// the local phases, then `contribute` for ranks `0..n` in order
+/// (sharing the trainer RNG — randomized-sign draws consume it in rank
+/// order), then [`apply`](Self::apply) once. `global == ctx.start` on
+/// entry to `apply`. Both halves must be deterministic given their RNG
+/// stream: the differential suites pin loss curves, checkpoints, and
+/// RNG streams across execution modes.
 pub trait OuterOptimizer: Send {
-    /// Apply the global step, updating `global` (== ctx.start on entry).
-    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng);
+    /// This optimizer's *native* wire format — what it exchanges when
+    /// the config does not override the format
+    /// ([`crate::config::RunConfig::resolved_wire`]). The set of
+    /// formats an optimizer accepts is a config-level property
+    /// ([`OuterConfig::supported_wires`]); `contribute`/`apply`
+    /// dispatch on the payload variant the trainer sized the buffers
+    /// with.
+    fn wire(&self) -> WireFormat;
+
+    /// Worker-side half: pack rank `worker`'s round contribution into
+    /// `out`, a persistent trainer-owned buffer re-passed every round
+    /// (the steady-state exchange allocates nothing). Must not change
+    /// the payload's format or coordinate count — the round's wire cost
+    /// was already billed from them, and the trainer errors on drift.
+    fn contribute(
+        &mut self,
+        worker: usize,
+        n_workers: usize,
+        view: &WorkerView,
+        rng: &mut Rng,
+        out: &mut WirePayload,
+    );
+
+    /// Server-side half: consume the gathered payloads and apply the
+    /// global step to `global` (== `ctx.start` on entry).
+    fn apply(
+        &mut self,
+        global: &mut [f32],
+        ctx: &RoundCtx,
+        payloads: &[WirePayload],
+        rng: &mut Rng,
+    ) -> Result<()>;
 
     /// Starting point handed to workers for the *next* local phase.
     /// Default: the global iterate itself.  MV-sto-signSGD overrides this
@@ -81,64 +149,6 @@ pub trait OuterOptimizer: Send {
     }
 
     fn name(&self) -> &'static str;
-
-    /// True when this optimizer's round exchange is 1-bit sign traffic
-    /// (worker→server majority-vote votes, Algorithm 6) rather than
-    /// full-precision parameters. The trainer then routes the round
-    /// through the packed data path — [`make_votes`](Self::make_votes)
-    /// per rank, then [`round_packed`](Self::round_packed) — and
-    /// charges the packed wire cost
-    /// ([`crate::comm::SimClock::charge_sign_allreduce`], backed by
-    /// [`crate::dist::codec`]) instead of 4 bytes per f32.
-    ///
-    /// Returning `true` **obligates** implementing
-    /// [`make_votes`](Self::make_votes) and
-    /// [`round_packed`](Self::round_packed): billing 1-bit traffic
-    /// while exchanging f32 votes is exactly the accounting/data-path
-    /// divergence the packed path exists to close, so the defaults
-    /// fail fast (panic naming the optimizer) rather than silently
-    /// falling back to the f32 wire.
-    fn sign_compressed_comm(&self) -> bool {
-        false
-    }
-
-    /// Worker-side half of the packed 1-bit exchange (only called when
-    /// [`sign_compressed_comm`](Self::sign_compressed_comm) is true):
-    /// fold rank `worker`'s last local stochastic gradient into its
-    /// local state and pack the randomized-sign vote that crosses the
-    /// simulated wire into `out` — a persistent per-rank buffer the
-    /// trainer owns and re-passes every round, so the steady-state
-    /// packed path allocates nothing
-    /// ([`PackedVotes::pack_into`](crate::dist::PackedVotes::pack_into)).
-    /// The trainer calls this once per rank, in rank order, before
-    /// [`round_packed`](Self::round_packed).
-    fn make_votes(
-        &mut self,
-        worker: usize,
-        n_workers: usize,
-        last_grad: &[f32],
-        rng: &mut Rng,
-        out: &mut PackedVotes,
-    ) {
-        let _ = (worker, n_workers, last_grad, rng, out);
-        unimplemented!("{}: no packed-vote data path", self.name())
-    }
-
-    /// Server-side half of the packed exchange: majority-tally `votes`
-    /// word-level ([`crate::dist::votes::majority_vote_packed`]) and
-    /// apply the global step to `global` (== ctx.start on entry).
-    /// Must be bitwise-identical to routing the same votes through
-    /// [`round`](Self::round)'s f32 reference path.
-    fn round_packed(
-        &mut self,
-        global: &mut [f32],
-        ctx: &PackedRoundCtx,
-        votes: &[PackedVotes],
-        rng: &mut Rng,
-    ) {
-        let _ = (global, ctx, votes, rng);
-        unimplemented!("{}: no packed-vote data path", self.name())
-    }
 
     /// Flat state buffers for checkpointing.
     fn state(&self) -> Vec<&[f32]>;
@@ -181,6 +191,38 @@ impl OuterConfig {
 
     pub fn slowmo_paper(alpha: f32, beta: f32) -> Self {
         OuterConfig::SlowMo { alpha, beta }
+    }
+
+    /// The format this optimizer exchanges when the config does not
+    /// select one (`wire = ...` absent).
+    pub fn default_wire(&self) -> WireFormat {
+        match self {
+            OuterConfig::MvSignSgd { .. } => WireFormat::PackedSigns,
+            _ => WireFormat::DenseF32,
+        }
+    }
+
+    /// The wire formats this optimizer can exchange. Every
+    /// dense-exchange method also speaks `q8` (the payload mean
+    /// reconstructs the average end point either way); MV-sto-signSGD's
+    /// exchange is definitionally the 1-bit vote.
+    pub fn supported_wires(&self) -> &'static [WireFormat] {
+        match self {
+            OuterConfig::MvSignSgd { .. } => &[WireFormat::PackedSigns],
+            _ => &[WireFormat::DenseF32, WireFormat::QuantizedI8],
+        }
+    }
+
+    /// The concrete [`SignMomentum`] this config describes, when it is
+    /// Algorithm 1 — the trainer uses this to install the Pallas-kernel
+    /// `apply` specialization ([`SignMomentum::with_kernel`]).
+    pub fn build_sign_momentum(&self, dim: usize) -> Option<SignMomentum> {
+        match *self {
+            OuterConfig::SignMomentum { eta, beta1, beta2, weight_decay, sign_op, sign_bound } => {
+                Some(SignMomentum::new(dim, eta, beta1, beta2, weight_decay, sign_op, sign_bound))
+            }
+            _ => None,
+        }
     }
 
     pub fn build(&self, dim: usize) -> Box<dyn OuterOptimizer> {
@@ -271,9 +313,16 @@ impl OuterConfig {
     }
 }
 
-/// Drive one outer round on a synthetic context where the averaged local
-/// difference is `diff` (workers ended at start - diff).  Shared by unit
-/// tests here and the cross-implementation equivalence suite.
+/// Drive one outer round on a synthetic single-worker context where the
+/// averaged local difference is `diff` (the worker ended at
+/// start − diff), through the full two-phase payload contract in the
+/// optimizer's native wire format.  Shared by unit tests here and the
+/// cross-implementation equivalence suite.
+///
+/// The RNG stream is consumed exactly as the historical one-call API
+/// did: `contribute` draws first (randomized sign votes), `apply` draws
+/// after (randomized sign operators) — so the hand-computed expected
+/// values pinned by the unit tests carry over unchanged.
 pub fn run_synthetic_round(
     opt: &mut dyn OuterOptimizer,
     global: &mut Vec<f32>,
@@ -282,21 +331,17 @@ pub fn run_synthetic_round(
     round: u64,
 ) {
     let start = global.clone();
-    let avg_end: Vec<f32> = start.iter().zip(diff).map(|(&s, &d)| s - d).collect();
-    let worker_end: Vec<&[f32]> = vec![&avg_end];
+    let end: Vec<f32> = start.iter().zip(diff).map(|(&s, &d)| s - d).collect();
     // expose the applied difference as the "last local gradient" so
     // gradient-momentum methods (Alg. 6) also see a consistent signal
-    let worker_last_grad: Vec<&[f32]> = vec![diff];
-    let ctx = RoundCtx {
-        start: &start,
-        avg_end: &avg_end,
-        worker_end: &worker_end,
-        worker_last_grad: &worker_last_grad,
-        gamma,
-        round,
-    };
+    let view = WorkerView { start: &start, end: &end, last_grad: diff };
     let mut rng = Rng::new(round ^ 0xABCD);
-    opt.round(global, &ctx, &mut rng);
+    let mut payload = WirePayload::with_len(opt.wire(), start.len());
+    opt.contribute(0, 1, &view, &mut rng, &mut payload);
+    let ctx = RoundCtx { start: &start, gamma, round };
+    global.copy_from_slice(&start);
+    opt.apply(global, &ctx, std::slice::from_ref(&payload), &mut rng)
+        .expect("synthetic round failed");
 }
 
 #[cfg(test)]
@@ -367,6 +412,26 @@ mod tests {
     }
 
     #[test]
+    fn wire_menus_match_the_contract() {
+        let mv = OuterConfig::MvSignSgd { eta: 0.1, beta: 0.9, alpha: 0.1, bound: 10.0 };
+        assert_eq!(mv.default_wire(), WireFormat::PackedSigns);
+        assert_eq!(mv.supported_wires(), &[WireFormat::PackedSigns]);
+        assert_eq!(mv.build(4).wire(), WireFormat::PackedSigns);
+        // the concrete-SignMomentum accessor backs the Pallas fast path
+        assert!(mv.build_sign_momentum(4).is_none());
+        assert!(OuterConfig::sign_momentum_paper(1.0).build_sign_momentum(4).is_some());
+        for cfg in [
+            OuterConfig::sign_momentum_paper(1.0),
+            OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+            OuterConfig::LocalAvg,
+        ] {
+            assert_eq!(cfg.default_wire(), WireFormat::DenseF32, "{}", cfg.name());
+            assert!(cfg.supported_wires().contains(&WireFormat::QuantizedI8), "{}", cfg.name());
+            assert_eq!(cfg.build(4).wire(), WireFormat::DenseF32, "{}", cfg.name());
+        }
+    }
+
+    #[test]
     fn state_roundtrip_all_kinds() {
         for cfg in [
             OuterConfig::sign_momentum_paper(1.0),
@@ -393,6 +458,99 @@ mod tests {
             run_synthetic_round(a.as_mut(), &mut ga, &diff, 0.1, 4);
             run_synthetic_round(b.as_mut(), &mut gb, &diff, 0.1, 4);
             assert_eq!(ga, gb, "{}", a.name());
+        }
+    }
+
+    /// Golden differential for the averaging plumbing every dense
+    /// method shares: applying n payloads must equal applying ONE
+    /// payload that holds their exact mean — i.e. the payload path
+    /// reconstructs the same `x̄_{t,τ}` the trainer's historical
+    /// `allreduce_mean` handed the old one-call API.
+    #[test]
+    fn dense_apply_equals_single_worker_at_the_mean() {
+        use crate::dist::collectives;
+        let d = 16;
+        for cfg in [
+            OuterConfig::sign_momentum_paper(2.0),
+            OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+            OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
+            OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: false },
+            OuterConfig::Lookahead { eta: 1.0, beta: 0.2, signed: true },
+            OuterConfig::GlobalAdamW {
+                eta: 0.1,
+                beta1: 0.9,
+                beta2: 0.95,
+                eps: 1e-8,
+                weight_decay: 0.1,
+            },
+            OuterConfig::LocalAvg,
+        ] {
+            let start: Vec<f32> = (0..d).map(|i| (i as f32 * 0.7).sin()).collect();
+            let ends: Vec<Vec<f32>> = (0..3)
+                .map(|w| (0..d).map(|i| start[i] - 0.01 * ((w + i) as f32).cos()).collect())
+                .collect();
+            let mut rng = crate::util::rng::Rng::new(5);
+
+            // path A: n = 3 payloads through the contract
+            let mut a = cfg.build(d);
+            let mut payloads: Vec<WirePayload> =
+                (0..3).map(|_| WirePayload::with_len(WireFormat::DenseF32, d)).collect();
+            for (w, end) in ends.iter().enumerate() {
+                let view = WorkerView { start: &start, end, last_grad: end };
+                a.contribute(w, 3, &view, &mut rng, &mut payloads[w]);
+            }
+            let ctx = RoundCtx { start: &start, gamma: 0.1, round: 0 };
+            let mut ga = start.clone();
+            a.apply(&mut ga, &ctx, &payloads, &mut rng).unwrap();
+
+            // path B: one payload holding the exact mean of the ends
+            let mut mean = vec![0.0f32; d];
+            collectives::allreduce_mean(&ends, |e| e.as_slice(), &mut mean);
+            let mut b = cfg.build(d);
+            let mut single = WirePayload::with_len(WireFormat::DenseF32, d);
+            let view = WorkerView { start: &start, end: &mean, last_grad: &mean };
+            b.contribute(0, 1, &view, &mut rng, &mut single);
+            let mut gb = start.clone();
+            b.apply(&mut gb, &ctx, std::slice::from_ref(&single), &mut rng).unwrap();
+
+            for (x, y) in ga.iter().zip(&gb) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{}", cfg.name());
+            }
+        }
+    }
+
+    /// The q8 payload path runs the same update off a slightly
+    /// quantized average: the result must track the dense path within
+    /// the quantization error, not bit-for-bit.
+    #[test]
+    fn q8_apply_tracks_dense_apply_for_dense_methods() {
+        let d = 32;
+        for cfg in [OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 }, OuterConfig::LocalAvg] {
+            let start: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).cos()).collect();
+            let ends: Vec<Vec<f32>> = (0..4)
+                .map(|w| (0..d).map(|i| start[i] - 0.05 * ((w + i) as f32).sin()).collect())
+                .collect();
+            let run = |format: WireFormat| -> Vec<f32> {
+                let mut opt = cfg.build(d);
+                let mut rng = crate::util::rng::Rng::new(11);
+                let mut payloads: Vec<WirePayload> =
+                    (0..4).map(|_| WirePayload::with_len(format, d)).collect();
+                for (w, end) in ends.iter().enumerate() {
+                    let view = WorkerView { start: &start, end, last_grad: end };
+                    opt.contribute(w, 4, &view, &mut rng, &mut payloads[w]);
+                }
+                let ctx = RoundCtx { start: &start, gamma: 0.1, round: 0 };
+                let mut g = start.clone();
+                opt.apply(&mut g, &ctx, &payloads, &mut rng).unwrap();
+                g
+            };
+            let dense = run(WireFormat::DenseF32);
+            let q8 = run(WireFormat::QuantizedI8);
+            // max quantization error per rank: scale/2 = max|diff|/254
+            // ≈ 2e-4 here; SlowMo amplifies by alpha = 1
+            for (j, (a, b)) in dense.iter().zip(&q8).enumerate() {
+                assert!((a - b).abs() < 5e-3, "{}: coord {j}: {a} vs {b}", cfg.name());
+            }
         }
     }
 }

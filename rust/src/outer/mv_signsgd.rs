@@ -13,19 +13,36 @@
 //! randomized sign S_r (eq. 9) + majority vote, which is why it only
 //! converges to an O(dR/√n) neighborhood (Remark 2).
 //!
+//! # Anchoring (ROADMAP follow-up (g), resolved)
+//!
+//! Algorithm 6's recursion updates **x_t**, not the extrapolated y_t:
+//! the seed implementation anchored both the update and the stored
+//! x_prev at the round's start point (y_t whenever α > 0), a
+//! transcription slip against the recursion above. [`MvSignSgd`] now
+//! captures x_t when [`local_start`](OuterOptimizer::local_start)
+//! derives y_t from it, and [`apply`](OuterOptimizer::apply) steps
+//! x_{t+1} = x_t − η·MV(...) from that capture (x_prev ← x_t likewise).
+//! With α = 0 the two readings coincide, so every α = 0 pinned value is
+//! unchanged; the α > 0 divergence is pinned by
+//! `literal_alg6_anchors_update_at_x_t` below. When `apply` runs
+//! without a prior `local_start` (synthetic unit rounds), it falls back
+//! to `ctx.start` — identical whenever α = 0.
+//!
 //! # Wire semantics
 //!
-//! Votes really are 1-bit here: [`MvSignSgd::make_votes`] packs each
-//! rank's randomized signs ([`PackedVotes`]) and
-//! [`MvSignSgd::round_packed`] tallies the packed words without ever
+//! Votes really are 1-bit here: [`OuterOptimizer::contribute`] folds
+//! the rank's last gradient into its momentum and packs the randomized
+//! signs into the round's [`WirePayload::PackedSigns`] buffer, and
+//! [`OuterOptimizer::apply`] tallies the packed words without ever
 //! unpacking ([`votes::majority_vote_packed`]). Two consequences of the
 //! wire having no zero symbol: `S_r(0)` keeps the IEEE sign of its ±0
 //! output — a fair ±1 coin, exactly eq. (9) at v = 0 — and a tied
 //! majority decodes to +1, so the iterate always moves by η per
-//! coordinate. The f32 reference path ([`MvSignSgd::round`]) shares
-//! this code and is bitwise-identical by construction.
+//! coordinate.
 
-use super::{OuterOptimizer, PackedRoundCtx, RoundCtx};
+use anyhow::Result;
+
+use super::{OuterOptimizer, RoundCtx, WireFormat, WirePayload, WorkerView};
 use crate::dist::votes::{self, PackedVotes};
 use crate::sign::SignOp;
 use crate::util::rng::Rng;
@@ -40,17 +57,19 @@ pub struct MvSignSgd {
     /// Per-worker momentum buffers m^{(i)}, created lazily at first round
     /// (worker count is only known then).
     m: Vec<Vec<f32>>,
+    /// x_{t-1}: the previous global iterate (drives the extrapolation;
+    /// checkpointed).
     x_prev: Vec<f32>,
+    /// x_t captured by `local_start` before it derives y_t — the anchor
+    /// of Algorithm 6's update. Not checkpointed: the trainer calls
+    /// `local_start` at every round (including the first after a
+    /// resume) before any `apply`. Empty until the first `local_start`;
+    /// `apply` then anchors at `ctx.start` (α = 0 semantics).
+    x_curr: Vec<f32>,
     /// Dim-sized scratch reused across ranks and rounds: the
     /// randomized-sign output in `fold_and_sign`, the decoded winner in
-    /// `apply_packed` (not checkpointed — overwritten before every use).
+    /// `apply` (not checkpointed — overwritten before every use).
     scratch: Vec<f32>,
-    /// Persistent per-rank packed vote buffers for the f32 reference
-    /// path (`round`): reused every round via [`PackedVotes::pack_into`],
-    /// so the steady state allocates nothing. Not checkpointed — fully
-    /// overwritten before every tally. (On the packed wire path the
-    /// trainer owns the equivalent persistent buffers.)
-    packed: Vec<PackedVotes>,
     dim: usize,
 }
 
@@ -63,8 +82,8 @@ impl MvSignSgd {
             bound,
             m: Vec::new(),
             x_prev: vec![0.0; dim],
+            x_curr: Vec::new(),
             scratch: vec![0.0; dim],
-            packed: Vec::new(),
             dim,
         }
     }
@@ -92,82 +111,66 @@ impl MvSignSgd {
     }
 }
 
-/// Server-side step: word-level majority tally over the packed votes
-/// into `winner`, then a step of -η · winner from the round's start
-/// point. A free function over the individual buffers so both the f32
-/// reference path (tallying `self.packed`) and the trainer's packed
-/// wire path (tallying external votes) can borrow `MvSignSgd`'s fields
-/// disjointly.
-/// NOTE: `start` is what `local_start` produced — y_t when α > 0 —
-/// so with extrapolation the update and the stored x_prev anchor at
-/// y_t rather than x_t. This preserves the seed's semantics
-/// bit-for-bit; auditing it against Algorithm 6's exact recursion
-/// is ROADMAP follow-up (g).
-fn apply_packed(
-    global: &mut [f32],
-    start: &[f32],
-    packed: &[PackedVotes],
-    winner: &mut [f32],
-    x_prev: &mut [f32],
-    eta: f32,
-) {
-    votes::majority_vote_packed(packed, winner);
-    x_prev.copy_from_slice(start);
-    for ((g, &x), &w) in global.iter_mut().zip(start).zip(winner.iter()) {
-        *g = x - eta * w;
-    }
-}
-
 impl OuterOptimizer for MvSignSgd {
-    /// f32 reference path: produce every rank's vote locally, then run
-    /// the identical packed tally — `round` and the trainer's
-    /// `make_votes`/`round_packed` split execute the same code in the
-    /// same order, so the two paths are bitwise-identical.
-    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng) {
-        let n = ctx.worker_last_grad.len();
-        self.ensure_workers(n);
-        if self.packed.len() != n {
-            self.packed = vec![PackedVotes::empty(); n];
-        }
-        for (w, grad) in ctx.worker_last_grad.iter().enumerate() {
-            self.fold_and_sign(w, grad, rng);
-            self.packed[w].pack_into(&self.scratch);
-        }
-        apply_packed(
-            global,
-            ctx.start,
-            &self.packed,
-            &mut self.scratch,
-            &mut self.x_prev,
-            self.eta,
-        );
+    /// Algorithm 6's worker→server traffic is the randomized sign votes
+    /// — 1 bit per coordinate on the wire (Remark 1); this is the only
+    /// format the method speaks
+    /// ([`super::OuterConfig::supported_wires`]).
+    fn wire(&self) -> WireFormat {
+        WireFormat::PackedSigns
     }
 
-    fn make_votes(
+    fn contribute(
         &mut self,
         worker: usize,
         n_workers: usize,
-        last_grad: &[f32],
+        view: &WorkerView,
         rng: &mut Rng,
-        out: &mut PackedVotes,
+        out: &mut WirePayload,
     ) {
         self.ensure_workers(n_workers);
-        self.fold_and_sign(worker, last_grad, rng);
-        out.pack_into(&self.scratch);
+        self.fold_and_sign(worker, view.last_grad, rng);
+        out.pack_sign_votes(&self.scratch);
     }
 
-    fn round_packed(
+    fn apply(
         &mut self,
         global: &mut [f32],
-        ctx: &PackedRoundCtx,
-        votes: &[PackedVotes],
+        ctx: &RoundCtx,
+        payloads: &[WirePayload],
         _rng: &mut Rng,
-    ) {
-        self.ensure_workers(votes.len());
-        apply_packed(global, ctx.start, votes, &mut self.scratch, &mut self.x_prev, self.eta);
+    ) -> Result<()> {
+        self.ensure_workers(payloads.len());
+        let packed: Vec<&PackedVotes> = payloads
+            .iter()
+            .map(|p| {
+                p.as_packed_signs()
+                    .expect("mv_signsgd exchanges packed sign votes (validated config)")
+            })
+            .collect();
+        // word-level majority tally over the packed votes, never
+        // unpacking to f32 (the decoded winner lands in scratch)
+        votes::majority_vote_packed(&packed, &mut self.scratch);
+        // literal Algorithm 6: step from x_t (captured by local_start),
+        // not from the extrapolated y_t the workers trained from; fall
+        // back to ctx.start when no local_start preceded (α = 0 rounds
+        // and synthetic tests, where the two coincide)
+        let anchor: &[f32] = if self.x_curr.len() == global.len() {
+            &self.x_curr
+        } else {
+            ctx.start
+        };
+        for ((g, &x), &w) in global.iter_mut().zip(anchor).zip(self.scratch.iter()) {
+            *g = x - self.eta * w;
+        }
+        self.x_prev.copy_from_slice(anchor);
+        Ok(())
     }
 
     fn local_start(&mut self, global: &[f32]) -> Vec<f32> {
+        // capture x_t: the anchor for this round's update
+        self.x_curr.clear();
+        self.x_curr.extend_from_slice(global);
         if self.m.is_empty() {
             // round 0: x_{-1} = x_0 ⇒ y_0 = x_0
             return global.to_vec();
@@ -181,14 +184,6 @@ impl OuterOptimizer for MvSignSgd {
 
     fn name(&self) -> &'static str {
         "mv_signsgd"
-    }
-
-    /// Algorithm 6's worker→server traffic is the randomized sign votes
-    /// — 1 bit per coordinate on the wire (Remark 1). The trainer
-    /// routes rounds through `make_votes`/`round_packed` and charges
-    /// the packed payload instead of f32 parameters.
-    fn sign_compressed_comm(&self) -> bool {
-        true
     }
 
     fn state(&self) -> Vec<&[f32]> {
@@ -208,22 +203,28 @@ impl OuterOptimizer for MvSignSgd {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::collectives;
 
-    fn ctx_with_grads<'a>(
-        start: &'a [f32],
-        grads: &'a [&'a [f32]],
-        ends: &'a [&'a [f32]],
-        avg: &'a [f32],
+    /// Drive one full round through the two-phase contract: one
+    /// contribute per rank (rank order, shared rng), then apply.
+    fn run_round(
+        opt: &mut MvSignSgd,
+        global: &mut [f32],
+        start: &[f32],
+        grads: &[Vec<f32>],
+        rng: &mut Rng,
         round: u64,
-    ) -> RoundCtx<'a> {
-        RoundCtx {
-            start,
-            avg_end: avg,
-            worker_end: ends,
-            worker_last_grad: grads,
-            gamma: 0.1,
-            round,
+    ) {
+        let n = grads.len();
+        let buf = WirePayload::with_len(WireFormat::PackedSigns, start.len());
+        let mut payloads: Vec<WirePayload> = vec![buf; n];
+        for (w, grad) in grads.iter().enumerate() {
+            let view = WorkerView { start, end: start, last_grad: grad };
+            opt.contribute(w, n, &view, rng, &mut payloads[w]);
         }
+        let ctx = RoundCtx { start, gamma: 0.1, round };
+        global.copy_from_slice(start);
+        opt.apply(global, &ctx, &payloads, rng).unwrap();
     }
 
     #[test]
@@ -234,11 +235,9 @@ mod tests {
         // all workers see strong positive gradients on coord 0, negative on 1,
         // zero on 2 (bound >> |g| keeps the randomized flip probability low
         // but with 8 workers the vote is still decisively correct).
-        let grads_own = vec![vec![9.9f32, -9.9, 0.0]; 8];
-        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
-        let ends: Vec<&[f32]> = (0..8).map(|_| start.as_slice()).collect();
+        let grads = vec![vec![9.9f32, -9.9, 0.0]; 8];
         let mut rng = Rng::new(3);
-        opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
+        run_round(&mut opt, &mut global, &start, &grads, &mut rng, 0);
         assert_eq!(global[0], -0.5);
         assert_eq!(global[1], 0.5);
         // coord 2: m = 0 -> S_r(0) is a fair ±1 coin on the wire (the
@@ -248,84 +247,104 @@ mod tests {
     }
 
     #[test]
-    fn tie_decodes_to_plus_one_on_both_paths() {
-        // |m| == bound makes S_r deterministic: two workers with exactly
-        // opposite momenta produce an exact 1-1 tie on every coordinate.
-        // The wire has no zero symbol, so the tally decodes +1 and the
-        // iterate moves by -η (the old f32 path would have sat still).
-        let eta = 0.25f32;
-        let grads_own = vec![vec![1.0f32, 1.0], vec![-1.0f32, -1.0]];
-        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
-        let start = vec![1.0f32, -1.0];
-        let ends: Vec<&[f32]> = (0..2).map(|_| start.as_slice()).collect();
+    fn packed_apply_matches_f32_reference_tally_bitwise() {
+        // the same votes, tallied two ways: the packed word-level path
+        // through the contract vs an f32 majority_vote over votes
+        // produced by identical arithmetic on an identically-seeded rng.
+        // dim deliberately not a multiple of 8 or 64.
+        let dim = 37;
+        let n = 3;
+        let (eta, beta, bound) = (0.3f32, 0.5f32, 4.0f32);
+        let start: Vec<f32> = (0..dim).map(|i| (i as f32).sin()).collect();
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|w| (0..dim).map(|i| ((w * dim + i) as f32).cos() * 3.0).collect())
+            .collect();
 
-        // path 1: the f32 reference round
-        let mut a = MvSignSgd::new(2, eta, 0.0, 0.0, 1.0);
+        // path A: the payload contract
+        let mut opt = MvSignSgd::new(dim, eta, beta, 0.0, bound);
         let mut ga = start.clone();
-        let mut rng_a = Rng::new(11);
-        a.round(&mut ga, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng_a);
-        assert_eq!(ga, vec![1.0 - eta, -1.0 - eta]);
+        let mut rng_a = Rng::new(99);
+        run_round(&mut opt, &mut ga, &start, &grads, &mut rng_a, 0);
 
-        // path 2: the packed make_votes/round_packed split
-        let mut b = MvSignSgd::new(2, eta, 0.0, 0.0, 1.0);
-        let mut gb = start.clone();
-        let mut rng_b = Rng::new(11);
-        let mut votes = vec![PackedVotes::empty(); 2];
-        for w in 0..2 {
-            b.make_votes(w, 2, &grads_own[w], &mut rng_b, &mut votes[w]);
+        // path B: f32 reference — same momentum fold, same S_r draws,
+        // f32 majority vote, manual step
+        let mut rng_b = Rng::new(99);
+        let mut m = vec![vec![0.0f32; dim]; n];
+        let mut votes_f32: Vec<Vec<f32>> = Vec::new();
+        for (w, grad) in grads.iter().enumerate() {
+            for (mi, &g) in m[w].iter_mut().zip(grad) {
+                *mi = beta * *mi + (1.0 - beta) * g;
+            }
+            votes_f32.push(SignOp::RandPm.apply(&m[w], bound, &mut rng_b));
         }
-        let ctx = PackedRoundCtx { start: &start, gamma: 0.1, round: 0 };
-        b.round_packed(&mut gb, &ctx, &votes, &mut rng_b);
-        assert_eq!(gb, ga);
+        let mut winner = vec![0.0f32; dim];
+        collectives::majority_vote(&votes_f32, &mut winner);
+        let gb: Vec<f32> =
+            start.iter().zip(&winner).map(|(&x, &w)| x - eta * w).collect();
+
+        assert_eq!(ga, gb);
+        assert_eq!(opt.m, m);
+        assert_eq!(opt.x_prev, start);
     }
 
     #[test]
-    fn round_and_packed_split_agree_bitwise() {
-        // dim deliberately not a multiple of 8 or 64
-        let dim = 37;
-        let n = 3;
-        let start: Vec<f32> = (0..dim).map(|i| (i as f32).sin()).collect();
-        let grads_own: Vec<Vec<f32>> = (0..n)
-            .map(|w| (0..dim).map(|i| ((w * dim + i) as f32).cos() * 3.0).collect())
-            .collect();
-        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
-        let ends: Vec<&[f32]> = (0..n).map(|_| start.as_slice()).collect();
-
-        let mut a = MvSignSgd::new(dim, 0.3, 0.5, 0.0, 4.0);
-        let mut ga = start.clone();
-        let mut rng_a = Rng::new(99);
-        a.round(&mut ga, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng_a);
-
-        let mut b = MvSignSgd::new(dim, 0.3, 0.5, 0.0, 4.0);
-        let mut gb = start.clone();
-        let mut rng_b = Rng::new(99);
-        let mut votes = vec![PackedVotes::empty(); n];
-        for w in 0..n {
-            b.make_votes(w, n, &grads_own[w], &mut rng_b, &mut votes[w]);
-        }
-        let ctx = PackedRoundCtx { start: &start, gamma: 0.1, round: 0 };
-        b.round_packed(&mut gb, &ctx, &votes, &mut rng_b);
-
-        assert_eq!(ga, gb);
-        // and the two optimizers carry identical state forward
-        assert_eq!(a.x_prev, b.x_prev);
-        assert_eq!(a.m, b.m);
+    fn tie_decodes_to_plus_one_on_the_wire() {
+        // |m| == bound makes S_r deterministic: two workers with exactly
+        // opposite momenta produce an exact 1-1 tie on every coordinate.
+        // The wire has no zero symbol, so the tally decodes +1 and the
+        // iterate moves by -η (an f32 tally with a zero symbol would
+        // have sat still).
+        let eta = 0.25f32;
+        let grads = vec![vec![1.0f32, 1.0], vec![-1.0f32, -1.0]];
+        let start = vec![1.0f32, -1.0];
+        let mut opt = MvSignSgd::new(2, eta, 0.0, 0.0, 1.0);
+        let mut global = start.clone();
+        let mut rng = Rng::new(11);
+        run_round(&mut opt, &mut global, &start, &grads, &mut rng, 0);
+        assert_eq!(global, vec![1.0 - eta, -1.0 - eta]);
     }
 
     #[test]
     fn extrapolation_kicks_in_after_first_round() {
         let mut opt = MvSignSgd::new(1, 1.0, 0.0, 0.5, 10.0);
         let mut global = vec![4.0f32];
-        let start = global.clone();
-        assert_eq!(opt.local_start(&global), vec![4.0]); // y_0 = x_0
-        let grads_own = vec![vec![9.9f32]; 4];
-        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
-        let ends: Vec<&[f32]> = (0..4).map(|_| start.as_slice()).collect();
+        let start = opt.local_start(&global);
+        assert_eq!(start, vec![4.0]); // y_0 = x_0
+        let grads = vec![vec![9.9f32]; 4];
         let mut rng = Rng::new(1);
-        opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
-        assert_eq!(global, vec![3.0]); // 4 - 1
+        run_round(&mut opt, &mut global, &start, &grads, &mut rng, 0);
+        assert_eq!(global, vec![3.0]); // x_1 = x_0 - 1
         // y_1 = x_1 + 0.5 (x_1 - x_0) = 3 + 0.5*(-1) = 2.5
         assert_eq!(opt.local_start(&global), vec![2.5]);
+    }
+
+    /// Pins the (g) fix: with α > 0 the update anchors at x_t, not at
+    /// the extrapolated y_t the workers trained from.
+    #[test]
+    fn literal_alg6_anchors_update_at_x_t() {
+        // bound == |m| makes every vote deterministic (+1), so each
+        // round steps exactly -η on the single coordinate.
+        let mut opt = MvSignSgd::new(1, 1.0, 0.0, 0.5, 1.0);
+        let mut global = vec![4.0f32];
+        let grads = vec![vec![1.0f32]; 4];
+        let mut rng = Rng::new(7);
+
+        // round 0: y_0 = x_0 = 4, x_1 = x_0 - η = 3
+        let start = opt.local_start(&global);
+        run_round(&mut opt, &mut global, &start, &grads, &mut rng, 0);
+        assert_eq!(global, vec![3.0]);
+
+        // round 1: y_1 = 3 + 0.5*(3-4) = 2.5, but the update anchors at
+        // x_1 = 3: x_2 = x_1 - η = 2 (the seed's y-anchored recursion
+        // would have produced y_1 - η = 1.5)
+        let start = opt.local_start(&global);
+        assert_eq!(start, vec![2.5]);
+        run_round(&mut opt, &mut global, &start, &grads, &mut rng, 1);
+        assert_eq!(global, vec![2.0]);
+
+        // and the extrapolation continues from the x-sequence:
+        // y_2 = x_2 + 0.5*(x_2 - x_1) = 2 - 0.5 = 1.5
+        assert_eq!(opt.local_start(&global), vec![1.5]);
     }
 
     #[test]
@@ -334,22 +353,20 @@ mod tests {
         let mut opt = MvSignSgd::new(1, 0.1, 0.0, 0.0, 10.0);
         let mut global = vec![0.0f32];
         let start = global.clone();
-        let mut grads_own = vec![vec![9.5f32]; 7];
-        grads_own.push(vec![-9.5f32]);
-        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
-        let ends: Vec<&[f32]> = (0..8).map(|_| start.as_slice()).collect();
+        let mut grads = vec![vec![9.5f32]; 7];
+        grads.push(vec![-9.5f32]);
         let mut rng = Rng::new(7);
-        opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
+        run_round(&mut opt, &mut global, &start, &grads, &mut rng, 0);
         assert_eq!(global[0], -0.1);
     }
 
     #[test]
-    fn reports_sign_compressed_communication() {
+    fn speaks_packed_signs_only() {
         let opt = MvSignSgd::new(4, 0.1, 0.9, 0.1, 10.0);
-        assert!(opt.sign_compressed_comm());
-        // the default for every other outer optimizer is full-precision
+        assert_eq!(opt.wire(), WireFormat::PackedSigns);
+        // every dense method defaults to the full-precision wire
         let sm = crate::outer::OuterConfig::sign_momentum_paper(1.0).build(4);
-        assert!(!sm.sign_compressed_comm());
+        assert_eq!(sm.wire(), WireFormat::DenseF32);
     }
 
     #[test]
@@ -357,11 +374,9 @@ mod tests {
         let mut opt = MvSignSgd::new(1, 0.1, 0.9, 0.0, 10.0);
         let mut global = vec![0.0f32];
         let start = global.clone();
-        let grads_own = vec![vec![1.0f32], vec![-1.0f32]];
-        let grads: Vec<&[f32]> = grads_own.iter().map(|g| g.as_slice()).collect();
-        let ends: Vec<&[f32]> = (0..2).map(|_| start.as_slice()).collect();
+        let grads = vec![vec![1.0f32], vec![-1.0f32]];
         let mut rng = Rng::new(0);
-        opt.round(&mut global, &ctx_with_grads(&start, &grads, &ends, &start, 0), &mut rng);
+        run_round(&mut opt, &mut global, &start, &grads, &mut rng, 0);
         assert!((opt.m[0][0] - 0.1).abs() < 1e-6);
         assert!((opt.m[1][0] + 0.1).abs() < 1e-6);
     }

@@ -1,7 +1,8 @@
 //! **Algorithm 1** — the paper's distributed sign-momentum global step.
 //!
-//! After τ local steps and the exact averaging all-reduce, with
-//! diff = x_{t,0} - x_{t,τ} (the aggregated local progress scaled into a
+//! After τ local steps, `apply` reconstructs the exact average end
+//! point x̄_{t,τ} from the dense payloads and, with
+//! diff = x_{t,0} - x̄_{t,τ} (the aggregated local progress scaled into a
 //! pseudo-gradient by 1/γ_t):
 //!
 //! ```text
@@ -17,8 +18,23 @@
 //!
 //! `sign_op` selects the deterministic operator (deployment, default) or
 //! the randomized analogs of §3.1 used by the theory experiments.
+//!
+//! # The Pallas fast path
+//!
+//! [`SignMomentum::with_kernel`] installs the AOT'd fused Pallas
+//! sign-update kernel ([`SignUpdateKernel`]); `apply` then runs
+//! eqs. (6)-(8) as one fused kernel call instead of the native loop —
+//! an *apply specialization*, not a trainer special case, so the kernel
+//! path shares this optimizer's momentum buffer and therefore
+//! checkpoints exactly like the native path (the pre-redesign trainer
+//! kept a separate, un-checkpointed kernel momentum). Only the exact
+//! sign operator was AOT'd; the trainer's config gate keeps randomized
+//! operators off this path.
 
-use super::{OuterOptimizer, RoundCtx};
+use anyhow::Result;
+
+use super::{OuterOptimizer, RoundCtx, WireFormat, WirePayload, WorkerView};
+use crate::runtime::{SignUpdateKernel, SignUpdateScalars};
 use crate::sign::SignOp;
 use crate::tensor::sign_f32;
 use crate::util::rng::Rng;
@@ -33,8 +49,14 @@ pub struct SignMomentum {
     /// SignOp::Exact.
     sign_bound: f32,
     m: Vec<f32>,
-    /// scratch for randomized sign output (avoids per-round allocation)
+    /// scratch for the randomized-sign input / the kernel's diff vector
+    /// (avoids per-round allocation)
     scratch: Vec<f32>,
+    /// scratch holding the round's reconstructed average end point
+    /// (not checkpointed — overwritten every `apply`)
+    avg: Vec<f32>,
+    /// Optional AOT'd fused kernel for the exact-sign global step.
+    kernel: Option<SignUpdateKernel>,
 }
 
 impl SignMomentum {
@@ -57,7 +79,16 @@ impl SignMomentum {
             sign_bound,
             m: vec![0.0; dim],
             scratch: vec![0.0; dim],
+            avg: vec![0.0; dim],
+            kernel: None,
         }
+    }
+
+    /// Route `apply` through the AOT'd fused Pallas kernel (requires
+    /// [`SignOp::Exact`] — the trainer validates before installing).
+    pub fn with_kernel(mut self, kernel: SignUpdateKernel) -> Self {
+        self.kernel = Some(kernel);
+        self
     }
 
     pub fn momentum(&self) -> &[f32] {
@@ -66,19 +97,64 @@ impl SignMomentum {
 }
 
 impl OuterOptimizer for SignMomentum {
-    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, rng: &mut Rng) {
+    fn wire(&self) -> WireFormat {
+        WireFormat::DenseF32
+    }
+
+    fn contribute(
+        &mut self,
+        _worker: usize,
+        _n_workers: usize,
+        view: &WorkerView,
+        _rng: &mut Rng,
+        out: &mut WirePayload,
+    ) {
+        out.pack_end(view.start, view.end);
+    }
+
+    fn apply(
+        &mut self,
+        global: &mut [f32],
+        ctx: &RoundCtx,
+        payloads: &[WirePayload],
+        rng: &mut Rng,
+    ) -> Result<()> {
         let p = global.len();
         assert_eq!(ctx.start.len(), p);
         assert_eq!(self.m.len(), p);
+        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg);
+
+        if let Some(kernel) = &self.kernel {
+            anyhow::ensure!(
+                self.sign_op == SignOp::Exact,
+                "the Pallas sign-update kernel implements the exact sign operator only"
+            );
+            for i in 0..p {
+                self.scratch[i] = ctx.start[i] - self.avg[i];
+            }
+            kernel.apply(
+                global,
+                &mut self.m,
+                &self.scratch,
+                SignUpdateScalars {
+                    gamma: ctx.gamma,
+                    eta: self.eta,
+                    weight_decay: self.weight_decay,
+                    beta1: self.beta1,
+                    beta2: self.beta2,
+                },
+            )?;
+            return Ok(());
+        }
+
         let inv_gamma = 1.0 / ctx.gamma;
         let (b1, b2, eta, lam, g) =
             (self.beta1, self.beta2, self.eta, self.weight_decay, ctx.gamma);
-
         match self.sign_op {
             SignOp::Exact => {
                 // fused single pass: u, sign, x-update, m-update per element
                 for i in 0..p {
-                    let diff = (ctx.start[i] - ctx.avg_end[i]) * inv_gamma;
+                    let diff = (ctx.start[i] - self.avg[i]) * inv_gamma;
                     let u = b1 * self.m[i] + (1.0 - b1) * diff;
                     global[i] = ctx.start[i] - eta * g * (sign_f32(u) + lam * ctx.start[i]);
                     self.m[i] = b2 * self.m[i] + (1.0 - b2) * diff;
@@ -87,7 +163,7 @@ impl OuterOptimizer for SignMomentum {
             op => {
                 // two-pass: build u in scratch, apply randomized sign, update
                 for i in 0..p {
-                    let diff = (ctx.start[i] - ctx.avg_end[i]) * inv_gamma;
+                    let diff = (ctx.start[i] - self.avg[i]) * inv_gamma;
                     self.scratch[i] = b1 * self.m[i] + (1.0 - b1) * diff;
                     self.m[i] = b2 * self.m[i] + (1.0 - b2) * diff;
                 }
@@ -100,6 +176,7 @@ impl OuterOptimizer for SignMomentum {
                 }
             }
         }
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

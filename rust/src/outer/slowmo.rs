@@ -14,8 +14,14 @@
 //! Note the asymmetry the paper inherits: SlowMo's momentum uses weight 1
 //! on the fresh difference (classical momentum), signed SlowMo uses
 //! (1-β) (EMA), exactly as §4.1 defines them.
+//!
+//! Both are dense-exchange methods: `contribute` ships each rank's end
+//! parameters ([`WirePayload::pack_end`]) and `apply` reconstructs the
+//! exact average end point from the payloads before the update.
 
-use super::{OuterOptimizer, RoundCtx};
+use anyhow::Result;
+
+use super::{OuterOptimizer, RoundCtx, WireFormat, WirePayload, WorkerView};
 use crate::tensor::sign_f32;
 use crate::util::rng::Rng;
 
@@ -23,11 +29,13 @@ pub struct SlowMo {
     alpha: f32,
     beta: f32,
     u: Vec<f32>,
+    /// round scratch: reconstructed average end point (not checkpointed)
+    avg: Vec<f32>,
 }
 
 impl SlowMo {
     pub fn new(dim: usize, alpha: f32, beta: f32) -> Self {
-        SlowMo { alpha, beta, u: vec![0.0; dim] }
+        SlowMo { alpha, beta, u: vec![0.0; dim], avg: vec![0.0; dim] }
     }
 
     pub fn momentum(&self) -> &[f32] {
@@ -36,13 +44,36 @@ impl SlowMo {
 }
 
 impl OuterOptimizer for SlowMo {
-    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, _rng: &mut Rng) {
+    fn wire(&self) -> WireFormat {
+        WireFormat::DenseF32
+    }
+
+    fn contribute(
+        &mut self,
+        _worker: usize,
+        _n_workers: usize,
+        view: &WorkerView,
+        _rng: &mut Rng,
+        out: &mut WirePayload,
+    ) {
+        out.pack_end(view.start, view.end);
+    }
+
+    fn apply(
+        &mut self,
+        global: &mut [f32],
+        ctx: &RoundCtx,
+        payloads: &[WirePayload],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg);
         let inv_gamma = 1.0 / ctx.gamma;
         for i in 0..global.len() {
-            let diff = (ctx.start[i] - ctx.avg_end[i]) * inv_gamma;
+            let diff = (ctx.start[i] - self.avg[i]) * inv_gamma;
             self.u[i] = self.beta * self.u[i] + diff;
             global[i] = ctx.start[i] - self.alpha * ctx.gamma * self.u[i];
         }
+        Ok(())
     }
 
     fn name(&self) -> &'static str {
@@ -62,22 +93,47 @@ pub struct SignedSlowMo {
     eta: f32,
     beta: f32,
     u: Vec<f32>,
+    /// round scratch: reconstructed average end point (not checkpointed)
+    avg: Vec<f32>,
 }
 
 impl SignedSlowMo {
     pub fn new(dim: usize, eta: f32, beta: f32) -> Self {
-        SignedSlowMo { eta, beta, u: vec![0.0; dim] }
+        SignedSlowMo { eta, beta, u: vec![0.0; dim], avg: vec![0.0; dim] }
     }
 }
 
 impl OuterOptimizer for SignedSlowMo {
-    fn round(&mut self, global: &mut [f32], ctx: &RoundCtx, _rng: &mut Rng) {
+    fn wire(&self) -> WireFormat {
+        WireFormat::DenseF32
+    }
+
+    fn contribute(
+        &mut self,
+        _worker: usize,
+        _n_workers: usize,
+        view: &WorkerView,
+        _rng: &mut Rng,
+        out: &mut WirePayload,
+    ) {
+        out.pack_end(view.start, view.end);
+    }
+
+    fn apply(
+        &mut self,
+        global: &mut [f32],
+        ctx: &RoundCtx,
+        payloads: &[WirePayload],
+        _rng: &mut Rng,
+    ) -> Result<()> {
+        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg);
         let inv_gamma = 1.0 / ctx.gamma;
         for i in 0..global.len() {
-            let s = sign_f32(ctx.start[i] - ctx.avg_end[i]);
+            let s = sign_f32(ctx.start[i] - self.avg[i]);
             self.u[i] = self.beta * self.u[i] + (1.0 - self.beta) * s * inv_gamma;
             global[i] = ctx.start[i] - self.eta * ctx.gamma * self.u[i];
         }
+        Ok(())
     }
 
     fn name(&self) -> &'static str {

@@ -113,7 +113,10 @@ impl ModelBundle {
 }
 
 // Batched eval (`eval_loss_many`) deliberately has no override or
-// inherent twin: the trait default is the single copy of that loop.
+// inherent twin: the trait default is the single copy of that serial
+// loop. The trainer parallelizes ABOVE this interface — it fans the
+// batches across the persistent pool and calls `eval_loss` per batch
+// (`Trainer::evaluate`), so backends stay single-batch simple.
 impl StepBackend for ModelBundle {
     fn info(&self) -> &PresetInfo {
         &self.info

@@ -3,7 +3,7 @@
 //!
 //! Problems implement a distributed gradient oracle with controllable
 //! smoothness L, per-worker noise σ (Assumption in Thm 2a / 3), and
-//! heterogeneity δ (Thm 2b).  [`run_local_sgd_sign`] runs Algorithm 1
+//! heterogeneity δ (Thm 2b).  [`run_sign_momentum`] runs Algorithm 1
 //! with SGD base *natively* (no PJRT), recording the quantities the
 //! theorems bound: mean ‖∇f‖² over all local iterates (Thms 1-2) and
 //! mean ‖∇f(x_{t,0})‖₁ over outer iterates (Thm 3).

@@ -5,8 +5,26 @@
 //! One `Trainer` drives n simulated workers through T outer rounds of τ
 //! local steps each.  The backend ([`StepBackend`]: PJRT executables or
 //! the native MLP LM) does the real compute; everything around it —
-//! sharded batch sampling, base optimizer steps, exact averaging, the
-//! global sign-momentum step — is native Rust on the flat f32[P] vector.
+//! sharded batch sampling, base optimizer steps, the typed round
+//! exchange, the global sign-momentum step — is native Rust on the flat
+//! f32[P] vector.
+//!
+//! # The round exchange
+//!
+//! Every outer round runs ONE generic exchange, whatever the wire
+//! format: the trainer keeps n persistent [`WirePayload`] buffers
+//! (checked against the round's format/dimension and re-initialized on
+//! mismatch), bills the clock from the payloads' own
+//! [`WirePayload::wire_bytes`] ([`SimClock::charge_exchange`] — billing
+//! precedes packing, which both fixes the byte count independent of
+//! contents and keeps the trainer RNG order of the historical
+//! semantics: straggler draw first, then per-rank randomized-sign
+//! draws), has each rank pack its contribution
+//! ([`crate::outer::OuterOptimizer::contribute`], rank order), and
+//! hands the payloads to the server-side
+//! [`crate::outer::OuterOptimizer::apply`]. There is no per-format
+//! branch left in this file: adding a wire format touches
+//! [`crate::dist::wire`], not the trainer.
 //!
 //! # Parallel fleet execution
 //!
@@ -37,11 +55,10 @@ use crate::config::{RunConfig, TrainMode};
 use crate::data::corpus::{self, CorpusConfig};
 use crate::data::dataset::{Batch, TokenDataset};
 use crate::data::tokenizer::ByteTokenizer;
-use crate::dist::{codec, collectives, pool, PackedVotes, Worker};
-use crate::outer::{OuterConfig, OuterOptimizer, PackedRoundCtx, RoundCtx};
-use crate::runtime::{
-    Artifacts, Runtime, SignUpdateKernel, SignUpdateScalars, StepBackend,
-};
+use crate::dist::{collectives, pool, WireFormat, WirePayload, Worker};
+use crate::outer::{OuterConfig, OuterOptimizer, RoundCtx, WorkerView};
+use crate::runtime::{Artifacts, Runtime, SignUpdateKernel, StepBackend};
+use crate::sign::SignOp;
 use crate::tensor;
 use crate::train::checkpoint::Checkpoint;
 use crate::train::metrics::{LogRow, RunLog};
@@ -55,16 +72,18 @@ pub struct Trainer {
     workers: Vec<Worker>,
     global: Vec<f32>,
     outer: Box<dyn OuterOptimizer>,
-    /// AOT'd Pallas kernel path for Algorithm 1's global step (optional).
-    pallas_step: Option<(SignUpdateKernel, PallasSignState)>,
     schedule: Schedule,
     clock: SimClock,
     rng: Rng,
     val_batches: Vec<Batch>,
-    /// Persistent per-rank packed vote buffers (sign-compressed outer
-    /// optimizers): reused every round, so the steady-state packed data
-    /// path allocates nothing.
-    vote_bufs: Vec<PackedVotes>,
+    /// The round exchange's wire format (config override or the outer
+    /// optimizer's native format — [`RunConfig::resolved_wire`]).
+    wire: WireFormat,
+    /// Persistent per-rank payload buffers: re-packed in place every
+    /// round, so the steady-state exchange allocates nothing in any
+    /// wire format. Checked and re-initialized (never asserted) when
+    /// the round's (fleet size, format, dimension) disagrees.
+    payloads: Vec<WirePayload>,
     log: RunLog,
     local_step: u64,
     round: u64,
@@ -89,15 +108,6 @@ where
     }
 }
 
-/// Momentum state for the Pallas-kernel global-step path.
-struct PallasSignState {
-    m: Vec<f32>,
-    eta: f32,
-    beta1: f32,
-    beta2: f32,
-    weight_decay: f32,
-}
-
 pub struct RunResult {
     pub log: RunLog,
     pub clock: SimClock,
@@ -115,25 +125,33 @@ impl Trainer {
     /// Build a trainer around an already-compiled bundle (the experiment
     /// harness shares one compiled bundle per preset across dozens of runs
     /// — XLA compilation costs ~15 s per preset on this host). `rt`/`arts`
-    /// are only consulted for the optional Pallas global-step kernel.
+    /// are only consulted for the optional Pallas global-step kernel,
+    /// which is installed as an `apply` specialization on the
+    /// [`crate::outer::SignMomentum`] outer optimizer
+    /// ([`crate::outer::SignMomentum::with_kernel`]) — the kernel path
+    /// shares the optimizer's checkpointed momentum and the trainer has
+    /// no per-kernel branch.
     pub fn with_bundle(
         cfg: RunConfig,
         bundle: Arc<dyn StepBackend>,
         rt: &Runtime,
         arts: &Artifacts,
     ) -> Result<Trainer> {
-        let pallas_step = if cfg.global_step_pallas {
-            let OuterConfig::SignMomentum { eta, beta1, beta2, weight_decay, .. } = cfg.outer
-            else {
+        let outer_override: Option<Box<dyn OuterOptimizer>> = if cfg.global_step_pallas {
+            let p = bundle.info().param_count;
+            let Some(sm) = cfg.outer.build_sign_momentum(p) else {
                 anyhow::bail!("--pallas-global-step requires the sign_momentum outer optimizer");
             };
-            let p = bundle.info().param_count;
+            anyhow::ensure!(
+                matches!(cfg.outer, OuterConfig::SignMomentum { sign_op: SignOp::Exact, .. }),
+                "the Pallas sign-update kernel implements the exact sign operator only"
+            );
             let kernel = SignUpdateKernel::load(rt, arts)?;
-            Some((kernel, PallasSignState { m: vec![0.0; p], eta, beta1, beta2, weight_decay }))
+            Some(Box::new(sm.with_kernel(kernel)))
         } else {
             None
         };
-        Trainer::build(cfg, bundle, pallas_step)
+        Trainer::build(cfg, bundle, outer_override)
     }
 
     /// Build a trainer over any [`StepBackend`] — e.g. the pure-Rust
@@ -152,7 +170,7 @@ impl Trainer {
     fn build(
         cfg: RunConfig,
         bundle: Arc<dyn StepBackend>,
-        pallas_step: Option<(SignUpdateKernel, PallasSignState)>,
+        outer_override: Option<Box<dyn OuterOptimizer>>,
     ) -> Result<Trainer> {
         cfg.validate()?;
         anyhow::ensure!(bundle.info().name == cfg.preset, "bundle/preset mismatch");
@@ -194,22 +212,25 @@ impl Trainer {
             (0..cfg.n_workers).map(|i| Worker::new(i, p, &cfg.base, &root_rng)).collect();
 
         let global = bundle.init_params(cfg.seed as u32)?;
-        let outer = cfg.outer.build(p);
+        let outer = match outer_override {
+            Some(outer) => outer,
+            None => cfg.outer.build(p),
+        };
 
         Ok(Trainer {
             schedule: cfg.schedule.build(),
             log: RunLog::new(&cfg.tag),
             rng: root_rng.substream("trainer", 0),
+            wire: cfg.resolved_wire(),
             cfg,
             backend: bundle,
             dataset,
             workers,
             global,
             outer,
-            pallas_step,
             clock: SimClock::default(),
             val_batches,
-            vote_bufs: Vec::new(),
+            payloads: Vec::new(),
             local_step: 0,
             round: 0,
         })
@@ -344,90 +365,50 @@ impl Trainer {
         self.local_step += tau as u64;
         self.clock.charge_parallel_compute(&per_worker_secs);
 
-        if self.outer.sign_compressed_comm() && !self.cfg.reference_votes {
-            // Packed 1-bit data path (Remark 1): the round's only
-            // worker→server payload is each rank's randomized-sign vote,
-            // packed by dist::codec — no f32 vector crosses the simulated
-            // wire, so there is no averaged end point to compute either.
-            // The clock is charged before vote production so this path
-            // consumes the trainer RNG in the same order as the reference
-            // path below (straggler draw first, then per-rank sign draws).
-            self.clock.charge_vote_allreduce(
-                &self.cfg.comm,
-                n,
-                codec::sign_allreduce_bytes(p),
-                &mut self.rng,
-            );
-            // persistent per-rank buffers: sized once, repacked in place
-            // every round (no steady-state allocation)
-            if self.vote_bufs.len() != n {
-                self.vote_bufs = vec![PackedVotes::empty(); n];
-            }
-            for w in 0..n {
-                self.outer.make_votes(
-                    w,
-                    n,
-                    &self.workers[w].last_grad,
-                    &mut self.rng,
-                    &mut self.vote_bufs[w],
-                );
-                // ties the billed wire cost to the buffers actually
-                // exchanged: same length ⇒ same sign_allreduce_bytes
-                assert_eq!(self.vote_bufs[w].len(), p, "worker {w}: vote length");
-            }
-            let ctx = PackedRoundCtx { start: &start, gamma: gamma_t, round: self.round };
-            self.global.copy_from_slice(&start);
-            self.outer.round_packed(&mut self.global, &ctx, &self.vote_bufs, &mut self.rng);
-            anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
-            return Ok(());
+        // The round exchange — ONE generic typed-payload path for every
+        // outer optimizer and wire format (lines 8-10):
+        //
+        // (1) persistent per-rank payload buffers, checked against the
+        //     round's (fleet size, format, dimension) and re-initialized
+        //     on any mismatch — e.g. the first round, or a config change
+        //     across a checkpoint resume — instead of asserting;
+        // (2) the clock bills the payloads' own wire_bytes. Billing
+        //     precedes packing: the byte count is a function of
+        //     (format, dimension) only — never of the packed contents —
+        //     and charging first keeps the trainer RNG order of the
+        //     historical semantics (straggler draw, then per-rank
+        //     randomized-sign draws);
+        // (3) worker side: each rank packs its contribution, rank order;
+        // (4) any size/format drift during packing is an error — the
+        //     billed cost and the exchanged data may not diverge;
+        // (5) server side: apply the global step from the payloads.
+        if self.payloads.len() != n
+            || self.payloads.iter().any(|pl| pl.format() != self.wire || pl.len() != p)
+        {
+            self.payloads = (0..n).map(|_| WirePayload::with_len(self.wire, p)).collect();
         }
-
-        // f32 path: exact average + modeled cost of the exchange — P
-        // f32s (sign-compressed methods forced onto this reference path
-        // by cfg.reference_votes still bill the packed payload).
-        let mut avg_end = vec![0.0f32; p];
-        collectives::allreduce_mean(&self.workers, |w| w.params.as_slice(), &mut avg_end);
-        if self.outer.sign_compressed_comm() {
-            self.clock.charge_sign_allreduce(&self.cfg.comm, n, p, &mut self.rng);
-        } else {
-            let param_bytes = self.backend.info().param_bytes();
-            self.clock.charge_allreduce(&self.cfg.comm, n, param_bytes, &mut self.rng);
-        }
-
-        // global step
-        if let Some((kernel, st)) = &mut self.pallas_step {
-            // Algorithm 1 via the AOT'd fused Pallas kernel.
-            let mut diff = vec![0.0f32; p];
-            tensor::sub(&mut diff, &start, &avg_end);
-            self.global.copy_from_slice(&start);
-            kernel.apply(
-                &mut self.global,
-                &mut st.m,
-                &diff,
-                SignUpdateScalars {
-                    gamma: gamma_t,
-                    eta: st.eta,
-                    weight_decay: st.weight_decay,
-                    beta1: st.beta1,
-                    beta2: st.beta2,
-                },
-            )?;
-        } else {
-            let worker_end: Vec<&[f32]> =
-                self.workers.iter().map(|w| w.params.as_slice()).collect();
-            let worker_last_grad: Vec<&[f32]> =
-                self.workers.iter().map(|w| w.last_grad.as_slice()).collect();
-            let ctx = RoundCtx {
+        self.clock.charge_exchange(&self.cfg.comm, n, &self.payloads[0], &mut self.rng);
+        for w in 0..n {
+            let view = WorkerView {
                 start: &start,
-                avg_end: &avg_end,
-                worker_end: &worker_end,
-                worker_last_grad: &worker_last_grad,
-                gamma: gamma_t,
-                round: self.round,
+                end: &self.workers[w].params,
+                last_grad: &self.workers[w].last_grad,
             };
-            self.global.copy_from_slice(&start);
-            self.outer.round(&mut self.global, &ctx, &mut self.rng);
+            self.outer.contribute(w, n, &view, &mut self.rng, &mut self.payloads[w]);
         }
+        for (w, pl) in self.payloads.iter().enumerate() {
+            anyhow::ensure!(
+                pl.format() == self.wire && pl.len() == p,
+                "worker {w}: contribute produced a {}[{}] payload where the round billed {}[{}]",
+                pl.format().name(),
+                pl.len(),
+                self.wire.name(),
+                p
+            );
+        }
+        let ctx = RoundCtx { start: &start, gamma: gamma_t, round: self.round };
+        self.global.copy_from_slice(&start);
+        self.outer.apply(&mut self.global, &ctx, &self.payloads, &mut self.rng)?;
         anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
         Ok(())
     }
@@ -475,8 +456,31 @@ impl Trainer {
         Ok(())
     }
 
+    /// Mean validation loss over the configured eval batches.
+    ///
+    /// The batches fan out across the persistent pool (one read-only
+    /// job per batch, [`pool::run_indexed`]); per-batch losses are
+    /// gathered by index and summed in batch order in f64 — exactly the
+    /// serial [`StepBackend::eval_loss_many`] arithmetic, so the pooled
+    /// pass is bitwise-identical to the serial reference, which
+    /// `cfg.sequential_workers` keeps reachable (and which also serves
+    /// the degenerate single-batch / single-core cases).
     pub fn evaluate(&mut self) -> Result<f64> {
-        self.backend.eval_loss_many(&self.global, &self.val_batches)
+        if self.cfg.sequential_workers
+            || self.val_batches.len() <= 1
+            || pool::global().helpers() == 0
+        {
+            return self.backend.eval_loss_many(&self.global, &self.val_batches);
+        }
+        let backend = &self.backend;
+        let global = &self.global;
+        let losses: Vec<Result<f32>> =
+            pool::run_indexed(&self.val_batches, move |_, batch| backend.eval_loss(global, batch));
+        let mut acc = 0.0f64;
+        for loss in losses {
+            acc += loss? as f64;
+        }
+        Ok(acc / self.val_batches.len() as f64)
     }
 
     // ---- checkpointing ----

@@ -1,16 +1,19 @@
-//! Differential property suite for the packed 1-bit vote data path
-//! (same in-tree randomized-property style as collectives.rs; proptest
-//! is unavailable offline).
+//! Differential property suite for the compressed wire codecs (same
+//! in-tree randomized-property style as collectives.rs; proptest is
+//! unavailable offline).
 //!
-//! The headline invariant is ISSUE 2's acceptance criterion: for any
-//! (n workers, P dims, thread count) — including signed zeros, exact
-//! ties, and P not divisible by 8 or 64 — `majority_vote_packed` over
-//! the packed payloads is **bitwise identical** to the f32
-//! `majority_vote` over the unpacked votes, on both backends.
+//! The headline invariant for the 1-bit path is ISSUE 2's acceptance
+//! criterion: for any (n workers, P dims, thread count) — including
+//! signed zeros, exact ties, and P not divisible by 8 or 64 —
+//! `majority_vote_packed` over the packed payloads is **bitwise
+//! identical** to the f32 `majority_vote` over the unpacked votes, on
+//! both backends. The q8 properties pin the QuantizedI8 payload's
+//! round-trip error bound and wire-byte exactness (ISSUE 4).
 
 use dsm::dist::codec;
 use dsm::dist::collectives::{self, Backend};
 use dsm::dist::votes::{self, PackedVotes};
+use dsm::dist::{WireFormat, WirePayload};
 use dsm::util::rng::Rng;
 
 /// Mini property harness: run `f` on `cases` random inputs.
@@ -150,5 +153,100 @@ fn wire_bytes_match_the_codec_cost_model() {
         assert_eq!(packed.len(), p, "case {case}");
         assert_eq!(packed.as_bytes().len(), codec::packed_len(p), "case {case}");
         assert_eq!(packed.wire_bytes(), codec::sign_allreduce_bytes(p), "case {case}");
+    });
+}
+
+// ---- QuantizedI8 payload properties --------------------------------
+
+/// Random difference vector with mixed magnitudes and exact zeros.
+fn random_diffs(rng: &mut Rng, p: usize) -> (Vec<f32>, Vec<f32>) {
+    let start: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+    let end: Vec<f32> = start
+        .iter()
+        .map(|&s| match rng.below(4) {
+            0 => s, // exact zero difference
+            1 => s - rng.normal_f32(0.0, 1e-4),
+            _ => s - rng.normal_f32(0.0, 0.1),
+        })
+        .collect();
+    (start, end)
+}
+
+#[test]
+fn prop_q8_round_trip_error_is_within_half_a_step() {
+    forall("q8-roundtrip", 25, |case, rng| {
+        let p = 1 + rng.below(5_000) as usize;
+        let (start, end) = random_diffs(rng, p);
+        let mut bytes = Vec::new();
+        let scale = codec::quantize_diff_into(&start, &end, &mut bytes);
+        assert_eq!(bytes.len(), p, "case {case}");
+        let max = start.iter().zip(&end).map(|(&s, &e)| (s - e).abs()).fold(0.0f32, f32::max);
+        assert!((scale - max / 127.0).abs() <= f32::EPSILON * max, "case {case}: scale");
+        for (j, ((&s, &e), &b)) in start.iter().zip(&end).zip(&bytes).enumerate() {
+            let err = (codec::dequantize_i8(b, scale) - (s - e)).abs();
+            // half a quantization step plus f32 rounding slack
+            assert!(
+                err <= scale * 0.5 + max * 1e-5,
+                "case {case} coord {j}: err {err} vs step {scale}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_q8_payload_wire_bytes_are_exact() {
+    forall("q8-wire-bytes", 15, |case, rng| {
+        let p = rng.below(50_000) as usize;
+        let (start, end) = random_diffs(rng, p);
+        let mut payload = WirePayload::with_len(WireFormat::QuantizedI8, p);
+        payload.pack_end(&start, &end);
+        assert_eq!(payload.len(), p, "case {case}");
+        assert_eq!(payload.wire_bytes(), codec::q8_bytes(p), "case {case}");
+        assert_eq!(payload.wire_bytes(), WireFormat::QuantizedI8.wire_bytes(p), "case {case}");
+        // packing never changes the billed size — the invariant the
+        // trainer's bill-before-pack ordering rests on
+        let before = WirePayload::with_len(WireFormat::QuantizedI8, p).wire_bytes();
+        assert_eq!(payload.wire_bytes(), before, "case {case}");
+    });
+}
+
+#[test]
+fn prop_q8_mean_end_tracks_exact_mean() {
+    forall("q8-mean", 15, |case, rng| {
+        let p = 1 + rng.below(2_000) as usize;
+        let n = 1 + rng.below(6) as usize;
+        let start: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let ends: Vec<Vec<f32>> = (0..n)
+            .map(|_| start.iter().map(|&s| s - rng.normal_f32(0.0, 0.05)).collect())
+            .collect();
+        let payloads: Vec<WirePayload> = ends
+            .iter()
+            .map(|e| {
+                let mut pl = WirePayload::with_len(WireFormat::QuantizedI8, p);
+                pl.pack_end(&start, e);
+                pl
+            })
+            .collect();
+        let mut approx = vec![0.0f32; p];
+        WirePayload::mean_end_into(&payloads, &start, &mut approx);
+        let mut exact = vec![0.0f32; p];
+        collectives::allreduce_mean(&ends, |e| e.as_slice(), &mut exact);
+        // the mean's error is bounded by the mean of the per-rank
+        // half-steps; bound loosely via the largest per-rank scale
+        let max_scale = payloads
+            .iter()
+            .map(|pl| match pl {
+                WirePayload::QuantizedI8 { scale, .. } => *scale,
+                _ => unreachable!(),
+            })
+            .fold(0.0f32, f32::max);
+        for j in 0..p {
+            assert!(
+                (approx[j] - exact[j]).abs() <= max_scale * 0.5 + 1e-5,
+                "case {case} coord {j}: {} vs {}",
+                approx[j],
+                exact[j]
+            );
+        }
     });
 }
