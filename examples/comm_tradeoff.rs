@@ -5,10 +5,23 @@
 //! — reproducing the paper's core motivation: as links get slower, larger
 //! τ wins even though each round makes slightly less optimization
 //! progress. A second sweep varies the round's WIRE FORMAT at fixed τ
-//! (dense f32 vs the 8-bit quantized exchange), the payload-level axis
-//! the typed `WirePayload` contract opens.
+//! (dense f32 vs the 8-bit quantized exchange, per-message `q8` and
+//! layout-aware per-tensor `q8pt`), the payload-level axis the typed
+//! `WirePayload` contract opens, plus the per-segment breakdown of where
+//! the bits go.
 //!
-//!     cargo run --release --example comm_tradeoff [--preset nano] [--budget 120]
+//!     cargo run --release --example comm_tradeoff \
+//!         [--preset nano] [--budget 120] [--native] [--quick] [--out FILE]
+//!
+//! With `--native` — or automatically when no `artifacts/manifest.json`
+//! exists (e.g. the CI smoke job) — the sweep runs on the pure-Rust
+//! multi-layer transformer `NativeBundle`, whose per-block layout gives
+//! `q8pt` real segments to resolve. `--quick` shrinks the budget for
+//! smoke runs; `--out` also writes the rendered tables to a file (CI
+//! uploads it as an artifact).
+
+use std::fmt::Write as _;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -16,33 +29,52 @@ use dsm::comm::CommModel;
 use dsm::config::{default_peak_lr, RunConfig};
 use dsm::dist::WireFormat;
 use dsm::outer::OuterConfig;
-use dsm::runtime::{Artifacts, ModelBundle, Runtime};
+use dsm::runtime::{Artifacts, ModelBundle, NativeBundle, Runtime, StepBackend};
+use dsm::train::metrics::render_segment_norms;
 use dsm::train::schedule::ScheduleConfig;
 use dsm::train::Trainer;
 use dsm::util::cli::Args;
 
-/// Modeled seconds of one round exchange in `wire` format — mirrors
-/// `SimClock::charge_exchange`'s topology choice.
-fn exchange_time(m: &CommModel, n: usize, wire: WireFormat, p: usize) -> f64 {
-    let bytes = wire.wire_bytes(p);
-    if wire.ring_reducible() {
-        m.allreduce_time(n, bytes)
-    } else {
-        m.gather_time(n, bytes) + m.broadcast_time(n, bytes)
-    }
-}
-
 fn main() -> Result<()> {
-    let args = Args::parse(std::env::args().skip(1)).map_err(anyhow::Error::msg)?;
-    let preset = args.str_or("preset", "nano");
-    let budget = args.usize_or("budget", 120).map_err(anyhow::Error::msg)?;
+    let args = Args::parse_with_bools(std::env::args().skip(1), &["native", "quick"])
+        .map_err(anyhow::Error::msg)?;
+    let quick = args.has("quick");
+    let default_budget = if quick { 24 } else { 120 };
+    let budget = args.usize_or("budget", default_budget).map_err(anyhow::Error::msg)?;
     let workers = 4usize;
 
-    let rt = Runtime::cpu()?;
-    let arts = Artifacts::load(&Artifacts::default_dir())?;
-    let bundle = std::sync::Arc::new(ModelBundle::load(&rt, arts.preset(&preset)?)?);
-    let p = bundle.info.param_count;
-    let bytes = p as u64 * 4;
+    // Backend selection: PJRT artifacts when requested/available, the
+    // pure-Rust multi-layer transformer under --native — and only
+    // auto-fall back to it when the user did NOT name a preset (an
+    // explicit --preset against missing artifacts stays a loud load
+    // error rather than a silent toy-model substitution).
+    let explicit_preset = args.get("preset").map(str::to_string);
+    let have_artifacts = Artifacts::default_dir().join("manifest.json").exists();
+    let native = args.has("native") || (!have_artifacts && explicit_preset.is_none());
+    match &explicit_preset {
+        Some(p) if native => {
+            eprintln!("note: --native overrides --preset {p}; running the native transformer");
+        }
+        _ => {}
+    }
+    let preset = if native {
+        "native".to_string()
+    } else {
+        explicit_preset.unwrap_or_else(|| "nano".to_string())
+    };
+    // keep the runtime/artifacts alive next to the compiled bundle
+    let pjrt: Option<(Runtime, Artifacts)> = if native {
+        None
+    } else {
+        Some((Runtime::cpu()?, Artifacts::load(&Artifacts::default_dir())?))
+    };
+    let backend: Arc<dyn StepBackend> = match &pjrt {
+        Some((rt, arts)) => Arc::new(ModelBundle::load(rt, arts.preset(&preset)?)?),
+        // 2 transformer blocks, 15 named layout segments
+        None => Arc::new(NativeBundle::transformer(&preset, 2, 24, 16, 2)),
+    };
+    let p = backend.info().param_count;
+    let segments = backend.layout().len();
 
     let make_cfg = |tau: usize, wire: Option<WireFormat>| {
         let rounds = (budget / tau).max(1);
@@ -55,39 +87,49 @@ fn main() -> Result<()> {
             ScheduleConfig::cosine_paper(default_peak_lr(&preset), (rounds * tau) as u64);
         cfg.eval_every = 0; // final eval only
         cfg.wire = wire;
+        if quick {
+            cfg.corpus_bytes = 1 << 18;
+            cfg.eval_batches = 2;
+        }
         cfg.tag = format!("tradeoff-tau{tau}-{}", wire.map(|w| w.name()).unwrap_or("dense"));
         cfg
     };
 
-    println!("comm_tradeoff: preset={preset}, n={workers}, budget={budget} local steps\n");
+    let mut report = String::new();
+    writeln!(
+        report,
+        "comm_tradeoff: preset={preset} (P={p}, {segments} layout segments), \
+         n={workers}, budget={budget} local steps\n"
+    )?;
     let mut rows = Vec::new();
     for tau in [1usize, 4, 12, 24, 36] {
-        let mut trainer = Trainer::with_bundle(make_cfg(tau, None), bundle.clone(), &rt, &arts)?;
+        let mut trainer = Trainer::with_backend(make_cfg(tau, None), backend.clone())?;
         let res = trainer.run()?;
-        println!(
+        writeln!(
+            report,
             "tau {tau:>3}: val {:.4} | {} comm rounds | compute {:.1}s",
             res.final_val, res.clock.comm_rounds, res.clock.compute_s
-        );
+        )?;
         rows.push((tau, res));
     }
 
-    println!("\nsimulated total seconds (compute + modeled comm):");
-    print!("{:>10}", "net\\tau");
+    writeln!(report, "\nsimulated total seconds (compute + modeled comm):")?;
+    write!(report, "{:>10}", "net\\tau")?;
     for (tau, _) in &rows {
-        print!("{tau:>10}");
+        write!(report, "{tau:>10}")?;
     }
-    println!();
+    writeln!(report)?;
     for net in ["nvlink", "infiniband", "ethernet", "wan"] {
         let m = CommModel::preset(net).unwrap();
-        print!("{net:>10}");
+        write!(report, "{net:>10}")?;
+        // dense re-cost through the same helper the clock's rule lives in
+        let dense_s = WireFormat::DenseF32.exchange_time(&m, workers, p, 1);
         let totals: Vec<f64> = rows
             .iter()
-            .map(|(_, r)| {
-                r.clock.compute_s + r.clock.comm_rounds as f64 * m.allreduce_time(workers, bytes)
-            })
+            .map(|(_, r)| r.clock.compute_s + r.clock.comm_rounds as f64 * dense_s)
             .collect();
         for t in &totals {
-            print!("{t:>10.2}");
+            write!(report, "{t:>10.2}")?;
         }
         // best tau for this net
         let best = rows
@@ -96,49 +138,77 @@ fn main() -> Result<()> {
             .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
             .map(|((tau, _), _)| *tau)
             .unwrap();
-        println!("   <- best tau = {best}");
+        writeln!(report, "   <- best tau = {best}")?;
     }
 
     // ---- wire-format sweep at fixed tau = 12 -------------------------
     // Same algorithm, same schedule; only the round payload changes:
     // dense f32 (ring) vs 8-bit quantized differences (gather+broadcast,
-    // 4x smaller messages, bounded rounding error in the exchange).
+    // 4x smaller messages, bounded rounding error in the exchange) —
+    // with one scale per message (q8) or one per layout segment (q8pt).
     let fixed_tau = 12usize;
     let dense_res = rows
         .iter()
         .find(|(tau, _)| *tau == fixed_tau)
         .map(|(_, r)| r)
         .expect("tau=12 is in the sweep");
-    let mut q8_trainer = Trainer::with_bundle(
-        make_cfg(fixed_tau, Some(WireFormat::QuantizedI8)),
-        bundle.clone(),
-        &rt,
-        &arts,
-    )?;
+    let q8_cfg = make_cfg(fixed_tau, Some(WireFormat::QuantizedI8));
+    let mut q8_trainer = Trainer::with_backend(q8_cfg, backend.clone())?;
     let q8_res = q8_trainer.run()?;
+    let q8pt_cfg = make_cfg(fixed_tau, Some(WireFormat::QuantizedI8PerTensor));
+    let mut q8pt_trainer = Trainer::with_backend(q8pt_cfg, backend.clone())?;
+    let q8pt_res = q8pt_trainer.run()?;
 
-    println!("\nwire-format tradeoff at tau = {fixed_tau} (Algorithm 1, simulated total seconds):");
-    println!("{:>10}{:>12}{:>12}", "net", "dense", "q8");
+    writeln!(
+        report,
+        "\nwire-format tradeoff at tau = {fixed_tau} (Algorithm 1, simulated total seconds):"
+    )?;
+    writeln!(report, "{:>10}{:>12}{:>12}{:>12}", "net", "dense", "q8", "q8pt")?;
     for net in ["nvlink", "infiniband", "ethernet", "wan"] {
         let m = CommModel::preset(net).unwrap();
+        // re-cost through WireFormat::exchange_time — the same byte ×
+        // topology rule SimClock::charge_exchange billed with
         let total = |res: &dsm::train::RunResult, wire: WireFormat| {
             res.clock.compute_s
-                + res.clock.comm_rounds as f64 * exchange_time(&m, workers, wire, p)
+                + res.clock.comm_rounds as f64 * wire.exchange_time(&m, workers, p, segments)
         };
-        println!(
-            "{net:>10}{:>12.2}{:>12.2}",
+        writeln!(
+            report,
+            "{net:>10}{:>12.2}{:>12.2}{:>12.2}",
             total(dense_res, WireFormat::DenseF32),
             total(&q8_res, WireFormat::QuantizedI8),
-        );
+            total(&q8pt_res, WireFormat::QuantizedI8PerTensor),
+        )?;
     }
-    println!(
-        "final val: dense {:.4} | q8 {:.4}  (per-rank message: {} vs {} bytes)",
+    writeln!(
+        report,
+        "final val: dense {:.4} | q8 {:.4} | q8pt {:.4}\n\
+         per-rank message bytes: dense {} | q8 {} | q8pt {} \
+         ({} segments x 4-byte scales)",
         dense_res.final_val,
         q8_res.final_val,
-        WireFormat::DenseF32.wire_bytes(p),
-        WireFormat::QuantizedI8.wire_bytes(p),
-    );
+        q8pt_res.final_val,
+        WireFormat::DenseF32.wire_bytes(p, segments),
+        WireFormat::QuantizedI8.wire_bytes(p, segments),
+        WireFormat::QuantizedI8PerTensor.wire_bytes(p, segments),
+        segments,
+    )?;
 
-    println!("\ncomm_tradeoff OK");
+    // where the bits go: the q8pt run's last-round update, per segment
+    if !q8pt_res.segment_norms.is_empty() {
+        writeln!(
+            report,
+            "\nlast-round global update per layout segment (q8pt run — hetero\n\
+             per-segment magnitudes are why per-tensor scales exist):\n{}",
+            render_segment_norms(&q8pt_res.segment_norms)
+        )?;
+    }
+
+    writeln!(report, "\ncomm_tradeoff OK")?;
+    print!("{report}");
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, &report)?;
+        eprintln!("wrote {out}");
+    }
     Ok(())
 }

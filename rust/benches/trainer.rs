@@ -1,24 +1,25 @@
 //! Round wall-clock of the worker fleet — sequential reference vs
 //! parallel execution on the persistent pool, at n ∈ {4, 8} — plus the
 //! eval pass (serial `eval_loss_many` vs batches fanned across the
-//! pool).
+//! pool) and the quantized pack path (per-message `q8` vs per-tensor
+//! `q8pt` over a real multi-segment transformer layout).
 //!
 //!     cargo bench --bench trainer              # human-readable table
 //!     cargo bench --bench trainer -- --json    # also write BENCH_trainer.json
 //!     cargo bench --bench trainer -- --quick   # fewer timed rounds (CI)
 //!
-//! Runs on the pure-Rust [`NativeBundle`] backend, so no PJRT artifacts
-//! are required — this is the repo's recorded perf trajectory for the
-//! fleet fan-out (`BENCH_trainer.json` at the workspace root). Both
-//! execution modes of either pass compute bit-identical results
+//! Runs on the pure-Rust [`NativeBundle`] backends, so no PJRT
+//! artifacts are required — this is the repo's recorded perf trajectory
+//! for the fleet fan-out (`BENCH_trainer.json` at the workspace root).
+//! Both execution modes of either pass compute bit-identical results
 //! (rust/tests/parallel_fleet.rs); only wall-clock differs.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use dsm::config::RunConfig;
-use dsm::dist::pool;
-use dsm::runtime::NativeBundle;
+use dsm::dist::{pool, WireFormat, WirePayload};
+use dsm::runtime::{NativeBundle, StepBackend};
 use dsm::train::Trainer;
 
 const PRESET: &str = "native";
@@ -68,6 +69,43 @@ fn time_eval(eval_batches: usize, sequential: bool, reps: usize) -> f64 {
     t0.elapsed().as_secs_f64() / reps as f64
 }
 
+/// Mean seconds per `pack_end` of a P-coordinate difference into a
+/// quantized payload — per-message scale vs per-tensor scales over the
+/// 4-block transformer layout (27 segments). Same bytes written either
+/// way; the per-tensor path additionally resolves segment boundaries
+/// and computes one max per segment instead of one global max.
+fn time_quantize(reps: usize) -> (f64, f64, usize, usize) {
+    let tb = NativeBundle::transformer("bench-tf", 1, 32, 64, 4);
+    let layout = Arc::new(tb.layout().clone());
+    let p = layout.param_count();
+    let segments = layout.len();
+    // deterministic hetero-magnitude difference: each segment moves at
+    // its own scale, the case q8pt exists for
+    let start = vec![0.0f32; p];
+    let mut end = vec![0.0f32; p];
+    for (si, e) in layout.entries().iter().enumerate() {
+        let scale = 10f32.powi(-((si % 4) as i32));
+        for i in e.offset..e.offset + e.numel() {
+            end[i] = scale * ((i as f32) * 0.37).sin();
+        }
+    }
+    let mut q8 = WirePayload::with_len(WireFormat::QuantizedI8, p);
+    let mut q8pt = WirePayload::with_layout(WireFormat::QuantizedI8PerTensor, &layout);
+    q8.pack_end(&start, &end);
+    q8pt.pack_end(&start, &end);
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        q8.pack_end(&start, &end);
+    }
+    let q8_s = t0.elapsed().as_secs_f64() / reps as f64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        q8pt.pack_end(&start, &end);
+    }
+    let q8pt_s = t0.elapsed().as_secs_f64() / reps as f64;
+    (q8_s, q8pt_s, p, segments)
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let json = args.iter().any(|a| a == "--json");
@@ -110,14 +148,28 @@ fn main() {
         eval_par_s * 1e3
     );
 
+    // quantized pack path: per-message scale vs per-tensor scales
+    let quant_reps = if quick { 20 } else { 200 };
+    let (q8_s, q8pt_s, quant_p, quant_segments) = time_quantize(quant_reps);
+    println!(
+        "quantize (P={quant_p}, {quant_segments} segments): q8 {:>8.3} ms | q8pt {:>8.3} ms | ratio {:.2}x",
+        q8_s * 1e3,
+        q8pt_s * 1e3,
+        q8pt_s / q8_s
+    );
+
     if json {
         let body = format!(
             "{{\n  \"bench\": \"trainer_fleet_round\",\n  \"backend\": \"native\",\n  \
              \"host_cores\": {cores},\n  \"pool_threads\": {threads},\n  \
              \"timed_rounds\": {rounds},\n  \"results\": [\n{}\n  ],\n  \
              \"eval\": {{\"batches\": {eval_batches}, \"sequential_s\": {eval_seq_s:.6}, \
-             \"pooled_s\": {eval_par_s:.6}, \"speedup\": {eval_speedup:.3}}}\n}}\n",
-            entries.join(",\n")
+             \"pooled_s\": {eval_par_s:.6}, \"speedup\": {eval_speedup:.3}}},\n  \
+             \"quantize\": {{\"p\": {quant_p}, \"segments\": {quant_segments}, \
+             \"q8_pack_s\": {q8_s:.6}, \"q8pt_pack_s\": {q8pt_s:.6}, \
+             \"q8pt_over_q8\": {:.3}}}\n}}\n",
+            entries.join(",\n"),
+            q8pt_s / q8_s
         );
         let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
             .parent()

@@ -415,18 +415,24 @@ mod tests {
         assert_eq!(dense.comm_s.to_bits(), ring.comm_s.to_bits());
         assert_eq!(dense.bytes_communicated, ring.bytes_communicated);
 
-        // q8 bills the gather+broadcast of its own byte model
-        let mut q8 = SimClock::default();
-        let q8_payload = WirePayload::with_len(WireFormat::QuantizedI8, p);
-        q8.charge_exchange(&m, n, &q8_payload, &mut Rng::new(3));
-        let mut gather = SimClock::default();
-        gather.charge_vote_allreduce(&m, n, q8_payload.wire_bytes(), &mut Rng::new(3));
-        assert_eq!(q8.comm_s.to_bits(), gather.comm_s.to_bits());
-        assert_eq!(q8.bytes_communicated, gather.bytes_communicated);
+        // both quantized formats bill the gather+broadcast of their own
+        // byte models (the per-tensor payload's count includes its
+        // per-segment scales)
+        for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor] {
+            let mut q8 = SimClock::default();
+            let q8_payload = WirePayload::with_len(format, p);
+            q8.charge_exchange(&m, n, &q8_payload, &mut Rng::new(3));
+            let mut gather = SimClock::default();
+            gather.charge_vote_allreduce(&m, n, q8_payload.wire_bytes(), &mut Rng::new(3));
+            assert_eq!(q8.comm_s.to_bits(), gather.comm_s.to_bits(), "{}", format.name());
+            assert_eq!(q8.bytes_communicated, gather.bytes_communicated);
 
-        // at the default fleet size the q8 exchange undercuts dense on
-        // modeled time even though its topology moves more total bytes
-        assert!(q8.comm_s < dense.comm_s, "{} vs {}", q8.comm_s, dense.comm_s);
+            // at the default fleet size the quantized exchange undercuts
+            // dense on modeled time even though its topology moves more
+            // total bytes
+            let (a, b) = (q8.comm_s, dense.comm_s);
+            assert!(a < b, "{}: {a} vs {b}", format.name());
+        }
     }
 
     #[test]

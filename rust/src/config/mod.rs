@@ -59,10 +59,12 @@ pub struct RunConfig {
     /// corpus source (the Theorem-2(b) heterogeneity regime).
     pub heterogeneous: bool,
     /// Round-exchange wire format override (`[outer] wire = "dense" |
-    /// "packed_signs" | "q8"` / `--wire`). `None` = the outer
+    /// "packed_signs" | "q8" | "q8pt"` / `--wire`). `None` = the outer
     /// optimizer's native format ([`OuterConfig::default_wire`]);
     /// validation rejects formats the optimizer does not speak
-    /// ([`OuterConfig::supported_wires`]).
+    /// ([`OuterConfig::supported_wires`]). `q8pt` quantizes each
+    /// segment of the backend's parameter layout against its own scale
+    /// ([`crate::runtime::StepBackend::layout`]).
     pub wire: Option<WireFormat>,
     /// Differential-testing / benchmarking hook: run the simulated
     /// ranks of each round serially on the coordinator thread instead
@@ -407,8 +409,15 @@ preset = "wan"
         let cli = parse(toml_q8, "--wire dense").unwrap();
         assert_eq!(cli.resolved_wire(), WireFormat::DenseF32);
 
+        // the layout-aware per-tensor format parses from file and CLI
+        let q8pt = parse("[outer]\nalgo = \"slowmo\"\nwire = \"q8pt\"\n", "").unwrap();
+        assert_eq!(q8pt.resolved_wire(), WireFormat::QuantizedI8PerTensor);
+        let q8pt_cli = parse(toml_q8, "--wire q8pt").unwrap();
+        assert_eq!(q8pt_cli.resolved_wire(), WireFormat::QuantizedI8PerTensor);
+
         // unsupported pairings are rejected, not silently mis-billed
         assert!(parse("[outer]\nalgo = \"mv_signsgd\"\nwire = \"dense\"\n", "").is_err());
+        assert!(parse("[outer]\nalgo = \"mv_signsgd\"\nwire = \"q8pt\"\n", "").is_err());
         assert!(parse("[outer]\nalgo = \"sign_momentum\"\nwire = \"1bit\"\n", "").is_err());
         // ...and so is a wire override in standalone mode, which never
         // runs the outer exchange the override would re-format
@@ -423,6 +432,8 @@ preset = "wan"
         assert!(cfg.describe().contains("wire=dense"));
         cfg.wire = Some(WireFormat::QuantizedI8);
         assert!(cfg.describe().contains("wire=q8"));
+        cfg.wire = Some(WireFormat::QuantizedI8PerTensor);
+        assert!(cfg.describe().contains("wire=q8pt"));
     }
 
     #[test]

@@ -8,9 +8,13 @@
 //! [`pack_signs`]/[`unpack_signs`] implement that payload. The 8-bit
 //! quantized format ([`quantize_diff_into`]/[`dequantize_i8`]) trades a
 //! 4× payload reduction for a bounded rounding error on dense
-//! pseudo-gradient exchanges. [`sign_allreduce_bytes`] and [`q8_bytes`]
-//! are the byte models the simulated clock bills through
-//! [`crate::comm::SimClock::charge_exchange`].
+//! pseudo-gradient exchanges; its per-tensor refinement
+//! ([`quantize_diff_slice`] run once per [`crate::runtime::ParamLayout`]
+//! segment) spends 4 extra bytes per segment to give every parameter
+//! block its own scale, cutting the rounding error wherever blocks
+//! have very different difference magnitudes. [`sign_allreduce_bytes`],
+//! [`q8_bytes`], and [`q8pt_bytes`] are the byte models the simulated
+//! clock bills through [`crate::comm::SimClock::charge_exchange`].
 //!
 //! # Wire format
 //!
@@ -83,6 +87,15 @@ pub fn q8_bytes(n_params: usize) -> u64 {
     n_params as u64 + Q8_OVERHEAD_BYTES
 }
 
+/// Total bytes one **per-tensor** 8-bit quantized message puts on the
+/// wire: 1 byte per coordinate, the u64 length header, and one f32
+/// scale per layout segment. With one segment this is exactly
+/// [`q8_bytes`] — the per-tensor format is a strict generalization of
+/// the per-message one.
+pub fn q8pt_bytes(n_params: usize, n_segments: usize) -> u64 {
+    n_params as u64 + HEADER_BYTES + 4 * n_segments as u64
+}
+
 /// Quantize the local difference `start - end` to symmetric i8 with a
 /// per-message scale, writing the two's-complement bytes into `out`
 /// (capacity reused — the allocation-free path for persistent payload
@@ -105,6 +118,34 @@ pub fn quantize_diff_into(start: &[f32], end: &[f32], out: &mut Vec<u8>) -> f32 
         start.len(),
         end.len()
     );
+    // no clear(): in steady state the persistent buffer already has the
+    // right length, so this resize is a no-op instead of a full memset
+    // (quantize_diff_slice overwrites every byte either way)
+    out.resize(start.len(), 0);
+    quantize_diff_slice(start, end, out)
+}
+
+/// [`quantize_diff_into`] over a caller-sized byte slice — the
+/// per-segment core the layout-aware `q8pt` payload calls once per
+/// [`crate::runtime::ParamLayout`] segment (each segment quantizes
+/// against its own scale). Arithmetic is identical to the per-message
+/// path, so a one-segment layout produces bitwise-identical bytes and
+/// scale.
+pub fn quantize_diff_slice(start: &[f32], end: &[f32], out: &mut [u8]) -> f32 {
+    assert_eq!(
+        start.len(),
+        end.len(),
+        "quantize: start has {} coordinates, end {}",
+        start.len(),
+        end.len()
+    );
+    assert_eq!(
+        out.len(),
+        start.len(),
+        "quantize: output holds {} bytes, need {}",
+        out.len(),
+        start.len()
+    );
     // f32::max skips NaN operands, so track finiteness explicitly — a
     // diverged worker must not encode as an innocuous finite payload
     let mut max = 0.0f32;
@@ -115,16 +156,14 @@ pub fn quantize_diff_into(start: &[f32], end: &[f32], out: &mut Vec<u8>) -> f32 
         max = max.max(d.abs());
     }
     let scale = if finite { max / 127.0 } else { f32::NAN };
-    out.clear();
     if scale == 0.0 {
-        out.resize(start.len(), 0);
+        out.fill(0);
         return 0.0;
     }
     let inv = 1.0 / scale;
-    out.reserve(start.len());
-    for (&s, &e) in start.iter().zip(end) {
+    for ((&s, &e), o) in start.iter().zip(end).zip(out.iter_mut()) {
         let q = ((s - e) * inv).round().clamp(-127.0, 127.0);
-        out.push(q as i8 as u8);
+        *o = q as i8 as u8;
     }
     scale
 }
@@ -255,6 +294,32 @@ mod tests {
                 assert!(!dequantize_i8(b, scale).is_finite(), "bad={bad}");
             }
         }
+    }
+
+    #[test]
+    fn q8pt_bytes_generalizes_q8_bytes() {
+        let p = 1 << 20;
+        assert_eq!(q8pt_bytes(p, 1), q8_bytes(p));
+        // each extra segment costs exactly one f32 scale
+        assert_eq!(q8pt_bytes(p, 12), q8_bytes(p) + 4 * 11);
+    }
+
+    #[test]
+    fn quantize_slice_matches_quantize_into_bitwise() {
+        let start: Vec<f32> = (0..100).map(|i| (i as f32 * 0.37).sin()).collect();
+        let end: Vec<f32> = (0..100).map(|i| (i as f32 * 0.53).cos() * 0.1).collect();
+        let mut via_vec = Vec::new();
+        let scale_vec = quantize_diff_into(&start, &end, &mut via_vec);
+        let mut via_slice = vec![0xAAu8; 100]; // stale content must be overwritten
+        let scale_slice = quantize_diff_slice(&start, &end, &mut via_slice);
+        assert_eq!(scale_vec.to_bits(), scale_slice.to_bits());
+        assert_eq!(via_vec, via_slice);
+    }
+
+    #[test]
+    #[should_panic(expected = "output holds")]
+    fn quantize_slice_wrong_output_size_panics() {
+        quantize_diff_slice(&[1.0, 2.0], &[0.0, 0.0], &mut [0u8; 3]);
     }
 
     #[test]

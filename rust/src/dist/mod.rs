@@ -53,15 +53,21 @@
 //!
 //! [`wire`] defines the round-exchange contract: every worker→server
 //! message is a [`WirePayload`] (dense f32 parameters, packed 1-bit
-//! sign votes, or 8-bit quantized differences), billed by its own
-//! [`WirePayload::wire_bytes`] so accounting and data path cannot
+//! sign votes, 8-bit quantized differences, or layout-aware 8-bit
+//! differences with one scale per parameter segment), billed by its
+//! own [`WirePayload::wire_bytes`] so accounting and data path cannot
 //! drift. [`codec`] holds the byte formats: sign vectors pack at
 //! 1 bit/coordinate (32× vs f32), the IEEE sign bit is kept
 //! (`+0 → +1`, `-0 → -1`), and decoding always yields ±1 — the wire has
 //! no zero symbol, so a tied majority tally resolves to +1 everywhere;
-//! the i8 format quantizes each rank's local difference against a
-//! per-message scale. [`votes`] is the *data path* over the 1-bit
-//! format: workers produce [`PackedVotes`] and the server runs
+//! the i8 formats quantize each rank's local difference against a
+//! per-message scale (`q8`) or against one scale per segment of the
+//! backend's validated [`crate::runtime::ParamLayout`] (`q8pt`, 4 extra
+//! bytes per segment — the fix for parameter blocks whose diff
+//! magnitudes differ by orders of magnitude). [`Worker`] carries that
+//! same layout, so per-segment slice views come straight off a rank
+//! ([`Worker::param_segments`]). [`votes`] is the *data path* over the
+//! 1-bit format: workers produce [`PackedVotes`] and the server runs
 //! [`votes::majority_vote_packed`], a word-level popcount tally that
 //! never unpacks to f32 and is bitwise-identical to
 //! [`collectives::majority_vote`] over the decoded votes

@@ -2,14 +2,16 @@
 //! simulated wire at a communication round.
 //!
 //! Every outer optimizer's worker→server exchange is a [`WirePayload`]
-//! — full-precision parameters, packed 1-bit sign votes, or 8-bit
-//! quantized differences — and the clock bills the payload's own
-//! [`WirePayload::wire_bytes`] ([`crate::comm::SimClock::charge_exchange`]).
-//! Because the billed object IS the exchanged object, the accounting
-//! and the data path cannot diverge: there is no per-optimizer flag
-//! left to choose a byte formula from, and adding a format means adding
-//! a variant here (its byte cost and topology come with it) rather than
-//! a new `if` in the trainer.
+//! — full-precision parameters, packed 1-bit sign votes, 8-bit
+//! quantized differences, or **layout-aware** 8-bit differences with
+//! one scale per parameter segment — and the clock bills the payload's
+//! own [`WirePayload::wire_bytes`]
+//! ([`crate::comm::SimClock::charge_exchange`]). Because the billed
+//! object IS the exchanged object, the accounting and the data path
+//! cannot diverge: there is no per-optimizer flag left to choose a byte
+//! formula from, and adding a format means adding a variant here (its
+//! byte cost and topology come with it) rather than a new `if` in the
+//! trainer.
 //!
 //! # Formats
 //!
@@ -17,7 +19,8 @@
 //! |---|---|---|---|
 //! | [`WireFormat::DenseF32`] | rank's end parameters `x_{t,τ}^{(i)}` | `4P` | ring all-reduce |
 //! | [`WireFormat::PackedSigns`] | 1-bit randomized sign votes | `⌈P/8⌉ + 8` | gather + broadcast |
-//! | [`WireFormat::QuantizedI8`] | i8-quantized local difference | `P + 12` | gather + broadcast |
+//! | [`WireFormat::QuantizedI8`] | i8-quantized local difference, one scale | `P + 12` | gather + broadcast |
+//! | [`WireFormat::QuantizedI8PerTensor`] | i8-quantized difference, one scale per layout segment | `P + 8 + 4S` | gather + broadcast |
 //!
 //! A mean over dense payloads is ring-reducible, so `DenseF32` keeps
 //! the classic α-β ring model. Neither a majority tally nor a
@@ -26,27 +29,50 @@
 //! different scales requires dequantizing first), so the compressed
 //! formats bill the practical server topology — a flat gather of the
 //! n−1 rank payloads plus a binomial-tree broadcast of the result. At
-//! the default n = 4 the q8 exchange beats dense on both the latency
-//! and bandwidth terms; at large n the linear gather overtakes the
-//! saturating ring — an honest tradeoff the comm-tradeoff example
+//! the default n = 4 the quantized exchanges beat dense on both the
+//! latency and bandwidth terms; at large n the linear gather overtakes
+//! the saturating ring — an honest tradeoff the comm-tradeoff example
 //! tabulates.
+//!
+//! # The layout contract (`q8pt`)
+//!
+//! The per-message `q8` format pays one quantization scale for the
+//! whole vector, so the segment with the largest difference magnitude
+//! sets everyone's resolution — GPT-2 blocks (embeddings, attention,
+//! MLP, layernorm) differ by orders of magnitude, and the small-moving
+//! blocks round to garbage. `QuantizedI8PerTensor` carries the
+//! backend's validated [`ParamLayout`]
+//! ([`crate::runtime::StepBackend::layout`]) and quantizes each named
+//! segment against its own scale ([`super::codec::quantize_diff_slice`])
+//! for 4 extra wire bytes per segment. Under a one-segment layout it is
+//! **bitwise-identical** to `q8` (same arithmetic, same bytes modulo
+//! the identical 4-byte scale frame) — the golden tests in
+//! `rust/tests/layout_wire.rs` pin both that identity and the error
+//! reduction on hetero-magnitude layouts.
+
+use std::sync::Arc;
 
 use super::codec;
 use super::collectives;
 use super::votes::PackedVotes;
+use crate::comm::CommModel;
+use crate::runtime::ParamLayout;
 
 /// Construction-time name of a [`WirePayload`] variant: what a config
-/// file selects (`wire = "dense" | "packed_signs" | "q8"`) and what the
-/// trainer sizes its persistent per-rank buffers with.
+/// file selects (`wire = "dense" | "packed_signs" | "q8" | "q8pt"`) and
+/// what the trainer sizes its persistent per-rank buffers with.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WireFormat {
     /// Full-precision f32 parameters (the classic exchange).
     DenseF32,
     /// 1-bit sign votes ([`codec::pack_signs`], Algorithm 6's wire).
     PackedSigns,
-    /// 8-bit symmetric-quantized local differences
-    /// ([`codec::quantize_diff_into`]).
+    /// 8-bit symmetric-quantized local differences, one per-message
+    /// scale ([`codec::quantize_diff_into`]).
     QuantizedI8,
+    /// 8-bit symmetric-quantized local differences with one scale per
+    /// [`ParamLayout`] segment ([`codec::quantize_diff_slice`]).
+    QuantizedI8PerTensor,
 }
 
 impl WireFormat {
@@ -56,6 +82,7 @@ impl WireFormat {
             "dense" | "f32" => Some(WireFormat::DenseF32),
             "packed_signs" | "signs" | "1bit" => Some(WireFormat::PackedSigns),
             "q8" | "i8" | "quantized_i8" => Some(WireFormat::QuantizedI8),
+            "q8pt" | "q8_per_tensor" | "i8pt" => Some(WireFormat::QuantizedI8PerTensor),
             _ => None,
         }
     }
@@ -66,16 +93,21 @@ impl WireFormat {
             WireFormat::DenseF32 => "dense",
             WireFormat::PackedSigns => "packed_signs",
             WireFormat::QuantizedI8 => "q8",
+            WireFormat::QuantizedI8PerTensor => "q8pt",
         }
     }
 
-    /// Bytes one message of `len` coordinates puts on the wire in this
-    /// format (what a sized [`WirePayload`] will report).
-    pub fn wire_bytes(&self, len: usize) -> u64 {
+    /// Bytes one message of `len` coordinates in this format puts on
+    /// the wire (what a sized [`WirePayload`] will report). `segments`
+    /// is the parameter-layout segment count — it only affects the
+    /// per-tensor format (one extra f32 scale each); pass 1 for
+    /// layout-less analysis.
+    pub fn wire_bytes(&self, len: usize, segments: usize) -> u64 {
         match self {
             WireFormat::DenseF32 => len as u64 * 4,
             WireFormat::PackedSigns => codec::sign_allreduce_bytes(len),
             WireFormat::QuantizedI8 => codec::q8_bytes(len),
+            WireFormat::QuantizedI8PerTensor => codec::q8pt_bytes(len, segments),
         }
     }
 
@@ -85,6 +117,23 @@ impl WireFormat {
     /// (see the module docs).
     pub fn ring_reducible(&self) -> bool {
         matches!(self, WireFormat::DenseF32)
+    }
+
+    /// Modeled seconds of one round exchange of `len` coordinates over
+    /// a `segments`-segment layout under `m` — the ONE place the
+    /// byte-count × topology rule lives for analytical re-costing.
+    /// [`crate::comm::SimClock::charge_exchange`] makes the identical
+    /// choice off the payload (ring for the ring-reducible dense
+    /// format, gather+broadcast otherwise), so tables re-costed through
+    /// this helper cannot drift from what the clock actually billed
+    /// (pinned by `exchange_time_matches_the_clock_topology`).
+    pub fn exchange_time(&self, m: &CommModel, n: usize, len: usize, segments: usize) -> f64 {
+        let bytes = self.wire_bytes(len, segments);
+        if self.ring_reducible() {
+            m.allreduce_time(n, bytes)
+        } else {
+            m.gather_time(n, bytes) + m.broadcast_time(n, bytes)
+        }
     }
 }
 
@@ -106,15 +155,32 @@ pub enum WirePayload {
         /// One two's-complement i8 per coordinate.
         bytes: Vec<u8>,
     },
+    /// The rank's local difference `start - end`, quantized to i8 with
+    /// one scale per segment of the parameter layout
+    /// ([`codec::quantize_diff_slice`] per segment). The layout rides
+    /// in the payload (shared, not serialized: the byte cost counts the
+    /// scales, the segment boundaries are part of the static
+    /// backend↔trainer contract both ends already hold).
+    QuantizedI8PerTensor {
+        /// The validated segment layout the scales follow.
+        layout: Arc<ParamLayout>,
+        /// Symmetric quantization step per segment
+        /// (`max |diff over segment| / 127` each).
+        scales: Vec<f32>,
+        /// One two's-complement i8 per coordinate.
+        bytes: Vec<u8>,
+    },
 }
 
 impl WirePayload {
     /// A zeroed payload of `len` coordinates in `format` — the initial
     /// state of the trainer's persistent buffers. Its
     /// [`wire_bytes`](Self::wire_bytes) is already final: the byte cost
-    /// is a function of (format, len) only, never of the packed
+    /// is a function of (format, len, layout) only, never of the packed
     /// contents, which is what lets the clock bill a round before the
-    /// ranks pack into it.
+    /// ranks pack into it. The per-tensor format gets the one-segment
+    /// fallback layout here; use [`WirePayload::with_layout`] to size
+    /// it from a real backend layout.
     pub fn with_len(format: WireFormat, len: usize) -> WirePayload {
         match format {
             WireFormat::DenseF32 => WirePayload::DenseF32(vec![0.0; len]),
@@ -122,6 +188,25 @@ impl WirePayload {
             WireFormat::QuantizedI8 => {
                 WirePayload::QuantizedI8 { scale: 0.0, bytes: vec![0; len] }
             }
+            WireFormat::QuantizedI8PerTensor => {
+                WirePayload::with_layout(format, &Arc::new(ParamLayout::single(len)))
+            }
+        }
+    }
+
+    /// A zeroed payload sized from a parameter layout — how the trainer
+    /// builds its persistent buffers
+    /// ([`crate::runtime::StepBackend::layout`]). Only the per-tensor
+    /// format actually stores the layout (one scale slot per segment);
+    /// every other format just takes its coordinate count.
+    pub fn with_layout(format: WireFormat, layout: &Arc<ParamLayout>) -> WirePayload {
+        match format {
+            WireFormat::QuantizedI8PerTensor => WirePayload::QuantizedI8PerTensor {
+                scales: vec![0.0; layout.len()],
+                bytes: vec![0; layout.param_count()],
+                layout: Arc::clone(layout),
+            },
+            other => WirePayload::with_len(other, layout.param_count()),
         }
     }
 
@@ -130,6 +215,7 @@ impl WirePayload {
             WirePayload::DenseF32(_) => WireFormat::DenseF32,
             WirePayload::PackedSigns(_) => WireFormat::PackedSigns,
             WirePayload::QuantizedI8 { .. } => WireFormat::QuantizedI8,
+            WirePayload::QuantizedI8PerTensor { .. } => WireFormat::QuantizedI8PerTensor,
         }
     }
 
@@ -139,6 +225,7 @@ impl WirePayload {
             WirePayload::DenseF32(v) => v.len(),
             WirePayload::PackedSigns(p) => p.len(),
             WirePayload::QuantizedI8 { bytes, .. } => bytes.len(),
+            WirePayload::QuantizedI8PerTensor { bytes, .. } => bytes.len(),
         }
     }
 
@@ -148,12 +235,16 @@ impl WirePayload {
 
     /// Total bytes this message puts on the wire — the number the clock
     /// bills. By construction equal to
-    /// `self.format().wire_bytes(self.len())`.
+    /// `self.format().wire_bytes(self.len(), segments)` with `segments`
+    /// the payload's own scale count.
     pub fn wire_bytes(&self) -> u64 {
         match self {
             WirePayload::DenseF32(v) => v.len() as u64 * 4,
             WirePayload::PackedSigns(p) => p.wire_bytes(),
             WirePayload::QuantizedI8 { bytes, .. } => codec::q8_bytes(bytes.len()),
+            WirePayload::QuantizedI8PerTensor { scales, bytes, .. } => {
+                codec::q8pt_bytes(bytes.len(), scales.len())
+            }
         }
     }
 
@@ -178,18 +269,38 @@ impl WirePayload {
         }
     }
 
+    /// The parameter layout a per-tensor payload was sized with.
+    pub fn layout(&self) -> Option<&Arc<ParamLayout>> {
+        match self {
+            WirePayload::QuantizedI8PerTensor { layout, .. } => Some(layout),
+            _ => None,
+        }
+    }
+
+    /// The per-segment scales of a per-tensor payload (or the single
+    /// per-message scale of a `q8` payload).
+    pub fn scales(&self) -> Option<&[f32]> {
+        match self {
+            WirePayload::QuantizedI8 { scale, .. } => Some(std::slice::from_ref(scale)),
+            WirePayload::QuantizedI8PerTensor { scales, .. } => Some(scales),
+            _ => None,
+        }
+    }
+
     /// Worker-side packing shared by every dense-exchange outer
     /// optimizer: fill this payload with rank's end-of-round state in
     /// the payload's own format — the parameters themselves for
-    /// `DenseF32`, the quantized difference `start - end` for
-    /// `QuantizedI8`. Buffer capacity is reused; no allocation in
-    /// steady state.
+    /// `DenseF32`, the quantized difference `start - end` for the
+    /// quantized formats (one scale per message for `QuantizedI8`, one
+    /// per layout segment for `QuantizedI8PerTensor`). Buffer capacity
+    /// is reused; no allocation in steady state.
     ///
     /// # Panics
     ///
     /// On a `PackedSigns` buffer: a dense parameter exchange has no
     /// 1-bit encoding (config validation keeps this combination from
-    /// ever being built — [`crate::config::RunConfig::validate`]).
+    /// ever being built — [`crate::config::RunConfig::validate`]). On a
+    /// per-tensor buffer whose layout does not tile `start.len()`.
     pub fn pack_end(&mut self, start: &[f32], end: &[f32]) {
         match self {
             WirePayload::DenseF32(buf) => {
@@ -198,6 +309,23 @@ impl WirePayload {
             }
             WirePayload::QuantizedI8 { scale, bytes } => {
                 *scale = codec::quantize_diff_into(start, end, bytes);
+            }
+            WirePayload::QuantizedI8PerTensor { layout, scales, bytes } => {
+                assert_eq!(
+                    start.len(),
+                    layout.param_count(),
+                    "pack_end: {} coordinates vs a layout tiling {}",
+                    start.len(),
+                    layout.param_count()
+                );
+                for (e, s) in layout.entries().iter().zip(scales.iter_mut()) {
+                    let r = e.offset..e.offset + e.numel();
+                    *s = codec::quantize_diff_slice(
+                        &start[r.clone()],
+                        &end[r.clone()],
+                        &mut bytes[r],
+                    );
+                }
             }
             WirePayload::PackedSigns(_) => {
                 panic!("a dense parameter exchange cannot pack into a packed_signs payload")
@@ -233,13 +361,18 @@ impl WirePayload {
     /// * `QuantizedI8` — `start - mean_i(dequantize(payload_i))`: each
     ///   rank's difference decodes with its own scale, is averaged in
     ///   f64 in rank order, and re-anchors at the round start.
+    /// * `QuantizedI8PerTensor` — same arithmetic, but each coordinate
+    ///   decodes with its **segment's** scale. Iteration is segment-
+    ///   major in layout (= coordinate) order, so with a one-segment
+    ///   layout the accumulation order — and hence the result — is
+    ///   bitwise-identical to `QuantizedI8`.
     ///
     /// # Panics
     ///
     /// On `PackedSigns` payloads (a majority tally has no mean end
     /// point — tally them with
-    /// [`crate::dist::votes::majority_vote_packed`]), on mixed formats,
-    /// or on length mismatches.
+    /// [`crate::dist::votes::majority_vote_packed`]), on mixed formats
+    /// or mixed layouts, or on length mismatches.
     pub fn mean_end_into(payloads: &[WirePayload], start: &[f32], out: &mut [f32]) {
         assert!(!payloads.is_empty(), "exchange over zero workers");
         for (i, p) in payloads.iter().enumerate() {
@@ -274,6 +407,38 @@ impl WirePayload {
                     *o = start[i] - (acc * inv_n) as f32;
                 }
             }
+            WirePayload::QuantizedI8PerTensor { .. } => {
+                assert_eq!(start.len(), out.len(), "start length {} != output", start.len());
+                let WirePayload::QuantizedI8PerTensor { layout, .. } = &payloads[0] else {
+                    unreachable!("format checked above")
+                };
+                // a layout tiling fewer coordinates than the payload
+                // carries would leave out's tail stale below — reject
+                // inconsistent hand-built payloads loudly instead
+                assert_eq!(
+                    layout.param_count(),
+                    out.len(),
+                    "payload layout tiles {} of {} coordinates",
+                    layout.param_count(),
+                    out.len()
+                );
+                for (i, p) in payloads.iter().enumerate() {
+                    assert_eq!(p.layout(), Some(layout), "worker {i}: mixed parameter layouts");
+                }
+                let inv_n = 1.0f64 / payloads.len() as f64;
+                for (si, e) in layout.entries().iter().enumerate() {
+                    for i in e.offset..e.offset + e.numel() {
+                        let mut acc = 0.0f64;
+                        for p in payloads {
+                            let WirePayload::QuantizedI8PerTensor { scales, bytes, .. } = p else {
+                                unreachable!("format checked above")
+                            };
+                            acc += codec::dequantize_i8(bytes[i], scales[si]) as f64;
+                        }
+                        out[i] = start[i] - (acc * inv_n) as f32;
+                    }
+                }
+            }
             WirePayload::PackedSigns(_) => {
                 panic!("packed sign votes have no mean end point; run the majority tally")
             }
@@ -285,32 +450,66 @@ impl WirePayload {
 mod tests {
     use super::*;
 
+    const ALL_FORMATS: [WireFormat; 4] = [
+        WireFormat::DenseF32,
+        WireFormat::PackedSigns,
+        WireFormat::QuantizedI8,
+        WireFormat::QuantizedI8PerTensor,
+    ];
+
+    fn two_segment_layout(a: usize, b: usize) -> Arc<ParamLayout> {
+        use crate::runtime::ParamEntry;
+        let entries = vec![
+            ParamEntry { name: "lo".into(), offset: 0, shape: vec![a] },
+            ParamEntry { name: "hi".into(), offset: a, shape: vec![b] },
+        ];
+        Arc::new(ParamLayout::from_entries(entries, a + b).unwrap())
+    }
+
     #[test]
     fn with_len_builds_sized_zeroed_payloads_in_every_format() {
-        for format in [WireFormat::DenseF32, WireFormat::PackedSigns, WireFormat::QuantizedI8] {
+        for format in ALL_FORMATS {
             let p = WirePayload::with_len(format, 37);
             assert_eq!(p.format(), format);
             assert_eq!(p.len(), 37);
             assert!(!p.is_empty());
-            assert_eq!(p.wire_bytes(), format.wire_bytes(37), "{}", format.name());
+            assert_eq!(p.wire_bytes(), format.wire_bytes(37, 1), "{}", format.name());
             assert!(WirePayload::with_len(format, 0).is_empty());
         }
     }
 
     #[test]
+    fn with_layout_sizes_per_tensor_payloads_from_the_layout() {
+        let layout = two_segment_layout(5, 11);
+        for format in ALL_FORMATS {
+            let p = WirePayload::with_layout(format, &layout);
+            assert_eq!(p.format(), format);
+            assert_eq!(p.len(), 16, "{}", format.name());
+        }
+        let pt = WirePayload::with_layout(WireFormat::QuantizedI8PerTensor, &layout);
+        assert_eq!(pt.scales().unwrap().len(), 2);
+        assert_eq!(pt.layout(), Some(&layout));
+        assert_eq!(pt.wire_bytes(), WireFormat::QuantizedI8PerTensor.wire_bytes(16, 2));
+        // one scale more than the per-message format
+        assert_eq!(pt.wire_bytes(), WireFormat::QuantizedI8.wire_bytes(16, 1) + 4);
+    }
+
+    #[test]
     fn wire_bytes_match_the_codec_models() {
         let p = 1 << 20;
-        assert_eq!(WireFormat::DenseF32.wire_bytes(p), p as u64 * 4);
-        assert_eq!(WireFormat::PackedSigns.wire_bytes(p), codec::sign_allreduce_bytes(p));
-        assert_eq!(WireFormat::QuantizedI8.wire_bytes(p), codec::q8_bytes(p));
+        assert_eq!(WireFormat::DenseF32.wire_bytes(p, 1), p as u64 * 4);
+        assert_eq!(WireFormat::PackedSigns.wire_bytes(p, 1), codec::sign_allreduce_bytes(p));
+        assert_eq!(WireFormat::QuantizedI8.wire_bytes(p, 1), codec::q8_bytes(p));
+        assert_eq!(WireFormat::QuantizedI8PerTensor.wire_bytes(p, 7), codec::q8pt_bytes(p, 7));
     }
 
     #[test]
     fn parse_and_name_round_trip() {
-        for format in [WireFormat::DenseF32, WireFormat::PackedSigns, WireFormat::QuantizedI8] {
+        for format in ALL_FORMATS {
             assert_eq!(WireFormat::parse(format.name()), Some(format));
         }
         assert_eq!(WireFormat::parse("q8"), Some(WireFormat::QuantizedI8));
+        assert_eq!(WireFormat::parse("q8pt"), Some(WireFormat::QuantizedI8PerTensor));
         assert_eq!(WireFormat::parse("1bit"), Some(WireFormat::PackedSigns));
         assert_eq!(WireFormat::parse("warpdrive"), None);
     }
@@ -320,6 +519,28 @@ mod tests {
         assert!(WireFormat::DenseF32.ring_reducible());
         assert!(!WireFormat::PackedSigns.ring_reducible());
         assert!(!WireFormat::QuantizedI8.ring_reducible());
+        assert!(!WireFormat::QuantizedI8PerTensor.ring_reducible());
+    }
+
+    #[test]
+    fn exchange_time_matches_the_clock_topology() {
+        // the analytical re-costing helper and the clock's payload
+        // billing must agree exactly, format by format
+        use crate::comm::SimClock;
+        use crate::util::rng::Rng;
+        let m = CommModel {
+            latency_s: 1e-3,
+            bandwidth_bps: 1e6,
+            straggler_sigma: 0.0,
+            straggler_scale_s: 0.0,
+        };
+        for format in ALL_FORMATS {
+            let payload = WirePayload::with_len(format, 1000);
+            let mut clock = SimClock::default();
+            clock.charge_exchange(&m, 4, &payload, &mut Rng::new(1));
+            let t = format.exchange_time(&m, 4, 1000, 1);
+            assert!((clock.comm_s - t).abs() < 1e-15, "{}", format.name());
+        }
     }
 
     #[test]
@@ -366,20 +587,53 @@ mod tests {
     }
 
     #[test]
+    fn q8pt_per_segment_scales_resolve_hetero_magnitudes() {
+        // segment "lo" moves by ~1e-3, segment "hi" by ~1.0: one shared
+        // scale (q8) rounds the small segment to nothing, per-tensor
+        // scales keep it. This is the format's reason to exist; the
+        // pinned numeric version lives in rust/tests/layout_wire.rs.
+        let layout = two_segment_layout(4, 4);
+        let start = vec![0.0f32; 8];
+        #[rustfmt::skip]
+        let end = vec![
+            -1e-3f32, -5e-4, 1e-3, -7.5e-4, // lo: tiny diffs
+            -1.0, 0.5, -0.25, 1.0,          // hi: large diffs
+        ];
+        let mut pt = WirePayload::with_layout(WireFormat::QuantizedI8PerTensor, &layout);
+        pt.pack_end(&start, &end);
+        let scales = pt.scales().unwrap().to_vec();
+        assert!(scales[0] < scales[1] / 100.0, "{scales:?}");
+        let mut avg = vec![0.0f32; 8];
+        WirePayload::mean_end_into(std::slice::from_ref(&pt), &start, &mut avg);
+        // every coordinate decodes within half its segment's step
+        for (j, (a, e)) in avg.iter().zip(&end).enumerate() {
+            let step = scales[j / 4];
+            assert!((a - e).abs() <= step / 2.0 + 1e-7, "coord {j}: {a} vs {e}");
+        }
+        // and the tiny segment survived (q8 would have zeroed it)
+        assert!(avg[0] != 0.0 && avg[2] != 0.0, "{avg:?}");
+    }
+
+    #[test]
     fn q8_exchange_with_zero_difference_is_exact() {
         let start = vec![0.5f32, -3.0, 7.0];
-        let mut p = WirePayload::with_len(WireFormat::QuantizedI8, 3);
-        p.pack_end(&start, &start);
-        let mut avg = vec![9.0f32; 3];
-        WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut avg);
-        assert_eq!(avg, start);
+        for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor] {
+            let mut p = WirePayload::with_len(format, 3);
+            p.pack_end(&start, &start);
+            let mut avg = vec![9.0f32; 3];
+            WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut avg);
+            assert_eq!(avg, start, "{}", format.name());
+        }
     }
 
     #[test]
     fn pack_end_reuses_buffers_across_rounds() {
         let start = vec![1.0f32; 256];
         let end = vec![0.75f32; 256];
-        for format in [WireFormat::DenseF32, WireFormat::QuantizedI8] {
+        for format in ALL_FORMATS {
+            if format == WireFormat::PackedSigns {
+                continue; // votes pack through pack_sign_votes instead
+            }
             let mut p = WirePayload::with_len(format, 256);
             p.pack_end(&start, &end);
             let bytes_before = p.wire_bytes();
@@ -406,6 +660,14 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "layout tiling")]
+    fn per_tensor_pack_with_wrong_dimension_panics() {
+        let layout = two_segment_layout(4, 4);
+        let mut p = WirePayload::with_layout(WireFormat::QuantizedI8PerTensor, &layout);
+        p.pack_end(&[0.0; 6], &[1.0; 6]);
+    }
+
+    #[test]
     #[should_panic(expected = "majority tally")]
     fn mean_over_sign_votes_panics() {
         let payloads = vec![WirePayload::with_len(WireFormat::PackedSigns, 8)];
@@ -422,5 +684,17 @@ mod tests {
         ];
         let mut out = vec![0.0f32; 4];
         WirePayload::mean_end_into(&payloads, &[0.0; 4], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "mixed parameter layouts")]
+    fn mixed_layouts_panic() {
+        let pt = WireFormat::QuantizedI8PerTensor;
+        let payloads = vec![
+            WirePayload::with_layout(pt, &two_segment_layout(4, 4)),
+            WirePayload::with_layout(pt, &two_segment_layout(2, 6)),
+        ];
+        let mut out = vec![0.0f32; 8];
+        WirePayload::mean_end_into(&payloads, &[0.0; 8], &mut out);
     }
 }

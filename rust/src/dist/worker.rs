@@ -1,7 +1,12 @@
 //! One simulated data-parallel worker: local iterate, base-optimizer
-//! state, private RNG substream, and per-round loss bookkeeping.
+//! state, private RNG substream, per-round loss bookkeeping — and the
+//! parameter layout its flat vector follows, so per-segment views come
+//! straight off the rank.
+
+use std::sync::Arc;
 
 use crate::optim::{BaseOptConfig, BaseOptimizer};
+use crate::runtime::ParamLayout;
 use crate::util::rng::Rng;
 
 /// The state of rank `i` in the simulated fleet. Fields are public:
@@ -21,22 +26,29 @@ pub struct Worker {
     pub rng: Rng,
     /// Local base optimizer (AdamW / SGD / Lion / Sophia).
     pub opt: Box<dyn BaseOptimizer>,
+    /// The backend's validated parameter layout
+    /// ([`crate::runtime::StepBackend::layout`]): how `params` and
+    /// `last_grad` tile into named segments. Shared across the fleet —
+    /// every rank of a run follows the same layout.
+    pub layout: Arc<ParamLayout>,
     loss_acc: f64,
     loss_n: u64,
 }
 
 impl Worker {
-    /// Build rank `id` over a `p`-dimensional parameter vector. The RNG
-    /// is derived as `root.substream("worker", id)`, so a fleet rebuilt
-    /// from the same root seed is bit-identical and distinct ranks get
-    /// disjoint streams.
-    pub fn new(id: usize, p: usize, base: &BaseOptConfig, root: &Rng) -> Worker {
+    /// Build rank `id` over the parameter vector `layout` tiles. The
+    /// RNG is derived as `root.substream("worker", id)`, so a fleet
+    /// rebuilt from the same root seed is bit-identical and distinct
+    /// ranks get disjoint streams.
+    pub fn new(id: usize, layout: Arc<ParamLayout>, base: &BaseOptConfig, root: &Rng) -> Worker {
+        let p = layout.param_count();
         Worker {
             id,
             params: vec![0.0; p],
             last_grad: vec![0.0; p],
             rng: root.substream("worker", id as u64),
             opt: base.build(p),
+            layout,
             loss_acc: 0.0,
             loss_n: 0,
         }
@@ -45,6 +57,17 @@ impl Worker {
     /// Parameter-vector dimension P.
     pub fn dim(&self) -> usize {
         self.params.len()
+    }
+
+    /// `(name, slice)` views of this rank's iterate, one per layout
+    /// segment, in offset order.
+    pub fn param_segments(&self) -> Vec<(&str, &[f32])> {
+        self.layout.segments_of(&self.params)
+    }
+
+    /// `(name, slice)` views of this rank's last local gradient.
+    pub fn grad_segments(&self) -> Vec<(&str, &[f32])> {
+        self.layout.segments_of(&self.last_grad)
     }
 
     /// Record one local step: accumulate the loss for this round's
@@ -84,7 +107,7 @@ mod tests {
     use super::*;
 
     fn worker(p: usize) -> Worker {
-        Worker::new(0, p, &BaseOptConfig::sgd_plain(), &Rng::new(7))
+        Worker::new(0, Arc::new(ParamLayout::single(p)), &BaseOptConfig::sgd_plain(), &Rng::new(7))
     }
 
     #[test]
@@ -94,6 +117,34 @@ mod tests {
         assert_eq!(w.params, vec![0.0; 16]);
         assert_eq!(w.last_grad, vec![0.0; 16]);
         assert_eq!(w.id, 0);
+        assert_eq!(w.layout.param_count(), 16);
+    }
+
+    #[test]
+    fn segment_views_follow_the_layout() {
+        use crate::runtime::ParamEntry;
+        let layout = Arc::new(
+            ParamLayout::from_entries(
+                vec![
+                    ParamEntry { name: "embed".into(), offset: 0, shape: vec![2, 3] },
+                    ParamEntry { name: "out".into(), offset: 6, shape: vec![2] },
+                ],
+                8,
+            )
+            .unwrap(),
+        );
+        let mut w = Worker::new(1, layout, &BaseOptConfig::sgd_plain(), &Rng::new(7));
+        for (i, p) in w.params.iter_mut().enumerate() {
+            *p = i as f32;
+        }
+        let segs = w.param_segments();
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].0, "embed");
+        assert_eq!(segs[0].1, &w.params[0..6]);
+        assert_eq!(segs[1].0, "out");
+        assert_eq!(segs[1].1, &[6.0f32, 7.0][..]);
+        w.observe(1.0, &[0.5; 8]);
+        assert_eq!(w.grad_segments()[1].1, &[0.5f32, 0.5][..]);
     }
 
     #[test]
@@ -119,9 +170,10 @@ mod tests {
     fn workers_get_disjoint_deterministic_rng_substreams() {
         let root = Rng::new(42);
         let base = BaseOptConfig::sgd_plain();
-        let mut a0 = Worker::new(0, 4, &base, &root);
-        let mut a0b = Worker::new(0, 4, &base, &root);
-        let mut a1 = Worker::new(1, 4, &base, &root);
+        let layout = Arc::new(ParamLayout::single(4));
+        let mut a0 = Worker::new(0, layout.clone(), &base, &root);
+        let mut a0b = Worker::new(0, layout.clone(), &base, &root);
+        let mut a1 = Worker::new(1, layout, &base, &root);
         let draw = |w: &mut Worker| -> Vec<u64> { (0..4).map(|_| w.rng.next_u64()).collect() };
         let s0 = draw(&mut a0);
         assert_eq!(s0, draw(&mut a0b), "same (root, id) must give the same stream");

@@ -84,6 +84,9 @@ impl Harness {
                     final_val,
                     best_val: log.best_val_loss().unwrap_or(final_val),
                     log,
+                    // per-segment norms are not serialized into the
+                    // cache CSV; cached summaries report none
+                    segment_norms: Vec::new(),
                 });
             }
         }
@@ -112,6 +115,7 @@ impl Harness {
             final_val: res.final_val,
             best_val: res.best_val,
             log: res.log,
+            segment_norms: res.segment_norms,
         })
     }
 }
@@ -122,6 +126,10 @@ pub struct RunSummary {
     pub final_val: f64,
     pub best_val: f64,
     pub log: RunLog,
+    /// Per-segment norms of the run's last-round global update
+    /// ([`crate::train::Trainer::segment_norms`]); empty when the
+    /// summary came from the CSV cache.
+    pub segment_norms: Vec<crate::train::metrics::SegmentNorm>,
 }
 
 /// Bump whenever the *models* behind a run change (comm topology,
@@ -131,8 +139,11 @@ pub struct RunSummary {
 /// typed WirePayload exchange landed (wire format now in the key via
 /// `describe()`) and MV-sto-signSGD's update anchors at x_t per the
 /// literal Algorithm 6 recursion (ROADMAP (g)) — pre-fix MV CSVs are
-/// stale.
-const CACHE_MODEL_VERSION: &str = "v3";
+/// stale. v4: the parameter layout became load-bearing (validated
+/// `ParamLayout`, layout-sized payload buffers, the per-tensor `q8pt`
+/// wire) — pre-layout CSVs must never be mixed into comm-savings
+/// tables that now carry per-segment rows.
+const CACHE_MODEL_VERSION: &str = "v4";
 
 /// Content hash of everything that determines a run's trajectory.
 /// `cfg.sequential_workers` is deliberately excluded: the parallel and

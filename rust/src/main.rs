@@ -41,7 +41,7 @@ repro — Distributed Sign Momentum (Yu et al. 2024) training system
 USAGE:
   repro train   [--config run.toml] [--preset P] [--workers N] [--tau K]
                 [--rounds T] [--outer ALGO] [--global-lr F] [--peak-lr F]
-                [--wire dense|packed_signs|q8] [--mode local|standalone]
+                [--wire dense|packed_signs|q8|q8pt] [--mode local|standalone]
                 [--comm PRESET] [--seed S]
                 [--pallas-global-step] [--sequential-workers]
                 [--log-dir DIR] [--checkpoint F] [--resume F]

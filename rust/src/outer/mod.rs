@@ -23,22 +23,26 @@
 //!
 //! | optimizer | paper algorithm | wire formats | bytes / rank message |
 //! |---|---|---|---|
-//! | [`SignMomentum`] | Algorithm 1 (eqs. 6-8) | `dense` (default), `q8` | `4P` / `P + 12` |
-//! | [`SlowMo`] | Algorithm 5 (Wang et al. 2019) | `dense` (default), `q8` | `4P` / `P + 12` |
-//! | [`SignedSlowMo`] | §4.1 ablation | `dense` (default), `q8` | `4P` / `P + 12` |
-//! | [`Lookahead`] (± signed) | Tables 4-5 (n = 1) | `dense` (default), `q8` | `4P` / `P + 12` |
-//! | [`GlobalAdamW`] | Algorithm 7 | `dense` (default), `q8` | `4P` / `P + 12` |
-//! | [`LocalAvg`] | "Local AdamW" (Fig. 3) | `dense` (default), `q8` | `4P` / `P + 12` |
+//! | [`SignMomentum`] | Algorithm 1 (eqs. 6-8) | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
+//! | [`SlowMo`] | Algorithm 5 (Wang et al. 2019) | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
+//! | [`SignedSlowMo`] | §4.1 ablation | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
+//! | [`Lookahead`] (± signed) | Tables 4-5 (n = 1) | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
+//! | [`GlobalAdamW`] | Algorithm 7 | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
+//! | [`LocalAvg`] | "Local AdamW" (Fig. 3) | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
 //! | [`MvSignSgd`] | Algorithm 6 (Sun et al. 2023) | `packed_signs` only | `⌈P/8⌉ + 8` |
+//!
+//! (`S` = segment count of the backend's parameter layout,
+//! [`crate::runtime::StepBackend::layout`].)
 //!
 //! The dense-exchange methods all reconstruct the round's average end
 //! point from the payloads ([`WirePayload::mean_end_into`]) and then
 //! run their own elementwise update, which is why every one of them
-//! supports the `q8` format for free: selecting `wire = "q8"` in the
-//! `[outer]` config table swaps the payload variant, nothing else.
-//! MV-sto-signSGD's exchange *is* the 1-bit majority vote, so it pins
-//! `packed_signs` ([`crate::config::RunConfig::validate`] rejects the
-//! rest).
+//! supports the quantized formats for free: selecting `wire = "q8"` or
+//! the layout-aware `wire = "q8pt"` (one quantization scale per
+//! parameter segment) in the `[outer]` config table swaps the payload
+//! variant, nothing else. MV-sto-signSGD's exchange *is* the 1-bit
+//! majority vote, so it pins `packed_signs`
+//! ([`crate::config::RunConfig::validate`] rejects the rest).
 //!
 //! All operate on the flat `f32[P]` vector; every implementation is
 //! cross-checked against the jnp/Pallas references where one exists
@@ -81,6 +85,25 @@ pub struct WorkerView<'a> {
     /// This rank's last local stochastic gradient (Algorithm 6's
     /// momentum input).
     pub last_grad: &'a [f32],
+    /// The backend's validated parameter layout
+    /// ([`crate::runtime::StepBackend::layout`]): how `start`/`end`
+    /// tile into named segments. Layout-aware payloads carry it
+    /// themselves, so `contribute` rarely touches this — it exists so
+    /// segment-resolved consumers (metrics, future per-tensor top-k
+    /// formats) see the same contract the wire does.
+    pub layout: &'a crate::runtime::ParamLayout,
+}
+
+impl<'a> WorkerView<'a> {
+    /// Segment `i` of the round's start point.
+    pub fn segment_start(&self, i: usize) -> &'a [f32] {
+        self.layout.slice_of(i, self.start)
+    }
+
+    /// Segment `i` of this rank's end-of-round parameters.
+    pub fn segment_end(&self, i: usize) -> &'a [f32] {
+        self.layout.slice_of(i, self.end)
+    }
 }
 
 /// Server-side context for [`OuterOptimizer::apply`]. Deliberately
@@ -203,13 +226,18 @@ impl OuterConfig {
     }
 
     /// The wire formats this optimizer can exchange. Every
-    /// dense-exchange method also speaks `q8` (the payload mean
-    /// reconstructs the average end point either way); MV-sto-signSGD's
+    /// dense-exchange method also speaks `q8` and the layout-aware
+    /// `q8pt` (the payload mean reconstructs the average end point
+    /// whatever the quantization granularity); MV-sto-signSGD's
     /// exchange is definitionally the 1-bit vote.
     pub fn supported_wires(&self) -> &'static [WireFormat] {
         match self {
             OuterConfig::MvSignSgd { .. } => &[WireFormat::PackedSigns],
-            _ => &[WireFormat::DenseF32, WireFormat::QuantizedI8],
+            _ => &[
+                WireFormat::DenseF32,
+                WireFormat::QuantizedI8,
+                WireFormat::QuantizedI8PerTensor,
+            ],
         }
     }
 
@@ -334,7 +362,8 @@ pub fn run_synthetic_round(
     let end: Vec<f32> = start.iter().zip(diff).map(|(&s, &d)| s - d).collect();
     // expose the applied difference as the "last local gradient" so
     // gradient-momentum methods (Alg. 6) also see a consistent signal
-    let view = WorkerView { start: &start, end: &end, last_grad: diff };
+    let layout = crate::runtime::ParamLayout::single(start.len());
+    let view = WorkerView { start: &start, end: &end, last_grad: diff, layout: &layout };
     let mut rng = Rng::new(round ^ 0xABCD);
     let mut payload = WirePayload::with_len(opt.wire(), start.len());
     opt.contribute(0, 1, &view, &mut rng, &mut payload);
@@ -403,6 +432,21 @@ mod tests {
     }
 
     #[test]
+    fn worker_view_exposes_segment_slices() {
+        use crate::runtime::{ParamEntry, ParamLayout};
+        let entries = vec![
+            ParamEntry { name: "a".into(), offset: 0, shape: vec![3] },
+            ParamEntry { name: "b".into(), offset: 3, shape: vec![1] },
+        ];
+        let layout = ParamLayout::from_entries(entries, 4).unwrap();
+        let start = [1.0f32, 2.0, 3.0, 4.0];
+        let end = [0.5f32, 1.5, 2.5, 3.5];
+        let view = WorkerView { start: &start, end: &end, last_grad: &end, layout: &layout };
+        assert_eq!(view.segment_start(0), &start[..3]);
+        assert_eq!(view.segment_end(1), &end[3..]);
+    }
+
+    #[test]
     fn names_are_stable() {
         assert_eq!(OuterConfig::LocalAvg.name(), "local_avg");
         assert_eq!(
@@ -427,6 +471,11 @@ mod tests {
         ] {
             assert_eq!(cfg.default_wire(), WireFormat::DenseF32, "{}", cfg.name());
             assert!(cfg.supported_wires().contains(&WireFormat::QuantizedI8), "{}", cfg.name());
+            assert!(
+                cfg.supported_wires().contains(&WireFormat::QuantizedI8PerTensor),
+                "{}",
+                cfg.name()
+            );
             assert_eq!(cfg.build(4).wire(), WireFormat::DenseF32, "{}", cfg.name());
         }
     }
@@ -489,6 +538,7 @@ mod tests {
             let ends: Vec<Vec<f32>> = (0..3)
                 .map(|w| (0..d).map(|i| start[i] - 0.01 * ((w + i) as f32).cos()).collect())
                 .collect();
+            let layout = crate::runtime::ParamLayout::single(d);
             let mut rng = crate::util::rng::Rng::new(5);
 
             // path A: n = 3 payloads through the contract
@@ -496,7 +546,7 @@ mod tests {
             let mut payloads: Vec<WirePayload> =
                 (0..3).map(|_| WirePayload::with_len(WireFormat::DenseF32, d)).collect();
             for (w, end) in ends.iter().enumerate() {
-                let view = WorkerView { start: &start, end, last_grad: end };
+                let view = WorkerView { start: &start, end, last_grad: end, layout: &layout };
                 a.contribute(w, 3, &view, &mut rng, &mut payloads[w]);
             }
             let ctx = RoundCtx { start: &start, gamma: 0.1, round: 0 };
@@ -508,7 +558,7 @@ mod tests {
             collectives::allreduce_mean(&ends, |e| e.as_slice(), &mut mean);
             let mut b = cfg.build(d);
             let mut single = WirePayload::with_len(WireFormat::DenseF32, d);
-            let view = WorkerView { start: &start, end: &mean, last_grad: &mean };
+            let view = WorkerView { start: &start, end: &mean, last_grad: &mean, layout: &layout };
             b.contribute(0, 1, &view, &mut rng, &mut single);
             let mut gb = start.clone();
             b.apply(&mut gb, &ctx, std::slice::from_ref(&single), &mut rng).unwrap();
@@ -519,24 +569,27 @@ mod tests {
         }
     }
 
-    /// The q8 payload path runs the same update off a slightly
+    /// The quantized payload paths run the same update off a slightly
     /// quantized average: the result must track the dense path within
-    /// the quantization error, not bit-for-bit.
+    /// the quantization error, not bit-for-bit — for both the
+    /// per-message and the per-tensor scale granularity.
     #[test]
-    fn q8_apply_tracks_dense_apply_for_dense_methods() {
+    fn quantized_apply_tracks_dense_apply_for_dense_methods() {
         let d = 32;
         for cfg in [OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 }, OuterConfig::LocalAvg] {
             let start: Vec<f32> = (0..d).map(|i| (i as f32 * 0.3).cos()).collect();
             let ends: Vec<Vec<f32>> = (0..4)
                 .map(|w| (0..d).map(|i| start[i] - 0.05 * ((w + i) as f32).sin()).collect())
                 .collect();
+            let layout = crate::runtime::ParamLayout::single(d);
             let run = |format: WireFormat| -> Vec<f32> {
                 let mut opt = cfg.build(d);
                 let mut rng = crate::util::rng::Rng::new(11);
                 let mut payloads: Vec<WirePayload> =
                     (0..4).map(|_| WirePayload::with_len(format, d)).collect();
                 for (w, end) in ends.iter().enumerate() {
-                    let view = WorkerView { start: &start, end, last_grad: end };
+                    let view =
+                        WorkerView { start: &start, end, last_grad: end, layout: &layout };
                     opt.contribute(w, 4, &view, &mut rng, &mut payloads[w]);
                 }
                 let ctx = RoundCtx { start: &start, gamma: 0.1, round: 0 };
@@ -545,11 +598,18 @@ mod tests {
                 g
             };
             let dense = run(WireFormat::DenseF32);
-            let q8 = run(WireFormat::QuantizedI8);
             // max quantization error per rank: scale/2 = max|diff|/254
             // ≈ 2e-4 here; SlowMo amplifies by alpha = 1
-            for (j, (a, b)) in dense.iter().zip(&q8).enumerate() {
-                assert!((a - b).abs() < 5e-3, "{}: coord {j}: {a} vs {b}", cfg.name());
+            for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor] {
+                let quant = run(format);
+                for (j, (a, b)) in dense.iter().zip(&quant).enumerate() {
+                    assert!(
+                        (a - b).abs() < 5e-3,
+                        "{} over {}: coord {j}: {a} vs {b}",
+                        cfg.name(),
+                        format.name()
+                    );
+                }
             }
         }
     }

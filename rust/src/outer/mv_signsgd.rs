@@ -218,8 +218,9 @@ mod tests {
         let n = grads.len();
         let buf = WirePayload::with_len(WireFormat::PackedSigns, start.len());
         let mut payloads: Vec<WirePayload> = vec![buf; n];
+        let layout = crate::runtime::ParamLayout::single(start.len());
         for (w, grad) in grads.iter().enumerate() {
-            let view = WorkerView { start, end: start, last_grad: grad };
+            let view = WorkerView { start, end: start, last_grad: grad, layout: &layout };
             opt.contribute(w, n, &view, rng, &mut payloads[w]);
         }
         let ctx = RoundCtx { start, gamma: 0.1, round };

@@ -1,26 +1,21 @@
 //! Manifest loader: the contract between `make artifacts` (python) and
 //! the Rust runtime.
+//!
+//! The parameter layout is validated **here, at load time** — a
+//! malformed `param_layout` (gaps, overlaps, wrong total, duplicate
+//! names, unparsable entries) is a real error instead of a silently
+//! empty layout, and a manifest that omits the layout degrades to the
+//! documented single-segment fallback ([`ParamLayout::single`]).
+//! Everything above the runtime therefore receives a [`ParamLayout`]
+//! whose invariants already hold.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::layout::{ParamEntry, ParamLayout};
 use crate::util::json::Json;
-
-/// One named tensor inside the flat parameter vector.
-#[derive(Clone, Debug, PartialEq)]
-pub struct ParamEntry {
-    pub name: String,
-    pub offset: usize,
-    pub shape: Vec<usize>,
-}
-
-impl ParamEntry {
-    pub fn numel(&self) -> usize {
-        self.shape.iter().product()
-    }
-}
 
 /// Static description of one AOT'd model preset.
 #[derive(Clone, Debug)]
@@ -36,7 +31,9 @@ pub struct PresetInfo {
     pub init_file: PathBuf,
     pub train_file: PathBuf,
     pub eval_file: PathBuf,
-    pub layout: Vec<ParamEntry>,
+    /// Validated segment layout of the flat parameter vector
+    /// (manifest `param_layout`, or the single-segment fallback).
+    pub layout: ParamLayout,
 }
 
 impl PresetInfo {
@@ -95,26 +92,11 @@ impl Artifacts {
                 }
                 Ok(path)
             };
-            let layout = entry
-                .get("param_layout")
-                .and_then(Json::as_arr)
-                .map(|arr| {
-                    arr.iter()
-                        .filter_map(|e| {
-                            Some(ParamEntry {
-                                name: e.get("name")?.as_str()?.to_string(),
-                                offset: e.get("offset")?.as_usize()?,
-                                shape: e
-                                    .get("shape")?
-                                    .as_arr()?
-                                    .iter()
-                                    .filter_map(Json::as_usize)
-                                    .collect(),
-                            })
-                        })
-                        .collect::<Vec<_>>()
-                })
-                .unwrap_or_default();
+            let param_count = entry
+                .get("param_count")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("{name}: param_count missing"))?;
+            let layout = parse_layout(name, entry, param_count)?;
             presets.insert(
                 name.clone(),
                 PresetInfo {
@@ -125,10 +107,7 @@ impl Artifacts {
                     n_layer: u("n_layer")?,
                     seq: u("seq")?,
                     batch: u("batch")?,
-                    param_count: entry
-                        .get("param_count")
-                        .and_then(Json::as_usize)
-                        .ok_or_else(|| anyhow!("{name}: param_count missing"))?,
+                    param_count,
                     init_file: file("init")?,
                     train_file: file("train")?,
                     eval_file: file("eval")?,
@@ -172,24 +151,67 @@ impl Artifacts {
         })
     }
 
-    /// Consistency invariant: layout offsets must tile [0, param_count).
+    /// Post-load consistency sweep (`repro inspect manifest`). The
+    /// layout invariants are proven at construction —
+    /// [`ParamLayout::from_entries`] runs during [`Artifacts::load`],
+    /// so `layout.param_count() == param_count` always holds by the
+    /// time an `Artifacts` exists. What CAN still go stale afterwards
+    /// is the filesystem: re-check that every referenced artifact file
+    /// is still present.
     pub fn validate(&self) -> Result<()> {
+        let check = |kind: &str, path: &Path| -> Result<()> {
+            anyhow::ensure!(path.exists(), "{kind} artifact {path:?} is missing");
+            Ok(())
+        };
         for (name, p) in &self.presets {
-            let mut entries = p.layout.clone();
-            entries.sort_by_key(|e| e.offset);
-            let mut off = 0;
-            for e in &entries {
-                if e.offset != off {
-                    bail!("{name}: layout gap at {off} (entry {} at {})", e.name, e.offset);
-                }
-                off += e.numel();
-            }
-            if off != p.param_count {
-                bail!("{name}: layout covers {off} of {} params", p.param_count);
-            }
+            check(&format!("{name}: init"), &p.init_file)?;
+            check(&format!("{name}: train"), &p.train_file)?;
+            check(&format!("{name}: eval"), &p.eval_file)?;
         }
+        check("sign_update", &self.sign_update_file)?;
         Ok(())
     }
+}
+
+/// Parse one preset's `param_layout` into a validated [`ParamLayout`].
+///
+/// Absent key → the single-segment fallback. Present key → every entry
+/// must parse (an unparsable entry is an error, not a silently dropped
+/// one) and the whole list must tile `[0, param_count)`.
+fn parse_layout(name: &str, entry: &Json, param_count: usize) -> Result<ParamLayout> {
+    // only an ABSENT key gets the fallback; a declared layout — even
+    // `[]` or a wrong-typed value — must validate (an explicitly empty
+    // list of a non-empty vector errors in `from_entries`, by design)
+    let Some(raw) = entry.get("param_layout") else {
+        return Ok(ParamLayout::single(param_count));
+    };
+    let arr = raw
+        .as_arr()
+        .ok_or_else(|| anyhow!("{name}: param_layout must be an array of entries"))?;
+    let mut entries = Vec::with_capacity(arr.len());
+    for (i, e) in arr.iter().enumerate() {
+        let parsed = parse_entry(e).ok_or_else(|| {
+            anyhow!("{name}: param_layout[{i}] malformed (needs name, offset, shape)")
+        })?;
+        entries.push(parsed);
+    }
+    ParamLayout::from_entries(entries, param_count)
+        .with_context(|| format!("{name}: invalid param_layout"))
+}
+
+/// One `param_layout` element; `None` when any field is missing or of
+/// the wrong type (the caller turns that into a named error).
+fn parse_entry(e: &Json) -> Option<ParamEntry> {
+    let raw = e.get("shape")?.as_arr()?;
+    let shape: Vec<usize> = raw.iter().filter_map(Json::as_usize).collect();
+    if shape.len() != raw.len() {
+        return None;
+    }
+    Some(ParamEntry {
+        name: e.get("name")?.as_str()?.to_string(),
+        offset: e.get("offset")?.as_usize()?,
+        shape,
+    })
 }
 
 #[cfg(test)]
@@ -214,13 +236,126 @@ mod tests {
         assert_eq!(nano.seq, 64);
         assert!(nano.param_count > 100_000);
         assert!(nano.layout.iter().any(|e| e.name == "wte"));
+        assert_eq!(nano.layout.param_count(), nano.param_count);
         assert!(arts.sign_update_chunk >= 4096);
         assert!(arts.preset("nonexistent").is_err());
     }
 
+    // ---- synthetic-manifest tests: load-time layout validation ----
+
+    /// Write a minimal one-preset manifest (plus the dummy artifact
+    /// files its loader checks for) whose `param_layout` value is
+    /// spliced in verbatim; `""` omits the key entirely.
+    fn write_manifest(dir: &Path, param_count: usize, layout_json: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        for f in ["a.hlo", "sign.hlo"] {
+            std::fs::write(dir.join(f), "dummy").unwrap();
+        }
+        let layout_field = if layout_json.is_empty() {
+            String::new()
+        } else {
+            format!(", \"param_layout\": {layout_json}")
+        };
+        let manifest = format!(
+            "{{\"version\": 1, \
+              \"sign_update\": {{\"file\": \"sign.hlo\", \"chunk\": 8192}}, \
+              \"presets\": {{\"t\": {{\
+                \"config\": {{\"vocab\": 256, \"d_model\": 4, \"n_head\": 1, \
+                             \"n_layer\": 1, \"seq\": 8, \"batch\": 2}}, \
+                \"param_count\": {param_count}, \
+                \"artifacts\": {{\"init\": {{\"file\": \"a.hlo\"}}, \
+                                \"train\": {{\"file\": \"a.hlo\"}}, \
+                                \"eval\": {{\"file\": \"a.hlo\"}}}}\
+                {layout_field}}}}}}}"
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dsm_artifacts_{tag}"))
+    }
+
     #[test]
-    fn param_entry_numel() {
-        let e = ParamEntry { name: "x".into(), offset: 0, shape: vec![3, 4, 5] };
-        assert_eq!(e.numel(), 60);
+    fn missing_layout_falls_back_to_single_segment() {
+        let dir = tmp("fallback");
+        write_manifest(&dir, 12, "");
+        let arts = Artifacts::load(&dir).unwrap();
+        let p = arts.preset("t").unwrap();
+        assert_eq!(p.layout, ParamLayout::single(12));
+        assert_eq!(p.layout.len(), 1);
+        arts.validate().unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn valid_layout_loads_and_is_offset_sorted() {
+        let dir = tmp("valid");
+        // entries out of order on purpose: the loader sorts by offset
+        write_manifest(
+            &dir,
+            12,
+            "[{\"name\": \"out\", \"offset\": 8, \"shape\": [4]}, \
+              {\"name\": \"embed\", \"offset\": 0, \"shape\": [2, 4]}]",
+        );
+        let arts = Artifacts::load(&dir).unwrap();
+        let p = arts.preset("t").unwrap();
+        assert_eq!(p.layout.len(), 2);
+        assert_eq!(p.layout.entries()[0].name, "embed");
+        assert_eq!(p.layout.range(1), 8..12);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn malformed_layouts_fail_at_load_time() {
+        // gap between segments
+        let dir = tmp("gap");
+        write_manifest(
+            &dir,
+            12,
+            "[{\"name\": \"a\", \"offset\": 0, \"shape\": [4]}, \
+              {\"name\": \"b\", \"offset\": 6, \"shape\": [6]}]",
+        );
+        let err = Artifacts::load(&dir).err().expect("gap layout must fail").to_string();
+        assert!(err.contains("param_layout"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // total does not cover param_count
+        let dir = tmp("total");
+        write_manifest(&dir, 12, "[{\"name\": \"a\", \"offset\": 0, \"shape\": [4]}]");
+        assert!(Artifacts::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+
+        // unparsable entry (offset missing) is an error, not dropped
+        let dir = tmp("unparsable");
+        write_manifest(&dir, 12, "[{\"name\": \"a\", \"shape\": [12]}]");
+        let err = Artifacts::load(&dir).err().expect("bad entry must fail").to_string();
+        assert!(err.contains("malformed"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // a DECLARED-but-empty layout is an error (only an absent key
+        // gets the single-segment fallback)
+        let dir = tmp("declared_empty");
+        write_manifest(&dir, 12, "[]");
+        let err = Artifacts::load(&dir).err().expect("empty layout must fail").to_string();
+        assert!(err.contains("param_layout"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // ...and so is a declared layout of the wrong type
+        let dir = tmp("wrong_type");
+        write_manifest(&dir, 12, "{\"wte\": 1}");
+        let err = Artifacts::load(&dir).err().expect("non-array layout must fail").to_string();
+        assert!(err.contains("must be an array"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn validate_catches_artifact_files_vanishing_after_load() {
+        let dir = tmp("vanish");
+        write_manifest(&dir, 12, "");
+        let arts = Artifacts::load(&dir).unwrap();
+        arts.validate().unwrap();
+        std::fs::remove_file(dir.join("a.hlo")).unwrap();
+        assert!(arts.validate().is_err(), "missing artifact file must fail validate()");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -1,0 +1,217 @@
+//! The parameter-layout contract: how one flat `f32[P]` vector tiles
+//! into named tensor segments — and the validation that makes every
+//! layer above the backend safe to trust it.
+//!
+//! The paper's method runs on a GPT-2 parameter vector whose blocks
+//! (embeddings, attention, MLP, layernorm) have wildly different
+//! difference magnitudes.  [`ParamLayout`] is the one place that fact
+//! is represented: a **validated** list of [`ParamEntry`] segments that
+//! must tile `[0, P)` contiguously, in offset order, with unique
+//! non-empty names.  Construction is the proof — a `ParamLayout` in
+//! hand means the invariants hold, so consumers index slices without
+//! re-checking:
+//!
+//! * [`crate::runtime::StepBackend::layout`] — every backend advertises
+//!   its layout (the manifest's `param_layout` for PJRT bundles, the
+//!   built-in per-block segments for [`crate::runtime::NativeBundle`]);
+//!   a manifest that omits the layout degrades to the documented
+//!   [`ParamLayout::single`] fallback, a malformed one is a load error.
+//! * [`crate::dist::WirePayload::QuantizedI8PerTensor`] — the `q8pt`
+//!   wire format quantizes each segment against its own scale.
+//! * [`crate::dist::Worker`] / [`crate::outer::WorkerView`] — per-rank
+//!   state exposes per-segment slice views.
+//! * [`crate::train::metrics::segment_norms`] — per-segment
+//!   update/diff norms for the comm-savings tables.
+
+use anyhow::{bail, Result};
+
+/// One named tensor inside the flat parameter vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamEntry {
+    pub name: String,
+    pub offset: usize,
+    pub shape: Vec<usize>,
+}
+
+impl ParamEntry {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// A validated parameter layout: named segments tiling `[0, P)`.
+///
+/// Invariants (checked by [`ParamLayout::from_entries`], assumed
+/// everywhere else): entries are in offset order, each begins exactly
+/// where the previous one ends, the first begins at 0, the total count
+/// equals `param_count`, and names are unique and non-empty.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamLayout {
+    entries: Vec<ParamEntry>,
+    param_count: usize,
+}
+
+impl ParamLayout {
+    /// Validate `entries` as a layout of a `param_count`-dimensional
+    /// vector. Entries may arrive in any order (they are sorted by
+    /// offset); any gap, overlap, total mismatch, duplicate or empty
+    /// name is a real error — the silent-acceptance path this replaces
+    /// let malformed manifests through as "no layout".
+    pub fn from_entries(mut entries: Vec<ParamEntry>, param_count: usize) -> Result<ParamLayout> {
+        entries.sort_by_key(|e| e.offset);
+        let mut seen = std::collections::BTreeSet::new();
+        let mut off = 0usize;
+        for e in &entries {
+            if e.name.is_empty() {
+                bail!("layout entry at offset {} has an empty name", e.offset);
+            }
+            if !seen.insert(e.name.clone()) {
+                bail!("duplicate layout entry `{}`", e.name);
+            }
+            if e.offset != off {
+                bail!(
+                    "layout gap/overlap at offset {off}: entry `{}` starts at {}",
+                    e.name,
+                    e.offset
+                );
+            }
+            off += e.numel();
+        }
+        if off != param_count {
+            bail!("layout covers {off} of {param_count} params");
+        }
+        Ok(ParamLayout { entries, param_count })
+    }
+
+    /// The degenerate one-segment layout — the documented fallback for
+    /// manifests that omit `param_layout`, and the layout under which
+    /// per-tensor quantization is definitionally identical to the
+    /// per-message `q8` format.
+    pub fn single(param_count: usize) -> ParamLayout {
+        ParamLayout {
+            entries: vec![ParamEntry {
+                name: "params".to_string(),
+                offset: 0,
+                shape: vec![param_count],
+            }],
+            param_count,
+        }
+    }
+
+    /// Total coordinates the layout tiles (the flat vector's P).
+    pub fn param_count(&self) -> usize {
+        self.param_count
+    }
+
+    /// Number of segments.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entries(&self) -> &[ParamEntry] {
+        &self.entries
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, ParamEntry> {
+        self.entries.iter()
+    }
+
+    /// Coordinate range of segment `i` in the flat vector.
+    pub fn range(&self, i: usize) -> std::ops::Range<usize> {
+        let e = &self.entries[i];
+        e.offset..e.offset + e.numel()
+    }
+
+    /// Segment `i` of a flat vector laid out by this layout.
+    pub fn slice_of<'v>(&self, i: usize, v: &'v [f32]) -> &'v [f32] {
+        &v[self.range(i)]
+    }
+
+    /// `(name, slice)` views of every segment of `v`, in offset order.
+    /// `v.len()` must equal [`ParamLayout::param_count`].
+    pub fn segments_of<'s, 'v>(&'s self, v: &'v [f32]) -> Vec<(&'s str, &'v [f32])> {
+        assert_eq!(
+            v.len(),
+            self.param_count,
+            "vector has {} coordinates, layout tiles {}",
+            v.len(),
+            self.param_count
+        );
+        self.entries
+            .iter()
+            .map(|e| (e.name.as_str(), &v[e.offset..e.offset + e.numel()]))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, offset: usize, shape: &[usize]) -> ParamEntry {
+        ParamEntry { name: name.into(), offset, shape: shape.to_vec() }
+    }
+
+    #[test]
+    fn param_entry_numel() {
+        assert_eq!(entry("x", 0, &[3, 4, 5]).numel(), 60);
+        assert_eq!(entry("scalar-ish", 0, &[]).numel(), 1);
+    }
+
+    #[test]
+    fn valid_layout_constructs_and_sorts() {
+        // entries deliberately out of offset order
+        let entries = vec![entry("b", 6, &[2, 2]), entry("a", 0, &[2, 3])];
+        let l = ParamLayout::from_entries(entries, 10).unwrap();
+        assert_eq!(l.len(), 2);
+        assert_eq!(l.param_count(), 10);
+        assert_eq!(l.entries()[0].name, "a");
+        assert_eq!(l.range(0), 0..6);
+        assert_eq!(l.range(1), 6..10);
+        let v: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        assert_eq!(l.slice_of(1, &v), &v[6..10]);
+        let segs = l.segments_of(&v);
+        assert_eq!(segs.len(), 2);
+        assert_eq!(segs[0].0, "a");
+        assert_eq!(segs[1].1, &v[6..10]);
+    }
+
+    #[test]
+    fn gaps_overlaps_and_totals_are_errors() {
+        // gap: second entry starts at 7, first ends at 6
+        let gap = vec![entry("a", 0, &[6]), entry("b", 7, &[3])];
+        assert!(ParamLayout::from_entries(gap, 10).is_err());
+        // overlap: second entry starts inside the first
+        let overlap = vec![entry("a", 0, &[6]), entry("b", 4, &[6])];
+        assert!(ParamLayout::from_entries(overlap, 10).is_err());
+        // total mismatch
+        assert!(ParamLayout::from_entries(vec![entry("a", 0, &[6])], 10).is_err());
+        // first entry must start at zero
+        assert!(ParamLayout::from_entries(vec![entry("a", 2, &[8])], 10).is_err());
+        // declared-but-empty layout of a non-empty vector
+        assert!(ParamLayout::from_entries(Vec::new(), 10).is_err());
+    }
+
+    #[test]
+    fn names_must_be_unique_and_non_empty() {
+        let dup = vec![entry("a", 0, &[4]), entry("a", 4, &[4])];
+        assert!(ParamLayout::from_entries(dup, 8).is_err());
+        assert!(ParamLayout::from_entries(vec![entry("", 0, &[8])], 8).is_err());
+    }
+
+    #[test]
+    fn single_segment_fallback_tiles_everything() {
+        let l = ParamLayout::single(37);
+        assert_eq!(l.len(), 1);
+        assert_eq!(l.param_count(), 37);
+        assert_eq!(l.range(0), 0..37);
+        assert_eq!(l.entries()[0].name, "params");
+        // and it round-trips through the validator
+        let rebuilt = ParamLayout::from_entries(l.entries().to_vec(), 37).unwrap();
+        assert_eq!(rebuilt, l);
+    }
+}

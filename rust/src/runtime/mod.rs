@@ -4,7 +4,15 @@
 //! client and provides typed wrappers:
 //!
 //! * [`Artifacts`] — parses `artifacts/manifest.json` (shapes, parameter
-//!   layout, file index) via the in-tree JSON substrate.
+//!   layout, file index) via the in-tree JSON substrate; the layout is
+//!   **validated at load time** into a [`ParamLayout`].
+//! * [`ParamLayout`] — the parameter-layout contract: named segments
+//!   tiling the flat `f32[P]` vector, proven contiguous/sorted/complete
+//!   at construction. Every backend advertises one
+//!   ([`StepBackend::layout`]); the layout-aware wire format
+//!   (`q8pt`, [`crate::dist::WirePayload::QuantizedI8PerTensor`]),
+//!   per-segment worker views, and the per-segment metrics all consume
+//!   it without re-checking.
 //! * [`ModelBundle`] — init/train/eval executables for one model preset
 //!   with `Vec<f32>`-level ergonomics (flat params ABI).
 //! * [`SignUpdateKernel`] — the AOT'd fused Pallas sign-momentum kernel,
@@ -12,7 +20,10 @@
 //! * [`StepBackend`] — the compute contract the trainer drives
 //!   (`Send + Sync`: the parallel worker fleet shares one backend
 //!   across pool threads); implemented by [`ModelBundle`] and by
-//!   [`NativeBundle`], a pure-Rust MLP LM that needs no PJRT at all.
+//!   [`NativeBundle`], a pure-Rust backend (one-hidden-layer MLP LM, or
+//!   a true multi-layer transformer via [`NativeBundle::transformer`])
+//!   that needs no PJRT at all and whose transformer layout has
+//!   per-block named segments.
 //!
 //! Interchange is HLO *text*: jax ≥ 0.5 emits 64-bit instruction ids that
 //! xla_extension 0.5.1's proto path rejects; the text parser reassigns
@@ -20,11 +31,13 @@
 
 mod artifacts;
 mod bundle;
+mod layout;
 mod native;
 mod sign_kernel;
 
-pub use artifacts::{Artifacts, ParamEntry, PresetInfo};
+pub use artifacts::{Artifacts, PresetInfo};
 pub use bundle::{ModelBundle, StepOutput};
+pub use layout::{ParamEntry, ParamLayout};
 pub use native::NativeBundle;
 pub use sign_kernel::{SignUpdateKernel, SignUpdateScalars};
 
@@ -50,6 +63,16 @@ use crate::data::dataset::Batch;
 pub trait StepBackend: Send + Sync {
     /// Static model description (shapes, parameter count, preset name).
     fn info(&self) -> &PresetInfo;
+
+    /// The validated parameter layout the flat `f32[P]` vector follows
+    /// — the contract consumed by the layout-aware wire format, the
+    /// per-segment worker views, and the per-segment metrics. Already
+    /// proven contiguous/sorted/complete at construction
+    /// ([`ParamLayout::from_entries`]): `layout().param_count()` always
+    /// equals `info().param_count`.
+    fn layout(&self) -> &ParamLayout {
+        &self.info().layout
+    }
 
     /// Deterministic parameter initialization: seed -> flat f32[P].
     fn init_params(&self, seed: u32) -> Result<Vec<f32>>;

@@ -1,17 +1,20 @@
-//! Native (pure-Rust) [`StepBackend`]: a one-hidden-layer MLP language
-//! model with exact gradients, no PJRT required.
+//! Native (pure-Rust) [`StepBackend`]s with exact gradients and no PJRT
+//! required: a one-hidden-layer MLP language model
+//! ([`NativeBundle::new`]) and a true multi-layer transformer byte LM
+//! ([`NativeBundle::transformer`]).
 //!
-//! The AOT'd GPT-2 artifacts need a real PJRT backend; this in-tree
-//! fallback gives every trainer-level code path — the parallel worker
-//! fleet, checkpoint resume, the simulated clock, all outer optimizers —
-//! a fully deterministic compute engine that runs anywhere the crate
-//! builds. Differential tests (`rust/tests/parallel_fleet.rs`) and the
-//! trainer bench (`benches/trainer.rs`, which records sequential- vs
-//! parallel-fleet round wall-clock) drive the trainer through it.
+//! The AOT'd GPT-2 artifacts need a real PJRT backend; these in-tree
+//! fallbacks give every trainer-level code path — the parallel worker
+//! fleet, checkpoint resume, the simulated clock, all outer optimizers,
+//! every wire format — a fully deterministic compute engine that runs
+//! anywhere the crate builds. Differential tests
+//! (`rust/tests/parallel_fleet.rs`) and the trainer bench
+//! (`benches/trainer.rs`) drive the trainer through them.
 //!
-//! The model is deliberately simple but *real*: per position, a tanh
-//! hidden layer over a byte embedding followed by a softmax over the
-//! 256-way vocabulary,
+//! # MLP architecture ([`NativeBundle::new`])
+//!
+//! Per position, a tanh hidden layer over a byte embedding followed by
+//! a softmax over the 256-way vocabulary,
 //!
 //! ```text
 //!     h = tanh(E[x])          E: 256 × D   (embedding)
@@ -19,46 +22,82 @@
 //!     loss = CE(softmax(z), y)
 //! ```
 //!
-//! with exact backward passes for both matrices. Compute per step is
-//! O(B·S·D·256) — enough arithmetic that the per-round fleet fan-out
-//! has something to parallelize. Every operation is scalar f32/f64
-//! with a fixed accumulation order, so `train_step` is bit-deterministic
-//! for a given (params, batch) on a given host — the property the
+//! # Transformer architecture ([`NativeBundle::transformer`])
+//!
+//! A GPT-shaped byte LM: token + learned position embeddings, then
+//! `n_layer` pre-norm-free residual blocks of single-head causal
+//! attention and a tanh MLP, then a linear head:
+//!
+//! ```text
+//!     X₀[t]   = Etok[x_t] + Epos[t]
+//!     per block l:
+//!       Q,K,V = X Wq, X Wk, X Wv                 (D × D each)
+//!       A[t,·]= softmax(Q[t]·K[u≤t] / √D)        (causal)
+//!       X     = X + (A V) Wo                     (attention + residual)
+//!       X     = X + tanh(X W1) W2                (MLP + residual, F = 4D)
+//!     logits[t] = X[t] · Wout                    (D × 256)
+//! ```
+//!
+//! with exact hand-derived backward passes through the head, both
+//! residual branches of every block (including the causal-softmax
+//! attention), and both embedding tables — finite-difference-tested
+//! across every segment in the unit tests below. Its [`ParamLayout`]
+//! has per-block named segments (`block{l}.attn.wq`, `block{l}.mlp.w1`,
+//! ...), which makes layouts non-trivial offline: the per-tensor `q8pt`
+//! wire format and the per-segment metrics have something real to
+//! resolve without PJRT artifacts.
+//!
+//! Every operation is scalar f32 with a fixed accumulation order (loss
+//! accumulates in f64), so both architectures are bit-deterministic for
+//! a given (params, batch) on a given host — the property the
 //! parallel ≡ sequential differential tests pin.
 
 use anyhow::Result;
 
-use super::{PresetInfo, StepBackend, StepOutput};
+use super::{ParamEntry, ParamLayout, PresetInfo, StepBackend, StepOutput};
 use crate::data::dataset::Batch;
 use crate::util::rng::Rng;
 
 const VOCAB: usize = 256;
 
-/// Pure-Rust MLP LM backend. Stateless across steps (all state lives in
+/// Which forward/backward pair a [`NativeBundle`] runs.
+enum Arch {
+    /// The original 2-matrix tanh-MLP LM (bit-identical to the
+    /// pre-transformer `NativeBundle` — existing presets and their
+    /// golden trajectories are untouched).
+    Mlp,
+    /// `n_layer` blocks of single-head causal attention + tanh MLP with
+    /// residual streams; `d_ff` is the MLP hidden width (4·D).
+    Transformer { n_layer: usize, d_ff: usize },
+}
+
+/// Pure-Rust LM backend. Stateless across steps (all state lives in
 /// the flat parameter vector), hence trivially `Send + Sync`.
 pub struct NativeBundle {
     info: PresetInfo,
     d_model: usize,
+    arch: Arch,
+}
+
+fn push_entry(entries: &mut Vec<ParamEntry>, off: &mut usize, name: String, shape: Vec<usize>) {
+    let numel: usize = shape.iter().product();
+    entries.push(ParamEntry { name, offset: *off, shape });
+    *off += numel;
 }
 
 impl NativeBundle {
-    /// Build a native backend whose [`PresetInfo`] advertises
-    /// `param_count = 2 · 256 · d_model` (embedding + output matrices).
+    /// Build the MLP backend whose [`PresetInfo`] advertises
+    /// `param_count = 2 · 256 · d_model` (embedding + output matrices)
+    /// over a two-segment layout (`native.embed`, `native.out`).
     pub fn new(name: &str, batch: usize, seq: usize, d_model: usize) -> NativeBundle {
         assert!(d_model >= 1 && batch >= 1 && seq >= 1);
         let param_count = 2 * VOCAB * d_model;
-        let layout = vec![
-            super::ParamEntry {
-                name: "native.embed".into(),
-                offset: 0,
-                shape: vec![VOCAB, d_model],
-            },
-            super::ParamEntry {
-                name: "native.out".into(),
-                offset: VOCAB * d_model,
-                shape: vec![d_model, VOCAB],
-            },
-        ];
+        let mut entries = Vec::new();
+        let mut off = 0usize;
+        push_entry(&mut entries, &mut off, "native.embed".into(), vec![VOCAB, d_model]);
+        push_entry(&mut entries, &mut off, "native.out".into(), vec![d_model, VOCAB]);
+        let layout = ParamLayout::from_entries(entries, param_count)
+            .expect("MLP layout is tiled by construction");
         NativeBundle {
             info: PresetInfo {
                 name: name.to_string(),
@@ -75,6 +114,63 @@ impl NativeBundle {
                 layout,
             },
             d_model,
+            arch: Arch::Mlp,
+        }
+    }
+
+    /// Build the multi-layer transformer backend (see the module docs
+    /// for the architecture). Its layout tiles
+    ///
+    /// ```text
+    ///   embed.tok [256, D] | embed.pos [S, D]
+    ///   | per block l: block{l}.attn.{wq,wk,wv,wo} [D, D],
+    ///                  block{l}.mlp.w1 [D, 4D], block{l}.mlp.w2 [4D, D]
+    ///   | head.out [D, 256]
+    /// ```
+    ///
+    /// so `param_count = 256·D + S·D + n_layer·(4D² + 8D²) + 256·D`.
+    pub fn transformer(
+        name: &str,
+        batch: usize,
+        seq: usize,
+        d_model: usize,
+        n_layer: usize,
+    ) -> NativeBundle {
+        assert!(d_model >= 1 && batch >= 1 && seq >= 1 && n_layer >= 1);
+        let d = d_model;
+        let d_ff = 4 * d;
+        let mut entries = Vec::new();
+        let mut off = 0usize;
+        push_entry(&mut entries, &mut off, "embed.tok".into(), vec![VOCAB, d]);
+        push_entry(&mut entries, &mut off, "embed.pos".into(), vec![seq, d]);
+        for l in 0..n_layer {
+            for w in ["wq", "wk", "wv", "wo"] {
+                push_entry(&mut entries, &mut off, format!("block{l}.attn.{w}"), vec![d, d]);
+            }
+            push_entry(&mut entries, &mut off, format!("block{l}.mlp.w1"), vec![d, d_ff]);
+            push_entry(&mut entries, &mut off, format!("block{l}.mlp.w2"), vec![d_ff, d]);
+        }
+        push_entry(&mut entries, &mut off, "head.out".into(), vec![d, VOCAB]);
+        let param_count = off;
+        let layout = ParamLayout::from_entries(entries, param_count)
+            .expect("transformer layout is tiled by construction");
+        NativeBundle {
+            info: PresetInfo {
+                name: name.to_string(),
+                vocab: VOCAB,
+                d_model,
+                n_head: 1,
+                n_layer,
+                seq,
+                batch,
+                param_count,
+                init_file: std::path::PathBuf::new(),
+                train_file: std::path::PathBuf::new(),
+                eval_file: std::path::PathBuf::new(),
+                layout,
+            },
+            d_model,
+            arch: Arch::Transformer { n_layer, d_ff },
         }
     }
 
@@ -96,9 +192,23 @@ impl NativeBundle {
         Ok(())
     }
 
-    /// Forward (and optionally backward) over every position. Returns
-    /// the mean cross-entropy; fills `grads` when given.
-    fn pass(&self, params: &[f32], batch: &Batch, mut grads: Option<&mut [f32]>) -> Result<f64> {
+    fn pass(&self, params: &[f32], batch: &Batch, grads: Option<&mut [f32]>) -> Result<f64> {
+        match self.arch {
+            Arch::Mlp => self.pass_mlp(params, batch, grads),
+            Arch::Transformer { n_layer, d_ff } => {
+                self.pass_transformer(params, batch, grads, n_layer, d_ff)
+            }
+        }
+    }
+
+    /// MLP forward (and optionally backward) over every position.
+    /// Returns the mean cross-entropy; fills `grads` when given.
+    fn pass_mlp(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        mut grads: Option<&mut [f32]>,
+    ) -> Result<f64> {
         let d = self.d_model;
         let (embed, out_w) = params.split_at(VOCAB * d);
         let positions = batch.batch * batch.seq;
@@ -162,6 +272,305 @@ impl NativeBundle {
         }
         Ok(loss_acc / positions as f64)
     }
+
+    /// Transformer forward (and optionally backward) — see the module
+    /// docs for the architecture and the gradient derivation sketch.
+    /// Gradient offsets mirror the parameter offsets exactly (same flat
+    /// layout), so every `g[off + ..] +=` below writes the segment the
+    /// layout names.
+    fn pass_transformer(
+        &self,
+        params: &[f32],
+        batch: &Batch,
+        mut grads: Option<&mut [f32]>,
+        n_layer: usize,
+        f: usize,
+    ) -> Result<f64> {
+        let d = self.d_model;
+        let s = self.info.seq;
+        let positions = batch.batch * s;
+        let inv_pos = 1.0f32 / positions as f32;
+        let att_scale = 1.0 / (d as f32).sqrt();
+
+        for pos in 0..positions {
+            let (x, y) = (batch.tokens[pos], batch.targets[pos]);
+            anyhow::ensure!(
+                (0..VOCAB as i32).contains(&x) && (0..VOCAB as i32).contains(&y),
+                "token {x}/{y} outside the byte vocabulary"
+            );
+        }
+
+        // flat parameter offsets (== gradient offsets)
+        let tok0 = 0usize;
+        let pos0 = VOCAB * d;
+        let blocks0 = pos0 + s * d;
+        let stride = 4 * d * d + 2 * d * f;
+        let head0 = blocks0 + n_layer * stride;
+        let offs = |l: usize| {
+            let wq0 = blocks0 + l * stride;
+            let wk0 = wq0 + d * d;
+            let wv0 = wk0 + d * d;
+            let wo0 = wv0 + d * d;
+            let w10 = wo0 + d * d;
+            let w20 = w10 + d * f;
+            (wq0, wk0, wv0, wo0, w10, w20)
+        };
+
+        // activations saved for the backward pass, per block
+        let mut x = vec![0.0f32; s * d];
+        let mut xin = vec![vec![0.0f32; s * d]; n_layer];
+        let mut qb = vec![vec![0.0f32; s * d]; n_layer];
+        let mut kb = vec![vec![0.0f32; s * d]; n_layer];
+        let mut vb = vec![vec![0.0f32; s * d]; n_layer];
+        let mut ab = vec![vec![0.0f32; s * s]; n_layer];
+        let mut ctxb = vec![vec![0.0f32; s * d]; n_layer];
+        let mut xmidb = vec![vec![0.0f32; s * d]; n_layer];
+        let mut hhb = vec![vec![0.0f32; s * f]; n_layer];
+        // scratch
+        let mut row = vec![0.0f32; s];
+        let mut logits = vec![0.0f32; VOCAB];
+        let mut dx = vec![0.0f32; s * d];
+        let mut dxmid = vec![0.0f32; s * d];
+        let mut dctx = vec![0.0f32; s * d];
+        let mut dq = vec![0.0f32; s * d];
+        let mut dk = vec![0.0f32; s * d];
+        let mut dv = vec![0.0f32; s * d];
+        let mut da = vec![0.0f32; s * s];
+        let mut dpre = vec![0.0f32; s * f];
+
+        let mut loss_acc = 0.0f64;
+        for b in 0..batch.batch {
+            let base = b * s;
+
+            // ---- forward ----
+            // X₀ = Etok[x_t] + Epos[t]
+            for t in 0..s {
+                let xt = batch.tokens[base + t] as usize;
+                for j in 0..d {
+                    x[t * d + j] = params[tok0 + xt * d + j] + params[pos0 + t * d + j];
+                }
+            }
+            for l in 0..n_layer {
+                let (wq0, wk0, wv0, wo0, w10, w20) = offs(l);
+                xin[l].copy_from_slice(&x);
+                // Q, K, V = X Wq, X Wk, X Wv
+                for t in 0..s {
+                    for j2 in 0..d {
+                        let (mut aq, mut ak, mut av) = (0.0f32, 0.0f32, 0.0f32);
+                        for j in 0..d {
+                            let xv = x[t * d + j];
+                            aq += xv * params[wq0 + j * d + j2];
+                            ak += xv * params[wk0 + j * d + j2];
+                            av += xv * params[wv0 + j * d + j2];
+                        }
+                        qb[l][t * d + j2] = aq;
+                        kb[l][t * d + j2] = ak;
+                        vb[l][t * d + j2] = av;
+                    }
+                }
+                // causal softmax attention + context
+                for t in 0..s {
+                    let mut m = f32::NEG_INFINITY;
+                    for (u, r) in row.iter_mut().enumerate().take(t + 1) {
+                        let mut sc = 0.0f32;
+                        for j in 0..d {
+                            sc += qb[l][t * d + j] * kb[l][u * d + j];
+                        }
+                        *r = sc * att_scale;
+                        m = m.max(*r);
+                    }
+                    let mut z = 0.0f32;
+                    for r in row.iter_mut().take(t + 1) {
+                        *r = (*r - m).exp();
+                        z += *r;
+                    }
+                    let inv = 1.0 / z;
+                    for u in 0..=t {
+                        ab[l][t * s + u] = row[u] * inv;
+                    }
+                    for j in 0..d {
+                        let mut c = 0.0f32;
+                        for u in 0..=t {
+                            c += ab[l][t * s + u] * vb[l][u * d + j];
+                        }
+                        ctxb[l][t * d + j] = c;
+                    }
+                }
+                // attention residual: X += Ctx · Wo
+                for t in 0..s {
+                    for j in 0..d {
+                        let mut o = 0.0f32;
+                        for j2 in 0..d {
+                            o += ctxb[l][t * d + j2] * params[wo0 + j2 * d + j];
+                        }
+                        x[t * d + j] += o;
+                    }
+                }
+                xmidb[l].copy_from_slice(&x);
+                // MLP residual: X += tanh(X W1) W2
+                for t in 0..s {
+                    for mth in 0..f {
+                        let mut pre = 0.0f32;
+                        for j in 0..d {
+                            pre += xmidb[l][t * d + j] * params[w10 + j * f + mth];
+                        }
+                        hhb[l][t * f + mth] = pre.tanh();
+                    }
+                }
+                for t in 0..s {
+                    for j in 0..d {
+                        let mut msum = 0.0f32;
+                        for mth in 0..f {
+                            msum += hhb[l][t * f + mth] * params[w20 + mth * d + j];
+                        }
+                        x[t * d + j] += msum;
+                    }
+                }
+            }
+
+            // ---- head: loss per position (+ dWout, dX when training) ----
+            for t in 0..s {
+                let y = batch.targets[base + t] as usize;
+                for (c, zc) in logits.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    for j in 0..d {
+                        acc += x[t * d + j] * params[head0 + j * VOCAB + c];
+                    }
+                    *zc = acc;
+                }
+                let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let mut z_sum = 0.0f32;
+                for zl in logits.iter_mut() {
+                    *zl = (*zl - m).exp();
+                    z_sum += *zl;
+                }
+                loss_acc += (z_sum.ln() - logits[y].ln()) as f64;
+                let Some(g) = grads.as_deref_mut() else { continue };
+
+                let inv_z = 1.0 / z_sum;
+                for zl in logits.iter_mut() {
+                    *zl *= inv_z * inv_pos;
+                }
+                logits[y] -= inv_pos;
+                for j in 0..d {
+                    let xv = x[t * d + j];
+                    let mut acc = 0.0f32;
+                    for (c, &dz) in logits.iter().enumerate() {
+                        g[head0 + j * VOCAB + c] += xv * dz;
+                        acc += params[head0 + j * VOCAB + c] * dz;
+                    }
+                    dx[t * d + j] = acc;
+                }
+            }
+            let Some(g) = grads.as_deref_mut() else { continue };
+
+            // ---- backward through the blocks, top down ----
+            for l in (0..n_layer).rev() {
+                let (wq0, wk0, wv0, wo0, w10, w20) = offs(l);
+                // MLP: x_out = xmid + tanh(xmid W1) W2
+                for t in 0..s {
+                    for mth in 0..f {
+                        let mut dh = 0.0f32;
+                        for j in 0..d {
+                            let dxj = dx[t * d + j];
+                            g[w20 + mth * d + j] += hhb[l][t * f + mth] * dxj;
+                            dh += params[w20 + mth * d + j] * dxj;
+                        }
+                        let h = hhb[l][t * f + mth];
+                        dpre[t * f + mth] = dh * (1.0 - h * h);
+                    }
+                }
+                for t in 0..s {
+                    for j in 0..d {
+                        let mut acc = 0.0f32;
+                        for mth in 0..f {
+                            let dp = dpre[t * f + mth];
+                            g[w10 + j * f + mth] += xmidb[l][t * d + j] * dp;
+                            acc += params[w10 + j * f + mth] * dp;
+                        }
+                        dxmid[t * d + j] = dx[t * d + j] + acc;
+                    }
+                }
+                // attention: xmid = xin + (A V) Wo
+                for t in 0..s {
+                    for j2 in 0..d {
+                        let c = ctxb[l][t * d + j2];
+                        let mut acc = 0.0f32;
+                        for j in 0..d {
+                            let dxm = dxmid[t * d + j];
+                            g[wo0 + j2 * d + j] += c * dxm;
+                            acc += params[wo0 + j2 * d + j] * dxm;
+                        }
+                        dctx[t * d + j2] = acc;
+                    }
+                }
+                dv.fill(0.0);
+                for t in 0..s {
+                    for u in 0..=t {
+                        let a_tu = ab[l][t * s + u];
+                        let mut acc = 0.0f32;
+                        for j in 0..d {
+                            let dc = dctx[t * d + j];
+                            acc += dc * vb[l][u * d + j];
+                            dv[u * d + j] += a_tu * dc;
+                        }
+                        da[t * s + u] = acc;
+                    }
+                    // softmax backward, row t: ds = a ∘ (da − Σ a·da)
+                    let mut dot = 0.0f32;
+                    for u in 0..=t {
+                        dot += ab[l][t * s + u] * da[t * s + u];
+                    }
+                    for u in 0..=t {
+                        da[t * s + u] = ab[l][t * s + u] * (da[t * s + u] - dot);
+                    }
+                }
+                dk.fill(0.0);
+                for t in 0..s {
+                    for j in 0..d {
+                        let mut accq = 0.0f32;
+                        for u in 0..=t {
+                            let ds = da[t * s + u];
+                            accq += ds * kb[l][u * d + j];
+                            dk[u * d + j] += ds * qb[l][t * d + j];
+                        }
+                        dq[t * d + j] = accq * att_scale;
+                    }
+                }
+                for dkv in dk.iter_mut() {
+                    *dkv *= att_scale;
+                }
+                // projections + both residual paths into dX of this block
+                for t in 0..s {
+                    for j in 0..d {
+                        let xi = xin[l][t * d + j];
+                        let mut acc = dxmid[t * d + j];
+                        for j2 in 0..d {
+                            let dqv = dq[t * d + j2];
+                            let dkv = dk[t * d + j2];
+                            let dvv = dv[t * d + j2];
+                            g[wq0 + j * d + j2] += xi * dqv;
+                            g[wk0 + j * d + j2] += xi * dkv;
+                            g[wv0 + j * d + j2] += xi * dvv;
+                            acc += params[wq0 + j * d + j2] * dqv
+                                + params[wk0 + j * d + j2] * dkv
+                                + params[wv0 + j * d + j2] * dvv;
+                        }
+                        dx[t * d + j] = acc;
+                    }
+                }
+            }
+            // embeddings
+            for t in 0..s {
+                let xt = batch.tokens[base + t] as usize;
+                for j in 0..d {
+                    g[tok0 + xt * d + j] += dx[t * d + j];
+                    g[pos0 + t * d + j] += dx[t * d + j];
+                }
+            }
+        }
+        Ok(loss_acc / positions as f64)
+    }
 }
 
 impl StepBackend for NativeBundle {
@@ -212,6 +621,16 @@ mod tests {
         let again = nb.init_params(7).unwrap();
         assert_eq!(params, again, "init must be deterministic in the seed");
         assert_ne!(params, nb.init_params(8).unwrap());
+    }
+
+    #[test]
+    fn mlp_layout_is_validated_and_two_segment() {
+        let (nb, _, _) = tiny();
+        let layout = nb.layout();
+        assert_eq!(layout.len(), 2);
+        assert_eq!(layout.param_count(), nb.info().param_count);
+        assert_eq!(layout.entries()[0].name, "native.embed");
+        assert_eq!(layout.entries()[1].name, "native.out");
     }
 
     #[test]
@@ -285,6 +704,145 @@ mod tests {
     #[test]
     fn shape_mismatches_fail_loudly() {
         let (nb, params, batch) = tiny();
+        assert!(nb.train_step(&params[1..], &batch).is_err());
+        let bad = batch_of(vec![0; 4], vec![0; 4], 2, 2);
+        assert!(nb.eval_loss(&params, &bad).is_err());
+        let oob = batch_of(vec![999; 6], vec![0; 6], 2, 3);
+        assert!(nb.train_step(&params, &oob).is_err());
+    }
+
+    // ---- transformer ----
+
+    /// Two-block transformer at the given shape.
+    fn transformer(name: &str, batch: usize, seq: usize, d: usize) -> NativeBundle {
+        NativeBundle::transformer(name, batch, seq, d, 2)
+    }
+
+    fn tiny_tf() -> (NativeBundle, Vec<f32>, Batch) {
+        let nb = transformer("tf-test", 2, 3, 4);
+        let params = nb.init_params(11).unwrap();
+        let batch = batch_of(vec![1, 2, 3, 250, 0, 9], vec![2, 3, 4, 0, 9, 1], 2, 3);
+        (nb, params, batch)
+    }
+
+    #[test]
+    fn transformer_layout_has_per_block_named_segments() {
+        let nb = NativeBundle::transformer("tf-layout", 1, 8, 6, 3);
+        let layout = nb.layout();
+        // embed.tok, embed.pos, 6 per block × 3 blocks, head.out
+        assert_eq!(layout.len(), 2 + 6 * 3 + 1);
+        assert_eq!(layout.param_count(), nb.info().param_count);
+        let names: Vec<&str> = layout.iter().map(|e| e.name.as_str()).collect();
+        assert!(names.contains(&"embed.tok"));
+        assert!(names.contains(&"embed.pos"));
+        assert!(names.contains(&"block0.attn.wq"));
+        assert!(names.contains(&"block2.mlp.w2"));
+        assert!(names.contains(&"head.out"));
+        let d = 6;
+        let expected = 256 * d + 8 * d + 3 * (4 * d * d + 2 * d * 4 * d) + d * 256;
+        assert_eq!(nb.info().param_count, expected);
+        assert_eq!(nb.info().n_layer, 3);
+    }
+
+    #[test]
+    fn transformer_initial_loss_is_near_uniform_and_deterministic() {
+        let (nb, params, batch) = tiny_tf();
+        let loss = nb.eval_loss(&params, &batch).unwrap();
+        let uniform = (256f32).ln();
+        assert!((loss - uniform).abs() < 0.5, "loss {loss} vs uniform {uniform}");
+        let a = nb.train_step(&params, &batch).unwrap();
+        let b = nb.train_step(&params, &batch).unwrap();
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+        for (x, y) in a.grads.iter().zip(&b.grads) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn transformer_attention_uses_token_order() {
+        // same token multiset, same targets, different order: with
+        // position embeddings + causal attention the loss must differ
+        let nb = transformer("tf-order", 1, 3, 4);
+        let params = nb.init_params(5).unwrap();
+        let a = nb.eval_loss(&params, &batch_of(vec![5, 6, 7], vec![6, 7, 8], 1, 3)).unwrap();
+        let b = nb.eval_loss(&params, &batch_of(vec![7, 6, 5], vec![6, 7, 8], 1, 3)).unwrap();
+        assert_ne!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn transformer_gradients_match_finite_differences_in_every_segment() {
+        // n_layer = 2, d = 4, f = 16, seq = 3: probe every segment kind
+        // — token embedding of a used token, position embedding, all
+        // four attention projections, both MLP matrices (both blocks),
+        // and the head.
+        let nb = transformer("tf-fd", 1, 3, 4);
+        let mut params = nb.init_params(9).unwrap();
+        // scale the init up so gradients deep in the stack are well
+        // above finite-difference noise (the relative check then has
+        // teeth for every segment, not just the head)
+        for p in params.iter_mut() {
+            *p *= 5.0;
+        }
+        let batch = batch_of(vec![5, 6, 7], vec![6, 7, 8], 1, 3);
+        let out = nb.train_step(&params, &batch).unwrap();
+
+        let layout = nb.layout().clone();
+        let mut probes: Vec<usize> = Vec::new();
+        for e in layout.iter() {
+            let r = e.offset..e.offset + e.numel();
+            match e.name.as_str() {
+                // rows of used tokens (5, 6, 7) and in-range positions
+                "embed.tok" => probes.extend([e.offset + 5 * 4, e.offset + 6 * 4 + 2]),
+                "embed.pos" => probes.extend([e.offset, e.offset + 2 * 4 + 1]),
+                _ => probes.extend([r.start, r.start + (r.len() / 2), r.end - 1]),
+            }
+        }
+        let h = 1e-2f32;
+        for &i in &probes {
+            let orig = params[i];
+            params[i] = orig + h;
+            let lp = nb.eval_loss(&params, &batch).unwrap();
+            params[i] = orig - h;
+            let lm = nb.eval_loss(&params, &batch).unwrap();
+            params[i] = orig;
+            let fd = (lp - lm) / (2.0 * h);
+            assert!(
+                (out.grads[i] - fd).abs() < 2e-3_f32.max(0.05 * fd.abs()),
+                "coord {i} ({}): analytic {} vs fd {fd}",
+                layout
+                    .iter()
+                    .find(|e| (e.offset..e.offset + e.numel()).contains(&i))
+                    .map(|e| e.name.as_str())
+                    .unwrap_or("?"),
+                out.grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn transformer_sgd_on_repeated_batch_reduces_loss() {
+        let nb = transformer("tf-sgd", 2, 4, 6);
+        let mut params = nb.init_params(1).unwrap();
+        let batch = batch_of(
+            vec![10, 20, 30, 40, 50, 60, 70, 80],
+            vec![20, 30, 40, 50, 60, 70, 80, 90],
+            2,
+            4,
+        );
+        let before = nb.eval_loss(&params, &batch).unwrap();
+        for _ in 0..60 {
+            let out = nb.train_step(&params, &batch).unwrap();
+            for (p, g) in params.iter_mut().zip(&out.grads) {
+                *p -= 0.5 * g;
+            }
+        }
+        let after = nb.eval_loss(&params, &batch).unwrap();
+        assert!(after < before - 0.5, "{before} -> {after}");
+    }
+
+    #[test]
+    fn transformer_shape_and_token_checks_fail_loudly() {
+        let (nb, params, batch) = tiny_tf();
         assert!(nb.train_step(&params[1..], &batch).is_err());
         let bad = batch_of(vec![0; 4], vec![0; 4], 2, 2);
         assert!(nb.eval_loss(&params, &bad).is_err());

@@ -1,14 +1,81 @@
-//! Run metrics: in-memory curves + CSV persistence.
+//! Run metrics: in-memory curves + CSV persistence + per-segment
+//! update norms.
 //!
 //! Every experiment consumes [`RunLog`] rows keyed by *three* x-axes —
 //! computation rounds (local steps), communication rounds, and simulated
 //! wall-clock — because the paper plots Figure 1 against communication
 //! rounds and Figure 2 against computation rounds for the same runs.
+//!
+//! [`segment_norms`] resolves a round's global update along the
+//! backend's [`ParamLayout`]: per named segment, the L2 and L∞ norms of
+//! the difference. This is what makes comm-savings tables show *where*
+//! the bits go — parameter blocks with very different diff magnitudes
+//! are exactly the case the per-tensor `q8pt` wire format exists for.
 
 use std::io::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
+
+use crate::runtime::ParamLayout;
+
+/// Norms of one layout segment of an update/difference vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SegmentNorm {
+    /// Segment name from the layout (e.g. `block0.attn.wq`, `wte`).
+    pub name: String,
+    /// Coordinates in the segment.
+    pub numel: usize,
+    /// L2 norm of the segment's difference.
+    pub l2: f64,
+    /// L∞ (max |·|) norm of the segment's difference.
+    pub linf: f64,
+}
+
+/// Per-segment norms of the elementwise difference `a - b`, resolved
+/// along `layout` (both vectors must have `layout.param_count()`
+/// coordinates). Accumulation is f64 in coordinate order.
+pub fn segment_norms(layout: &ParamLayout, a: &[f32], b: &[f32]) -> Vec<SegmentNorm> {
+    assert_eq!(a.len(), b.len(), "segment_norms: {} vs {} coordinates", a.len(), b.len());
+    assert_eq!(
+        a.len(),
+        layout.param_count(),
+        "segment_norms: {} coordinates vs a layout tiling {}",
+        a.len(),
+        layout.param_count()
+    );
+    layout
+        .iter()
+        .map(|e| {
+            let r = e.offset..e.offset + e.numel();
+            let mut sq = 0.0f64;
+            let mut linf = 0.0f64;
+            for (&x, &y) in a[r.clone()].iter().zip(&b[r]) {
+                let d = (x - y) as f64;
+                sq += d * d;
+                linf = linf.max(d.abs());
+            }
+            SegmentNorm { name: e.name.clone(), numel: e.numel(), l2: sq.sqrt(), linf }
+        })
+        .collect()
+}
+
+/// Fixed-width table of per-segment norms — the "where the bits go"
+/// block the experiments and examples print next to comm tables.
+pub fn render_segment_norms(norms: &[SegmentNorm]) -> String {
+    let name_w = norms.iter().map(|n| n.name.len()).max().unwrap_or(7).max("segment".len());
+    let mut out =
+        format!("{:<name_w$}  {:>10}  {:>12}  {:>12}\n", "segment", "numel", "l2", "linf");
+    out.push_str(&"-".repeat(name_w + 2 + 10 + 2 + 12 + 2 + 12));
+    out.push('\n');
+    for n in norms {
+        out.push_str(&format!(
+            "{:<name_w$}  {:>10}  {:>12.4e}  {:>12.4e}\n",
+            n.name, n.numel, n.l2, n.linf
+        ));
+    }
+    out
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct LogRow {
@@ -236,6 +303,34 @@ mod tests {
         assert_eq!(c, vec![(24.0, 4.0)]);
         let c = log.val_curve(Axis::CommRounds);
         assert_eq!(c, vec![(2.0, 4.0)]);
+    }
+
+    #[test]
+    fn segment_norms_resolve_the_layout() {
+        use crate::runtime::ParamEntry;
+        let layout = ParamLayout::from_entries(
+            vec![
+                ParamEntry { name: "small".into(), offset: 0, shape: vec![2] },
+                ParamEntry { name: "big".into(), offset: 2, shape: vec![2] },
+            ],
+            4,
+        )
+        .unwrap();
+        let a = vec![1.0f32, 1.0, 1.0, 1.0];
+        let b = vec![1.001f32, 0.999, 4.0, -2.0];
+        let norms = segment_norms(&layout, &a, &b);
+        assert_eq!(norms.len(), 2);
+        assert_eq!(norms[0].name, "small");
+        assert_eq!(norms[0].numel, 2);
+        assert!((norms[0].linf - 1e-3).abs() < 1e-6, "{}", norms[0].linf);
+        assert_eq!(norms[1].linf, 3.0);
+        let expect_l2 = (9.0f64 + 9.0).sqrt();
+        assert!((norms[1].l2 - expect_l2).abs() < 1e-9);
+        // hetero magnitudes across segments is exactly what the table
+        // is for: the rendered block carries both rows
+        let table = render_segment_norms(&norms);
+        assert!(table.contains("small") && table.contains("big"));
+        assert!(table.contains("segment"));
     }
 
     #[test]

@@ -24,7 +24,14 @@
 //! hands the payloads to the server-side
 //! [`crate::outer::OuterOptimizer::apply`]. There is no per-format
 //! branch left in this file: adding a wire format touches
-//! [`crate::dist::wire`], not the trainer.
+//! [`crate::dist::wire`], not the trainer. The buffers are sized from
+//! the backend's validated [`ParamLayout`]
+//! ([`StepBackend::layout`]) — the layout-aware `q8pt` format carries
+//! one quantization scale per segment; every other format just takes
+//! the coordinate count. After each apply the trainer resolves the
+//! global update along the same layout
+//! ([`crate::train::metrics::segment_norms`]) so experiments can show
+//! where the bits go.
 //!
 //! # Parallel fleet execution
 //!
@@ -57,11 +64,11 @@ use crate::data::dataset::{Batch, TokenDataset};
 use crate::data::tokenizer::ByteTokenizer;
 use crate::dist::{collectives, pool, WireFormat, WirePayload, Worker};
 use crate::outer::{OuterConfig, OuterOptimizer, RoundCtx, WorkerView};
-use crate::runtime::{Artifacts, Runtime, SignUpdateKernel, StepBackend};
+use crate::runtime::{Artifacts, ParamLayout, Runtime, SignUpdateKernel, StepBackend};
 use crate::sign::SignOp;
 use crate::tensor;
 use crate::train::checkpoint::Checkpoint;
-use crate::train::metrics::{LogRow, RunLog};
+use crate::train::metrics::{self, LogRow, RunLog, SegmentNorm};
 use crate::train::schedule::Schedule;
 use crate::util::rng::Rng;
 
@@ -84,6 +91,14 @@ pub struct Trainer {
     /// wire format. Checked and re-initialized (never asserted) when
     /// the round's (fleet size, format, dimension) disagrees.
     payloads: Vec<WirePayload>,
+    /// The backend's validated parameter layout, shared with every
+    /// worker and (for the `q8pt` wire) every payload buffer
+    /// ([`StepBackend::layout`]).
+    layout: Arc<ParamLayout>,
+    /// Per-segment norms of the most recent round's global update
+    /// (`start → global`), resolved along `layout` — the
+    /// "where the bits go" signal the experiments surface.
+    last_seg_norms: Vec<SegmentNorm>,
     log: RunLog,
     local_step: u64,
     round: u64,
@@ -113,6 +128,9 @@ pub struct RunResult {
     pub clock: SimClock,
     pub final_val: f64,
     pub best_val: f64,
+    /// Per-segment norms of the last round's global update (empty in
+    /// standalone mode) — see [`Trainer::segment_norms`].
+    pub segment_norms: Vec<SegmentNorm>,
 }
 
 impl Trainer {
@@ -176,6 +194,15 @@ impl Trainer {
         anyhow::ensure!(bundle.info().name == cfg.preset, "bundle/preset mismatch");
         let info = bundle.info();
         let p = info.param_count;
+        // the layout contract: validated at backend construction, so a
+        // mismatch here is a backend bug, not a config error
+        let layout = Arc::new(bundle.layout().clone());
+        anyhow::ensure!(
+            layout.param_count() == p,
+            "backend layout tiles {} of {} params",
+            layout.param_count(),
+            p
+        );
 
         // data: deterministic synthetic corpus, byte tokenizer, n shards.
         // In heterogeneous mode the training region is built from one
@@ -208,8 +235,9 @@ impl Trainer {
         anyhow::ensure!(!val_batches.is_empty(), "validation split too small");
 
         let root_rng = Rng::new(cfg.seed);
-        let workers: Vec<Worker> =
-            (0..cfg.n_workers).map(|i| Worker::new(i, p, &cfg.base, &root_rng)).collect();
+        let workers: Vec<Worker> = (0..cfg.n_workers)
+            .map(|i| Worker::new(i, Arc::clone(&layout), &cfg.base, &root_rng))
+            .collect();
 
         let global = bundle.init_params(cfg.seed as u32)?;
         let outer = match outer_override {
@@ -231,6 +259,8 @@ impl Trainer {
             clock: SimClock::default(),
             val_batches,
             payloads: Vec::new(),
+            layout,
+            last_seg_norms: Vec::new(),
             local_step: 0,
             round: 0,
         })
@@ -238,6 +268,18 @@ impl Trainer {
 
     pub fn params(&self) -> &[f32] {
         &self.global
+    }
+
+    /// The backend's validated parameter layout this run follows.
+    pub fn layout(&self) -> &ParamLayout {
+        &self.layout
+    }
+
+    /// Per-segment norms of the most recent outer round's global
+    /// update (empty before the first round and in standalone mode,
+    /// which has no round exchange).
+    pub fn segment_norms(&self) -> &[SegmentNorm] {
+        &self.last_seg_norms
     }
 
     pub fn clock(&self) -> &SimClock {
@@ -267,6 +309,7 @@ impl Trainer {
             clock: self.clock.clone(),
             final_val,
             best_val: self.log.best_val_loss().unwrap_or(final_val),
+            segment_norms: self.last_seg_norms.clone(),
         })
     }
 
@@ -385,7 +428,8 @@ impl Trainer {
         if self.payloads.len() != n
             || self.payloads.iter().any(|pl| pl.format() != self.wire || pl.len() != p)
         {
-            self.payloads = (0..n).map(|_| WirePayload::with_len(self.wire, p)).collect();
+            self.payloads =
+                (0..n).map(|_| WirePayload::with_layout(self.wire, &self.layout)).collect();
         }
         self.clock.charge_exchange(&self.cfg.comm, n, &self.payloads[0], &mut self.rng);
         for w in 0..n {
@@ -393,6 +437,7 @@ impl Trainer {
                 start: &start,
                 end: &self.workers[w].params,
                 last_grad: &self.workers[w].last_grad,
+                layout: &self.layout,
             };
             self.outer.contribute(w, n, &view, &mut self.rng, &mut self.payloads[w]);
         }
@@ -410,6 +455,12 @@ impl Trainer {
         self.global.copy_from_slice(&start);
         self.outer.apply(&mut self.global, &ctx, &self.payloads, &mut self.rng)?;
         anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
+        // resolve this round's global update along the layout (pure
+        // observation: no RNG, no parameter writes — trajectories are
+        // untouched; one O(P) pass, negligible next to the τ fwd+bwd
+        // steps each rank just ran, and it keeps `segment_norms()`
+        // current for callers driving `step_round` themselves)
+        self.last_seg_norms = metrics::segment_norms(&self.layout, &start, &self.global);
         Ok(())
     }
 

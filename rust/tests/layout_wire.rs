@@ -1,0 +1,149 @@
+//! Golden tests for the layout-aware wire: the per-tensor `q8pt`
+//! format against the per-message `q8` reference.
+//!
+//! Two pinned facts:
+//!
+//! 1. **One-segment identity** — under a single-segment layout, `q8pt`
+//!    is *bitwise*-identical to `q8`: same quantization scale, same
+//!    payload bytes, same reconstructed mean (the per-segment codec
+//!    runs the identical arithmetic over the identical range, and the
+//!    server mean iterates segment-major in coordinate order).
+//! 2. **Hetero-magnitude error reduction** — on a two-segment layout
+//!    whose segments move at very different magnitudes, per-tensor
+//!    scales strictly reduce the max dequantization error; the exact
+//!    error values are pinned numerically.
+
+use std::sync::Arc;
+
+use dsm::dist::codec;
+use dsm::dist::{WireFormat, WirePayload};
+use dsm::runtime::{ParamEntry, ParamLayout};
+
+fn layout_of(sizes: &[usize]) -> Arc<ParamLayout> {
+    let mut entries = Vec::new();
+    let mut off = 0usize;
+    for (i, &n) in sizes.iter().enumerate() {
+        entries.push(ParamEntry { name: format!("seg{i}"), offset: off, shape: vec![n] });
+        off += n;
+    }
+    Arc::new(ParamLayout::from_entries(entries, off).unwrap())
+}
+
+/// Deterministic pseudo-random-ish test vectors (no RNG dependency).
+fn wiggle(n: usize, scale: f32, phase: f32) -> Vec<f32> {
+    (0..n).map(|i| scale * ((i as f32) * 0.7 + phase).sin()).collect()
+}
+
+#[test]
+fn one_segment_q8pt_is_bitwise_identical_to_q8() {
+    let p = 257; // deliberately not a power of two
+    let start = wiggle(p, 1.0, 0.0);
+    let diffs = [wiggle(p, 0.01, 1.0), wiggle(p, 0.02, 2.0), wiggle(p, 0.005, 3.0)];
+    let ends: Vec<Vec<f32>> = diffs
+        .iter()
+        .map(|d| start.iter().zip(d).map(|(&s, &x)| s - x).collect())
+        .collect();
+
+    let pack_all = |format: WireFormat| -> Vec<WirePayload> {
+        ends.iter()
+            .map(|end| {
+                let mut pl = WirePayload::with_len(format, p);
+                pl.pack_end(&start, end);
+                pl
+            })
+            .collect()
+    };
+    let q8 = pack_all(WireFormat::QuantizedI8);
+    let q8pt = pack_all(WireFormat::QuantizedI8PerTensor);
+
+    for (a, b) in q8.iter().zip(&q8pt) {
+        // identical scale, bit for bit
+        let sa = a.scales().unwrap();
+        let sb = b.scales().unwrap();
+        assert_eq!(sa.len(), 1);
+        assert_eq!(sb.len(), 1);
+        assert_eq!(sa[0].to_bits(), sb[0].to_bits());
+        // identical payload bytes
+        let WirePayload::QuantizedI8 { bytes: ba, .. } = a else { panic!("expected q8") };
+        let WirePayload::QuantizedI8PerTensor { bytes: bb, .. } = b else {
+            panic!("expected q8pt")
+        };
+        assert_eq!(ba, bb);
+        // identical wire cost: one segment means one scale either way
+        assert_eq!(a.wire_bytes(), b.wire_bytes());
+    }
+
+    // identical server-side reconstruction, bit for bit
+    let mut mean_q8 = vec![0.0f32; p];
+    WirePayload::mean_end_into(&q8, &start, &mut mean_q8);
+    let mut mean_q8pt = vec![0.0f32; p];
+    WirePayload::mean_end_into(&q8pt, &start, &mut mean_q8pt);
+    for (a, b) in mean_q8.iter().zip(&mean_q8pt) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+#[test]
+fn hetero_two_segment_layout_strictly_reduces_max_dequantization_error() {
+    // segment 0 moves by ≤ 1e-3, segment 1 by up to 1.27: the shared q8
+    // scale is 1.27/127 = 0.01, so every |diff| < 0.005 in segment 0
+    // rounds to byte 0 — a 100% relative error. Per-tensor scales give
+    // segment 0 its own 1e-3/127 step.
+    let layout = layout_of(&[6, 6]);
+    let start = vec![0.0f32; 12];
+    // segment 1's values are exact integer multiples of the shared
+    // 0.01 step, so its q8 decode errors are float-noise-sized and the
+    // q8 max error is exactly segment 0's zeroed-out 1e-3
+    #[rustfmt::skip]
+    let diff = vec![
+        1e-3f32, -5e-4, 2.5e-4, -1e-3, 7.5e-4, 0.0, // segment 0: tiny
+        1.27, -0.64, 0.32, -1.27, 0.95, 0.1,        // segment 1: large
+    ];
+    let end: Vec<f32> = start.iter().zip(&diff).map(|(&s, &d)| s - d).collect();
+
+    let mut q8 = WirePayload::with_len(WireFormat::QuantizedI8, 12);
+    q8.pack_end(&start, &end);
+    let mut q8pt = WirePayload::with_layout(WireFormat::QuantizedI8PerTensor, &layout);
+    q8pt.pack_end(&start, &end);
+
+    // pinned scales: shared = 1.27/127 = 0.01 exactly (in f32);
+    // per-tensor = [1e-3/127, 0.01]
+    let shared = q8.scales().unwrap()[0];
+    assert_eq!(shared, 1.27f32 / 127.0);
+    let per = q8pt.scales().unwrap();
+    assert_eq!(per.len(), 2);
+    assert_eq!(per[0], 1e-3f32 / 127.0);
+    assert_eq!(per[1].to_bits(), shared.to_bits());
+
+    // decode both and compare against the true difference
+    let max_err = |pl: &WirePayload| -> f32 {
+        let mut avg = vec![0.0f32; 12];
+        WirePayload::mean_end_into(std::slice::from_ref(pl), &start, &mut avg);
+        avg.iter().zip(&end).map(|(a, e)| (a - e).abs()).fold(0.0f32, f32::max)
+    };
+    let err_q8 = max_err(&q8);
+    let err_q8pt = max_err(&q8pt);
+
+    // q8's worst coordinate is the 1e-3 diff rounding to 0: error
+    // exactly 1e-3 (byte = round(1e-3/0.01) = 0)
+    assert!((err_q8 - 1e-3).abs() < 1e-7, "q8 max error {err_q8}");
+    // per-tensor: segment 0 decodes within half its own step
+    // (~3.9e-6) and segment 1's exact-multiple values decode to float
+    // noise, so the max error collapses to segment 0's half-step
+    assert!(err_q8pt <= per[0] / 2.0 + 1e-7, "q8pt max error {err_q8pt}");
+    // the strict reduction, with two orders of magnitude to spare
+    assert!(err_q8pt * 100.0 < err_q8, "per-tensor {err_q8pt} must beat per-message {err_q8}");
+}
+
+#[test]
+fn q8pt_wire_cost_is_q8_plus_one_scale_per_extra_segment() {
+    let p = 10_000;
+    for segs in [1usize, 2, 7, 64] {
+        let sizes: Vec<usize> = (0..segs).map(|i| p / segs + usize::from(i < p % segs)).collect();
+        let layout = layout_of(&sizes);
+        assert_eq!(layout.param_count(), p);
+        let pl = WirePayload::with_layout(WireFormat::QuantizedI8PerTensor, &layout);
+        assert_eq!(pl.wire_bytes(), codec::q8_bytes(p) + 4 * (segs as u64 - 1));
+        assert_eq!(pl.wire_bytes(), codec::q8pt_bytes(p, segs));
+    }
+}

@@ -202,7 +202,7 @@ fn prop_q8_payload_wire_bytes_are_exact() {
         payload.pack_end(&start, &end);
         assert_eq!(payload.len(), p, "case {case}");
         assert_eq!(payload.wire_bytes(), codec::q8_bytes(p), "case {case}");
-        assert_eq!(payload.wire_bytes(), WireFormat::QuantizedI8.wire_bytes(p), "case {case}");
+        assert_eq!(payload.wire_bytes(), WireFormat::QuantizedI8.wire_bytes(p, 1), "case {case}");
         // packing never changes the billed size — the invariant the
         // trainer's bill-before-pack ordering rests on
         let before = WirePayload::with_len(WireFormat::QuantizedI8, p).wire_bytes();

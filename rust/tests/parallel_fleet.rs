@@ -3,9 +3,11 @@
 //! **bitwise-identical** to the `cfg.sequential_workers` reference path
 //! — loss curves, final parameters, checkpoints (base/outer optimizer
 //! state), and every RNG stream — for every outer optimizer, several
-//! worker counts, both train modes, and both vote data paths.
+//! worker counts, both train modes, both vote data paths, every wire
+//! format, and both native backends (the 2-matrix MLP and the
+//! multi-layer transformer).
 //!
-//! Everything here runs on the pure-Rust [`NativeBundle`] backend, so
+//! Everything here runs on the pure-Rust [`NativeBundle`] backends, so
 //! the suite needs no PJRT artifacts and exercises the real `Trainer`
 //! end to end in any build environment.
 
@@ -13,7 +15,7 @@ use std::sync::Arc;
 
 use dsm::config::{RunConfig, TrainMode};
 use dsm::outer::OuterConfig;
-use dsm::runtime::NativeBundle;
+use dsm::runtime::{NativeBundle, StepBackend};
 use dsm::train::{RunResult, Trainer};
 
 const PRESET: &str = "native";
@@ -22,6 +24,12 @@ fn backend() -> Arc<NativeBundle> {
     // batch 2 × seq 24 × d_model 8 -> P = 4096: small enough to keep the
     // whole suite fast, big enough that every code path does real work
     Arc::new(NativeBundle::new(PRESET, 2, 24, 8))
+}
+
+fn transformer_backend() -> Arc<NativeBundle> {
+    // 2 blocks of single-head attention + MLP: the non-trivial layout
+    // (2 + 6·2 + 1 = 15 named segments) the q8pt wire resolves
+    Arc::new(NativeBundle::transformer(PRESET, 2, 12, 8, 2))
 }
 
 fn base_cfg(tag: &str) -> RunConfig {
@@ -37,25 +45,29 @@ fn base_cfg(tag: &str) -> RunConfig {
     cfg
 }
 
-fn run_cfg(cfg: RunConfig) -> RunResult {
-    let mut t = Trainer::with_backend(cfg, backend()).unwrap();
+fn run_cfg_on(cfg: RunConfig, be: Arc<NativeBundle>) -> RunResult {
+    let mut t = Trainer::with_backend(cfg, be).unwrap();
     t.run().unwrap()
 }
 
-/// Run `cfg` twice — parallel fleet vs sequential reference — and
-/// assert the trajectories agree to the last bit: every log row, the
-/// final validation loss, and the full checkpoint contents (global
+fn run_cfg(cfg: RunConfig) -> RunResult {
+    run_cfg_on(cfg, backend())
+}
+
+/// Run `cfg` twice on `be` — parallel fleet vs sequential reference —
+/// and assert the trajectories agree to the last bit: every log row,
+/// the final validation loss, and the full checkpoint contents (global
 /// params, outer state, per-worker optimizer state, all RNG streams).
-fn assert_parallel_equals_sequential(cfg: RunConfig) {
+fn assert_parallel_equals_sequential_on(cfg: RunConfig, be: Arc<NativeBundle>) {
     let label = cfg.tag.clone();
     let mut par_cfg = cfg.clone();
     par_cfg.sequential_workers = false;
     let mut seq_cfg = cfg;
     seq_cfg.sequential_workers = true;
 
-    let mut par = Trainer::with_backend(par_cfg, backend()).unwrap();
+    let mut par = Trainer::with_backend(par_cfg, be.clone()).unwrap();
     let rp = par.run().unwrap();
-    let mut seq = Trainer::with_backend(seq_cfg, backend()).unwrap();
+    let mut seq = Trainer::with_backend(seq_cfg, be).unwrap();
     let rs = seq.run().unwrap();
 
     assert_eq!(rp.log.rows.len(), rs.log.rows.len(), "{label}: row count");
@@ -79,6 +91,14 @@ fn assert_parallel_equals_sequential(cfg: RunConfig) {
         assert_eq!(a.local_steps, b.local_steps, "{label}: local steps");
     }
     assert_eq!(rp.final_val.to_bits(), rs.final_val.to_bits(), "{label}: final val");
+    // per-segment update norms are derived from bit-identical states,
+    // so they too must agree exactly
+    assert_eq!(rp.segment_norms.len(), rs.segment_norms.len(), "{label}: segment count");
+    for (a, b) in rp.segment_norms.iter().zip(&rs.segment_norms) {
+        assert_eq!(a.name, b.name, "{label}: segment order");
+        assert_eq!(a.l2.to_bits(), b.l2.to_bits(), "{label}: {} l2", a.name);
+        assert_eq!(a.linf.to_bits(), b.linf.to_bits(), "{label}: {} linf", a.name);
+    }
     assert_eq!(
         rp.clock.comm_s.to_bits(),
         rs.clock.comm_s.to_bits(),
@@ -116,6 +136,10 @@ fn assert_parallel_equals_sequential(cfg: RunConfig) {
             && ba.iter().zip(bb).all(|(x, y)| x.to_bits() == y.to_bits());
         assert!(same, "{label}: buffer `{na}` differs between parallel and sequential");
     }
+}
+
+fn assert_parallel_equals_sequential(cfg: RunConfig) {
+    assert_parallel_equals_sequential_on(cfg, backend());
 }
 
 #[test]
@@ -221,10 +245,134 @@ fn q8_wire_bills_exact_payload_bytes() {
     let mut t = Trainer::with_backend(cfg, backend()).unwrap();
     let p = t.dim();
     let res = t.run().unwrap();
-    let payload = dsm::dist::WireFormat::QuantizedI8.wire_bytes(p);
+    let payload = dsm::dist::WireFormat::QuantizedI8.wire_bytes(p, 1);
     assert_eq!(payload, p as u64 + 12);
     assert_eq!(res.clock.comm_rounds, rounds);
     assert_eq!(res.clock.bytes_communicated, rounds * payload * 2 * (n - 1));
+}
+
+#[test]
+fn q8pt_wire_bills_exact_per_tensor_payload_bytes() {
+    // the per-tensor message additionally carries one f32 scale per
+    // layout segment: P + 8 + 4S bytes, moved 2(n-1) times per round —
+    // on both native backends (2-segment MLP, 15-segment transformer)
+    let cases = [(backend(), "pf-q8pt-bytes-mlp"), (transformer_backend(), "pf-q8pt-bytes-tf")];
+    for (be, tag) in cases {
+        let segments = be.layout().len() as u64;
+        let mut cfg = base_cfg(tag);
+        cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8PerTensor);
+        cfg.eval_every = 0;
+        let n = cfg.n_workers as u64;
+        let rounds = cfg.rounds as u64;
+        let mut t = Trainer::with_backend(cfg, be).unwrap();
+        let p = t.dim();
+        let res = t.run().unwrap();
+        let payload =
+            dsm::dist::WireFormat::QuantizedI8PerTensor.wire_bytes(p, segments as usize);
+        assert_eq!(payload, p as u64 + 8 + 4 * segments, "{tag}");
+        assert_eq!(res.clock.comm_rounds, rounds, "{tag}");
+        assert_eq!(res.clock.bytes_communicated, rounds * payload * 2 * (n - 1), "{tag}");
+    }
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_on_q8pt_wire() {
+    let mut cfg = base_cfg("pf-q8pt");
+    cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8PerTensor);
+    assert_parallel_equals_sequential(cfg);
+}
+
+#[test]
+fn parallel_fleet_matches_sequential_on_the_transformer_backend() {
+    // the multi-layer preset through the same bit-identity matrix:
+    // the paper's outer method, the vote path, and the layout-aware
+    // wire all run on the transformer's 15-segment layout
+    for (outer, wire, tag) in [
+        (OuterConfig::sign_momentum_paper(1.0), None, "pf-tf-sign_momentum"),
+        (
+            OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 },
+            None,
+            "pf-tf-mv",
+        ),
+        (
+            OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+            Some(dsm::dist::WireFormat::QuantizedI8PerTensor),
+            "pf-tf-q8pt",
+        ),
+    ] {
+        let mut cfg = base_cfg(tag);
+        cfg.outer = outer;
+        cfg.wire = wire;
+        assert_parallel_equals_sequential_on(cfg, transformer_backend());
+    }
+}
+
+#[test]
+fn q8pt_actually_quantizes_per_segment() {
+    // same run under q8 and q8pt: on a multi-segment layout the
+    // per-segment scales decode differently, so the trajectories must
+    // split — while both stay finite and trained
+    let mut q8 = base_cfg("pf-q8-vs-q8pt-a");
+    q8.rounds = 5;
+    q8.wire = Some(dsm::dist::WireFormat::QuantizedI8);
+    let mut q8pt = q8.clone();
+    q8pt.tag = "pf-q8-vs-q8pt-b".into();
+    q8pt.wire = Some(dsm::dist::WireFormat::QuantizedI8PerTensor);
+    let ra = run_cfg(q8);
+    let rb = run_cfg(q8pt);
+    let uniform = (256f64).ln();
+    assert!(rb.final_val.is_finite() && rb.final_val < uniform + 0.5, "{}", rb.final_val);
+    assert_ne!(
+        ra.final_val.to_bits(),
+        rb.final_val.to_bits(),
+        "per-tensor scales must change the decoded exchange on a 2-segment layout"
+    );
+    // same coordinate count, 1 extra scale on the wire
+    assert_eq!(ra.clock.comm_rounds, rb.clock.comm_rounds);
+    assert_eq!(
+        rb.clock.bytes_communicated - ra.clock.bytes_communicated,
+        // 4 bytes per extra scale × 2(n-1) messages × rounds
+        4u64 * 2 * (4 - 1) * 5,
+        "{} vs {}",
+        ra.clock.bytes_communicated,
+        rb.clock.bytes_communicated
+    );
+    // the per-round segment norms surfaced to the experiments name the
+    // MLP layout's two segments
+    let names: Vec<&str> = rb.segment_norms.iter().map(|n| n.name.as_str()).collect();
+    assert_eq!(names, vec!["native.embed", "native.out"]);
+}
+
+#[test]
+fn transformer_checkpoint_resume_is_bit_identical_under_q8pt() {
+    // the full stack at once: multi-layer backend, layout-aware wire,
+    // checkpoint in the middle — the resumed tail must replay the
+    // uninterrupted run bit for bit
+    let mut cfg = base_cfg("pf-tf-resume");
+    cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8PerTensor);
+    cfg.rounds = 6;
+    cfg.eval_every = 0;
+    let full = run_cfg_on(cfg.clone(), transformer_backend());
+
+    let mut cfg_half = cfg.clone();
+    cfg_half.rounds = 3;
+    let mut t1 = Trainer::with_backend(cfg_half, transformer_backend()).unwrap();
+    t1.run().unwrap();
+    let path = std::env::temp_dir().join("dsm_pf_tf_q8pt_resume.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+
+    let mut t2 = Trainer::with_backend(cfg, transformer_backend()).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    let resumed = t2.run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(resumed.final_val.to_bits(), full.final_val.to_bits());
+    assert_eq!(resumed.clock.comm_rounds, full.clock.comm_rounds);
+    assert_eq!(resumed.clock.bytes_communicated, full.clock.bytes_communicated);
+    for (a, b) in resumed.segment_norms.iter().zip(&full.segment_norms) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.l2.to_bits(), b.l2.to_bits(), "segment {}", a.name);
+    }
 }
 
 #[test]

@@ -241,10 +241,11 @@ fn prop_worker_fleets_from_same_root_rng_are_identical() {
             .clone();
         let root_a = Rng::new(seed);
         let root_b = Rng::new(seed);
+        let layout = std::sync::Arc::new(dsm::runtime::ParamLayout::single(p));
         let mut fleet_a: Vec<Worker> =
-            (0..n).map(|i| Worker::new(i, p, &base, &root_a)).collect();
+            (0..n).map(|i| Worker::new(i, layout.clone(), &base, &root_a)).collect();
         let mut fleet_b: Vec<Worker> =
-            (0..n).map(|i| Worker::new(i, p, &base, &root_b)).collect();
+            (0..n).map(|i| Worker::new(i, layout.clone(), &base, &root_b)).collect();
 
         for step in 0..5 {
             for w in 0..n {

@@ -183,6 +183,62 @@ fn q8_wire_trains_end_to_end_on_the_real_runtime() {
 }
 
 #[test]
+fn q8pt_wire_trains_and_bills_the_manifest_layout_on_the_real_runtime() {
+    let Some(env) = setup() else { return };
+    // the layout-aware exchange resolves the REAL GPT-2 manifest layout
+    // (wte, per-block attention/MLP tensors): it must learn, and the
+    // clock must bill exactly P + 8 + 4S bytes per message
+    let info = env.arts.preset("nano").unwrap();
+    let segments = info.layout.len() as u64;
+    assert!(segments > 1, "nano's manifest layout should be multi-tensor");
+    let mut cfg = tiny_cfg("q8pt-e2e");
+    cfg.outer = OuterConfig::sign_momentum_paper(12.0);
+    cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8PerTensor);
+    let n = cfg.n_workers as u64;
+    let rounds = cfg.rounds as u64;
+    let mut t = Trainer::with_bundle(cfg, env.bundle.clone(), &env.rt, &env.arts).unwrap();
+    let p = t.dim();
+    let res = t.run().unwrap();
+    assert!(
+        res.final_val < (256f64).ln(),
+        "q8pt sign_momentum should beat uniform: {}",
+        res.final_val
+    );
+    let payload = p as u64 + 8 + 4 * segments;
+    assert_eq!(res.clock.bytes_communicated, rounds * payload * 2 * (n - 1));
+    // the per-segment norms name the manifest's tensors
+    assert_eq!(res.segment_norms.len(), segments as usize);
+    assert!(res.segment_norms.iter().any(|s| s.name == "wte"));
+}
+
+#[test]
+fn q8pt_checkpoint_resume_is_bit_identical_on_the_real_runtime() {
+    let Some(env) = setup() else { return };
+    let mut cfg = tiny_cfg("q8pt-ck");
+    cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8PerTensor);
+    cfg.rounds = 6;
+    cfg.eval_every = 0;
+    let full = run(&env, cfg.clone());
+
+    let mut cfg_half = cfg.clone();
+    cfg_half.rounds = 3;
+    let mut t1 =
+        Trainer::with_bundle(cfg_half, env.bundle.clone(), &env.rt, &env.arts).unwrap();
+    t1.run().unwrap();
+    let path = std::env::temp_dir().join("dsm_it_q8pt_resume.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+
+    let mut t2 =
+        Trainer::with_bundle(cfg, env.bundle.clone(), &env.rt, &env.arts).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    let resumed = t2.run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(resumed.final_val.to_bits(), full.final_val.to_bits());
+    assert_eq!(resumed.clock.bytes_communicated, full.clock.bytes_communicated);
+}
+
+#[test]
 fn mv_checkpoint_resume_is_bit_identical() {
     let Some(env) = setup() else { return };
     let mut cfg = tiny_cfg("mv-ck");
