@@ -1,0 +1,228 @@
+//! Thousand-rank fleet explorer: aggregation topology and fault plan.
+//!
+//! Part A prices one round exchange per (wire format × fleet size) under
+//! the α-β model and shows which topology the selector routes — the
+//! two-level hierarchy is what keeps the compressed formats viable at
+//! thousand-rank scale (O(√n) message times instead of the flat
+//! gather's O(n)), while dense f32 always ring-reduces.
+//!
+//! Part B trains the pure-Rust transformer fleet through the fault
+//! plan: heavy-tailed stragglers, dropped payloads (the round degrades
+//! to whatever arrived), corrupted payloads (bit flips survive with
+//! bounded error; NaN scales are rejected and counted, never averaged
+//! in), and elastic membership churn. Every configuration reports its
+//! final loss next to the fault counters, so "the fleet held" is a
+//! number, not a vibe.
+//!
+//!     cargo run --release --example fleet_faults [--quick] [--out FILE]
+//!
+//! Runs entirely on the native backend — no PJRT artifacts needed.
+//! `--quick` shrinks rounds/corpus for smoke runs; `--out` writes the
+//! machine-readable report (JSON: modeled exchange times per
+//! topology × format × n, plus the loss-under-faults rows) that CI
+//! uploads as `BENCH_fleet.json`.
+
+use std::fmt::Write as _;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use dsm::comm::{CommModel, FaultStats, Topology};
+use dsm::config::RunConfig;
+use dsm::dist::WireFormat;
+use dsm::outer::OuterConfig;
+use dsm::runtime::{NativeBundle, StepBackend};
+use dsm::train::Trainer;
+use dsm::util::cli::Args;
+
+fn topo_label(t: Topology) -> String {
+    match t {
+        Topology::Ring => "ring".to_string(),
+        Topology::FlatGatherBroadcast => "flat".to_string(),
+        Topology::Hierarchical { groups } => format!("hier(g={groups})"),
+    }
+}
+
+struct FaultRow {
+    name: &'static str,
+    final_val: f64,
+    straggler_s: f64,
+    stats: FaultStats,
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_with_bools(std::env::args().skip(1), &["quick"])
+        .map_err(anyhow::Error::msg)?;
+    let quick = args.has("quick");
+
+    let preset = "native";
+    // 2 transformer blocks — a real multi-segment layout for q8pt
+    let backend: Arc<NativeBundle> = if quick {
+        Arc::new(NativeBundle::transformer(preset, 2, 12, 8, 2))
+    } else {
+        Arc::new(NativeBundle::transformer(preset, 2, 24, 16, 2))
+    };
+    let p = backend.info().param_count;
+    let segments = backend.layout().len();
+
+    let mut report = String::new();
+    writeln!(report, "fleet_faults: preset={preset} (P={p}, {segments} layout segments)\n")?;
+
+    // ---- Part A: exchange topology and cost vs fleet size ------------
+    let m = CommModel::preset("ethernet").unwrap();
+    let formats = [
+        WireFormat::DenseF32,
+        WireFormat::PackedSigns,
+        WireFormat::QuantizedI8,
+        WireFormat::QuantizedI8PerTensor,
+    ];
+    // (n, format name, topology label, modeled seconds)
+    let mut modeled: Vec<(usize, &str, String, f64)> = Vec::new();
+    writeln!(report, "one-round exchange on ethernet, modeled seconds (topology):")?;
+    writeln!(report, "{:>8}{:>22}{:>22}{:>22}{:>22}", "n", "dense", "signs", "q8", "q8pt")?;
+    for n in [8usize, 64, 1024] {
+        write!(report, "{n:>8}")?;
+        for w in formats {
+            let t = w.exchange_time(&m, n, p, segments);
+            let topo = topo_label(Topology::select(w.ring_reducible(), n));
+            write!(report, "{:>22}", format!("{t:.3}s {topo}"))?;
+            modeled.push((n, w.name(), topo, t));
+        }
+        writeln!(report)?;
+    }
+    // the headline number: what the two-level hierarchy buys at n=1024
+    let n_big = 1024;
+    let flat = dsm::comm::topology::flat_message_count(n_big);
+    let g = dsm::comm::topology::best_group_count(n_big);
+    let hier = dsm::comm::topology::hierarchical_message_count(n_big, g);
+    writeln!(
+        report,
+        "\nat n={n_big}: flat gather+broadcast costs {flat} serial message times,\n\
+         the selected hierarchy (g={g}) costs {hier} — {:.1}x fewer; same total\n\
+         volume 2(n-1)·b either way, the hierarchy only reorders who talks.\n",
+        flat as f64 / hier as f64
+    )?;
+
+    // ---- Part B: train the fleet through the fault plan --------------
+    let rounds = if quick { 4 } else { 12 };
+    let base = |tag: &str| {
+        let mut cfg = RunConfig::paper_default(preset);
+        cfg.rounds = rounds;
+        cfg.tau = 3;
+        cfg.n_workers = 4;
+        cfg.corpus_bytes = if quick { 1 << 16 } else { 1 << 18 };
+        cfg.eval_every = 0; // final eval only
+        cfg.eval_batches = 2;
+        cfg.comm = CommModel::preset("ethernet").unwrap();
+        cfg.tag = format!("fleet-{tag}");
+        cfg
+    };
+    let mv = OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 };
+
+    let mut runs: Vec<(&'static str, RunConfig)> = Vec::new();
+    let mut cfg = base("mv-clean");
+    cfg.outer = mv.clone();
+    runs.push(("majority vote, clean", cfg));
+
+    let mut cfg = base("mv-drops");
+    cfg.outer = mv.clone();
+    cfg.faults.drop_prob = 0.10;
+    runs.push(("majority vote, 10% drops", cfg));
+
+    let mut cfg = base("mv-storm");
+    cfg.outer = mv;
+    cfg.faults.churn_prob = 0.25;
+    cfg.faults.drop_prob = 0.10;
+    cfg.faults.tail_prob = 0.3;
+    cfg.faults.tail_scale_s = 2.0;
+    runs.push(("majority vote, churn+drops+tails", cfg));
+
+    let mut cfg = base("dense-corrupt");
+    cfg.faults.corrupt_prob = 0.30;
+    runs.push(("dense mean, 30% corruption", cfg));
+
+    let mut cfg = base("q8-corrupt");
+    cfg.wire = Some(WireFormat::QuantizedI8);
+    cfg.faults.corrupt_prob = 0.30;
+    runs.push(("q8 mean, 30% corruption", cfg));
+
+    writeln!(report, "fleet of 4 under faults ({rounds} rounds x tau=3, native transformer):")?;
+    writeln!(
+        report,
+        "{:<34}{:>9}{:>8}{:>8}{:>9}{:>9}{:>9}{:>11}",
+        "run", "val", "absent", "dropped", "corrupt", "rejected", "noquorum", "straggler"
+    )?;
+    let mut fault_rows: Vec<FaultRow> = Vec::new();
+    for (name, cfg) in runs {
+        let mut t = Trainer::with_backend(cfg, backend.clone())?;
+        let res = t.run()?;
+        let f = res.faults;
+        writeln!(
+            report,
+            "{name:<34}{:>9.4}{:>8}{:>8}{:>9}{:>9}{:>9}{:>10.1}s",
+            res.final_val,
+            f.absent_ranks,
+            f.dropped_payloads,
+            f.corrupted_payloads,
+            f.rejected_payloads,
+            f.no_quorum_rounds,
+            res.clock.straggler_s,
+        )?;
+        fault_rows.push(FaultRow {
+            name,
+            final_val: res.final_val,
+            straggler_s: res.clock.straggler_s,
+            stats: f,
+        });
+    }
+    writeln!(
+        report,
+        "\n(corrupt vs rejected: dense NaN poison is always caught; a flipped\n\
+         q8 byte is a valid encoding and survives with bounded error —\n\
+         only NaN scales are rejected.)"
+    )?;
+
+    writeln!(report, "\nfleet_faults OK")?;
+    print!("{report}");
+
+    if let Some(out) = args.get("out") {
+        // hand-rolled JSON (no serde in-tree), shaped for the CI artifact
+        let mut j = String::from("{\n");
+        writeln!(j, "  \"preset\": \"{preset}\", \"params\": {p}, \"segments\": {segments},")?;
+        writeln!(j, "  \"comm_model\": \"ethernet\",")?;
+        writeln!(j, "  \"modeled_exchange\": [")?;
+        for (i, (n, fmt, topo, t)) in modeled.iter().enumerate() {
+            let sep = if i + 1 == modeled.len() { "" } else { "," };
+            writeln!(
+                j,
+                "    {{\"n\": {n}, \"format\": \"{fmt}\", \"topology\": \"{topo}\", \
+                 \"seconds\": {t:.6}}}{sep}"
+            )?;
+        }
+        writeln!(j, "  ],")?;
+        writeln!(j, "  \"loss_under_faults\": [")?;
+        for (i, r) in fault_rows.iter().enumerate() {
+            let sep = if i + 1 == fault_rows.len() { "" } else { "," };
+            let s = r.stats;
+            writeln!(
+                j,
+                "    {{\"run\": \"{}\", \"final_val\": {:.6}, \"absent_ranks\": {}, \
+                 \"dropped_payloads\": {}, \"corrupted_payloads\": {}, \
+                 \"rejected_payloads\": {}, \"no_quorum_rounds\": {}, \
+                 \"straggler_s\": {:.3}}}{sep}",
+                r.name,
+                r.final_val,
+                s.absent_ranks,
+                s.dropped_payloads,
+                s.corrupted_payloads,
+                s.rejected_payloads,
+                s.no_quorum_rounds,
+                r.straggler_s,
+            )?;
+        }
+        writeln!(j, "  ]\n}}")?;
+        std::fs::write(out, &j)?;
+        eprintln!("wrote {out}");
+    }
+    Ok(())
+}

@@ -1,0 +1,244 @@
+//! Fault injection plan and bookkeeping for the simulated fleet.
+//!
+//! [`FaultPlan`] is a config knob: probabilities for the four modeled
+//! failure modes of a round exchange, all driven by the trainer's
+//! dedicated, checkpointed fault RNG stream (never the training stream,
+//! so toggling faults cannot shift optimization draws):
+//!
+//! * **Elastic membership** (`churn_prob`) — each rank independently
+//!   sits the round out before the local phase starts (left/not-yet-
+//!   joined); at least one rank is always kept. Absent ranks run no
+//!   local steps, consume none of their worker RNG, and rejoin
+//!   automatically next round from the broadcast global.
+//! * **Heavy-tailed stragglers** (`tail_prob`, `tail_scale_s`,
+//!   `tail_alpha`) — with probability `tail_prob` per round, one rank
+//!   stalls for a Pareto(α)-distributed extra delay on top of the
+//!   lognormal jitter the [`super::CommModel`] already bills.
+//! * **Dropped payloads** (`drop_prob`) — a participating rank's packed
+//!   payload is lost in transit: it never reaches the aggregation point
+//!   (not billed, not aggregated) and the round proceeds over the
+//!   `n_effective` survivors.
+//! * **Corrupted payloads** (`corrupt_prob`) — a payload arrives
+//!   damaged: a bit-flipped quantized byte or sign word (a valid
+//!   encoding — survived, with bounded error) or a NaN-poisoned scale /
+//!   dense coordinate (detected by the finiteness check and rejected
+//!   from the aggregate, loudly counted).
+//!
+//! [`FaultStats`] counts what actually happened, rides in the
+//! checkpoint (same exact 16-bit-limb f32 encoding as the clock), and
+//! is surfaced on the run result so experiments can report survival.
+
+use anyhow::{ensure, Result};
+
+/// Per-round fault injection probabilities. `FaultPlan::none()` (the
+/// default) disables every mode and keeps the trainer on the exact
+/// fault-free code path, preserving all bit-identity invariants.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultPlan {
+    /// Per-rank probability of sitting a round out entirely.
+    pub churn_prob: f64,
+    /// Per-payload probability of being dropped in transit.
+    pub drop_prob: f64,
+    /// Per-payload probability of arriving corrupted.
+    pub corrupt_prob: f64,
+    /// Per-round probability of one heavy-tail straggler event.
+    pub tail_prob: f64,
+    /// Pareto scale (seconds) of the heavy-tail stall.
+    pub tail_scale_s: f64,
+    /// Pareto shape α; smaller is heavier-tailed (α ≤ 1 has no mean).
+    pub tail_alpha: f64,
+}
+
+impl FaultPlan {
+    /// No faults: the trainer takes the exact pre-fault code path.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            churn_prob: 0.0,
+            drop_prob: 0.0,
+            corrupt_prob: 0.0,
+            tail_prob: 0.0,
+            tail_scale_s: 1.0,
+            tail_alpha: 1.5,
+        }
+    }
+
+    /// Whether any fault mode can fire.
+    pub fn is_active(&self) -> bool {
+        self.churn_prob > 0.0
+            || self.drop_prob > 0.0
+            || self.corrupt_prob > 0.0
+            || self.tail_prob > 0.0
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        for (name, p) in [
+            ("churn_prob", self.churn_prob),
+            ("drop_prob", self.drop_prob),
+            ("corrupt_prob", self.corrupt_prob),
+            ("tail_prob", self.tail_prob),
+        ] {
+            ensure!((0.0..=1.0).contains(&p) && p.is_finite(), "faults.{name} = {p} not in [0, 1]");
+        }
+        ensure!(self.churn_prob < 1.0, "faults.churn_prob = 1 would empty every round");
+        ensure!(
+            self.tail_scale_s.is_finite() && self.tail_scale_s >= 0.0,
+            "faults.tail_scale_s = {} must be finite and >= 0",
+            self.tail_scale_s
+        );
+        ensure!(
+            self.tail_alpha.is_finite() && self.tail_alpha > 0.0,
+            "faults.tail_alpha = {} must be finite and > 0",
+            self.tail_alpha
+        );
+        Ok(())
+    }
+
+    /// One-token summary for run descriptions / cache keys; empty when
+    /// inactive so fault-free keys are unchanged.
+    pub fn describe(&self) -> String {
+        if !self.is_active() {
+            return String::new();
+        }
+        format!(
+            " faults[churn={},drop={},corrupt={},tail={}x{}s@a{}]",
+            self.churn_prob,
+            self.drop_prob,
+            self.corrupt_prob,
+            self.tail_prob,
+            self.tail_scale_s,
+            self.tail_alpha
+        )
+    }
+}
+
+impl Default for FaultPlan {
+    fn default() -> FaultPlan {
+        FaultPlan::none()
+    }
+}
+
+/// What the injected faults actually did, accumulated over a run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Ranks that sat a round out (elastic membership).
+    pub absent_ranks: u64,
+    /// Payloads lost in transit.
+    pub dropped_payloads: u64,
+    /// Payloads that arrived corrupted (survived or rejected).
+    pub corrupted_payloads: u64,
+    /// Corrupted payloads the finiteness check excluded from the round.
+    pub rejected_payloads: u64,
+    /// Rounds where no payload survived; the global stays put.
+    pub no_quorum_rounds: u64,
+}
+
+impl FaultStats {
+    /// Checkpoint encoding: 5 counters × four exact 16-bit limbs.
+    pub const F32_WORDS: usize = 20;
+
+    fn fields(&self) -> [u64; 5] {
+        [
+            self.absent_ranks,
+            self.dropped_payloads,
+            self.corrupted_payloads,
+            self.rejected_payloads,
+            self.no_quorum_rounds,
+        ]
+    }
+
+    pub fn to_f32_words(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(Self::F32_WORDS);
+        for v in self.fields() {
+            for shift in [0u32, 16, 32, 48] {
+                out.push(((v >> shift) & 0xFFFF) as f32);
+            }
+        }
+        out
+    }
+
+    pub fn from_f32_words(words: &[f32]) -> Option<FaultStats> {
+        if words.len() != Self::F32_WORDS {
+            return None;
+        }
+        let mut vals = [0u64; 5];
+        for (i, v) in vals.iter_mut().enumerate() {
+            for (j, shift) in [0u32, 16, 32, 48].iter().enumerate() {
+                let x = words[i * 4 + j] as f64;
+                if !(0.0..65536.0).contains(&x) || x.fract() != 0.0 {
+                    return None;
+                }
+                *v |= (x as u64) << shift;
+            }
+        }
+        Some(FaultStats {
+            absent_ranks: vals[0],
+            dropped_payloads: vals[1],
+            corrupted_payloads: vals[2],
+            rejected_payloads: vals[3],
+            no_quorum_rounds: vals[4],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_is_inactive_and_valid() {
+        let p = FaultPlan::none();
+        assert!(!p.is_active());
+        assert!(p.validate().is_ok());
+        assert!(p.describe().is_empty());
+    }
+
+    #[test]
+    fn any_nonzero_knob_activates() {
+        for f in [
+            |p: &mut FaultPlan| p.churn_prob = 0.1,
+            |p: &mut FaultPlan| p.drop_prob = 0.1,
+            |p: &mut FaultPlan| p.corrupt_prob = 0.1,
+            |p: &mut FaultPlan| p.tail_prob = 0.1,
+        ] {
+            let mut p = FaultPlan::none();
+            f(&mut p);
+            assert!(p.is_active());
+            assert!(p.validate().is_ok());
+            assert!(p.describe().contains("faults["));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_probabilities() {
+        let mut p = FaultPlan::none();
+        p.drop_prob = 1.5;
+        assert!(p.validate().is_err());
+        let mut p = FaultPlan::none();
+        p.churn_prob = 1.0;
+        assert!(p.validate().is_err(), "churn=1 empties every round");
+        let mut p = FaultPlan::none();
+        p.corrupt_prob = f64::NAN;
+        assert!(p.validate().is_err());
+        let mut p = FaultPlan::none();
+        p.tail_alpha = 0.0;
+        assert!(p.validate().is_err());
+    }
+
+    #[test]
+    fn stats_roundtrip_exactly_through_f32_words() {
+        let s = FaultStats {
+            absent_ranks: u64::MAX,
+            dropped_payloads: 1 << 40,
+            corrupted_payloads: 3,
+            rejected_payloads: 0,
+            no_quorum_rounds: 65535,
+        };
+        let words = s.to_f32_words();
+        assert_eq!(words.len(), FaultStats::F32_WORDS);
+        assert_eq!(FaultStats::from_f32_words(&words), Some(s));
+        assert_eq!(FaultStats::from_f32_words(&[1.0]), None);
+        let mut bad = words.clone();
+        bad[0] = 0.5;
+        assert_eq!(FaultStats::from_f32_words(&bad), None);
+    }
+}

@@ -16,15 +16,37 @@
 //! log-normal worker delays (Dean et al. 2012's tail-latency story).
 //! Compressed rounds are the exception: neither a majority tally nor a
 //! per-rank-scaled i8 sum is ring-reducible in its own wire format, so
-//! [`SimClock::charge_vote_allreduce`] models the practical
-//! gather+broadcast server topology instead.
+//! they bill a server topology instead — the flat gather+broadcast
+//! ([`SimClock::charge_vote_allreduce`]) at small n, and the two-level
+//! hierarchical aggregation ([`SimClock::charge_hierarchical`], group
+//! heads pre-aggregate and exchange among themselves) once the fleet is
+//! large enough for √n levels to beat the flat gather's linear cost.
+//! Which applies is decided by [`topology::Topology::select`], a pure
+//! function of (format, n) shared with the wire-format cost helper and
+//! the trainer's data path.
 //!
 //! Round billing is payload-driven: the trainer hands
 //! [`SimClock::charge_exchange`] the [`crate::dist::WirePayload`] the
 //! ranks exchange, and the clock reads the byte count and topology off
 //! the payload itself — accounting and data path cannot drift apart.
-//! Compute time is *measured* (the PJRT executions are real); comm time
-//! is *modeled*; the trainer adds both onto a [`SimClock`].
+//! Under an active [`faults::FaultPlan`] a round may lose payloads in
+//! transit; [`SimClock::charge_exchange_among`] then bills exactly what
+//! moved — `arrived − 1` messages up, `n_active − 1` down — so billing
+//! and data path stay consistent under failure too. Compute time is
+//! *measured* (the PJRT executions are real); comm time is *modeled*;
+//! the trainer adds both onto a [`SimClock`].
+//!
+//! Stream hygiene: [`CommModel::straggler_delay`] consumes no RNG draws
+//! when stragglers are disabled (`sigma == 0`), so callers must feed it
+//! a **dedicated** stream — the trainer uses its checkpointed
+//! `fault_rng`, never the training stream — or toggling stragglers
+//! would silently shift every downstream optimization draw.
+
+pub mod faults;
+pub mod topology;
+
+pub use faults::{FaultPlan, FaultStats};
+pub use topology::Topology;
 
 use crate::dist::WirePayload;
 use crate::util::rng::Rng;
@@ -114,7 +136,31 @@ impl CommModel {
         (n as f64 - 1.0) * (self.latency_s + bytes as f64 / self.bandwidth_bps)
     }
 
+    /// Two-level hierarchical aggregation: n ranks in `groups` groups of
+    /// m = ⌈n/groups⌉. The groups gather into their heads in parallel
+    /// (`gather_time(m)`), the heads run a flat exchange among
+    /// themselves (`gather_time(g) + broadcast_time(g)`), and each head
+    /// broadcasts the result down its group (`broadcast_time(m)`).
+    /// Degenerates to the flat gather+broadcast at `groups == 1` and
+    /// moves the same `2(n-1)·bytes` total volume — only the serial
+    /// critical path shrinks, from O(n) to O(√n) message times at the
+    /// optimal group count ([`topology::best_group_count`]).
+    pub fn hierarchical_time(&self, n: usize, groups: usize, bytes: u64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let g = groups.clamp(1, n);
+        let m = crate::dist::div_up(n, g);
+        self.gather_time(m, bytes)
+            + self.gather_time(g, bytes)
+            + self.broadcast_time(g, bytes)
+            + self.broadcast_time(m, bytes)
+    }
+
     /// Synchronization-barrier penalty: max of n log-normal delays.
+    ///
+    /// Consumes **no** draws when stragglers are off — pass a dedicated
+    /// stream (see the module docs on stream hygiene).
     pub fn straggler_delay(&self, n: usize, rng: &mut Rng) -> f64 {
         if self.straggler_sigma == 0.0 || self.straggler_scale_s == 0.0 {
             return 0.0;
@@ -146,13 +192,16 @@ impl SimClock {
     /// data cannot diverge — there is no caller-side byte formula left
     /// to pick by optimizer flag.
     ///
-    /// Topology follows the format
-    /// ([`WirePayload::ring_reducible`]): a dense f32 mean is
-    /// ring-reducible and bills [`charge_allreduce`](Self::charge_allreduce);
-    /// packed sign votes and per-rank-scaled i8 payloads cannot be
-    /// partially aggregated in their own encoding, so they bill the
-    /// gather+broadcast server topology
-    /// ([`charge_vote_allreduce`](Self::charge_vote_allreduce)).
+    /// Topology comes from [`Topology::select`] on the format
+    /// ([`WirePayload::ring_reducible`]) and the fleet size: a dense f32
+    /// mean is ring-reducible and bills
+    /// [`charge_allreduce`](Self::charge_allreduce); packed sign votes
+    /// and per-rank-scaled i8 payloads cannot be partially aggregated in
+    /// their own encoding, so they bill the flat gather+broadcast server
+    /// topology ([`charge_vote_allreduce`](Self::charge_vote_allreduce))
+    /// at small n and the two-level
+    /// [`charge_hierarchical`](Self::charge_hierarchical) once the fleet
+    /// clears [`topology::HIERARCHICAL_MIN_RANKS`].
     pub fn charge_exchange(
         &mut self,
         model: &CommModel,
@@ -161,10 +210,71 @@ impl SimClock {
         rng: &mut Rng,
     ) {
         let bytes = payload.wire_bytes();
-        if payload.ring_reducible() {
-            self.charge_allreduce(model, n, bytes, rng);
-        } else {
-            self.charge_vote_allreduce(model, n, bytes, rng);
+        match Topology::select(payload.ring_reducible(), n) {
+            Topology::Ring => self.charge_allreduce(model, n, bytes, rng),
+            Topology::FlatGatherBroadcast => self.charge_vote_allreduce(model, n, bytes, rng),
+            Topology::Hierarchical { groups } => {
+                self.charge_hierarchical(model, n, groups, bytes, rng)
+            }
+        }
+    }
+
+    /// Charge a round where only `arrived` of the `n_active` member
+    /// payloads made it to the aggregation point (dropped payloads under
+    /// a [`FaultPlan`]). Bills exactly what moved: `arrived − 1`
+    /// messages on the up-leg (a dropped payload never reaches the
+    /// server, so it is not billed), `n_active − 1` deliveries on the
+    /// down-leg. With
+    /// `arrived == n_active` this delegates to
+    /// [`charge_exchange`](Self::charge_exchange) and is bitwise
+    /// identical to the fault-free billing.
+    pub fn charge_exchange_among(
+        &mut self,
+        model: &CommModel,
+        n_active: usize,
+        arrived: usize,
+        payload: &WirePayload,
+        rng: &mut Rng,
+    ) {
+        assert!(arrived <= n_active, "{arrived} payloads arrived from {n_active} active ranks");
+        if arrived == n_active {
+            return self.charge_exchange(model, n_active, payload, rng);
+        }
+        // degraded round: flat gather of what arrived, broadcast of the
+        // aggregate to every active rank
+        let bytes = payload.wire_bytes();
+        self.comm_s += model.gather_time(arrived, bytes) + model.broadcast_time(n_active, bytes);
+        self.straggler_s += model.straggler_delay(n_active, rng);
+        self.comm_rounds += 1;
+        let msgs = arrived.saturating_sub(1) + n_active.saturating_sub(1);
+        if msgs > 0 {
+            let moved = (bytes as u128) * msgs as u128;
+            self.bytes_communicated = self
+                .bytes_communicated
+                .saturating_add(moved.min(u64::MAX as u128) as u64);
+        }
+    }
+
+    /// Charge a two-level hierarchical exchange ([`CommModel::hierarchical_time`]):
+    /// same `2(n-1)·bytes` volume as the flat server topology — group
+    /// members send up and receive down exactly once, heads exchange
+    /// among themselves — but an O(√n) serial critical path.
+    pub fn charge_hierarchical(
+        &mut self,
+        model: &CommModel,
+        n: usize,
+        groups: usize,
+        wire_bytes: u64,
+        rng: &mut Rng,
+    ) {
+        self.comm_s += model.hierarchical_time(n, groups, wire_bytes);
+        self.straggler_s += model.straggler_delay(n, rng);
+        self.comm_rounds += 1;
+        if n > 1 {
+            let moved = (wire_bytes as u128) * 2 * (n as u128 - 1);
+            self.bytes_communicated = self
+                .bytes_communicated
+                .saturating_add(moved.min(u64::MAX as u128) as u64);
         }
     }
 
@@ -536,5 +646,136 @@ mod tests {
         clock.charge_allreduce(&m, 64, u64::MAX / 4, &mut rng);
         assert_eq!(clock.comm_s, 0.0);
         assert_eq!(clock.straggler_s, 0.0);
+    }
+
+    #[test]
+    fn collective_times_vanish_at_n_le_1() {
+        let m = CommModel::preset("wan").unwrap();
+        for n in [0usize, 1] {
+            assert_eq!(m.allreduce_time(n, 1 << 30), 0.0, "allreduce n={n}");
+            assert_eq!(m.gather_time(n, 1 << 30), 0.0, "gather n={n}");
+            assert_eq!(m.broadcast_time(n, 1 << 30), 0.0, "broadcast n={n}");
+            assert_eq!(m.hierarchical_time(n, 1, 1 << 30), 0.0, "hier n={n}");
+        }
+    }
+
+    #[test]
+    fn broadcast_rounds_are_ceil_log2_at_non_powers_of_two() {
+        let m = CommModel {
+            latency_s: 1e-3,
+            bandwidth_bps: 1e6,
+            straggler_sigma: 0.0,
+            straggler_scale_s: 0.0,
+        };
+        let per_msg = 1e-3 + 1000.0 / 1e6;
+        // ceil(log2 3) = 2, ceil(log2 5) = 3, ceil(log2 1024) = 10
+        for (n, rounds) in [(2usize, 1.0), (3, 2.0), (5, 3.0), (1024, 10.0)] {
+            let t = m.broadcast_time(n, 1000);
+            assert!((t - rounds * per_msg).abs() < 1e-12, "n={n}: {t}");
+        }
+        // and the gather stays exactly linear at the same sizes
+        for n in [3usize, 1024] {
+            let t = m.gather_time(n, 1000);
+            assert!((t - (n as f64 - 1.0) * per_msg).abs() < 1e-9, "n={n}: {t}");
+        }
+    }
+
+    #[test]
+    fn large_n_crossover_flat_loses_to_ring_and_to_hierarchical() {
+        // satellite pin: at n = 1024 the flat gather's (n-1) serial
+        // messages lose both to the bandwidth-saturating dense ring and
+        // to the two-level hierarchy; at n = 4 flat still wins the
+        // small-payload race against the ring's 2(n-1) latencies
+        let m = CommModel::preset("eth").unwrap();
+        let b = 1u64 << 20;
+        let n = 1024;
+        let flat = m.gather_time(n, b) + m.broadcast_time(n, b);
+        let ring = m.allreduce_time(n, b * 4); // dense carries 4x the bytes
+        let g = topology::best_group_count(n);
+        let hier = m.hierarchical_time(n, g, b);
+        assert!(flat > ring, "flat {flat} vs dense ring {ring} at n={n}");
+        assert!(hier * 8.0 < flat, "hier {hier} vs flat {flat} at n={n}");
+        assert!(hier < ring, "hier {hier} must repair the loss to the ring {ring}");
+    }
+
+    #[test]
+    fn hierarchical_time_degenerates_to_flat_at_one_group() {
+        let m = CommModel::preset("eth").unwrap();
+        for n in [2usize, 7, 64] {
+            let flat = m.gather_time(n, 4096) + m.broadcast_time(n, 4096);
+            let one = m.hierarchical_time(n, 1, 4096);
+            assert_eq!(one.to_bits(), flat.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn charge_exchange_goes_hierarchical_at_scale_and_stays_flat_below() {
+        use crate::dist::WireFormat;
+        let m = CommModel::preset("eth").unwrap();
+        let p = 1 << 20;
+        let payload = WirePayload::with_len(WireFormat::QuantizedI8, p);
+        let b = payload.wire_bytes();
+
+        // below the threshold: bitwise the flat gather+broadcast
+        let mut small = SimClock::default();
+        small.charge_exchange(&m, 8, &payload, &mut Rng::new(3));
+        let mut flat = SimClock::default();
+        flat.charge_vote_allreduce(&m, 8, b, &mut Rng::new(3));
+        assert_eq!(small.comm_s.to_bits(), flat.comm_s.to_bits());
+
+        // at n = 1024: bitwise the hierarchical charge, same total bytes
+        // as the flat topology would have moved
+        let n = 1024;
+        let mut big = SimClock::default();
+        big.charge_exchange(&m, n, &payload, &mut Rng::new(3));
+        let g = match Topology::select(false, n) {
+            Topology::Hierarchical { groups } => groups,
+            other => panic!("expected hierarchical at n={n}, got {other:?}"),
+        };
+        let mut hier = SimClock::default();
+        hier.charge_hierarchical(&m, n, g, b, &mut Rng::new(3));
+        assert_eq!(big.comm_s.to_bits(), hier.comm_s.to_bits());
+        assert_eq!(big.bytes_communicated, b * 2 * (n as u64 - 1));
+        // and far below what the flat topology would have billed
+        let mut flat_big = SimClock::default();
+        flat_big.charge_vote_allreduce(&m, n, b, &mut Rng::new(3));
+        assert!(big.comm_s * 8.0 < flat_big.comm_s, "{} vs {}", big.comm_s, flat_big.comm_s);
+    }
+
+    #[test]
+    fn degraded_rounds_bill_exactly_what_moved() {
+        use crate::dist::WireFormat;
+        let m = CommModel {
+            latency_s: 1e-3,
+            bandwidth_bps: 1e6,
+            straggler_sigma: 0.0,
+            straggler_scale_s: 0.0,
+        };
+        let payload = WirePayload::with_len(WireFormat::QuantizedI8, 988);
+        let b = payload.wire_bytes(); // 988 + 12 = 1000
+        assert_eq!(b, 1000);
+
+        // all arrived == fault-free billing, bit for bit
+        let mut full = SimClock::default();
+        full.charge_exchange_among(&m, 4, 4, &payload, &mut Rng::new(5));
+        let mut clean = SimClock::default();
+        clean.charge_exchange(&m, 4, &payload, &mut Rng::new(5));
+        assert_eq!(full.comm_s.to_bits(), clean.comm_s.to_bits());
+        assert_eq!(full.bytes_communicated, clean.bytes_communicated);
+
+        // 3 of 4 arrived: gather(3) + broadcast(4), (3-1)+(4-1) messages
+        let mut degraded = SimClock::default();
+        degraded.charge_exchange_among(&m, 4, 3, &payload, &mut Rng::new(5));
+        let per_msg = 1e-3 + b as f64 / 1e6;
+        let expected = 2.0 * per_msg + 2.0 * per_msg; // gather 2 msgs, bcast ceil(log2 4)=2 rounds
+        assert!((degraded.comm_s - expected).abs() < 1e-12, "{}", degraded.comm_s);
+        assert_eq!(degraded.bytes_communicated, b * (2 + 3));
+        assert_eq!(degraded.comm_rounds, 1);
+
+        // one survivor of 4: nothing gathers, the broadcast still runs
+        let mut lone = SimClock::default();
+        lone.charge_exchange_among(&m, 4, 1, &payload, &mut Rng::new(5));
+        assert!((lone.comm_s - 2.0 * per_msg).abs() < 1e-12);
+        assert_eq!(lone.bytes_communicated, b * 3);
     }
 }

@@ -1,0 +1,193 @@
+//! Aggregation topology selection for a round exchange.
+//!
+//! Three topologies cost a round under the α-β model:
+//!
+//! * **Ring** all-reduce — only for payloads whose aggregation is an
+//!   elementwise sum (dense f32): `2(n-1)α + 2(n-1)/n · b/β`.
+//! * **Flat gather+broadcast** — every rank sends its payload to rank 0,
+//!   which aggregates and broadcasts the result:
+//!   `(n-1)(α + b/β) + ⌈log2 n⌉(α + b/β)`. Fine at small n, linear in n.
+//! * **Hierarchical two-level** — the n ranks split into g groups of
+//!   m = ⌈n/g⌉; each group gathers into its head (groups in parallel),
+//!   the g heads run a flat gather+broadcast among themselves, and each
+//!   head broadcasts the result down its group:
+//!   `(m-1) + (g-1) + ⌈log2 g⌉ + ⌈log2 m⌉` message times. With g ≈ √n
+//!   that is O(√n) instead of the flat topology's O(n), which is what
+//!   keeps the quantized formats viable at thousand-rank scale.
+//!
+//! Every term above is `count · (α + b/β)`, so which topology is fastest
+//! depends on `n` alone — never on the model constants or the payload
+//! size. [`Topology::select`] is therefore a pure function of
+//! (ring-reducibility, n), and the clock, the wire-format cost helper,
+//! and the trainer's data path all route through it so billing and data
+//! movement can never disagree.
+
+use crate::dist::div_up;
+
+/// Fleet size at which the selector starts considering the hierarchical
+/// topology. Strictly by message count it already wins at n = 4, but a
+/// two-level scheme at that scale is coordination overhead for no real
+/// gain (and the small-fleet cost model is pinned bitwise by tests), so
+/// small fleets keep the flat topology.
+pub const HIERARCHICAL_MIN_RANKS: usize = 16;
+
+/// How a non-ring round exchange is laid out across the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Topology {
+    /// Bandwidth-optimal ring all-reduce (dense payloads only).
+    Ring,
+    /// Single-level gather into rank 0 + tree broadcast.
+    FlatGatherBroadcast,
+    /// Two-level: `groups` group heads aggregate in parallel, exchange
+    /// among themselves, and broadcast back down.
+    Hierarchical { groups: usize },
+}
+
+/// ⌈log2 n⌉ as an integer (0 for n ≤ 1) — the binomial-tree broadcast
+/// round count.
+fn ceil_log2(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+/// Serial message-times of the flat gather+broadcast at n ranks.
+pub fn flat_message_count(n: usize) -> usize {
+    if n <= 1 {
+        0
+    } else {
+        (n - 1) + ceil_log2(n)
+    }
+}
+
+/// Serial message-times of the two-level topology with g groups.
+pub fn hierarchical_message_count(n: usize, groups: usize) -> usize {
+    if n <= 1 {
+        return 0;
+    }
+    let g = groups.clamp(1, n);
+    let m = div_up(n, g);
+    (m - 1) + ceil_log2(m) + (g - 1) + ceil_log2(g)
+}
+
+/// The group count minimizing [`hierarchical_message_count`] at n ranks
+/// (smallest such g on ties, so selection is deterministic). The optimum
+/// sits near √n; the scan is exact and cheap at simulated fleet sizes.
+pub fn best_group_count(n: usize) -> usize {
+    if n <= 1 {
+        return 1;
+    }
+    let mut best_g = 1;
+    let mut best = hierarchical_message_count(n, 1);
+    for g in 2..=n {
+        let c = hierarchical_message_count(n, g);
+        if c < best {
+            best = c;
+            best_g = g;
+        }
+    }
+    best_g
+}
+
+impl Topology {
+    /// Pick the topology for one round exchange: ring iff the payload
+    /// ring-reduces (dense), otherwise hierarchical once the fleet is
+    /// large enough for two levels to beat the flat gather, otherwise
+    /// flat. Pure in (ring_reducible, n) — see the module docs for why
+    /// the model constants and byte count cannot change the answer.
+    pub fn select(ring_reducible: bool, n: usize) -> Topology {
+        if ring_reducible {
+            return Topology::Ring;
+        }
+        if n >= HIERARCHICAL_MIN_RANKS {
+            let g = best_group_count(n);
+            if hierarchical_message_count(n, g) < flat_message_count(n) {
+                return Topology::Hierarchical { groups: g };
+            }
+        }
+        Topology::FlatGatherBroadcast
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_matches_the_float_formula() {
+        for n in 1..=4096usize {
+            let expect = if n <= 1 { 0.0 } else { (n as f64).log2().ceil() };
+            assert_eq!(ceil_log2(n) as f64, expect, "n={n}");
+        }
+    }
+
+    #[test]
+    fn degenerate_group_counts_reduce_to_flat() {
+        for n in [2usize, 3, 16, 100, 1024] {
+            // one group: the "head exchange" is a no-op
+            assert_eq!(hierarchical_message_count(n, 1), flat_message_count(n));
+            // n groups: every rank is a head; the group phases vanish
+            assert_eq!(hierarchical_message_count(n, n), flat_message_count(n));
+        }
+    }
+
+    #[test]
+    fn best_group_count_is_near_sqrt_n_and_optimal() {
+        for n in [16usize, 64, 100, 256, 1000, 1024, 4096] {
+            let g = best_group_count(n);
+            let best = hierarchical_message_count(n, g);
+            for cand in 1..=n {
+                assert!(
+                    hierarchical_message_count(n, cand) >= best,
+                    "n={n}: g={cand} beats the reported optimum g={g}"
+                );
+            }
+            let sqrt = (n as f64).sqrt();
+            assert!(
+                (g as f64) >= sqrt / 4.0 && (g as f64) <= sqrt * 4.0,
+                "n={n}: optimal g={g} far from sqrt(n)={sqrt:.1}"
+            );
+        }
+    }
+
+    #[test]
+    fn hierarchical_wins_by_orders_of_magnitude_at_large_n() {
+        let n = 1024;
+        let g = best_group_count(n);
+        let hier = hierarchical_message_count(n, g);
+        let flat = flat_message_count(n);
+        assert!(hier * 8 < flat, "hier {hier} vs flat {flat} at n={n}");
+    }
+
+    #[test]
+    fn selector_routes_by_format_and_fleet_size() {
+        // dense always rings, at any n
+        for n in [1usize, 4, 1024] {
+            assert_eq!(Topology::select(true, n), Topology::Ring);
+        }
+        // small vote fleets keep the flat topology (bitwise-pinned cost)
+        for n in 1..HIERARCHICAL_MIN_RANKS {
+            assert_eq!(Topology::select(false, n), Topology::FlatGatherBroadcast, "n={n}");
+        }
+        // large vote fleets go hierarchical
+        for n in [HIERARCHICAL_MIN_RANKS, 64, 1000, 1024] {
+            match Topology::select(false, n) {
+                Topology::Hierarchical { groups } => {
+                    assert!(groups > 1 && groups < n, "n={n}: groups={groups}")
+                }
+                other => panic!("n={n}: expected hierarchical, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn selection_is_independent_of_payload_bytes_by_construction() {
+        // the counts are byte-free; this pins that nobody reintroduces a
+        // byte term into the comparison
+        let n = 1024;
+        let g = best_group_count(n);
+        assert!(hierarchical_message_count(n, g) < flat_message_count(n));
+    }
+}

@@ -10,7 +10,7 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
-use crate::comm::CommModel;
+use crate::comm::{CommModel, FaultPlan};
 use crate::dist::WireFormat;
 use crate::optim::BaseOptConfig;
 use crate::outer::OuterConfig;
@@ -78,6 +78,14 @@ pub struct RunConfig {
     /// uncontended `compute_s` readings should set this (losing the
     /// round-level speedup, keeping the exact same losses).
     pub sequential_workers: bool,
+    /// Fault injection for fleet-robustness studies (`[faults]` table /
+    /// `--churn-prob` etc.): elastic membership, dropped and corrupted
+    /// payloads, heavy-tailed stragglers. [`FaultPlan::none`] (the
+    /// default) takes the bitwise-pinned fault-free path; an active
+    /// plan draws from the trainer's dedicated checkpointed fault
+    /// stream, is itself deterministic in the seed, and splits the
+    /// experiment cache via [`RunConfig::describe`].
+    pub faults: FaultPlan,
 }
 
 /// Peak local LR per preset, scaled-down analogue of the paper's Table 1.
@@ -119,6 +127,7 @@ impl RunConfig {
             heterogeneous: false,
             wire: None,
             sequential_workers: false,
+            faults: FaultPlan::none(),
         }
     }
 
@@ -194,6 +203,27 @@ impl RunConfig {
                     .ok_or_else(|| anyhow!("unknown comm preset `{name}`"))?;
             }
         }
+        if let Some(t) = doc.get("faults") {
+            let gff = |key: &str| t.get(key).and_then(Json::as_f64);
+            if let Some(v) = gff("churn_prob") {
+                cfg.faults.churn_prob = v;
+            }
+            if let Some(v) = gff("drop_prob") {
+                cfg.faults.drop_prob = v;
+            }
+            if let Some(v) = gff("corrupt_prob") {
+                cfg.faults.corrupt_prob = v;
+            }
+            if let Some(v) = gff("tail_prob") {
+                cfg.faults.tail_prob = v;
+            }
+            if let Some(v) = gff("tail_scale_s") {
+                cfg.faults.tail_scale_s = v;
+            }
+            if let Some(v) = gff("tail_alpha") {
+                cfg.faults.tail_alpha = v;
+            }
+        }
 
         // CLI overrides (take precedence over file)
         cfg.n_workers = args.usize_or("workers", cfg.n_workers).map_err(|e| anyhow!(e))?;
@@ -243,6 +273,13 @@ impl RunConfig {
         {
             cfg.sequential_workers = true;
         }
+        let f = &mut cfg.faults;
+        f.churn_prob = args.f64_or("churn-prob", f.churn_prob).map_err(|e| anyhow!(e))?;
+        f.drop_prob = args.f64_or("drop-prob", f.drop_prob).map_err(|e| anyhow!(e))?;
+        f.corrupt_prob = args.f64_or("corrupt-prob", f.corrupt_prob).map_err(|e| anyhow!(e))?;
+        f.tail_prob = args.f64_or("tail-prob", f.tail_prob).map_err(|e| anyhow!(e))?;
+        f.tail_scale_s = args.f64_or("tail-scale-s", f.tail_scale_s).map_err(|e| anyhow!(e))?;
+        f.tail_alpha = args.f64_or("tail-alpha", f.tail_alpha).map_err(|e| anyhow!(e))?;
         if let Some(dir) = args.get("log-dir") {
             cfg.log_dir = Some(PathBuf::from(dir));
         }
@@ -261,8 +298,15 @@ impl RunConfig {
         anyhow::ensure!(self.rounds >= 1, "rounds >= 1");
         anyhow::ensure!((0.0..0.9).contains(&self.val_fraction), "val_fraction in [0, 0.9)");
         anyhow::ensure!(self.corpus_bytes >= 1 << 14, "corpus too small");
+        self.faults.validate()?;
         if self.mode == TrainMode::Standalone {
             anyhow::ensure!(self.tau == 1, "standalone mode communicates every step (tau=1)");
+            // the fault machinery lives in the outer-round exchange;
+            // the per-step all-reduce baseline has no round to degrade
+            anyhow::ensure!(
+                !self.faults.is_active(),
+                "standalone mode has no outer rounds to inject faults into"
+            );
             // standalone has no outer round exchange: a wire override
             // would label the run (and its cache key) with a format the
             // per-step dense gradient all-reduce never uses
@@ -291,7 +335,7 @@ impl RunConfig {
     /// so everything trajectory-determining belongs here).
     pub fn describe(&self) -> String {
         format!(
-            "{} n={} tau={} T={} base={} outer={} wire={} comm-rounds={} mode={:?}",
+            "{} n={} tau={} T={} base={} outer={} wire={} comm-rounds={} mode={:?}{}",
             self.preset,
             self.n_workers,
             self.tau,
@@ -300,7 +344,8 @@ impl RunConfig {
             self.outer.name(),
             self.resolved_wire().name(),
             self.rounds,
-            self.mode
+            self.mode,
+            self.faults.describe()
         )
     }
 }
@@ -434,6 +479,35 @@ preset = "wan"
         assert!(cfg.describe().contains("wire=q8"));
         cfg.wire = Some(WireFormat::QuantizedI8PerTensor);
         assert!(cfg.describe().contains("wire=q8pt"));
+    }
+
+    #[test]
+    fn fault_plan_parses_from_file_and_cli_and_splits_the_cache_key() {
+        // default: inactive, invisible in describe()
+        let cfg = RunConfig::from_toml_and_args(None, &args("")).unwrap();
+        assert!(!cfg.faults.is_active());
+        assert!(!cfg.describe().contains("faults["));
+
+        let text = "[faults]\nchurn_prob = 0.05\ndrop_prob = 0.1\ntail_prob = 0.01\n";
+        let cfg = RunConfig::from_toml_and_args(Some(text), &args("")).unwrap();
+        assert!(cfg.faults.is_active());
+        assert_eq!(cfg.faults.churn_prob, 0.05);
+        assert_eq!(cfg.faults.drop_prob, 0.1);
+        assert!(cfg.describe().contains("faults["), "{}", cfg.describe());
+
+        // CLI beats file
+        let cfg = RunConfig::from_toml_and_args(Some(text), &args("--drop-prob 0.25")).unwrap();
+        assert_eq!(cfg.faults.drop_prob, 0.25);
+
+        // out-of-range probabilities are rejected at validation
+        assert!(RunConfig::from_toml_and_args(None, &args("--drop-prob 1.5")).is_err());
+        assert!(RunConfig::from_toml_and_args(None, &args("--churn-prob 1.0")).is_err());
+        // standalone mode has no outer rounds to degrade
+        let standalone = RunConfig::from_toml_and_args(
+            None,
+            &args("--mode standalone --tau 1 --drop-prob 0.1"),
+        );
+        assert!(standalone.is_err());
     }
 
     #[test]

@@ -168,6 +168,38 @@ pub fn quantize_diff_slice(start: &[f32], end: &[f32], out: &mut [u8]) -> f32 {
     scale
 }
 
+/// Quantize a raw value vector (not a start−end difference) to symmetric
+/// i8 with one scale, same arithmetic as [`quantize_diff_slice`] — used
+/// by the hierarchical exchange's group heads to re-quantize a decoded
+/// group-mean difference before it travels up a level. Same non-finite
+/// poisoning contract: any non-finite value encodes a NaN scale.
+pub fn quantize_slice(vals: &[f32], out: &mut [u8]) -> f32 {
+    assert_eq!(
+        out.len(),
+        vals.len(),
+        "quantize: output holds {} bytes, need {}",
+        out.len(),
+        vals.len()
+    );
+    let mut max = 0.0f32;
+    let mut finite = true;
+    for &v in vals {
+        finite &= v.is_finite();
+        max = max.max(v.abs());
+    }
+    let scale = if finite { max / 127.0 } else { f32::NAN };
+    if scale == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = 1.0 / scale;
+    for (&v, o) in vals.iter().zip(out.iter_mut()) {
+        let q = (v * inv).round().clamp(-127.0, 127.0);
+        *o = q as i8 as u8;
+    }
+    scale
+}
+
 /// Decode one byte produced by [`quantize_diff_into`] back to f32.
 pub fn dequantize_i8(byte: u8, scale: f32) -> f32 {
     (byte as i8) as f32 * scale
@@ -320,6 +352,25 @@ mod tests {
     #[should_panic(expected = "output holds")]
     fn quantize_slice_wrong_output_size_panics() {
         quantize_diff_slice(&[1.0, 2.0], &[0.0, 0.0], &mut [0u8; 3]);
+    }
+
+    #[test]
+    fn quantize_slice_of_raw_values_matches_diff_against_zero() {
+        // quantize_slice(v) must equal quantize_diff_slice(v, 0) bit for
+        // bit — it is the same encoder with the subtraction folded away
+        let vals: Vec<f32> = (0..64).map(|i| (i as f32 * 0.29).sin() * 0.01).collect();
+        let zeros = vec![0.0f32; vals.len()];
+        let mut a = vec![0u8; vals.len()];
+        let mut b = vec![0u8; vals.len()];
+        let sa = quantize_slice(&vals, &mut a);
+        let sb = quantize_diff_slice(&vals, &zeros, &mut b);
+        assert_eq!(sa.to_bits(), sb.to_bits());
+        assert_eq!(a, b);
+        // zero vector encodes scale 0, and non-finite input poisons
+        let mut out = vec![0xFFu8; 2];
+        assert_eq!(quantize_slice(&[0.0, -0.0], &mut out), 0.0);
+        assert_eq!(out, vec![0, 0]);
+        assert!(quantize_slice(&[1.0, f32::INFINITY], &mut out).is_nan());
     }
 
     #[test]

@@ -102,6 +102,15 @@ impl PackedVotes {
         codec::unpack_signs(&self.bytes, self.len)
     }
 
+    /// Flip one coordinate's vote bit in place — the fault injector's
+    /// model of a corrupted sign word in transit. Every bit pattern is
+    /// a valid vote payload, so a flipped bit is *survived* (one wrong
+    /// vote entering the majority) rather than rejected.
+    pub fn flip_bit(&mut self, coord: usize) {
+        assert!(coord < self.len, "flip_bit: coordinate {coord} of {}", self.len);
+        self.bytes[coord / 8] ^= 1 << (coord % 8);
+    }
+
     /// The 64 coordinates starting at `w * 64` as one little-endian
     /// word (bit `b` = coordinate `w*64 + b`), zero-padded past the
     /// end of the payload.
@@ -348,6 +357,29 @@ mod tests {
         assert_eq!(v.wire_bytes(), codec::sign_allreduce_bytes(70));
         assert_eq!(v.unpack(), vec![-1.0f32; 70]);
         assert!(PackedVotes::with_len(0).is_empty());
+    }
+
+    #[test]
+    fn flip_bit_toggles_exactly_one_vote() {
+        let v: Vec<f32> = (0..70).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        let mut p = PackedVotes::pack(&v);
+        p.flip_bit(65);
+        let decoded = p.unpack();
+        for (i, (&orig, &got)) in v.iter().zip(&decoded).enumerate() {
+            if i == 65 {
+                assert_eq!(got, -orig, "flipped coordinate");
+            } else {
+                assert_eq!(got, orig, "coordinate {i} must be untouched");
+            }
+        }
+        p.flip_bit(65); // flipping twice restores the payload
+        assert_eq!(p.unpack(), v);
+    }
+
+    #[test]
+    #[should_panic(expected = "flip_bit")]
+    fn flip_bit_past_the_end_panics() {
+        PackedVotes::pack(&[1.0; 8]).flip_bit(8);
     }
 
     #[test]

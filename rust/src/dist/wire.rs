@@ -13,26 +13,49 @@
 //! byte cost and topology come with it) rather than a new `if` in the
 //! trainer.
 //!
-//! # Formats
+//! # Formats and topologies
 //!
-//! | format | payload | bytes/message | topology |
+//! | format | payload | bytes/message | topology (n < 16 / n ≥ 16) |
 //! |---|---|---|---|
-//! | [`WireFormat::DenseF32`] | rank's end parameters `x_{t,τ}^{(i)}` | `4P` | ring all-reduce |
-//! | [`WireFormat::PackedSigns`] | 1-bit randomized sign votes | `⌈P/8⌉ + 8` | gather + broadcast |
-//! | [`WireFormat::QuantizedI8`] | i8-quantized local difference, one scale | `P + 12` | gather + broadcast |
-//! | [`WireFormat::QuantizedI8PerTensor`] | i8-quantized difference, one scale per layout segment | `P + 8 + 4S` | gather + broadcast |
+//! | [`WireFormat::DenseF32`] | rank's end parameters `x_{t,τ}^{(i)}` | `4P` | ring all-reduce (any n) |
+//! | [`WireFormat::PackedSigns`] | 1-bit randomized sign votes | `⌈P/8⌉ + 8` | flat gather+broadcast / hierarchical |
+//! | [`WireFormat::QuantizedI8`] | i8-quantized local difference, one scale | `P + 12` | flat gather+broadcast / hierarchical |
+//! | [`WireFormat::QuantizedI8PerTensor`] | i8-quantized difference, one scale per layout segment | `P + 8 + 4S` | flat gather+broadcast / hierarchical |
 //!
 //! A mean over dense payloads is ring-reducible, so `DenseF32` keeps
-//! the classic α-β ring model. Neither a majority tally nor a
-//! per-rank-scaled i8 sum fits its own wire format mid-reduction (a
-//! partial tally has no 1-bit encoding; summing i8 payloads with
-//! different scales requires dequantizing first), so the compressed
-//! formats bill the practical server topology — a flat gather of the
-//! n−1 rank payloads plus a binomial-tree broadcast of the result. At
-//! the default n = 4 the quantized exchanges beat dense on both the
-//! latency and bandwidth terms; at large n the linear gather overtakes
-//! the saturating ring — an honest tradeoff the comm-tradeoff example
-//! tabulates.
+//! the classic α-β ring model at every fleet size. Neither a majority
+//! tally nor a per-rank-scaled i8 sum fits its own wire format
+//! mid-reduction (a partial tally has no 1-bit encoding; summing i8
+//! payloads with different scales requires dequantizing first), so the
+//! compressed formats bill a server topology. Which one is
+//! [`Topology::select`]'s call, shared with the clock: the flat gather
+//! of n−1 rank payloads plus a binomial-tree broadcast at small n, and
+//! the two-level **hierarchical** scheme — ranks gather into ≈√n
+//! groups, each group head partially aggregates
+//! ([`WirePayload::aggregate_group_heads`]: decode-mean-requantize for
+//! the i8 formats, a partial majority tally repacked as votes for
+//! signs), the heads exchange flat, and the result broadcasts back down
+//! — once n reaches [`crate::comm::topology::HIERARCHICAL_MIN_RANKS`].
+//! That fixes the compressed formats' large-n loss to the dense ring by
+//! construction: the flat gather's (n−1) serial messages become O(√n),
+//! while the per-format byte advantage is untouched (the hierarchy
+//! moves the same `2(n−1)·b` total bytes).
+//!
+//! # Faults and `n_effective`
+//!
+//! Under an active [`crate::comm::FaultPlan`] a round's gather may see
+//! fewer payloads than the fleet has ranks: members sit rounds out
+//! (churn), payloads drop in transit, and corrupted payloads that fail
+//! [`WirePayload::check_finite`] are rejected before aggregation. The
+//! aggregate is then taken over the `n_effective` surviving payloads —
+//! [`WirePayload::mean_end_into`] divides by `payloads.len()`, the
+//! majority tally thresholds at half its vote count, so both paths are
+//! well defined for any non-empty survivor set (an empty one skips the
+//! round). Corruption is never silently averaged in: a NaN-poisoned
+//! scale is a typed [`WireError`] at pack *and* decode time, while a
+//! bit-flipped i8 byte or sign word is a valid encoding and is
+//! *survived* with bounded error — exactly the distinction between
+//! detectable and undetectable damage on a real wire.
 //!
 //! # The layout contract (`q8pt`)
 //!
@@ -50,13 +73,58 @@
 //! `rust/tests/layout_wire.rs` pin both that identity and the error
 //! reduction on hetero-magnitude layouts.
 
+use std::fmt;
 use std::sync::Arc;
 
 use super::codec;
 use super::collectives;
-use super::votes::PackedVotes;
-use crate::comm::CommModel;
+use super::votes::{self, PackedVotes};
+use crate::comm::{CommModel, Topology};
 use crate::runtime::ParamLayout;
+use crate::util::rng::Rng;
+
+/// Typed rejection of damaged wire data — the loud path for corruption
+/// that IS detectable (non-finite quantization scales or dense
+/// coordinates). Misuse of the API (mixed formats, length drift, a mean
+/// over sign votes) stays a panic: that is a bug in the caller, not bad
+/// data on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WireError {
+    /// A quantized payload carries a non-finite scale (NaN poison from a
+    /// non-finite difference at pack time, or corruption in transit).
+    NonFiniteScale {
+        /// Index of the offending payload in the round's gather.
+        worker: usize,
+        /// Layout segment of the offending scale (0 for per-message q8).
+        segment: usize,
+    },
+    /// A dense payload carries a non-finite coordinate.
+    NonFiniteCoord {
+        /// Index of the offending payload in the round's gather.
+        worker: usize,
+        /// Offending coordinate.
+        index: usize,
+    },
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::NonFiniteScale { worker, segment } => write!(
+                f,
+                "worker {worker}: non-finite quantization scale in segment {segment} \
+                 (diverged rank or corrupted payload)"
+            ),
+            WireError::NonFiniteCoord { worker, index } => write!(
+                f,
+                "worker {worker}: non-finite coordinate {index} in dense payload \
+                 (diverged rank or corrupted payload)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
 
 /// Construction-time name of a [`WirePayload`] variant: what a config
 /// file selects (`wire = "dense" | "packed_signs" | "q8" | "q8pt"`) and
@@ -120,19 +188,21 @@ impl WireFormat {
     }
 
     /// Modeled seconds of one round exchange of `len` coordinates over
-    /// a `segments`-segment layout under `m` — the ONE place the
-    /// byte-count × topology rule lives for analytical re-costing.
-    /// [`crate::comm::SimClock::charge_exchange`] makes the identical
-    /// choice off the payload (ring for the ring-reducible dense
-    /// format, gather+broadcast otherwise), so tables re-costed through
-    /// this helper cannot drift from what the clock actually billed
-    /// (pinned by `exchange_time_matches_the_clock_topology`).
+    /// a `segments`-segment layout under `m` — the analytical
+    /// re-costing twin of [`crate::comm::SimClock::charge_exchange`].
+    /// Both route through [`Topology::select`] on (format, n): ring for
+    /// the ring-reducible dense format, flat gather+broadcast for small
+    /// compressed fleets, hierarchical at scale — so tables re-costed
+    /// through this helper cannot drift from what the clock actually
+    /// billed (pinned by `exchange_time_matches_the_clock_topology`).
     pub fn exchange_time(&self, m: &CommModel, n: usize, len: usize, segments: usize) -> f64 {
         let bytes = self.wire_bytes(len, segments);
-        if self.ring_reducible() {
-            m.allreduce_time(n, bytes)
-        } else {
-            m.gather_time(n, bytes) + m.broadcast_time(n, bytes)
+        match Topology::select(self.ring_reducible(), n) {
+            Topology::Ring => m.allreduce_time(n, bytes),
+            Topology::FlatGatherBroadcast => {
+                m.gather_time(n, bytes) + m.broadcast_time(n, bytes)
+            }
+            Topology::Hierarchical { groups } => m.hierarchical_time(n, groups, bytes),
         }
     }
 }
@@ -300,12 +370,22 @@ impl WirePayload {
     /// On a `PackedSigns` buffer: a dense parameter exchange has no
     /// 1-bit encoding (config validation keeps this combination from
     /// ever being built — [`crate::config::RunConfig::validate`]). On a
-    /// per-tensor buffer whose layout does not tile `start.len()`.
+    /// per-tensor buffer whose layout does not tile `start.len()`, or a
+    /// dense buffer whose length differs from `end.len()` — the
+    /// persistent buffer's size is the byte count the round was billed
+    /// with, so silently resizing it here would defeat the trainer's
+    /// pack-time drift check.
     pub fn pack_end(&mut self, start: &[f32], end: &[f32]) {
         match self {
             WirePayload::DenseF32(buf) => {
-                buf.clear();
-                buf.extend_from_slice(end);
+                assert_eq!(
+                    buf.len(),
+                    end.len(),
+                    "pack_end: {} coordinates into a dense payload sized {}",
+                    end.len(),
+                    buf.len()
+                );
+                buf.copy_from_slice(end);
             }
             WirePayload::QuantizedI8 { scale, bytes } => {
                 *scale = codec::quantize_diff_into(start, end, bytes);
@@ -367,13 +447,33 @@ impl WirePayload {
     ///   layout the accumulation order — and hence the result — is
     ///   bitwise-identical to `QuantizedI8`.
     ///
+    /// The divisor is `payloads.len()` — the round's `n_effective` —
+    /// so the mean is well defined for any non-empty survivor set under
+    /// dropped/rejected payloads.
+    ///
+    /// # Errors
+    ///
+    /// [`WireError::NonFiniteScale`] if any quantized payload carries a
+    /// non-finite scale (NaN poison from a diverged rank, or corruption
+    /// in transit): bad data must never be silently averaged in. The
+    /// check runs before any accumulation — `out` is untouched on
+    /// error. Dense payloads carry no scale; a non-finite dense
+    /// coordinate propagates into the mean, where the trainer's
+    /// finiteness check catches it (reject dense payloads up front with
+    /// [`WirePayload::check_finite`] when faults are in play).
+    ///
     /// # Panics
     ///
     /// On `PackedSigns` payloads (a majority tally has no mean end
     /// point — tally them with
     /// [`crate::dist::votes::majority_vote_packed`]), on mixed formats
-    /// or mixed layouts, or on length mismatches.
-    pub fn mean_end_into(payloads: &[WirePayload], start: &[f32], out: &mut [f32]) {
+    /// or mixed layouts, or on length mismatches — API misuse, not wire
+    /// damage.
+    pub fn mean_end_into(
+        payloads: &[WirePayload],
+        start: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), WireError> {
         assert!(!payloads.is_empty(), "exchange over zero workers");
         for (i, p) in payloads.iter().enumerate() {
             assert_eq!(p.format(), payloads[0].format(), "worker {i}: mixed wire formats");
@@ -384,6 +484,17 @@ impl WirePayload {
                 p.len(),
                 out.len()
             );
+        }
+        // reject non-finite scales before touching `out`: O(S) per
+        // payload, and the poison never reaches the accumulator
+        for (i, p) in payloads.iter().enumerate() {
+            if let Some(scales) = p.scales() {
+                for (si, s) in scales.iter().enumerate() {
+                    if !s.is_finite() {
+                        return Err(WireError::NonFiniteScale { worker: i, segment: si });
+                    }
+                }
+            }
         }
         match payloads[0] {
             WirePayload::DenseF32(_) => {
@@ -442,6 +553,195 @@ impl WirePayload {
             WirePayload::PackedSigns(_) => {
                 panic!("packed sign votes have no mean end point; run the majority tally")
             }
+        }
+        Ok(())
+    }
+
+    /// Validate that this payload carries no non-finite data: scales
+    /// for the quantized formats (O(S)), every coordinate for dense
+    /// (O(P) — only worth paying when faults are in play), and nothing
+    /// for packed signs (every bit pattern is a valid vote). `worker`
+    /// is the payload's index in the round's gather, reported in the
+    /// error. This is the pack-time half of the corruption contract;
+    /// [`WirePayload::mean_end_into`] re-checks scales at decode time.
+    pub fn check_finite(&self, worker: usize) -> Result<(), WireError> {
+        match self {
+            WirePayload::DenseF32(v) => {
+                if let Some(index) = v.iter().position(|x| !x.is_finite()) {
+                    return Err(WireError::NonFiniteCoord { worker, index });
+                }
+            }
+            WirePayload::PackedSigns(_) => {}
+            WirePayload::QuantizedI8 { scale, .. } => {
+                if !scale.is_finite() {
+                    return Err(WireError::NonFiniteScale { worker, segment: 0 });
+                }
+            }
+            WirePayload::QuantizedI8PerTensor { scales, .. } => {
+                if let Some(segment) = scales.iter().position(|s| !s.is_finite()) {
+                    return Err(WireError::NonFiniteScale { worker, segment });
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Inject one transit corruption into this payload, fault-plan
+    /// style: a NaN-poisoned scale or coordinate (detectable — fails
+    /// [`WirePayload::check_finite`]) or a flipped quantized byte /
+    /// sign bit (undetectable by construction — every bit pattern is a
+    /// valid encoding — and survived with bounded error). Formats with
+    /// both failure modes pick one with a fair draw.
+    pub fn corrupt(&mut self, rng: &mut Rng) {
+        match self {
+            WirePayload::DenseF32(v) => {
+                if !v.is_empty() {
+                    let i = rng.below(v.len() as u64) as usize;
+                    v[i] = f32::NAN;
+                }
+            }
+            WirePayload::PackedSigns(p) => {
+                if !p.is_empty() {
+                    let coord = rng.below(p.len() as u64) as usize;
+                    p.flip_bit(coord);
+                }
+            }
+            WirePayload::QuantizedI8 { scale, bytes } => {
+                if bytes.is_empty() || rng.bernoulli(0.5) {
+                    *scale = f32::NAN;
+                } else {
+                    let i = rng.below(bytes.len() as u64) as usize;
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+            WirePayload::QuantizedI8PerTensor { scales, bytes, .. } => {
+                if bytes.is_empty() || rng.bernoulli(0.5) {
+                    let si = rng.below(scales.len().max(1) as u64) as usize;
+                    if let Some(s) = scales.get_mut(si) {
+                        *s = f32::NAN;
+                    }
+                } else {
+                    let i = rng.below(bytes.len() as u64) as usize;
+                    bytes[i] ^= 1 << rng.below(8);
+                }
+            }
+        }
+    }
+
+    /// The hierarchical exchange's data path: split the round's
+    /// payloads into `groups` contiguous groups of ⌈len/groups⌉ (the
+    /// same split [`crate::comm::CommModel::hierarchical_time`] bills),
+    /// aggregate each group at its head in the payload's own format,
+    /// and return one payload per *input slot* holding its group head's
+    /// aggregate. Feeding that replicated vector to the ordinary
+    /// n-effective aggregation (mean or tally) weights each group by
+    /// its member count — majority-of-weighted-majorities for votes,
+    /// group-size-weighted mean of group means for the i8 formats — so
+    /// outer optimizers consume a hierarchical round through their
+    /// unchanged `apply(payloads)` interface.
+    ///
+    /// Per-format head aggregation:
+    ///
+    /// * `QuantizedI8` / `QuantizedI8PerTensor` — decode each member's
+    ///   difference with its own scale(s), mean in f64 in member order,
+    ///   re-quantize against a fresh head scale
+    ///   ([`codec::quantize_slice`], per segment for `q8pt`). One extra
+    ///   bounded quantization error per level — the price of a partial
+    ///   aggregate that fits back into the wire format.
+    /// * `PackedSigns` — partial majority tally over the group
+    ///   ([`votes::majority_vote_packed`]), repacked as a ±1 vote
+    ///   payload (wire-tie semantics: group ties decode +1).
+    ///
+    /// # Panics
+    ///
+    /// On dense payloads (ring-reducible — the hierarchy is never
+    /// selected for them), on empty/mixed inputs, and on
+    /// `groups == 0`: misuse, not wire damage. Callers must
+    /// [`check_finite`](Self::check_finite) survivors first; a NaN
+    /// scale here would poison the head's re-quantization.
+    pub fn aggregate_group_heads(payloads: &[WirePayload], groups: usize) -> Vec<WirePayload> {
+        assert!(!payloads.is_empty(), "hierarchical aggregation over zero payloads");
+        assert!(groups > 0, "hierarchical aggregation needs at least one group");
+        let format = payloads[0].format();
+        let len = payloads[0].len();
+        for (i, p) in payloads.iter().enumerate() {
+            assert_eq!(p.format(), format, "worker {i}: mixed wire formats");
+            assert_eq!(p.len(), len, "worker {i}: payload length {} != {len}", p.len());
+        }
+        assert!(
+            !format.ring_reducible(),
+            "dense exchanges ring-reduce; the hierarchy is never selected for them"
+        );
+        let m = super::div_up(payloads.len(), groups.min(payloads.len()));
+        let mut out = Vec::with_capacity(payloads.len());
+        for chunk in payloads.chunks(m) {
+            let head = Self::aggregate_head(chunk, len);
+            for _ in 0..chunk.len() - 1 {
+                out.push(head.clone());
+            }
+            out.push(head);
+        }
+        out
+    }
+
+    /// One group head's partial aggregate over its members' payloads.
+    fn aggregate_head(chunk: &[WirePayload], len: usize) -> WirePayload {
+        let inv = 1.0f64 / chunk.len() as f64;
+        match &chunk[0] {
+            WirePayload::QuantizedI8 { .. } => {
+                let mut acc = vec![0.0f64; len];
+                for p in chunk {
+                    let WirePayload::QuantizedI8 { scale, bytes } = p else {
+                        unreachable!("format checked by the caller")
+                    };
+                    for (a, &b) in acc.iter_mut().zip(bytes) {
+                        *a += codec::dequantize_i8(b, *scale) as f64;
+                    }
+                }
+                let mean: Vec<f32> = acc.iter().map(|a| (a * inv) as f32).collect();
+                let mut bytes = vec![0u8; len];
+                let scale = codec::quantize_slice(&mean, &mut bytes);
+                WirePayload::QuantizedI8 { scale, bytes }
+            }
+            WirePayload::QuantizedI8PerTensor { layout, .. } => {
+                let layout = Arc::clone(layout);
+                for (i, p) in chunk.iter().enumerate() {
+                    assert_eq!(
+                        p.layout(),
+                        Some(&layout),
+                        "worker {i}: mixed parameter layouts"
+                    );
+                }
+                let mut acc = vec![0.0f64; len];
+                for p in chunk {
+                    let WirePayload::QuantizedI8PerTensor { scales, bytes, .. } = p else {
+                        unreachable!("format checked by the caller")
+                    };
+                    for (si, e) in layout.entries().iter().enumerate() {
+                        for i in e.offset..e.offset + e.numel() {
+                            acc[i] += codec::dequantize_i8(bytes[i], scales[si]) as f64;
+                        }
+                    }
+                }
+                let mean: Vec<f32> = acc.iter().map(|a| (a * inv) as f32).collect();
+                let mut bytes = vec![0u8; len];
+                let mut scales = vec![0.0f32; layout.len()];
+                for (e, s) in layout.entries().iter().zip(scales.iter_mut()) {
+                    let r = e.offset..e.offset + e.numel();
+                    *s = codec::quantize_slice(&mean[r.clone()], &mut bytes[r]);
+                }
+                WirePayload::QuantizedI8PerTensor { layout, scales, bytes }
+            }
+            WirePayload::PackedSigns(_) => {
+                let members: Vec<&PackedVotes> = chunk
+                    .iter()
+                    .map(|p| p.as_packed_signs().expect("format checked by the caller"))
+                    .collect();
+                let mut tally = vec![0.0f32; len];
+                votes::majority_vote_packed(&members, &mut tally);
+                WirePayload::PackedSigns(PackedVotes::pack(&tally))
+            }
+            WirePayload::DenseF32(_) => unreachable!("rejected by the caller"),
         }
     }
 }
@@ -534,13 +834,43 @@ mod tests {
             straggler_sigma: 0.0,
             straggler_scale_s: 0.0,
         };
-        for format in ALL_FORMATS {
-            let payload = WirePayload::with_len(format, 1000);
-            let mut clock = SimClock::default();
-            clock.charge_exchange(&m, 4, &payload, &mut Rng::new(1));
-            let t = format.exchange_time(&m, 4, 1000, 1);
-            assert!((clock.comm_s - t).abs() < 1e-15, "{}", format.name());
+        for n in [4usize, 1024] {
+            for format in ALL_FORMATS {
+                let payload = WirePayload::with_len(format, 1000);
+                let mut clock = SimClock::default();
+                clock.charge_exchange(&m, n, &payload, &mut Rng::new(1));
+                let t = format.exchange_time(&m, n, 1000, 1);
+                assert!((clock.comm_s - t).abs() < 1e-15, "{} n={n}", format.name());
+            }
         }
+    }
+
+    #[test]
+    fn hierarchical_topology_beats_flat_for_compressed_formats_at_scale() {
+        // the acceptance pin: at n = 1024 the selector picks the
+        // hierarchical topology for q8/q8pt/signs and the modeled round
+        // time beats the flat gather+broadcast by a wide margin
+        let m = CommModel::preset("ethernet").unwrap();
+        let n = 1024;
+        let p = 1 << 20;
+        for format in [
+            WireFormat::PackedSigns,
+            WireFormat::QuantizedI8,
+            WireFormat::QuantizedI8PerTensor,
+        ] {
+            let topo = Topology::select(format.ring_reducible(), n);
+            assert!(
+                matches!(topo, Topology::Hierarchical { .. }),
+                "{}: {topo:?}",
+                format.name()
+            );
+            let bytes = format.wire_bytes(p, 4);
+            let hier = format.exchange_time(&m, n, p, 4);
+            let flat = m.gather_time(n, bytes) + m.broadcast_time(n, bytes);
+            assert!(hier * 8.0 < flat, "{}: {hier} vs flat {flat}", format.name());
+        }
+        // dense still rings, at every n
+        assert_eq!(Topology::select(true, n), Topology::Ring);
     }
 
     #[test]
@@ -555,7 +885,7 @@ mod tests {
             })
             .collect();
         let mut from_payloads = vec![0.0f32; 3];
-        WirePayload::mean_end_into(&payloads, &[0.0; 3], &mut from_payloads);
+        WirePayload::mean_end_into(&payloads, &[0.0; 3], &mut from_payloads).unwrap();
         let mut reference = vec![0.0f32; 3];
         collectives::allreduce_mean(&ends, |e| e.as_slice(), &mut reference);
         for (a, b) in from_payloads.iter().zip(&reference) {
@@ -576,7 +906,7 @@ mod tests {
             })
             .collect();
         let mut avg = vec![0.0f32; 4];
-        WirePayload::mean_end_into(&payloads, &start, &mut avg);
+        WirePayload::mean_end_into(&payloads, &start, &mut avg).unwrap();
         let mut exact = vec![0.0f32; 4];
         collectives::allreduce_mean(&ends, |e| e.as_slice(), &mut exact);
         // per-rank quantization step: scale = max|diff|/127; the mean's
@@ -604,7 +934,7 @@ mod tests {
         let scales = pt.scales().unwrap().to_vec();
         assert!(scales[0] < scales[1] / 100.0, "{scales:?}");
         let mut avg = vec![0.0f32; 8];
-        WirePayload::mean_end_into(std::slice::from_ref(&pt), &start, &mut avg);
+        WirePayload::mean_end_into(std::slice::from_ref(&pt), &start, &mut avg).unwrap();
         // every coordinate decodes within half its segment's step
         for (j, (a, e)) in avg.iter().zip(&end).enumerate() {
             let step = scales[j / 4];
@@ -621,7 +951,7 @@ mod tests {
             let mut p = WirePayload::with_len(format, 3);
             p.pack_end(&start, &start);
             let mut avg = vec![9.0f32; 3];
-            WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut avg);
+            WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut avg).unwrap();
             assert_eq!(avg, start, "{}", format.name());
         }
     }
@@ -672,7 +1002,7 @@ mod tests {
     fn mean_over_sign_votes_panics() {
         let payloads = vec![WirePayload::with_len(WireFormat::PackedSigns, 8)];
         let mut out = vec![0.0f32; 8];
-        WirePayload::mean_end_into(&payloads, &[0.0; 8], &mut out);
+        let _ = WirePayload::mean_end_into(&payloads, &[0.0; 8], &mut out);
     }
 
     #[test]
@@ -683,7 +1013,7 @@ mod tests {
             WirePayload::with_len(WireFormat::QuantizedI8, 4),
         ];
         let mut out = vec![0.0f32; 4];
-        WirePayload::mean_end_into(&payloads, &[0.0; 4], &mut out);
+        let _ = WirePayload::mean_end_into(&payloads, &[0.0; 4], &mut out);
     }
 
     #[test]
@@ -695,6 +1025,184 @@ mod tests {
             WirePayload::with_layout(pt, &two_segment_layout(2, 6)),
         ];
         let mut out = vec![0.0f32; 8];
-        WirePayload::mean_end_into(&payloads, &[0.0; 8], &mut out);
+        let _ = WirePayload::mean_end_into(&payloads, &[0.0; 8], &mut out);
+    }
+
+    #[test]
+    #[should_panic(expected = "pack_end")]
+    fn dense_pack_with_wrong_dimension_panics() {
+        // regression: this used to silently resize the persistent
+        // buffer, defeating the trainer's pack-time drift check
+        let mut p = WirePayload::with_len(WireFormat::DenseF32, 8);
+        p.pack_end(&[0.0; 6], &[1.0; 6]);
+    }
+
+    #[test]
+    fn non_finite_differences_are_rejected_not_averaged() {
+        // NaN and inf coordinates poison the quantization scale at pack
+        // time; both check_finite and the decode-time mean report the
+        // offending worker instead of folding the poison into the mean
+        let layout = two_segment_layout(2, 2);
+        for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let start = vec![0.0f32; 4];
+            let end = vec![0.1f32, bad, -0.1, 0.2];
+            for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor] {
+                let mut good = WirePayload::with_layout(format, &layout);
+                good.pack_end(&start, &[0.1, 0.0, -0.1, 0.2]);
+                let mut p = WirePayload::with_layout(format, &layout);
+                p.pack_end(&start, &end);
+                assert!(
+                    p.scales().unwrap().iter().any(|s| !s.is_finite()),
+                    "{}: {bad} must poison a scale",
+                    format.name()
+                );
+                assert_eq!(good.check_finite(0), Ok(()));
+                let err = p.check_finite(3).unwrap_err();
+                let WireError::NonFiniteScale { worker, segment } = err else {
+                    panic!("{}: unexpected {err:?}", format.name())
+                };
+                assert_eq!(worker, 3);
+                // q8 poisons its only scale; q8pt isolates the poison
+                // to the segment holding the bad coordinate (coord 1
+                // lives in segment "lo") — both report segment 0 here
+                assert_eq!(segment, 0);
+                let mut out = vec![7.0f32; 4];
+                let payloads = vec![good.clone(), p.clone()];
+                let got = WirePayload::mean_end_into(&payloads, &start, &mut out);
+                assert!(
+                    matches!(got, Err(WireError::NonFiniteScale { worker: 1, .. })),
+                    "{}: {got:?}",
+                    format.name()
+                );
+                // error path must not touch the output
+                assert_eq!(out, vec![7.0f32; 4], "{}", format.name());
+            }
+        }
+    }
+
+    #[test]
+    fn check_finite_flags_dense_coordinates_and_passes_votes() {
+        let mut p = WirePayload::with_len(WireFormat::DenseF32, 4);
+        p.pack_end(&[0.0; 4], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.check_finite(0), Ok(()));
+        p.pack_end(&[0.0; 4], &[1.0, 2.0, f32::NAN, 4.0]);
+        assert_eq!(p.check_finite(5), Err(WireError::NonFiniteCoord { worker: 5, index: 2 }));
+        let votes = WirePayload::with_len(WireFormat::PackedSigns, 64);
+        assert_eq!(votes.check_finite(0), Ok(()));
+    }
+
+    #[test]
+    fn corrupt_damages_exactly_one_thing_per_format() {
+        let mut rng = Rng::new(77);
+        for format in ALL_FORMATS {
+            for trial in 0..20 {
+                let mut p = WirePayload::with_len(format, 33);
+                if format == WireFormat::PackedSigns {
+                    p.pack_sign_votes(&[1.0; 33]);
+                } else {
+                    p.pack_end(&[0.5; 33], &[0.25; 33]);
+                }
+                let clean = p.clone();
+                p.corrupt(&mut rng);
+                assert_ne!(p, clean, "{} trial {trial}: corruption must show", format.name());
+                // wire size is untouched — corruption is in-place damage
+                assert_eq!(p.wire_bytes(), clean.wire_bytes());
+                match format {
+                    // every sign-word bit pattern is valid: survived
+                    WireFormat::PackedSigns => assert_eq!(p.check_finite(0), Ok(())),
+                    // dense / scale poison is detectable, byte flips are
+                    // not — either way the payload stays structurally valid
+                    _ => {
+                        let _ = p.check_finite(0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn group_heads_replicate_one_aggregate_per_member() {
+        // 7 payloads in 3 groups -> chunks of 3/3/1; each slot holds its
+        // group head's aggregate, so adjacent members are identical
+        let payloads: Vec<WirePayload> = (0..7)
+            .map(|w| {
+                let mut p = WirePayload::with_len(WireFormat::QuantizedI8, 5);
+                p.pack_end(&[0.0; 5], &[0.1 * (w as f32 + 1.0); 5]);
+                p
+            })
+            .collect();
+        let heads = WirePayload::aggregate_group_heads(&payloads, 3);
+        assert_eq!(heads.len(), 7);
+        assert_eq!(heads[0], heads[1]);
+        assert_eq!(heads[1], heads[2]);
+        assert_eq!(heads[3], heads[5]);
+        assert_ne!(heads[0], heads[3]);
+        assert_ne!(heads[5], heads[6]);
+    }
+
+    #[test]
+    fn hierarchical_mean_matches_flat_mean_within_quantization_error() {
+        // equal group sizes: the mean of replicated group means equals
+        // the flat mean up to one extra quantization level
+        let start = vec![1.0f32, -0.5, 0.25, 2.0];
+        let ends: Vec<Vec<f32>> = (0..8)
+            .map(|w| start.iter().map(|s| s - 0.01 * (w as f32 - 3.5)).collect())
+            .collect();
+        for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor] {
+            let payloads: Vec<WirePayload> = ends
+                .iter()
+                .map(|e| {
+                    let mut p = WirePayload::with_len(format, 4);
+                    p.pack_end(&start, e);
+                    p
+                })
+                .collect();
+            let mut flat = vec![0.0f32; 4];
+            WirePayload::mean_end_into(&payloads, &start, &mut flat).unwrap();
+            let heads = WirePayload::aggregate_group_heads(&payloads, 4);
+            let mut hier = vec![0.0f32; 4];
+            WirePayload::mean_end_into(&heads, &start, &mut hier).unwrap();
+            for (j, (h, f)) in hier.iter().zip(&flat).enumerate() {
+                assert!((h - f).abs() < 2e-3, "{} coord {j}: {h} vs {f}", format.name());
+            }
+        }
+    }
+
+    #[test]
+    fn group_heads_tally_signs_as_majority_of_majorities() {
+        // 6 voters in 2 groups of 3. Coordinate 0: group A votes
+        // (+,+,-) -> +, group B votes (-,-,+) -> -; the weighted final
+        // tally ties 3:3 and decodes the wire-tie convention (+1).
+        // Coordinate 1: unanimous per group, final -1.
+        let votes: [[f32; 2]; 6] = [
+            [1.0, -1.0],
+            [1.0, -1.0],
+            [-1.0, -1.0],
+            [-1.0, -1.0],
+            [-1.0, -1.0],
+            [1.0, -1.0],
+        ];
+        let payloads: Vec<WirePayload> = votes
+            .iter()
+            .map(|v| {
+                let mut p = WirePayload::with_len(WireFormat::PackedSigns, 2);
+                p.pack_sign_votes(v);
+                p
+            })
+            .collect();
+        let heads = WirePayload::aggregate_group_heads(&payloads, 2);
+        assert_eq!(heads.len(), 6);
+        let mut tally = vec![0.0f32; 2];
+        let packed: Vec<&PackedVotes> =
+            heads.iter().map(|p| p.as_packed_signs().unwrap()).collect();
+        votes::majority_vote_packed(&packed, &mut tally);
+        assert_eq!(tally, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "ring-reduce")]
+    fn dense_payloads_refuse_hierarchical_aggregation() {
+        let payloads = vec![WirePayload::with_len(WireFormat::DenseF32, 4); 4];
+        let _ = WirePayload::aggregate_group_heads(&payloads, 2);
     }
 }

@@ -38,6 +38,7 @@ pub const ALL: &[(&str, &str)] = &[
     ("comm", "communication-savings: simulated time-to-loss across interconnects"),
     ("hetero", "supplement: IID vs non-IID worker shards (Theorem 2(b) regime)"),
     ("remark1", "supplement: Algorithm 1 vs MV-sto-signSGD majority vote (Remarks 1-2)"),
+    ("fleet", "supplement: fault tolerance — drops/churn/stragglers vs the clean fleet"),
 ];
 
 pub fn run(id: &str, h: &Harness) -> Result<()> {
@@ -56,6 +57,7 @@ pub fn run(id: &str, h: &Harness) -> Result<()> {
         "comm" | "comm_savings" => comm_savings::run(h),
         "hetero" => heterogeneity::hetero(h),
         "remark1" => heterogeneity::remark1(h),
+        "fleet" => heterogeneity::fleet(h),
         "all" => {
             for (id, _) in ALL {
                 println!("\n================ {id} ================");

@@ -142,8 +142,12 @@ pub struct RunSummary {
 /// stale. v4: the parameter layout became load-bearing (validated
 /// `ParamLayout`, layout-sized payload buffers, the per-tensor `q8pt`
 /// wire) — pre-layout CSVs must never be mixed into comm-savings
-/// tables that now carry per-segment rows.
-const CACHE_MODEL_VERSION: &str = "v4";
+/// tables that now carry per-segment rows. v5: straggler/jitter draws
+/// moved off the trainer RNG onto the dedicated checkpointed fault
+/// stream (and large compressed fleets route the hierarchical
+/// topology), so any cached clock columns computed under a jittery
+/// preset are stale.
+const CACHE_MODEL_VERSION: &str = "v5";
 
 /// Content hash of everything that determines a run's trajectory.
 /// `cfg.sequential_workers` is deliberately excluded: the parallel and

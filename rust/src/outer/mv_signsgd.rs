@@ -140,7 +140,15 @@ impl OuterOptimizer for MvSignSgd {
         payloads: &[WirePayload],
         _rng: &mut Rng,
     ) -> Result<()> {
-        self.ensure_workers(payloads.len());
+        // the tally accepts any non-empty survivor subset of the fleet
+        // (dropped/rejected payloads under faults shrink n_effective);
+        // contribute already sized `m` from the full worker count
+        assert!(
+            !self.m.is_empty() && payloads.len() <= self.m.len(),
+            "{} payloads for a {}-worker fleet",
+            payloads.len(),
+            self.m.len()
+        );
         let packed: Vec<&PackedVotes> = payloads
             .iter()
             .map(|p| {

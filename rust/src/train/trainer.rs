@@ -57,7 +57,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::comm::SimClock;
+use crate::comm::{FaultStats, SimClock, Topology};
 use crate::config::{RunConfig, TrainMode};
 use crate::data::corpus::{self, CorpusConfig};
 use crate::data::dataset::{Batch, TokenDataset};
@@ -82,6 +82,17 @@ pub struct Trainer {
     schedule: Schedule,
     clock: SimClock,
     rng: Rng,
+    /// Dedicated checkpointed stream for everything fault- and
+    /// network-jitter-shaped: straggler barrier draws, membership
+    /// churn, drops, corruption. Kept apart from the training stream
+    /// (`rng`) so toggling stragglers or faults can never shift an
+    /// optimization draw — [`crate::comm::CommModel::straggler_delay`]
+    /// consumes nothing when jitter is off, so only this stream's
+    /// position varies with the comm preset.
+    fault_rng: Rng,
+    /// What the fault plan actually did, accumulated over the run
+    /// (checkpointed; all-zero when faults are off).
+    faults: FaultStats,
     val_batches: Vec<Batch>,
     /// The round exchange's wire format (config override or the outer
     /// optimizer's native format — [`RunConfig::resolved_wire`]).
@@ -131,6 +142,9 @@ pub struct RunResult {
     /// Per-segment norms of the last round's global update (empty in
     /// standalone mode) — see [`Trainer::segment_norms`].
     pub segment_norms: Vec<SegmentNorm>,
+    /// Injected-fault bookkeeping (all-zero when the fault plan is
+    /// inactive) — see [`crate::comm::FaultStats`].
+    pub faults: FaultStats,
 }
 
 impl Trainer {
@@ -249,6 +263,8 @@ impl Trainer {
             schedule: cfg.schedule.build(),
             log: RunLog::new(&cfg.tag),
             rng: root_rng.substream("trainer", 0),
+            fault_rng: root_rng.substream("faults", 0),
+            faults: FaultStats::default(),
             wire: cfg.resolved_wire(),
             cfg,
             backend: bundle,
@@ -286,6 +302,12 @@ impl Trainer {
         &self.clock
     }
 
+    /// Injected-fault bookkeeping so far (all-zero when the plan is
+    /// inactive).
+    pub fn fault_stats(&self) -> &FaultStats {
+        &self.faults
+    }
+
     pub fn dim(&self) -> usize {
         self.global.len()
     }
@@ -310,6 +332,7 @@ impl Trainer {
             final_val,
             best_val: self.log.best_val_loss().unwrap_or(final_val),
             segment_norms: self.last_seg_norms.clone(),
+            faults: self.faults,
         })
     }
 
@@ -357,24 +380,53 @@ impl Trainer {
         Ok(row)
     }
 
-    /// One round of Algorithm 1's outer loop (lines 3-11).
+    /// One round of Algorithm 1's outer loop (lines 3-11), with the
+    /// optional fault plan wrapped around the exchange. All fault
+    /// draws come from the dedicated checkpointed `fault_rng`; with
+    /// [`crate::comm::FaultPlan::none`] the round takes the exact
+    /// pre-fault code path — no extra draws, no payload copies — so
+    /// every bit-identity invariant is preserved by construction.
     fn local_round(&mut self) -> Result<()> {
         let n = self.cfg.n_workers;
         let p = self.global.len();
         let tau = self.cfg.tau;
+        let plan = self.cfg.faults;
+        let faults_on = plan.is_active();
         // γ_t for the outer step: LR at the round's first local step.
         let gamma_t = self.schedule.lr(self.local_step);
 
         let start = self.outer.local_start(&self.global);
 
-        // Lines 4-7: every rank runs its τ-step local phase. The jobs
-        // fan out onto the pool; each returns its measured compute
-        // seconds (or the first error it hit), gathered by rank index.
+        // Elastic membership: each rank sits the round out with
+        // churn_prob (at least one rank always trains). An absent rank
+        // skips its local phase entirely — its worker RNG and base-
+        // optimizer state freeze until it rejoins, and rejoining is
+        // trivially consistent because every round starts by copying
+        // the broadcast `start` into the rank's iterate.
+        let active: Vec<bool> = if faults_on && plan.churn_prob > 0.0 {
+            let mut a: Vec<bool> =
+                (0..n).map(|_| !self.fault_rng.bernoulli(plan.churn_prob)).collect();
+            if !a.iter().any(|&x| x) {
+                a[self.fault_rng.below(n as u64) as usize] = true;
+            }
+            a
+        } else {
+            vec![true; n]
+        };
+        let n_active = active.iter().filter(|&&x| x).count();
+        self.faults.absent_ranks += (n - n_active) as u64;
+
+        // Lines 4-7: every present rank runs its τ-step local phase.
+        // The jobs fan out onto the pool; each returns its measured
+        // compute seconds (or the first error it hit), gathered by
+        // rank index. Absent ranks return 0 s without touching their
+        // worker.
         let per_rank: Vec<Result<f64>> = {
             let backend = &self.backend;
             let dataset = &self.dataset;
             let schedule = &self.schedule;
             let start = &start;
+            let active = &active;
             let (batch_sz, seq) = {
                 let info = backend.info();
                 (info.batch, info.seq)
@@ -382,6 +434,9 @@ impl Trainer {
             let (base_step, round) = (self.local_step, self.round);
             let sequential = self.cfg.sequential_workers;
             run_fleet(sequential, &mut self.workers, move |w, worker| -> Result<f64> {
+                if !active[w] {
+                    return Ok(0.0);
+                }
                 worker.params.copy_from_slice(start);
                 let mut secs = 0.0f64;
                 for k in 0..tau {
@@ -408,6 +463,33 @@ impl Trainer {
         self.local_step += tau as u64;
         self.clock.charge_parallel_compute(&per_worker_secs);
 
+        // Heavy-tailed stragglers: with tail_prob per present rank, a
+        // Pareto(α)-distributed stall on top of the comm model's
+        // lognormal jitter. The round barrier waits for the slowest
+        // rank, so the clock pays the worst stall.
+        if faults_on && plan.tail_prob > 0.0 {
+            let mut worst = 0.0f64;
+            for _ in 0..n_active {
+                if self.fault_rng.bernoulli(plan.tail_prob) {
+                    worst = worst.max(plan.tail_scale_s * self.fault_rng.pareto(plan.tail_alpha));
+                }
+            }
+            self.clock.straggler_s += worst;
+        }
+
+        // Transit drops among the present ranks: a dropped payload
+        // never reaches the aggregation point (not billed on the
+        // down-leg it never earned, not aggregated). The rank itself
+        // still packs below — the loss happens after contribution, so
+        // the training RNG order is independent of drop draws.
+        let arrived_mask: Vec<bool> = if faults_on && plan.drop_prob > 0.0 {
+            active.iter().map(|&a| a && !self.fault_rng.bernoulli(plan.drop_prob)).collect()
+        } else {
+            active.clone()
+        };
+        let arrived = arrived_mask.iter().filter(|&&x| x).count();
+        self.faults.dropped_payloads += (n_active - arrived) as u64;
+
         // The round exchange — ONE generic typed-payload path for every
         // outer optimizer and wire format (lines 8-10):
         //
@@ -431,8 +513,22 @@ impl Trainer {
             self.payloads =
                 (0..n).map(|_| WirePayload::with_layout(self.wire, &self.layout)).collect();
         }
-        self.clock.charge_exchange(&self.cfg.comm, n, &self.payloads[0], &mut self.rng);
+        // billing: with a full fleet this is bitwise charge_exchange
+        // (Topology::select routes ring / flat / hierarchical); a
+        // degraded round bills exactly what moved — `arrived − 1` up,
+        // `n_active − 1` down. Straggler draws come from fault_rng
+        // (dedicated stream; nothing is drawn when jitter is off).
+        self.clock.charge_exchange_among(
+            &self.cfg.comm,
+            n_active,
+            arrived,
+            &self.payloads[0],
+            &mut self.fault_rng,
+        );
         for w in 0..n {
+            if !active[w] {
+                continue; // absent ranks have nothing to pack
+            }
             let view = WorkerView {
                 start: &start,
                 end: &self.workers[w].params,
@@ -451,9 +547,67 @@ impl Trainer {
                 p
             );
         }
+        // corruption in transit: each arriving payload is damaged with
+        // corrupt_prob — a flipped byte/sign bit (valid encoding,
+        // survived with bounded error) or a NaN-poisoned scale or
+        // coordinate (rejected by the finiteness check below).
+        if faults_on && plan.corrupt_prob > 0.0 {
+            for w in 0..n {
+                if arrived_mask[w] && self.fault_rng.bernoulli(plan.corrupt_prob) {
+                    self.payloads[w].corrupt(&mut self.fault_rng);
+                    self.faults.corrupted_payloads += 1;
+                }
+            }
+        }
         let ctx = RoundCtx { start: &start, gamma: gamma_t, round: self.round };
         self.global.copy_from_slice(&start);
-        self.outer.apply(&mut self.global, &ctx, &self.payloads, &mut self.rng)?;
+        if !faults_on {
+            // the clean path: all n payloads, zero copies, bitwise-
+            // pinned. At hierarchical scale the group heads partially
+            // aggregate first; the outer optimizer consumes the
+            // replicated head payloads through its unchanged interface
+            // (a group-size-weighted mean/tally by construction). A
+            // non-finite scale from a diverged rank is a hard error
+            // here — with no fault plan there is nothing to survive.
+            match Topology::select(self.payloads[0].ring_reducible(), n) {
+                Topology::Hierarchical { groups } => {
+                    let heads = WirePayload::aggregate_group_heads(&self.payloads, groups);
+                    self.outer.apply(&mut self.global, &ctx, &heads, &mut self.rng)?;
+                }
+                _ => {
+                    self.outer.apply(&mut self.global, &ctx, &self.payloads, &mut self.rng)?;
+                }
+            }
+        } else {
+            // n_effective: the arrived payloads that pass the
+            // finiteness check. Rejections are counted, never averaged
+            // in; a round with no survivors holds the global at the
+            // round start (outer state untouched) instead of erroring.
+            let mut survivors: Vec<WirePayload> = Vec::with_capacity(arrived);
+            for w in 0..n {
+                if !arrived_mask[w] {
+                    continue;
+                }
+                match self.payloads[w].check_finite(w) {
+                    Ok(()) => survivors.push(self.payloads[w].clone()),
+                    Err(_) => self.faults.rejected_payloads += 1,
+                }
+            }
+            if survivors.is_empty() {
+                self.faults.no_quorum_rounds += 1;
+            } else {
+                let topo = Topology::select(survivors[0].ring_reducible(), survivors.len());
+                let heads;
+                let agg: &[WirePayload] = match topo {
+                    Topology::Hierarchical { groups } => {
+                        heads = WirePayload::aggregate_group_heads(&survivors, groups);
+                        &heads
+                    }
+                    _ => &survivors,
+                };
+                self.outer.apply(&mut self.global, &ctx, agg, &mut self.rng)?;
+            }
+        }
         anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
         // resolve this round's global update along the layout (pure
         // observation: no RNG, no parameter writes — trajectories are
@@ -499,7 +653,7 @@ impl Trainer {
         collectives::allreduce_mean(&grads, |g| g.as_slice(), &mut mean_grad);
         self.clock.charge_parallel_compute(&per_worker_secs);
         let param_bytes = self.backend.info().param_bytes();
-        self.clock.charge_allreduce(&self.cfg.comm, n, param_bytes, &mut self.rng);
+        self.clock.charge_allreduce(&self.cfg.comm, n, param_bytes, &mut self.fault_rng);
         // shared optimizer state lives in worker 0's optimizer
         self.workers[0].opt.step(&mut self.global, &mean_grad, lr);
         self.local_step += 1;
@@ -560,6 +714,11 @@ impl Trainer {
             ck.add(&format!("worker{}.rng", w.id), &w.rng.to_f32_words());
         }
         ck.add("trainer.rng", &self.rng.to_f32_words());
+        // the fault/jitter stream and counters: restored, a resumed
+        // faulty run replays its churn/drop/corrupt/straggler draws in
+        // place and keeps counting where it left off.
+        ck.add("trainer.fault_rng", &self.fault_rng.to_f32_words());
+        ck.add("trainer.faults", &self.faults.to_f32_words());
         // simulated clock: a resumed run continues the time axis
         // (compute/comm/straggler seconds, comm rounds, wire bytes)
         // instead of restarting it at zero.
@@ -609,6 +768,16 @@ impl Trainer {
                     anyhow::anyhow!("corrupt worker{}.rng buffer", w.id)
                 })?;
             }
+        }
+        // fault stream + counters (newer checkpoints); older ones load
+        // with a fresh stream and zeroed counters.
+        if let Ok(words) = ck.get("trainer.fault_rng") {
+            self.fault_rng = Rng::from_f32_words(words)
+                .ok_or_else(|| anyhow::anyhow!("corrupt trainer.fault_rng buffer"))?;
+        }
+        if let Ok(words) = ck.get("trainer.faults") {
+            self.faults = FaultStats::from_f32_words(words)
+                .ok_or_else(|| anyhow::anyhow!("corrupt trainer.faults buffer"))?;
         }
         // simulated clock (newer checkpoints); pre-clock checkpoints
         // still load and restart the time axis at zero.

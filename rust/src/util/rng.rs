@@ -121,6 +121,13 @@ impl Rng {
         (mu + sigma * self.normal()).exp()
     }
 
+    /// Pareto(α) sample with minimum 1 via inverse transform: heavy
+    /// tails for fault-injected straggler stalls (α ≤ 1 has no mean).
+    pub fn pareto(&mut self, alpha: f64) -> f64 {
+        // 1 - f64() is in (0, 1], so the power is finite
+        (1.0 - self.f64()).powf(-1.0 / alpha)
+    }
+
     /// Fill a slice with N(0, std) f32 noise.
     pub fn fill_normal(&mut self, out: &mut [f32], std: f32) {
         for v in out.iter_mut() {
@@ -303,6 +310,25 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.02, "mean {mean}");
         assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn pareto_is_heavy_tailed_above_one() {
+        let mut rng = Rng::new(21);
+        let n = 20_000;
+        // alpha = 3: finite variance, E[X] = 3/2 — the sample mean pins
+        // the inverse transform
+        let mean = (0..n).map(|_| rng.pareto(3.0)).sum::<f64>() / n as f64;
+        assert!((mean - 1.5).abs() < 0.05, "mean {mean}");
+        // alpha = 1.5: every draw >= 1 and the tail produces extremes
+        // far beyond the median 2^(1/1.5) ~= 1.6
+        let mut max = 0.0f64;
+        for _ in 0..n {
+            let x = rng.pareto(1.5);
+            assert!(x >= 1.0 && x.is_finite());
+            max = max.max(x);
+        }
+        assert!(max > 50.0, "heavy tail should show extremes, max {max}");
     }
 
     #[test]

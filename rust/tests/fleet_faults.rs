@@ -1,0 +1,296 @@
+//! Fleet-scale robustness: the hierarchical exchange regime and the
+//! fault plan, end to end on the pure-Rust [`NativeBundle`] backend (no
+//! PJRT artifacts required).
+//!
+//! Three contracts are pinned here:
+//!
+//! 1. **Stream hygiene** — straggler/jitter billing draws from the
+//!    trainer's dedicated fault stream, so toggling the comm preset's
+//!    jitter can never shift an optimization draw (the training
+//!    trajectory is bit-identical across comm presets).
+//! 2. **Hierarchical regime** — once the fleet clears
+//!    `HIERARCHICAL_MIN_RANKS`, compressed wires route the two-level
+//!    topology: parallel ≡ sequential still holds bitwise, and the
+//!    billed volume stays the flat `2(n−1)·b` per round.
+//! 3. **Faults** — dropped payloads shrink `n_effective` without
+//!    killing the round (majority vote holds its loss), corrupted
+//!    payloads are rejected loudly (counted, never averaged in), and a
+//!    faulty run checkpoints/resumes bit-for-bit.
+
+use std::sync::Arc;
+
+use dsm::config::RunConfig;
+use dsm::outer::OuterConfig;
+use dsm::runtime::NativeBundle;
+use dsm::train::{RunResult, Trainer};
+
+const PRESET: &str = "native";
+
+/// ln(256), the byte LM's uniform loss — the "did not diverge" anchor.
+fn uniform() -> f64 {
+    (256f64).ln()
+}
+
+fn backend() -> Arc<NativeBundle> {
+    Arc::new(NativeBundle::new(PRESET, 2, 24, 8))
+}
+
+fn base_cfg(tag: &str) -> RunConfig {
+    let mut cfg = RunConfig::paper_default(PRESET);
+    cfg.rounds = 4;
+    cfg.tau = 3;
+    cfg.n_workers = 4;
+    cfg.corpus_bytes = 1 << 16;
+    cfg.eval_every = 2;
+    cfg.eval_batches = 2;
+    cfg.comm = dsm::comm::CommModel::preset("ethernet").unwrap();
+    cfg.tag = tag.to_string();
+    cfg
+}
+
+fn mv_cfg(tag: &str) -> RunConfig {
+    let mut cfg = base_cfg(tag);
+    cfg.outer = OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 };
+    cfg
+}
+
+fn run_cfg(cfg: RunConfig) -> RunResult {
+    let mut t = Trainer::with_backend(cfg, backend()).unwrap();
+    t.run().unwrap()
+}
+
+fn assert_same_trajectory(a: &RunResult, b: &RunResult, label: &str) {
+    assert_eq!(a.log.rows.len(), b.log.rows.len(), "{label}: row count");
+    for (ra, rb) in a.log.rows.iter().zip(&b.log.rows) {
+        assert_eq!(
+            ra.train_loss.to_bits(),
+            rb.train_loss.to_bits(),
+            "{label}: train loss, round {}",
+            ra.round
+        );
+        assert_eq!(
+            ra.val_loss.to_bits(),
+            rb.val_loss.to_bits(),
+            "{label}: val loss, round {}",
+            ra.round
+        );
+    }
+    assert_eq!(a.final_val.to_bits(), b.final_val.to_bits(), "{label}: final val");
+}
+
+#[test]
+fn comm_jitter_cannot_shift_the_training_stream() {
+    // mv_signsgd's randomized sign votes consume the trainer RNG every
+    // round, so this is the most jitter-sensitive configuration: if
+    // straggler draws shared that stream, swapping the comm preset
+    // would shift every vote. They live on the dedicated fault stream
+    // instead — the trajectory is bit-identical, only the clock moves.
+    let mut free = mv_cfg("jitter-free");
+    free.comm = dsm::comm::CommModel::preset("none").unwrap();
+    let mut wan = mv_cfg("jitter-wan");
+    wan.comm = dsm::comm::CommModel::preset("wan").unwrap();
+    let rf = run_cfg(free);
+    let rw = run_cfg(wan);
+    assert_same_trajectory(&rf, &rw, "jitter toggle");
+    assert_eq!(rf.clock.straggler_s, 0.0);
+    assert!(rw.clock.straggler_s > 0.0, "wan jitter must bill straggler time");
+}
+
+#[test]
+fn hierarchical_regime_is_parallel_sequential_identical_and_bills_flat_volume() {
+    // n = 32 clears HIERARCHICAL_MIN_RANKS, so the q8 wire routes the
+    // two-level topology every round: the group heads' decode-mean-
+    // requantize data path must stay bitwise execution-order-invariant,
+    // and the billed volume must stay the flat 2(n−1)·b.
+    let mut cfg = base_cfg("hier-fleet");
+    cfg.n_workers = 32;
+    cfg.rounds = 2;
+    cfg.tau = 2;
+    cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8);
+    let mut seq = cfg.clone();
+    seq.sequential_workers = true;
+
+    let mut par_t = Trainer::with_backend(cfg, backend()).unwrap();
+    let p = par_t.dim();
+    let par = par_t.run().unwrap();
+    let seq = run_cfg(seq);
+    assert_same_trajectory(&par, &seq, "hierarchical n=32");
+
+    let payload = dsm::dist::codec::q8_bytes(p);
+    assert_eq!(par.clock.bytes_communicated, 2 * payload * 2 * (32 - 1));
+    assert_eq!(par.clock.bytes_communicated, seq.clock.bytes_communicated);
+}
+
+#[test]
+fn hierarchical_regime_checkpoint_resume_is_bit_identical() {
+    let mut cfg = base_cfg("hier-ck");
+    cfg.n_workers = 16;
+    cfg.rounds = 4;
+    cfg.tau = 2;
+    cfg.eval_every = 0;
+    cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8PerTensor);
+    let full = run_cfg(cfg.clone());
+
+    let mut half = cfg.clone();
+    half.rounds = 2;
+    let mut t1 = Trainer::with_backend(half, backend()).unwrap();
+    t1.run().unwrap();
+    let path = std::env::temp_dir().join("dsm_fleet_hier_resume.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+
+    let mut t2 = Trainer::with_backend(cfg, backend()).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    let resumed = t2.run().unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(resumed.final_val.to_bits(), full.final_val.to_bits());
+    assert_eq!(resumed.clock.bytes_communicated, full.clock.bytes_communicated);
+}
+
+#[test]
+fn majority_vote_holds_its_loss_under_ten_percent_drops() {
+    // the acceptance pin: at drop_prob = 0.1 the MV tally thresholds at
+    // half of whatever arrived, so the run neither errors nor collapses
+    // — final loss stays in the same neighborhood as the drop-free run.
+    let clean = run_cfg(mv_cfg("mv-clean"));
+    let mut faulty_cfg = mv_cfg("mv-drops");
+    faulty_cfg.faults.drop_prob = 0.1;
+    let faulty = run_cfg(faulty_cfg);
+
+    assert!(faulty.faults.dropped_payloads > 0, "0.1 × 16 payloads should drop at least one");
+    assert_eq!(clean.faults.dropped_payloads, 0);
+    assert!(faulty.final_val.is_finite());
+    assert!(faulty.final_val < uniform() + 0.5, "diverged: {}", faulty.final_val);
+    assert!(
+        (faulty.final_val - clean.final_val).abs() < 0.5,
+        "drops moved the loss too far: {} vs {}",
+        faulty.final_val,
+        clean.final_val
+    );
+}
+
+#[test]
+fn dense_corruption_is_rejected_loudly_never_averaged() {
+    // a corrupted dense payload carries a NaN coordinate; the
+    // finiteness check excludes it from the round and counts it. The
+    // run completes with a finite global — the poison never reaches
+    // the mean.
+    let mut cfg = base_cfg("dense-corrupt");
+    cfg.rounds = 6;
+    cfg.faults.corrupt_prob = 0.5;
+    let res = run_cfg(cfg);
+    assert!(res.faults.corrupted_payloads > 0, "0.5 × 24 payloads should corrupt some");
+    // every corrupted dense payload is NaN-poisoned, hence rejected
+    assert_eq!(res.faults.rejected_payloads, res.faults.corrupted_payloads);
+    assert!(res.final_val.is_finite());
+    for row in &res.log.rows {
+        assert!(row.train_loss.is_finite(), "round {}", row.round);
+    }
+}
+
+#[test]
+fn quantized_corruption_splits_into_survived_flips_and_rejected_scales() {
+    // q8 corruption is a fair coin between a flipped byte (valid
+    // encoding — survived with bounded error) and a NaN scale
+    // (rejected): over 6 rounds × 4 ranks at corrupt_prob 0.5, both
+    // fates should occur, and rejections never exceed corruptions.
+    let mut cfg = base_cfg("q8-corrupt");
+    cfg.rounds = 6;
+    cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8);
+    cfg.faults.corrupt_prob = 0.5;
+    let res = run_cfg(cfg);
+    assert!(res.faults.corrupted_payloads > 0);
+    assert!(res.faults.rejected_payloads < res.faults.corrupted_payloads);
+    assert!(res.final_val.is_finite());
+}
+
+#[test]
+fn elastic_membership_trains_through_churn() {
+    let mut cfg = base_cfg("churn");
+    cfg.rounds = 6;
+    cfg.faults.churn_prob = 0.3;
+    let res = run_cfg(cfg);
+    assert!(res.faults.absent_ranks > 0, "0.3 × 24 rank-rounds should sit some out");
+    assert!(res.final_val.is_finite());
+    assert!(res.final_val < uniform() + 0.5, "churned fleet diverged: {}", res.final_val);
+}
+
+#[test]
+fn total_drop_yields_no_quorum_rounds_and_a_held_global() {
+    // drop_prob = 1: nothing ever arrives, every round is a no-quorum
+    // round, and the global holds at the round start instead of
+    // erroring — the loudness lives in the counters.
+    let mut cfg = base_cfg("blackout");
+    cfg.faults.drop_prob = 1.0;
+    let res = run_cfg(cfg);
+    assert_eq!(res.faults.no_quorum_rounds, 4);
+    assert_eq!(res.faults.dropped_payloads, 4 * 4);
+    assert!(res.final_val.is_finite());
+    // with no aggregate ever applied, the global never moves: every
+    // eval sees the same initial parameters
+    let rows = &res.log.rows;
+    let evals: Vec<u64> =
+        rows.iter().filter(|r| !r.val_loss.is_nan()).map(|r| r.val_loss.to_bits()).collect();
+    assert!(evals.len() >= 2);
+    assert!(evals.windows(2).all(|w| w[0] == w[1]), "global moved during a blackout");
+}
+
+#[test]
+fn faulty_run_checkpoint_resume_is_bit_identical() {
+    // churn + drops + corruption + heavy tails all draw from the
+    // checkpointed fault stream: a resumed run must replay the
+    // uninterrupted one bit-for-bit, counters included.
+    let mut cfg = mv_cfg("faulty-ck");
+    cfg.rounds = 6;
+    cfg.eval_every = 0;
+    cfg.faults.churn_prob = 0.2;
+    cfg.faults.drop_prob = 0.15;
+    cfg.faults.corrupt_prob = 0.1;
+    cfg.faults.tail_prob = 0.3;
+    cfg.faults.tail_scale_s = 2.0;
+    let full = run_cfg(cfg.clone());
+
+    let mut half = cfg.clone();
+    half.rounds = 3;
+    let mut t1 = Trainer::with_backend(half, backend()).unwrap();
+    t1.run().unwrap();
+    let path = std::env::temp_dir().join("dsm_fleet_faulty_resume.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+
+    let mut t2 = Trainer::with_backend(cfg, backend()).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    let resumed = t2.run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(resumed.final_val.to_bits(), full.final_val.to_bits());
+    assert_eq!(resumed.faults, full.faults, "fault counters must resume, not restart");
+    assert_eq!(
+        resumed.clock.straggler_s.to_bits(),
+        full.clock.straggler_s.to_bits(),
+        "heavy-tail stalls must replay from the checkpointed fault stream"
+    );
+    assert_eq!(resumed.clock.bytes_communicated, full.clock.bytes_communicated);
+    assert!(full.faults.absent_ranks + full.faults.dropped_payloads > 0, "plan never fired");
+}
+
+#[test]
+fn degraded_rounds_bill_fewer_bytes_than_clean_ones() {
+    // q8 (server topology both ways): a clean round moves 2(n−1)·b,
+    // a degraded one (arrived−1 + n_active−1)·b — dropped payloads
+    // never reached the server and must not be billed. (Dense is
+    // excluded on purpose: its clean path is the cheaper ring, so the
+    // byte comparison would go the other way.)
+    let mut clean_cfg = base_cfg("bill-clean");
+    clean_cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8);
+    let clean = run_cfg(clean_cfg);
+    let mut cfg = base_cfg("bill-drops");
+    cfg.wire = Some(dsm::dist::WireFormat::QuantizedI8);
+    cfg.faults.drop_prob = 0.5;
+    let faulty = run_cfg(cfg);
+    assert!(faulty.faults.dropped_payloads > 0);
+    assert!(
+        faulty.clock.bytes_communicated < clean.clock.bytes_communicated,
+        "dropped payloads never reached the server; they must not be billed: {} vs {}",
+        faulty.clock.bytes_communicated,
+        clean.clock.bytes_communicated
+    );
+}

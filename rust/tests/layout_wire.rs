@@ -75,9 +75,9 @@ fn one_segment_q8pt_is_bitwise_identical_to_q8() {
 
     // identical server-side reconstruction, bit for bit
     let mut mean_q8 = vec![0.0f32; p];
-    WirePayload::mean_end_into(&q8, &start, &mut mean_q8);
+    WirePayload::mean_end_into(&q8, &start, &mut mean_q8).unwrap();
     let mut mean_q8pt = vec![0.0f32; p];
-    WirePayload::mean_end_into(&q8pt, &start, &mut mean_q8pt);
+    WirePayload::mean_end_into(&q8pt, &start, &mut mean_q8pt).unwrap();
     for (a, b) in mean_q8.iter().zip(&mean_q8pt) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
@@ -118,7 +118,7 @@ fn hetero_two_segment_layout_strictly_reduces_max_dequantization_error() {
     // decode both and compare against the true difference
     let max_err = |pl: &WirePayload| -> f32 {
         let mut avg = vec![0.0f32; 12];
-        WirePayload::mean_end_into(std::slice::from_ref(pl), &start, &mut avg);
+        WirePayload::mean_end_into(std::slice::from_ref(pl), &start, &mut avg).unwrap();
         avg.iter().zip(&end).map(|(a, e)| (a - e).abs()).fold(0.0f32, f32::max)
     };
     let err_q8 = max_err(&q8);

@@ -228,7 +228,7 @@ fn prop_q8_mean_end_tracks_exact_mean() {
             })
             .collect();
         let mut approx = vec![0.0f32; p];
-        WirePayload::mean_end_into(&payloads, &start, &mut approx);
+        WirePayload::mean_end_into(&payloads, &start, &mut approx).unwrap();
         let mut exact = vec![0.0f32; p];
         collectives::allreduce_mean(&ends, |e| e.as_slice(), &mut exact);
         // the mean's error is bounded by the mean of the per-rank

@@ -84,9 +84,9 @@ fn assert_parallel_equals_sequential_on(cfg: RunConfig, be: Arc<NativeBundle>) {
             "{label}: val loss, round {}",
             a.round
         );
-        // modeled comm/straggler charges draw from the trainer RNG, so
-        // they too must be unaffected by the execution mode (compute
-        // seconds are measured wall-clock and are excluded)
+        // modeled comm/straggler charges draw from the dedicated fault
+        // stream, so they too must be unaffected by the execution mode
+        // (compute seconds are measured wall-clock and are excluded)
         assert_eq!(a.comm_rounds, b.comm_rounds, "{label}: comm rounds");
         assert_eq!(a.local_steps, b.local_steps, "{label}: local steps");
     }
@@ -404,7 +404,7 @@ fn clock_checkpoint_resumes_the_simulated_time_axis() {
     std::fs::remove_file(&path).ok();
 
     // modeled charges are deterministic (straggler draws replay from
-    // the checkpointed trainer RNG): resumed ≡ uninterrupted, bit-level
+    // the checkpointed fault stream): resumed ≡ uninterrupted, bit-level
     assert_eq!(resumed.clock.comm_s.to_bits(), full.clock.comm_s.to_bits());
     assert_eq!(resumed.clock.straggler_s.to_bits(), full.clock.straggler_s.to_bits());
     assert_eq!(resumed.clock.comm_rounds, full.clock.comm_rounds);
