@@ -6,7 +6,8 @@
 //! τ wins even though each round makes slightly less optimization
 //! progress. A second sweep varies the round's WIRE FORMAT at fixed τ
 //! (dense f32 vs the 8-bit quantized exchange, per-message `q8` and
-//! layout-aware per-tensor `q8pt`), the payload-level axis the typed
+//! layout-aware per-tensor `q8pt`, vs the DeMo-style sparse `topk`
+//! residual-momentum wire), the payload-level axis the typed
 //! `WirePayload` contract opens, plus the per-segment breakdown of where
 //! the bits go.
 //!
@@ -145,7 +146,9 @@ fn main() -> Result<()> {
     // Same algorithm, same schedule; only the round payload changes:
     // dense f32 (ring) vs 8-bit quantized differences (gather+broadcast,
     // 4x smaller messages, bounded rounding error in the exchange) —
-    // with one scale per message (q8) or one per layout segment (q8pt).
+    // with one scale per message (q8) or one per layout segment (q8pt) —
+    // vs sparse top-k residual momentum (topk: 8 bytes per kept
+    // component, untransmitted mass banked in a decaying residual).
     let fixed_tau = 12usize;
     let dense_res = rows
         .iter()
@@ -158,12 +161,15 @@ fn main() -> Result<()> {
     let q8pt_cfg = make_cfg(fixed_tau, Some(WireFormat::QuantizedI8PerTensor));
     let mut q8pt_trainer = Trainer::with_backend(q8pt_cfg, backend.clone())?;
     let q8pt_res = q8pt_trainer.run()?;
+    let topk_cfg = make_cfg(fixed_tau, Some(WireFormat::TOPK_DEFAULT));
+    let mut topk_trainer = Trainer::with_backend(topk_cfg, backend.clone())?;
+    let topk_res = topk_trainer.run()?;
 
     writeln!(
         report,
         "\nwire-format tradeoff at tau = {fixed_tau} (Algorithm 1, simulated total seconds):"
     )?;
-    writeln!(report, "{:>10}{:>12}{:>12}{:>12}", "net", "dense", "q8", "q8pt")?;
+    writeln!(report, "{:>10}{:>12}{:>12}{:>12}{:>12}", "net", "dense", "q8", "q8pt", "topk")?;
     for net in ["nvlink", "infiniband", "ethernet", "wan"] {
         let m = CommModel::preset(net).unwrap();
         // re-cost through WireFormat::exchange_time — the same byte ×
@@ -174,23 +180,27 @@ fn main() -> Result<()> {
         };
         writeln!(
             report,
-            "{net:>10}{:>12.2}{:>12.2}{:>12.2}",
+            "{net:>10}{:>12.2}{:>12.2}{:>12.2}{:>12.2}",
             total(dense_res, WireFormat::DenseF32),
             total(&q8_res, WireFormat::QuantizedI8),
             total(&q8pt_res, WireFormat::QuantizedI8PerTensor),
+            total(&topk_res, WireFormat::TOPK_DEFAULT),
         )?;
     }
     writeln!(
         report,
-        "final val: dense {:.4} | q8 {:.4} | q8pt {:.4}\n\
-         per-rank message bytes: dense {} | q8 {} | q8pt {} \
-         ({} segments x 4-byte scales)",
+        "final val: dense {:.4} | q8 {:.4} | q8pt {:.4} | topk {:.4}\n\
+         per-rank message bytes: dense {} | q8 {} | q8pt {} | topk {} \
+         ({} segments; q8pt pays 4-byte scales, topk 8 bytes per kept\n\
+         component at the default 1/16 keep fraction)",
         dense_res.final_val,
         q8_res.final_val,
         q8pt_res.final_val,
+        topk_res.final_val,
         WireFormat::DenseF32.wire_bytes(p, segments),
         WireFormat::QuantizedI8.wire_bytes(p, segments),
         WireFormat::QuantizedI8PerTensor.wire_bytes(p, segments),
+        WireFormat::TOPK_DEFAULT.wire_bytes(p, segments),
         segments,
     )?;
 

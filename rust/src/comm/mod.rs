@@ -14,8 +14,9 @@
 //!
 //! plus an optional straggler term: per round, the slowest of n i.i.d.
 //! log-normal worker delays (Dean et al. 2012's tail-latency story).
-//! Compressed rounds are the exception: neither a majority tally nor a
-//! per-rank-scaled i8 sum is ring-reducible in its own wire format, so
+//! Compressed rounds are the exception: a majority tally, a
+//! per-rank-scaled i8 sum, and a sparse top-k index union are none of
+//! them ring-reducible in their own wire format, so
 //! they bill a server topology instead — the flat gather+broadcast
 //! ([`SimClock::charge_vote_allreduce`]) at small n, and the two-level
 //! hierarchical aggregation ([`SimClock::charge_hierarchical`], group
@@ -195,8 +196,9 @@ impl SimClock {
     /// Topology comes from [`Topology::select`] on the format
     /// ([`WirePayload::ring_reducible`]) and the fleet size: a dense f32
     /// mean is ring-reducible and bills
-    /// [`charge_allreduce`](Self::charge_allreduce); packed sign votes
-    /// and per-rank-scaled i8 payloads cannot be partially aggregated in
+    /// [`charge_allreduce`](Self::charge_allreduce); packed sign votes,
+    /// per-rank-scaled i8 payloads, and sparse top-k payloads cannot be
+    /// partially aggregated in
     /// their own encoding, so they bill the flat gather+broadcast server
     /// topology ([`charge_vote_allreduce`](Self::charge_vote_allreduce))
     /// at small n and the two-level

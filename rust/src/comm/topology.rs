@@ -13,7 +13,8 @@
 //!   head broadcasts the result down its group:
 //!   `(m-1) + (g-1) + ⌈log2 g⌉ + ⌈log2 m⌉` message times. With g ≈ √n
 //!   that is O(√n) instead of the flat topology's O(n), which is what
-//!   keeps the quantized formats viable at thousand-rank scale.
+//!   keeps the compressed formats — sign votes, the quantized pair, and
+//!   the sparse top-k payload — viable at thousand-rank scale.
 //!
 //! Every term above is `count · (α + b/β)`, so which topology is fastest
 //! depends on `n` alone — never on the model constants or the payload

@@ -59,12 +59,18 @@ pub struct RunConfig {
     /// corpus source (the Theorem-2(b) heterogeneity regime).
     pub heterogeneous: bool,
     /// Round-exchange wire format override (`[outer] wire = "dense" |
-    /// "packed_signs" | "q8" | "q8pt"` / `--wire`). `None` = the outer
-    /// optimizer's native format ([`OuterConfig::default_wire`]);
-    /// validation rejects formats the optimizer does not speak
-    /// ([`OuterConfig::supported_wires`]). `q8pt` quantizes each
-    /// segment of the backend's parameter layout against its own scale
-    /// ([`crate::runtime::StepBackend::layout`]).
+    /// "packed_signs" | "q8" | "q8pt" | "topk"` / `--wire`). `None` =
+    /// the outer optimizer's native format
+    /// ([`OuterConfig::default_wire`]); validation rejects formats the
+    /// optimizer does not speak ([`OuterConfig::supported_wires`],
+    /// matched by name so tuned `topk` parameters stay valid). `q8pt`
+    /// quantizes each segment of the backend's parameter layout
+    /// against its own scale ([`crate::runtime::StepBackend::layout`]);
+    /// `topk` transmits the k largest components per segment of a
+    /// decaying residual-momentum buffer, with the keep fraction and
+    /// decay tunable via `[outer] topk_frac`/`topk_decay` (or
+    /// `--topk-frac`/`--topk-decay`), both parsed as plain fractions
+    /// and carried as exact ppm integers.
     pub wire: Option<WireFormat>,
     /// Differential-testing / benchmarking hook: run the simulated
     /// ranks of each round serially on the coordinator thread instead
@@ -187,11 +193,15 @@ impl RunConfig {
         if let Some(t) = doc.get("base") {
             cfg.base = BaseOptConfig::from_json(t).map_err(|e| anyhow!(e))?;
         }
+        let mut topk_frac: Option<f64> = None;
+        let mut topk_decay: Option<f64> = None;
         if let Some(t) = doc.get("outer") {
             cfg.outer = OuterConfig::from_json(t).map_err(|e| anyhow!(e))?;
             if let Some(w) = t.get("wire").and_then(Json::as_str) {
                 cfg.wire = Some(parse_wire(w)?);
             }
+            topk_frac = t.get("topk_frac").and_then(Json::as_f64);
+            topk_decay = t.get("topk_decay").and_then(Json::as_f64);
         }
         if let Some(t) = doc.get("schedule") {
             cfg.schedule = ScheduleConfig::from_json(t, cfg.total_local_steps())
@@ -260,6 +270,27 @@ impl RunConfig {
         if let Some(w) = args.get("wire") {
             cfg.wire = Some(parse_wire(w)?);
         }
+        if let Some(v) = args.get("topk-frac") {
+            topk_frac = Some(v.parse().map_err(|_| anyhow!("--topk-frac: bad float"))?);
+        }
+        if let Some(v) = args.get("topk-decay") {
+            topk_decay = Some(v.parse().map_err(|_| anyhow!("--topk-decay: bad float"))?);
+        }
+        if topk_frac.is_some() || topk_decay.is_some() {
+            // the knobs parameterize the topk format itself, so handing
+            // them to any other wire is a silent no-op we refuse
+            let Some(WireFormat::TopK { frac_ppm, decay_ppm }) = &mut cfg.wire else {
+                anyhow::bail!("topk_frac/topk_decay require `wire = \"topk\"`");
+            };
+            if let Some(f) = topk_frac {
+                anyhow::ensure!(f > 0.0 && f <= 1.0, "topk_frac in (0, 1]");
+                *frac_ppm = (f * 1e6).round() as u32;
+            }
+            if let Some(d) = topk_decay {
+                anyhow::ensure!((0.0..=1.0).contains(&d), "topk_decay in [0, 1]");
+                *decay_ppm = (d * 1e6).round() as u32;
+            }
+        }
         if args.has("pallas-global-step") {
             cfg.global_step_pallas = true;
         }
@@ -316,8 +347,11 @@ impl RunConfig {
             );
         }
         let wire = self.resolved_wire();
+        // match by name, not by value: the supported-wires menu lists
+        // topk with its default frac/decay, and a tuned topk format is
+        // every bit as speakable
         anyhow::ensure!(
-            self.outer.supported_wires().contains(&wire),
+            self.outer.supported_wires().iter().any(|w| w.name() == wire.name()),
             "outer optimizer `{}` does not speak wire format `{}` (supported: {})",
             self.outer.name(),
             wire.name(),
@@ -332,17 +366,24 @@ impl RunConfig {
     }
 
     /// One-line summary for logs (also feeds the experiment cache key,
-    /// so everything trajectory-determining belongs here).
+    /// so everything trajectory-determining belongs here — a topk wire
+    /// spells out its frac/decay ppm, since those steer the trajectory
+    /// as surely as the format name does).
     pub fn describe(&self) -> String {
+        let wire = match self.resolved_wire() {
+            WireFormat::TopK { frac_ppm, decay_ppm } => {
+                format!("topk[{frac_ppm}ppm,{decay_ppm}ppm]")
+            }
+            w => w.name().to_string(),
+        };
         format!(
-            "{} n={} tau={} T={} base={} outer={} wire={} comm-rounds={} mode={:?}{}",
+            "{} n={} tau={} T={} base={} outer={} wire={wire} comm-rounds={} mode={:?}{}",
             self.preset,
             self.n_workers,
             self.tau,
             self.rounds,
             self.base.name(),
             self.outer.name(),
-            self.resolved_wire().name(),
             self.rounds,
             self.mode,
             self.faults.describe()
@@ -460,9 +501,16 @@ preset = "wan"
         let q8pt_cli = parse(toml_q8, "--wire q8pt").unwrap();
         assert_eq!(q8pt_cli.resolved_wire(), WireFormat::QuantizedI8PerTensor);
 
+        // the sparse residual-momentum format parses from file and CLI
+        let topk = parse("[outer]\nalgo = \"slowmo\"\nwire = \"topk\"\n", "").unwrap();
+        assert_eq!(topk.resolved_wire(), WireFormat::TOPK_DEFAULT);
+        let topk_cli = parse(toml_q8, "--wire topk").unwrap();
+        assert_eq!(topk_cli.resolved_wire(), WireFormat::TOPK_DEFAULT);
+
         // unsupported pairings are rejected, not silently mis-billed
         assert!(parse("[outer]\nalgo = \"mv_signsgd\"\nwire = \"dense\"\n", "").is_err());
         assert!(parse("[outer]\nalgo = \"mv_signsgd\"\nwire = \"q8pt\"\n", "").is_err());
+        assert!(parse("[outer]\nalgo = \"mv_signsgd\"\nwire = \"topk\"\n", "").is_err());
         assert!(parse("[outer]\nalgo = \"sign_momentum\"\nwire = \"1bit\"\n", "").is_err());
         // ...and so is a wire override in standalone mode, which never
         // runs the outer exchange the override would re-format
@@ -479,6 +527,52 @@ preset = "wan"
         assert!(cfg.describe().contains("wire=q8"));
         cfg.wire = Some(WireFormat::QuantizedI8PerTensor);
         assert!(cfg.describe().contains("wire=q8pt"));
+        // topk spells out its parameters: two runs differing only in
+        // frac or decay must land in different experiment cache slots
+        cfg.wire = Some(WireFormat::TOPK_DEFAULT);
+        assert!(cfg.describe().contains("wire=topk[62500ppm,900000ppm]"), "{}", cfg.describe());
+        cfg.wire = Some(WireFormat::TopK { frac_ppm: 125_000, decay_ppm: 900_000 });
+        assert!(cfg.describe().contains("wire=topk[125000ppm,900000ppm]"), "{}", cfg.describe());
+    }
+
+    #[test]
+    fn topk_knobs_parse_validate_and_require_the_topk_wire() {
+        let parse = |text: &str, cli: &str| RunConfig::from_toml_and_args(Some(text), &args(cli));
+
+        // file-level knobs in the [outer] table
+        let text =
+            "[outer]\nalgo = \"slowmo\"\nwire = \"topk\"\ntopk_frac = 0.125\ntopk_decay = 0.5\n";
+        let cfg = parse(text, "").unwrap();
+        assert_eq!(
+            cfg.resolved_wire(),
+            WireFormat::TopK { frac_ppm: 125_000, decay_ppm: 500_000 }
+        );
+
+        // CLI beats file, and composes with --wire
+        let cfg = parse(text, "--topk-frac 0.25").unwrap();
+        assert_eq!(
+            cfg.resolved_wire(),
+            WireFormat::TopK { frac_ppm: 250_000, decay_ppm: 500_000 }
+        );
+        let cfg = RunConfig::from_toml_and_args(
+            None,
+            &args("--wire topk --topk-frac 0.03125 --topk-decay 0.999"),
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.resolved_wire(),
+            WireFormat::TopK { frac_ppm: 31_250, decay_ppm: 999_000 }
+        );
+
+        // the knobs without the format are a config error, not a no-op
+        assert!(RunConfig::from_toml_and_args(None, &args("--topk-frac 0.1")).is_err());
+        assert!(parse("[outer]\nalgo = \"slowmo\"\nwire = \"q8\"\ntopk_frac = 0.1\n", "").is_err());
+        // out-of-range values are rejected
+        assert!(RunConfig::from_toml_and_args(None, &args("--wire topk --topk-frac 0")).is_err());
+        assert!(RunConfig::from_toml_and_args(None, &args("--wire topk --topk-frac 1.5")).is_err());
+        assert!(
+            RunConfig::from_toml_and_args(None, &args("--wire topk --topk-decay 1.01")).is_err()
+        );
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Compressed wire codecs: the byte formats behind the typed round
 //! exchange ([`super::wire::WirePayload`]).
 //!
-//! Two compressed formats live here. signSGD-style methods (majority
+//! Three compressed formats live here. signSGD-style methods (majority
 //! vote, MV-sto-signSGD) only move the *sign* of each coordinate, which
 //! packs to 1 bit instead of an f32's 32 — the 32× communication
 //! reduction that motivates them (Bernstein et al. 2018);
@@ -12,9 +12,14 @@
 //! ([`quantize_diff_slice`] run once per [`crate::runtime::ParamLayout`]
 //! segment) spends 4 extra bytes per segment to give every parameter
 //! block its own scale, cutting the rounding error wherever blocks
-//! have very different difference magnitudes. [`sign_allreduce_bytes`],
-//! [`q8_bytes`], and [`q8pt_bytes`] are the byte models the simulated
-//! clock bills through [`crate::comm::SimClock::charge_exchange`].
+//! have very different difference magnitudes. The sparse top-k format
+//! ([`topk_select_segment`], DeMo-style: Peng et al. 2024) transmits
+//! only the [`topk_budget`] largest-magnitude components per layout
+//! segment as (u32 index, f32 value) pairs; the untransmitted mass
+//! stays in a decaying worker-side residual buffer owned by the
+//! payload. [`sign_allreduce_bytes`], [`q8_bytes`], [`q8pt_bytes`],
+//! and [`topk_bytes`] are the byte models the simulated clock bills
+//! through [`crate::comm::SimClock::charge_exchange`].
 //!
 //! # Wire format
 //!
@@ -94,6 +99,71 @@ pub fn q8_bytes(n_params: usize) -> u64 {
 /// the per-message one.
 pub fn q8pt_bytes(n_params: usize, n_segments: usize) -> u64 {
     n_params as u64 + HEADER_BYTES + 4 * n_segments as u64
+}
+
+/// Total bytes one sparse top-k message of `k_total` kept components
+/// puts on the wire: a u32 index + f32 value pair per component plus
+/// the u64 length header. `k_total` is the sum of [`topk_budget`] over
+/// the layout's segments, so the count — and therefore the bill — is a
+/// pure function of (layout, keep fraction), never of packed contents.
+pub fn topk_bytes(k_total: usize) -> u64 {
+    8 * k_total as u64 + HEADER_BYTES
+}
+
+/// Per-segment keep budget of the top-k wire: `frac_ppm` parts per
+/// million of the segment's coordinates, rounded down but never below
+/// one component for a non-empty segment (every parameter block stays
+/// represented on the wire; an empty segment keeps zero). Content-free
+/// by construction — the clock can bill a round before any rank packs.
+pub fn topk_budget(numel: usize, frac_ppm: u32) -> usize {
+    if numel == 0 {
+        return 0;
+    }
+    let k = (numel as u64 * frac_ppm as u64) / 1_000_000;
+    (k.max(1) as usize).min(numel)
+}
+
+/// Top-k selection + residual hand-off for one layout segment of the
+/// sparse wire: pick the `k` largest-|residual| coordinates (ties
+/// broken toward the lower index — a total order, so the kept set is
+/// deterministic), write their **global** indices (`base + local`) and
+/// values sorted by index (canonical payload bytes), and zero the
+/// transmitted entries — the kept mass leaves the buffer, the
+/// untransmitted mass stays behind for the caller's decay. NaN
+/// magnitudes rank largest under `total_cmp`, so a poisoned residual
+/// transmits its NaN instead of hiding it from the divergence check.
+pub fn topk_select_segment(
+    residual: &mut [f32],
+    base: usize,
+    idx_out: &mut [u32],
+    val_out: &mut [f32],
+    scratch: &mut Vec<u32>,
+) {
+    let k = idx_out.len();
+    assert_eq!(k, val_out.len(), "top-k outputs disagree: {k} indices, {} values", val_out.len());
+    assert!(
+        k <= residual.len(),
+        "top-k keeps {k} of a segment holding {} coordinates",
+        residual.len()
+    );
+    if k == 0 {
+        return;
+    }
+    scratch.clear();
+    scratch.extend(0..residual.len() as u32);
+    let by_magnitude = |&a: &u32, &b: &u32| {
+        let (ra, rb) = (residual[a as usize].abs(), residual[b as usize].abs());
+        rb.total_cmp(&ra).then(a.cmp(&b))
+    };
+    if k < scratch.len() {
+        scratch.select_nth_unstable_by(k - 1, by_magnitude);
+    }
+    scratch[..k].sort_unstable();
+    for ((&local, i), v) in scratch[..k].iter().zip(idx_out.iter_mut()).zip(val_out.iter_mut()) {
+        *i = (base + local as usize) as u32;
+        *v = residual[local as usize];
+        residual[local as usize] = 0.0;
+    }
 }
 
 /// Quantize the local difference `start - end` to symmetric i8 with a
@@ -334,6 +404,77 @@ mod tests {
         assert_eq!(q8pt_bytes(p, 1), q8_bytes(p));
         // each extra segment costs exactly one f32 scale
         assert_eq!(q8pt_bytes(p, 12), q8_bytes(p) + 4 * 11);
+    }
+
+    #[test]
+    fn topk_budget_floors_scales_and_never_drops_a_live_segment() {
+        assert_eq!(topk_budget(0, 62_500), 0);
+        assert_eq!(topk_budget(1, 62_500), 1); // floor, not round-to-zero
+        assert_eq!(topk_budget(16, 62_500), 1); // 1/16 of 16
+        assert_eq!(topk_budget(1 << 20, 62_500), 1 << 16);
+        assert_eq!(topk_budget(5, 1_000_000), 5); // frac 1.0 keeps everything
+        assert_eq!(topk_budget(5, 2_000_000), 5); // and clamps above it
+        // the byte model pairs each kept component with a u32 index
+        assert_eq!(topk_bytes(0), HEADER_BYTES);
+        assert_eq!(topk_bytes(100), 800 + HEADER_BYTES);
+        // at the default 1/16 keep fraction each kept component costs 8
+        // bytes, so the sparse message lands near P/2 — comfortably
+        // under the q8pt message's ~P bytes on the same layout
+        let p = 1 << 20;
+        let k: usize = (0..15).map(|_| topk_budget(p / 15, 62_500)).sum();
+        assert!(
+            topk_bytes(k) * 3 < q8pt_bytes(p, 15) * 2,
+            "{} vs {}",
+            topk_bytes(k),
+            q8pt_bytes(p, 15)
+        );
+    }
+
+    #[test]
+    fn topk_select_keeps_the_largest_magnitudes_sorted_by_index() {
+        let mut residual = vec![0.1f32, -5.0, 0.0, 3.0, -0.2, 4.0];
+        let mut idx = vec![0u32; 3];
+        let mut val = vec![0.0f32; 3];
+        let mut scratch = Vec::new();
+        topk_select_segment(&mut residual, 10, &mut idx, &mut val, &mut scratch);
+        // |−5| > |4| > |3|: coordinates 1, 5, 3 — emitted index-sorted,
+        // offset by the segment base, values untouched by the selection
+        assert_eq!(idx, vec![11, 13, 15]);
+        assert_eq!(val, vec![-5.0, 3.0, 4.0]);
+        // transmitted mass left the buffer; the rest stayed behind
+        assert_eq!(residual, vec![0.1, 0.0, 0.0, 0.0, -0.2, 0.0]);
+    }
+
+    #[test]
+    fn topk_select_ties_break_toward_the_lower_index() {
+        let mut residual = vec![1.0f32, -1.0, 1.0, 1.0];
+        let mut idx = vec![0u32; 2];
+        let mut val = vec![0.0f32; 2];
+        topk_select_segment(&mut residual, 0, &mut idx, &mut val, &mut Vec::new());
+        assert_eq!(idx, vec![0, 1]);
+        assert_eq!(val, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn topk_select_transmits_nan_instead_of_hiding_it() {
+        // a poisoned residual must reach the wire so check_finite fires
+        let mut residual = vec![9.0f32, f32::NAN, -2.0];
+        let mut idx = vec![0u32; 1];
+        let mut val = vec![0.0f32; 1];
+        topk_select_segment(&mut residual, 0, &mut idx, &mut val, &mut Vec::new());
+        assert_eq!(idx, vec![1]);
+        assert!(val[0].is_nan());
+    }
+
+    #[test]
+    fn topk_select_with_k_equal_len_moves_everything() {
+        let mut residual = vec![0.5f32, -0.25];
+        let mut idx = vec![0u32; 2];
+        let mut val = vec![0.0f32; 2];
+        topk_select_segment(&mut residual, 4, &mut idx, &mut val, &mut Vec::new());
+        assert_eq!(idx, vec![4, 5]);
+        assert_eq!(val, vec![0.5, -0.25]);
+        assert_eq!(residual, vec![0.0, 0.0]);
     }
 
     #[test]

@@ -53,8 +53,10 @@
 //!
 //! [`wire`] defines the round-exchange contract: every worker→server
 //! message is a [`WirePayload`] (dense f32 parameters, packed 1-bit
-//! sign votes, 8-bit quantized differences, or layout-aware 8-bit
-//! differences with one scale per parameter segment), billed by its
+//! sign votes, 8-bit quantized differences, layout-aware 8-bit
+//! differences with one scale per parameter segment, or DeMo-style
+//! top-k sparse components of a decaying residual-momentum buffer),
+//! billed by its
 //! own [`WirePayload::wire_bytes`] so accounting and data path cannot
 //! drift. [`codec`] holds the byte formats: sign vectors pack at
 //! 1 bit/coordinate (32× vs f32), the IEEE sign bit is kept
@@ -64,7 +66,11 @@
 //! per-message scale (`q8`) or against one scale per segment of the
 //! backend's validated [`crate::runtime::ParamLayout`] (`q8pt`, 4 extra
 //! bytes per segment — the fix for parameter blocks whose diff
-//! magnitudes differ by orders of magnitude). [`Worker`] carries that
+//! magnitudes differ by orders of magnitude); the top-k format
+//! transmits the k largest-magnitude residual components per segment
+//! as (u32 index, f32 value) pairs and banks the untransmitted mass in
+//! a decaying worker-side buffer ([`codec::topk_select_segment`]).
+//! [`Worker`] carries that
 //! same layout, so per-segment slice views come straight off a rank
 //! ([`Worker::param_segments`]). [`votes`] is the *data path* over the
 //! 1-bit format: workers produce [`PackedVotes`] and the server runs

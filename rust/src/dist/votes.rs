@@ -130,17 +130,25 @@ impl PackedVotes {
 /// `counts[k]` holds bit `k` of every lane's running set-bit count, so
 /// adding a word is a 64-lane ripple-carry increment in a handful of
 /// bitwise ops instead of 64 scalar adds.
-fn add_word(counts: &mut [u64], word: u64) {
+///
+/// Returns the carry out of the top counter bit: nonzero iff some
+/// lane's count overflowed the counter width, in which lanes the
+/// counters now hold a silently wrapped count. Callers must treat a
+/// nonzero return as a sizing bug — the tally ORs the carries across
+/// ranks and asserts zero in release builds too, because a wrapped
+/// lane would flip majorities without any other symptom.
+#[must_use]
+fn add_word(counts: &mut [u64], word: u64) -> u64 {
     let mut carry = word;
     for c in counts.iter_mut() {
         if carry == 0 {
-            return;
+            return 0;
         }
         let t = *c & carry;
         *c ^= carry;
         carry = t;
     }
-    debug_assert_eq!(carry, 0, "counter width must cover the rank count");
+    carry
 }
 
 /// Per-lane `count >= t` over the bit-sliced counters: bit `b` of the
@@ -205,9 +213,14 @@ pub fn majority_vote_packed_with<V: std::borrow::Borrow<PackedVotes> + Sync>(
         let mut done = 0;
         while done < chunk.len() {
             counts.fill(0);
+            // `levels` bits hold any count in 0..=n, so a carry out is
+            // impossible with correctly sized counters — assert that in
+            // release builds too: a silent wrap here flips majorities.
+            let mut overflow = 0u64;
             for v in votes {
-                add_word(&mut counts, v.borrow().word(wi));
+                overflow |= add_word(&mut counts, v.borrow().word(wi));
             }
+            assert_eq!(overflow, 0, "counter width must cover the rank count");
             let winners = lanes_ge(&counts, threshold);
             let lanes = (chunk.len() - done).min(64);
             for (b, o) in chunk[done..done + lanes].iter_mut().enumerate() {
@@ -321,7 +334,7 @@ mod tests {
         for t in 0..=5u64 {
             let mut counts = vec![0u64; 3];
             for &w in &words {
-                add_word(&mut counts, w);
+                assert_eq!(add_word(&mut counts, w), 0, "3 bits hold counts up to 5");
             }
             let mask = lanes_ge(&counts, t);
             for lane in 0..4 {
@@ -331,6 +344,55 @@ mod tests {
                     count >= t,
                     "lane {lane}: count {count}, threshold {t}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn add_word_reports_counter_overflow_as_carry_out() {
+        // two counter bits hold counts 0..=3; the fourth increment of a
+        // lane must surface as a nonzero carry instead of wrapping the
+        // lane back to zero — the load-bearing form of what used to be
+        // a debug_assert inside add_word
+        let mut counts = vec![0u64; 2];
+        for i in 0..3 {
+            assert_eq!(add_word(&mut counts, 1), 0, "increment {i} fits in 2 bits");
+        }
+        assert_ne!(add_word(&mut counts, 1), 0, "overflow must be loud, not a wrap");
+    }
+
+    #[test]
+    fn thousand_rank_tally_is_exact_in_release_builds() {
+        // n = 1024 needs 11 counter bits and exercises lanes whose
+        // counts straddle the threshold (512) as well as the extremes;
+        // before the carry became load-bearing, an undersized counter
+        // would have flipped these majorities silently in release
+        // builds, where the old debug_assert compiled away
+        let n = 1024usize;
+        let p = 70usize;
+        let count_for = |j: usize| -> usize {
+            match j {
+                0 => 0,
+                1 => 511, // one short of the threshold: decodes -1
+                2 => 512, // exactly the threshold: decodes +1
+                3 => 513,
+                4 => n,
+                _ => (j * 389) % (n + 1),
+            }
+        };
+        let votes: Vec<PackedVotes> = (0..n)
+            .map(|w| {
+                let v: Vec<f32> =
+                    (0..p).map(|j| if w < count_for(j) { 1.0 } else { -1.0 }).collect();
+                PackedVotes::pack(&v)
+            })
+            .collect();
+        for backend in [Backend::Sequential, Backend::auto(p)] {
+            let mut out = vec![0.0f32; p];
+            majority_vote_packed_with(backend, &votes, &mut out);
+            for (j, &o) in out.iter().enumerate() {
+                let expect = if count_for(j) >= n / 2 { 1.0 } else { -1.0 };
+                assert_eq!(o, expect, "coordinate {j}: {} set bits of {n}", count_for(j));
             }
         }
     }

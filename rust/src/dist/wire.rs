@@ -3,9 +3,10 @@
 //!
 //! Every outer optimizer's worker→server exchange is a [`WirePayload`]
 //! — full-precision parameters, packed 1-bit sign votes, 8-bit
-//! quantized differences, or **layout-aware** 8-bit differences with
-//! one scale per parameter segment — and the clock bills the payload's
-//! own [`WirePayload::wire_bytes`]
+//! quantized differences, **layout-aware** 8-bit differences with one
+//! scale per parameter segment, or the sparse **top-k** of a decaying
+//! residual-momentum buffer — and the clock bills the payload's own
+//! [`WirePayload::wire_bytes`]
 //! ([`crate::comm::SimClock::charge_exchange`]). Because the billed
 //! object IS the exchanged object, the accounting and the data path
 //! cannot diverge: there is no per-optimizer flag left to choose a byte
@@ -15,18 +16,23 @@
 //!
 //! # Formats and topologies
 //!
+//! `P` = parameter count, `S` = layout segment count, `K` = total kept
+//! top-k components (Σ over segments of [`super::codec::topk_budget`]).
+//!
 //! | format | payload | bytes/message | topology (n < 16 / n ≥ 16) |
 //! |---|---|---|---|
 //! | [`WireFormat::DenseF32`] | rank's end parameters `x_{t,τ}^{(i)}` | `4P` | ring all-reduce (any n) |
 //! | [`WireFormat::PackedSigns`] | 1-bit randomized sign votes | `⌈P/8⌉ + 8` | flat gather+broadcast / hierarchical |
 //! | [`WireFormat::QuantizedI8`] | i8-quantized local difference, one scale | `P + 12` | flat gather+broadcast / hierarchical |
 //! | [`WireFormat::QuantizedI8PerTensor`] | i8-quantized difference, one scale per layout segment | `P + 8 + 4S` | flat gather+broadcast / hierarchical |
+//! | [`WireFormat::TopK`] | top-k of the decaying residual, one (u32 index, f32 value) pair per kept component | `8K + 8` | flat gather+broadcast / hierarchical |
 //!
 //! A mean over dense payloads is ring-reducible, so `DenseF32` keeps
 //! the classic α-β ring model at every fleet size. Neither a majority
 //! tally nor a per-rank-scaled i8 sum fits its own wire format
 //! mid-reduction (a partial tally has no 1-bit encoding; summing i8
-//! payloads with different scales requires dequantizing first), so the
+//! payloads with different scales requires dequantizing first, and a
+//! sparse index-union outgrows its k-budget mid-reduction), so the
 //! compressed formats bill a server topology. Which one is
 //! [`Topology::select`]'s call, shared with the clock: the flat gather
 //! of n−1 rank payloads plus a binomial-tree broadcast at small n, and
@@ -34,7 +40,8 @@
 //! groups, each group head partially aggregates
 //! ([`WirePayload::aggregate_group_heads`]: decode-mean-requantize for
 //! the i8 formats, a partial majority tally repacked as votes for
-//! signs), the heads exchange flat, and the result broadcasts back down
+//! signs, an index-union mean re-truncated to the per-segment budget
+//! for top-k), the heads exchange flat, and the result broadcasts back down
 //! — once n reaches [`crate::comm::topology::HIERARCHICAL_MIN_RANKS`].
 //! That fixes the compressed formats' large-n loss to the dense ring by
 //! construction: the flat gather's (n−1) serial messages become O(√n),
@@ -72,6 +79,26 @@
 //! the identical 4-byte scale frame) — the golden tests in
 //! `rust/tests/layout_wire.rs` pin both that identity and the error
 //! reduction on hetero-magnitude layouts.
+//!
+//! # The top-k residual contract (`topk`)
+//!
+//! The DeMo-style sparse format (PAPERS.md: Peng et al. 2024)
+//! transmits only the K = Σ_s k_s largest-magnitude components of a
+//! worker-side **residual-momentum** buffer, with k_s chosen per
+//! layout segment from the keep fraction
+//! ([`super::codec::topk_budget`]: ⌊numel_s · frac⌋, never below one
+//! component for a non-empty segment). [`WirePayload::pack_end`] first
+//! accumulates this round's local difference `start − end` into the
+//! residual, then moves the top k_s of each segment onto the wire
+//! ([`super::codec::topk_select_segment`]) and decays what stays
+//! behind by the configured rate: untransmitted mass is neither
+//! discarded (it re-competes next round) nor kept forever (the decay
+//! bounds its age). K is a pure function of (layout, keep fraction) —
+//! never of the packed contents — so the `8K + 8` byte bill is fixed
+//! at construction exactly like every other format's. The residual is
+//! *worker state*: the trainer checkpoints it
+//! ([`WirePayload::residual`]) alongside the optimizer state so a
+//! resumed run replays the same sparse selections bit for bit.
 
 use std::fmt;
 use std::sync::Arc;
@@ -105,6 +132,16 @@ pub enum WireError {
         /// Offending coordinate.
         index: usize,
     },
+    /// A sparse top-k component names a coordinate outside the
+    /// exchanged parameter vector (a corrupted index in transit — the
+    /// detectable half of index damage; an in-range flip is a valid
+    /// encoding and is survived like a flipped i8 byte).
+    SparseIndexOutOfRange {
+        /// Index of the offending payload in the round's gather.
+        worker: usize,
+        /// The out-of-range coordinate index carried on the wire.
+        index: u32,
+    },
 }
 
 impl fmt::Display for WireError {
@@ -120,6 +157,11 @@ impl fmt::Display for WireError {
                 "worker {worker}: non-finite coordinate {index} in dense payload \
                  (diverged rank or corrupted payload)"
             ),
+            WireError::SparseIndexOutOfRange { worker, index } => write!(
+                f,
+                "worker {worker}: sparse component index {index} outside the \
+                 parameter vector (corrupted payload)"
+            ),
         }
     }
 }
@@ -127,8 +169,12 @@ impl fmt::Display for WireError {
 impl std::error::Error for WireError {}
 
 /// Construction-time name of a [`WirePayload`] variant: what a config
-/// file selects (`wire = "dense" | "packed_signs" | "q8" | "q8pt"`) and
-/// what the trainer sizes its persistent per-rank buffers with.
+/// file selects (`wire = "dense" | "packed_signs" | "q8" | "q8pt" |
+/// "topk"`) and what the trainer sizes its persistent per-rank buffers
+/// with. The top-k variant carries its keep fraction and residual
+/// decay as parts-per-million integers so the format stays `Copy + Eq`
+/// (the trainer's buffer-drift check compares formats exactly, and the
+/// outer optimizers' supported-wire menus are `const` tables).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WireFormat {
     /// Full-precision f32 parameters (the classic exchange).
@@ -141,34 +187,70 @@ pub enum WireFormat {
     /// 8-bit symmetric-quantized local differences with one scale per
     /// [`ParamLayout`] segment ([`codec::quantize_diff_slice`]).
     QuantizedI8PerTensor,
+    /// Sparse top-k of a decaying worker-side residual-momentum buffer,
+    /// k per layout segment ([`codec::topk_budget`], DeMo-style — see
+    /// the module docs).
+    TopK {
+        /// Keep fraction in parts per million of each segment's
+        /// coordinates (62 500 = 1/16).
+        frac_ppm: u32,
+        /// Per-round residual decay in parts per million
+        /// (900 000 = ×0.9 after every pack).
+        decay_ppm: u32,
+    },
 }
 
 impl WireFormat {
-    /// Parse a config-file / CLI name.
+    /// Default top-k keep fraction: 1/16 of each segment's coordinates,
+    /// putting the sparse message near `P/2` bytes — under the `~P` of
+    /// [`WireFormat::QuantizedI8PerTensor`] on any layout.
+    pub const TOPK_DEFAULT_FRAC_PPM: u32 = 62_500;
+
+    /// Default residual decay: ×0.9 per round — carried mass re-competes
+    /// for a few rounds, then fades instead of accumulating staleness.
+    pub const TOPK_DEFAULT_DECAY_PPM: u32 = 900_000;
+
+    /// The `topk` format at its default keep fraction and decay — what
+    /// `wire = "topk"` parses to and what the supported-wire menus list.
+    pub const TOPK_DEFAULT: WireFormat = WireFormat::TopK {
+        frac_ppm: Self::TOPK_DEFAULT_FRAC_PPM,
+        decay_ppm: Self::TOPK_DEFAULT_DECAY_PPM,
+    };
+
+    /// Parse a config-file / CLI name. `topk` parses to the default
+    /// keep fraction and decay; config applies `topk_frac`/`topk_decay`
+    /// overrides on top.
     pub fn parse(s: &str) -> Option<WireFormat> {
         match s {
             "dense" | "f32" => Some(WireFormat::DenseF32),
             "packed_signs" | "signs" | "1bit" => Some(WireFormat::PackedSigns),
             "q8" | "i8" | "quantized_i8" => Some(WireFormat::QuantizedI8),
             "q8pt" | "q8_per_tensor" | "i8pt" => Some(WireFormat::QuantizedI8PerTensor),
+            "topk" | "top_k" | "demo" => Some(WireFormat::TOPK_DEFAULT),
             _ => None,
         }
     }
 
-    /// Stable config-facing name (inverse of [`WireFormat::parse`]).
+    /// Stable config-facing name (inverse of [`WireFormat::parse`] up
+    /// to the top-k parameters, which parse to their defaults).
     pub fn name(&self) -> &'static str {
         match self {
             WireFormat::DenseF32 => "dense",
             WireFormat::PackedSigns => "packed_signs",
             WireFormat::QuantizedI8 => "q8",
             WireFormat::QuantizedI8PerTensor => "q8pt",
+            WireFormat::TopK { .. } => "topk",
         }
     }
 
     /// Bytes one message of `len` coordinates in this format puts on
     /// the wire (what a sized [`WirePayload`] will report). `segments`
     /// is the parameter-layout segment count — it only affects the
-    /// per-tensor format (one extra f32 scale each); pass 1 for
+    /// per-tensor format (one extra f32 scale each) and the top-k
+    /// format (whose keep budget is per segment; this layout-free
+    /// helper splits `len` into near-equal segments, exact at
+    /// `segments == 1`, while a sized payload's own
+    /// [`WirePayload::wire_bytes`] uses the true layout); pass 1 for
     /// layout-less analysis.
     pub fn wire_bytes(&self, len: usize, segments: usize) -> u64 {
         match self {
@@ -176,6 +258,14 @@ impl WireFormat {
             WireFormat::PackedSigns => codec::sign_allreduce_bytes(len),
             WireFormat::QuantizedI8 => codec::q8_bytes(len),
             WireFormat::QuantizedI8PerTensor => codec::q8pt_bytes(len, segments),
+            WireFormat::TopK { frac_ppm, .. } => {
+                let s = segments.max(1);
+                let (base, rem) = (len / s, len % s);
+                let k: usize = (0..s)
+                    .map(|i| codec::topk_budget(base + usize::from(i < rem), *frac_ppm))
+                    .sum();
+                codec::topk_bytes(k)
+            }
         }
     }
 
@@ -240,6 +330,29 @@ pub enum WirePayload {
         /// One two's-complement i8 per coordinate.
         bytes: Vec<u8>,
     },
+    /// The top-k components of the rank's decaying residual-momentum
+    /// buffer, selected per layout segment (see the module docs). The
+    /// wire carries `indices` + `values`; the residual is worker state
+    /// riding in the trainer's persistent buffer (checkpointed, never
+    /// billed), and the layout/ppm parameters are part of the static
+    /// config contract both ends already hold.
+    TopK {
+        /// The validated segment layout the keep budgets follow.
+        layout: Arc<ParamLayout>,
+        /// Keep fraction in parts per million ([`WireFormat::TopK`]).
+        frac_ppm: u32,
+        /// Per-round residual decay in parts per million.
+        decay_ppm: u32,
+        /// Global coordinate index of each kept component — exactly
+        /// Σ_s [`codec::topk_budget`] entries, segment-major.
+        indices: Vec<u32>,
+        /// The transmitted residual value of each kept component.
+        values: Vec<f32>,
+        /// The untransmitted mass, one slot per coordinate: grows by
+        /// `start − end` at each pack, loses what the wire takes,
+        /// decays by `decay_ppm`.
+        residual: Vec<f32>,
+    },
 }
 
 impl WirePayload {
@@ -248,9 +361,10 @@ impl WirePayload {
     /// [`wire_bytes`](Self::wire_bytes) is already final: the byte cost
     /// is a function of (format, len, layout) only, never of the packed
     /// contents, which is what lets the clock bill a round before the
-    /// ranks pack into it. The per-tensor format gets the one-segment
-    /// fallback layout here; use [`WirePayload::with_layout`] to size
-    /// it from a real backend layout.
+    /// ranks pack into it. The per-tensor and top-k formats get the
+    /// one-segment fallback layout here; use
+    /// [`WirePayload::with_layout`] to size them from a real backend
+    /// layout.
     pub fn with_len(format: WireFormat, len: usize) -> WirePayload {
         match format {
             WireFormat::DenseF32 => WirePayload::DenseF32(vec![0.0; len]),
@@ -258,7 +372,7 @@ impl WirePayload {
             WireFormat::QuantizedI8 => {
                 WirePayload::QuantizedI8 { scale: 0.0, bytes: vec![0; len] }
             }
-            WireFormat::QuantizedI8PerTensor => {
+            WireFormat::QuantizedI8PerTensor | WireFormat::TopK { .. } => {
                 WirePayload::with_layout(format, &Arc::new(ParamLayout::single(len)))
             }
         }
@@ -267,8 +381,10 @@ impl WirePayload {
     /// A zeroed payload sized from a parameter layout — how the trainer
     /// builds its persistent buffers
     /// ([`crate::runtime::StepBackend::layout`]). Only the per-tensor
-    /// format actually stores the layout (one scale slot per segment);
-    /// every other format just takes its coordinate count.
+    /// format (one scale slot per segment) and the top-k format (one
+    /// keep budget per segment, plus the coordinate-sized residual)
+    /// actually store the layout; every other format just takes its
+    /// coordinate count.
     pub fn with_layout(format: WireFormat, layout: &Arc<ParamLayout>) -> WirePayload {
         match format {
             WireFormat::QuantizedI8PerTensor => WirePayload::QuantizedI8PerTensor {
@@ -276,6 +392,21 @@ impl WirePayload {
                 bytes: vec![0; layout.param_count()],
                 layout: Arc::clone(layout),
             },
+            WireFormat::TopK { frac_ppm, decay_ppm } => {
+                let k_total: usize = layout
+                    .entries()
+                    .iter()
+                    .map(|e| codec::topk_budget(e.numel(), frac_ppm))
+                    .sum();
+                WirePayload::TopK {
+                    layout: Arc::clone(layout),
+                    frac_ppm,
+                    decay_ppm,
+                    indices: vec![0; k_total],
+                    values: vec![0.0; k_total],
+                    residual: vec![0.0; layout.param_count()],
+                }
+            }
             other => WirePayload::with_len(other, layout.param_count()),
         }
     }
@@ -286,16 +417,22 @@ impl WirePayload {
             WirePayload::PackedSigns(_) => WireFormat::PackedSigns,
             WirePayload::QuantizedI8 { .. } => WireFormat::QuantizedI8,
             WirePayload::QuantizedI8PerTensor { .. } => WireFormat::QuantizedI8PerTensor,
+            WirePayload::TopK { frac_ppm, decay_ppm, .. } => {
+                WireFormat::TopK { frac_ppm: *frac_ppm, decay_ppm: *decay_ppm }
+            }
         }
     }
 
-    /// Number of coordinates this payload carries.
+    /// Number of coordinates this payload carries (for the sparse
+    /// top-k format: the coordinates of the parameter vector it tiles,
+    /// not the kept-component count).
     pub fn len(&self) -> usize {
         match self {
             WirePayload::DenseF32(v) => v.len(),
             WirePayload::PackedSigns(p) => p.len(),
             WirePayload::QuantizedI8 { bytes, .. } => bytes.len(),
             WirePayload::QuantizedI8PerTensor { bytes, .. } => bytes.len(),
+            WirePayload::TopK { residual, .. } => residual.len(),
         }
     }
 
@@ -315,6 +452,7 @@ impl WirePayload {
             WirePayload::QuantizedI8PerTensor { scales, bytes, .. } => {
                 codec::q8pt_bytes(bytes.len(), scales.len())
             }
+            WirePayload::TopK { indices, .. } => codec::topk_bytes(indices.len()),
         }
     }
 
@@ -339,10 +477,12 @@ impl WirePayload {
         }
     }
 
-    /// The parameter layout a per-tensor payload was sized with.
+    /// The parameter layout a per-tensor or top-k payload was sized
+    /// with.
     pub fn layout(&self) -> Option<&Arc<ParamLayout>> {
         match self {
             WirePayload::QuantizedI8PerTensor { layout, .. } => Some(layout),
+            WirePayload::TopK { layout, .. } => Some(layout),
             _ => None,
         }
     }
@@ -357,24 +497,49 @@ impl WirePayload {
         }
     }
 
+    /// The worker-side residual-momentum buffer of a top-k payload:
+    /// the untransmitted mass [`WirePayload::pack_end`] accumulates
+    /// and decays. Worker state, not wire data — the trainer
+    /// checkpoints it through this accessor so a resumed run replays
+    /// the same sparse selections bit for bit.
+    pub fn residual(&self) -> Option<&[f32]> {
+        match self {
+            WirePayload::TopK { residual, .. } => Some(residual),
+            _ => None,
+        }
+    }
+
+    /// Mutable view of the top-k residual buffer
+    /// ([`WirePayload::residual`]) — the checkpoint-restore path.
+    pub fn residual_mut(&mut self) -> Option<&mut [f32]> {
+        match self {
+            WirePayload::TopK { residual, .. } => Some(residual),
+            _ => None,
+        }
+    }
+
     /// Worker-side packing shared by every dense-exchange outer
     /// optimizer: fill this payload with rank's end-of-round state in
     /// the payload's own format — the parameters themselves for
     /// `DenseF32`, the quantized difference `start - end` for the
     /// quantized formats (one scale per message for `QuantizedI8`, one
-    /// per layout segment for `QuantizedI8PerTensor`). Buffer capacity
-    /// is reused; no allocation in steady state.
+    /// per layout segment for `QuantizedI8PerTensor`), and for `TopK`
+    /// the per-segment top-k of the residual buffer after adding
+    /// `start - end` into it (what stays behind then decays — the
+    /// module docs spell out the contract). Buffer capacity is reused;
+    /// no allocation in steady state beyond the top-k selection's small
+    /// per-call index scratch.
     ///
     /// # Panics
     ///
     /// On a `PackedSigns` buffer: a dense parameter exchange has no
     /// 1-bit encoding (config validation keeps this combination from
     /// ever being built — [`crate::config::RunConfig::validate`]). On a
-    /// per-tensor buffer whose layout does not tile `start.len()`, or a
-    /// dense buffer whose length differs from `end.len()` — the
-    /// persistent buffer's size is the byte count the round was billed
-    /// with, so silently resizing it here would defeat the trainer's
-    /// pack-time drift check.
+    /// per-tensor or top-k buffer whose layout does not tile
+    /// `start.len()`, or a dense buffer whose length differs from
+    /// `end.len()` — the persistent buffer's size is the byte count the
+    /// round was billed with, so silently resizing it here would defeat
+    /// the trainer's pack-time drift check.
     pub fn pack_end(&mut self, start: &[f32], end: &[f32]) {
         match self {
             WirePayload::DenseF32(buf) => {
@@ -405,6 +570,44 @@ impl WirePayload {
                         &end[r.clone()],
                         &mut bytes[r],
                     );
+                }
+            }
+            WirePayload::TopK { layout, frac_ppm, decay_ppm, indices, values, residual } => {
+                assert_eq!(
+                    start.len(),
+                    layout.param_count(),
+                    "pack_end: {} coordinates vs a layout tiling {}",
+                    start.len(),
+                    layout.param_count()
+                );
+                assert_eq!(
+                    start.len(),
+                    end.len(),
+                    "pack_end: start has {} coordinates, end {}",
+                    start.len(),
+                    end.len()
+                );
+                for ((r, &s), &e) in residual.iter_mut().zip(start).zip(end) {
+                    *r += s - e;
+                }
+                let mut scratch = Vec::new();
+                let mut off = 0usize;
+                for ent in layout.entries() {
+                    let k = codec::topk_budget(ent.numel(), *frac_ppm);
+                    let seg = ent.offset..ent.offset + ent.numel();
+                    codec::topk_select_segment(
+                        &mut residual[seg],
+                        ent.offset,
+                        &mut indices[off..off + k],
+                        &mut values[off..off + k],
+                        &mut scratch,
+                    );
+                    off += k;
+                }
+                debug_assert_eq!(off, indices.len(), "segment budgets must tile the payload");
+                let decay = *decay_ppm as f32 / 1e6;
+                for r in residual.iter_mut() {
+                    *r *= decay;
                 }
             }
             WirePayload::PackedSigns(_) => {
@@ -446,6 +649,12 @@ impl WirePayload {
     ///   major in layout (= coordinate) order, so with a one-segment
     ///   layout the accumulation order — and hence the result — is
     ///   bitwise-identical to `QuantizedI8`.
+    /// * `TopK` — `start - mean_i(scatter(payload_i))`: each rank's
+    ///   sparse components accumulate into a dense f64 vector by index
+    ///   in rank order (untransmitted coordinates contribute zero — the
+    ///   mass they are missing is still in the ranks' residual buffers
+    ///   and re-competes next round), divided by `n_effective` like the
+    ///   other dense-exchange formats.
     ///
     /// The divisor is `payloads.len()` — the round's `n_effective` —
     /// so the mean is well defined for any non-empty survivor set under
@@ -455,12 +664,15 @@ impl WirePayload {
     ///
     /// [`WireError::NonFiniteScale`] if any quantized payload carries a
     /// non-finite scale (NaN poison from a diverged rank, or corruption
-    /// in transit): bad data must never be silently averaged in. The
-    /// check runs before any accumulation — `out` is untouched on
-    /// error. Dense payloads carry no scale; a non-finite dense
-    /// coordinate propagates into the mean, where the trainer's
-    /// finiteness check catches it (reject dense payloads up front with
-    /// [`WirePayload::check_finite`] when faults are in play).
+    /// in transit): bad data must never be silently averaged in.
+    /// [`WireError::NonFiniteCoord`] / [`WireError::SparseIndexOutOfRange`]
+    /// if a top-k payload carries a non-finite value or an index
+    /// outside the parameter vector. Every check runs before any
+    /// accumulation — `out` is untouched on error. Dense payloads carry
+    /// no scale; a non-finite dense coordinate propagates into the
+    /// mean, where the trainer's finiteness check catches it (reject
+    /// dense payloads up front with [`WirePayload::check_finite`] when
+    /// faults are in play).
     ///
     /// # Panics
     ///
@@ -550,6 +762,41 @@ impl WirePayload {
                     }
                 }
             }
+            WirePayload::TopK { .. } => {
+                assert_eq!(start.len(), out.len(), "start length {} != output", start.len());
+                let WirePayload::TopK { layout, .. } = &payloads[0] else {
+                    unreachable!("format checked above")
+                };
+                assert_eq!(
+                    layout.param_count(),
+                    out.len(),
+                    "payload layout tiles {} of {} coordinates",
+                    layout.param_count(),
+                    out.len()
+                );
+                for (i, p) in payloads.iter().enumerate() {
+                    assert_eq!(p.layout(), Some(layout), "worker {i}: mixed parameter layouts");
+                }
+                // sparse components are fully validated before any
+                // accumulation: a NaN value or out-of-range index must
+                // never touch `out`
+                for (i, p) in payloads.iter().enumerate() {
+                    p.check_finite(i)?;
+                }
+                let inv_n = 1.0f64 / payloads.len() as f64;
+                let mut acc = vec![0.0f64; out.len()];
+                for p in payloads {
+                    let WirePayload::TopK { indices, values, .. } = p else {
+                        unreachable!("format checked above")
+                    };
+                    for (&ix, &v) in indices.iter().zip(values) {
+                        acc[ix as usize] += v as f64;
+                    }
+                }
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = start[i] - (acc[i] * inv_n) as f32;
+                }
+            }
             WirePayload::PackedSigns(_) => {
                 panic!("packed sign votes have no mean end point; run the majority tally")
             }
@@ -557,13 +804,15 @@ impl WirePayload {
         Ok(())
     }
 
-    /// Validate that this payload carries no non-finite data: scales
-    /// for the quantized formats (O(S)), every coordinate for dense
-    /// (O(P) — only worth paying when faults are in play), and nothing
-    /// for packed signs (every bit pattern is a valid vote). `worker`
-    /// is the payload's index in the round's gather, reported in the
-    /// error. This is the pack-time half of the corruption contract;
-    /// [`WirePayload::mean_end_into`] re-checks scales at decode time.
+    /// Validate that this payload carries no detectably damaged data:
+    /// scales for the quantized formats (O(S)), every coordinate for
+    /// dense (O(P) — only worth paying when faults are in play), values
+    /// **and index ranges** for the sparse top-k format (O(K)), and
+    /// nothing for packed signs (every bit pattern is a valid vote).
+    /// `worker` is the payload's index in the round's gather, reported
+    /// in the error. This is the pack-time half of the corruption
+    /// contract; [`WirePayload::mean_end_into`] re-checks at decode
+    /// time.
     pub fn check_finite(&self, worker: usize) -> Result<(), WireError> {
         match self {
             WirePayload::DenseF32(v) => {
@@ -582,48 +831,101 @@ impl WirePayload {
                     return Err(WireError::NonFiniteScale { worker, segment });
                 }
             }
+            WirePayload::TopK { indices, values, residual, .. } => {
+                let n = residual.len();
+                if let Some(&index) = indices.iter().find(|&&ix| ix as usize >= n) {
+                    return Err(WireError::SparseIndexOutOfRange { worker, index });
+                }
+                if let Some(pos) = values.iter().position(|v| !v.is_finite()) {
+                    return Err(WireError::NonFiniteCoord {
+                        worker,
+                        index: indices[pos] as usize,
+                    });
+                }
+            }
         }
         Ok(())
     }
 
     /// Inject one transit corruption into this payload, fault-plan
-    /// style: a NaN-poisoned scale or coordinate (detectable — fails
-    /// [`WirePayload::check_finite`]) or a flipped quantized byte /
-    /// sign bit (undetectable by construction — every bit pattern is a
-    /// valid encoding — and survived with bounded error). Formats with
-    /// both failure modes pick one with a fair draw.
-    pub fn corrupt(&mut self, rng: &mut Rng) {
+    /// style: a NaN-poisoned scale, coordinate, or sparse value
+    /// (detectable — fails [`WirePayload::check_finite`]) or a flipped
+    /// quantized byte / sign bit / sparse index bit (a valid encoding
+    /// wherever it lands in range, survived with bounded error; a
+    /// flipped index that leaves the parameter vector is detected).
+    /// Formats with both failure modes pick one with a fair draw.
+    ///
+    /// Returns whether damage actually landed: the fault accounting
+    /// must count injections that happened, not attempts — a payload
+    /// with nothing to damage (zero coordinates, or a per-tensor
+    /// payload with no scale slots on the poison branch) reports
+    /// `false` and stays untouched. The RNG draw sequence is fixed per
+    /// format — every arm makes the same draws whatever the payload
+    /// shape or branch taken — so fault-stream positions (and with
+    /// them resumed trajectories) cannot depend on payload contents.
+    #[must_use = "count only injections that landed"]
+    pub fn corrupt(&mut self, rng: &mut Rng) -> bool {
         match self {
             WirePayload::DenseF32(v) => {
-                if !v.is_empty() {
-                    let i = rng.below(v.len() as u64) as usize;
-                    v[i] = f32::NAN;
+                let i = rng.below(v.len().max(1) as u64) as usize;
+                if v.is_empty() {
+                    return false;
                 }
+                v[i] = f32::NAN;
+                true
             }
             WirePayload::PackedSigns(p) => {
-                if !p.is_empty() {
-                    let coord = rng.below(p.len() as u64) as usize;
-                    p.flip_bit(coord);
+                let coord = rng.below(p.len().max(1) as u64) as usize;
+                if p.is_empty() {
+                    return false;
                 }
+                p.flip_bit(coord);
+                true
             }
             WirePayload::QuantizedI8 { scale, bytes } => {
-                if bytes.is_empty() || rng.bernoulli(0.5) {
+                let poison = rng.bernoulli(0.5);
+                let i = rng.below(bytes.len().max(1) as u64) as usize;
+                let bit = rng.below(8);
+                if poison || bytes.is_empty() {
                     *scale = f32::NAN;
                 } else {
-                    let i = rng.below(bytes.len() as u64) as usize;
-                    bytes[i] ^= 1 << rng.below(8);
+                    bytes[i] ^= 1 << bit;
                 }
+                true
             }
             WirePayload::QuantizedI8PerTensor { scales, bytes, .. } => {
-                if bytes.is_empty() || rng.bernoulli(0.5) {
-                    let si = rng.below(scales.len().max(1) as u64) as usize;
-                    if let Some(s) = scales.get_mut(si) {
-                        *s = f32::NAN;
+                let poison = rng.bernoulli(0.5);
+                let si = rng.below(scales.len().max(1) as u64) as usize;
+                let i = rng.below(bytes.len().max(1) as u64) as usize;
+                let bit = rng.below(8);
+                if poison || bytes.is_empty() {
+                    // the poison needs a scale slot to land in; with
+                    // none this is honestly a no-op, not an injection
+                    match scales.get_mut(si) {
+                        Some(s) => {
+                            *s = f32::NAN;
+                            true
+                        }
+                        None => false,
                     }
                 } else {
-                    let i = rng.below(bytes.len() as u64) as usize;
-                    bytes[i] ^= 1 << rng.below(8);
+                    bytes[i] ^= 1 << bit;
+                    true
                 }
+            }
+            WirePayload::TopK { indices, values, .. } => {
+                let poison = rng.bernoulli(0.5);
+                let i = rng.below(values.len().max(1) as u64) as usize;
+                let bit = rng.below(32);
+                if values.is_empty() {
+                    return false;
+                }
+                if poison {
+                    values[i] = f32::NAN;
+                } else {
+                    indices[i] ^= 1 << bit;
+                }
+                true
             }
         }
     }
@@ -651,6 +953,15 @@ impl WirePayload {
     /// * `PackedSigns` — partial majority tally over the group
     ///   ([`votes::majority_vote_packed`]), repacked as a ±1 vote
     ///   payload (wire-tie semantics: group ties decode +1).
+    /// * `TopK` — index-union mean in member order, re-truncated to
+    ///   each segment's k-budget by |value| (ties broken by index), so
+    ///   the head transmits exactly the bytes one member would. A
+    ///   segment whose union come up short of its budget pads with
+    ///   zero-valued components at the segment base — the component
+    ///   count, and with it `wire_bytes()`, is a function of the layout
+    ///   alone. Mass the re-truncation drops is lost for the round
+    ///   (the head has no residual buffer of its own); that is the
+    ///   hierarchy's bounded approximation for sparse payloads.
     ///
     /// # Panics
     ///
@@ -741,6 +1052,52 @@ impl WirePayload {
                 votes::majority_vote_packed(&members, &mut tally);
                 WirePayload::PackedSigns(PackedVotes::pack(&tally))
             }
+            WirePayload::TopK { layout, frac_ppm, decay_ppm, .. } => {
+                let layout = Arc::clone(layout);
+                let (frac_ppm, decay_ppm) = (*frac_ppm, *decay_ppm);
+                for (i, p) in chunk.iter().enumerate() {
+                    assert_eq!(
+                        p.layout(),
+                        Some(&layout),
+                        "worker {i}: mixed parameter layouts"
+                    );
+                }
+                // Index-union accumulate in member order: f64 keeps the
+                // mean deterministic and exact enough that re-truncation
+                // order can't flip on rounding noise.
+                let mut acc = std::collections::BTreeMap::<u32, f64>::new();
+                for p in chunk {
+                    let WirePayload::TopK { indices, values, .. } = p else {
+                        unreachable!("format checked by the caller")
+                    };
+                    for (&ix, &v) in indices.iter().zip(values) {
+                        *acc.entry(ix).or_insert(0.0) += v as f64;
+                    }
+                }
+                let format = WireFormat::TopK { frac_ppm, decay_ppm };
+                let mut head = WirePayload::with_layout(format, &layout);
+                let WirePayload::TopK { indices, values, .. } = &mut head else {
+                    unreachable!("with_layout builds the requested format")
+                };
+                let mut off = 0usize;
+                for ent in layout.entries() {
+                    let k = codec::topk_budget(ent.numel(), frac_ppm);
+                    let (lo, hi) = (ent.offset as u32, (ent.offset + ent.numel()) as u32);
+                    let mut seg: Vec<(u32, f64)> =
+                        acc.range(lo..hi).map(|(&ix, &a)| (ix, a * inv)).collect();
+                    seg.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()).then(a.0.cmp(&b.0)));
+                    seg.truncate(k);
+                    seg.sort_unstable_by_key(|&(ix, _)| ix);
+                    for j in 0..k {
+                        let (ix, v) = seg.get(j).copied().unwrap_or((lo, 0.0));
+                        indices[off + j] = ix;
+                        values[off + j] = v as f32;
+                    }
+                    off += k;
+                }
+                debug_assert_eq!(off, indices.len(), "segment budgets must tile the payload");
+                head
+            }
             WirePayload::DenseF32(_) => unreachable!("rejected by the caller"),
         }
     }
@@ -750,12 +1107,17 @@ impl WirePayload {
 mod tests {
     use super::*;
 
-    const ALL_FORMATS: [WireFormat; 4] = [
+    const ALL_FORMATS: [WireFormat; 5] = [
         WireFormat::DenseF32,
         WireFormat::PackedSigns,
         WireFormat::QuantizedI8,
         WireFormat::QuantizedI8PerTensor,
+        WireFormat::TOPK_DEFAULT,
     ];
+
+    /// A top-k format whose budgets stay hand-checkable: keep 1 of
+    /// every 4-wide segment, halve the residual each round.
+    const TOPK_TEST: WireFormat = WireFormat::TopK { frac_ppm: 250_000, decay_ppm: 500_000 };
 
     fn two_segment_layout(a: usize, b: usize) -> Arc<ParamLayout> {
         use crate::runtime::ParamEntry;
@@ -801,6 +1163,10 @@ mod tests {
         assert_eq!(WireFormat::PackedSigns.wire_bytes(p, 1), codec::sign_allreduce_bytes(p));
         assert_eq!(WireFormat::QuantizedI8.wire_bytes(p, 1), codec::q8_bytes(p));
         assert_eq!(WireFormat::QuantizedI8PerTensor.wire_bytes(p, 7), codec::q8pt_bytes(p, 7));
+        let k = codec::topk_budget(p, WireFormat::TOPK_DEFAULT_FRAC_PPM);
+        assert_eq!(WireFormat::TOPK_DEFAULT.wire_bytes(p, 1), codec::topk_bytes(k));
+        // the default keep fraction undercuts q8pt's ~P bytes by ~2x
+        assert!(WireFormat::TOPK_DEFAULT.wire_bytes(p, 7) * 3 < codec::q8pt_bytes(p, 7) * 2);
     }
 
     #[test]
@@ -811,6 +1177,7 @@ mod tests {
         assert_eq!(WireFormat::parse("q8"), Some(WireFormat::QuantizedI8));
         assert_eq!(WireFormat::parse("q8pt"), Some(WireFormat::QuantizedI8PerTensor));
         assert_eq!(WireFormat::parse("1bit"), Some(WireFormat::PackedSigns));
+        assert_eq!(WireFormat::parse("demo"), Some(WireFormat::TOPK_DEFAULT));
         assert_eq!(WireFormat::parse("warpdrive"), None);
     }
 
@@ -820,6 +1187,7 @@ mod tests {
         assert!(!WireFormat::PackedSigns.ring_reducible());
         assert!(!WireFormat::QuantizedI8.ring_reducible());
         assert!(!WireFormat::QuantizedI8PerTensor.ring_reducible());
+        assert!(!WireFormat::TOPK_DEFAULT.ring_reducible());
     }
 
     #[test]
@@ -857,6 +1225,7 @@ mod tests {
             WireFormat::PackedSigns,
             WireFormat::QuantizedI8,
             WireFormat::QuantizedI8PerTensor,
+            WireFormat::TOPK_DEFAULT,
         ] {
             let topo = Topology::select(format.ring_reducible(), n);
             assert!(
@@ -954,6 +1323,85 @@ mod tests {
             WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut avg).unwrap();
             assert_eq!(avg, start, "{}", format.name());
         }
+    }
+
+    #[test]
+    fn topk_pack_transmits_the_largest_residual_and_decays_the_rest() {
+        // keep 1 of each 4-wide segment, halve what stays behind
+        let layout = two_segment_layout(4, 4);
+        let start = vec![0.0f32; 8];
+        #[rustfmt::skip]
+        let end = vec![
+            -1.0f32, 0.5, -0.25, 0.5, // lo: biggest diff at coord 0
+            -4.0, 3.0, -2.0, 1.0,     // hi: biggest diff at coord 4
+        ];
+        let mut p = WirePayload::with_layout(TOPK_TEST, &layout);
+        p.pack_end(&start, &end);
+        let WirePayload::TopK { indices, values, residual, .. } = &p else { unreachable!() };
+        assert_eq!(indices, &[0, 4]);
+        assert_eq!(values, &[1.0, 4.0]);
+        // transmitted mass removed, the rest halved by the decay
+        assert_eq!(residual, &[0.0, -0.25, 0.125, -0.25, 0.0, -1.5, 1.0, -0.5]);
+        // the mean over one worker reconstructs exactly the kept coords
+        let mut out = vec![9.0f32; 8];
+        WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut out).unwrap();
+        assert_eq!(out, vec![-1.0, 0.0, 0.0, 0.0, -4.0, 0.0, 0.0, 0.0]);
+        // a zero-difference second round transmits leftover momentum:
+        // the residual re-competes (ties in |value| break low-index)
+        p.pack_end(&start, &start);
+        let WirePayload::TopK { indices, values, residual, .. } = &p else { unreachable!() };
+        assert_eq!(indices, &[1, 5]);
+        assert_eq!(values, &[-0.25, -1.5]);
+        assert_eq!(residual, &[0.0, 0.0, 0.0625, -0.125, 0.0, 0.0, 0.5, -0.25]);
+    }
+
+    #[test]
+    fn topk_with_full_budget_reconstructs_the_mean_exactly() {
+        // frac = 1.0 keeps every coordinate: the sparse path degrades
+        // to a dense exchange and the f64 mean is exact on dyadics
+        let full = WireFormat::TopK { frac_ppm: 1_000_000, decay_ppm: 0 };
+        let start = vec![1.0f32, 2.0, -3.0, 0.5];
+        let ends = [vec![0.5f32, 2.25, -4.0, 2.5], vec![1.5f32, 1.25, -1.0, 0.25]];
+        let payloads: Vec<WirePayload> = ends
+            .iter()
+            .map(|e| {
+                let mut p = WirePayload::with_len(full, 4);
+                p.pack_end(&start, e);
+                p
+            })
+            .collect();
+        assert_eq!(payloads[0].wire_bytes(), codec::topk_bytes(4));
+        let mut avg = vec![0.0f32; 4];
+        WirePayload::mean_end_into(&payloads, &start, &mut avg).unwrap();
+        assert_eq!(avg, vec![1.0, 1.75, -2.5, 1.375]);
+    }
+
+    #[test]
+    fn topk_check_finite_flags_nan_values_and_stray_indices() {
+        let layout = two_segment_layout(4, 4);
+        let mut p = WirePayload::with_layout(TOPK_TEST, &layout);
+        p.pack_end(&[0.0; 8], &[1.0, 0.0, 0.0, 0.0, 0.0, -2.0, 0.0, 0.0]);
+        assert_eq!(p.check_finite(0), Ok(()));
+        let clean = p.clone();
+        {
+            let WirePayload::TopK { values, .. } = &mut p else { unreachable!() };
+            values[1] = f32::NAN;
+        }
+        assert_eq!(p.check_finite(2), Err(WireError::NonFiniteCoord { worker: 2, index: 5 }));
+        let mut p = clean.clone();
+        {
+            let WirePayload::TopK { indices, .. } = &mut p else { unreachable!() };
+            indices[0] = 64; // past the 8-coordinate vector
+        }
+        assert_eq!(
+            p.check_finite(4),
+            Err(WireError::SparseIndexOutOfRange { worker: 4, index: 64 })
+        );
+        // decode refuses the damaged payload and leaves `out` untouched
+        let mut out = vec![7.0f32; 8];
+        let got = WirePayload::mean_end_into(&[clean, p], &[0.0; 8], &mut out);
+        assert!(matches!(got, Err(WireError::SparseIndexOutOfRange { worker: 1, index: 64 })));
+        assert_eq!(out, vec![7.0f32; 8]);
     }
 
     #[test]
@@ -1103,7 +1551,11 @@ mod tests {
                     p.pack_end(&[0.5; 33], &[0.25; 33]);
                 }
                 let clean = p.clone();
-                p.corrupt(&mut rng);
+                assert!(
+                    p.corrupt(&mut rng),
+                    "{} trial {trial}: a populated payload always takes damage",
+                    format.name()
+                );
                 assert_ne!(p, clean, "{} trial {trial}: corruption must show", format.name());
                 // wire size is untouched — corruption is in-place damage
                 assert_eq!(p.wire_bytes(), clean.wire_bytes());
@@ -1117,6 +1569,66 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn corrupt_reports_exactly_whether_damage_landed() {
+        // regression: the q8pt poison branch used to no-op silently on
+        // an empty scale vector while FaultStats still counted an
+        // injection. The return value is now the single source of
+        // truth: true iff the payload actually changed.
+        let mut rng = Rng::new(31);
+        for format in ALL_FORMATS {
+            for trial in 0..20 {
+                let mut p = WirePayload::with_len(format, 19);
+                let clean = p.clone();
+                let landed = p.corrupt(&mut rng);
+                assert!(landed, "{} trial {trial}", format.name());
+                assert_ne!(p, clean, "{} trial {trial}", format.name());
+                // empty payloads: the report and the diff must agree,
+                // whichever way the format resolves it (q8 can still
+                // poison its scalar scale; dense has nothing to hit)
+                let mut e = WirePayload::with_len(format, 0);
+                let e_clean = e.clone();
+                let e_landed = e.corrupt(&mut rng);
+                assert_eq!(e_landed, e != e_clean, "{} trial {trial} empty", format.name());
+            }
+        }
+        // the exact degenerate shape from the bug report: a per-tensor
+        // payload whose poison branch has no scale slot to land in
+        let mut hollow = WirePayload::QuantizedI8PerTensor {
+            layout: Arc::new(ParamLayout::single(0)),
+            scales: vec![],
+            bytes: vec![],
+        };
+        let hollow_clean = hollow.clone();
+        for _ in 0..8 {
+            assert!(!hollow.corrupt(&mut rng), "no scale slot, no injection");
+        }
+        assert_eq!(hollow, hollow_clean);
+    }
+
+    #[test]
+    fn corrupt_draw_count_is_shape_independent_per_format() {
+        // the fault stream must advance the same number of RNG draws
+        // whatever the payload's shape or which branch lands — else a
+        // resumed run's later faults shift position with model size
+        for format in ALL_FORMATS {
+            let mut small_rng = Rng::new(404);
+            let mut large_rng = Rng::new(404);
+            let mut small = WirePayload::with_len(format, 7);
+            let mut large = WirePayload::with_len(format, 4096);
+            for _ in 0..12 {
+                let _ = small.corrupt(&mut small_rng);
+                let _ = large.corrupt(&mut large_rng);
+            }
+            assert_eq!(
+                small_rng.below(u64::MAX),
+                large_rng.below(u64::MAX),
+                "{}: draw counts diverged",
+                format.name()
+            );
         }
     }
 
@@ -1169,6 +1681,89 @@ mod tests {
     }
 
     #[test]
+    fn topk_group_heads_union_mean_and_retruncate_to_budget() {
+        // two members of one group disagree on which lo-coordinate
+        // matters; the head means the index union and keeps the larger
+        let layout = two_segment_layout(4, 4);
+        let ends = [
+            vec![-1.0f32, 0.0, 0.0, 0.0, -2.0, 0.0, 0.0, 0.0], // lo idx0, hi idx4
+            vec![0.0f32, 3.0, 0.0, 0.0, -2.0, 0.0, 0.0, 0.0],  // lo idx1, hi idx4
+        ];
+        let payloads: Vec<WirePayload> = ends
+            .iter()
+            .map(|e| {
+                let mut p = WirePayload::with_layout(TOPK_TEST, &layout);
+                p.pack_end(&[0.0; 8], e);
+                p
+            })
+            .collect();
+        let heads = WirePayload::aggregate_group_heads(&payloads, 1);
+        assert_eq!(heads.len(), 2);
+        assert_eq!(heads[0], heads[1]);
+        // billing contract: the head costs exactly what a member does
+        assert_eq!(heads[0].wire_bytes(), payloads[0].wire_bytes());
+        let WirePayload::TopK { indices, values, .. } = &heads[0] else { unreachable!() };
+        // lo union {0: 1.0, 1: -3.0} means to {0: 0.5, 1: -1.5}; the
+        // k=1 re-truncation keeps idx 1. hi agrees: mean 2.0 at idx 4.
+        assert_eq!(indices, &[1, 4]);
+        assert_eq!(values, &[-1.5, 2.0]);
+    }
+
+    #[test]
+    fn topk_group_heads_pad_short_segments_to_the_budget() {
+        // a well-formed member transmits k distinct indices per
+        // segment, but a survived in-range index flip (corrupt()) can
+        // collide two slots — then the union comes up short of the
+        // budget and the head pads with zero-valued components so the
+        // component count, and with it wire_bytes, stays layout-pure
+        let fmt = WireFormat::TopK { frac_ppm: 500_000, decay_ppm: 500_000 };
+        let layout = two_segment_layout(4, 4);
+        let mut p = WirePayload::with_layout(fmt, &layout);
+        {
+            let WirePayload::TopK { indices, values, .. } = &mut p else { unreachable!() };
+            // hi segment's two slots collided onto index 4
+            indices.copy_from_slice(&[0, 1, 4, 4]);
+            values.copy_from_slice(&[1.0, -2.0, 3.0, 3.0]);
+        }
+        let heads = WirePayload::aggregate_group_heads(std::slice::from_ref(&p), 1);
+        assert_eq!(heads[0].wire_bytes(), p.wire_bytes());
+        let WirePayload::TopK { indices, values, .. } = &heads[0] else { unreachable!() };
+        // the duplicates sum in the union; the missing slot pads with a
+        // zero at the segment base, inert under the decode-time mean
+        assert_eq!(indices, &[0, 1, 4, 4]);
+        assert_eq!(values, &[1.0, -2.0, 6.0, 0.0]);
+        assert_eq!(heads[0].check_finite(0), Ok(()));
+    }
+
+    #[test]
+    fn topk_hierarchical_mean_with_full_budget_matches_flat_mean() {
+        // with frac = 1.0 nothing is ever truncated, so the two-level
+        // mean of group means (equal groups) agrees with the flat mean
+        // up to one f32 rounding at the head
+        let full = WireFormat::TopK { frac_ppm: 1_000_000, decay_ppm: 0 };
+        let start = vec![1.0f32, -0.5, 0.25, 2.0];
+        let ends: Vec<Vec<f32>> = (0..8)
+            .map(|w| start.iter().map(|s| s - 0.01 * (w as f32 - 3.5)).collect())
+            .collect();
+        let payloads: Vec<WirePayload> = ends
+            .iter()
+            .map(|e| {
+                let mut p = WirePayload::with_len(full, 4);
+                p.pack_end(&start, e);
+                p
+            })
+            .collect();
+        let mut flat = vec![0.0f32; 4];
+        WirePayload::mean_end_into(&payloads, &start, &mut flat).unwrap();
+        let heads = WirePayload::aggregate_group_heads(&payloads, 4);
+        let mut hier = vec![0.0f32; 4];
+        WirePayload::mean_end_into(&heads, &start, &mut hier).unwrap();
+        for (j, (h, f)) in hier.iter().zip(&flat).enumerate() {
+            assert!((h - f).abs() < 1e-6, "coord {j}: {h} vs {f}");
+        }
+    }
+
+    #[test]
     fn group_heads_tally_signs_as_majority_of_majorities() {
         // 6 voters in 2 groups of 3. Coordinate 0: group A votes
         // (+,+,-) -> +, group B votes (-,-,+) -> -; the weighted final
@@ -1197,6 +1792,67 @@ mod tests {
             heads.iter().map(|p| p.as_packed_signs().unwrap()).collect();
         votes::majority_vote_packed(&packed, &mut tally);
         assert_eq!(tally, vec![1.0, -1.0]);
+    }
+
+    /// The flat tally and the weighted hierarchical tally over the
+    /// same payloads, for the satellite pins below.
+    fn flat_and_hier_tallies(votes: &[Vec<f32>], groups: usize) -> (Vec<f32>, Vec<f32>) {
+        let len = votes[0].len();
+        let payloads: Vec<WirePayload> = votes
+            .iter()
+            .map(|v| {
+                let mut p = WirePayload::with_len(WireFormat::PackedSigns, len);
+                p.pack_sign_votes(v);
+                p
+            })
+            .collect();
+        let tally_of = |ps: &[WirePayload]| {
+            let packed: Vec<&PackedVotes> =
+                ps.iter().map(|p| p.as_packed_signs().unwrap()).collect();
+            let mut t = vec![0.0f32; len];
+            votes::majority_vote_packed(&packed, &mut t);
+            t
+        };
+        let flat = tally_of(&payloads);
+        let hier = tally_of(&WirePayload::aggregate_group_heads(&payloads, groups));
+        (flat, hier)
+    }
+
+    #[test]
+    fn hierarchical_tally_diverges_from_flat_on_split_groups() {
+        // The documented approximation, pinned: majority-of-weighted-
+        // majorities is NOT the flat tally. Six voters, two groups of
+        // three. Flat count: 2 votes +1, 4 votes -1 -> -1 decisively.
+        // Hierarchical: group A (+,+,-) -> head +1 replicated x3,
+        // group B (-,-,-) -> head -1 replicated x3; the weighted final
+        // round ties 3:3 and the wire-tie convention decodes +1.
+        let votes: Vec<Vec<f32>> = vec![
+            vec![1.0],
+            vec![1.0],
+            vec![-1.0],
+            vec![-1.0],
+            vec![-1.0],
+            vec![-1.0],
+        ];
+        let (flat, hier) = flat_and_hier_tallies(&votes, 2);
+        assert_eq!(flat, vec![-1.0]);
+        assert_eq!(hier, vec![1.0]);
+    }
+
+    #[test]
+    fn degenerate_groupings_reproduce_the_flat_tally_exactly() {
+        // groups = 1 (one head tallies everyone) and groups = n (every
+        // head is its own member) are exact: the approximation only
+        // lives strictly between the extremes
+        let mut rng = Rng::new(2024);
+        let n = 5;
+        let votes: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..64).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect())
+            .collect();
+        let (flat, hier_one) = flat_and_hier_tallies(&votes, 1);
+        assert_eq!(flat, hier_one);
+        let (_, hier_n) = flat_and_hier_tallies(&votes, n);
+        assert_eq!(flat, hier_n);
     }
 
     #[test]

@@ -5,8 +5,9 @@
 //! breakdown and time-to-target for per-step AdamW vs Algorithm 1 at
 //! τ ∈ {12, 24, 36} (the paper's 12×/24×/36× communication reductions),
 //! plus the payload-level axis: the 8-bit quantized exchange with one
-//! scale per message (`q8`) and with one scale per parameter-layout
-//! segment (`q8pt`) — and a per-segment breakdown of where the bits and
+//! scale per message (`q8`), with one scale per parameter-layout
+//! segment (`q8pt`), and the DeMo-style sparse top-k residual-momentum
+//! wire (`topk`) — and a per-segment breakdown of where the bits and
 //! the update magnitude actually go.
 
 use anyhow::Result;
@@ -25,8 +26,10 @@ pub fn run(h: &Harness) -> Result<()> {
         "Communication savings (GPT-2 {label} repro scale, n = 4 workers)\n\
          compute time measured on this host; comm time re-costed per wire\n\
          format (ring alpha-beta for dense f32, gather+broadcast for the\n\
-         8-bit quantized exchanges — comm/mod.rs + dist/wire.rs; q8pt\n\
-         quantizes each parameter-layout segment against its own scale).\n\n"
+         compressed exchanges — comm/mod.rs + dist/wire.rs; q8pt\n\
+         quantizes each parameter-layout segment against its own scale;\n\
+         topk sends each segment's k largest residual-momentum\n\
+         components as sparse index/value pairs).\n\n"
     );
 
     // Run each algorithm ONCE on the neutral (free) network to get the
@@ -48,6 +51,7 @@ pub fn run(h: &Harness) -> Result<()> {
             12,
             Some(WireFormat::QuantizedI8PerTensor),
         ),
+        ("Algorithm 1, tau=12, topk", Algo::Alg1 { eta: 12.0 }, 12, Some(WireFormat::TOPK_DEFAULT)),
     ] {
         let mut cfg = cell(h, preset, algo, tau, budget, 4, BaseOptConfig::adamw_paper());
         cfg.wire = wire;
@@ -139,7 +143,11 @@ pub fn run(h: &Harness) -> Result<()> {
          bounded quantization error in the exchanged differences; q8pt\n\
          spends 4 bytes per segment to give every parameter block its own\n\
          scale, cutting that error exactly where the per-segment norms\n\
-         above are smallest relative to the largest block.\n",
+         above are smallest relative to the largest block. The topk row\n\
+         drops the payload further still — 8 bytes per kept component at\n\
+         the default 1/16 keep fraction — and banks everything it does\n\
+         not send in a decaying per-rank residual, so withheld mass\n\
+         re-competes on later rounds instead of being lost.\n",
     );
     println!("{text}");
     save_summary(h, "comm", &text)

@@ -146,8 +146,11 @@ pub struct RunSummary {
 /// moved off the trainer RNG onto the dedicated checkpointed fault
 /// stream (and large compressed fleets route the hierarchical
 /// topology), so any cached clock columns computed under a jittery
-/// preset are stale.
-const CACHE_MODEL_VERSION: &str = "v5";
+/// preset are stale. v6: `corrupt()` draws a fixed per-format RNG
+/// pattern and only tallies injections that landed (q8pt scale
+/// poisoning was a silent no-op), shifting every faulty trajectory,
+/// and the sparse `topk` wire joined the format menu.
+const CACHE_MODEL_VERSION: &str = "v6";
 
 /// Content hash of everything that determines a run's trajectory.
 /// `cfg.sequential_workers` is deliberately excluded: the parallel and
@@ -273,5 +276,14 @@ mod tests {
         let mut d = a.clone();
         d.wire = Some(crate::dist::WireFormat::QuantizedI8);
         assert_ne!(cache_key(&a), cache_key(&d));
+        // topk's tuning knobs shape the trajectory too — describe()
+        // carries the ppm values, so two topk runs with different keep
+        // fractions never share a cache row
+        let mut e = a.clone();
+        e.wire = Some(crate::dist::WireFormat::TOPK_DEFAULT);
+        let mut f = a.clone();
+        f.wire = Some(crate::dist::WireFormat::TopK { frac_ppm: 125_000, decay_ppm: 900_000 });
+        assert_ne!(cache_key(&a), cache_key(&e));
+        assert_ne!(cache_key(&e), cache_key(&f));
     }
 }

@@ -9,7 +9,8 @@
 //!    rank, in rank order, packing that rank's contribution (its
 //!    end-of-round view, [`WorkerView`]) into a trainer-owned
 //!    persistent payload buffer: full-precision parameters, 1-bit sign
-//!    votes, or 8-bit quantized differences.
+//!    votes, 8-bit quantized differences, or top-k sparse components
+//!    of the rank's decaying residual momentum.
 //! 2. **Server side** — [`OuterOptimizer::apply`] consumes the gathered
 //!    payloads and applies the global step to the iterate.
 //!
@@ -23,24 +24,28 @@
 //!
 //! | optimizer | paper algorithm | wire formats | bytes / rank message |
 //! |---|---|---|---|
-//! | [`SignMomentum`] | Algorithm 1 (eqs. 6-8) | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
-//! | [`SlowMo`] | Algorithm 5 (Wang et al. 2019) | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
-//! | [`SignedSlowMo`] | §4.1 ablation | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
-//! | [`Lookahead`] (± signed) | Tables 4-5 (n = 1) | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
-//! | [`GlobalAdamW`] | Algorithm 7 | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
-//! | [`LocalAvg`] | "Local AdamW" (Fig. 3) | `dense` (default), `q8`, `q8pt` | `4P` / `P + 12` / `P + 8 + 4S` |
+//! | [`SignMomentum`] | Algorithm 1 (eqs. 6-8) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
+//! | [`SlowMo`] | Algorithm 5 (Wang et al. 2019) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
+//! | [`SignedSlowMo`] | §4.1 ablation | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
+//! | [`Lookahead`] (± signed) | Tables 4-5 (n = 1) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
+//! | [`GlobalAdamW`] | Algorithm 7 | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
+//! | [`LocalAvg`] | "Local AdamW" (Fig. 3) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
 //! | [`MvSignSgd`] | Algorithm 6 (Sun et al. 2023) | `packed_signs` only | `⌈P/8⌉ + 8` |
 //!
 //! (`S` = segment count of the backend's parameter layout,
-//! [`crate::runtime::StepBackend::layout`].)
+//! [`crate::runtime::StepBackend::layout`]; `K` = Σ per-segment top-k
+//! budgets, ⌊`numel · topk_frac`⌋ clamped to `1..=numel` per segment.)
 //!
 //! The dense-exchange methods all reconstruct the round's average end
 //! point from the payloads ([`WirePayload::mean_end_into`]) and then
 //! run their own elementwise update, which is why every one of them
-//! supports the quantized formats for free: selecting `wire = "q8"` or
+//! supports the compressed formats for free: selecting `wire = "q8"`,
 //! the layout-aware `wire = "q8pt"` (one quantization scale per
-//! parameter segment) in the `[outer]` config table swaps the payload
-//! variant, nothing else. MV-sto-signSGD's exchange *is* the 1-bit
+//! parameter segment), or the DeMo-style `wire = "topk"` (per-segment
+//! top-k of a decaying residual-momentum buffer — what a rank does not
+//! transmit this round decays by `topk_decay` and re-competes next
+//! round) in the `[outer]` config table swaps the payload variant,
+//! nothing else. MV-sto-signSGD's exchange *is* the 1-bit
 //! majority vote, so it pins `packed_signs`
 //! ([`crate::config::RunConfig::validate`] rejects the rest).
 //!
@@ -87,10 +92,10 @@ pub struct WorkerView<'a> {
     pub last_grad: &'a [f32],
     /// The backend's validated parameter layout
     /// ([`crate::runtime::StepBackend::layout`]): how `start`/`end`
-    /// tile into named segments. Layout-aware payloads carry it
-    /// themselves, so `contribute` rarely touches this — it exists so
-    /// segment-resolved consumers (metrics, future per-tensor top-k
-    /// formats) see the same contract the wire does.
+    /// tile into named segments. Layout-aware payloads (`q8pt`,
+    /// `topk`) carry it themselves, so `contribute` rarely touches
+    /// this — it exists so segment-resolved consumers (metrics,
+    /// diagnostics) see the same contract the wire does.
     pub layout: &'a crate::runtime::ParamLayout,
 }
 
@@ -226,10 +231,13 @@ impl OuterConfig {
     }
 
     /// The wire formats this optimizer can exchange. Every
-    /// dense-exchange method also speaks `q8` and the layout-aware
-    /// `q8pt` (the payload mean reconstructs the average end point
-    /// whatever the quantization granularity); MV-sto-signSGD's
-    /// exchange is definitionally the 1-bit vote.
+    /// dense-exchange method also speaks `q8`, the layout-aware
+    /// `q8pt`, and the sparse `topk` (the payload mean reconstructs
+    /// the average end point whatever the compression);
+    /// MV-sto-signSGD's exchange is definitionally the 1-bit vote.
+    /// The `topk` entry is the default-parameter format; config
+    /// validation matches by name, so tuned `topk_frac`/`topk_decay`
+    /// values stay on the menu.
     pub fn supported_wires(&self) -> &'static [WireFormat] {
         match self {
             OuterConfig::MvSignSgd { .. } => &[WireFormat::PackedSigns],
@@ -237,6 +245,7 @@ impl OuterConfig {
                 WireFormat::DenseF32,
                 WireFormat::QuantizedI8,
                 WireFormat::QuantizedI8PerTensor,
+                WireFormat::TOPK_DEFAULT,
             ],
         }
     }
@@ -476,6 +485,11 @@ mod tests {
                 "{}",
                 cfg.name()
             );
+            assert!(
+                cfg.supported_wires().contains(&WireFormat::TOPK_DEFAULT),
+                "{}",
+                cfg.name()
+            );
             assert_eq!(cfg.build(4).wire(), WireFormat::DenseF32, "{}", cfg.name());
         }
     }
@@ -599,8 +613,11 @@ mod tests {
             };
             let dense = run(WireFormat::DenseF32);
             // max quantization error per rank: scale/2 = max|diff|/254
-            // ≈ 2e-4 here; SlowMo amplifies by alpha = 1
-            for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor] {
+            // ≈ 2e-4 here; SlowMo amplifies by alpha = 1. A full-budget
+            // topk payload transmits every coordinate exactly, so its
+            // only deviation is the f64 mean's final f32 rounding.
+            let full_topk = WireFormat::TopK { frac_ppm: 1_000_000, decay_ppm: 0 };
+            for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor, full_topk] {
                 let quant = run(format);
                 for (j, (a, b)) in dense.iter().zip(&quant).enumerate() {
                     assert!(
@@ -612,5 +629,37 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// A budget-limited topk exchange transmits the largest residual
+    /// components and still descends: the untransmitted mass is not an
+    /// error term that compounds silently, it waits (decayed) in the
+    /// worker's residual buffer for a later round.
+    #[test]
+    fn topk_apply_descends_with_a_partial_budget() {
+        // keep 1 in 4 coordinates per round
+        let topk = WireFormat::TopK { frac_ppm: 250_000, decay_ppm: 900_000 };
+        let d = 16;
+        let cfg = OuterConfig::LocalAvg;
+        let mut opt = cfg.build(d);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let layout = crate::runtime::ParamLayout::single(d);
+        let mut global = vec![1.0f32; d];
+        let mut payloads: Vec<WirePayload> =
+            (0..2).map(|_| WirePayload::with_len(topk, d)).collect();
+        for round in 0..6 {
+            let start = global.clone();
+            // both workers keep descending every coordinate by 0.05
+            let end: Vec<f32> = start.iter().map(|s| s - 0.05).collect();
+            for (w, p) in payloads.iter_mut().enumerate() {
+                let view =
+                    WorkerView { start: &start, end: &end, last_grad: &end, layout: &layout };
+                opt.contribute(w, 2, &view, &mut rng, p);
+            }
+            let ctx = RoundCtx { start: &start, gamma: 0.1, round };
+            opt.apply(&mut global, &ctx, &payloads, &mut rng).unwrap();
+        }
+        // six rounds of k = 4-of-16 cover every coordinate; all moved
+        assert!(global.iter().all(|&x| x < 1.0), "{global:?}");
     }
 }

@@ -27,7 +27,11 @@
 //! [`crate::dist::wire`], not the trainer. The buffers are sized from
 //! the backend's validated [`ParamLayout`]
 //! ([`StepBackend::layout`]) — the layout-aware `q8pt` format carries
-//! one quantization scale per segment; every other format just takes
+//! one quantization scale per segment, the sparse `topk` format
+//! carries per-segment component budgets plus the rank's persistent
+//! residual-momentum buffer (worker state riding in the payload, saved
+//! as `worker{w}.topk_residual` so resume is bit-identical); every
+//! other format just takes
 //! the coordinate count. After each apply the trainer resolves the
 //! global update along the same layout
 //! ([`crate::train::metrics::segment_norms`]) so experiments can show
@@ -507,12 +511,7 @@ impl Trainer {
         // (4) any size/format drift during packing is an error — the
         //     billed cost and the exchanged data may not diverge;
         // (5) server side: apply the global step from the payloads.
-        if self.payloads.len() != n
-            || self.payloads.iter().any(|pl| pl.format() != self.wire || pl.len() != p)
-        {
-            self.payloads =
-                (0..n).map(|_| WirePayload::with_layout(self.wire, &self.layout)).collect();
-        }
+        self.ensure_payload_buffers();
         // billing: with a full fleet this is bitwise charge_exchange
         // (Topology::select routes ring / flat / hierarchical); a
         // degraded round bills exactly what moved — `arrived − 1` up,
@@ -548,13 +547,18 @@ impl Trainer {
             );
         }
         // corruption in transit: each arriving payload is damaged with
-        // corrupt_prob — a flipped byte/sign bit (valid encoding,
-        // survived with bounded error) or a NaN-poisoned scale or
-        // coordinate (rejected by the finiteness check below).
+        // corrupt_prob — a flipped byte/sign/index bit (valid encoding,
+        // survived with bounded error) or a NaN-poisoned scale,
+        // coordinate, or sparse value (rejected by the finiteness check
+        // below). The counter follows corrupt()'s report, so it counts
+        // injections that actually landed — never attempts that had
+        // nothing to damage.
         if faults_on && plan.corrupt_prob > 0.0 {
             for w in 0..n {
-                if arrived_mask[w] && self.fault_rng.bernoulli(plan.corrupt_prob) {
-                    self.payloads[w].corrupt(&mut self.fault_rng);
+                if arrived_mask[w]
+                    && self.fault_rng.bernoulli(plan.corrupt_prob)
+                    && self.payloads[w].corrupt(&mut self.fault_rng)
+                {
                     self.faults.corrupted_payloads += 1;
                 }
             }
@@ -661,6 +665,24 @@ impl Trainer {
         Ok(())
     }
 
+    /// Persistent per-rank payload buffers: (re)built whenever the
+    /// round's (fleet size, format, dimension) disagrees with what the
+    /// buffers hold — the first round, or a config change across a
+    /// checkpoint resume — instead of asserting. For the `topk` wire
+    /// the buffers also carry each rank's residual momentum, so a
+    /// rebuild zeroes that state; [`Self::load_checkpoint`] rebuilds
+    /// first and restores the checkpointed residuals on top.
+    fn ensure_payload_buffers(&mut self) {
+        let n = self.cfg.n_workers;
+        let p = self.global.len();
+        if self.payloads.len() != n
+            || self.payloads.iter().any(|pl| pl.format() != self.wire || pl.len() != p)
+        {
+            self.payloads =
+                (0..n).map(|_| WirePayload::with_layout(self.wire, &self.layout)).collect();
+        }
+    }
+
     /// Mean validation loss over the configured eval batches.
     ///
     /// The batches fan out across the persistent pool (one read-only
@@ -705,6 +727,15 @@ impl Trainer {
         for w in &self.workers {
             for (i, buf) in w.opt.state().iter().enumerate() {
                 ck.add(&format!("worker{}.opt{i}", w.id), buf);
+            }
+        }
+        // worker-side residual momentum for the sparse topk wire: the
+        // persistent payload buffers double as that state, and a
+        // resumed run must hold exactly the untransmitted mass the
+        // interrupted one did.
+        for (w, pl) in self.payloads.iter().enumerate() {
+            if let Some(r) = pl.residual() {
+                ck.add(&format!("worker{w}.topk_residual"), r);
             }
         }
         // RNG streams: with these restored, a resumed run replays the
@@ -784,6 +815,24 @@ impl Trainer {
         if let Ok(words) = ck.get("trainer.clock") {
             self.clock = SimClock::from_f32_words(words)
                 .ok_or_else(|| anyhow::anyhow!("corrupt trainer.clock buffer"))?;
+        }
+        // topk residual momentum: rebuild the payload buffers for the
+        // configured wire (fresh zeros), then restore the checkpointed
+        // residuals on top. Non-topk buffers have no residual and skip
+        // the loop; checkpoints without the keys (older, or written by
+        // a different wire) leave the fresh zeros in place.
+        self.ensure_payload_buffers();
+        for (w, pl) in self.payloads.iter_mut().enumerate() {
+            let Some(r) = pl.residual_mut() else { break };
+            if let Ok(words) = ck.get(&format!("worker{w}.topk_residual")) {
+                anyhow::ensure!(
+                    words.len() == r.len(),
+                    "worker{w}.topk_residual holds {} of {} coordinates",
+                    words.len(),
+                    r.len()
+                );
+                r.copy_from_slice(words);
+            }
         }
         Ok(())
     }
