@@ -1,9 +1,10 @@
 //! Fault injection plan and bookkeeping for the simulated fleet.
 //!
 //! [`FaultPlan`] is a config knob: probabilities for the four modeled
-//! failure modes of a round exchange, all driven by the trainer's
-//! dedicated, checkpointed fault RNG stream (never the training stream,
-//! so toggling faults cannot shift optimization draws):
+//! *honest* failure modes of a round exchange plus the Byzantine
+//! adversary model, all driven by the trainer's dedicated, checkpointed
+//! fault RNG stream (never the training stream, so toggling faults
+//! cannot shift optimization draws):
 //!
 //! * **Elastic membership** (`churn_prob`) — each rank independently
 //!   sits the round out before the local phase starts (left/not-yet-
@@ -17,18 +18,99 @@
 //! * **Dropped payloads** (`drop_prob`) — a participating rank's packed
 //!   payload is lost in transit: it never reaches the aggregation point
 //!   (not billed, not aggregated) and the round proceeds over the
-//!   `n_effective` survivors.
+//!   `n_effective` survivors. With `retry_limit > 0` each dropped rank
+//!   retransmits up to that many times (each attempt an independent
+//!   `drop_prob` draw on the fault stream, counted in
+//!   [`FaultStats::retried_payloads`]); a recovered payload rejoins the
+//!   arrived set and is billed through the degraded gather.
 //! * **Corrupted payloads** (`corrupt_prob`) — a payload arrives
 //!   damaged: a bit-flipped quantized byte or sign word (a valid
 //!   encoding — survived, with bounded error) or a NaN-poisoned scale /
 //!   dense coordinate (detected by the finiteness check and rejected
 //!   from the aggregate, loudly counted).
 //!
+//! # Byzantine ranks
+//!
+//! `byzantine_frac` promotes `⌊frac·n⌋` ranks to adversaries. The
+//! membership is drawn **once per run** at trainer construction from the
+//! checkpointed fault stream (a fresh substream is seed-determined, so a
+//! resumed run recomputes the identical set), and per-round behavior
+//! draws ride the same stream — membership and behavior are
+//! bit-reproducible. Adversaries train honestly but mutate their
+//! payload after packing ([`crate::dist::WirePayload::byzantine`]);
+//! every attack produces *finite* payloads, so the PR-6 finiteness gate
+//! never catches them — that is the point.
+//!
+//! Attack × defense breakdown points (n ranks, f adversaries, trim
+//! depth k = max(1, n/4), see [`crate::dist::wire`] for the policies):
+//!
+//! | attack          | `mean`            | `trimmed`     | `median`      | MV tally (signs) |
+//! |-----------------|-------------------|---------------|---------------|------------------|
+//! | `sign_flip`     | biased (f/n)      | holds f ≤ k   | holds f < n/2 | holds f < n/2    |
+//! | `scale_inflate` | poisoned at any f | holds f ≤ k   | holds f < n/2 | immune (no magnitude on the wire) |
+//! | `collude_fixed` | poisoned at any f | holds f ≤ k   | holds f < n/2 | holds f < n/2    |
+//! | `flaky`         | poisoned at any f | holds f ≤ k   | holds f < n/2 | holds f < n/2    |
+//!
+//! # Reputation / quarantine lifecycle
+//!
+//! With `quarantine = true` the trainer scores every arrived payload
+//! each round (update-norm z-score against the survivor median, sign
+//! agreement against the applied global update), folds the verdict into
+//! an exponentially-decayed per-rank reputation, and quarantines ranks
+//! whose reputation falls below threshold: a quarantined rank is frozen
+//! exactly like a churn-absent rank (no local steps, no worker RNG, no
+//! payload, billed as absent) for a backoff that doubles on each
+//! relapse, then re-admitted **on probation** — its reputation restarts
+//! just above threshold, so one more bad round re-quarantines it
+//! immediately. Reputations, backoff state, and the counters below ride
+//! in the checkpoint, so a faulty resume is bit-identical.
+//!
 //! [`FaultStats`] counts what actually happened, rides in the
-//! checkpoint (same exact 16-bit-limb f32 encoding as the clock), and
-//! is surfaced on the run result so experiments can report survival.
+//! checkpoint (a tagged, versioned f32-limb encoding; the untagged
+//! 20-word layout of earlier checkpoints still loads), and is surfaced
+//! on the run result so experiments can report survival.
 
 use anyhow::{ensure, Result};
+
+/// Per-round behavior of a Byzantine rank. Every attack emits *finite*
+/// payloads (the finiteness gate must not catch them) and none of them
+/// consumes RNG on its own — only `flaky`'s honest/lie coin does, one
+/// draw per adversary per round on the fault stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Attack {
+    /// Negate the rank's local difference (votes flip on the 1-bit wire).
+    SignFlip,
+    /// Inflate the difference magnitude by a large fixed factor
+    /// (direction-preserving; sign wires are immune — no magnitude).
+    ScaleInflate,
+    /// All adversaries push the identical fixed direction: +1 on every
+    /// transmitted coordinate (all-plus votes on the sign wire).
+    ColludeFixed,
+    /// Honest with probability 1/2 per round, else `SignFlip` — the
+    /// intermittent liar that reputation decay is tuned to catch.
+    Flaky,
+}
+
+impl Attack {
+    pub fn parse(s: &str) -> Option<Attack> {
+        Some(match s {
+            "sign_flip" => Attack::SignFlip,
+            "scale_inflate" => Attack::ScaleInflate,
+            "collude_fixed" => Attack::ColludeFixed,
+            "flaky" => Attack::Flaky,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Attack::SignFlip => "sign_flip",
+            Attack::ScaleInflate => "scale_inflate",
+            Attack::ColludeFixed => "collude_fixed",
+            Attack::Flaky => "flaky",
+        }
+    }
+}
 
 /// Per-round fault injection probabilities. `FaultPlan::none()` (the
 /// default) disables every mode and keeps the trainer on the exact
@@ -47,6 +129,17 @@ pub struct FaultPlan {
     pub tail_scale_s: f64,
     /// Pareto shape α; smaller is heavier-tailed (α ≤ 1 has no mean).
     pub tail_alpha: f64,
+    /// Fraction of ranks promoted to adversaries (⌊frac·n⌋, drawn once
+    /// per run on the fault stream).
+    pub byzantine_frac: f64,
+    /// What the adversaries send. Only meaningful with
+    /// `byzantine_frac > 0`.
+    pub attack: Attack,
+    /// Retransmission attempts per dropped payload (0 = PR-6 semantics:
+    /// dropped is gone).
+    pub retry_limit: u32,
+    /// Enable the reputation/quarantine supervisor.
+    pub quarantine: bool,
 }
 
 impl FaultPlan {
@@ -59,6 +152,10 @@ impl FaultPlan {
             tail_prob: 0.0,
             tail_scale_s: 1.0,
             tail_alpha: 1.5,
+            byzantine_frac: 0.0,
+            attack: Attack::SignFlip,
+            retry_limit: 0,
+            quarantine: false,
         }
     }
 
@@ -68,6 +165,7 @@ impl FaultPlan {
             || self.drop_prob > 0.0
             || self.corrupt_prob > 0.0
             || self.tail_prob > 0.0
+            || self.byzantine_frac > 0.0
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -90,24 +188,54 @@ impl FaultPlan {
             "faults.tail_alpha = {} must be finite and > 0",
             self.tail_alpha
         );
+        ensure!(
+            (0.0..1.0).contains(&self.byzantine_frac) && self.byzantine_frac.is_finite(),
+            "faults.byzantine_frac = {} not in [0, 1) — a fully adversarial fleet has no honest \
+             signal to recover",
+            self.byzantine_frac
+        );
+        // knob hygiene: a modifier without the mode it modifies is a
+        // config mistake, not a silent no-op
+        ensure!(
+            self.retry_limit == 0 || self.drop_prob > 0.0,
+            "faults.retry_limit = {} without drop_prob > 0 retries nothing",
+            self.retry_limit
+        );
+        ensure!(
+            !self.quarantine || self.byzantine_frac > 0.0,
+            "faults.quarantine = true without byzantine_frac > 0 supervises nothing"
+        );
         Ok(())
     }
 
     /// One-token summary for run descriptions / cache keys; empty when
-    /// inactive so fault-free keys are unchanged.
+    /// inactive so fault-free keys are unchanged, and the Byzantine /
+    /// retry segments only appear when those knobs are on so pre-PR-8
+    /// fault strings are unchanged too.
     pub fn describe(&self) -> String {
         if !self.is_active() {
             return String::new();
         }
-        format!(
-            " faults[churn={},drop={},corrupt={},tail={}x{}s@a{}]",
+        let mut s = format!(
+            " faults[churn={},drop={},corrupt={},tail={}x{}s@a{}",
             self.churn_prob,
             self.drop_prob,
             self.corrupt_prob,
             self.tail_prob,
             self.tail_scale_s,
             self.tail_alpha
-        )
+        );
+        if self.byzantine_frac > 0.0 {
+            s.push_str(&format!(",byz={}@{}", self.byzantine_frac, self.attack.name()));
+            if self.quarantine {
+                s.push_str(",quarantine");
+            }
+        }
+        if self.retry_limit > 0 {
+            s.push_str(&format!(",retry={}", self.retry_limit));
+        }
+        s.push(']');
+        s
     }
 }
 
@@ -120,9 +248,9 @@ impl Default for FaultPlan {
 /// What the injected faults actually did, accumulated over a run.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct FaultStats {
-    /// Ranks that sat a round out (elastic membership).
+    /// Ranks that sat a round out (elastic membership + quarantine).
     pub absent_ranks: u64,
-    /// Payloads lost in transit.
+    /// Payloads lost in transit (and not recovered by a retry).
     pub dropped_payloads: u64,
     /// Payloads that arrived corrupted (survived or rejected).
     pub corrupted_payloads: u64,
@@ -130,24 +258,51 @@ pub struct FaultStats {
     pub rejected_payloads: u64,
     /// Rounds where no payload survived; the global stays put.
     pub no_quorum_rounds: u64,
+    /// Retransmission attempts drawn for dropped payloads (both the
+    /// attempt that recovered the payload and attempts that were
+    /// themselves dropped).
+    pub retried_payloads: u64,
+    /// Quarantine entries issued by the supervisor.
+    pub quarantined_ranks: u64,
+    /// Applied rounds in which at least one adversarial payload reached
+    /// the aggregation point.
+    pub byzantine_rounds_survived: u64,
+    /// Quarantined ranks re-admitted on probation.
+    pub readmissions: u64,
 }
 
 impl FaultStats {
-    /// Checkpoint encoding: 5 counters × four exact 16-bit limbs.
-    pub const F32_WORDS: usize = 20;
+    /// Tagged checkpoint encoding: `[TAG, n_counters]` then 9 counters
+    /// × four exact 16-bit limbs. The tag word distinguishes the
+    /// layout from the legacy untagged 20-word encoding (which
+    /// [`Self::from_f32_words`] still accepts, zeroing the counters
+    /// that did not exist yet); any other length errors loudly instead
+    /// of silently dropping the stats.
+    pub const F32_WORDS: usize = 2 + 9 * 4;
 
-    fn fields(&self) -> [u64; 5] {
+    /// Layout tag of the current encoding (exactly representable in f32).
+    const TAG: f32 = 9002.0;
+    /// Word count of the pre-PR-8 untagged encoding (5 counters).
+    const LEGACY_F32_WORDS: usize = 20;
+
+    fn fields(&self) -> [u64; 9] {
         [
             self.absent_ranks,
             self.dropped_payloads,
             self.corrupted_payloads,
             self.rejected_payloads,
             self.no_quorum_rounds,
+            self.retried_payloads,
+            self.quarantined_ranks,
+            self.byzantine_rounds_survived,
+            self.readmissions,
         ]
     }
 
     pub fn to_f32_words(&self) -> Vec<f32> {
         let mut out = Vec::with_capacity(Self::F32_WORDS);
+        out.push(Self::TAG);
+        out.push(9.0);
         for v in self.fields() {
             for shift in [0u32, 16, 32, 48] {
                 out.push(((v >> shift) & 0xFFFF) as f32);
@@ -156,26 +311,50 @@ impl FaultStats {
         out
     }
 
-    pub fn from_f32_words(words: &[f32]) -> Option<FaultStats> {
-        if words.len() != Self::F32_WORDS {
-            return None;
-        }
-        let mut vals = [0u64; 5];
-        for (i, v) in vals.iter_mut().enumerate() {
+    /// Decode either encoding; a malformed buffer is a loud error (a
+    /// resume must never silently zero its fault history).
+    pub fn from_f32_words(words: &[f32]) -> Result<FaultStats, String> {
+        let counters = match words.len() {
+            Self::LEGACY_F32_WORDS => &words[..],
+            Self::F32_WORDS => {
+                if words[0] != Self::TAG || words[1] != 9.0 {
+                    return Err(format!(
+                        "fault-stats buffer has tag {}/{}, expected {}/9",
+                        words[0],
+                        words[1],
+                        Self::TAG
+                    ));
+                }
+                &words[2..]
+            }
+            n => {
+                return Err(format!(
+                    "fault-stats buffer has {n} words; expected {} (tagged) or {} (legacy)",
+                    Self::F32_WORDS,
+                    Self::LEGACY_F32_WORDS
+                ))
+            }
+        };
+        let mut vals = [0u64; 9];
+        for (i, v) in vals.iter_mut().enumerate().take(counters.len() / 4) {
             for (j, shift) in [0u32, 16, 32, 48].iter().enumerate() {
-                let x = words[i * 4 + j] as f64;
+                let x = counters[i * 4 + j] as f64;
                 if !(0.0..65536.0).contains(&x) || x.fract() != 0.0 {
-                    return None;
+                    return Err(format!("fault-stats limb {} = {x} is not a 16-bit value", i * 4 + j));
                 }
                 *v |= (x as u64) << shift;
             }
         }
-        Some(FaultStats {
+        Ok(FaultStats {
             absent_ranks: vals[0],
             dropped_payloads: vals[1],
             corrupted_payloads: vals[2],
             rejected_payloads: vals[3],
             no_quorum_rounds: vals[4],
+            retried_payloads: vals[5],
+            quarantined_ranks: vals[6],
+            byzantine_rounds_survived: vals[7],
+            readmissions: vals[8],
         })
     }
 }
@@ -199,6 +378,7 @@ mod tests {
             |p: &mut FaultPlan| p.drop_prob = 0.1,
             |p: &mut FaultPlan| p.corrupt_prob = 0.1,
             |p: &mut FaultPlan| p.tail_prob = 0.1,
+            |p: &mut FaultPlan| p.byzantine_frac = 0.25,
         ] {
             let mut p = FaultPlan::none();
             f(&mut p);
@@ -222,6 +402,49 @@ mod tests {
         let mut p = FaultPlan::none();
         p.tail_alpha = 0.0;
         assert!(p.validate().is_err());
+        let mut p = FaultPlan::none();
+        p.byzantine_frac = 1.0;
+        assert!(p.validate().is_err(), "a fully adversarial fleet is rejected");
+    }
+
+    #[test]
+    fn modifier_knobs_require_their_mode() {
+        let mut p = FaultPlan::none();
+        p.retry_limit = 3;
+        assert!(p.validate().is_err(), "retry without drops");
+        p.drop_prob = 0.1;
+        assert!(p.validate().is_ok());
+        let mut p = FaultPlan::none();
+        p.quarantine = true;
+        assert!(p.validate().is_err(), "quarantine without adversaries");
+        p.byzantine_frac = 0.125;
+        assert!(p.validate().is_ok());
+    }
+
+    #[test]
+    fn attack_names_roundtrip() {
+        for a in [Attack::SignFlip, Attack::ScaleInflate, Attack::ColludeFixed, Attack::Flaky] {
+            assert_eq!(Attack::parse(a.name()), Some(a));
+        }
+        assert_eq!(Attack::parse("dos"), None);
+    }
+
+    #[test]
+    fn describe_extends_but_never_rewrites_the_honest_segment() {
+        let mut p = FaultPlan::none();
+        p.drop_prob = 0.1;
+        let honest = p.describe();
+        p.byzantine_frac = 0.125;
+        p.attack = Attack::ScaleInflate;
+        p.quarantine = true;
+        p.retry_limit = 2;
+        let full = p.describe();
+        // the honest prefix is intact — pre-PR-8 cache keys for runs
+        // without the new knobs cannot shift
+        assert!(full.starts_with(honest.trim_end_matches(']')), "{honest} vs {full}");
+        assert!(full.contains("byz=0.125@scale_inflate"));
+        assert!(full.contains("quarantine"));
+        assert!(full.contains("retry=2"));
     }
 
     #[test]
@@ -232,13 +455,41 @@ mod tests {
             corrupted_payloads: 3,
             rejected_payloads: 0,
             no_quorum_rounds: 65535,
+            retried_payloads: 7,
+            quarantined_ranks: 2,
+            byzantine_rounds_survived: 1 << 33,
+            readmissions: 1,
         };
         let words = s.to_f32_words();
         assert_eq!(words.len(), FaultStats::F32_WORDS);
-        assert_eq!(FaultStats::from_f32_words(&words), Some(s));
-        assert_eq!(FaultStats::from_f32_words(&[1.0]), None);
+        assert_eq!(FaultStats::from_f32_words(&words), Ok(s));
+        assert!(FaultStats::from_f32_words(&[1.0]).is_err());
         let mut bad = words.clone();
-        bad[0] = 0.5;
-        assert_eq!(FaultStats::from_f32_words(&bad), None);
+        bad[2] = 0.5;
+        assert!(FaultStats::from_f32_words(&bad).is_err());
+        let mut wrong_tag = words;
+        wrong_tag[0] = 1.0;
+        assert!(FaultStats::from_f32_words(&wrong_tag).is_err());
+    }
+
+    #[test]
+    fn legacy_untagged_encoding_still_loads() {
+        // the pre-PR-8 layout: 5 counters × 4 limbs, no tag word
+        let legacy = FaultStats {
+            absent_ranks: 3,
+            dropped_payloads: 1 << 20,
+            corrupted_payloads: 9,
+            rejected_payloads: 4,
+            no_quorum_rounds: 70000,
+            ..FaultStats::default()
+        };
+        let mut words = Vec::new();
+        for v in [3u64, 1 << 20, 9, 4, 70000] {
+            for shift in [0u32, 16, 32, 48] {
+                words.push(((v >> shift) & 0xFFFF) as f32);
+            }
+        }
+        assert_eq!(words.len(), 20);
+        assert_eq!(FaultStats::from_f32_words(&words), Ok(legacy));
     }
 }

@@ -46,7 +46,7 @@
 pub mod faults;
 pub mod topology;
 
-pub use faults::{FaultPlan, FaultStats};
+pub use faults::{Attack, FaultPlan, FaultStats};
 pub use topology::Topology;
 
 use crate::dist::WirePayload;

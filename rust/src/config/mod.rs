@@ -10,8 +10,8 @@ use std::path::PathBuf;
 
 use anyhow::{anyhow, Result};
 
-use crate::comm::{CommModel, FaultPlan};
-use crate::dist::WireFormat;
+use crate::comm::{Attack, CommModel, FaultPlan};
+use crate::dist::{AggPolicy, WireFormat};
 use crate::optim::BaseOptConfig;
 use crate::outer::OuterConfig;
 use crate::train::schedule::ScheduleConfig;
@@ -92,6 +92,15 @@ pub struct RunConfig {
     /// stream, is itself deterministic in the seed, and splits the
     /// experiment cache via [`RunConfig::describe`].
     pub faults: FaultPlan,
+    /// Server-side robust-aggregation policy (`[outer] agg = "mean" |
+    /// "trimmed" | "median"` / `--agg`). [`AggPolicy::Mean`] (the
+    /// default) is the bitwise-historical path; the robust policies
+    /// defend the dense-exchange formats against Byzantine ranks
+    /// ([`FaultPlan::byzantine_frac`]). MV-sto-signSGD's majority
+    /// tally ignores the knob — validation rejects a non-mean policy
+    /// on the `packed_signs` wire rather than let the config imply a
+    /// defense the tally never reads.
+    pub agg: AggPolicy,
 }
 
 /// Peak local LR per preset, scaled-down analogue of the paper's Table 1.
@@ -134,6 +143,7 @@ impl RunConfig {
             wire: None,
             sequential_workers: false,
             faults: FaultPlan::none(),
+            agg: AggPolicy::Mean,
         }
     }
 
@@ -200,6 +210,9 @@ impl RunConfig {
             if let Some(w) = t.get("wire").and_then(Json::as_str) {
                 cfg.wire = Some(parse_wire(w)?);
             }
+            if let Some(a) = t.get("agg").and_then(Json::as_str) {
+                cfg.agg = parse_agg(a)?;
+            }
             topk_frac = t.get("topk_frac").and_then(Json::as_f64);
             topk_decay = t.get("topk_decay").and_then(Json::as_f64);
         }
@@ -232,6 +245,18 @@ impl RunConfig {
             }
             if let Some(v) = gff("tail_alpha") {
                 cfg.faults.tail_alpha = v;
+            }
+            if let Some(v) = gff("byzantine_frac") {
+                cfg.faults.byzantine_frac = v;
+            }
+            if let Some(a) = t.get("attack").and_then(Json::as_str) {
+                cfg.faults.attack = parse_attack(a)?;
+            }
+            if let Some(v) = t.get("retry_limit").and_then(Json::as_usize) {
+                cfg.faults.retry_limit = v as u32;
+            }
+            if let Some(v) = t.get("quarantine").and_then(Json::as_bool) {
+                cfg.faults.quarantine = v;
             }
         }
 
@@ -269,6 +294,9 @@ impl RunConfig {
         }
         if let Some(w) = args.get("wire") {
             cfg.wire = Some(parse_wire(w)?);
+        }
+        if let Some(a) = args.get("agg") {
+            cfg.agg = parse_agg(a)?;
         }
         if let Some(v) = args.get("topk-frac") {
             topk_frac = Some(v.parse().map_err(|_| anyhow!("--topk-frac: bad float"))?);
@@ -311,6 +339,16 @@ impl RunConfig {
         f.tail_prob = args.f64_or("tail-prob", f.tail_prob).map_err(|e| anyhow!(e))?;
         f.tail_scale_s = args.f64_or("tail-scale-s", f.tail_scale_s).map_err(|e| anyhow!(e))?;
         f.tail_alpha = args.f64_or("tail-alpha", f.tail_alpha).map_err(|e| anyhow!(e))?;
+        f.byzantine_frac =
+            args.f64_or("byzantine-frac", f.byzantine_frac).map_err(|e| anyhow!(e))?;
+        if let Some(a) = args.get("attack") {
+            f.attack = parse_attack(a)?;
+        }
+        f.retry_limit =
+            args.usize_or("retry-limit", f.retry_limit as usize).map_err(|e| anyhow!(e))? as u32;
+        if args.has("quarantine") {
+            f.quarantine = true;
+        }
         if let Some(dir) = args.get("log-dir") {
             cfg.log_dir = Some(PathBuf::from(dir));
         }
@@ -345,6 +383,11 @@ impl RunConfig {
                 self.wire.is_none(),
                 "standalone mode exchanges dense per-step gradients; drop the `wire` override"
             );
+            // no outer aggregation step exists for a policy to govern
+            anyhow::ensure!(
+                self.agg == AggPolicy::Mean,
+                "standalone mode has no outer aggregation; drop the `agg` override"
+            );
         }
         let wire = self.resolved_wire();
         // match by name, not by value: the supported-wires menu lists
@@ -362,6 +405,13 @@ impl RunConfig {
                 .collect::<Vec<_>>()
                 .join(", ")
         );
+        // the sign tally never reads the policy; a robust `agg` on the
+        // 1-bit wire would label the run with a defense it doesn't run
+        anyhow::ensure!(
+            self.agg == AggPolicy::Mean || wire != WireFormat::PackedSigns,
+            "agg = \"{}\" has no effect on the packed-signs majority tally; drop it",
+            self.agg.name()
+        );
         Ok(())
     }
 
@@ -376,8 +426,15 @@ impl RunConfig {
             }
             w => w.name().to_string(),
         };
+        // the historical describe() string is a cache key: the agg
+        // segment appears only when the policy deviates from the
+        // bitwise-default mean, so every pre-existing key is unchanged
+        let agg = match self.agg {
+            AggPolicy::Mean => String::new(),
+            a => format!(" agg={}", a.name()),
+        };
         format!(
-            "{} n={} tau={} T={} base={} outer={} wire={wire} comm-rounds={} mode={:?}{}",
+            "{} n={} tau={} T={} base={} outer={} wire={wire}{agg} comm-rounds={} mode={:?}{}",
             self.preset,
             self.n_workers,
             self.tau,
@@ -401,6 +458,14 @@ fn parse_mode(s: &str) -> Result<TrainMode> {
 
 fn parse_wire(s: &str) -> Result<WireFormat> {
     WireFormat::parse(s).ok_or_else(|| anyhow!("unknown wire format `{s}`"))
+}
+
+fn parse_agg(s: &str) -> Result<AggPolicy> {
+    AggPolicy::parse(s).ok_or_else(|| anyhow!("unknown aggregation policy `{s}`"))
+}
+
+fn parse_attack(s: &str) -> Result<Attack> {
+    Attack::parse(s).ok_or_else(|| anyhow!("unknown byzantine attack `{s}`"))
 }
 
 #[cfg(test)]
@@ -602,6 +667,65 @@ preset = "wan"
             &args("--mode standalone --tau 1 --drop-prob 0.1"),
         );
         assert!(standalone.is_err());
+    }
+
+    #[test]
+    fn agg_policy_parses_and_splits_the_cache_key() {
+        // default: mean, invisible in describe() — clean-path cache keys
+        // predate the knob and must not churn
+        let cfg = RunConfig::from_toml_and_args(None, &args("")).unwrap();
+        assert_eq!(cfg.agg, AggPolicy::Mean);
+        assert!(!cfg.describe().contains("agg="), "{}", cfg.describe());
+
+        // file-level selection in the [outer] table, CLI override wins
+        let text = "[outer]\nalgo = \"slowmo\"\nagg = \"trimmed\"\n";
+        let cfg = RunConfig::from_toml_and_args(Some(text), &args("")).unwrap();
+        assert_eq!(cfg.agg, AggPolicy::Trimmed);
+        assert!(cfg.describe().contains(" agg=trimmed"), "{}", cfg.describe());
+        let cfg = RunConfig::from_toml_and_args(Some(text), &args("--agg median")).unwrap();
+        assert_eq!(cfg.agg, AggPolicy::Median);
+        assert!(cfg.describe().contains(" agg=median"), "{}", cfg.describe());
+
+        // unknown names are a config error, not a silent mean
+        assert!(RunConfig::from_toml_and_args(None, &args("--agg krum")).is_err());
+        // the majority tally ignores the policy: reject rather than imply
+        let mv = "[outer]\nalgo = \"mv_signsgd\"\nagg = \"median\"\n";
+        assert!(RunConfig::from_toml_and_args(Some(mv), &args("")).is_err());
+        // standalone mode has no outer aggregation step
+        let standalone =
+            RunConfig::from_toml_and_args(None, &args("--mode standalone --tau 1 --agg trimmed"));
+        assert!(standalone.is_err());
+    }
+
+    #[test]
+    fn byzantine_knobs_parse_validate_and_split_the_cache_key() {
+        let text = "[faults]\nbyzantine_frac = 0.25\nattack = \"scale_inflate\"\n";
+        let cfg = RunConfig::from_toml_and_args(Some(text), &args("")).unwrap();
+        assert!(cfg.faults.is_active());
+        assert_eq!(cfg.faults.byzantine_frac, 0.25);
+        assert_eq!(cfg.faults.attack, Attack::ScaleInflate);
+        assert!(cfg.describe().contains("byz=0.25@scale_inflate"), "{}", cfg.describe());
+
+        // CLI beats file, and the quarantine flag composes
+        let cli = "--byzantine-frac 0.125 --attack collude_fixed --quarantine";
+        let cfg = RunConfig::from_toml_and_args(Some(text), &args(cli)).unwrap();
+        assert_eq!(cfg.faults.byzantine_frac, 0.125);
+        assert_eq!(cfg.faults.attack, Attack::ColludeFixed);
+        assert!(cfg.faults.quarantine);
+        assert!(cfg.describe().contains("quarantine"), "{}", cfg.describe());
+
+        // retry rides the drop stream: needs drop_prob to mean anything
+        let retry = "--drop-prob 0.2 --retry-limit 3";
+        let cfg = RunConfig::from_toml_and_args(None, &args(retry)).unwrap();
+        assert_eq!(cfg.faults.retry_limit, 3);
+        assert!(cfg.describe().contains("retry=3"), "{}", cfg.describe());
+        assert!(RunConfig::from_toml_and_args(None, &args("--retry-limit 3")).is_err());
+
+        // a full byzantine cohort (frac = 1) leaves no honest majority
+        assert!(RunConfig::from_toml_and_args(None, &args("--byzantine-frac 1.0")).is_err());
+        assert!(RunConfig::from_toml_and_args(None, &args("--attack nonsense")).is_err());
+        // quarantine without adversaries is a config error, not a no-op
+        assert!(RunConfig::from_toml_and_args(None, &args("--quarantine")).is_err());
     }
 
     #[test]

@@ -88,7 +88,7 @@ mod worker;
 
 pub use collectives::Backend;
 pub use votes::PackedVotes;
-pub use wire::{WireError, WireFormat, WirePayload};
+pub use wire::{AggPolicy, WireError, WireFormat, WirePayload};
 pub use worker::Worker;
 
 /// Ceiling division shared by the wire codec and the pool chunking

@@ -111,6 +111,56 @@ impl PackedVotes {
         self.bytes[coord / 8] ^= 1 << (coord % 8);
     }
 
+    /// Flip every vote in place — the `sign_flip` Byzantine attack on
+    /// the 1-bit wire. Tail bits past `len` in the last byte stay
+    /// clear, so a double flip restores the exact byte payload.
+    pub fn flip_all(&mut self) {
+        for b in &mut self.bytes {
+            *b = !*b;
+        }
+        self.mask_tail();
+    }
+
+    /// Overwrite every vote with `+1` (`positive`) or `-1` — the
+    /// `collude_fixed` Byzantine attack: colluding ranks all push the
+    /// identical direction on every coordinate.
+    pub fn set_all(&mut self, positive: bool) {
+        let fill = if positive { 0xFFu8 } else { 0x00 };
+        self.bytes.fill(fill);
+        self.mask_tail();
+    }
+
+    /// Fraction of coordinates whose vote sign matches the IEEE sign of
+    /// `reference` (a set bit is `+1`; `reference[i] = +0.0` counts as
+    /// positive, matching the codec's no-zero-symbol convention). The
+    /// reputation supervisor scores each rank's votes against the
+    /// direction the round actually applied.
+    pub fn agreement(&self, reference: &[f32]) -> f64 {
+        assert_eq!(reference.len(), self.len, "agreement: reference length");
+        if self.len == 0 {
+            return 1.0;
+        }
+        let mut matches = 0usize;
+        for (i, r) in reference.iter().enumerate() {
+            let vote_positive = (self.bytes[i / 8] >> (i % 8)) & 1 == 1;
+            if vote_positive == r.is_sign_positive() {
+                matches += 1;
+            }
+        }
+        matches as f64 / self.len as f64
+    }
+
+    /// Clear the unused bits of the last byte so whole-payload edits
+    /// keep the `pack`-produced invariant (tail bits are zero).
+    fn mask_tail(&mut self) {
+        let tail = self.len % 8;
+        if tail != 0 {
+            if let Some(last) = self.bytes.last_mut() {
+                *last &= (1u8 << tail) - 1;
+            }
+        }
+    }
+
     /// The 64 coordinates starting at `w * 64` as one little-endian
     /// word (bit `b` = coordinate `w*64 + b`), zero-padded past the
     /// end of the payload.
@@ -442,6 +492,42 @@ mod tests {
     #[should_panic(expected = "flip_bit")]
     fn flip_bit_past_the_end_panics() {
         PackedVotes::pack(&[1.0; 8]).flip_bit(8);
+    }
+
+    #[test]
+    fn flip_all_negates_every_vote_and_roundtrips_bytes() {
+        let v: Vec<f32> = (0..70).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+        let mut p = PackedVotes::pack(&v);
+        let original_bytes = p.as_bytes().to_vec();
+        p.flip_all();
+        let flipped: Vec<f32> = v.iter().map(|&x| -x).collect();
+        assert_eq!(p.unpack(), flipped);
+        // tail bits stay clear: a second flip restores the exact bytes
+        p.flip_all();
+        assert_eq!(p.as_bytes(), &original_bytes[..]);
+    }
+
+    #[test]
+    fn set_all_is_a_unanimous_vote() {
+        let mut p = PackedVotes::pack(
+            &(0..37).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect::<Vec<f32>>(),
+        );
+        p.set_all(true);
+        assert_eq!(p.unpack(), vec![1.0f32; 37]);
+        assert_eq!(p, PackedVotes::pack(&vec![1.0f32; 37]), "tail bits masked");
+        p.set_all(false);
+        assert_eq!(p.unpack(), vec![-1.0f32; 37]);
+    }
+
+    #[test]
+    fn agreement_counts_matching_signs() {
+        let p = PackedVotes::pack(&[1.0, -1.0, 1.0, -1.0]);
+        assert_eq!(p.agreement(&[2.0, -3.0, 0.5, -0.1]), 1.0);
+        assert_eq!(p.agreement(&[-2.0, 3.0, -0.5, 0.1]), 0.0);
+        assert_eq!(p.agreement(&[2.0, 3.0, 0.5, 0.1]), 0.5);
+        // +0.0 is positive on the zero-symbol-free wire
+        assert_eq!(p.agreement(&[0.0, -1.0, 1.0, -1.0]), 1.0);
+        assert_eq!(PackedVotes::empty().agreement(&[]), 1.0);
     }
 
     #[test]

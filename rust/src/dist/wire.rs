@@ -64,6 +64,37 @@
 //! *survived* with bounded error — exactly the distinction between
 //! detectable and undetectable damage on a real wire.
 //!
+//! # Byzantine ranks and robust aggregation (`agg`)
+//!
+//! An adversarial rank ([`crate::comm::faults::Attack`]) sends
+//! payloads that are *finite but wrong* — every byte a valid encoding,
+//! so no [`WirePayload::check_finite`] gate can reject them; the
+//! aggregation itself must defend. The defense is a pluggable
+//! [`AggPolicy`] (`[outer] agg = "mean" | "trimmed" | "median"`),
+//! applied by every dense-exchange outer optimizer through
+//! [`WirePayload::aggregate_end_into`] and inside
+//! [`WirePayload::aggregate_group_heads`] so hierarchical group heads
+//! defend locally before the top-level exchange. Attack × defense
+//! breakdown points, for `n` surviving payloads of which `f` are
+//! adversarial and trim depth `k` = [`AggPolicy::trim_depth`]:
+//!
+//! | attack | on the wire | `mean` | `trimmed` | `median` | MV tally |
+//! |---|---|---|---|---|---|
+//! | `sign_flip` | local diff negated: dense end reflected around the round start, q8/q8pt scales negated, top-k values negated, sign votes flipped | poisoned by f = 1 | f ≤ k | f < n/2 | f < n/2 on unanimous honest coordinates |
+//! | `scale_inflate` | diff ×64: dense end stretched from the start, scales / sparse values inflated | poisoned by f = 1 | f ≤ k | f < n/2 | immune — no magnitude on the 1-bit wire |
+//! | `collude_fixed` | diff ≡ +1 in every transmitted coordinate, identical across colluders | poisoned by f = 1 | f ≤ k | f < n/2 | f < n/2 on unanimous honest coordinates |
+//! | `flaky` | honest or `sign_flip`, fair coin per adversary per round | poisoned by f = 1 | f ≤ k | f < n/2 | f < n/2 |
+//!
+//! "Poisoned by f = 1" is literal: a single ×64-inflated payload
+//! shifts the mean by ~64/n of a full local step per coordinate, every
+//! round, which is the breakdown the robust-aggregation experiment
+//! (`examples/robust_agg.rs`) pins. The packed sign tally ignores the
+//! policy knob — the majority vote IS the robust aggregator, which is
+//! the source paper's case for MV-sto-signSGD under unreliable
+//! workers. The per-rank reputation/quarantine supervisor layered on
+//! top of these policies lives in the trainer; its lifecycle is
+//! documented at [`crate::comm::faults`].
+//!
 //! # The layout contract (`q8pt`)
 //!
 //! The per-message `q8` format pays one quantization scale for the
@@ -106,6 +137,7 @@ use std::sync::Arc;
 use super::codec;
 use super::collectives;
 use super::votes::{self, PackedVotes};
+use crate::comm::faults::Attack;
 use crate::comm::{CommModel, Topology};
 use crate::runtime::ParamLayout;
 use crate::util::rng::Rng;
@@ -167,6 +199,96 @@ impl fmt::Display for WireError {
 }
 
 impl std::error::Error for WireError {}
+
+/// Server-side aggregation policy over a round's surviving payloads
+/// (`[outer] agg = "mean" | "trimmed" | "median"`).
+///
+/// `Mean` is the historical path: [`WirePayload::aggregate_end_into`]
+/// delegates to [`WirePayload::mean_end_into`] so clean-path
+/// trajectories stay bitwise unchanged. The robust policies defend the
+/// aggregate against finite-but-wrong payloads from Byzantine ranks
+/// (see the module docs for the attack × defense breakdown table):
+/// both decode every survivor to an f64 end vector and combine
+/// coordinate-wise over the sorted per-coordinate values, so the
+/// result is permutation-invariant in the survivor order. Packed sign
+/// votes ignore the policy — the majority tally IS the robust
+/// aggregator.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AggPolicy {
+    /// Plain mean over survivors — maximum statistical efficiency, zero
+    /// breakdown point (one adversary owns the aggregate).
+    #[default]
+    Mean,
+    /// Coordinate-wise trimmed mean: drop the [`AggPolicy::trim_depth`]
+    /// smallest and largest values, mean the rest in f64. Tolerates up
+    /// to `trim_depth(n)` arbitrary payloads per coordinate.
+    Trimmed,
+    /// Coordinate-wise median (even counts average the two middles in
+    /// f64). Breakdown point ⌈n/2⌉ − 1, the best any
+    /// permutation-invariant aggregator can do.
+    Median,
+}
+
+impl AggPolicy {
+    /// Parse a config-file / CLI name.
+    pub fn parse(s: &str) -> Option<AggPolicy> {
+        match s {
+            "mean" => Some(AggPolicy::Mean),
+            "trimmed" | "trimmed_mean" => Some(AggPolicy::Trimmed),
+            "median" => Some(AggPolicy::Median),
+            _ => None,
+        }
+    }
+
+    /// Canonical config-file name (round-trips through
+    /// [`AggPolicy::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            AggPolicy::Mean => "mean",
+            AggPolicy::Trimmed => "trimmed",
+            AggPolicy::Median => "median",
+        }
+    }
+
+    /// Trim depth `k` of the trimmed mean over `n` survivors:
+    /// `max(1, n/4)`, clamped so the kept slice stays non-empty
+    /// (`2k < n`), and zero for `n ≤ 2` — with two payloads there is no
+    /// third vote to out an outlier with, so trimming would just throw
+    /// information away.
+    pub fn trim_depth(n: usize) -> usize {
+        if n <= 2 {
+            return 0;
+        }
+        let mut k = (n / 4).max(1);
+        while 2 * k >= n {
+            k -= 1;
+        }
+        k
+    }
+
+    /// Combine one coordinate's decoded values across survivors.
+    /// Sorts `vals` in place (f64 total order); the result depends only
+    /// on the multiset, never the survivor order.
+    fn combine(self, vals: &mut [f64]) -> f64 {
+        vals.sort_by(|a, b| a.total_cmp(b));
+        let n = vals.len();
+        match self {
+            AggPolicy::Mean => vals.iter().sum::<f64>() / n as f64,
+            AggPolicy::Trimmed => {
+                let k = Self::trim_depth(n);
+                let kept = &vals[k..n - k];
+                kept.iter().sum::<f64>() / kept.len() as f64
+            }
+            AggPolicy::Median => {
+                if n % 2 == 1 {
+                    vals[n / 2]
+                } else {
+                    0.5 * (vals[n / 2 - 1] + vals[n / 2])
+                }
+            }
+        }
+    }
+}
 
 /// Construction-time name of a [`WirePayload`] variant: what a config
 /// file selects (`wire = "dense" | "packed_signs" | "q8" | "q8pt" |
@@ -804,6 +926,126 @@ impl WirePayload {
         Ok(())
     }
 
+    /// Policy-selected reconstruction of the round's aggregate end
+    /// point from the gathered payloads, into `out`.
+    ///
+    /// [`AggPolicy::Mean`] delegates to [`WirePayload::mean_end_into`]
+    /// — same function, same arithmetic, bitwise-identical results —
+    /// so a `agg = "mean"` run cannot drift from the historical
+    /// trajectories. The robust policies decode every survivor to a
+    /// dense f64 end vector first (`start − diff` for the compressed
+    /// formats; untransmitted top-k coordinates decode to the round
+    /// start, i.e. an implicit zero diff, which is exactly the trimmed
+    /// index-union merge — an adversary cannot hide an outlier by
+    /// *omitting* coordinates) and then combine coordinate-wise over
+    /// the sorted values ([`AggPolicy::combine`]).
+    ///
+    /// # Errors / panics
+    ///
+    /// Exactly [`WirePayload::mean_end_into`]'s: non-finite scales,
+    /// values, or out-of-range sparse indices are typed errors checked
+    /// before any accumulation (`out` is untouched on error); packed
+    /// sign votes, mixed formats/layouts, and length drift panic.
+    pub fn aggregate_end_into(
+        agg: AggPolicy,
+        payloads: &[WirePayload],
+        start: &[f32],
+        out: &mut [f32],
+    ) -> Result<(), WireError> {
+        if agg == AggPolicy::Mean {
+            return Self::mean_end_into(payloads, start, out);
+        }
+        assert!(!payloads.is_empty(), "exchange over zero workers");
+        for (i, p) in payloads.iter().enumerate() {
+            assert_eq!(p.format(), payloads[0].format(), "worker {i}: mixed wire formats");
+            assert_eq!(
+                p.len(),
+                out.len(),
+                "worker {i}: payload length {} != output {}",
+                p.len(),
+                out.len()
+            );
+        }
+        let ends = Self::decode_ends_f64(payloads, start, out.len())?;
+        let mut col = vec![0.0f64; ends.len()];
+        for (i, o) in out.iter_mut().enumerate() {
+            for (c, e) in col.iter_mut().zip(&ends) {
+                *c = e[i];
+            }
+            *o = agg.combine(&mut col) as f32;
+        }
+        Ok(())
+    }
+
+    /// Decode every payload to a dense f64 end vector for the robust
+    /// aggregation policies, running the same validation the mean path
+    /// runs (scale finiteness, layout consistency, sparse bounds)
+    /// before any value is produced.
+    fn decode_ends_f64(
+        payloads: &[WirePayload],
+        start: &[f32],
+        len: usize,
+    ) -> Result<Vec<Vec<f64>>, WireError> {
+        for (i, p) in payloads.iter().enumerate() {
+            if let Some(scales) = p.scales() {
+                for (si, s) in scales.iter().enumerate() {
+                    if !s.is_finite() {
+                        return Err(WireError::NonFiniteScale { worker: i, segment: si });
+                    }
+                }
+            }
+        }
+        if !matches!(payloads[0], WirePayload::DenseF32(_)) {
+            assert_eq!(start.len(), len, "start length {} != output", start.len());
+        }
+        if let Some(layout) = payloads[0].layout() {
+            assert_eq!(
+                layout.param_count(),
+                len,
+                "payload layout tiles {} of {} coordinates",
+                layout.param_count(),
+                len
+            );
+            for (i, p) in payloads.iter().enumerate() {
+                assert_eq!(p.layout(), Some(layout), "worker {i}: mixed parameter layouts");
+            }
+        }
+        let mut ends = Vec::with_capacity(payloads.len());
+        for (i, p) in payloads.iter().enumerate() {
+            let end: Vec<f64> = match p {
+                WirePayload::DenseF32(v) => v.iter().map(|&e| e as f64).collect(),
+                WirePayload::QuantizedI8 { scale, bytes } => bytes
+                    .iter()
+                    .zip(start)
+                    .map(|(&b, &s)| s as f64 - codec::dequantize_i8(b, *scale) as f64)
+                    .collect(),
+                WirePayload::QuantizedI8PerTensor { layout, scales, bytes } => {
+                    let mut end = vec![0.0f64; len];
+                    for (si, e) in layout.entries().iter().enumerate() {
+                        for j in e.offset..e.offset + e.numel() {
+                            end[j] = start[j] as f64
+                                - codec::dequantize_i8(bytes[j], scales[si]) as f64;
+                        }
+                    }
+                    end
+                }
+                WirePayload::TopK { indices, values, .. } => {
+                    p.check_finite(i)?;
+                    let mut end: Vec<f64> = start.iter().map(|&s| s as f64).collect();
+                    for (&ix, &v) in indices.iter().zip(values) {
+                        end[ix as usize] -= v as f64;
+                    }
+                    end
+                }
+                WirePayload::PackedSigns(_) => {
+                    panic!("packed sign votes have no robust end point; run the majority tally")
+                }
+            };
+            ends.push(end);
+        }
+        Ok(ends)
+    }
+
     /// Validate that this payload carries no detectably damaged data:
     /// scales for the quantized formats (O(S)), every coordinate for
     /// dense (O(P) — only worth paying when faults are in play), values
@@ -930,6 +1172,105 @@ impl WirePayload {
         }
     }
 
+    /// Rewrite this payload as a Byzantine adversary would, in place —
+    /// the wire half of the adversary model
+    /// ([`crate::comm::faults::FaultPlan::byzantine_frac`]). Unlike
+    /// [`WirePayload::corrupt`], the result is always a *finite, valid*
+    /// encoding: it passes [`WirePayload::check_finite`] by
+    /// construction, so only a robust [`AggPolicy`] (or the sign
+    /// tally's built-in majority) stands between it and the aggregate.
+    /// Deterministic — no RNG; the one randomized attack
+    /// ([`Attack::Flaky`]) resolves its per-round coin on the trainer's
+    /// fault stream *before* this call, to honest (no call) or
+    /// [`Attack::SignFlip`].
+    ///
+    /// Per attack (`diff` is the transmitted local difference
+    /// `start − end`):
+    ///
+    /// * `SignFlip` — negate the diff: dense ends reflect around
+    ///   `start` (`e ↦ 2·start − e`), q8/q8pt negate their scale(s),
+    ///   top-k negates its transmitted values, sign votes flip every
+    ///   bit.
+    /// * `ScaleInflate` — inflate the diff ×64: dense ends stretch from
+    ///   `start`, scales and sparse values multiply. A no-op on packed
+    ///   signs — the 1-bit wire carries no magnitude to inflate, which
+    ///   is exactly the tally's immunity.
+    /// * `ColludeFixed` — every colluder claims the identical
+    ///   `diff ≡ +1`: dense `e = start − 1`, q8/q8pt bytes 127 at scale
+    ///   1/127, top-k values pinned to +1 (at the rank's own indices),
+    ///   sign votes unanimously +1.
+    ///
+    /// # Panics
+    ///
+    /// On [`Attack::Flaky`] (resolve the coin first) and on a
+    /// dense-payload length drifting from `start` — API misuse.
+    pub fn byzantine(&mut self, attack: Attack, start: &[f32]) {
+        const INFLATE: f32 = 64.0;
+        if let WirePayload::DenseF32(v) = self {
+            assert_eq!(v.len(), start.len(), "dense payload length {} != start", v.len());
+        }
+        match attack {
+            Attack::SignFlip => match self {
+                WirePayload::DenseF32(v) => {
+                    for (e, &s) in v.iter_mut().zip(start) {
+                        *e = 2.0 * s - *e;
+                    }
+                }
+                WirePayload::PackedSigns(p) => p.flip_all(),
+                WirePayload::QuantizedI8 { scale, .. } => *scale = -*scale,
+                WirePayload::QuantizedI8PerTensor { scales, .. } => {
+                    for s in scales {
+                        *s = -*s;
+                    }
+                }
+                WirePayload::TopK { values, .. } => {
+                    for v in values {
+                        *v = -*v;
+                    }
+                }
+            },
+            Attack::ScaleInflate => match self {
+                WirePayload::DenseF32(v) => {
+                    for (e, &s) in v.iter_mut().zip(start) {
+                        *e = s + INFLATE * (*e - s);
+                    }
+                }
+                WirePayload::PackedSigns(_) => {}
+                WirePayload::QuantizedI8 { scale, .. } => *scale *= INFLATE,
+                WirePayload::QuantizedI8PerTensor { scales, .. } => {
+                    for s in scales {
+                        *s *= INFLATE;
+                    }
+                }
+                WirePayload::TopK { values, .. } => {
+                    for v in values {
+                        *v *= INFLATE;
+                    }
+                }
+            },
+            Attack::ColludeFixed => match self {
+                WirePayload::DenseF32(v) => {
+                    for (e, &s) in v.iter_mut().zip(start) {
+                        *e = s - 1.0;
+                    }
+                }
+                WirePayload::PackedSigns(p) => p.set_all(true),
+                WirePayload::QuantizedI8 { scale, bytes } => {
+                    *scale = 1.0 / 127.0;
+                    bytes.fill(127);
+                }
+                WirePayload::QuantizedI8PerTensor { scales, bytes, .. } => {
+                    scales.fill(1.0 / 127.0);
+                    bytes.fill(127);
+                }
+                WirePayload::TopK { values, .. } => values.fill(1.0),
+            },
+            Attack::Flaky => {
+                panic!("flaky resolves on the fault stream to honest or sign_flip before the wire")
+            }
+        }
+    }
+
     /// The hierarchical exchange's data path: split the round's
     /// payloads into `groups` contiguous groups of ⌈len/groups⌉ (the
     /// same split [`crate::comm::CommModel::hierarchical_time`] bills),
@@ -963,6 +1304,15 @@ impl WirePayload {
     ///   (the head has no residual buffer of its own); that is the
     ///   hierarchy's bounded approximation for sparse payloads.
     ///
+    /// Under a robust `agg` policy ([`AggPolicy::Trimmed`] /
+    /// [`AggPolicy::Median`]) each head replaces its member-order mean
+    /// with the coordinate-wise robust combine over its own members
+    /// (implicit zeros for top-k coordinates a member did not
+    /// transmit), then re-encodes as before — so a Byzantine member is
+    /// voted out *inside its group*, before its damage can reach the
+    /// top-level exchange. [`AggPolicy::Mean`] keeps the historical
+    /// arithmetic bitwise. Sign-vote heads tally under every policy.
+    ///
     /// # Panics
     ///
     /// On dense payloads (ring-reducible — the hierarchy is never
@@ -970,7 +1320,11 @@ impl WirePayload {
     /// `groups == 0`: misuse, not wire damage. Callers must
     /// [`check_finite`](Self::check_finite) survivors first; a NaN
     /// scale here would poison the head's re-quantization.
-    pub fn aggregate_group_heads(payloads: &[WirePayload], groups: usize) -> Vec<WirePayload> {
+    pub fn aggregate_group_heads(
+        payloads: &[WirePayload],
+        groups: usize,
+        agg: AggPolicy,
+    ) -> Vec<WirePayload> {
         assert!(!payloads.is_empty(), "hierarchical aggregation over zero payloads");
         assert!(groups > 0, "hierarchical aggregation needs at least one group");
         let format = payloads[0].format();
@@ -986,7 +1340,7 @@ impl WirePayload {
         let m = super::div_up(payloads.len(), groups.min(payloads.len()));
         let mut out = Vec::with_capacity(payloads.len());
         for chunk in payloads.chunks(m) {
-            let head = Self::aggregate_head(chunk, len);
+            let head = Self::aggregate_head(chunk, len, agg);
             for _ in 0..chunk.len() - 1 {
                 out.push(head.clone());
             }
@@ -996,20 +1350,36 @@ impl WirePayload {
     }
 
     /// One group head's partial aggregate over its members' payloads.
-    fn aggregate_head(chunk: &[WirePayload], len: usize) -> WirePayload {
+    fn aggregate_head(chunk: &[WirePayload], len: usize, agg: AggPolicy) -> WirePayload {
         let inv = 1.0f64 / chunk.len() as f64;
         match &chunk[0] {
             WirePayload::QuantizedI8 { .. } => {
-                let mut acc = vec![0.0f64; len];
-                for p in chunk {
+                let q8_at = |p: &WirePayload, i: usize| {
                     let WirePayload::QuantizedI8 { scale, bytes } = p else {
                         unreachable!("format checked by the caller")
                     };
-                    for (a, &b) in acc.iter_mut().zip(bytes) {
-                        *a += codec::dequantize_i8(b, *scale) as f64;
+                    codec::dequantize_i8(bytes[i], *scale) as f64
+                };
+                let mut mean = vec![0.0f32; len];
+                if agg == AggPolicy::Mean {
+                    let mut acc = vec![0.0f64; len];
+                    for p in chunk {
+                        for (i, a) in acc.iter_mut().enumerate() {
+                            *a += q8_at(p, i);
+                        }
+                    }
+                    for (m, a) in mean.iter_mut().zip(&acc) {
+                        *m = (a * inv) as f32;
+                    }
+                } else {
+                    let mut col = vec![0.0f64; chunk.len()];
+                    for (i, m) in mean.iter_mut().enumerate() {
+                        for (c, p) in col.iter_mut().zip(chunk) {
+                            *c = q8_at(p, i);
+                        }
+                        *m = agg.combine(&mut col) as f32;
                     }
                 }
-                let mean: Vec<f32> = acc.iter().map(|a| (a * inv) as f32).collect();
                 let mut bytes = vec![0u8; len];
                 let scale = codec::quantize_slice(&mean, &mut bytes);
                 WirePayload::QuantizedI8 { scale, bytes }
@@ -1023,18 +1393,36 @@ impl WirePayload {
                         "worker {i}: mixed parameter layouts"
                     );
                 }
-                let mut acc = vec![0.0f64; len];
-                for p in chunk {
+                let q8pt_at = |p: &WirePayload, si: usize, i: usize| {
                     let WirePayload::QuantizedI8PerTensor { scales, bytes, .. } = p else {
                         unreachable!("format checked by the caller")
                     };
+                    codec::dequantize_i8(bytes[i], scales[si]) as f64
+                };
+                let mut mean = vec![0.0f32; len];
+                if agg == AggPolicy::Mean {
+                    let mut acc = vec![0.0f64; len];
+                    for p in chunk {
+                        for (si, e) in layout.entries().iter().enumerate() {
+                            for i in e.offset..e.offset + e.numel() {
+                                acc[i] += q8pt_at(p, si, i);
+                            }
+                        }
+                    }
+                    for (m, a) in mean.iter_mut().zip(&acc) {
+                        *m = (a * inv) as f32;
+                    }
+                } else {
+                    let mut col = vec![0.0f64; chunk.len()];
                     for (si, e) in layout.entries().iter().enumerate() {
                         for i in e.offset..e.offset + e.numel() {
-                            acc[i] += codec::dequantize_i8(bytes[i], scales[si]) as f64;
+                            for (c, p) in col.iter_mut().zip(chunk) {
+                                *c = q8pt_at(p, si, i);
+                            }
+                            mean[i] = agg.combine(&mut col) as f32;
                         }
                     }
                 }
-                let mean: Vec<f32> = acc.iter().map(|a| (a * inv) as f32).collect();
                 let mut bytes = vec![0u8; len];
                 let mut scales = vec![0.0f32; layout.len()];
                 for (e, s) in layout.entries().iter().zip(scales.iter_mut()) {
@@ -1064,14 +1452,36 @@ impl WirePayload {
                 }
                 // Index-union accumulate in member order: f64 keeps the
                 // mean deterministic and exact enough that re-truncation
-                // order can't flip on rounding noise.
-                let mut acc = std::collections::BTreeMap::<u32, f64>::new();
-                for p in chunk {
-                    let WirePayload::TopK { indices, values, .. } = p else {
-                        unreachable!("format checked by the caller")
-                    };
-                    for (&ix, &v) in indices.iter().zip(values) {
-                        *acc.entry(ix).or_insert(0.0) += v as f64;
+                // order can't flip on rounding noise. Robust policies
+                // keep one column per member instead (implicit zero for
+                // coordinates a member did not transmit) and combine
+                // per union index.
+                let mut combined = std::collections::BTreeMap::<u32, f64>::new();
+                if agg == AggPolicy::Mean {
+                    for p in chunk {
+                        let WirePayload::TopK { indices, values, .. } = p else {
+                            unreachable!("format checked by the caller")
+                        };
+                        for (&ix, &v) in indices.iter().zip(values) {
+                            *combined.entry(ix).or_insert(0.0) += v as f64;
+                        }
+                    }
+                    for a in combined.values_mut() {
+                        *a *= inv;
+                    }
+                } else {
+                    let mut cols = std::collections::BTreeMap::<u32, Vec<f64>>::new();
+                    for (mi, p) in chunk.iter().enumerate() {
+                        let WirePayload::TopK { indices, values, .. } = p else {
+                            unreachable!("format checked by the caller")
+                        };
+                        for (&ix, &v) in indices.iter().zip(values) {
+                            cols.entry(ix).or_insert_with(|| vec![0.0; chunk.len()])[mi] +=
+                                v as f64;
+                        }
+                    }
+                    for (ix, mut vals) in cols {
+                        combined.insert(ix, agg.combine(&mut vals));
                     }
                 }
                 let format = WireFormat::TopK { frac_ppm, decay_ppm };
@@ -1084,7 +1494,7 @@ impl WirePayload {
                     let k = codec::topk_budget(ent.numel(), frac_ppm);
                     let (lo, hi) = (ent.offset as u32, (ent.offset + ent.numel()) as u32);
                     let mut seg: Vec<(u32, f64)> =
-                        acc.range(lo..hi).map(|(&ix, &a)| (ix, a * inv)).collect();
+                        combined.range(lo..hi).map(|(&ix, &a)| (ix, a)).collect();
                     seg.sort_by(|a, b| b.1.abs().total_cmp(&a.1.abs()).then(a.0.cmp(&b.0)));
                     seg.truncate(k);
                     seg.sort_unstable_by_key(|&(ix, _)| ix);
@@ -1643,7 +2053,7 @@ mod tests {
                 p
             })
             .collect();
-        let heads = WirePayload::aggregate_group_heads(&payloads, 3);
+        let heads = WirePayload::aggregate_group_heads(&payloads, 3, AggPolicy::Mean);
         assert_eq!(heads.len(), 7);
         assert_eq!(heads[0], heads[1]);
         assert_eq!(heads[1], heads[2]);
@@ -1671,7 +2081,7 @@ mod tests {
                 .collect();
             let mut flat = vec![0.0f32; 4];
             WirePayload::mean_end_into(&payloads, &start, &mut flat).unwrap();
-            let heads = WirePayload::aggregate_group_heads(&payloads, 4);
+            let heads = WirePayload::aggregate_group_heads(&payloads, 4, AggPolicy::Mean);
             let mut hier = vec![0.0f32; 4];
             WirePayload::mean_end_into(&heads, &start, &mut hier).unwrap();
             for (j, (h, f)) in hier.iter().zip(&flat).enumerate() {
@@ -1697,7 +2107,7 @@ mod tests {
                 p
             })
             .collect();
-        let heads = WirePayload::aggregate_group_heads(&payloads, 1);
+        let heads = WirePayload::aggregate_group_heads(&payloads, 1, AggPolicy::Mean);
         assert_eq!(heads.len(), 2);
         assert_eq!(heads[0], heads[1]);
         // billing contract: the head costs exactly what a member does
@@ -1725,7 +2135,8 @@ mod tests {
             indices.copy_from_slice(&[0, 1, 4, 4]);
             values.copy_from_slice(&[1.0, -2.0, 3.0, 3.0]);
         }
-        let heads = WirePayload::aggregate_group_heads(std::slice::from_ref(&p), 1);
+        let heads =
+            WirePayload::aggregate_group_heads(std::slice::from_ref(&p), 1, AggPolicy::Mean);
         assert_eq!(heads[0].wire_bytes(), p.wire_bytes());
         let WirePayload::TopK { indices, values, .. } = &heads[0] else { unreachable!() };
         // the duplicates sum in the union; the missing slot pads with a
@@ -1755,7 +2166,7 @@ mod tests {
             .collect();
         let mut flat = vec![0.0f32; 4];
         WirePayload::mean_end_into(&payloads, &start, &mut flat).unwrap();
-        let heads = WirePayload::aggregate_group_heads(&payloads, 4);
+        let heads = WirePayload::aggregate_group_heads(&payloads, 4, AggPolicy::Mean);
         let mut hier = vec![0.0f32; 4];
         WirePayload::mean_end_into(&heads, &start, &mut hier).unwrap();
         for (j, (h, f)) in hier.iter().zip(&flat).enumerate() {
@@ -1785,7 +2196,7 @@ mod tests {
                 p
             })
             .collect();
-        let heads = WirePayload::aggregate_group_heads(&payloads, 2);
+        let heads = WirePayload::aggregate_group_heads(&payloads, 2, AggPolicy::Mean);
         assert_eq!(heads.len(), 6);
         let mut tally = vec![0.0f32; 2];
         let packed: Vec<&PackedVotes> =
@@ -1814,7 +2225,8 @@ mod tests {
             t
         };
         let flat = tally_of(&payloads);
-        let hier = tally_of(&WirePayload::aggregate_group_heads(&payloads, groups));
+        let hier =
+            tally_of(&WirePayload::aggregate_group_heads(&payloads, groups, AggPolicy::Mean));
         (flat, hier)
     }
 
@@ -1859,6 +2271,258 @@ mod tests {
     #[should_panic(expected = "ring-reduce")]
     fn dense_payloads_refuse_hierarchical_aggregation() {
         let payloads = vec![WirePayload::with_len(WireFormat::DenseF32, 4); 4];
-        let _ = WirePayload::aggregate_group_heads(&payloads, 2);
+        let _ = WirePayload::aggregate_group_heads(&payloads, 2, AggPolicy::Mean);
+    }
+
+    #[test]
+    fn agg_policy_parse_name_and_trim_depth() {
+        for agg in [AggPolicy::Mean, AggPolicy::Trimmed, AggPolicy::Median] {
+            assert_eq!(AggPolicy::parse(agg.name()), Some(agg));
+        }
+        assert_eq!(AggPolicy::parse("trimmed_mean"), Some(AggPolicy::Trimmed));
+        assert_eq!(AggPolicy::parse("krum"), None);
+        assert_eq!(AggPolicy::default(), AggPolicy::Mean);
+        // n ≤ 2 never trims; above that k = max(1, n/4) with 2k < n
+        assert_eq!(AggPolicy::trim_depth(1), 0);
+        assert_eq!(AggPolicy::trim_depth(2), 0);
+        assert_eq!(AggPolicy::trim_depth(3), 1);
+        assert_eq!(AggPolicy::trim_depth(4), 1);
+        assert_eq!(AggPolicy::trim_depth(8), 2);
+        assert_eq!(AggPolicy::trim_depth(16), 4);
+        for n in 3..64 {
+            let k = AggPolicy::trim_depth(n);
+            assert!(k >= 1 && 2 * k < n, "n={n} k={k}");
+        }
+    }
+
+    /// Round-packed payloads for every dense-exchange format, one per
+    /// `end` vector, plus the layout the per-tensor formats carry.
+    fn packed_fleet(format: WireFormat, start: &[f32], ends: &[Vec<f32>]) -> Vec<WirePayload> {
+        let layout = two_segment_layout(start.len() / 2, start.len() - start.len() / 2);
+        ends.iter()
+            .map(|e| {
+                let mut p = WirePayload::with_layout(format, &layout);
+                p.pack_end(start, e);
+                p
+            })
+            .collect()
+    }
+
+    #[test]
+    fn mean_policy_is_the_mean_path_bitwise() {
+        let start = vec![1.0f32, -0.5, 0.25, 2.0, 0.0, -1.0];
+        let ends: Vec<Vec<f32>> = (0..5)
+            .map(|w| start.iter().map(|s| s - 0.01 * (w as f32 - 2.0)).collect())
+            .collect();
+        let full = WireFormat::TopK { frac_ppm: 1_000_000, decay_ppm: 0 };
+        for format in
+            [WireFormat::DenseF32, WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor, full]
+        {
+            let payloads = packed_fleet(format, &start, &ends);
+            let mut mean = vec![0.0f32; 6];
+            WirePayload::mean_end_into(&payloads, &start, &mut mean).unwrap();
+            let mut agg = vec![0.0f32; 6];
+            WirePayload::aggregate_end_into(AggPolicy::Mean, &payloads, &start, &mut agg)
+                .unwrap();
+            for (a, m) in agg.iter().zip(&mean) {
+                assert_eq!(a.to_bits(), m.to_bits(), "{}", format.name());
+            }
+        }
+    }
+
+    #[test]
+    fn byzantine_payloads_stay_finite_in_every_format() {
+        // the adversary model's defining property: nothing it sends is
+        // rejectable by the finiteness gate — only robust aggregation
+        // (or the tally) stands between the attack and the aggregate
+        let start = vec![1.0f32, -0.5, 0.25, 2.0];
+        let end = vec![0.9f32, -0.4, 0.35, 1.9];
+        for format in ALL_FORMATS {
+            for attack in [Attack::SignFlip, Attack::ScaleInflate, Attack::ColludeFixed] {
+                let mut p = WirePayload::with_len(format, 4);
+                if format == WireFormat::PackedSigns {
+                    p.pack_sign_votes(&[1.0, -1.0, 1.0, -1.0]);
+                } else {
+                    p.pack_end(&start, &end);
+                }
+                let bytes = p.wire_bytes();
+                p.byzantine(attack, &start);
+                assert_eq!(p.check_finite(0), Ok(()), "{} {}", format.name(), attack.name());
+                assert_eq!(p.wire_bytes(), bytes, "{} {}", format.name(), attack.name());
+            }
+        }
+    }
+
+    #[test]
+    fn sign_flip_negates_and_collude_pins_the_decoded_diff() {
+        let start = vec![1.0f32, -0.5, 0.25, 2.0];
+        let end = vec![0.9f32, -0.4, 0.35, 1.9]; // diff = ±0.1 exactly
+        let full = WireFormat::TopK { frac_ppm: 1_000_000, decay_ppm: 0 };
+        for format in
+            [WireFormat::DenseF32, WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor, full]
+        {
+            let mut p = packed_fleet(format, &start, std::slice::from_ref(&end)).remove(0);
+            p.byzantine(Attack::SignFlip, &start);
+            let mut out = vec![0.0f32; 4];
+            WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut out).unwrap();
+            // end reflects around start: decoded diff is the negation
+            for (j, (o, (&s, &e))) in out.iter().zip(start.iter().zip(&end)).enumerate() {
+                assert!((o - (2.0 * s - e)).abs() < 2e-3, "{} coord {j}", format.name());
+            }
+            let mut p = packed_fleet(format, &start, std::slice::from_ref(&end)).remove(0);
+            p.byzantine(Attack::ColludeFixed, &start);
+            WirePayload::mean_end_into(std::slice::from_ref(&p), &start, &mut out).unwrap();
+            // diff ≡ +1 where transmitted (full-budget topk covers all)
+            for (j, (o, &s)) in out.iter().zip(&start).enumerate() {
+                assert!((o - (s - 1.0)).abs() < 2e-2, "{} coord {j}: {o}", format.name());
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_mean_recovers_where_plain_mean_is_poisoned() {
+        // satellite pin: n = 8, trim depth 2; f = 2 ×64 scale-inflators
+        // sit inside the trim and the trimmed mean lands on the honest
+        // mean, while the plain mean is pulled ≥ 2x the honest diff
+        let n = 8;
+        let start = vec![1.0f32, -0.5, 0.25, 2.0, 0.0, -1.0];
+        let ends: Vec<Vec<f32>> = (0..n)
+            .map(|w| start.iter().map(|s| s - 0.01 * (w as f32 + 1.0)).collect())
+            .collect();
+        let full = WireFormat::TopK { frac_ppm: 1_000_000, decay_ppm: 0 };
+        for format in
+            [WireFormat::DenseF32, WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor, full]
+        {
+            let mut payloads = packed_fleet(format, &start, &ends);
+            let mut honest = vec![0.0f32; 6];
+            WirePayload::mean_end_into(&payloads, &start, &mut honest).unwrap();
+            payloads[1].byzantine(Attack::ScaleInflate, &start);
+            payloads[5].byzantine(Attack::ScaleInflate, &start);
+            let mut poisoned = vec![0.0f32; 6];
+            WirePayload::mean_end_into(&payloads, &start, &mut poisoned).unwrap();
+            let mut trimmed = vec![0.0f32; 6];
+            WirePayload::aggregate_end_into(AggPolicy::Trimmed, &payloads, &start, &mut trimmed)
+                .unwrap();
+            let mut median = vec![0.0f32; 6];
+            WirePayload::aggregate_end_into(AggPolicy::Median, &payloads, &start, &mut median)
+                .unwrap();
+            for j in 0..6 {
+                let honest_diff = (start[j] - honest[j]).abs();
+                let poisoned_diff = (start[j] - poisoned[j]).abs();
+                assert!(
+                    poisoned_diff > 2.0 * honest_diff,
+                    "{} coord {j}: mean must be poisoned ({poisoned_diff} vs {honest_diff})",
+                    format.name()
+                );
+                // one-sided contamination biases a trimmed mean within
+                // the honest spread (the trim clips the clean tail
+                // too); both robust aggregates land well inside it
+                assert!(
+                    (trimmed[j] - honest[j]).abs() < 0.5 * honest_diff + 2e-3,
+                    "{} coord {j}: trimmed {} vs honest {}",
+                    format.name(),
+                    trimmed[j],
+                    honest[j]
+                );
+                assert!(
+                    (median[j] - honest[j]).abs() < 0.5 * honest_diff + 2e-3,
+                    "{} coord {j}: median {} vs honest {}",
+                    format.name(),
+                    median[j],
+                    honest[j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn majority_tally_is_bitwise_unchanged_under_minority_sign_flippers() {
+        // satellite pin: f < n/2 flipped copies of a unanimous honest
+        // vote leave every tally coordinate exactly where it was
+        let n = 9;
+        let mut rng = Rng::new(88);
+        let honest: Vec<f32> =
+            (0..67).map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 }).collect();
+        let mut payloads: Vec<WirePayload> = (0..n)
+            .map(|_| {
+                let mut p = WirePayload::with_len(WireFormat::PackedSigns, honest.len());
+                p.pack_sign_votes(&honest);
+                p
+            })
+            .collect();
+        let tally_of = |ps: &[WirePayload]| {
+            let packed: Vec<&PackedVotes> =
+                ps.iter().map(|p| p.as_packed_signs().unwrap()).collect();
+            let mut t = vec![0.0f32; honest.len()];
+            votes::majority_vote_packed(&packed, &mut t);
+            t
+        };
+        let clean = tally_of(&payloads);
+        assert_eq!(clean, honest);
+        for f in 1..=4 {
+            payloads[f - 1].byzantine(Attack::SignFlip, &[]);
+            let attacked = tally_of(&payloads);
+            for (j, (a, c)) in attacked.iter().zip(&clean).enumerate() {
+                assert_eq!(a.to_bits(), c.to_bits(), "f={f} coord {j}");
+            }
+        }
+        // and the breakdown is sharp: the 5th flipper owns the tally
+        payloads[4].byzantine(Attack::SignFlip, &[]);
+        let broken = tally_of(&payloads);
+        assert!(broken.iter().zip(&clean).any(|(b, c)| b != c));
+    }
+
+    #[test]
+    fn robust_group_heads_defend_inside_the_group() {
+        // one ×64 inflator among 4 group members: the trimmed head
+        // re-encodes something near the honest mean while the mean head
+        // is dragged an order of magnitude away
+        let start = vec![1.0f32, -0.5, 0.25, 2.0];
+        let ends: Vec<Vec<f32>> =
+            (0..4).map(|w| start.iter().map(|s| s - 0.01 * (w as f32 + 1.0)).collect()).collect();
+        let honest_mean_diff = 0.025f32;
+        for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor] {
+            let mut payloads = packed_fleet(format, &start, &ends);
+            payloads[2].byzantine(Attack::ScaleInflate, &start);
+            for (agg, close) in [(AggPolicy::Mean, false), (AggPolicy::Trimmed, true)] {
+                let heads = WirePayload::aggregate_group_heads(&payloads, 1, agg);
+                let mut out = vec![0.0f32; 4];
+                WirePayload::mean_end_into(&heads[..1], &start, &mut out).unwrap();
+                let diff = (start[0] - out[0]).abs();
+                assert_eq!(
+                    diff < 2.0 * honest_mean_diff,
+                    close,
+                    "{} {}: head diff {diff}",
+                    format.name(),
+                    agg.name()
+                );
+            }
+        }
+        // trimmed top-k heads: the union merge sees the inflated values
+        // voted out against the implicit zeros and honest members
+        let full = WireFormat::TopK { frac_ppm: 1_000_000, decay_ppm: 0 };
+        let mut payloads = packed_fleet(full, &start, &ends);
+        payloads[2].byzantine(Attack::ScaleInflate, &start);
+        let heads = WirePayload::aggregate_group_heads(&payloads, 1, AggPolicy::Trimmed);
+        let mut out = vec![0.0f32; 4];
+        WirePayload::mean_end_into(&heads[..1], &start, &mut out).unwrap();
+        assert!((start[0] - out[0]).abs() < 2.0 * honest_mean_diff, "{}", out[0]);
+    }
+
+    #[test]
+    fn robust_policies_reject_damaged_payloads_like_the_mean_path() {
+        // the typed-error contract carries over: poisoned scales and
+        // stray sparse indices error out before `out` is touched
+        let start = vec![0.0f32; 4];
+        let mut q8 = WirePayload::with_len(WireFormat::QuantizedI8, 4);
+        q8.pack_end(&start, &[0.1, -0.1, 0.2, -0.2]);
+        let mut bad = q8.clone();
+        let WirePayload::QuantizedI8 { scale, .. } = &mut bad else { unreachable!() };
+        *scale = f32::NAN;
+        let mut out = vec![7.0f32; 4];
+        let got =
+            WirePayload::aggregate_end_into(AggPolicy::Median, &[q8, bad], &start, &mut out);
+        assert!(matches!(got, Err(WireError::NonFiniteScale { worker: 1, .. })));
+        assert_eq!(out, vec![7.0f32; 4]);
     }
 }

@@ -17,6 +17,7 @@
 pub mod comm_savings;
 pub mod gpt;
 pub mod heterogeneity;
+pub mod robustness;
 pub mod runner;
 pub mod theory;
 
@@ -39,6 +40,7 @@ pub const ALL: &[(&str, &str)] = &[
     ("hetero", "supplement: IID vs non-IID worker shards (Theorem 2(b) regime)"),
     ("remark1", "supplement: Algorithm 1 vs MV-sto-signSGD majority vote (Remarks 1-2)"),
     ("fleet", "supplement: fault tolerance — drops/churn/stragglers vs the clean fleet"),
+    ("robust", "supplement: Byzantine ranks — attack × defense grid (agg/MV/quarantine)"),
 ];
 
 pub fn run(id: &str, h: &Harness) -> Result<()> {
@@ -58,6 +60,7 @@ pub fn run(id: &str, h: &Harness) -> Result<()> {
         "hetero" => heterogeneity::hetero(h),
         "remark1" => heterogeneity::remark1(h),
         "fleet" => heterogeneity::fleet(h),
+        "robust" => robustness::robust(h),
         "all" => {
             for (id, _) in ALL {
                 println!("\n================ {id} ================");

@@ -149,8 +149,13 @@ pub struct RunSummary {
 /// preset are stale. v6: `corrupt()` draws a fixed per-format RNG
 /// pattern and only tallies injections that landed (q8pt scale
 /// poisoning was a silent no-op), shifting every faulty trajectory,
-/// and the sparse `topk` wire joined the format menu.
-const CACHE_MODEL_VERSION: &str = "v6";
+/// and the sparse `topk` wire joined the format menu. v7: Byzantine
+/// ranks and robust aggregation (`byz=`/`agg=` in the key via
+/// `describe()`), the no-quorum hold is pinned early — a total-drop
+/// round no longer consumes trainer-RNG contribution draws — and
+/// dropped payloads can retry, so faulty trajectories shift again;
+/// clean-path keys and trajectories are untouched.
+const CACHE_MODEL_VERSION: &str = "v7";
 
 /// Content hash of everything that determines a run's trajectory.
 /// `cfg.sequential_workers` is deliberately excluded: the parallel and
@@ -285,5 +290,28 @@ mod tests {
         f.wire = Some(crate::dist::WireFormat::TopK { frac_ppm: 125_000, decay_ppm: 900_000 });
         assert_ne!(cache_key(&a), cache_key(&e));
         assert_ne!(cache_key(&e), cache_key(&f));
+        // the robust-aggregation policy steers the server-side combine
+        let mut g = a.clone();
+        g.agg = crate::dist::AggPolicy::Trimmed;
+        assert_ne!(cache_key(&a), cache_key(&g));
+        let mut h = g.clone();
+        h.agg = crate::dist::AggPolicy::Median;
+        assert_ne!(cache_key(&g), cache_key(&h));
+        // byzantine knobs shift the faulty trajectory (and the retry
+        // limit shifts the fault stream), so each splits the key
+        let mut i = a.clone();
+        i.faults.byzantine_frac = 0.125;
+        assert_ne!(cache_key(&a), cache_key(&i));
+        let mut j = i.clone();
+        j.faults.attack = crate::comm::Attack::ColludeFixed;
+        assert_ne!(cache_key(&i), cache_key(&j));
+        let mut k = i.clone();
+        k.faults.quarantine = true;
+        assert_ne!(cache_key(&i), cache_key(&k));
+        let mut l = a.clone();
+        l.faults.drop_prob = 0.1;
+        let mut m = l.clone();
+        m.faults.retry_limit = 2;
+        assert_ne!(cache_key(&l), cache_key(&m));
     }
 }

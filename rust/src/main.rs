@@ -33,6 +33,7 @@ const BOOL_FLAGS: &[&str] = &[
     "signed",
     "heterogeneous",
     "sequential-workers",
+    "quarantine",
 ];
 
 const USAGE: &str = "\
@@ -41,9 +42,11 @@ repro — Distributed Sign Momentum (Yu et al. 2024) training system
 USAGE:
   repro train   [--config run.toml] [--preset P] [--workers N] [--tau K]
                 [--rounds T] [--outer ALGO] [--global-lr F] [--peak-lr F]
-                [--wire dense|packed_signs|q8|q8pt] [--mode local|standalone]
-                [--comm PRESET] [--seed S]
-                [--pallas-global-step] [--sequential-workers]
+                [--wire dense|packed_signs|q8|q8pt|topk] [--agg mean|trimmed|median]
+                [--mode local|standalone] [--comm PRESET] [--seed S]
+                [--churn-prob F] [--drop-prob F] [--corrupt-prob F] [--retry-limit N]
+                [--byzantine-frac F] [--attack sign_flip|scale_inflate|collude_fixed|flaky]
+                [--quarantine] [--pallas-global-step] [--sequential-workers]
                 [--log-dir DIR] [--checkpoint F] [--resume F]
   repro experiment <id|all> [--scale F] [--big] [--no-cache]
   repro data    [--bytes N] [--seed S] [--bpe-vocab V] [--out FILE]

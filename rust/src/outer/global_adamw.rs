@@ -67,7 +67,7 @@ impl OuterOptimizer for GlobalAdamW {
         payloads: &[WirePayload],
         _rng: &mut Rng,
     ) -> Result<()> {
-        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg)?;
+        WirePayload::aggregate_end_into(ctx.agg, payloads, ctx.start, &mut self.avg)?;
         self.t += 1;
         self.t_buf[0] = self.t as f32;
         let inv_gamma = 1.0 / ctx.gamma;

@@ -44,7 +44,7 @@ impl OuterOptimizer for LocalAvg {
         payloads: &[WirePayload],
         _rng: &mut Rng,
     ) -> Result<()> {
-        WirePayload::mean_end_into(payloads, ctx.start, global)?;
+        WirePayload::aggregate_end_into(ctx.agg, payloads, ctx.start, global)?;
         Ok(())
     }
 

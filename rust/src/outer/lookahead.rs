@@ -57,7 +57,7 @@ impl OuterOptimizer for Lookahead {
         payloads: &[WirePayload],
         _rng: &mut Rng,
     ) -> Result<()> {
-        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg)?;
+        WirePayload::aggregate_end_into(ctx.agg, payloads, ctx.start, &mut self.avg)?;
         let inv_gamma = 1.0 / ctx.gamma;
         for i in 0..global.len() {
             let pg = (ctx.start[i] - self.avg[i]) * inv_gamma;

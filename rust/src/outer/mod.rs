@@ -22,15 +22,15 @@
 //!
 //! # Optimizers and their wire formats
 //!
-//! | optimizer | paper algorithm | wire formats | bytes / rank message |
-//! |---|---|---|---|
-//! | [`SignMomentum`] | Algorithm 1 (eqs. 6-8) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
-//! | [`SlowMo`] | Algorithm 5 (Wang et al. 2019) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
-//! | [`SignedSlowMo`] | §4.1 ablation | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
-//! | [`Lookahead`] (± signed) | Tables 4-5 (n = 1) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
-//! | [`GlobalAdamW`] | Algorithm 7 | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
-//! | [`LocalAvg`] | "Local AdamW" (Fig. 3) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` |
-//! | [`MvSignSgd`] | Algorithm 6 (Sun et al. 2023) | `packed_signs` only | `⌈P/8⌉ + 8` |
+//! | optimizer | paper algorithm | wire formats | bytes / rank message | agg policies |
+//! |---|---|---|---|---|
+//! | [`SignMomentum`] | Algorithm 1 (eqs. 6-8) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` | `mean`, `trimmed`, `median` |
+//! | [`SlowMo`] | Algorithm 5 (Wang et al. 2019) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` | `mean`, `trimmed`, `median` |
+//! | [`SignedSlowMo`] | §4.1 ablation | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` | `mean`, `trimmed`, `median` |
+//! | [`Lookahead`] (± signed) | Tables 4-5 (n = 1) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` | `mean`, `trimmed`, `median` |
+//! | [`GlobalAdamW`] | Algorithm 7 | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` | `mean`, `trimmed`, `median` |
+//! | [`LocalAvg`] | "Local AdamW" (Fig. 3) | `dense` (default), `q8`, `q8pt`, `topk` | `4P` / `P + 12` / `P + 8 + 4S` / `8K + 8` | `mean`, `trimmed`, `median` |
+//! | [`MvSignSgd`] | Algorithm 6 (Sun et al. 2023) | `packed_signs` only | `⌈P/8⌉ + 8` | majority tally (robust by construction — ignores `agg`) |
 //!
 //! (`S` = segment count of the backend's parameter layout,
 //! [`crate::runtime::StepBackend::layout`]; `K` = Σ per-segment top-k
@@ -48,6 +48,16 @@
 //! nothing else. MV-sto-signSGD's exchange *is* the 1-bit
 //! majority vote, so it pins `packed_signs`
 //! ([`crate::config::RunConfig::validate`] rejects the rest).
+//!
+//! The same sharing carries the robust-aggregation policy: every
+//! dense-exchange method reconstructs through
+//! [`WirePayload::aggregate_end_into`] with [`RoundCtx::agg`]
+//! (`[outer] agg = "mean" | "trimmed" | "median"`; `mean` is the
+//! bitwise-historical path), so a Byzantine-tolerant aggregate is one
+//! config knob, never a per-optimizer reimplementation. MV-sto-signSGD
+//! ignores the knob — its majority tally is already the robust
+//! aggregator, the property the robustness suite pins
+//! (`examples/robust_agg.rs`).
 //!
 //! All operate on the flat `f32[P]` vector; every implementation is
 //! cross-checked against the jnp/Pallas references where one exists
@@ -72,7 +82,7 @@ pub use slowmo::{SignedSlowMo, SlowMo};
 
 use anyhow::Result;
 
-pub use crate::dist::{WireFormat, WirePayload};
+pub use crate::dist::{AggPolicy, WireFormat, WirePayload};
 use crate::sign::SignOp;
 use crate::util::json::Json;
 use crate::util::rng::Rng;
@@ -121,6 +131,11 @@ pub struct RoundCtx<'a> {
     pub gamma: f32,
     /// Outer round index t.
     pub round: u64,
+    /// Server-side aggregation policy over the gathered payloads
+    /// ([`AggPolicy::Mean`] is the bitwise-historical path; the robust
+    /// policies defend against Byzantine ranks). The sign tally
+    /// ignores it — see the module docs' agg-policies column.
+    pub agg: AggPolicy,
 }
 
 /// The round-exchange contract every outer optimizer implements — one
@@ -376,7 +391,7 @@ pub fn run_synthetic_round(
     let mut rng = Rng::new(round ^ 0xABCD);
     let mut payload = WirePayload::with_len(opt.wire(), start.len());
     opt.contribute(0, 1, &view, &mut rng, &mut payload);
-    let ctx = RoundCtx { start: &start, gamma, round };
+    let ctx = RoundCtx { start: &start, gamma, round, agg: AggPolicy::Mean };
     global.copy_from_slice(&start);
     opt.apply(global, &ctx, std::slice::from_ref(&payload), &mut rng)
         .expect("synthetic round failed");
@@ -563,7 +578,7 @@ mod tests {
                 let view = WorkerView { start: &start, end, last_grad: end, layout: &layout };
                 a.contribute(w, 3, &view, &mut rng, &mut payloads[w]);
             }
-            let ctx = RoundCtx { start: &start, gamma: 0.1, round: 0 };
+            let ctx = RoundCtx { start: &start, gamma: 0.1, round: 0, agg: AggPolicy::Mean };
             let mut ga = start.clone();
             a.apply(&mut ga, &ctx, &payloads, &mut rng).unwrap();
 
@@ -606,7 +621,7 @@ mod tests {
                         WorkerView { start: &start, end, last_grad: end, layout: &layout };
                     opt.contribute(w, 4, &view, &mut rng, &mut payloads[w]);
                 }
-                let ctx = RoundCtx { start: &start, gamma: 0.1, round: 0 };
+                let ctx = RoundCtx { start: &start, gamma: 0.1, round: 0, agg: AggPolicy::Mean };
                 let mut g = start.clone();
                 opt.apply(&mut g, &ctx, &payloads, &mut rng).unwrap();
                 g
@@ -656,7 +671,7 @@ mod tests {
                     WorkerView { start: &start, end: &end, last_grad: &end, layout: &layout };
                 opt.contribute(w, 2, &view, &mut rng, p);
             }
-            let ctx = RoundCtx { start: &start, gamma: 0.1, round };
+            let ctx = RoundCtx { start: &start, gamma: 0.1, round, agg: AggPolicy::Mean };
             opt.apply(&mut global, &ctx, &payloads, &mut rng).unwrap();
         }
         // six rounds of k = 4-of-16 cover every coordinate; all moved

@@ -142,7 +142,11 @@ impl OuterOptimizer for MvSignSgd {
     ) -> Result<()> {
         // the tally accepts any non-empty survivor subset of the fleet
         // (dropped/rejected payloads under faults shrink n_effective);
-        // contribute already sized `m` from the full worker count
+        // contribute already sized `m` from the full worker count.
+        // `ctx.agg` is deliberately ignored: the majority tally IS the
+        // robust aggregator (breakdown point f < n/2 on unanimous
+        // honest coordinates — pinned by the wire tests), there is no
+        // mean to trim
         assert!(
             !self.m.is_empty() && payloads.len() <= self.m.len(),
             "{} payloads for a {}-worker fleet",
@@ -231,7 +235,7 @@ mod tests {
             let view = WorkerView { start, end: start, last_grad: grad, layout: &layout };
             opt.contribute(w, n, &view, rng, &mut payloads[w]);
         }
-        let ctx = RoundCtx { start, gamma: 0.1, round };
+        let ctx = RoundCtx { start, gamma: 0.1, round, agg: crate::dist::AggPolicy::Mean };
         global.copy_from_slice(start);
         opt.apply(global, &ctx, &payloads, rng).unwrap();
     }

@@ -122,7 +122,7 @@ impl OuterOptimizer for SignMomentum {
         let p = global.len();
         assert_eq!(ctx.start.len(), p);
         assert_eq!(self.m.len(), p);
-        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg)?;
+        WirePayload::aggregate_end_into(ctx.agg, payloads, ctx.start, &mut self.avg)?;
 
         if let Some(kernel) = &self.kernel {
             anyhow::ensure!(

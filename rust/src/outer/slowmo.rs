@@ -66,7 +66,7 @@ impl OuterOptimizer for SlowMo {
         payloads: &[WirePayload],
         _rng: &mut Rng,
     ) -> Result<()> {
-        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg)?;
+        WirePayload::aggregate_end_into(ctx.agg, payloads, ctx.start, &mut self.avg)?;
         let inv_gamma = 1.0 / ctx.gamma;
         for i in 0..global.len() {
             let diff = (ctx.start[i] - self.avg[i]) * inv_gamma;
@@ -126,7 +126,7 @@ impl OuterOptimizer for SignedSlowMo {
         payloads: &[WirePayload],
         _rng: &mut Rng,
     ) -> Result<()> {
-        WirePayload::mean_end_into(payloads, ctx.start, &mut self.avg)?;
+        WirePayload::aggregate_end_into(ctx.agg, payloads, ctx.start, &mut self.avg)?;
         let inv_gamma = 1.0 / ctx.gamma;
         for i in 0..global.len() {
             let s = sign_f32(ctx.start[i] - self.avg[i]);

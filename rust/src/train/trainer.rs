@@ -61,12 +61,12 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::comm::{FaultStats, SimClock, Topology};
+use crate::comm::{Attack, FaultStats, SimClock, Topology};
 use crate::config::{RunConfig, TrainMode};
 use crate::data::corpus::{self, CorpusConfig};
 use crate::data::dataset::{Batch, TokenDataset};
 use crate::data::tokenizer::ByteTokenizer;
-use crate::dist::{collectives, pool, WireFormat, WirePayload, Worker};
+use crate::dist::{collectives, pool, AggPolicy, WireFormat, WirePayload, Worker};
 use crate::outer::{OuterConfig, OuterOptimizer, RoundCtx, WorkerView};
 use crate::runtime::{Artifacts, ParamLayout, Runtime, SignUpdateKernel, StepBackend};
 use crate::sign::SignOp;
@@ -97,6 +97,23 @@ pub struct Trainer {
     /// What the fault plan actually did, accumulated over the run
     /// (checkpointed; all-zero when faults are off).
     faults: FaultStats,
+    /// Byzantine membership: ⌊byzantine_frac·n⌋ ranks drawn once per
+    /// run on the fault stream at construction, so the set is a pure
+    /// function of the seed and survives checkpoint resume without
+    /// being stored. All-false — and zero draws — when the knob is off.
+    adversaries: Vec<bool>,
+    /// Per-rank reputation in [0, 1] held by the quarantine supervisor:
+    /// exponential decay toward each scored round's good/bad verdict
+    /// (norm z-score + sign agreement against the applied update).
+    /// Only [`crate::comm::FaultPlan::quarantine`] scores rounds.
+    rep: Vec<f64>,
+    /// Rounds each rank still sits out. A positive entry freezes the
+    /// rank exactly like churn absence (worker RNG and base-optimizer
+    /// state untouched); expiry re-admits it on probation.
+    quarantine_left: Vec<u64>,
+    /// Current quarantine duration per rank — doubles on every relapse
+    /// (exponential backoff for repeat offenders).
+    backoff: Vec<u64>,
     val_batches: Vec<Batch>,
     /// The round exchange's wire format (config override or the outer
     /// optimizer's native format — [`RunConfig::resolved_wire`]).
@@ -138,6 +155,22 @@ where
     }
 }
 
+/// Median of an unordered slice (0.0 when empty) — supervisor-side
+/// robust statistics, f64 throughout, no RNG.
+fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.total_cmp(b));
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
 pub struct RunResult {
     pub log: RunLog,
     pub clock: SimClock,
@@ -152,6 +185,20 @@ pub struct RunResult {
 }
 
 impl Trainer {
+    // Supervisor tuning (see `score_survivors`): a survivor is flagged
+    // when its diff norm sits more than Z_THRESH robust standard
+    // deviations from the survivor median, or when fewer than
+    // AGREE_THRESH of its transmitted coordinates agree in sign with
+    // the applied update. Reputation halves toward each verdict;
+    // crossing REP_QUARANTINE freezes the rank for QUARANTINE_BASE
+    // rounds (doubling per relapse), and expiry re-admits it at
+    // REP_PROBATION — one bad round from relapsing.
+    const Z_THRESH: f64 = 4.0;
+    const AGREE_THRESH: f64 = 0.2;
+    const REP_QUARANTINE: f64 = 0.4;
+    const REP_PROBATION: f64 = 0.6;
+    const QUARANTINE_BASE: u64 = 4;
+
     pub fn new(cfg: RunConfig, rt: &Runtime, arts: &Artifacts) -> Result<Trainer> {
         let info = arts.preset(&cfg.preset)?;
         let bundle = Arc::new(crate::runtime::ModelBundle::load(rt, info)?);
@@ -253,6 +300,22 @@ impl Trainer {
         anyhow::ensure!(!val_batches.is_empty(), "validation split too small");
 
         let root_rng = Rng::new(cfg.seed);
+        // Byzantine membership: drawn once on the dedicated fault
+        // stream, before round 0. With the knob off nothing is drawn —
+        // the stream position (and every clean trajectory) is untouched
+        // — and on resume the same membership re-derives from the seed
+        // before the checkpointed stream position is restored on top.
+        let mut fault_rng = root_rng.substream("faults", 0);
+        let n_adversaries =
+            (cfg.faults.byzantine_frac * cfg.n_workers as f64).floor() as usize;
+        let mut adversaries = vec![false; cfg.n_workers];
+        if n_adversaries > 0 {
+            let mut ranks: Vec<usize> = (0..cfg.n_workers).collect();
+            fault_rng.shuffle(&mut ranks);
+            for &r in &ranks[..n_adversaries] {
+                adversaries[r] = true;
+            }
+        }
         let workers: Vec<Worker> = (0..cfg.n_workers)
             .map(|i| Worker::new(i, Arc::clone(&layout), &cfg.base, &root_rng))
             .collect();
@@ -267,8 +330,12 @@ impl Trainer {
             schedule: cfg.schedule.build(),
             log: RunLog::new(&cfg.tag),
             rng: root_rng.substream("trainer", 0),
-            fault_rng: root_rng.substream("faults", 0),
+            fault_rng,
             faults: FaultStats::default(),
+            adversaries,
+            rep: vec![1.0; cfg.n_workers],
+            quarantine_left: vec![0; cfg.n_workers],
+            backoff: vec![0; cfg.n_workers],
             wire: cfg.resolved_wire(),
             cfg,
             backend: bundle,
@@ -310,6 +377,34 @@ impl Trainer {
     /// inactive).
     pub fn fault_stats(&self) -> &FaultStats {
         &self.faults
+    }
+
+    /// Which ranks the fault plan made Byzantine — all-false when
+    /// `byzantine_frac` is 0. Drawn once per run on the fault stream
+    /// ([`crate::comm::FaultPlan::byzantine_frac`]).
+    pub fn adversaries(&self) -> &[bool] {
+        &self.adversaries
+    }
+
+    /// Per-rank reputation held by the quarantine supervisor (all 1.0
+    /// until `[faults] quarantine` scores a round).
+    pub fn reputations(&self) -> &[f64] {
+        &self.rep
+    }
+
+    /// Rounds each rank still sits out under quarantine (0 = active).
+    pub fn quarantine_rounds_left(&self) -> &[u64] {
+        &self.quarantine_left
+    }
+
+    /// Test/ops hook: freeze `rank` for the next `rounds` outer rounds
+    /// exactly as the reputation supervisor would — worker RNG and
+    /// base-optimizer state untouched, the slot billed as absent,
+    /// re-admission on probation when the clock runs out. The
+    /// churn-freeze equivalence tests drive this directly, without a
+    /// fault plan.
+    pub fn force_quarantine(&mut self, rank: usize, rounds: u64) {
+        self.quarantine_left[rank] = rounds;
     }
 
     pub fn dim(&self) -> usize {
@@ -407,7 +502,7 @@ impl Trainer {
         // optimizer state freeze until it rejoins, and rejoining is
         // trivially consistent because every round starts by copying
         // the broadcast `start` into the rank's iterate.
-        let active: Vec<bool> = if faults_on && plan.churn_prob > 0.0 {
+        let mut active: Vec<bool> = if faults_on && plan.churn_prob > 0.0 {
             let mut a: Vec<bool> =
                 (0..n).map(|_| !self.fault_rng.bernoulli(plan.churn_prob)).collect();
             if !a.iter().any(|&x| x) {
@@ -417,6 +512,35 @@ impl Trainer {
         } else {
             vec![true; n]
         };
+        // Reputation quarantine rides the same freeze: a quarantined
+        // rank sits the round out exactly like churn absence (worker
+        // RNG and base-optimizer state untouched, slot billed as
+        // absent). Quarantine is capped below n/2 ranks, so a clean
+        // rank always exists for the liveness guard — picked
+        // deterministically, no fault-stream draw.
+        if self.quarantine_left.iter().any(|&q| q > 0) {
+            for w in 0..n {
+                if self.quarantine_left[w] > 0 {
+                    active[w] = false;
+                }
+            }
+            if !active.iter().any(|&x| x) {
+                let w = (0..n)
+                    .find(|&w| self.quarantine_left[w] == 0)
+                    .expect("quarantine is capped below the fleet size");
+                active[w] = true;
+            }
+        }
+        // tick the quarantine clocks: expiry re-admits on probation
+        for w in 0..n {
+            if self.quarantine_left[w] > 0 {
+                self.quarantine_left[w] -= 1;
+                if self.quarantine_left[w] == 0 {
+                    self.rep[w] = Self::REP_PROBATION;
+                    self.faults.readmissions += 1;
+                }
+            }
+        }
         let n_active = active.iter().filter(|&&x| x).count();
         self.faults.absent_ranks += (n - n_active) as u64;
 
@@ -486,11 +610,30 @@ impl Trainer {
         // down-leg it never earned, not aggregated). The rank itself
         // still packs below — the loss happens after contribution, so
         // the training RNG order is independent of drop draws.
-        let arrived_mask: Vec<bool> = if faults_on && plan.drop_prob > 0.0 {
+        let mut arrived_mask: Vec<bool> = if faults_on && plan.drop_prob > 0.0 {
             active.iter().map(|&a| a && !self.fault_rng.bernoulli(plan.drop_prob)).collect()
         } else {
             active.clone()
         };
+        // Bounded retransmission: every dropped payload is re-sent up
+        // to retry_limit times, each attempt an independent drop draw
+        // on the fault stream. Only the copy that finally arrives is
+        // billed (a failed attempt vanishes in transit exactly like
+        // the original send); every re-send attempt is counted.
+        if faults_on && plan.retry_limit > 0 && plan.drop_prob > 0.0 {
+            for w in 0..n {
+                if !active[w] || arrived_mask[w] {
+                    continue;
+                }
+                for _ in 0..plan.retry_limit {
+                    self.faults.retried_payloads += 1;
+                    if !self.fault_rng.bernoulli(plan.drop_prob) {
+                        arrived_mask[w] = true;
+                        break;
+                    }
+                }
+            }
+        }
         let arrived = arrived_mask.iter().filter(|&&x| x).count();
         self.faults.dropped_payloads += (n_active - arrived) as u64;
 
@@ -524,6 +667,18 @@ impl Trainer {
             &self.payloads[0],
             &mut self.fault_rng,
         );
+        // Total transit loss: nothing reached the aggregation point.
+        // Pinned held-round semantics: the round holds at `start` — no
+        // contribution is packed (the trainer RNG is not consumed), the
+        // outer-optimizer state does not advance, no scoring runs — but
+        // the τ local steps, the LR schedule, and the exchange billing
+        // above all stand.
+        if arrived == 0 {
+            self.faults.no_quorum_rounds += 1;
+            self.global.copy_from_slice(&start);
+            self.last_seg_norms = metrics::segment_norms(&self.layout, &start, &self.global);
+            return Ok(());
+        }
         for w in 0..n {
             if !active[w] {
                 continue; // absent ranks have nothing to pack
@@ -553,6 +708,40 @@ impl Trainer {
         // below). The counter follows corrupt()'s report, so it counts
         // injections that actually landed — never attempts that had
         // nothing to damage.
+        // Adversary injection: each Byzantine rank corrupts its OWN
+        // contribution at the source — after honest packing, before
+        // transit corruption. Every attacked payload stays finite and
+        // decodable (a Byzantine rank is a liar, not a crash), so only
+        // a robust `agg` policy, the sign tally, or the quarantine
+        // supervisor can defend. The flaky coin is tossed for every
+        // adversary on every non-held round, whether or not its payload
+        // arrived, so the fault-stream draw count never depends on
+        // churn or drop outcomes.
+        let mut byz_applied = vec![false; n];
+        if faults_on && plan.byzantine_frac > 0.0 {
+            for w in 0..n {
+                if !self.adversaries[w] {
+                    continue;
+                }
+                let attack = match plan.attack {
+                    Attack::Flaky => {
+                        if self.fault_rng.bernoulli(0.5) {
+                            Some(Attack::SignFlip)
+                        } else {
+                            None
+                        }
+                    }
+                    a => Some(a),
+                };
+                match attack {
+                    Some(a) if arrived_mask[w] => {
+                        self.payloads[w].byzantine(a, &start);
+                        byz_applied[w] = true;
+                    }
+                    _ => {}
+                }
+            }
+        }
         if faults_on && plan.corrupt_prob > 0.0 {
             for w in 0..n {
                 if arrived_mask[w]
@@ -563,9 +752,10 @@ impl Trainer {
                 }
             }
         }
-        let ctx = RoundCtx { start: &start, gamma: gamma_t, round: self.round };
+        let ctx =
+            RoundCtx { start: &start, gamma: gamma_t, round: self.round, agg: self.cfg.agg };
         self.global.copy_from_slice(&start);
-        if !faults_on {
+        if !faults_on && n_active == n {
             // the clean path: all n payloads, zero copies, bitwise-
             // pinned. At hierarchical scale the group heads partially
             // aggregate first; the outer optimizer consumes the
@@ -575,7 +765,11 @@ impl Trainer {
             // here — with no fault plan there is nothing to survive.
             match Topology::select(self.payloads[0].ring_reducible(), n) {
                 Topology::Hierarchical { groups } => {
-                    let heads = WirePayload::aggregate_group_heads(&self.payloads, groups);
+                    let heads = WirePayload::aggregate_group_heads(
+                        &self.payloads,
+                        groups,
+                        self.cfg.agg,
+                    );
                     self.outer.apply(&mut self.global, &ctx, &heads, &mut self.rng)?;
                 }
                 _ => {
@@ -583,17 +777,23 @@ impl Trainer {
                 }
             }
         } else {
-            // n_effective: the arrived payloads that pass the
-            // finiteness check. Rejections are counted, never averaged
-            // in; a round with no survivors holds the global at the
-            // round start (outer state untouched) instead of erroring.
+            // Degraded membership — a fault plan, or a quarantine
+            // freeze with no plan at all. n_effective: the arrived
+            // payloads that pass the finiteness check. Rejections are
+            // counted, never averaged in; a round with no survivors
+            // holds the global at the round start (outer state
+            // untouched) instead of erroring.
             let mut survivors: Vec<WirePayload> = Vec::with_capacity(arrived);
+            let mut survivor_ranks: Vec<usize> = Vec::with_capacity(arrived);
             for w in 0..n {
                 if !arrived_mask[w] {
                     continue;
                 }
                 match self.payloads[w].check_finite(w) {
-                    Ok(()) => survivors.push(self.payloads[w].clone()),
+                    Ok(()) => {
+                        survivors.push(self.payloads[w].clone());
+                        survivor_ranks.push(w);
+                    }
                     Err(_) => self.faults.rejected_payloads += 1,
                 }
             }
@@ -604,12 +804,22 @@ impl Trainer {
                 let heads;
                 let agg: &[WirePayload] = match topo {
                     Topology::Hierarchical { groups } => {
-                        heads = WirePayload::aggregate_group_heads(&survivors, groups);
+                        heads = WirePayload::aggregate_group_heads(
+                            &survivors,
+                            groups,
+                            self.cfg.agg,
+                        );
                         &heads
                     }
                     _ => &survivors,
                 };
                 self.outer.apply(&mut self.global, &ctx, agg, &mut self.rng)?;
+                if survivor_ranks.iter().any(|&w| byz_applied[w]) {
+                    self.faults.byzantine_rounds_survived += 1;
+                }
+                if plan.quarantine {
+                    self.score_survivors(&start, &survivor_ranks);
+                }
             }
         }
         anyhow::ensure!(tensor::all_finite(&self.global), "global params diverged");
@@ -683,6 +893,82 @@ impl Trainer {
         }
     }
 
+    /// Reputation scoring for one applied round (only under
+    /// [`crate::comm::FaultPlan::quarantine`]). Two per-survivor
+    /// signals, no fault-stream or trainer-RNG draws:
+    ///
+    /// - **norm z-score** — the rank's decoded diff norm against the
+    ///   survivor median, spread-normalized by the MAD. Catches what
+    ///   scale can't hide: inflators and fixed-point colluders.
+    /// - **sign agreement** — the fraction of the rank's transmitted
+    ///   coordinates whose diff sign matches the applied update.
+    ///   Catches what direction can't hide: sign-flippers (the 1-bit
+    ///   wire scores this through [`crate::dist::PackedVotes::agreement`];
+    ///   its votes are unit-norm, so the z-score is inert there).
+    ///
+    /// Reputation halves toward each verdict; crossing the quarantine
+    /// line freezes the rank with doubling backoff, capped below n/2
+    /// frozen ranks so the fleet keeps a clean majority slot.
+    fn score_survivors(&mut self, start: &[f32], survivor_ranks: &[usize]) {
+        let n = self.cfg.n_workers;
+        let p = start.len();
+        // the consensus diff the server just applied (start − global)
+        let applied: Vec<f32> = (0..p).map(|i| start[i] - self.global[i]).collect();
+        let mut norms = Vec::with_capacity(survivor_ranks.len());
+        let mut agrees = Vec::with_capacity(survivor_ranks.len());
+        let mut end = vec![0.0f32; p];
+        for &w in survivor_ranks {
+            if let Some(votes) = self.payloads[w].as_packed_signs() {
+                norms.push(0.0);
+                agrees.push(votes.agreement(&applied));
+                continue;
+            }
+            let one = std::slice::from_ref(&self.payloads[w]);
+            if WirePayload::aggregate_end_into(AggPolicy::Mean, one, start, &mut end).is_err() {
+                // the payload already survived check_finite; an
+                // undecodable one here scores neutral instead of
+                // crashing the run
+                norms.push(0.0);
+                agrees.push(1.0);
+                continue;
+            }
+            let mut norm = 0.0f64;
+            let (mut hits, mut spoke) = (0u64, 0u64);
+            for i in 0..p {
+                let d = start[i] as f64 - end[i] as f64;
+                norm += d * d;
+                if d != 0.0 {
+                    spoke += 1;
+                    if (d > 0.0) == (applied[i] as f64 > 0.0) {
+                        hits += 1;
+                    }
+                }
+            }
+            norms.push(norm.sqrt());
+            agrees.push(if spoke == 0 { 1.0 } else { hits as f64 / spoke as f64 });
+        }
+        // robust center/spread of the survivor norms — valid while the
+        // adversaries stay a minority of the survivors
+        let med = median(&norms);
+        let mad = median(&norms.iter().map(|&x| (x - med).abs()).collect::<Vec<_>>());
+        for (k, &w) in survivor_ranks.iter().enumerate() {
+            let z = (norms[k] - med).abs() / (1.4826 * mad + 1e-9);
+            let good = z <= Self::Z_THRESH && agrees[k] >= Self::AGREE_THRESH;
+            self.rep[w] = 0.5 * self.rep[w] + if good { 0.5 } else { 0.0 };
+            if self.rep[w] >= Self::REP_QUARANTINE {
+                continue;
+            }
+            // freeze the rank — unless half the fleet is already out
+            // (liveness: the membership guard needs a clean rank left)
+            let frozen = self.quarantine_left.iter().filter(|&&q| q > 0).count();
+            if frozen < n / 2 {
+                self.backoff[w] = (self.backoff[w] * 2).max(Self::QUARANTINE_BASE);
+                self.quarantine_left[w] = self.backoff[w];
+                self.faults.quarantined_ranks += 1;
+            }
+        }
+    }
+
     /// Mean validation loss over the configured eval batches.
     ///
     /// The batches fan out across the persistent pool (one read-only
@@ -711,6 +997,54 @@ impl Trainer {
     }
 
     // ---- checkpointing ----
+
+    /// Supervisor state as exact f32 words: `[n]` then, per rank, the
+    /// f64 reputation's bit pattern, the quarantine rounds left, and
+    /// the backoff — each u64 spread over four 16-bit limbs (an f32
+    /// holds 16-bit integers exactly, so the round trip is lossless
+    /// and resume is bit-identical mid-quarantine).
+    fn supervisor_to_f32_words(&self) -> Vec<f32> {
+        let n = self.cfg.n_workers;
+        let mut words = Vec::with_capacity(1 + 12 * n);
+        words.push(n as f32);
+        let push_u64 = |words: &mut Vec<f32>, x: u64| {
+            for k in 0..4 {
+                words.push(((x >> (16 * k)) & 0xFFFF) as f32);
+            }
+        };
+        for w in 0..n {
+            push_u64(&mut words, self.rep[w].to_bits());
+            push_u64(&mut words, self.quarantine_left[w]);
+            push_u64(&mut words, self.backoff[w]);
+        }
+        words
+    }
+
+    /// Inverse of [`Self::supervisor_to_f32_words`]; errors loudly on
+    /// a length or fleet-size mismatch instead of guessing.
+    fn load_supervisor_f32_words(&mut self, words: &[f32]) -> Result<()> {
+        let n = self.cfg.n_workers;
+        anyhow::ensure!(
+            words.len() == 1 + 12 * n && words[0] as usize == n,
+            "trainer.supervisor holds {} words (fleet of {} needs {})",
+            words.len(),
+            n,
+            1 + 12 * n
+        );
+        let read_u64 = |limbs: &[f32]| -> u64 {
+            limbs
+                .iter()
+                .enumerate()
+                .fold(0u64, |acc, (k, &x)| acc | (((x as u64) & 0xFFFF) << (16 * k)))
+        };
+        for w in 0..n {
+            let base = 1 + 12 * w;
+            self.rep[w] = f64::from_bits(read_u64(&words[base..base + 4]));
+            self.quarantine_left[w] = read_u64(&words[base + 4..base + 8]);
+            self.backoff[w] = read_u64(&words[base + 8..base + 12]);
+        }
+        Ok(())
+    }
 
     pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
         let mut ck = Checkpoint::new(&self.cfg.tag, self.round);
@@ -750,6 +1084,11 @@ impl Trainer {
         // place and keeps counting where it left off.
         ck.add("trainer.fault_rng", &self.fault_rng.to_f32_words());
         ck.add("trainer.faults", &self.faults.to_f32_words());
+        // the reputation/quarantine supervisor: per-rank reputation,
+        // rounds left, and backoff — a resumed faulty run must keep
+        // scoring mid-quarantine exactly where the interrupted one
+        // stood.
+        ck.add("trainer.supervisor", &self.supervisor_to_f32_words());
         // simulated clock: a resumed run continues the time axis
         // (compute/comm/straggler seconds, comm rounds, wire bytes)
         // instead of restarting it at zero.
@@ -808,7 +1147,12 @@ impl Trainer {
         }
         if let Ok(words) = ck.get("trainer.faults") {
             self.faults = FaultStats::from_f32_words(words)
-                .ok_or_else(|| anyhow::anyhow!("corrupt trainer.faults buffer"))?;
+                .map_err(|e| anyhow::anyhow!("trainer.faults: {e}"))?;
+        }
+        // supervisor state (newer checkpoints); older ones load with
+        // full reputation and no quarantine in flight.
+        if let Ok(words) = ck.get("trainer.supervisor") {
+            self.load_supervisor_f32_words(words)?;
         }
         // simulated clock (newer checkpoints); pre-clock checkpoints
         // still load and restart the time axis at zero.

@@ -1,0 +1,303 @@
+//! Byzantine ranks end to end on the pure-Rust [`NativeBundle`]
+//! backend: adversary injection, the robust aggregation policies, the
+//! reputation/quarantine supervisor, and the pinned held-round and
+//! freeze semantics.
+//!
+//! The contracts pinned here:
+//!
+//! 1. **Breakdown behavior** — a colluding minority poisons the
+//!    undefended mean while the trimmed/median policies and the MV
+//!    tally hold their loss next to the clean baseline.
+//! 2. **Supervisor** — the quarantine supervisor finds the liar from
+//!    the update statistics alone, freezes it with churn-absence
+//!    semantics (worker RNG and base-optimizer state untouched), and
+//!    re-admits it on probation.
+//! 3. **Held rounds** — a no-quorum round advances the LR schedule and
+//!    the clock but consumes no trainer RNG and leaves the outer
+//!    optimizer state and the global parameters untouched.
+//! 4. **Determinism** — the adversary set is drawn once per run and a
+//!    resume with an active quarantine replays bit-for-bit.
+
+use std::sync::Arc;
+
+use dsm::comm::Attack;
+use dsm::config::RunConfig;
+use dsm::dist::AggPolicy;
+use dsm::outer::OuterConfig;
+use dsm::runtime::NativeBundle;
+use dsm::train::checkpoint::Checkpoint;
+use dsm::train::Trainer;
+
+const PRESET: &str = "native";
+
+/// ln(256), the byte LM's uniform loss — the "did not diverge" anchor.
+fn uniform() -> f64 {
+    (256f64).ln()
+}
+
+fn backend() -> Arc<NativeBundle> {
+    Arc::new(NativeBundle::new(PRESET, 2, 24, 8))
+}
+
+/// Plain parameter averaging: the undefended mean the attacks are
+/// built to poison. (The paper-default sign-momentum outer bounds
+/// every coordinate by the LR, which would hide the contrast between
+/// the undefended and the defended rows.)
+fn avg_cfg(tag: &str) -> RunConfig {
+    let mut cfg = RunConfig::paper_default(PRESET);
+    cfg.rounds = 4;
+    cfg.tau = 3;
+    cfg.n_workers = 4;
+    cfg.corpus_bytes = 1 << 16;
+    cfg.eval_every = 0;
+    cfg.eval_batches = 2;
+    cfg.comm = dsm::comm::CommModel::preset("ethernet").unwrap();
+    cfg.outer = OuterConfig::LocalAvg;
+    cfg.tag = tag.to_string();
+    cfg
+}
+
+fn mv_cfg(tag: &str) -> RunConfig {
+    let mut cfg = avg_cfg(tag);
+    cfg.outer = OuterConfig::MvSignSgd { eta: 1e-3, beta: 0.9, alpha: 0.1, bound: 50.0 };
+    cfg
+}
+
+/// Final validation loss, with a mid-run finiteness trip mapped to
+/// +inf — for a poisoned mean, divergence IS the expected outcome.
+fn run_val(cfg: RunConfig) -> f64 {
+    let mut t = Trainer::with_backend(cfg, backend()).unwrap();
+    match t.run() {
+        Ok(res) => res.final_val,
+        Err(_) => f64::INFINITY,
+    }
+}
+
+#[test]
+fn the_adversary_set_is_drawn_once_and_reproducible() {
+    let mut cfg = avg_cfg("byz-draw");
+    cfg.faults.byzantine_frac = 0.5; // ⌊0.5·4⌋ = 2 adversaries
+    cfg.faults.attack = Attack::SignFlip;
+    let t1 = Trainer::with_backend(cfg.clone(), backend()).unwrap();
+    let t2 = Trainer::with_backend(cfg, backend()).unwrap();
+    assert_eq!(t1.adversaries(), t2.adversaries(), "membership must be a pure seed function");
+    assert_eq!(t1.adversaries().iter().filter(|&&b| b).count(), 2);
+}
+
+#[test]
+fn collusion_poisons_the_mean_and_the_robust_policies_recover() {
+    let clean = run_val(avg_cfg("byz-clean"));
+    assert!(clean.is_finite());
+
+    let mut mean = avg_cfg("byz-mean-collude");
+    mean.faults.byzantine_frac = 0.25; // one colluder in the fleet of 4
+    mean.faults.attack = Attack::ColludeFixed;
+    let mean_val = run_val(mean);
+    // the colluder shifts every coordinate by frac per round; the
+    // undefended mean either trips the finiteness guard or lands far
+    // from the clean baseline
+    assert!(
+        !mean_val.is_finite() || mean_val > clean + 0.4,
+        "the undefended mean shrugged off the collusion: {mean_val} vs clean {clean}"
+    );
+
+    for (name, agg) in [("trimmed", AggPolicy::Trimmed), ("median", AggPolicy::Median)] {
+        let mut cfg = avg_cfg(&format!("byz-{name}-collude"));
+        cfg.agg = agg;
+        cfg.faults.byzantine_frac = 0.25;
+        cfg.faults.attack = Attack::ColludeFixed;
+        let val = run_val(cfg);
+        assert!(val.is_finite(), "{name} diverged under collusion");
+        assert!(
+            (val - clean).abs() < 0.35,
+            "{name} drifted from the clean baseline: {val} vs {clean}"
+        );
+    }
+}
+
+#[test]
+fn mv_tally_holds_its_loss_under_a_sign_flip_minority() {
+    let clean = run_val(mv_cfg("byz-mv-clean"));
+    let mut cfg = mv_cfg("byz-mv-flip");
+    cfg.faults.byzantine_frac = 0.25;
+    cfg.faults.attack = Attack::SignFlip;
+    let mut t = Trainer::with_backend(cfg, backend()).unwrap();
+    let res = t.run().unwrap();
+    // one flipped vote out of four arrives every round — and survives
+    // (a Byzantine rank lies, it does not crash the round)
+    assert_eq!(res.faults.byzantine_rounds_survived, 4);
+    assert_eq!(res.faults.rejected_payloads, 0);
+    assert!(res.final_val.is_finite());
+    assert!(
+        (res.final_val - clean).abs() < 0.5,
+        "a 1-in-4 sign-flipper moved the tally too far: {} vs {}",
+        res.final_val,
+        clean
+    );
+}
+
+#[test]
+fn the_supervisor_quarantines_the_inflator_and_readmits_on_probation() {
+    let mut cfg = avg_cfg("byz-quarantine");
+    cfg.rounds = 8;
+    // a fleet of 8 with one inflator: the survivor-norm MAD needs a
+    // handful of honest samples to be a stable spread estimate
+    cfg.n_workers = 8;
+    cfg.faults.byzantine_frac = 0.125;
+    cfg.faults.attack = Attack::ScaleInflate;
+    cfg.faults.quarantine = true;
+    let mut t = Trainer::with_backend(cfg, backend()).unwrap();
+    let adv = t.adversaries().iter().position(|&b| b).unwrap();
+    let res = t.run().unwrap();
+    // reputation decays 1.0 → 0.5 → 0.25 over the first two poisoned
+    // rounds, so the freeze lands by round 2 and, with an 8-round run
+    // and a 4-round base backoff, the probation window reopens
+    assert!(res.faults.quarantined_ranks >= 1, "the supervisor never fired");
+    assert!(res.faults.readmissions >= 1, "the backoff never expired");
+    let rep = t.reputations();
+    for w in 0..8 {
+        if w != adv {
+            assert!(
+                rep[adv] < rep[w],
+                "the liar (rank {adv}, rep {}) must end below honest rank {w} (rep {})",
+                rep[adv],
+                rep[w]
+            );
+        }
+    }
+    assert!(res.final_val.is_finite());
+    assert!(res.final_val < uniform() + 0.5, "quarantined fleet diverged: {}", res.final_val);
+}
+
+#[test]
+fn a_quarantined_rank_is_frozen_exactly_like_a_churn_absent_rank() {
+    // no fault plan at all: the freeze is pure membership semantics.
+    // Rank 3 sits out two rounds; its worker RNG and base-optimizer
+    // state must stay bit-identical to a worker that never stepped,
+    // while the slots are billed as absent and expiry re-admits.
+    let cfg = avg_cfg("byz-freeze");
+    let mut t = Trainer::with_backend(cfg.clone(), backend()).unwrap();
+    t.force_quarantine(3, 2);
+    t.step_round().unwrap();
+    t.step_round().unwrap();
+    assert_eq!(t.fault_stats().absent_ranks, 2, "each frozen round bills one absent slot");
+    assert_eq!(t.fault_stats().readmissions, 1, "expiry must re-admit on probation");
+    assert_eq!(t.quarantine_rounds_left()[3], 0);
+
+    let frozen = std::env::temp_dir().join("dsm_byz_frozen.ckpt");
+    let fresh = std::env::temp_dir().join("dsm_byz_fresh.ckpt");
+    t.save_checkpoint(&frozen).unwrap();
+    Trainer::with_backend(cfg, backend()).unwrap().save_checkpoint(&fresh).unwrap();
+    let ck_frozen = Checkpoint::load(&frozen).unwrap();
+    let ck_fresh = Checkpoint::load(&fresh).unwrap();
+    std::fs::remove_file(&frozen).ok();
+    std::fs::remove_file(&fresh).ok();
+
+    // the frozen rank's state never moved off its initialization …
+    let w3_frozen = ck_frozen.with_prefix("worker3.");
+    let w3_fresh = ck_fresh.with_prefix("worker3.");
+    assert!(!w3_frozen.is_empty());
+    assert_eq!(w3_frozen, w3_fresh, "a frozen rank's worker state must not advance");
+    // … while the active ranks trained
+    assert_ne!(
+        ck_frozen.with_prefix("worker0."),
+        ck_fresh.with_prefix("worker0."),
+        "active ranks must have stepped"
+    );
+}
+
+#[test]
+fn held_rounds_advance_the_schedule_but_not_the_rng_or_outer_state() {
+    // drop_prob = 1 under the MV outer — the most trainer-RNG-hungry
+    // configuration (randomized sign votes every contribution). A held
+    // round must consume none of it: the pin is that the LR schedule
+    // and the clock move while the trainer RNG, the outer-optimizer
+    // state, and the global parameters all hold.
+    let mut cfg = mv_cfg("byz-held");
+    cfg.faults.drop_prob = 1.0;
+    let mut t = Trainer::with_backend(cfg.clone(), backend()).unwrap();
+    let before = t.params().to_vec();
+    let r0 = t.step_round().unwrap();
+    let r1 = t.step_round().unwrap();
+    assert_eq!(t.fault_stats().no_quorum_rounds, 2);
+    assert_eq!(t.fault_stats().dropped_payloads, 8);
+    assert_ne!(r0.lr, r1.lr, "the LR schedule must advance across held rounds");
+    assert_eq!(t.params(), &before[..], "a held round must not move the global");
+
+    let held = std::env::temp_dir().join("dsm_byz_held.ckpt");
+    let fresh = std::env::temp_dir().join("dsm_byz_held_fresh.ckpt");
+    t.save_checkpoint(&held).unwrap();
+    Trainer::with_backend(cfg, backend()).unwrap().save_checkpoint(&fresh).unwrap();
+    let ck_held = Checkpoint::load(&held).unwrap();
+    let ck_fresh = Checkpoint::load(&fresh).unwrap();
+    std::fs::remove_file(&held).ok();
+    std::fs::remove_file(&fresh).ok();
+
+    assert_eq!(
+        ck_held.get("trainer.rng").unwrap(),
+        ck_fresh.get("trainer.rng").unwrap(),
+        "held rounds must not consume the trainer RNG"
+    );
+    let outer_held = ck_held.with_prefix("outer.");
+    assert!(!outer_held.is_empty());
+    assert_eq!(
+        outer_held,
+        ck_fresh.with_prefix("outer."),
+        "held rounds must not advance the outer-optimizer state"
+    );
+}
+
+#[test]
+fn retries_are_counted_and_a_total_blackout_still_holds() {
+    // at drop_prob = 1 every retransmission fails too: the counters
+    // pin that each dropped payload got exactly retry_limit re-sends
+    // and the round still held with no quorum.
+    let mut cfg = avg_cfg("byz-retry");
+    cfg.faults.drop_prob = 1.0;
+    cfg.faults.retry_limit = 3;
+    let mut t = Trainer::with_backend(cfg, backend()).unwrap();
+    let res = t.run().unwrap();
+    assert_eq!(res.faults.no_quorum_rounds, 4);
+    assert_eq!(res.faults.dropped_payloads, 4 * 4);
+    assert_eq!(res.faults.retried_payloads, 4 * 4 * 3);
+}
+
+#[test]
+fn resume_with_an_active_quarantine_is_bit_identical() {
+    // checkpoint inside the liar's first freeze window: reputation,
+    // quarantine clocks, and backoff all ride the checkpoint, so the
+    // resumed run must replay the uninterrupted one bit-for-bit.
+    let mut cfg = avg_cfg("byz-resume");
+    cfg.rounds = 8;
+    cfg.n_workers = 8;
+    cfg.faults.byzantine_frac = 0.125; // exactly one liar
+    cfg.faults.attack = Attack::ScaleInflate;
+    cfg.faults.quarantine = true;
+    let mut t_full = Trainer::with_backend(cfg.clone(), backend()).unwrap();
+    let full = t_full.run().unwrap();
+
+    let mut half = cfg.clone();
+    half.rounds = 4;
+    let mut t1 = Trainer::with_backend(half, backend()).unwrap();
+    t1.run().unwrap();
+    assert!(
+        t1.quarantine_rounds_left().iter().any(|&q| q > 0),
+        "the checkpoint must land mid-quarantine for this test to bite"
+    );
+    let path = std::env::temp_dir().join("dsm_byz_resume.ckpt");
+    t1.save_checkpoint(&path).unwrap();
+
+    let mut t2 = Trainer::with_backend(cfg, backend()).unwrap();
+    t2.load_checkpoint(&path).unwrap();
+    let resumed = t2.run().unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(resumed.final_val.to_bits(), full.final_val.to_bits());
+    assert_eq!(resumed.faults, full.faults, "fault counters must resume, not restart");
+    let (ra, rb) = (t2.reputations(), t_full.reputations());
+    assert_eq!(ra.len(), rb.len());
+    for (a, b) in ra.iter().zip(rb) {
+        assert_eq!(a.to_bits(), b.to_bits(), "reputations must replay bit-for-bit");
+    }
+    assert_eq!(t2.quarantine_rounds_left(), t_full.quarantine_rounds_left());
+}
