@@ -121,6 +121,9 @@ impl RunConfig {
     pub fn paper_default(preset: &str) -> RunConfig {
         let rounds = 25;
         let tau = 12;
+        let Some(comm) = CommModel::preset("ethernet") else {
+            unreachable!("ethernet is a built-in comm preset")
+        };
         RunConfig {
             preset: preset.to_string(),
             n_workers: 4,
@@ -130,7 +133,7 @@ impl RunConfig {
             base: BaseOptConfig::adamw_paper(),
             outer: OuterConfig::sign_momentum_paper(1.0),
             schedule: ScheduleConfig::cosine_paper(default_peak_lr(preset), (rounds * tau) as u64),
-            comm: CommModel::preset("ethernet").unwrap(),
+            comm,
             seed: 42,
             eval_every: 1,
             eval_batches: 8,
@@ -283,8 +286,12 @@ impl RunConfig {
                 },
                 "local_avg" => OuterConfig::LocalAvg,
                 other => {
-                    let table = toml::parse(&format!("algo = \"{other}\"")).unwrap();
-                    OuterConfig::from_json(&table).map_err(|e| anyhow!(e))?
+                    // Hand from_json the object directly instead of
+                    // round-tripping through the TOML parser (which
+                    // would also choke on a quote in the algo name).
+                    let mut algo_obj = std::collections::BTreeMap::new();
+                    algo_obj.insert("algo".to_string(), Json::Str(other.to_string()));
+                    OuterConfig::from_json(&Json::Obj(algo_obj)).map_err(|e| anyhow!(e))?
                 }
             };
         }
@@ -440,7 +447,9 @@ impl RunConfig {
             self.tau,
             self.rounds,
             self.base.name(),
-            self.outer.name(),
+            // hyperparameter-resolved (W3): runs differing only in an
+            // outer knob (eta, beta, ...) must not share a cache key
+            self.outer.describe(),
             self.rounds,
             self.mode,
             self.faults.describe()
@@ -598,6 +607,50 @@ preset = "wan"
         assert!(cfg.describe().contains("wire=topk[62500ppm,900000ppm]"), "{}", cfg.describe());
         cfg.wire = Some(WireFormat::TopK { frac_ppm: 125_000, decay_ppm: 900_000 });
         assert!(cfg.describe().contains("wire=topk[125000ppm,900000ppm]"), "{}", cfg.describe());
+    }
+
+    #[test]
+    fn describe_splits_the_cache_key_on_outer_hyperparameters() {
+        // The W3 guarantee end to end: two runs differing only in an
+        // outer knob must produce different describe() strings (the
+        // experiment cache key), for every knob of every optimizer.
+        let base = RunConfig::paper_default("nano");
+        let with_outer = |outer: OuterConfig| {
+            let mut cfg = base.clone();
+            cfg.outer = outer;
+            cfg.describe()
+        };
+        let variants = [
+            OuterConfig::sign_momentum_paper(1.0),
+            OuterConfig::sign_momentum_paper(0.7),
+            OuterConfig::SlowMo { alpha: 1.0, beta: 0.5 },
+            OuterConfig::SlowMo { alpha: 1.0, beta: 0.6 },
+            OuterConfig::SignedSlowMo { eta: 1.0, beta: 0.5 },
+            OuterConfig::Lookahead { eta: 1.0, beta: 0.5, signed: false },
+            OuterConfig::Lookahead { eta: 1.0, beta: 0.5, signed: true },
+            OuterConfig::GlobalAdamW {
+                eta: 1.0,
+                beta1: 0.9,
+                beta2: 0.95,
+                eps: 1e-8,
+                weight_decay: 0.0,
+            },
+            OuterConfig::GlobalAdamW {
+                eta: 1.0,
+                beta1: 0.9,
+                beta2: 0.95,
+                eps: 1e-8,
+                weight_decay: 0.1,
+            },
+            OuterConfig::MvSignSgd { eta: 1.0, beta: 0.9, alpha: 0.1, bound: 1.0 },
+            OuterConfig::MvSignSgd { eta: 1.0, beta: 0.9, alpha: 0.2, bound: 1.0 },
+        ];
+        let keys: Vec<String> = variants.into_iter().map(with_outer).collect();
+        for (i, a) in keys.iter().enumerate() {
+            for b in &keys[i + 1..] {
+                assert_ne!(a, b, "cache keys collide");
+            }
+        }
     }
 
     #[test]

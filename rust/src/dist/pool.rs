@@ -28,7 +28,7 @@
 
 use std::cell::Cell;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, PoisonError};
 
 use super::div_up;
 
@@ -63,9 +63,13 @@ struct WaitGuard<'a>(&'a Shared);
 
 impl Drop for WaitGuard<'_> {
     fn drop(&mut self) {
-        let mut pending = self.0.pending.lock().unwrap();
+        // Tolerate a poisoned lock instead of panicking: this drop also
+        // runs during an unwind (a second panic would abort), and a
+        // helper that panicked mid-chunk already reports through
+        // `panicked`. The guarded state is a plain countdown counter.
+        let mut pending = self.0.pending.lock().unwrap_or_else(PoisonError::into_inner);
         while *pending > 0 {
-            pending = self.0.done.wait(pending).unwrap();
+            pending = self.0.done.wait(pending).unwrap_or_else(PoisonError::into_inner);
         }
     }
 }
@@ -105,14 +109,20 @@ impl ThreadPool {
     fn new(helpers: usize) -> ThreadPool {
         let queue =
             Arc::new(Injector { jobs: Mutex::new(Vec::new()), available: Condvar::new() });
+        // Count the helpers that actually came up: if the OS refuses a
+        // thread (resource exhaustion) the pool degrades to fewer
+        // helpers — with zero, `run` executes everything inline.
+        let mut spawned = 0;
         for _ in 0..helpers {
             let q = Arc::clone(&queue);
-            std::thread::Builder::new()
+            let helper = std::thread::Builder::new()
                 .name("dsm-collective".into())
-                .spawn(move || helper_loop(&q))
-                .expect("spawning collective pool helper");
+                .spawn(move || helper_loop(&q));
+            if helper.is_ok() {
+                spawned += 1;
+            }
         }
-        ThreadPool { queue, helpers }
+        ThreadPool { queue, helpers: spawned }
     }
 
     /// Parked helper threads (0 on single-core hosts: [`ThreadPool::run`]
@@ -151,7 +161,7 @@ impl ThreadPool {
             panicked: AtomicBool::new(false),
         });
         {
-            let mut jobs = self.queue.jobs.lock().unwrap();
+            let mut jobs = self.queue.jobs.lock().unwrap_or_else(PoisonError::into_inner);
             for _ in 0..copies {
                 jobs.push(Arc::clone(&shared));
             }
@@ -183,12 +193,12 @@ fn helper_loop(queue: &Injector) {
     IS_POOL_WORKER.with(|w| w.set(true));
     loop {
         let job = {
-            let mut jobs = queue.jobs.lock().unwrap();
+            let mut jobs = queue.jobs.lock().unwrap_or_else(PoisonError::into_inner);
             loop {
                 if let Some(job) = jobs.pop() {
                     break job;
                 }
-                jobs = queue.available.wait(jobs).unwrap();
+                jobs = queue.available.wait(jobs).unwrap_or_else(PoisonError::into_inner);
             }
         };
         let result =
@@ -198,7 +208,7 @@ fn helper_loop(queue: &Injector) {
         }
         // The unlock ordering makes the chunk writes (and the panic
         // flag) visible to the caller before its wait observes zero.
-        let mut pending = job.pending.lock().unwrap();
+        let mut pending = job.pending.lock().unwrap_or_else(PoisonError::into_inner);
         *pending -= 1;
         if *pending == 0 {
             job.done.notify_all();
@@ -210,7 +220,12 @@ fn helper_loop(queue: &Injector) {
 /// chunk index owns exactly one disjoint sub-slice.
 #[derive(Clone, Copy)]
 struct OutPtr(*mut f32);
+// SAFETY: the pointer is only dereferenced through per-chunk disjoint
+// sub-slices (one chunk index per thread), so moving it across threads
+// cannot create aliasing writes.
 unsafe impl Send for OutPtr {}
+// SAFETY: shared access copies the pointer value; all writes go through
+// the disjoint chunk windows described on `Send`.
 unsafe impl Sync for OutPtr {}
 
 fn chunk_len(len: usize, threads: usize, align: usize) -> usize {
@@ -255,7 +270,12 @@ where
 /// because the pool's dispenser hands each index to exactly one thread,
 /// so every slot is touched by at most one job.
 struct SlotPtr<T>(*mut T);
+// SAFETY: each index is dispensed to exactly one thread, so the slot at
+// any offset is touched by at most one job; T itself must be Send for
+// the value to land on another thread.
 unsafe impl<T: Send> Send for SlotPtr<T> {}
+// SAFETY: shared access copies the pointer value; all writes go through
+// the per-index disjoint slots described on `Send`.
 unsafe impl<T: Send> Sync for SlotPtr<T> {}
 
 /// Scoped fan-out over a fleet of worker-like items: execute
@@ -294,7 +314,10 @@ where
     });
     results
         .into_iter()
-        .map(|r| r.expect("pool ran every job index exactly once"))
+        .map(|r| match r {
+            Some(v) => v,
+            None => unreachable!("the pool dispenser yields every job index exactly once"),
+        })
         .collect()
 }
 
@@ -330,7 +353,10 @@ where
     });
     results
         .into_iter()
-        .map(|r| r.expect("pool ran every job index exactly once"))
+        .map(|r| match r {
+            Some(v) => v,
+            None => unreachable!("the pool dispenser yields every job index exactly once"),
+        })
         .collect()
 }
 

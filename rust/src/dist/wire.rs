@@ -529,7 +529,9 @@ impl WirePayload {
                     residual: vec![0.0; layout.param_count()],
                 }
             }
-            other => WirePayload::with_len(other, layout.param_count()),
+            WireFormat::DenseF32 | WireFormat::PackedSigns | WireFormat::QuantizedI8 => {
+                WirePayload::with_len(format, layout.param_count())
+            }
         }
     }
 
@@ -587,7 +589,10 @@ impl WirePayload {
     pub fn as_dense(&self) -> Option<&[f32]> {
         match self {
             WirePayload::DenseF32(v) => Some(v),
-            _ => None,
+            WirePayload::PackedSigns(_)
+            | WirePayload::QuantizedI8 { .. }
+            | WirePayload::QuantizedI8PerTensor { .. }
+            | WirePayload::TopK { .. } => None,
         }
     }
 
@@ -595,7 +600,10 @@ impl WirePayload {
     pub fn as_packed_signs(&self) -> Option<&PackedVotes> {
         match self {
             WirePayload::PackedSigns(p) => Some(p),
-            _ => None,
+            WirePayload::DenseF32(_)
+            | WirePayload::QuantizedI8 { .. }
+            | WirePayload::QuantizedI8PerTensor { .. }
+            | WirePayload::TopK { .. } => None,
         }
     }
 
@@ -605,7 +613,9 @@ impl WirePayload {
         match self {
             WirePayload::QuantizedI8PerTensor { layout, .. } => Some(layout),
             WirePayload::TopK { layout, .. } => Some(layout),
-            _ => None,
+            WirePayload::DenseF32(_)
+            | WirePayload::PackedSigns(_)
+            | WirePayload::QuantizedI8 { .. } => None,
         }
     }
 
@@ -615,7 +625,9 @@ impl WirePayload {
         match self {
             WirePayload::QuantizedI8 { scale, .. } => Some(std::slice::from_ref(scale)),
             WirePayload::QuantizedI8PerTensor { scales, .. } => Some(scales),
-            _ => None,
+            WirePayload::DenseF32(_)
+            | WirePayload::PackedSigns(_)
+            | WirePayload::TopK { .. } => None,
         }
     }
 
@@ -627,7 +639,10 @@ impl WirePayload {
     pub fn residual(&self) -> Option<&[f32]> {
         match self {
             WirePayload::TopK { residual, .. } => Some(residual),
-            _ => None,
+            WirePayload::DenseF32(_)
+            | WirePayload::PackedSigns(_)
+            | WirePayload::QuantizedI8 { .. }
+            | WirePayload::QuantizedI8PerTensor { .. } => None,
         }
     }
 
@@ -636,7 +651,10 @@ impl WirePayload {
     pub fn residual_mut(&mut self) -> Option<&mut [f32]> {
         match self {
             WirePayload::TopK { residual, .. } => Some(residual),
-            _ => None,
+            WirePayload::DenseF32(_)
+            | WirePayload::PackedSigns(_)
+            | WirePayload::QuantizedI8 { .. }
+            | WirePayload::QuantizedI8PerTensor { .. } => None,
         }
     }
 
@@ -746,12 +764,15 @@ impl WirePayload {
     /// On a dense or quantized buffer — sign votes only have the 1-bit
     /// encoding (again unreachable under a validated config).
     pub fn pack_sign_votes(&mut self, votes: &[f32]) {
+        let format = self.format();
         match self {
             WirePayload::PackedSigns(p) => p.pack_into(votes),
-            other => panic!(
-                "sign votes need a packed_signs payload, got {}",
-                other.format().name()
-            ),
+            WirePayload::DenseF32(_)
+            | WirePayload::QuantizedI8 { .. }
+            | WirePayload::QuantizedI8PerTensor { .. }
+            | WirePayload::TopK { .. } => {
+                panic!("sign votes need a packed_signs payload, got {}", format.name())
+            }
         }
     }
 
@@ -834,7 +855,10 @@ impl WirePayload {
             WirePayload::DenseF32(_) => {
                 collectives::allreduce_mean(
                     payloads,
-                    |p| p.as_dense().expect("format checked above"),
+                    |p| match p.as_dense() {
+                        Some(v) => v,
+                        None => unreachable!("format checked above"),
+                    },
                     out,
                 );
             }
@@ -1434,7 +1458,10 @@ impl WirePayload {
             WirePayload::PackedSigns(_) => {
                 let members: Vec<&PackedVotes> = chunk
                     .iter()
-                    .map(|p| p.as_packed_signs().expect("format checked by the caller"))
+                    .map(|p| match p.as_packed_signs() {
+                        Some(v) => v,
+                        None => unreachable!("format checked by the caller"),
+                    })
                     .collect();
                 let mut tally = vec![0.0f32; len];
                 votes::majority_vote_packed(&members, &mut tally);
@@ -1564,6 +1591,35 @@ mod tests {
         assert_eq!(pt.wire_bytes(), WireFormat::QuantizedI8PerTensor.wire_bytes(16, 2));
         // one scale more than the per-message format
         assert_eq!(pt.wire_bytes(), WireFormat::QuantizedI8.wire_bytes(16, 1) + 4);
+    }
+
+    #[test]
+    fn accessors_pin_the_per_variant_contract() {
+        // Pins what the W1 wildcard expansion made explicit: which
+        // accessor answers for which format (scales() covers both
+        // quantized encodings; layout() the layout-carrying ones), so a
+        // new wire format must decide every accessor on purpose rather
+        // than inherit a silent None from a `_ =>` arm.
+        let layout = two_segment_layout(5, 11);
+        for format in ALL_FORMATS {
+            let mut p = WirePayload::with_layout(format, &layout);
+            assert_eq!(p.as_dense().is_some(), format == WireFormat::DenseF32);
+            assert_eq!(p.as_packed_signs().is_some(), format == WireFormat::PackedSigns);
+            assert_eq!(
+                p.scales().is_some(),
+                matches!(format, WireFormat::QuantizedI8 | WireFormat::QuantizedI8PerTensor),
+                "{}",
+                format.name()
+            );
+            assert_eq!(
+                p.layout().is_some(),
+                matches!(format, WireFormat::QuantizedI8PerTensor | WireFormat::TopK { .. }),
+                "{}",
+                format.name()
+            );
+            assert_eq!(p.residual().is_some(), matches!(format, WireFormat::TopK { .. }));
+            assert_eq!(p.residual_mut().is_some(), matches!(format, WireFormat::TopK { .. }));
+        }
     }
 
     #[test]
@@ -2020,6 +2076,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 4096-element payloads x 12 rounds x 5 formats: minutes under miri
     fn corrupt_draw_count_is_shape_independent_per_format() {
         // the fault stream must advance the same number of RNG draws
         // whatever the payload's shape or which branch lands — else a

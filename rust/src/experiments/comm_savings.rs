@@ -68,7 +68,9 @@ pub fn run(h: &Harness) -> Result<()> {
     let p = info.param_count;
     let segments = info.layout.len();
     for net in ["nvlink", "infiniband", "ethernet", "wan"] {
-        let model = CommModel::preset(net).unwrap();
+        let Some(model) = CommModel::preset(net) else {
+            unreachable!("`{net}` is a built-in comm preset")
+        };
         let mut t = Table::new(&[
             "Alg.",
             "wire",
@@ -79,7 +81,9 @@ pub fn run(h: &Harness) -> Result<()> {
             "final val",
         ]);
         for (name, wire, s) in &runs {
-            let last = s.log.rows.last().unwrap();
+            let Some(last) = s.log.rows.last() else {
+                anyhow::bail!("run `{name}` logged no eval rows")
+            };
             let comm_rounds = last.comm_rounds;
             // compute seconds: measured; comm: re-costed under this net
             let compute_s = last.sim_time_s; // free-net run: time == compute

@@ -106,7 +106,10 @@ pub fn cell(
     cfg.seed = SEED;
     // experiments run on the "free" network: trajectories are identical on
     // any link, and comm_savings re-costs communication analytically.
-    cfg.comm = crate::comm::CommModel::preset("none").unwrap();
+    let Some(free_net) = crate::comm::CommModel::preset("none") else {
+        unreachable!("`none` is a built-in comm preset")
+    };
+    cfg.comm = free_net;
     cfg.eval_every = (rounds / 10).max(1);
     cfg.eval_batches = 4;
     cfg.corpus_bytes = 2 << 20;

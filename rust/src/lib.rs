@@ -15,6 +15,46 @@
 //!
 //! Entry points: the `repro` binary (train / experiment / data / inspect),
 //! the [`train::Trainer`] API, and `examples/`.
+//!
+//! ## Standing invariants and how they are enforced
+//!
+//! The fleet simulator's correctness rests on a handful of cross-file
+//! contracts that the type system cannot see. They are enforced
+//! mechanically by the in-tree linter `tools/invlint` (a zero-dependency
+//! workspace member: `cargo run -p invlint`), which also runs as the
+//! tier-1 test `tests/invariants.rs`, so `cargo test -q` fails on any
+//! violation. One rule per guarantee:
+//!
+//! * **W1 — wire exhaustiveness.** No catch-all (`_ =>` or binding)
+//!   arms in `match`es over `WirePayload` / `WireFormat` variants in
+//!   `dist/wire.rs`. Adding a wire format must force every accessor,
+//!   size rule, and codec path to be revisited, not silently fall into
+//!   a default.
+//! * **W2 — checkpoint key parity.** Every key written by
+//!   `train/checkpoint.rs` save paths is read by a load path and vice
+//!   versa (including `format!`-templated and `with_prefix` keys).
+//!   A checkpoint that round-trips is the resume guarantee.
+//! * **W3 — cache-key completeness.** Every field of `OuterConfig` and
+//!   `FaultPlan` appears in its `describe()`: two runs differing in any
+//!   knob must not share an experiment-cache entry.
+//! * **W4 — billing discipline.** No numeric byte arithmetic at
+//!   `SimClock::charge_*` call sites; all sizes flow through
+//!   `WireFormat::wire_bytes`, the one place the byte rule lives.
+//! * **W5 — RNG-stream hygiene.** Fault injection (`comm/faults.rs`)
+//!   and supervisor scoring stay off the training RNG streams, so
+//!   enabling faults cannot perturb a seeded run's trajectory.
+//! * **W6 — no `unwrap`/`expect` outside tests.** Library code
+//!   propagates errors (`?` / `bail!`) or documents impossibility with
+//!   `unreachable!`; a worker thread must not abort the fleet.
+//! * **W7 — `SAFETY:` comments.** Every `unsafe` block or impl carries
+//!   an adjacent `// SAFETY:` justification, and
+//!   `#![deny(unsafe_op_in_unsafe_fn)]` keeps unsafe scopes explicit.
+//!
+//! A site that must break a rule carries an inline waiver comment,
+//! `// invlint: allow(WN) -- reason`, which the linter honors and a
+//! reviewer can grep.
+
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod comm;
 pub mod config;

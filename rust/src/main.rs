@@ -199,7 +199,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             println!("artifacts dir: {:?}", arts.dir);
             println!(
                 "sign_update kernel: {:?} (chunk {})",
-                arts.sign_update_file.file_name().unwrap(),
+                arts.sign_update_file.file_name().unwrap_or(arts.sign_update_file.as_os_str()),
                 arts.sign_update_chunk
             );
             for (name, p) in &arts.presets {

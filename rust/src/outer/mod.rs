@@ -363,6 +363,41 @@ impl OuterConfig {
             OuterConfig::MvSignSgd { .. } => "mv_signsgd",
         }
     }
+
+    /// Hyperparameter-resolved form of [`OuterConfig::name`] for run
+    /// descriptions and the experiment cache key: every parsed field
+    /// appears here, so two runs differing in any outer knob never
+    /// collide in [`crate::config::RunConfig::describe`]. The invariant
+    /// linter (rule W3) checks this list against the declared fields
+    /// mechanically.
+    pub fn describe(&self) -> String {
+        match *self {
+            OuterConfig::SignMomentum { eta, beta1, beta2, weight_decay, sign_op, sign_bound } => {
+                format!(
+                    "sign_momentum[eta={eta},b1={beta1},b2={beta2},wd={weight_decay},\
+                     sign={},bound={sign_bound}]",
+                    sign_op.name()
+                )
+            }
+            OuterConfig::SlowMo { alpha, beta } => format!("slowmo[alpha={alpha},beta={beta}]"),
+            OuterConfig::SignedSlowMo { eta, beta } => {
+                format!("signed_slowmo[eta={eta},beta={beta}]")
+            }
+            OuterConfig::Lookahead { eta, beta, signed: _ } => {
+                format!("{}[eta={eta},beta={beta}]", self.name())
+            }
+            OuterConfig::GlobalAdamW { eta, beta1, beta2, eps, weight_decay } => {
+                format!(
+                    "global_adamw[eta={eta},b1={beta1},b2={beta2},eps={eps},\
+                     wd={weight_decay}]"
+                )
+            }
+            OuterConfig::LocalAvg => "local_avg".to_string(),
+            OuterConfig::MvSignSgd { eta, beta, alpha, bound } => {
+                format!("mv_signsgd[eta={eta},beta={beta},alpha={alpha},bound={bound}]")
+            }
+        }
+    }
 }
 
 /// Drive one outer round on a synthetic single-worker context where the
@@ -393,8 +428,9 @@ pub fn run_synthetic_round(
     opt.contribute(0, 1, &view, &mut rng, &mut payload);
     let ctx = RoundCtx { start: &start, gamma, round, agg: AggPolicy::Mean };
     global.copy_from_slice(&start);
-    opt.apply(global, &ctx, std::slice::from_ref(&payload), &mut rng)
-        .expect("synthetic round failed");
+    if let Err(e) = opt.apply(global, &ctx, std::slice::from_ref(&payload), &mut rng) {
+        panic!("synthetic round failed: {e}");
+    }
 }
 
 #[cfg(test)]

@@ -155,9 +155,9 @@ impl OuterOptimizer for MvSignSgd {
         );
         let packed: Vec<&PackedVotes> = payloads
             .iter()
-            .map(|p| {
-                p.as_packed_signs()
-                    .expect("mv_signsgd exchanges packed sign votes (validated config)")
+            .map(|p| match p.as_packed_signs() {
+                Some(v) => v,
+                None => unreachable!("mv_signsgd exchanges packed sign votes (validated config)"),
             })
             .collect();
         // word-level majority tally over the packed votes, never

@@ -96,8 +96,10 @@ impl NativeBundle {
         let mut off = 0usize;
         push_entry(&mut entries, &mut off, "native.embed".into(), vec![VOCAB, d_model]);
         push_entry(&mut entries, &mut off, "native.out".into(), vec![d_model, VOCAB]);
-        let layout = ParamLayout::from_entries(entries, param_count)
-            .expect("MLP layout is tiled by construction");
+        let layout = match ParamLayout::from_entries(entries, param_count) {
+            Ok(l) => l,
+            Err(e) => unreachable!("MLP layout is tiled by construction: {e}"),
+        };
         NativeBundle {
             info: PresetInfo {
                 name: name.to_string(),
@@ -152,8 +154,10 @@ impl NativeBundle {
         }
         push_entry(&mut entries, &mut off, "head.out".into(), vec![d, VOCAB]);
         let param_count = off;
-        let layout = ParamLayout::from_entries(entries, param_count)
-            .expect("transformer layout is tiled by construction");
+        let layout = match ParamLayout::from_entries(entries, param_count) {
+            Ok(l) => l,
+            Err(e) => unreachable!("transformer layout is tiled by construction: {e}"),
+        };
         NativeBundle {
             info: PresetInfo {
                 name: name.to_string(),

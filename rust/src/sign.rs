@@ -31,6 +31,16 @@ impl SignOp {
         }
     }
 
+    /// Stable config-facing name (inverse of [`SignOp::parse`]) — what
+    /// [`crate::outer::OuterConfig::describe`] folds into the cache key.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SignOp::Exact => "exact",
+            SignOp::RandPm => "rand_pm",
+            SignOp::RandZero => "rand_zero",
+        }
+    }
+
     /// Apply the operator to `v` with scale bound `b`, writing into `out`.
     ///
     /// `b` must satisfy ‖v‖ ≥ ... the *caller* guarantees ‖v‖ ≤ b (the

@@ -71,7 +71,9 @@ impl Checkpoint {
         f.write_all(&(header.len() as u32).to_le_bytes())?;
         f.write_all(header.as_bytes())?;
         for (_, buf) in &self.buffers {
-            // safety: plain f32 -> bytes
+            // SAFETY: any f32 bit pattern is valid as [u8; 4]; the
+            // pointer and byte length cover exactly the live Vec<f32>
+            // allocation, and u8 has no alignment requirement.
             let bytes: &[u8] =
                 unsafe { std::slice::from_raw_parts(buf.as_ptr() as *const u8, buf.len() * 4) };
             f.write_all(bytes)?;

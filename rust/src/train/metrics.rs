@@ -121,7 +121,7 @@ impl RunLog {
             .iter()
             .filter(|r| !r.val_loss.is_nan())
             .map(|r| r.val_loss)
-            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .min_by(|a, b| a.total_cmp(b)) // identical order: NaN rows are filtered out
     }
 
     /// (x, val_loss) curve against the chosen axis.
@@ -240,7 +240,7 @@ pub fn ascii_chart(
             "         |".to_string()
         };
         out.push_str(&label);
-        out.push_str(std::str::from_utf8(row).unwrap());
+        out.push_str(&String::from_utf8_lossy(row)); // plot rows are ASCII marks
         out.push('\n');
     }
     out.push_str(&format!("          +{}\n", "-".repeat(width)));

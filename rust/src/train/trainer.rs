@@ -525,9 +525,9 @@ impl Trainer {
                 }
             }
             if !active.iter().any(|&x| x) {
-                let w = (0..n)
-                    .find(|&w| self.quarantine_left[w] == 0)
-                    .expect("quarantine is capped below the fleet size");
+                let Some(w) = (0..n).find(|&w| self.quarantine_left[w] == 0) else {
+                    unreachable!("quarantine is capped below the fleet size")
+                };
                 active[w] = true;
             }
         }

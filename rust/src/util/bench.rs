@@ -107,7 +107,7 @@ impl Bencher {
             samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
             total_iters += batch;
         }
-        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        samples.sort_by(f64::total_cmp); // identical order: samples are finite and positive
         let mean = samples.iter().sum::<f64>() / samples.len() as f64;
         let pct = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
         let result = BenchResult {
@@ -120,7 +120,10 @@ impl Bencher {
         };
         println!("{}", result.report());
         self.results.push(result);
-        self.results.last().unwrap()
+        let Some(latest) = self.results.last() else {
+            unreachable!("a result was just pushed")
+        };
+        latest
     }
 
     pub fn results(&self) -> &[BenchResult] {

@@ -32,8 +32,7 @@ impl Args {
                     out.flags.insert(k.to_string(), v.to_string());
                 } else if known_bools.contains(&flag) {
                     out.bools.push(flag.to_string());
-                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                    let v = it.next().unwrap();
+                } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
                     out.flags.insert(flag.to_string(), v);
                 } else {
                     out.bools.push(flag.to_string());

@@ -222,7 +222,7 @@ impl Zipf {
             acc += 1.0 / (k as f64).powf(s);
             cdf.push(acc);
         }
-        let total = *cdf.last().unwrap();
+        let total = cdf[n - 1]; // n > 0 is asserted; cdf has exactly n entries
         for v in cdf.iter_mut() {
             *v /= total;
         }

@@ -1,0 +1,22 @@
+//! Tier-1 gate: the in-tree invariant linter (`tools/invlint`) must pass
+//! on `rust/src`. This is the same pass `cargo run -p invlint` executes;
+//! wiring it into `cargo test -q` means deleting a `WirePayload` match
+//! arm, dropping a checkpoint save-key read, or parking a config knob
+//! outside `describe()` fails the build, not just the CI lint job.
+
+use std::path::Path;
+
+#[test]
+fn live_tree_passes_invlint() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let violations = match invlint::lint_tree(&root) {
+        Ok(v) => v,
+        Err(e) => panic!("cannot walk {}: {e}", root.display()),
+    };
+    assert!(
+        violations.is_empty(),
+        "invlint found {} violation(s) in rust/src:\n{}",
+        violations.len(),
+        invlint::render(&violations)
+    );
+}

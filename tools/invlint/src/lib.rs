@@ -1,0 +1,1135 @@
+//! In-tree invariant linter for the `dsm` crate (`cargo run -p invlint`).
+//!
+//! Zero dependencies and a hand-rolled lexer (the vendored-crates policy
+//! rules out `syn`). The rules are *repo-specific* invariants that a green
+//! build must make unrepresentable; each is individually testable against
+//! the fixtures under `tools/invlint/tests/fixtures/`:
+//!
+//! * **W1 — wire-contract exhaustiveness.** In `dist/wire.rs`, a `match`
+//!   whose arm patterns name `WirePayload::` / `WireFormat::` variants may
+//!   not carry a `_ =>` (or catch-all binding) arm: every contract
+//!   function names every variant, so a new wire format fails the lint —
+//!   and the build — until every site handles it.
+//! * **W2 — checkpoint key parity.** Every `ck.add("key", ..)` on the
+//!   save path must have a matching `ck.get(..)` / `ck.with_prefix(..)`
+//!   on the load path, and vice versa. `format!` keys match by wildcard
+//!   (`"worker{w}.rng"` pairs with `"worker{}.rng"`). Checkpoint handles
+//!   are named `ck` by convention so the lint can see them; keys must be
+//!   string literals or `format!` of one.
+//! * **W3 — cache-key discipline.** Every declared field of
+//!   `OuterConfig` / `FaultPlan` must be named inside the type's
+//!   `describe()` body: a knob that does not reach the experiment cache
+//!   key silently reuses stale results.
+//! * **W4 — billing discipline.** Outside `comm/mod.rs`, no numeric
+//!   literal or arithmetic may appear at the top level of a
+//!   `charge_*(..)` argument list: byte counts reach `SimClock` through
+//!   `wire_bytes()` (or a binding of it), never an inline formula that
+//!   can drift from the data path. Indexing (`payloads[0]`) is exempt.
+//! * **W5 — RNG-stream hygiene.** `comm/faults.rs` (fault *policy* —
+//!   pure data) and supervisor functions may not reference RNG
+//!   identifiers, and `charge_*` arguments may not draw from `self.rng`
+//!   (the trainer stream): fault timing rides the dedicated `fault_rng`.
+//! * **W6 — no `.unwrap()` / `.expect(..)`** outside `#[cfg(test)]`.
+//! * **W7 — documented `unsafe`.** Every `unsafe` token needs a
+//!   `// SAFETY:` comment within the six preceding lines.
+//!
+//! A finding can be waived with a comment `invlint: allow(W6)` on the
+//! same or the preceding line; the live tree currently needs no waivers.
+
+use std::ops::Range;
+use std::path::Path;
+
+/// Token classes the rules care about. Lifetimes are dropped at lex time;
+/// char literals lex as empty `Str` tokens so their quotes cannot confuse
+/// string detection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub msg: String,
+}
+
+/// A lexed source file: tokens, a parallel "is inside `#[cfg(test)]`"
+/// mask, and the comment list (for `SAFETY:` and waiver lookups).
+pub struct SourceFile {
+    rel: String,
+    toks: Vec<Tok>,
+    in_test: Vec<bool>,
+    comments: Vec<(usize, String)>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, text: &str) -> SourceFile {
+        let (toks, comments) = lex(text);
+        let in_test = test_mask(&toks);
+        SourceFile { rel: rel.to_string(), toks, in_test, comments }
+    }
+
+    fn waived(&self, rule: &str, line: usize) -> bool {
+        let tag = format!("invlint: allow({rule})");
+        self.comments.iter().any(|(l, c)| (*l == line || *l + 1 == line) && c.contains(&tag))
+    }
+}
+
+// ---------------------------------------------------------------- lexer
+
+fn lex(text: &str) -> (Vec<Tok>, Vec<(usize, String)>) {
+    let b: Vec<char> = text.chars().collect();
+    let n = b.len();
+    let mut toks = Vec::new();
+    let mut comments = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let start = i;
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            comments.push((line, b[start..i].iter().collect()));
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let (start, start_line) = (i, line);
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            comments.push((start_line, b[start..i.min(n)].iter().collect()));
+            continue;
+        }
+        if c == '"' || c == 'r' || c == 'b' {
+            if let Some((content, hashes, raw)) = string_open(&b, i) {
+                let mut j = content;
+                while j < n {
+                    let ch = b[j];
+                    if ch == '\n' {
+                        line += 1;
+                        j += 1;
+                    } else if !raw && ch == '\\' {
+                        j += 2;
+                    } else if ch == '"' {
+                        if raw {
+                            let closed = (1..=hashes).all(|k| b.get(j + k) == Some(&'#'));
+                            if closed {
+                                break;
+                            }
+                            j += 1;
+                        } else {
+                            break;
+                        }
+                    } else {
+                        j += 1;
+                    }
+                }
+                let content_text: String = b[content..j.min(n)].iter().collect();
+                toks.push(Tok { kind: Kind::Str, text: content_text, line });
+                i = (j + 1 + hashes).min(n);
+                continue;
+            }
+        }
+        if c == '\'' {
+            // Lifetime: 'ident not closed by a quote right after.
+            if i + 1 < n && (b[i + 1].is_alphabetic() || b[i + 1] == '_') {
+                let mut k = i + 2;
+                while k < n && (b[k].is_alphanumeric() || b[k] == '_') {
+                    k += 1;
+                }
+                if b.get(k) != Some(&'\'') {
+                    i = k;
+                    continue;
+                }
+            }
+            // Char literal (possibly escaped).
+            let mut k = i + 1;
+            if b.get(k) == Some(&'\\') {
+                k += 2;
+            } else {
+                k += 1;
+            }
+            while k < n && b[k] != '\'' {
+                k += 1;
+            }
+            toks.push(Tok { kind: Kind::Str, text: String::new(), line });
+            i = (k + 1).min(n);
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let start = i;
+            while i < n && (b[i].is_alphanumeric() || b[i] == '_') {
+                i += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let start = i;
+            while i < n {
+                let d = b[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' && b.get(i + 1).is_some_and(|x| x.is_ascii_digit()) {
+                    i += 1;
+                } else if (d == '+' || d == '-')
+                    && matches!(b.get(i.wrapping_sub(1)), Some('e' | 'E'))
+                    && b.get(i + 1).is_some_and(|x| x.is_ascii_digit())
+                {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            toks.push(Tok { kind: Kind::Num, text: b[start..i].iter().collect(), line });
+            continue;
+        }
+        const TWO: [&str; 16] = [
+            "::", "=>", "->", "..", "<<", ">>", "&&", "||", "==", "!=", "<=", ">=", "+=", "-=",
+            "*=", "/=",
+        ];
+        let pair: String = b[i..n.min(i + 2)].iter().collect();
+        if TWO.contains(&pair.as_str()) {
+            toks.push(Tok { kind: Kind::Punct, text: pair, line });
+            i += 2;
+            continue;
+        }
+        toks.push(Tok { kind: Kind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    (toks, comments)
+}
+
+/// If position `i` opens a (possibly raw / byte) string literal, return
+/// `(content_start, n_hashes, is_raw)`.
+fn string_open(b: &[char], i: usize) -> Option<(usize, usize, bool)> {
+    let mut j = i;
+    if b.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if b.get(j) == Some(&'r') {
+        let mut k = j + 1;
+        let mut hashes = 0usize;
+        while b.get(k) == Some(&'#') {
+            hashes += 1;
+            k += 1;
+        }
+        if b.get(k) == Some(&'"') {
+            return Some((k + 1, hashes, true));
+        }
+        return None; // an identifier starting with r / br
+    }
+    if b.get(j) == Some(&'"') {
+        return Some((j + 1, 0, false));
+    }
+    None
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == Kind::Punct && t.text == s
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == Kind::Ident && t.text == s
+}
+
+/// Index of the delimiter matching `toks[open]` (counting only the
+/// `o`/`c` pair — comments and strings are already out of the stream).
+fn match_delim(toks: &[Tok], open: usize, o: &str, c: &str) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        if is_punct(&toks[i], o) {
+            depth += 1;
+        } else if is_punct(&toks[i], c) {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+/// Mark every token covered by a `#[cfg(test)]` item (the attribute, any
+/// stacked attributes after it, and the item body through its closing
+/// brace or semicolon).
+fn test_mask(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i < toks.len() {
+        if !(is_punct(&toks[i], "#") && i + 1 < toks.len() && is_punct(&toks[i + 1], "[")) {
+            i += 1;
+            continue;
+        }
+        let close = match_delim(toks, i + 1, "[", "]");
+        let inner = &toks[i + 2..close.min(toks.len())];
+        let is_test = inner.first().is_some_and(|t| is_ident(t, "cfg"))
+            && inner.iter().any(|t| is_ident(t, "test"))
+            && !inner.iter().any(|t| is_ident(t, "not"));
+        if !is_test {
+            i = close + 1;
+            continue;
+        }
+        // Skip any further stacked attributes, then span the item.
+        let mut j = close + 1;
+        while j + 1 < toks.len() && is_punct(&toks[j], "#") && is_punct(&toks[j + 1], "[") {
+            j = match_delim(toks, j + 1, "[", "]") + 1;
+        }
+        let mut depth = 0i64;
+        let mut k = j;
+        let end = loop {
+            if k >= toks.len() {
+                break toks.len();
+            }
+            if toks[k].kind == Kind::Punct {
+                match toks[k].text.as_str() {
+                    "(" | "[" => depth += 1,
+                    ")" | "]" => depth -= 1,
+                    "{" if depth == 0 => break match_delim(toks, k, "{", "}") + 1,
+                    ";" if depth == 0 => break k + 1,
+                    _ => {}
+                }
+            }
+            k += 1;
+        };
+        for m in mask.iter_mut().take(end.min(toks.len())).skip(i) {
+            *m = true;
+        }
+        i = end;
+    }
+    mask
+}
+
+// ---------------------------------------------------------------- rules
+
+fn push(out: &mut Vec<Violation>, f: &SourceFile, rule: &'static str, line: usize, msg: String) {
+    if f.waived(rule, line) {
+        return;
+    }
+    out.push(Violation { rule, file: f.rel.clone(), line, msg });
+}
+
+/// Scrutinee ends at the first `{` at depth 0; `match` in expression
+/// position never puts a bare `{` in the scrutinee.
+fn find_match_body(toks: &[Tok], m: usize) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut k = m + 1;
+    while k < toks.len() {
+        if toks[k].kind == Kind::Punct {
+            match toks[k].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                "{" if depth == 0 => return Some(k),
+                ";" if depth == 0 => return None,
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Pattern token ranges of every arm in the match body opening at `open`.
+fn match_arm_patterns(toks: &[Tok], open: usize) -> Vec<Range<usize>> {
+    let close = match_delim(toks, open, "{", "}");
+    let mut arms = Vec::new();
+    let mut i = open + 1;
+    while i < close {
+        let pat_start = i;
+        let mut depth = 0i64;
+        let mut guard = None;
+        while i < close {
+            let t = &toks[i];
+            if t.kind == Kind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    "=>" if depth == 0 => break,
+                    _ => {}
+                }
+            }
+            if depth == 0 && is_ident(t, "if") && guard.is_none() {
+                guard = Some(i);
+            }
+            i += 1;
+        }
+        if i >= close {
+            break;
+        }
+        arms.push(pat_start..guard.unwrap_or(i));
+        i += 1; // past `=>`
+        if i < close && is_punct(&toks[i], "{") {
+            i = match_delim(toks, i, "{", "}") + 1;
+            if i < close && is_punct(&toks[i], ",") {
+                i += 1;
+            }
+        } else {
+            let mut d = 0i64;
+            while i < close {
+                let t = &toks[i];
+                if t.kind == Kind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" => d += 1,
+                        ")" | "]" | "}" => d -= 1,
+                        "," if d == 0 => {
+                            i += 1;
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+                i += 1;
+            }
+        }
+    }
+    arms
+}
+
+fn pattern_is_catch_all(pat: &[Tok]) -> bool {
+    let toks: Vec<&Tok> = pat
+        .iter()
+        .filter(|t| !(is_ident(t, "ref") || is_ident(t, "mut")))
+        .collect();
+    if toks.len() != 1 {
+        return false;
+    }
+    let t = toks[0];
+    is_punct(t, "_")
+        || (t.kind == Kind::Ident
+            && t.text.chars().next().is_some_and(|c| c.is_lowercase() || c == '_'))
+}
+
+/// W1: in `dist/wire.rs`, matches over the wire contract enums must name
+/// every variant — no `_ =>` and no catch-all binding arm.
+fn w1_wire_exhaustiveness(f: &SourceFile, out: &mut Vec<Violation>) {
+    if f.rel != "dist/wire.rs" {
+        return;
+    }
+    for (mi, t) in f.toks.iter().enumerate() {
+        if f.in_test[mi] || !is_ident(t, "match") {
+            continue;
+        }
+        let Some(open) = find_match_body(&f.toks, mi) else {
+            continue;
+        };
+        let arms = match_arm_patterns(&f.toks, open);
+        let on_contract = arms.iter().any(|a| {
+            f.toks[a.clone()].windows(2).any(|w| {
+                (is_ident(&w[0], "WirePayload") || is_ident(&w[0], "WireFormat"))
+                    && is_punct(&w[1], "::")
+            })
+        });
+        if !on_contract {
+            continue;
+        }
+        for a in &arms {
+            let pat = &f.toks[a.clone()];
+            if !pat.is_empty() && pattern_is_catch_all(pat) {
+                push(
+                    out,
+                    f,
+                    "W1",
+                    pat[0].line,
+                    format!(
+                        "catch-all arm `{}` in a WirePayload/WireFormat match: name every \
+                         variant so a new wire format fails the build at every contract site",
+                        pat[0].text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// W2: checkpoint key parity. Keys are collected across the whole file set
+// and reconciled at the end.
+
+#[derive(Default)]
+pub struct CkIndex {
+    saves: Vec<CkKey>,
+    gets: Vec<CkKey>,
+    prefixes: Vec<CkKey>,
+}
+
+struct CkKey {
+    pattern: String,
+    file: String,
+    line: usize,
+    waived: bool,
+}
+
+fn w2_collect(f: &SourceFile, idx: &mut CkIndex, out: &mut Vec<Violation>) {
+    let toks = &f.toks;
+    let mut i = 0usize;
+    while i + 3 < toks.len() {
+        if f.in_test[i]
+            || !is_ident(&toks[i], "ck")
+            || !is_punct(&toks[i + 1], ".")
+            || !is_punct(&toks[i + 3], "(")
+        {
+            i += 1;
+            continue;
+        }
+        let method = toks[i + 2].text.clone();
+        if toks[i + 2].kind != Kind::Ident
+            || (method != "add" && method != "get" && method != "with_prefix")
+        {
+            i += 1;
+            continue;
+        }
+        let line = toks[i].line;
+        match first_arg_key(toks, i + 4) {
+            Some(raw) => {
+                let key = CkKey {
+                    pattern: normalize_key(&raw),
+                    file: f.rel.clone(),
+                    line,
+                    waived: f.waived("W2", line),
+                };
+                match method.as_str() {
+                    "add" => idx.saves.push(key),
+                    "get" => idx.gets.push(key),
+                    _ => idx.prefixes.push(key),
+                }
+            }
+            None => push(
+                out,
+                f,
+                "W2",
+                line,
+                format!(
+                    "checkpoint `{method}` key is not a string literal or `format!` of one — \
+                     key parity cannot be checked mechanically"
+                ),
+            ),
+        }
+        i += 4;
+    }
+}
+
+/// First argument of a checkpoint call, if it is a string literal or a
+/// `format!` with a literal template (optionally behind `&`).
+fn first_arg_key(toks: &[Tok], mut j: usize) -> Option<String> {
+    if j < toks.len() && is_punct(&toks[j], "&") {
+        j += 1;
+    }
+    if j < toks.len() && toks[j].kind == Kind::Str {
+        return Some(toks[j].text.clone());
+    }
+    if j + 3 < toks.len()
+        && is_ident(&toks[j], "format")
+        && is_punct(&toks[j + 1], "!")
+        && is_punct(&toks[j + 2], "(")
+        && toks[j + 3].kind == Kind::Str
+    {
+        return Some(toks[j + 3].text.clone());
+    }
+    None
+}
+
+/// `format!` template -> wildcard pattern: `{..}` becomes `*`, `{{`/`}}`
+/// become literal braces.
+fn normalize_key(raw: &str) -> String {
+    let chars: Vec<char> = raw.chars().collect();
+    let mut out = String::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        match chars[i] {
+            '{' if chars.get(i + 1) == Some(&'{') => {
+                out.push('{');
+                i += 2;
+            }
+            '}' if chars.get(i + 1) == Some(&'}') => {
+                out.push('}');
+                i += 2;
+            }
+            '{' => {
+                while i < chars.len() && chars[i] != '}' {
+                    i += 1;
+                }
+                i += 1;
+                out.push('*');
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Can two `*`-wildcard patterns match a common concrete string? A `*`
+/// matches a (possibly empty) run of non-`.` characters: every live
+/// interpolation is an integer id, and letting a star swallow a `.`
+/// would make `worker*.opt*` shadow `worker*.rng` — deleting the rng
+/// save line must fail the lint, not hide behind a sibling key family.
+fn patterns_overlap(a: &str, b: &str) -> bool {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let (la, lb) = (a.len(), b.len());
+    let mut dp = vec![vec![false; lb + 1]; la + 1];
+    dp[la][lb] = true;
+    for i in (0..=la).rev() {
+        for j in (0..=lb).rev() {
+            if i == la && j == lb {
+                continue;
+            }
+            let mut v = false;
+            if i < la && a[i] == '*' {
+                v = v || dp[i + 1][j] || (j < lb && b[j] != '.' && dp[i][j + 1]);
+            }
+            if j < lb && b[j] == '*' {
+                v = v || dp[i][j + 1] || (i < la && a[i] != '.' && dp[i + 1][j]);
+            }
+            if i < la && j < lb && a[i] != '*' && b[j] != '*' && a[i] == b[j] {
+                v = v || dp[i + 1][j + 1];
+            }
+            dp[i][j] = v;
+        }
+    }
+    dp[0][0]
+}
+
+fn w2_reconcile(idx: &CkIndex, out: &mut Vec<Violation>) {
+    let prefix_overlap = |save: &str, prefix: &str| patterns_overlap(save, &format!("{prefix}*"));
+    for s in &idx.saves {
+        let read = idx.gets.iter().any(|g| patterns_overlap(&s.pattern, &g.pattern))
+            || idx.prefixes.iter().any(|p| prefix_overlap(&s.pattern, &p.pattern));
+        if !read && !s.waived {
+            out.push(Violation {
+                rule: "W2",
+                file: s.file.clone(),
+                line: s.line,
+                msg: format!(
+                    "checkpoint key `{}` is written on the save path but never read back \
+                     (the PR-4 resume-divergence bug class)",
+                    s.pattern
+                ),
+            });
+        }
+    }
+    for g in &idx.gets {
+        let written = idx.saves.iter().any(|s| patterns_overlap(&s.pattern, &g.pattern));
+        if !written && !g.waived {
+            out.push(Violation {
+                rule: "W2",
+                file: g.file.clone(),
+                line: g.line,
+                msg: format!(
+                    "checkpoint key `{}` is read but never written on the save path",
+                    g.pattern
+                ),
+            });
+        }
+    }
+    for p in &idx.prefixes {
+        let written = idx.saves.iter().any(|s| prefix_overlap(&s.pattern, &p.pattern));
+        if !written && !p.waived {
+            out.push(Violation {
+                rule: "W2",
+                file: p.file.clone(),
+                line: p.line,
+                msg: format!("checkpoint prefix `{}` matches no key on the save path", p.pattern),
+            });
+        }
+    }
+}
+
+// W3: cache-key discipline.
+
+const W3_TYPES: [&str; 2] = ["OuterConfig", "FaultPlan"];
+
+fn w3_cache_key(f: &SourceFile, out: &mut Vec<Violation>) {
+    for ty in W3_TYPES {
+        let Some((decl_line, fields)) = declared_fields(f, ty) else {
+            continue;
+        };
+        let Some(body) = describe_body(f, ty) else {
+            push(
+                out,
+                f,
+                "W3",
+                decl_line,
+                format!("`{ty}` is declared here but has no `describe()` in an `impl {ty}` block"),
+            );
+            continue;
+        };
+        for (field, fline) in &fields {
+            let named = f.toks[body.clone()]
+                .iter()
+                .any(|t| t.kind == Kind::Ident && t.text == *field);
+            if !named {
+                push(
+                    out,
+                    f,
+                    "W3",
+                    *fline,
+                    format!(
+                        "`{ty}::{field}` never appears in `{ty}::describe()` — the experiment \
+                         cache key would not split on it"
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// Field identifiers declared in `struct ty { .. }` / `enum ty { .. }`
+/// (for enums: the named fields of every struct-like variant).
+fn declared_fields(f: &SourceFile, ty: &str) -> Option<(usize, Vec<(String, usize)>)> {
+    let toks = &f.toks;
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        let kw = is_ident(&toks[i], "struct") || is_ident(&toks[i], "enum");
+        if !kw || !is_ident(&toks[i + 1], ty) || f.in_test[i] {
+            i += 1;
+            continue;
+        }
+        let decl_line = toks[i].line;
+        let mut j = i + 2;
+        while j < toks.len() && !is_punct(&toks[j], "{") {
+            if is_punct(&toks[j], ";") {
+                return Some((decl_line, Vec::new()));
+            }
+            j += 1;
+        }
+        if j >= toks.len() {
+            return None;
+        }
+        let close = match_delim(toks, j, "{", "}");
+        let mut fields = Vec::new();
+        let mut k = j + 1;
+        while k + 1 < close {
+            if toks[k].kind == Kind::Ident && is_punct(&toks[k + 1], ":") {
+                fields.push((toks[k].text.clone(), toks[k].line));
+            }
+            k += 1;
+        }
+        return Some((decl_line, fields));
+    }
+    None
+}
+
+/// Token range of the `describe()` body inside any `impl ty { .. }`.
+fn describe_body(f: &SourceFile, ty: &str) -> Option<Range<usize>> {
+    let toks = &f.toks;
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if !is_ident(&toks[i], "impl") || !is_ident(&toks[i + 1], ty) || f.in_test[i] {
+            i += 1;
+            continue;
+        }
+        if !is_punct(&toks[i + 2], "{") {
+            i += 1;
+            continue;
+        }
+        let close = match_delim(toks, i + 2, "{", "}");
+        let mut j = i + 3;
+        while j + 1 < close {
+            if is_ident(&toks[j], "fn") && is_ident(&toks[j + 1], "describe") {
+                return fn_body_range(toks, j + 2);
+            }
+            j += 1;
+        }
+        i = close + 1;
+    }
+    None
+}
+
+/// Body range of a fn whose signature starts at `from` (just past the
+/// name); `None` for a bodyless trait method.
+fn fn_body_range(toks: &[Tok], from: usize) -> Option<Range<usize>> {
+    let mut depth = 0i64;
+    let mut k = from;
+    while k < toks.len() {
+        if toks[k].kind == Kind::Punct {
+            match toks[k].text.as_str() {
+                "(" | "[" => depth += 1,
+                ")" | "]" => depth -= 1,
+                ";" if depth == 0 => return None,
+                "{" if depth == 0 => return Some(k..match_delim(toks, k, "{", "}")),
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    None
+}
+
+/// Argument token ranges of every non-test `charge_*(..)` call.
+fn charge_call_args(f: &SourceFile) -> Vec<(usize, Range<usize>)> {
+    let toks = &f.toks;
+    let mut calls = Vec::new();
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        let hit = !f.in_test[i]
+            && is_punct(&toks[i], ".")
+            && toks[i + 1].kind == Kind::Ident
+            && toks[i + 1].text.starts_with("charge_")
+            && is_punct(&toks[i + 2], "(");
+        if !hit {
+            i += 1;
+            continue;
+        }
+        let close = match_delim(toks, i + 2, "(", ")");
+        calls.push((i + 1, i + 3..close));
+        i = close;
+    }
+    calls
+}
+
+/// W4: byte counts must flow through `wire_bytes()` — no literals or
+/// arithmetic at the top level of a `charge_*` argument list.
+fn w4_billing(f: &SourceFile, out: &mut Vec<Violation>) {
+    if f.rel == "comm/mod.rs" {
+        return;
+    }
+    for (name_idx, args) in charge_call_args(f) {
+        let name = f.toks[name_idx].text.clone();
+        let mut bracket = 0i64;
+        for t in &f.toks[args] {
+            match t.kind {
+                Kind::Punct => match t.text.as_str() {
+                    "[" => bracket += 1,
+                    "]" => bracket -= 1,
+                    "+" | "-" | "*" | "/" | "%" | "<<" | ">>" if bracket == 0 => {
+                        push(
+                            out,
+                            f,
+                            "W4",
+                            t.line,
+                            format!(
+                                "arithmetic `{}` in a `{name}` argument: byte counts reach the \
+                                 clock through wire_bytes(), never an inline formula",
+                                t.text
+                            ),
+                        );
+                    }
+                    _ => {}
+                },
+                Kind::Num if bracket == 0 => {
+                    push(
+                        out,
+                        f,
+                        "W4",
+                        t.line,
+                        format!(
+                            "numeric literal `{}` in a `{name}` argument: byte counts reach the \
+                             clock through wire_bytes()",
+                            t.text
+                        ),
+                    );
+                }
+                _ => {}
+            }
+        }
+    }
+}
+
+/// W5: RNG-stream hygiene.
+fn w5_rng_hygiene(f: &SourceFile, out: &mut Vec<Violation>) {
+    let toks = &f.toks;
+    if f.rel == "comm/faults.rs" {
+        for (i, t) in toks.iter().enumerate() {
+            let is_rng = t.kind == Kind::Ident && t.text.to_ascii_lowercase().contains("rng");
+            if !f.in_test[i] && is_rng {
+                push(
+                    out,
+                    f,
+                    "W5",
+                    t.line,
+                    format!(
+                        "`{}` in comm/faults.rs: the fault plan is pure policy data — draws \
+                         happen on the trainer's dedicated fault stream",
+                        t.text
+                    ),
+                );
+            }
+        }
+    }
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        let supervisor_fn = !f.in_test[i]
+            && is_ident(&toks[i], "fn")
+            && toks[i + 1].kind == Kind::Ident
+            && (toks[i + 1].text.contains("supervisor") || toks[i + 1].text == "score_survivors");
+        if supervisor_fn {
+            if let Some(body) = fn_body_range(toks, i + 2) {
+                for t in &toks[body] {
+                    if t.kind == Kind::Ident && t.text.to_ascii_lowercase().contains("rng") {
+                        push(
+                            out,
+                            f,
+                            "W5",
+                            t.line,
+                            format!(
+                                "`{}` inside `{}`: supervisor scoring must stay deterministic \
+                                 (no trainer/worker/fault RNG)",
+                                t.text, toks[i + 1].text
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    for (name_idx, args) in charge_call_args(f) {
+        let args_toks = &toks[args];
+        for w in args_toks.windows(3) {
+            if is_ident(&w[0], "self") && is_punct(&w[1], ".") && is_ident(&w[2], "rng") {
+                push(
+                    out,
+                    f,
+                    "W5",
+                    w[0].line,
+                    format!(
+                        "`self.rng` in a `{}` argument: fault/straggler timing draws from the \
+                         dedicated fault_rng stream, not the trainer stream",
+                        toks[name_idx].text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+/// W6: no `.unwrap()` / `.expect(..)` outside `#[cfg(test)]`.
+fn w6_unwrap(f: &SourceFile, out: &mut Vec<Violation>) {
+    let toks = &f.toks;
+    let mut i = 0usize;
+    while i + 2 < toks.len() {
+        if !f.in_test[i] && is_punct(&toks[i], ".") && is_punct(&toks[i + 2], "(") {
+            if is_ident(&toks[i + 1], "unwrap") && toks.get(i + 3).is_some_and(|t| is_punct(t, ")"))
+            {
+                push(
+                    out,
+                    f,
+                    "W6",
+                    toks[i + 1].line,
+                    "`.unwrap()` outside #[cfg(test)]: match / let-else on the named invariant, \
+                     or propagate the error"
+                        .to_string(),
+                );
+            } else if is_ident(&toks[i + 1], "expect") {
+                push(
+                    out,
+                    f,
+                    "W6",
+                    toks[i + 1].line,
+                    "`.expect(..)` outside #[cfg(test)]: match / let-else on the named \
+                     invariant, or propagate the error"
+                        .to_string(),
+                );
+            }
+        }
+        i += 1;
+    }
+}
+
+/// W7: every `unsafe` needs a `// SAFETY:` comment within six lines above.
+fn w7_safety(f: &SourceFile, out: &mut Vec<Violation>) {
+    for (i, t) in f.toks.iter().enumerate() {
+        if f.in_test[i] || !is_ident(t, "unsafe") {
+            continue;
+        }
+        let near = f
+            .comments
+            .iter()
+            .any(|(l, c)| *l <= t.line && t.line - *l <= 6 && c.contains("SAFETY:"));
+        if !near {
+            push(
+                out,
+                f,
+                "W7",
+                t.line,
+                "`unsafe` without a `// SAFETY:` comment in the six preceding lines".to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------- driver
+
+/// Lint a set of `(relative_path, source_text)` pairs. Paths use `/`
+/// separators relative to `rust/src` (path-scoped rules key on them).
+pub fn lint_sources(files: &[(String, String)]) -> Vec<Violation> {
+    let parsed: Vec<SourceFile> = files.iter().map(|(r, t)| SourceFile::parse(r, t)).collect();
+    let mut out = Vec::new();
+    let mut ck = CkIndex::default();
+    for f in &parsed {
+        w1_wire_exhaustiveness(f, &mut out);
+        w2_collect(f, &mut ck, &mut out);
+        w3_cache_key(f, &mut out);
+        w4_billing(f, &mut out);
+        w5_rng_hygiene(f, &mut out);
+        w6_unwrap(f, &mut out);
+        w7_safety(f, &mut out);
+    }
+    w2_reconcile(&ck, &mut out);
+    out.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));
+    out
+}
+
+/// Walk a source root (normally `rust/src`) and lint every `.rs` file.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    files.sort();
+    Ok(lint_sources(&files))
+}
+
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<(String, String)>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let stripped = path.strip_prefix(root).unwrap_or(&path);
+            let rel = stripped.to_string_lossy().replace('\\', "/");
+            out.push((rel, std::fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+/// One line per violation, `file:line [rule] message`.
+pub fn render(violations: &[Violation]) -> String {
+    let mut s = String::new();
+    for v in violations {
+        s.push_str(&format!("{}:{} [{}] {}\n", v.file, v.line, v.rule, v.msg));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_handles_strings_comments_chars_and_lifetimes() {
+        let src = r##"
+            // line "comment"
+            /* block /* nested */ still comment */
+            fn f<'a>(x: &'a str) -> char {
+                let s = "quoted \" brace {";
+                let r = r#"raw " text"#;
+                let b = b"bytes";
+                let c = '{';
+                let d = '\'';
+                's'
+            }
+        "##;
+        let (toks, comments) = lex(src);
+        assert_eq!(comments.len(), 2);
+        let strs: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == Kind::Str && !t.text.is_empty())
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(strs, [r#"quoted \" brace {"#, r#"raw " text"#, "bytes"]);
+        // The brace inside the char literal must not unbalance anything.
+        let opens = toks.iter().filter(|t| is_punct(t, "{")).count();
+        let closes = toks.iter().filter(|t| is_punct(t, "}")).count();
+        assert_eq!(opens, closes);
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_modules_only() {
+        let src = r#"
+            fn live() { x.unwrap(); }
+            #[cfg(test)]
+            mod tests {
+                #[test]
+                fn t() { y.unwrap(); }
+            }
+            fn also_live() { z.unwrap(); }
+        "#;
+        let f = SourceFile::parse("m.rs", src);
+        let mut out = Vec::new();
+        w6_unwrap(&f, &mut out);
+        assert_eq!(out.len(), 2, "{out:?}");
+        assert_eq!(out[0].line, 2);
+        assert_eq!(out[1].line, 8);
+    }
+
+    #[test]
+    fn waiver_comment_suppresses_a_finding() {
+        let src = "fn f() {\n    x.unwrap(); // invlint: allow(W6) lexer-verified\n}\n";
+        let f = SourceFile::parse("m.rs", src);
+        let mut out = Vec::new();
+        w6_unwrap(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+
+    #[test]
+    fn key_patterns_overlap_like_format_keys() {
+        assert!(patterns_overlap("worker*.rng", "worker*.rng"));
+        assert!(patterns_overlap(&normalize_key("worker{w}.rng"), "worker*.rng"));
+        assert!(patterns_overlap("global", "global"));
+        assert!(!patterns_overlap("meta.local_step", "meta.local_step64"));
+        assert!(!patterns_overlap("trainer.rng", "trainer.fault_rng"));
+        // with_prefix("outer.") reads keys saved as outer.{i}
+        assert!(patterns_overlap("outer.*", &format!("{}{}", normalize_key("outer."), "*")));
+        assert_eq!(normalize_key("w{{x}}y{i}"), "w{x}y*");
+        // a star never swallows a `.`: sibling key families stay disjoint,
+        // so deleting one family's save line cannot hide behind another's
+        assert!(!patterns_overlap("worker*.rng", "worker*.opt*"));
+        assert!(!patterns_overlap("worker*.topk_residual", "worker*.opt*"));
+    }
+
+    #[test]
+    fn w5_flags_trainer_stream_in_charge_args_but_not_fault_rng() {
+        let src = "fn round(&mut self) {\n    self.clock.charge_exchange(&self.cfg.comm, n, \
+                   &p, &mut self.rng);\n}\n";
+        let f = SourceFile::parse("train/trainer.rs", src);
+        let mut out = Vec::new();
+        w5_rng_hygiene(&f, &mut out);
+        assert_eq!(out.len(), 1, "{out:?}");
+        let ok = "fn round(&mut self) {\n    self.clock.charge_exchange(&self.cfg.comm, n, \
+                  &p, &mut self.fault_rng);\n}\n";
+        let f = SourceFile::parse("train/trainer.rs", ok);
+        let mut out = Vec::new();
+        w5_rng_hygiene(&f, &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,27 @@
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+/// `cargo run -p invlint [src-root]` — lints `rust/src` by default and
+/// exits non-zero on any violation (the same pass tier-1 runs from
+/// `rust/tests/invariants.rs`).
+fn main() -> ExitCode {
+    let root = match std::env::args().nth(1) {
+        Some(p) => PathBuf::from(p),
+        None => PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../../rust/src"),
+    };
+    match invlint::lint_tree(&root) {
+        Ok(v) if v.is_empty() => {
+            println!("invlint: {} is clean (rules W1-W7)", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(v) => {
+            eprint!("{}", invlint::render(&v));
+            eprintln!("invlint: {} violation(s)", v.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("invlint: cannot walk {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}

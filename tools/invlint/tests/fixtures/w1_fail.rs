@@ -1,0 +1,16 @@
+// W1 failing fixture: catch-all arms in WirePayload/WireFormat matches.
+impl WirePayload {
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            WirePayload::DenseF32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn layout(&self) -> Option<&TopKLayout> {
+        match self {
+            WirePayload::TopK { layout, .. } => Some(layout),
+            other => None,
+        }
+    }
+}

@@ -1,0 +1,30 @@
+// W1 clean fixture: every WirePayload match names every variant; matches
+// over non-contract types may still use wildcards, and string-keyed
+// parse() matches (open input set) are out of scope for the rule.
+impl WirePayload {
+    pub fn as_dense(&self) -> Option<&[f32]> {
+        match self {
+            WirePayload::DenseF32(v) => Some(v),
+            WirePayload::PackedSigns(_)
+            | WirePayload::QuantizedI8 { .. }
+            | WirePayload::QuantizedI8PerTensor { .. }
+            | WirePayload::TopK { .. } => None,
+        }
+    }
+}
+
+impl WireFormat {
+    pub fn parse(s: &str) -> Option<WireFormat> {
+        match s {
+            "dense" => Some(WireFormat::DenseF32),
+            _ => None,
+        }
+    }
+}
+
+fn unrelated(x: Option<u32>) -> u32 {
+    match x {
+        Some(v) => v,
+        _ => 0,
+    }
+}

@@ -1,0 +1,13 @@
+// W2 failing fixture: one orphan save key and one orphan read key.
+impl Trainer {
+    fn save_into(&self, ck: &mut Checkpoint) {
+        ck.add("trainer.clock", &self.clock_words());
+        ck.add("trainer.orphan", &self.orphan_words());
+    }
+
+    fn load_from(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.load_clock(ck.get("trainer.clock")?);
+        self.load_ghost(ck.get("trainer.ghost")?);
+        Ok(())
+    }
+}

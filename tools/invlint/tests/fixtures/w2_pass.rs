@@ -1,0 +1,20 @@
+// W2 clean fixture: every save key has a load-path read (directly, via a
+// format! wildcard, or via with_prefix) and vice versa.
+impl Trainer {
+    fn save_into(&self, ck: &mut Checkpoint) {
+        ck.add("global", &self.global);
+        ck.add(&format!("outer.{i}", i = 0), &self.outer_words());
+        for w in &self.workers {
+            ck.add(&format!("worker{}.rng", w.id), &w.rng_words());
+        }
+    }
+
+    fn load_from(&mut self, ck: &Checkpoint) -> Result<()> {
+        self.global = ck.get("global")?.to_vec();
+        self.load_outer(ck.with_prefix("outer."));
+        for w in &mut self.workers {
+            w.load_rng(ck.get(&format!("worker{}.rng", w.id))?);
+        }
+        Ok(())
+    }
+}

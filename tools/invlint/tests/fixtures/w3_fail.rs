@@ -1,0 +1,12 @@
+// W3 failing fixture: a declared knob (drop_prob) that describe() never
+// names — the experiment cache key would not split on it.
+pub struct FaultPlan {
+    pub churn_prob: f64,
+    pub drop_prob: f64,
+}
+
+impl FaultPlan {
+    pub fn describe(&self) -> String {
+        format!("faults[churn={}]", self.churn_prob)
+    }
+}

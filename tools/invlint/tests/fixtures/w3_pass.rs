@@ -1,0 +1,26 @@
+// W3 clean fixture: every declared field of both audited types is named
+// in its describe() body.
+pub struct FaultPlan {
+    pub churn_prob: f64,
+    pub drop_prob: f64,
+}
+
+impl FaultPlan {
+    pub fn describe(&self) -> String {
+        format!("faults[churn={},drop={}]", self.churn_prob, self.drop_prob)
+    }
+}
+
+pub enum OuterConfig {
+    SignMomentum { eta: f32, beta: f32 },
+    LocalAvg,
+}
+
+impl OuterConfig {
+    pub fn describe(&self) -> String {
+        match *self {
+            OuterConfig::SignMomentum { eta, beta } => format!("signm[eta={eta},beta={beta}]"),
+            OuterConfig::LocalAvg => "localavg".to_string(),
+        }
+    }
+}

@@ -1,0 +1,8 @@
+// W4 failing fixture: an inline byte formula in a charge_* argument.
+impl Trainer {
+    fn bill_round(&mut self, n: usize, p: usize) {
+        self.clock
+            .charge_allreduce(&self.cfg.comm, n, p / 8 + 8, &mut self.fault_rng);
+        self.clock.charge_exchange(&self.cfg.comm, 2, &self.payload, &mut self.fault_rng);
+    }
+}

@@ -1,0 +1,10 @@
+// W4 clean fixture: byte counts reach the clock through wire_bytes()
+// (or a binding of it); indexing inside an argument is exempt.
+impl Trainer {
+    fn bill_round(&mut self, n: usize) {
+        let bytes = self.payloads[0].wire_bytes();
+        self.clock.charge_allreduce(&self.cfg.comm, n, bytes, &mut self.fault_rng);
+        self.clock
+            .charge_exchange_among(&self.cfg.comm, n, arrived, &self.payloads[0], &mut self.fault_rng);
+    }
+}

@@ -1,0 +1,7 @@
+// W5 failing fixture (lints as comm/faults.rs): the fault plan drawing
+// its own randomness instead of staying pure policy data.
+impl FaultPlan {
+    pub fn worker_dropped(&self, rng: &mut Rng) -> bool {
+        rng.next_f64() < self.drop_prob
+    }
+}

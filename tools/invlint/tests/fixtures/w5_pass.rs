@@ -1,0 +1,11 @@
+// W5 clean fixture (lints as comm/faults.rs): pure policy data — the
+// trainer draws from its dedicated fault stream and hands outcomes in.
+impl FaultPlan {
+    pub fn describe(&self) -> String {
+        format!("faults[drop={}]", self.drop_prob)
+    }
+
+    pub fn any_enabled(&self) -> bool {
+        self.drop_prob > 0.0
+    }
+}

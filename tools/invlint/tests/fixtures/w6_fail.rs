@@ -1,0 +1,5 @@
+// W6 failing fixture: unwrap/expect on the live (non-test) path.
+pub fn load(path: &Path) -> Config {
+    let text = std::fs::read_to_string(path).unwrap();
+    parse(&text).expect("config parses")
+}

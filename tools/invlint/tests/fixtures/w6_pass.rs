@@ -1,0 +1,15 @@
+// W6 clean fixture: the live path propagates errors; tests may unwrap.
+pub fn load(path: &Path) -> Result<Config> {
+    let text = std::fs::read_to_string(path)?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_the_sample() {
+        load(Path::new("sample.toml")).unwrap();
+    }
+}

@@ -1,0 +1,4 @@
+// W7 failing fixture: an undocumented unsafe block.
+pub fn as_bytes(buf: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(buf.as_ptr().cast::<u8>(), buf.len() * 4) }
+}

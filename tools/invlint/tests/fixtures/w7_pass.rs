@@ -1,0 +1,7 @@
+// W7 clean fixture: every unsafe carries a SAFETY comment close above.
+pub fn as_bytes(buf: &[f32]) -> &[u8] {
+    // SAFETY: any f32 bit pattern is a valid [u8; 4]; the pointer and
+    // length come from the same live slice, and u8 has no alignment
+    // requirement.
+    unsafe { std::slice::from_raw_parts(buf.as_ptr().cast::<u8>(), buf.len() * 4) }
+}

@@ -1,0 +1,109 @@
+//! Fixture tests: every rule has a true-positive fixture it must flag and
+//! a clean fixture it must pass. Fixtures are data (never compiled), fed
+//! through `lint_sources` under the relative path that triggers the
+//! rule's scoping (`dist/wire.rs` for W1, `comm/faults.rs` for W5).
+
+use invlint::{lint_sources, Violation};
+
+fn lint_as(rel: &str, text: &str) -> Vec<Violation> {
+    lint_sources(&[(rel.to_string(), text.to_string())])
+}
+
+fn hits<'a>(v: &'a [Violation], rule: &str) -> Vec<&'a Violation> {
+    v.iter().filter(|x| x.rule == rule).collect()
+}
+
+#[test]
+fn w1_flags_catch_all_arms_in_wire_contract_matches() {
+    let bad = lint_as("dist/wire.rs", include_str!("fixtures/w1_fail.rs"));
+    let w1 = hits(&bad, "W1");
+    assert_eq!(w1.len(), 2, "{bad:?}"); // `_ =>` and a binding `other =>`
+    assert!(w1[0].msg.contains("catch-all"), "{:?}", w1[0]);
+
+    let good = lint_as("dist/wire.rs", include_str!("fixtures/w1_pass.rs"));
+    assert!(hits(&good, "W1").is_empty(), "{good:?}");
+
+    // The rule is scoped to dist/wire.rs: the same catch-all elsewhere
+    // (e.g. a config-level match on WireFormat) is allowed.
+    let elsewhere = lint_as("config/mod.rs", include_str!("fixtures/w1_fail.rs"));
+    assert!(hits(&elsewhere, "W1").is_empty(), "{elsewhere:?}");
+}
+
+#[test]
+fn w2_flags_orphan_saves_and_orphan_reads() {
+    let bad = lint_as("train/trainer.rs", include_str!("fixtures/w2_fail.rs"));
+    let w2 = hits(&bad, "W2");
+    assert_eq!(w2.len(), 2, "{bad:?}");
+    assert!(w2.iter().any(|v| v.msg.contains("trainer.orphan") && v.msg.contains("never read")));
+    assert!(w2.iter().any(|v| v.msg.contains("trainer.ghost") && v.msg.contains("never written")));
+
+    let good = lint_as("train/trainer.rs", include_str!("fixtures/w2_pass.rs"));
+    assert!(hits(&good, "W2").is_empty(), "{good:?}");
+}
+
+#[test]
+fn w3_flags_knobs_missing_from_describe() {
+    let bad = lint_as("comm/faults.rs", include_str!("fixtures/w3_fail.rs"));
+    let w3 = hits(&bad, "W3");
+    assert_eq!(w3.len(), 1, "{bad:?}");
+    assert!(w3[0].msg.contains("drop_prob"), "{:?}", w3[0]);
+
+    let good = lint_as("comm/faults.rs", include_str!("fixtures/w3_pass.rs"));
+    assert!(hits(&good, "W3").is_empty(), "{good:?}");
+}
+
+#[test]
+fn w4_flags_inline_byte_formulas_in_charge_calls() {
+    let bad = lint_as("train/trainer.rs", include_str!("fixtures/w4_fail.rs"));
+    assert!(!hits(&bad, "W4").is_empty(), "{bad:?}");
+
+    let good = lint_as("train/trainer.rs", include_str!("fixtures/w4_pass.rs"));
+    assert!(hits(&good, "W4").is_empty(), "{good:?}");
+
+    // comm/mod.rs is the one place byte formulas are legal (it *defines*
+    // the cost model).
+    let model = lint_as("comm/mod.rs", include_str!("fixtures/w4_fail.rs"));
+    assert!(hits(&model, "W4").is_empty(), "{model:?}");
+}
+
+#[test]
+fn w5_flags_rng_references_in_fault_policy_code() {
+    let bad = lint_as("comm/faults.rs", include_str!("fixtures/w5_fail.rs"));
+    assert!(!hits(&bad, "W5").is_empty(), "{bad:?}");
+
+    let good = lint_as("comm/faults.rs", include_str!("fixtures/w5_pass.rs"));
+    assert!(hits(&good, "W5").is_empty(), "{good:?}");
+}
+
+#[test]
+fn w6_flags_unwrap_and_expect_outside_tests() {
+    let bad = lint_as("config/mod.rs", include_str!("fixtures/w6_fail.rs"));
+    let w6 = hits(&bad, "W6");
+    assert_eq!(w6.len(), 2, "{bad:?}");
+
+    let good = lint_as("config/mod.rs", include_str!("fixtures/w6_pass.rs"));
+    assert!(hits(&good, "W6").is_empty(), "{good:?}");
+}
+
+#[test]
+fn w7_requires_safety_comments_on_unsafe() {
+    let bad = lint_as("train/checkpoint.rs", include_str!("fixtures/w7_fail.rs"));
+    assert_eq!(hits(&bad, "W7").len(), 1, "{bad:?}");
+
+    let good = lint_as("train/checkpoint.rs", include_str!("fixtures/w7_pass.rs"));
+    assert!(hits(&good, "W7").is_empty(), "{good:?}");
+}
+
+#[test]
+fn live_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
+    let violations = match invlint::lint_tree(&root) {
+        Ok(v) => v,
+        Err(e) => panic!("cannot walk {}: {e}", root.display()),
+    };
+    assert!(
+        violations.is_empty(),
+        "invlint found violations in the live tree:\n{}",
+        invlint::render(&violations)
+    );
+}
