@@ -1,0 +1,204 @@
+//! Scalar-vs-kernel microbenches for the hot-path word/byte kernels
+//! (`dist::kernels`) and the blocked matmul (`runtime::gemm`) — the
+//! recorded before/after trajectory of the raw-speed pass.
+//!
+//!     cargo bench --bench kernels              # human-readable table
+//!     cargo bench --bench kernels -- --json    # also write BENCH_kernels.json
+//!     cargo bench --bench kernels -- --quick   # shorter budget (CI)
+//!
+//! Every `scalar` baseline is the pre-kernel implementation preserved
+//! verbatim in-tree (`tally_word_ref`, `quantize_diff_ref`,
+//! `topk_partition_ref`, `matmul_naive`); the differential tests in
+//! `dist/kernels.rs` and `runtime/gemm.rs` prove each pair
+//! bitwise-identical, so these rows measure *only* speed. Rows cover
+//! P ∈ {2^16, 2^20}; `BENCH_kernels.json` lands at the workspace root
+//! and is uploaded as a CI artifact by the `kernels-bench` job.
+
+use dsm::dist::{codec, kernels};
+use dsm::runtime::gemm;
+use dsm::util::bench::{black_box, Bencher};
+use dsm::util::rng::Rng;
+
+struct Row {
+    name: &'static str,
+    p: usize,
+    scalar_ns: f64,
+    kernel_ns: f64,
+}
+
+impl Row {
+    fn speedup(&self) -> f64 {
+        self.scalar_ns / self.kernel_ns
+    }
+}
+
+fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+    let mut v = vec![0.0f32; n];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let json = args.iter().any(|a| a == "--json");
+    let quick = args.iter().any(|a| a == "--quick");
+    let mut b = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut rng = Rng::new(17);
+    let mut rows: Vec<Row> = Vec::new();
+
+    for &p in &[1usize << 16, 1 << 20] {
+        println!("== P = {p} ==");
+
+        // ---- packed-sign majority tally (bit-sliced strip kernel) ----
+        let n_ranks = 16usize;
+        let levels = 5usize; // counters cover 16 ranks
+        let threshold = (n_ranks / 2) as u64;
+        let packed_len = codec::packed_len(p);
+        // P is a power of two ≥ 2^16, so the packed byte count is an
+        // exact multiple of 8 and the word count needs no rounding.
+        let n_words = packed_len / 8;
+        let packed: Vec<Vec<u8>> =
+            (0..n_ranks).map(|_| codec::pack_signs(&randn(&mut rng, p))).collect();
+        let slices: Vec<&[u8]> = packed.iter().map(|v| v.as_slice()).collect();
+        let tally_bytes = Some((n_ranks * packed_len) as u64);
+        let scalar_ns = b
+            .bench_with_bytes(&format!("tally/scalar P={p}"), tally_bytes, || {
+                let mut acc = 0u64;
+                for wi in 0..n_words {
+                    acc ^= kernels::tally_word_ref(&slices, wi, levels, threshold);
+                }
+                black_box(acc);
+            })
+            .mean_ns;
+        let kernel_ns = b
+            .bench_with_bytes(&format!("tally/kernel P={p}"), tally_bytes, || {
+                let mut winners = [0u64; kernels::STRIP_WORDS];
+                let mut acc = 0u64;
+                let mut base = 0usize;
+                while base < n_words {
+                    let nw = kernels::STRIP_WORDS.min(n_words - base);
+                    kernels::tally_strip(&slices, base, nw, levels, threshold, &mut winners);
+                    for w in &winners[..nw] {
+                        acc ^= w;
+                    }
+                    base += nw;
+                }
+                black_box(acc);
+            })
+            .mean_ns;
+        rows.push(Row { name: "tally", p, scalar_ns, kernel_ns });
+
+        // ---- q8 quantize (lane-split abs-max + scaled rounding) ----
+        let start = randn(&mut rng, p);
+        let delta = randn(&mut rng, p);
+        let end: Vec<f32> = start.iter().zip(&delta).map(|(s, d)| s - 0.01 * d).collect();
+        let mut out = vec![0u8; p];
+        let q_bytes = Some((9 * p) as u64); // two f32 reads + one byte write
+        let scalar_ns = b
+            .bench_with_bytes(&format!("q8_quantize/scalar P={p}"), q_bytes, || {
+                black_box(kernels::quantize_diff_ref(&start, &end, &mut out));
+            })
+            .mean_ns;
+        let kernel_ns = b
+            .bench_with_bytes(&format!("q8_quantize/kernel P={p}"), q_bytes, || {
+                black_box(codec::quantize_diff_slice(&start, &end, &mut out));
+            })
+            .mean_ns;
+        rows.push(Row { name: "q8_quantize", p, scalar_ns, kernel_ns });
+
+        // ---- q8 dequantize-accumulate (the mean-decode inner loop) ----
+        let scale = 0.0123f32;
+        let qbytes: Vec<u8> = out.clone();
+        let mut acc = vec![0.0f64; p];
+        let dq_bytes = Some((9 * p) as u64); // one byte read + one f64 rmw
+        let scalar_ns = b
+            .bench_with_bytes(&format!("q8_dequant/scalar P={p}"), dq_bytes, || {
+                for (a, &byte) in acc.iter_mut().zip(&qbytes) {
+                    *a += codec::dequantize_i8(byte, scale) as f64;
+                }
+                black_box(&acc);
+            })
+            .mean_ns;
+        acc.fill(0.0);
+        let kernel_ns = b
+            .bench_with_bytes(&format!("q8_dequant/kernel P={p}"), dq_bytes, || {
+                kernels::dequant_accumulate(&qbytes, scale, &mut acc);
+                black_box(&acc);
+            })
+            .mean_ns;
+        rows.push(Row { name: "q8_dequant", p, scalar_ns, kernel_ns });
+
+        // ---- top-k select (packed-key partition, k = P/16) ----
+        let k = p / 16;
+        let residual = randn(&mut rng, p);
+        let mut scratch: Vec<u32> = Vec::new();
+        let scalar_ns = b
+            .bench_with_bytes(&format!("topk_select/scalar P={p}"), Some((4 * p) as u64), || {
+                kernels::topk_partition_ref(&residual, k, &mut scratch);
+                black_box(scratch[0]);
+            })
+            .mean_ns;
+        let kernel_ns = b
+            .bench_with_bytes(&format!("topk_select/kernel P={p}"), Some((4 * p) as u64), || {
+                kernels::topk_partition(&residual, k, &mut scratch);
+                black_box(scratch[0]);
+            })
+            .mean_ns;
+        rows.push(Row { name: "topk_select", p, scalar_ns, kernel_ns });
+
+        // ---- blocked matmul (m = n = √P, k = 64) ----
+        let m = (p as f64).sqrt() as usize;
+        let kdim = 64usize;
+        let a = randn(&mut rng, m * kdim);
+        let bmat = randn(&mut rng, kdim * m);
+        let mut prod = vec![0.0f32; m * m];
+        let mm_bytes = Some(((m * kdim + kdim * m + m * m) * 4) as u64);
+        let scalar_ns = b
+            .bench_with_bytes(&format!("matmul/naive {m}x{kdim}x{m}"), mm_bytes, || {
+                gemm::matmul_naive(&mut prod, &a, &bmat, m, kdim, m);
+                black_box(prod[0]);
+            })
+            .mean_ns;
+        let kernel_ns = b
+            .bench_with_bytes(&format!("matmul/blocked {m}x{kdim}x{m}"), mm_bytes, || {
+                gemm::matmul_blocked(&mut prod, &a, &bmat, m, kdim, m);
+                black_box(prod[0]);
+            })
+            .mean_ns;
+        rows.push(Row { name: "matmul", p, scalar_ns, kernel_ns });
+    }
+
+    println!("\n== speedups (scalar / kernel) ==");
+    for r in &rows {
+        println!("{:>12} P={:<8} {:>6.2}x", r.name, r.p, r.speedup());
+    }
+
+    if json {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+        let body: Vec<String> = rows
+            .iter()
+            .map(|r| {
+                format!(
+                    "    {{\"name\": \"{}\", \"p\": {}, \"scalar_ns\": {:.1}, \
+                     \"kernel_ns\": {:.1}, \"speedup\": {:.3}}}",
+                    r.name,
+                    r.p,
+                    r.scalar_ns,
+                    r.kernel_ns,
+                    r.speedup()
+                )
+            })
+            .collect();
+        let text = format!(
+            "{{\n  \"bench\": \"kernels\",\n  \"host_cores\": {cores},\n  \
+             \"quick\": {quick},\n  \"rows\": [\n{}\n  ]\n}}\n",
+            body.join(",\n")
+        );
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("workspace root")
+            .join("BENCH_kernels.json");
+        std::fs::write(&path, text).expect("writing BENCH_kernels.json");
+        println!("wrote {path:?}");
+    }
+}

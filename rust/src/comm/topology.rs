@@ -22,6 +22,13 @@
 //! (ring-reducibility, n), and the clock, the wire-format cost helper,
 //! and the trainer's data path all route through it so billing and data
 //! movement can never disagree.
+//!
+//! The byte count `b` that enters every term is a *measured* quantity,
+//! not a formula: it is [`crate::dist::WirePayload::wire_bytes`], which
+//! the wire layer test-asserts equal to the length of the framed
+//! encoding ([`crate::dist::WirePayload::encode_into`]) for every
+//! payload variant. Billing therefore tracks the bytes a real transport
+//! would move, header included.
 
 use crate::dist::div_up;
 

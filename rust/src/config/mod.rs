@@ -84,6 +84,14 @@ pub struct RunConfig {
     /// uncontended `compute_s` readings should set this (losing the
     /// round-level speedup, keeping the exact same losses).
     pub sequential_workers: bool,
+    /// Benchmarking hook: pin the persistent pool's helper threads to
+    /// distinct CPUs (`pin_workers = true` / `--pin-workers`), reducing
+    /// scheduler migration noise in measured per-step wall-clock. Like
+    /// [`RunConfig::sequential_workers`] it cannot change a trajectory
+    /// — thread placement never touches data or accumulation order —
+    /// so it is likewise excluded from the experiment cache key. Best
+    /// effort: on non-Linux hosts the request is a no-op.
+    pub pin_workers: bool,
     /// Fault injection for fleet-robustness studies (`[faults]` table /
     /// `--churn-prob` etc.): elastic membership, dropped and corrupted
     /// payloads, heavy-tailed stragglers. [`FaultPlan::none`] (the
@@ -145,6 +153,7 @@ impl RunConfig {
             heterogeneous: false,
             wire: None,
             sequential_workers: false,
+            pin_workers: false,
             faults: FaultPlan::none(),
             agg: AggPolicy::Mean,
         }
@@ -338,6 +347,11 @@ impl RunConfig {
             || doc.get("sequential_workers").and_then(Json::as_bool).unwrap_or(false)
         {
             cfg.sequential_workers = true;
+        }
+        if args.has("pin-workers")
+            || doc.get("pin_workers").and_then(Json::as_bool).unwrap_or(false)
+        {
+            cfg.pin_workers = true;
         }
         let f = &mut cfg.faults;
         f.churn_prob = args.f64_or("churn-prob", f.churn_prob).map_err(|e| anyhow!(e))?;

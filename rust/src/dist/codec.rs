@@ -149,16 +149,9 @@ pub fn topk_select_segment(
     if k == 0 {
         return;
     }
-    scratch.clear();
-    scratch.extend(0..residual.len() as u32);
-    let by_magnitude = |&a: &u32, &b: &u32| {
-        let (ra, rb) = (residual[a as usize].abs(), residual[b as usize].abs());
-        rb.total_cmp(&ra).then(a.cmp(&b))
-    };
-    if k < scratch.len() {
-        scratch.select_nth_unstable_by(k - 1, by_magnitude);
-    }
-    scratch[..k].sort_unstable();
+    // packed-key partition kernel — identical kept set to the old
+    // comparator (see `kernels::topk_partition` for the order proof)
+    super::kernels::topk_partition(residual, k, scratch);
     for ((&local, i), v) in scratch[..k].iter().zip(idx_out.iter_mut()).zip(val_out.iter_mut()) {
         *i = (base + local as usize) as u32;
         *v = residual[local as usize];
@@ -216,25 +209,18 @@ pub fn quantize_diff_slice(start: &[f32], end: &[f32], out: &mut [u8]) -> f32 {
         out.len(),
         start.len()
     );
-    // f32::max skips NaN operands, so track finiteness explicitly — a
-    // diverged worker must not encode as an innocuous finite payload
-    let mut max = 0.0f32;
-    let mut finite = true;
-    for (&s, &e) in start.iter().zip(end) {
-        let d = s - e;
-        finite &= d.is_finite();
-        max = max.max(d.abs());
-    }
+    // f32::max skips NaN operands, so finiteness is tracked explicitly —
+    // a diverged worker must not encode as an innocuous finite payload.
+    // Both passes run on the lane-widened kernels; the scale and every
+    // byte are bitwise-identical to the serial scan (order-free max,
+    // elementwise second pass — differential-tested in `kernels`).
+    let (max, finite) = super::kernels::abs_max_diff(start, end);
     let scale = if finite { max / 127.0 } else { f32::NAN };
     if scale == 0.0 {
         out.fill(0);
         return 0.0;
     }
-    let inv = 1.0 / scale;
-    for ((&s, &e), o) in start.iter().zip(end).zip(out.iter_mut()) {
-        let q = ((s - e) * inv).round().clamp(-127.0, 127.0);
-        *o = q as i8 as u8;
-    }
+    super::kernels::quantize_scaled(start, end, 1.0 / scale, out);
     scale
 }
 
@@ -251,22 +237,13 @@ pub fn quantize_slice(vals: &[f32], out: &mut [u8]) -> f32 {
         out.len(),
         vals.len()
     );
-    let mut max = 0.0f32;
-    let mut finite = true;
-    for &v in vals {
-        finite &= v.is_finite();
-        max = max.max(v.abs());
-    }
+    let (max, finite) = super::kernels::abs_max(vals);
     let scale = if finite { max / 127.0 } else { f32::NAN };
     if scale == 0.0 {
         out.fill(0);
         return 0.0;
     }
-    let inv = 1.0 / scale;
-    for (&v, o) in vals.iter().zip(out.iter_mut()) {
-        let q = (v * inv).round().clamp(-127.0, 127.0);
-        *o = q as i8 as u8;
-    }
+    super::kernels::quantize_vals_scaled(vals, 1.0 / scale, out);
     scale
 }
 
@@ -512,6 +489,21 @@ mod tests {
         assert_eq!(quantize_slice(&[0.0, -0.0], &mut out), 0.0);
         assert_eq!(out, vec![0, 0]);
         assert!(quantize_slice(&[1.0, f32::INFINITY], &mut out).is_nan());
+    }
+
+    #[test]
+    fn quantize_diff_slice_matches_scalar_reference_bitwise() {
+        // the public encoder runs on the lane-widened kernels; the
+        // serial pre-kernel pass is kept in `kernels` as the oracle
+        let start: Vec<f32> =
+            (0..257).map(|i| (i as f32 * 0.13).sin() * (i % 7) as f32).collect();
+        let end: Vec<f32> = (0..257).map(|i| (i as f32 * 0.29).cos()).collect();
+        let mut a = vec![0u8; 257];
+        let mut b = vec![0u8; 257];
+        let sa = quantize_diff_slice(&start, &end, &mut a);
+        let sb = crate::dist::kernels::quantize_diff_ref(&start, &end, &mut b);
+        assert_eq!(sa.to_bits(), sb.to_bits());
+        assert_eq!(a, b);
     }
 
     #[test]

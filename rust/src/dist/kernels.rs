@@ -1,0 +1,594 @@
+//! Shared hot-path kernels: wide word-level tally strips and exact-lane,
+//! fixed-reduction-order byte/float loops.
+//!
+//! Every simulated exchange funnels through a handful of inner loops —
+//! the bit-sliced popcount tally ([`super::votes`]), the q8/q8pt
+//! quantize/dequantize passes and the top-k select ([`super::codec`]),
+//! and the mean-decode paths in [`super::wire`]. This module holds the
+//! widened versions of those loops plus the scalar references they are
+//! measured and differential-tested against (`benches/kernels.rs`
+//! records the before/after trajectory in `BENCH_kernels.json`).
+//!
+//! # The fixed-reduction-order contract
+//!
+//! The standing invariants — parallel ≡ sequential bit-identity,
+//! checkpoint/resume bit-identity, golden per-optimizer trajectories —
+//! survive these kernels because no kernel is allowed to reassociate a
+//! floating-point reduction:
+//!
+//! - **Sums stay serial.** Any f32/f64 accumulation (a dot product, a
+//!   mean) keeps its original index order per output element. Kernels
+//!   widen *across independent output elements* (elementwise maps,
+//!   rank-1 `axpy` updates), never across the terms of one sum.
+//! - **Order-free ops may go wide.** `max` over non-negative values,
+//!   boolean AND-reduction, and integer/bit arithmetic are independent
+//!   of evaluation order, so those loops split into fixed lanes
+//!   ([`LANES`]) that autovectorize. `f32::max` skips a NaN operand the
+//!   same way in every order, and the separately tracked finiteness bit
+//!   makes the max irrelevant whenever a NaN was present at all.
+//! - **Integer/bit kernels are bitwise-identical by construction** —
+//!   carry-save addition is exact per lane-bit — and pinned by the
+//!   differential tests below against the scalar `_ref` ports of the
+//!   pre-kernel code.
+//!
+//! Anything that cannot be expressed under this contract (e.g. a
+//! reduction-tree sum) does not belong here.
+
+use super::codec;
+
+/// Fixed lane count for the widened float/byte loops. Eight f32 lanes
+/// fill one AVX2 register / two NEON registers; the loops are written
+/// over `chunks_exact(LANES)` so the compiler can vectorize them
+/// without a reassociation license.
+pub const LANES: usize = 8;
+
+/// Number of 64-lane vote words processed per tally strip: four
+/// independent carry chains give the ripple-carry adder instruction-level
+/// parallelism the single-word version cannot have (each level's
+/// XOR/AND depends on the previous level's output).
+pub const STRIP_WORDS: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Packed-vote tally
+// ---------------------------------------------------------------------------
+
+/// Load 64 packed sign lanes (word `wi`) from a raw packed-vote byte
+/// buffer, zero-padding past the end — byte-for-byte the semantics of
+/// `PackedVotes::word`, but on the borrowed byte slice so a tally over
+/// many payloads touches no per-word bounds-checked copies.
+#[inline]
+pub fn packed_word(bytes: &[u8], wi: usize) -> u64 {
+    let lo = wi * 8;
+    if lo >= bytes.len() {
+        return 0;
+    }
+    let mut b = [0u8; 8];
+    if let Some(full) = bytes.get(lo..lo + 8) {
+        b.copy_from_slice(full);
+    } else {
+        let tail = &bytes[lo..];
+        b[..tail.len()].copy_from_slice(tail);
+    }
+    u64::from_le_bytes(b)
+}
+
+/// Carry-save add one vote word per strip slot into the bit-sliced
+/// counters (`counts[lvl * STRIP_WORDS + k]` is level `lvl` of slot
+/// `k`). Returns the OR of the carry-out words: non-zero means some
+/// lane overflowed the counter width.
+#[inline]
+fn add_strip(counts: &mut [u64], words: &[u64; STRIP_WORDS]) -> u64 {
+    let mut carry = *words;
+    for row in counts.chunks_exact_mut(STRIP_WORDS) {
+        if carry == [0u64; STRIP_WORDS] {
+            return 0;
+        }
+        for (c, w) in row.iter_mut().zip(carry.iter_mut()) {
+            let t = *c;
+            *c = t ^ *w;
+            *w = t & *w;
+        }
+    }
+    carry[0] | carry[1] | carry[2] | carry[3]
+}
+
+/// Per-lane `count >= threshold` over the bit-sliced counters of one
+/// strip slot, MSB-down — the strip-layout port of the single-word
+/// comparator in the scalar reference.
+#[inline]
+fn strip_lanes_ge(counts: &[u64], slot: usize, threshold: u64) -> u64 {
+    let levels = counts.len() / STRIP_WORDS;
+    let mut ge = 0u64;
+    let mut eq = !0u64;
+    for lvl in (0..levels).rev() {
+        let c = counts[lvl * STRIP_WORDS + slot];
+        let tk = if (threshold >> lvl) & 1 == 1 { !0u64 } else { 0u64 };
+        ge |= eq & c & !tk;
+        eq &= !(c ^ tk);
+    }
+    ge | eq
+}
+
+/// Majority-tally `n_words` (1..=[`STRIP_WORDS`]) consecutive 64-lane
+/// vote words starting at `base_word` across every payload byte slice,
+/// writing one winner mask (`1` bit = majority non-negative) per word
+/// into `winners[..n_words]`.
+///
+/// Bitwise-identical to tallying each word with [`tally_word_ref`]:
+/// carry-save addition is exact per lane-bit, and the comparator reads
+/// the same counter bits MSB-down. The overflow check fires under the
+/// same condition as the scalar path (some lane's count exceeded the
+/// counter width), with the same message.
+///
+/// # Panics
+/// If a lane count overflows `levels` bits — the caller must size
+/// `levels` to cover the payload count, exactly as before.
+pub fn tally_strip(
+    slices: &[&[u8]],
+    base_word: usize,
+    n_words: usize,
+    levels: usize,
+    threshold: u64,
+    winners: &mut [u64; STRIP_WORDS],
+) {
+    debug_assert!((1..=STRIP_WORDS).contains(&n_words), "strip width {n_words}");
+    debug_assert!(levels <= 64, "counter deeper than a u64 rank count");
+    let mut counts = [0u64; STRIP_WORDS * 64];
+    let counts = &mut counts[..levels * STRIP_WORDS];
+    let mut overflow = 0u64;
+    for s in slices {
+        let mut words = [0u64; STRIP_WORDS];
+        for (k, w) in words.iter_mut().enumerate().take(n_words) {
+            *w = packed_word(s, base_word + k);
+        }
+        overflow |= add_strip(counts, &words);
+    }
+    assert_eq!(overflow, 0, "counter width must cover the rank count");
+    for (k, w) in winners.iter_mut().enumerate().take(n_words) {
+        *w = strip_lanes_ge(counts, k, threshold);
+    }
+}
+
+/// Scalar reference: tally a single 64-lane word the way the
+/// pre-kernel `dist/votes.rs` inner loop did — one ripple-carry chain,
+/// early exit when the carry clears. Kept public for the differential
+/// tests and as the `tally/scalar` bench baseline.
+pub fn tally_word_ref(slices: &[&[u8]], wi: usize, levels: usize, threshold: u64) -> u64 {
+    let mut counts = [0u64; 64];
+    let counts = &mut counts[..levels];
+    let mut overflow = 0u64;
+    for s in slices {
+        let mut carry = packed_word(s, wi);
+        for c in counts.iter_mut() {
+            if carry == 0 {
+                break;
+            }
+            let t = *c;
+            *c = t ^ carry;
+            carry = t & carry;
+        }
+        overflow |= carry;
+    }
+    assert_eq!(overflow, 0, "counter width must cover the rank count");
+    let mut ge = 0u64;
+    let mut eq = !0u64;
+    for lvl in (0..levels).rev() {
+        let c = counts[lvl];
+        let tk = if (threshold >> lvl) & 1 == 1 { !0u64 } else { 0u64 };
+        ge |= eq & c & !tk;
+        eq &= !(c ^ tk);
+    }
+    ge | eq
+}
+
+// ---------------------------------------------------------------------------
+// q8 quantize / dequantize
+// ---------------------------------------------------------------------------
+
+/// `(max |start - end|, every diff finite)` in [`LANES`] independent
+/// max chains. Bitwise-identical to the serial scan: max over
+/// non-negative values is order-free, `f32::max` drops a NaN operand in
+/// any order, and when some diff was non-finite the caller's scale is
+/// NaN regardless of the max.
+pub fn abs_max_diff(start: &[f32], end: &[f32]) -> (f32, bool) {
+    debug_assert_eq!(start.len(), end.len());
+    let mut lane_max = [0.0f32; LANES];
+    let mut finite = true;
+    let mut sc = start.chunks_exact(LANES);
+    let mut ec = end.chunks_exact(LANES);
+    for (s8, e8) in (&mut sc).zip(&mut ec) {
+        for (k, m) in lane_max.iter_mut().enumerate() {
+            let d = s8[k] - e8[k];
+            finite &= d.is_finite();
+            *m = m.max(d.abs());
+        }
+    }
+    for (s, e) in sc.remainder().iter().zip(ec.remainder()) {
+        let d = s - e;
+        finite &= d.is_finite();
+        lane_max[0] = lane_max[0].max(d.abs());
+    }
+    let mut max = 0.0f32;
+    for m in lane_max {
+        max = max.max(m);
+    }
+    (max, finite)
+}
+
+/// [`abs_max_diff`] over raw values (diff against zero).
+pub fn abs_max(vals: &[f32]) -> (f32, bool) {
+    let mut lane_max = [0.0f32; LANES];
+    let mut finite = true;
+    let mut vc = vals.chunks_exact(LANES);
+    for v8 in &mut vc {
+        for (k, m) in lane_max.iter_mut().enumerate() {
+            let v = v8[k];
+            finite &= v.is_finite();
+            *m = m.max(v.abs());
+        }
+    }
+    for v in vc.remainder() {
+        finite &= v.is_finite();
+        lane_max[0] = lane_max[0].max(v.abs());
+    }
+    let mut max = 0.0f32;
+    for m in lane_max {
+        max = max.max(m);
+    }
+    (max, finite)
+}
+
+/// Scalar reference for [`abs_max_diff`] — the pre-kernel first pass of
+/// `codec::quantize_diff_slice`, verbatim.
+pub fn abs_max_diff_ref(start: &[f32], end: &[f32]) -> (f32, bool) {
+    let mut finite = true;
+    let mut max = 0.0f32;
+    for (s, e) in start.iter().zip(end) {
+        let d = s - e;
+        finite &= d.is_finite();
+        max = max.max(d.abs());
+    }
+    (max, finite)
+}
+
+/// Quantize `start - end` at a fixed `inv = 127 / max` scale into i8
+/// bytes. Pure elementwise map (round, clamp, narrow) — identical in
+/// any chunking; written over exact lanes so it vectorizes.
+pub fn quantize_scaled(start: &[f32], end: &[f32], inv: f32, out: &mut [u8]) {
+    debug_assert_eq!(start.len(), end.len());
+    debug_assert_eq!(start.len(), out.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut sc = start.chunks_exact(LANES);
+    let mut ec = end.chunks_exact(LANES);
+    for ((o8, s8), e8) in (&mut oc).zip(&mut sc).zip(&mut ec) {
+        for (k, o) in o8.iter_mut().enumerate() {
+            let q = ((s8[k] - e8[k]) * inv).round().clamp(-127.0, 127.0);
+            *o = q as i8 as u8;
+        }
+    }
+    for ((o, s), e) in
+        oc.into_remainder().iter_mut().zip(sc.remainder()).zip(ec.remainder())
+    {
+        let q = ((s - e) * inv).round().clamp(-127.0, 127.0);
+        *o = q as i8 as u8;
+    }
+}
+
+/// [`quantize_scaled`] over raw values.
+pub fn quantize_vals_scaled(vals: &[f32], inv: f32, out: &mut [u8]) {
+    debug_assert_eq!(vals.len(), out.len());
+    let mut oc = out.chunks_exact_mut(LANES);
+    let mut vc = vals.chunks_exact(LANES);
+    for (o8, v8) in (&mut oc).zip(&mut vc) {
+        for (k, o) in o8.iter_mut().enumerate() {
+            let q = (v8[k] * inv).round().clamp(-127.0, 127.0);
+            *o = q as i8 as u8;
+        }
+    }
+    for (o, v) in oc.into_remainder().iter_mut().zip(vc.remainder()) {
+        let q = (v * inv).round().clamp(-127.0, 127.0);
+        *o = q as i8 as u8;
+    }
+}
+
+/// Scalar reference for the full diff-quantize pass (both passes,
+/// serial) — the pre-kernel body of `codec::quantize_diff_slice`,
+/// kept as the `q8_quantize/scalar` bench baseline and differential
+/// oracle. Returns the scale.
+pub fn quantize_diff_ref(start: &[f32], end: &[f32], out: &mut [u8]) -> f32 {
+    let (max, finite) = abs_max_diff_ref(start, end);
+    let scale = if finite { max / 127.0 } else { f32::NAN };
+    if scale == 0.0 {
+        out.fill(0);
+        return 0.0;
+    }
+    let inv = 1.0 / scale;
+    for ((s, e), o) in start.iter().zip(end).zip(out.iter_mut()) {
+        let q = ((s - e) * inv).round().clamp(-127.0, 127.0);
+        *o = q as i8 as u8;
+    }
+    scale
+}
+
+/// Accumulate one payload's dequantized bytes into an f64 accumulator:
+/// `acc[j] += dequantize(bytes[j], scale)`. Elementwise over
+/// independent outputs; the caller iterates payloads in rank order, so
+/// every `acc[j]` receives its terms in exactly the order the old
+/// per-element loop produced — bitwise-identical means.
+pub fn dequant_accumulate(bytes: &[u8], scale: f32, acc: &mut [f64]) {
+    debug_assert_eq!(bytes.len(), acc.len());
+    let mut ac = acc.chunks_exact_mut(LANES);
+    let mut bc = bytes.chunks_exact(LANES);
+    for (a8, b8) in (&mut ac).zip(&mut bc) {
+        for (k, a) in a8.iter_mut().enumerate() {
+            *a += codec::dequantize_i8(b8[k], scale) as f64;
+        }
+    }
+    for (a, b) in ac.into_remainder().iter_mut().zip(bc.remainder()) {
+        *a += codec::dequantize_i8(*b, scale) as f64;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// top-k select
+// ---------------------------------------------------------------------------
+
+/// Fill `scratch` with the local indices `0..residual.len()` of one
+/// segment, partitioned so `scratch[..k]` holds the kept set (largest
+/// `|value|`, ties → lowest index) sorted ascending — the packed-key
+/// form of [`topk_partition_ref`].
+///
+/// The key `(!abs_bits << 32) | index` is a strict total order: for
+/// sign-cleared f32 bit patterns `total_cmp` *is* unsigned bit
+/// comparison (NaN above infinity included), so descending magnitude is
+/// ascending `!abs_bits`, and the unique index tiebreak means the k
+/// smallest keys are one well-defined set no matter how the partition
+/// algorithm pivots. Kept set and output are therefore identical to the
+/// comparator-based reference.
+pub fn topk_partition(residual: &[f32], k: usize, scratch: &mut Vec<u32>) {
+    debug_assert!(k >= 1 && k <= residual.len());
+    scratch.clear();
+    scratch.extend(0..residual.len() as u32);
+    if k < scratch.len() {
+        scratch.select_nth_unstable_by_key(k - 1, |i| {
+            let bits = residual[*i as usize].abs().to_bits();
+            ((!bits as u64) << 32) | *i as u64
+        });
+    }
+    scratch[..k].sort_unstable();
+}
+
+/// Comparator-based reference — the pre-kernel selection from
+/// `codec::topk_select_segment`, verbatim.
+pub fn topk_partition_ref(residual: &[f32], k: usize, scratch: &mut Vec<u32>) {
+    debug_assert!(k >= 1 && k <= residual.len());
+    scratch.clear();
+    scratch.extend(0..residual.len() as u32);
+    if k < scratch.len() {
+        scratch.select_nth_unstable_by(k - 1, |&a, &b| {
+            let (ra, rb) = (residual[a as usize].abs(), residual[b as usize].abs());
+            rb.total_cmp(&ra).then(a.cmp(&b))
+        });
+    }
+    scratch[..k].sort_unstable();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tiny deterministic xorshift so the differential tests need no
+    /// harness plumbing (and stay miri-cheap at small sizes).
+    fn xs(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    fn random_f32(state: &mut u64) -> f32 {
+        // mix magnitudes, signs, zeros, and the odd special value
+        match xs(state) % 16 {
+            0 => 0.0,
+            1 => -0.0,
+            2 => f32::NAN,
+            3 => f32::INFINITY,
+            4 => f32::NEG_INFINITY,
+            5 => 1.0e-40, // subnormal
+            _ => {
+                let m = (xs(state) % 2_000_000) as f32 / 1000.0 - 1000.0;
+                m * 1.5
+            }
+        }
+    }
+
+    fn random_bytes(state: &mut u64, n: usize) -> Vec<u8> {
+        (0..n).map(|_| (xs(state) & 0xFF) as u8).collect()
+    }
+
+    #[test]
+    fn packed_word_matches_byte_shifts_and_zero_pads() {
+        let bytes: Vec<u8> = (1..=11).collect(); // 11 bytes: one full word + 3-byte tail
+        let mut w0 = 0u64;
+        for (i, b) in bytes[..8].iter().enumerate() {
+            w0 |= (*b as u64) << (8 * i);
+        }
+        assert_eq!(packed_word(&bytes, 0), w0);
+        let mut w1 = 0u64;
+        for (i, b) in bytes[8..].iter().enumerate() {
+            w1 |= (*b as u64) << (8 * i);
+        }
+        assert_eq!(packed_word(&bytes, 1), w1);
+        assert_eq!(packed_word(&bytes, 2), 0);
+        assert_eq!(packed_word(&[], 0), 0);
+    }
+
+    #[test]
+    fn tally_strip_matches_single_word_reference() {
+        let mut st = 0x1234_5678_9abc_def0u64;
+        for &(n_votes, n_bytes) in &[(1usize, 3usize), (5, 33), (12, 40)] {
+            let votes: Vec<Vec<u8>> = (0..n_votes).map(|_| random_bytes(&mut st, n_bytes)).collect();
+            let slices: Vec<&[u8]> = votes.iter().map(|v| v.as_slice()).collect();
+            let levels = (64 - (n_votes as u64).leading_zeros()) as usize;
+            let threshold = (n_votes / 2 + n_votes % 2) as u64;
+            let n_words = n_bytes / 8 + usize::from(n_bytes % 8 != 0);
+            let mut wi = 0;
+            while wi < n_words {
+                let strip = (n_words - wi).min(STRIP_WORDS);
+                let mut winners = [0u64; STRIP_WORDS];
+                tally_strip(&slices, wi, strip, levels, threshold, &mut winners);
+                for (k, w) in winners.iter().enumerate().take(strip) {
+                    assert_eq!(*w, tally_word_ref(&slices, wi + k, levels, threshold));
+                }
+                wi += strip;
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "counter width must cover the rank count")]
+    fn tally_strip_overflow_is_loud() {
+        // 3 all-ones votes into a 1-level counter: lane count reaches 2.
+        let v = vec![0xFFu8; 8];
+        let slices: Vec<&[u8]> = vec![&v, &v, &v];
+        let mut winners = [0u64; STRIP_WORDS];
+        tally_strip(&slices, 0, 1, 1, 1, &mut winners);
+    }
+
+    #[test]
+    fn abs_max_matches_reference_bitwise() {
+        let mut st = 0xdead_beef_cafe_f00du64;
+        for len in [0usize, 1, 7, 8, 9, 31, 64, 100] {
+            let a: Vec<f32> = (0..len).map(|_| random_f32(&mut st)).collect();
+            let b: Vec<f32> = (0..len).map(|_| random_f32(&mut st)).collect();
+            let (m, f) = abs_max_diff(&a, &b);
+            let (mr, fr) = abs_max_diff_ref(&a, &b);
+            assert_eq!(m.to_bits(), mr.to_bits(), "len {len}");
+            assert_eq!(f, fr, "len {len}");
+            let zeros = vec![0.0f32; len];
+            let (mv, fv) = abs_max(&a);
+            let (mvr, fvr) = abs_max_diff_ref(&a, &zeros);
+            assert_eq!(mv.to_bits(), mvr.to_bits(), "vals len {len}");
+            assert_eq!(fv, fvr, "vals len {len}");
+        }
+    }
+
+    #[test]
+    fn quantize_kernels_match_reference_bitwise() {
+        let mut st = 0x0bad_5eed_0bad_5eedu64;
+        for len in [0usize, 1, 7, 8, 9, 31, 100] {
+            let a: Vec<f32> = (0..len).map(|_| random_f32(&mut st)).collect();
+            let b: Vec<f32> = (0..len).map(|_| random_f32(&mut st)).collect();
+            let mut want = vec![0u8; len];
+            let scale = quantize_diff_ref(&a, &b, &mut want);
+            let mut got = vec![0u8; len];
+            let (max, finite) = abs_max_diff(&a, &b);
+            let kscale = if finite { max / 127.0 } else { f32::NAN };
+            if kscale == 0.0 {
+                got.fill(0);
+            } else {
+                quantize_scaled(&a, &b, 1.0 / kscale, &mut got);
+            }
+            if finite {
+                assert_eq!(scale.to_bits(), kscale.to_bits(), "len {len}");
+                assert_eq!(want, got, "len {len}");
+            } else {
+                assert!(scale.is_nan() && kscale.is_nan(), "len {len}");
+                assert_eq!(want, got, "poisoned bytes, len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_accumulate_matches_per_element_loop() {
+        let mut st = 0x5151_5151_5151_5151u64;
+        for len in [0usize, 1, 8, 13, 100] {
+            let bytes = random_bytes(&mut st, len);
+            let scale = 0.037f32;
+            let mut acc = vec![1.25f64; len];
+            let mut want = acc.clone();
+            for (a, b) in want.iter_mut().zip(&bytes) {
+                *a += codec::dequantize_i8(*b, scale) as f64;
+            }
+            dequant_accumulate(&bytes, scale, &mut acc);
+            assert_eq!(
+                want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                acc.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn topk_partition_matches_comparator_reference() {
+        let mut st = 0x7777_1234_7777_1234u64;
+        for len in [1usize, 5, 17, 64] {
+            let residual: Vec<f32> = (0..len).map(|_| random_f32(&mut st)).collect();
+            for k in [1usize, len / 2 + 1, len] {
+                let mut a = Vec::new();
+                let mut b = Vec::new();
+                topk_partition(&residual, k, &mut a);
+                topk_partition_ref(&residual, k, &mut b);
+                assert_eq!(a[..k], b[..k], "len {len} k {k}");
+            }
+        }
+    }
+
+    #[test]
+    fn topk_partition_breaks_ties_toward_low_index() {
+        // all-equal magnitudes: kept set must be the k lowest indices
+        let residual = vec![2.0f32, -2.0, 2.0, -2.0, 2.0];
+        let mut s = Vec::new();
+        topk_partition(&residual, 3, &mut s);
+        assert_eq!(&s[..3], &[0, 1, 2]);
+    }
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // large differential sweep; covered small above
+    fn kernels_match_reference_at_scale() {
+        let mut st = 0x2468_ace0_1357_9bdfu64;
+        let n_votes = 129; // 8 counter levels
+        let n_bytes = 4099;
+        let votes: Vec<Vec<u8>> = (0..n_votes).map(|_| random_bytes(&mut st, n_bytes)).collect();
+        let slices: Vec<&[u8]> = votes.iter().map(|v| v.as_slice()).collect();
+        let levels = (64 - (n_votes as u64).leading_zeros()) as usize;
+        let threshold = (n_votes / 2 + n_votes % 2) as u64;
+        let n_words = n_bytes / 8 + usize::from(n_bytes % 8 != 0);
+        let mut wi = 0;
+        while wi < n_words {
+            let strip = (n_words - wi).min(STRIP_WORDS);
+            let mut winners = [0u64; STRIP_WORDS];
+            tally_strip(&slices, wi, strip, levels, threshold, &mut winners);
+            for (k, w) in winners.iter().enumerate().take(strip) {
+                assert_eq!(*w, tally_word_ref(&slices, wi + k, levels, threshold));
+            }
+            wi += strip;
+        }
+
+        let len = 100_003;
+        let a: Vec<f32> = (0..len).map(|_| random_f32(&mut st)).collect();
+        let b: Vec<f32> = (0..len).map(|_| random_f32(&mut st)).collect();
+        let (m, f) = abs_max_diff(&a, &b);
+        let (mr, fr) = abs_max_diff_ref(&a, &b);
+        assert_eq!(m.to_bits(), mr.to_bits());
+        assert_eq!(f, fr);
+        let finite: Vec<f32> = (0..len).map(|i| ((i * 37) % 255) as f32 - 127.0).collect();
+        let zeros = vec![0.0f32; len];
+        let mut want = vec![0u8; len];
+        let s1 = quantize_diff_ref(&finite, &zeros, &mut want);
+        let (max, ok) = abs_max_diff(&finite, &zeros);
+        assert!(ok);
+        let mut got = vec![0u8; len];
+        quantize_scaled(&finite, &zeros, 1.0 / (max / 127.0), &mut got);
+        assert_eq!(s1.to_bits(), (max / 127.0).to_bits());
+        assert_eq!(want, got);
+
+        let mut ka = Vec::new();
+        let mut kb = Vec::new();
+        topk_partition(&a, len / 16, &mut ka);
+        topk_partition_ref(&a, len / 16, &mut kb);
+        assert_eq!(ka[..len / 16], kb[..len / 16]);
+    }
+}

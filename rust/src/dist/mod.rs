@@ -78,9 +78,19 @@
 //! never unpacks to f32 and is bitwise-identical to
 //! [`collectives::majority_vote`] over the decoded votes
 //! (property-tested in `rust/tests/packed_vote.rs`).
+//!
+//! # Hot-path kernels
+//!
+//! [`kernels`] holds the widened inner loops behind the codec, the
+//! tally, and the mean-decode paths — word-strip carry-save tallies,
+//! exact-lane quantize/dequantize, packed-key top-k selection — under a
+//! fixed-reduction-order contract that keeps every kernel
+//! bitwise-identical to its scalar reference (differential-tested
+//! there; before/after timings recorded by `benches/kernels.rs`).
 
 pub mod codec;
 pub mod collectives;
+pub mod kernels;
 pub mod pool;
 pub mod votes;
 pub mod wire;

@@ -38,6 +38,73 @@ use super::div_up;
 /// the pool can serve.
 pub const MAX_THREADS: usize = 8;
 
+/// Opt-in rank→core pinning for the pool's helper threads (the
+/// `pin_workers` config knob). When set before the pool first spawns,
+/// helper `i` pins itself to CPU `i + 1` (CPU 0 is left to the calling
+/// thread), which keeps each helper's chunk of the output resident in
+/// one core's private cache across the many collectives of a round.
+///
+/// Placement only — the chunk→thread mapping was never part of any
+/// result ([`run_chunked_mut`]'s determinism contract), so this cannot
+/// change a trajectory, and the experiment cache key excludes it like
+/// `sequential_workers`. The pool spawns lazily on first use: set this
+/// before the first threaded collective (the trainer does, while
+/// building a run); already-running helpers are not migrated. Best
+/// effort — a refused syscall or a non-Linux host leaves threads
+/// unpinned. Default off.
+pub fn set_pin_workers(enabled: bool) {
+    PIN_WORKERS.store(enabled, Ordering::Relaxed);
+}
+
+static PIN_WORKERS: AtomicBool = AtomicBool::new(false);
+
+fn maybe_pin(cpu: usize) {
+    if PIN_WORKERS.load(Ordering::Relaxed) {
+        pin_current_thread(cpu);
+    }
+}
+
+/// Best-effort affinity pin of the current thread to `cpu` via a raw
+/// `sched_setaffinity` syscall — the crate vendors no libc, and the
+/// two supported Linux ISAs cover every host this opt-in perf knob
+/// targets. An out-of-range CPU fails the call and the thread simply
+/// stays unpinned.
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn pin_current_thread(cpu: usize) {
+    let mut mask = [0u64; 16]; // 1024-bit CPU set, the kernel's default sizing
+    mask[(cpu / 64) % 16] |= 1 << (cpu % 64);
+    // SAFETY: sched_setaffinity(pid = 0 → current thread, cpusetsize,
+    // *mask) only reads `mask` (valid for the whole call — it lives on
+    // this frame) and has no other memory effects; on failure the
+    // kernel leaves the thread's affinity unchanged and we ignore the
+    // returned errno. Registers follow the Linux syscall ABI exactly.
+    unsafe {
+        #[cfg(target_arch = "x86_64")]
+        core::arch::asm!(
+            "syscall",
+            inlateout("rax") 203usize => _, // __NR_sched_setaffinity
+            in("rdi") 0usize,
+            in("rsi") core::mem::size_of_val(&mask),
+            in("rdx") mask.as_ptr(),
+            lateout("rcx") _,
+            lateout("r11") _,
+            options(nostack)
+        );
+        #[cfg(target_arch = "aarch64")]
+        core::arch::asm!(
+            "svc 0",
+            in("x8") 122usize, // __NR_sched_setaffinity
+            inlateout("x0") 0usize => _,
+            in("x1") core::mem::size_of_val(&mask),
+            in("x2") mask.as_ptr(),
+            options(nostack)
+        );
+    }
+}
+
+#[cfg(not(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64"))))]
+fn pin_current_thread(_cpu: usize) {}
+
 /// One in-flight pool job. Every helper that pops a copy pulls chunk
 /// indices from `next` until exhausted, then reports through `pending`.
 struct Shared {
@@ -113,11 +180,16 @@ impl ThreadPool {
         // thread (resource exhaustion) the pool degrades to fewer
         // helpers — with zero, `run` executes everything inline.
         let mut spawned = 0;
-        for _ in 0..helpers {
+        for i in 0..helpers {
             let q = Arc::clone(&queue);
             let helper = std::thread::Builder::new()
                 .name("dsm-collective".into())
-                .spawn(move || helper_loop(&q));
+                .spawn(move || {
+                    // CPU 0 stays with the calling thread, which always
+                    // participates in its own jobs.
+                    maybe_pin(i + 1);
+                    helper_loop(&q)
+                });
             if helper.is_ok() {
                 spawned += 1;
             }
@@ -228,12 +300,38 @@ unsafe impl Send for OutPtr {}
 // the disjoint chunk windows described on `Send`.
 unsafe impl Sync for OutPtr {}
 
-fn chunk_len(len: usize, threads: usize, align: usize) -> usize {
+/// A chunking decision: `n_chunks` contiguous windows of `chunk`
+/// elements each (the last one shorter). Pure in `(len, threads,
+/// align)`, so chunk boundaries — and therefore every result — are
+/// independent of the host's scheduling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Plan {
+    pub chunk: usize,
+    pub n_chunks: usize,
+}
+
+impl Plan {
+    /// Everything fits in one window — the runners execute inline.
+    fn is_inline(&self) -> bool {
+        self.n_chunks <= 1
+    }
+}
+
+/// Deterministic chunk sizing with the tiny-input clamp made explicit:
+/// the worker count never exceeds the element count (`len <
+/// threads` collapses to `len` single-element chunks, `len == 0` to
+/// one inline empty window), so **no plan ever contains an empty
+/// chunk** — pinned by `plan_never_emits_empty_chunks`.
+pub(crate) fn plan(len: usize, threads: usize, align: usize) -> Plan {
+    let threads = threads.clamp(1, len.max(1));
     let mut chunk = div_up(len, threads);
     if align > 1 {
         chunk = div_up(chunk, align) * align;
     }
-    chunk
+    if chunk == 0 || chunk >= len {
+        return Plan { chunk: len, n_chunks: 1 };
+    }
+    Plan { chunk, n_chunks: div_up(len, chunk) }
 }
 
 /// Split `out` into contiguous chunks — one per requested thread,
@@ -246,20 +344,66 @@ where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     let len = out.len();
-    let threads = threads.clamp(1, len.max(1));
-    let chunk = chunk_len(len, threads, align);
-    if threads <= 1 || chunk >= len {
+    let p = plan(len, threads, align);
+    if threads <= 1 || p.is_inline() {
         body(0, out);
         return;
     }
-    let n_chunks = div_up(len, chunk);
+    let chunk = p.chunk;
     let ptr = OutPtr(out.as_mut_ptr());
     let body = &body;
-    global().run(n_chunks, move |ci| {
+    global().run(p.n_chunks, move |ci| {
         let start = ci * chunk;
         let end = (start + chunk).min(len);
         // SAFETY: chunk ranges [start, end) are disjoint across `ci`
         // and stay within `out`'s bounds.
+        let window =
+            unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), end - start) };
+        body(start, window);
+    });
+}
+
+/// [`run_chunked_mut`] with chunk boundaries snapped to *layout
+/// segment ends* instead of a flat element count: `bounds` holds the
+/// cumulative end offset of each segment (ascending, last one equal to
+/// `out.len()`), and every chunk covers a whole number of segments —
+/// so a per-segment decode (one scale per `q8pt` segment, say) never
+/// straddles two threads and each segment's bytes stream through one
+/// core's cache. Boundaries are a pure function of `(bounds, threads)`;
+/// determinism is exactly [`run_chunked_mut`]'s.
+pub fn run_segmented_mut<F>(threads: usize, bounds: &[usize], out: &mut [f32], body: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let len = out.len();
+    debug_assert_eq!(bounds.last().copied().unwrap_or(0), len, "segment bounds cover the output");
+    let threads = threads.clamp(1, len.max(1));
+    // greedy: close a chunk at the first segment end at or past the
+    // even-split target — tiny segments coalesce, huge segments become
+    // one chunk each, and no chunk is ever empty
+    let target = div_up(len, threads);
+    let mut cuts: Vec<usize> = Vec::with_capacity(threads + 1);
+    cuts.push(0);
+    let mut start = 0usize;
+    for &b in bounds {
+        if b < len && b.saturating_sub(start) >= target {
+            cuts.push(b);
+            start = b;
+        }
+    }
+    cuts.push(len);
+    if threads <= 1 || cuts.len() <= 2 {
+        body(0, out);
+        return;
+    }
+    let ptr = OutPtr(out.as_mut_ptr());
+    let body = &body;
+    let cuts = &cuts;
+    global().run(cuts.len() - 1, move |ci| {
+        let (start, end) = (cuts[ci], cuts[ci + 1]);
+        // SAFETY: the cut list is strictly ascending and ends at `len`,
+        // so [start, end) windows are disjoint across `ci` and in
+        // bounds.
         let window =
             unsafe { std::slice::from_raw_parts_mut(ptr.0.add(start), end - start) };
         body(start, window);
@@ -368,12 +512,12 @@ where
     F: Fn(usize, &mut [f32]) + Sync,
 {
     let len = out.len();
-    let threads = threads.clamp(1, len.max(1));
-    let chunk = chunk_len(len, threads, align);
-    if threads <= 1 || chunk >= len {
+    let p = plan(len, threads, align);
+    if threads <= 1 || p.is_inline() {
         body(0, out);
         return;
     }
+    let chunk = p.chunk;
     let body = &body;
     std::thread::scope(|scope| {
         for (ci, window) in out.chunks_mut(chunk).enumerate() {
@@ -419,7 +563,115 @@ mod tests {
     }
 
     #[test]
-    fn aligned_chunks_start_on_align_boundaries() {
+    fn plan_never_emits_empty_chunks() {
+        // tiny-input regression: len < threads must collapse to fewer
+        // chunks, never to empty jobs, for both flat and aligned sizing
+        for len in [0usize, 1, 3, 7, 64, 65, 1000] {
+            for threads in [1usize, 2, 4, 8, 16] {
+                for align in [1usize, 64] {
+                    let p = plan(len, threads, align);
+                    assert!(p.n_chunks >= 1, "len={len} threads={threads} align={align}");
+                    if len == 0 {
+                        assert!(p.is_inline());
+                        continue;
+                    }
+                    // every chunk window is non-empty...
+                    assert!(
+                        p.chunk * (p.n_chunks - 1) < len,
+                        "empty tail chunk: len={len} threads={threads} align={align} {p:?}"
+                    );
+                    // ...and the windows tile the whole output
+                    assert!(
+                        p.chunk * p.n_chunks >= len,
+                        "uncovered tail: len={len} threads={threads} align={align} {p:?}"
+                    );
+                    if align > 1 && !p.is_inline() {
+                        assert_eq!(p.chunk % align, 0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiny_inputs_match_inline_execution() {
+        // len in {0, 1, threads - 1}: the historical trouble spots for
+        // per-thread chunk sizing
+        let threads = 4;
+        for len in [0usize, 1, threads - 1] {
+            let fill = |base: usize, chunk: &mut [f32]| {
+                for (j, o) in chunk.iter_mut().enumerate() {
+                    *o = (base + j) as f32 + 1.0;
+                }
+            };
+            let mut pooled = vec![0.0f32; len];
+            run_chunked_mut(threads, 1, &mut pooled, fill);
+            let mut inline = vec![0.0f32; len];
+            fill(0, &mut inline);
+            assert_eq!(pooled, inline, "len={len}");
+        }
+    }
+
+    #[test]
+    fn segmented_writes_match_inline_and_respect_bounds() {
+        let bounds = [3usize, 10, 11, 300, 1000];
+        let len = *bounds.last().unwrap();
+        let fill = |base: usize, chunk: &mut [f32]| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = (base + j) as f32 * 0.25;
+            }
+        };
+        for threads in [1usize, 2, 4, 8] {
+            let mut pooled = vec![0.0f32; len];
+            run_segmented_mut(threads, &bounds, &mut pooled, fill);
+            let mut inline = vec![0.0f32; len];
+            fill(0, &mut inline);
+            assert_eq!(pooled, inline, "threads={threads}");
+        }
+        // every chunk must start on a segment boundary (or 0)
+        let bases = Mutex::new(Vec::new());
+        let mut out = vec![0.0f32; len];
+        run_segmented_mut(4, &bounds, &mut out, |base, _| bases.lock().unwrap().push(base));
+        for base in bases.into_inner().unwrap() {
+            assert!(
+                base == 0 || bounds.contains(&base),
+                "chunk base {base} is not a segment boundary"
+            );
+        }
+    }
+
+    #[test]
+    fn segmented_handles_degenerate_inputs() {
+        let fill = |base: usize, chunk: &mut [f32]| {
+            for (j, o) in chunk.iter_mut().enumerate() {
+                *o = (base + j) as f32 + 2.0;
+            }
+        };
+        // empty output with no segments
+        let mut none: Vec<f32> = Vec::new();
+        run_segmented_mut(4, &[], &mut none, fill);
+        // one giant segment: must run inline as a single window
+        let mut one = vec![0.0f32; 257];
+        run_segmented_mut(4, &[257], &mut one, fill);
+        let mut inline = vec![0.0f32; 257];
+        fill(0, &mut inline);
+        assert_eq!(one, inline);
+    }
+
+    #[cfg(all(
+        not(miri),
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    #[test]
+    fn pin_current_thread_is_best_effort_safe() {
+        // smoke test for the raw syscall wrapper: pinning the test
+        // thread to CPU 0 (always present) and to an absurd CPU id must
+        // both return without fault — the latter is simply refused by
+        // the kernel.
+        pin_current_thread(0);
+        pin_current_thread(10_000);
+    }
         let mut out = vec![0.0f32; 1000];
         let bases = Mutex::new(Vec::new());
         run_chunked_mut(7, 64, &mut out, |base, _| bases.lock().unwrap().push(base));

@@ -20,6 +20,7 @@
 
 use super::codec;
 use super::collectives::Backend;
+use super::kernels;
 use super::pool;
 
 /// One worker's sign votes, packed at 1 bit/coordinate — exactly the
@@ -163,7 +164,10 @@ impl PackedVotes {
 
     /// The 64 coordinates starting at `w * 64` as one little-endian
     /// word (bit `b` = coordinate `w*64 + b`), zero-padded past the
-    /// end of the payload.
+    /// end of the payload. The live tally reads words straight off
+    /// [`Self::as_bytes`] via `kernels::packed_word` (same semantics,
+    /// no per-word copy); this stays as the tests' reference accessor.
+    #[cfg(test)]
     fn word(&self, w: usize) -> u64 {
         let start = w * 8;
         if start >= self.bytes.len() {
@@ -187,6 +191,11 @@ impl PackedVotes {
 /// nonzero return as a sizing bug — the tally ORs the carries across
 /// ranks and asserts zero in release builds too, because a wrapped
 /// lane would flip majorities without any other symptom.
+///
+/// The live tally now runs the four-word strip form of this adder
+/// ([`kernels::tally_strip`], bitwise-identical per word); this
+/// single-word original stays as the tests' reference.
+#[cfg(test)]
 #[must_use]
 fn add_word(counts: &mut [u64], word: u64) -> u64 {
     let mut carry = word;
@@ -203,7 +212,9 @@ fn add_word(counts: &mut [u64], word: u64) -> u64 {
 
 /// Per-lane `count >= t` over the bit-sliced counters: bit `b` of the
 /// result is set iff lane `b`'s count is at least `t` (MSB-down
-/// comparison against the broadcast constant).
+/// comparison against the broadcast constant). Reference twin of the
+/// strip-layout comparator inside [`kernels::tally_strip`].
+#[cfg(test)]
 fn lanes_ge(counts: &[u64], t: u64) -> u64 {
     let mut ge = 0u64;
     let mut eq = !0u64;
@@ -255,29 +266,31 @@ pub fn majority_vote_packed_with<V: std::borrow::Borrow<PackedVotes> + Sync>(
         Backend::Sequential => 1,
         Backend::Threaded { threads } => threads,
     };
+    // Hoist every payload's byte slice once: the strip kernel loads
+    // tally words straight off these borrows (no per-word
+    // bounds-checked copy through `PackedVotes`), four words — 256
+    // lanes — per pass, with one independent carry chain per word.
+    // Bitwise-identical to the single-word reference tally
+    // (differential-tested in `kernels`), and the kernel asserts the
+    // same counter-overflow condition in release builds too: a silent
+    // wrap would flip majorities without any other symptom.
+    let slices: Vec<&[u8]> = votes.iter().map(|v| v.borrow().as_bytes()).collect();
+    let slices = &slices;
     // align 64 so every u64 tally word lives in exactly one chunk
     pool::run_chunked_mut(threads, 64, out, |base, chunk| {
         debug_assert_eq!(base % 64, 0);
-        let mut counts = vec![0u64; levels];
-        let mut wi = base / 64;
+        let mut winners = [0u64; kernels::STRIP_WORDS];
         let mut done = 0;
         while done < chunk.len() {
-            counts.fill(0);
-            // `levels` bits hold any count in 0..=n, so a carry out is
-            // impossible with correctly sized counters — assert that in
-            // release builds too: a silent wrap here flips majorities.
-            let mut overflow = 0u64;
-            for v in votes {
-                overflow |= add_word(&mut counts, v.borrow().word(wi));
+            let strip = super::div_up(chunk.len() - done, 64).min(kernels::STRIP_WORDS);
+            kernels::tally_strip(slices, (base + done) / 64, strip, levels, threshold, &mut winners);
+            for w in winners.iter().take(strip) {
+                let lanes = (chunk.len() - done).min(64);
+                for (b, o) in chunk[done..done + lanes].iter_mut().enumerate() {
+                    *o = if (*w >> b) & 1 == 1 { 1.0 } else { -1.0 };
+                }
+                done += lanes;
             }
-            assert_eq!(overflow, 0, "counter width must cover the rank count");
-            let winners = lanes_ge(&counts, threshold);
-            let lanes = (chunk.len() - done).min(64);
-            for (b, o) in chunk[done..done + lanes].iter_mut().enumerate() {
-                *o = if (winners >> b) & 1 == 1 { 1.0 } else { -1.0 };
-            }
-            wi += 1;
-            done += lanes;
         }
     });
 }
@@ -341,7 +354,8 @@ mod tests {
 
     #[test]
     fn tally_matches_f32_reference_on_small_patterns() {
-        for p in [1usize, 7, 8, 9, 63, 64, 65, 127, 130] {
+        // 257 and 300 straddle the 4-word strip boundary (256 lanes)
+        for p in [1usize, 7, 8, 9, 63, 64, 65, 127, 130, 257, 300] {
             for n in [1usize, 2, 3, 4, 5, 8] {
                 let votes: Vec<PackedVotes> = (0..n)
                     .map(|w| {

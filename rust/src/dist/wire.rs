@@ -48,6 +48,18 @@
 //! while the per-format byte advantage is untouched (the hierarchy
 //! moves the same `2(n−1)·b` total bytes).
 //!
+//! # The framed byte encoding
+//!
+//! Every payload serializes to one length-prefixed byte frame
+//! ([`WirePayload::encode_into`]) and parses back as a zero-copy
+//! borrowed view ([`WirePayload::decode`] → [`WirePayloadView`], which
+//! documents the per-format byte layout table). The frame length is
+//! *exactly* [`WirePayload::wire_bytes`] for every format — the billed
+//! number IS the framed length, so the byte accounting is pinned to a
+//! real encoding rather than a formula that could drift from it.
+//! Truncated frames, trailing bytes, and length-prefix drift are typed
+//! [`WireError`]s, never silent short reads.
+//!
 //! # Faults and `n_effective`
 //!
 //! Under an active [`crate::comm::FaultPlan`] a round's gather may see
@@ -136,6 +148,8 @@ use std::sync::Arc;
 
 use super::codec;
 use super::collectives;
+use super::kernels;
+use super::pool;
 use super::votes::{self, PackedVotes};
 use crate::comm::faults::Attack;
 use crate::comm::{CommModel, Topology};
@@ -174,6 +188,29 @@ pub enum WireError {
         /// The out-of-range coordinate index carried on the wire.
         index: u32,
     },
+    /// A framed byte message ([`WirePayload::encode_into`]) is shorter
+    /// than its layout requires — truncated in transit.
+    TruncatedFrame {
+        /// Bytes the frame layout requires.
+        needed: usize,
+        /// Bytes actually received.
+        got: usize,
+    },
+    /// A framed byte message carries bytes past its layout's end — a
+    /// frame boundary was lost in transit.
+    TrailingBytes {
+        /// Bytes past the end of the decoded frame.
+        extra: usize,
+    },
+    /// A frame's length-prefix header disagrees with the coordinate
+    /// count both ends agreed on at construction (the static sizing
+    /// contract — see [`WirePayload::decode`]).
+    FrameHeaderMismatch {
+        /// The agreed coordinate count.
+        expected: u64,
+        /// The count the frame header claims.
+        got: u64,
+    },
 }
 
 impl fmt::Display for WireError {
@@ -193,6 +230,18 @@ impl fmt::Display for WireError {
                 f,
                 "worker {worker}: sparse component index {index} outside the \
                  parameter vector (corrupted payload)"
+            ),
+            WireError::TruncatedFrame { needed, got } => write!(
+                f,
+                "framed message truncated: layout requires {needed} bytes, got {got}"
+            ),
+            WireError::TrailingBytes { extra } => write!(
+                f,
+                "framed message carries {extra} bytes past the end of its layout"
+            ),
+            WireError::FrameHeaderMismatch { expected, got } => write!(
+                f,
+                "frame header claims {got} coordinates, the sizing contract says {expected}"
             ),
         }
     }
@@ -477,6 +526,123 @@ pub enum WirePayload {
     },
 }
 
+/// Thread count for the mean-decode paths: the same auto policy the
+/// f32 collectives use (threaded only past the dispatch-amortizing
+/// threshold, capped at the pool size), so a small decode never pays
+/// pool dispatch.
+fn mean_decode_threads(len: usize) -> usize {
+    match collectives::Backend::auto(len) {
+        collectives::Backend::Sequential => 1,
+        collectives::Backend::Threaded { threads } => threads,
+    }
+}
+
+/// Zero-copy view of one framed byte message
+/// ([`WirePayload::encode_into`] / [`WirePayload::decode`]): every
+/// field is a borrowed sub-slice of the frame, so decoding allocates
+/// nothing and copies nothing. Multi-byte fields stay byte slices
+/// (little-endian) rather than `&[f32]`/`&[u32]` borrows because a
+/// frame buffer carries no alignment guarantee; read them through
+/// [`WirePayloadView::read_f32`] / [`WirePayloadView::read_u32`].
+///
+/// # Frame layouts (all integers little-endian)
+///
+/// | format | frame bytes, in order | total |
+/// |---|---|---|
+/// | `dense` | `P × f32` coordinates | `4P` |
+/// | `packed_signs` | `u64` coordinate count, `⌈P/8⌉` vote bytes | `⌈P/8⌉ + 8` |
+/// | `q8` | `u64` coordinate count, `f32` scale, `P × i8` | `P + 12` |
+/// | `q8pt` | `u64` coordinate count, `S × f32` scales, `P × i8` | `P + 4S + 8` |
+/// | `topk` | `u64` kept count `K`, `K × u32` indices, `K × f32` values | `8K + 8` |
+///
+/// Each layout's total is exactly the payload's
+/// [`WirePayload::wire_bytes`] — the billed number IS the framed
+/// length, asserted at encode time and test-pinned for every format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WirePayloadView<'a> {
+    /// `P` little-endian f32 coordinates.
+    DenseF32 {
+        /// The `4P`-byte coordinate body.
+        body: &'a [u8],
+    },
+    /// Packed 1-bit sign votes.
+    PackedSigns {
+        /// Coordinate count from the frame header.
+        len: usize,
+        /// The `⌈len/8⌉` vote bytes (LSB-first, like
+        /// [`PackedVotes::as_bytes`]).
+        bits: &'a [u8],
+    },
+    /// Per-message-scale quantized differences.
+    QuantizedI8 {
+        /// The symmetric quantization step.
+        scale: f32,
+        /// One two's-complement i8 per coordinate.
+        bytes: &'a [u8],
+    },
+    /// Per-segment-scale quantized differences.
+    QuantizedI8PerTensor {
+        /// `S` little-endian f32 scales.
+        scales: &'a [u8],
+        /// One two's-complement i8 per coordinate.
+        bytes: &'a [u8],
+    },
+    /// Sparse top-k components.
+    TopK {
+        /// `K` little-endian u32 global coordinate indices.
+        indices: &'a [u8],
+        /// `K` little-endian f32 transmitted values.
+        values: &'a [u8],
+    },
+}
+
+impl WirePayloadView<'_> {
+    /// The `i`-th little-endian f32 of a byte-packed field.
+    pub fn read_f32(bytes: &[u8], i: usize) -> f32 {
+        let b: [u8; 4] = bytes[i * 4..i * 4 + 4].try_into().expect("4-byte window");
+        f32::from_le_bytes(b)
+    }
+
+    /// The `i`-th little-endian u32 of a byte-packed field.
+    pub fn read_u32(bytes: &[u8], i: usize) -> u32 {
+        let b: [u8; 4] = bytes[i * 4..i * 4 + 4].try_into().expect("4-byte window");
+        u32::from_le_bytes(b)
+    }
+
+    /// Coordinates this frame speaks for (for `topk`: the kept
+    /// component count `K`, the frame's own length prefix — the tiled
+    /// coordinate count is the static contract's, not the frame's).
+    pub fn frame_items(&self) -> usize {
+        match self {
+            WirePayloadView::DenseF32 { body } => body.len() / 4,
+            WirePayloadView::PackedSigns { len, .. } => *len,
+            WirePayloadView::QuantizedI8 { bytes, .. } => bytes.len(),
+            WirePayloadView::QuantizedI8PerTensor { bytes, .. } => bytes.len(),
+            WirePayloadView::TopK { indices, .. } => indices.len() / 4,
+        }
+    }
+}
+
+/// Check `frame` against its layout's exact byte length: truncation
+/// and trailing garbage are both typed rejections, never a silent
+/// short read.
+fn check_frame_len(frame: &[u8], needed: usize) -> Result<(), WireError> {
+    if frame.len() < needed {
+        return Err(WireError::TruncatedFrame { needed, got: frame.len() });
+    }
+    if frame.len() > needed {
+        return Err(WireError::TrailingBytes { extra: frame.len() - needed });
+    }
+    Ok(())
+}
+
+/// Read the little-endian u64 length prefix off the front of `frame`
+/// (the caller has already length-checked the whole frame).
+fn frame_header(frame: &[u8]) -> u64 {
+    let h: [u8; 8] = frame[..8].try_into().expect("8-byte window");
+    u64::from_le_bytes(h)
+}
+
 impl WirePayload {
     /// A zeroed payload of `len` coordinates in `format` — the initial
     /// state of the trainer's persistent buffers. Its
@@ -577,6 +743,134 @@ impl WirePayload {
                 codec::q8pt_bytes(bytes.len(), scales.len())
             }
             WirePayload::TopK { indices, .. } => codec::topk_bytes(indices.len()),
+        }
+    }
+
+    /// Serialize this payload as one framed byte message (the layouts
+    /// on [`WirePayloadView`]) into `out`, reusing its capacity: the
+    /// steady-state encode allocates nothing once the buffer has grown
+    /// to frame size. The encoded length is exactly
+    /// [`WirePayload::wire_bytes`] — the billed number IS the framed
+    /// length, debug-asserted here and test-pinned per format.
+    ///
+    /// What frames carry is the *wire data only*: the top-k residual is
+    /// worker state and the `q8pt`/`topk` layouts are the static
+    /// contract both ends already hold ([`WirePayload::decode`] takes
+    /// them back as parameters), exactly like the byte accounting.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.wire_bytes() as usize);
+        match self {
+            WirePayload::DenseF32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            WirePayload::PackedSigns(p) => {
+                out.extend_from_slice(&(p.len() as u64).to_le_bytes());
+                out.extend_from_slice(p.as_bytes());
+            }
+            WirePayload::QuantizedI8 { scale, bytes } => {
+                out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+                out.extend_from_slice(&scale.to_le_bytes());
+                out.extend_from_slice(bytes);
+            }
+            WirePayload::QuantizedI8PerTensor { scales, bytes, .. } => {
+                out.extend_from_slice(&(bytes.len() as u64).to_le_bytes());
+                for s in scales {
+                    out.extend_from_slice(&s.to_le_bytes());
+                }
+                out.extend_from_slice(bytes);
+            }
+            WirePayload::TopK { indices, values, .. } => {
+                out.extend_from_slice(&(indices.len() as u64).to_le_bytes());
+                for ix in indices {
+                    out.extend_from_slice(&ix.to_le_bytes());
+                }
+                for v in values {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        debug_assert_eq!(
+            out.len() as u64,
+            self.wire_bytes(),
+            "framed length must equal the billed wire bytes"
+        );
+    }
+
+    /// Parse one framed byte message into a zero-copy
+    /// [`WirePayloadView`] — every field borrows from `frame`, no
+    /// intermediate `Vec` per field. `format` and `layout` are the
+    /// static sizing contract both ends hold (what
+    /// [`WirePayload::with_layout`] builds from; pass
+    /// `ParamLayout::single(len)` for the layout-free formats), so the
+    /// expected frame length is known exactly up front.
+    ///
+    /// # Errors
+    ///
+    /// [`WireError::TruncatedFrame`] when the frame is shorter than its
+    /// layout requires, [`WireError::TrailingBytes`] when it runs past
+    /// it, and [`WireError::FrameHeaderMismatch`] when the length
+    /// prefix disagrees with the contract. Structural validation only:
+    /// finiteness and sparse index ranges stay with
+    /// [`WirePayload::check_finite`], on the decoded payload level.
+    pub fn decode<'a>(
+        format: WireFormat,
+        layout: &ParamLayout,
+        frame: &'a [u8],
+    ) -> Result<WirePayloadView<'a>, WireError> {
+        let p = layout.param_count();
+        match format {
+            WireFormat::DenseF32 => {
+                check_frame_len(frame, p * 4)?;
+                Ok(WirePayloadView::DenseF32 { body: frame })
+            }
+            WireFormat::PackedSigns => {
+                check_frame_len(frame, codec::sign_allreduce_bytes(p) as usize)?;
+                let got = frame_header(frame);
+                if got != p as u64 {
+                    return Err(WireError::FrameHeaderMismatch { expected: p as u64, got });
+                }
+                Ok(WirePayloadView::PackedSigns { len: p, bits: &frame[8..] })
+            }
+            WireFormat::QuantizedI8 => {
+                check_frame_len(frame, codec::q8_bytes(p) as usize)?;
+                let got = frame_header(frame);
+                if got != p as u64 {
+                    return Err(WireError::FrameHeaderMismatch { expected: p as u64, got });
+                }
+                let scale = WirePayloadView::read_f32(&frame[8..12], 0);
+                Ok(WirePayloadView::QuantizedI8 { scale, bytes: &frame[12..] })
+            }
+            WireFormat::QuantizedI8PerTensor => {
+                let s = layout.len();
+                check_frame_len(frame, codec::q8pt_bytes(p, s) as usize)?;
+                let got = frame_header(frame);
+                if got != p as u64 {
+                    return Err(WireError::FrameHeaderMismatch { expected: p as u64, got });
+                }
+                Ok(WirePayloadView::QuantizedI8PerTensor {
+                    scales: &frame[8..8 + 4 * s],
+                    bytes: &frame[8 + 4 * s..],
+                })
+            }
+            WireFormat::TopK { frac_ppm, .. } => {
+                let k: usize = layout
+                    .entries()
+                    .iter()
+                    .map(|e| codec::topk_budget(e.numel(), frac_ppm))
+                    .sum();
+                check_frame_len(frame, codec::topk_bytes(k) as usize)?;
+                let got = frame_header(frame);
+                if got != k as u64 {
+                    return Err(WireError::FrameHeaderMismatch { expected: k as u64, got });
+                }
+                Ok(WirePayloadView::TopK {
+                    indices: &frame[8..8 + 4 * k],
+                    values: &frame[8 + 4 * k..],
+                })
+            }
         }
     }
 
@@ -693,7 +987,19 @@ impl WirePayload {
                 buf.copy_from_slice(end);
             }
             WirePayload::QuantizedI8 { scale, bytes } => {
-                *scale = codec::quantize_diff_into(start, end, bytes);
+                // the persistent buffer is already sized; the slice
+                // variant keeps the hot path allocation-free (the
+                // resizing `quantize_diff_into` is the cold-path /
+                // test convenience — invlint W8 keeps it out of the
+                // training loop)
+                assert_eq!(
+                    bytes.len(),
+                    end.len(),
+                    "pack_end: {} coordinates into a q8 payload sized {}",
+                    end.len(),
+                    bytes.len()
+                );
+                *scale = codec::quantize_diff_slice(start, end, bytes);
             }
             WirePayload::QuantizedI8PerTensor { layout, scales, bytes } => {
                 assert_eq!(
@@ -865,16 +1171,31 @@ impl WirePayload {
             WirePayload::QuantizedI8 { .. } => {
                 assert_eq!(start.len(), out.len(), "start length {} != output", start.len());
                 let inv_n = 1.0f64 / payloads.len() as f64;
-                for (i, o) in out.iter_mut().enumerate() {
-                    let mut acc = 0.0f64;
+                // Payload-major decode: each payload's byte vector
+                // streams once through `kernels::dequant_accumulate`
+                // instead of being random-accessed per coordinate.
+                // Every coordinate still sums its dequantized values in
+                // payload order into an f64 slot, so the result is
+                // bitwise-identical to the historical coordinate-major
+                // loop — and independent of the chunking, which lets
+                // large decodes split across the pool.
+                let threads = mean_decode_threads(out.len());
+                pool::run_chunked_mut(threads, 1, out, |base, chunk| {
+                    let mut acc = vec![0.0f64; chunk.len()];
                     for p in payloads {
                         let WirePayload::QuantizedI8 { scale, bytes } = p else {
                             unreachable!("format checked above")
                         };
-                        acc += codec::dequantize_i8(bytes[i], *scale) as f64;
+                        kernels::dequant_accumulate(
+                            &bytes[base..base + chunk.len()],
+                            *scale,
+                            &mut acc,
+                        );
                     }
-                    *o = start[i] - (acc * inv_n) as f32;
-                }
+                    for (j, o) in chunk.iter_mut().enumerate() {
+                        *o = start[base + j] - (acc[j] * inv_n) as f32;
+                    }
+                });
             }
             WirePayload::QuantizedI8PerTensor { .. } => {
                 assert_eq!(start.len(), out.len(), "start length {} != output", start.len());
@@ -895,18 +1216,37 @@ impl WirePayload {
                     assert_eq!(p.layout(), Some(layout), "worker {i}: mixed parameter layouts");
                 }
                 let inv_n = 1.0f64 / payloads.len() as f64;
-                for (si, e) in layout.entries().iter().enumerate() {
-                    for i in e.offset..e.offset + e.numel() {
-                        let mut acc = 0.0f64;
-                        for p in payloads {
-                            let WirePayload::QuantizedI8PerTensor { scales, bytes, .. } = p else {
-                                unreachable!("format checked above")
-                            };
-                            acc += codec::dequantize_i8(bytes[i], scales[si]) as f64;
+                // Same payload-major restructure as the q8 arm, with
+                // chunk boundaries snapped to segment ends so every
+                // (segment, scale) pair decodes on one thread. Each
+                // coordinate's f64 sum still runs in payload order, so
+                // the chunking cannot change a bit — and a one-segment
+                // layout still reproduces the q8 arm exactly.
+                let entries = layout.entries();
+                let bounds: Vec<usize> = entries.iter().map(|e| e.offset + e.numel()).collect();
+                let threads = mean_decode_threads(out.len());
+                pool::run_segmented_mut(threads, &bounds, out, |base, chunk| {
+                    let mut acc = vec![0.0f64; chunk.len()];
+                    for p in payloads {
+                        let WirePayload::QuantizedI8PerTensor { scales, bytes, .. } = p else {
+                            unreachable!("format checked above")
+                        };
+                        for (si, e) in entries.iter().enumerate() {
+                            if e.offset < base || e.offset >= base + chunk.len() {
+                                continue;
+                            }
+                            let r = e.offset..e.offset + e.numel();
+                            kernels::dequant_accumulate(
+                                &bytes[r],
+                                scales[si],
+                                &mut acc[e.offset - base..e.offset - base + e.numel()],
+                            );
                         }
-                        out[i] = start[i] - (acc * inv_n) as f32;
                     }
-                }
+                    for (j, o) in chunk.iter_mut().enumerate() {
+                        *o = start[base + j] - (acc[j] * inv_n) as f32;
+                    }
+                });
             }
             WirePayload::TopK { .. } => {
                 assert_eq!(start.len(), out.len(), "start length {} != output", start.len());
@@ -2564,6 +2904,225 @@ mod tests {
         let mut out = vec![0.0f32; 4];
         WirePayload::mean_end_into(&heads[..1], &start, &mut out).unwrap();
         assert!((start[0] - out[0]).abs() < 2.0 * honest_mean_diff, "{}", out[0]);
+    }
+
+    /// One packed payload per format over the shared two-segment
+    /// layout, plus the layout itself — the frame-codec fixtures.
+    fn framed_fixture(format: WireFormat) -> (WirePayload, Arc<ParamLayout>) {
+        let layout = two_segment_layout(5, 11);
+        let mut p = WirePayload::with_layout(format, &layout);
+        let start: Vec<f32> = (0..16).map(|i| i as f32 * 0.25).collect();
+        let end: Vec<f32> = start.iter().map(|s| s - 0.125).collect();
+        if format == WireFormat::PackedSigns {
+            let votes: Vec<f32> =
+                (0..16).map(|i| if i % 3 == 0 { 1.0 } else { -1.0 }).collect();
+            p.pack_sign_votes(&votes);
+        } else {
+            p.pack_end(&start, &end);
+        }
+        (p, layout)
+    }
+
+    #[test]
+    fn encoded_frame_length_equals_wire_bytes_for_every_format() {
+        // the tentpole pin: the billed number IS the framed length
+        for format in ALL_FORMATS {
+            let (p, _) = framed_fixture(format);
+            let mut frame = Vec::new();
+            p.encode_into(&mut frame);
+            assert_eq!(frame.len() as u64, p.wire_bytes(), "{}", format.name());
+            // encode reuses the buffer without growing past frame size
+            let cap = frame.capacity();
+            p.encode_into(&mut frame);
+            assert_eq!(frame.capacity(), cap, "{}", format.name());
+        }
+    }
+
+    #[test]
+    fn frame_round_trip_preserves_every_field() {
+        for format in ALL_FORMATS {
+            let (p, layout) = framed_fixture(format);
+            let mut frame = Vec::new();
+            p.encode_into(&mut frame);
+            let view = WirePayload::decode(format, &layout, &frame).unwrap();
+            match (&p, view) {
+                (WirePayload::DenseF32(v), WirePayloadView::DenseF32 { body }) => {
+                    assert_eq!(body.len(), v.len() * 4);
+                    for (i, x) in v.iter().enumerate() {
+                        assert_eq!(
+                            WirePayloadView::read_f32(body, i).to_bits(),
+                            x.to_bits()
+                        );
+                    }
+                }
+                (WirePayload::PackedSigns(pv), WirePayloadView::PackedSigns { len, bits }) => {
+                    assert_eq!(len, pv.len());
+                    assert_eq!(bits, pv.as_bytes());
+                }
+                (
+                    WirePayload::QuantizedI8 { scale, bytes },
+                    WirePayloadView::QuantizedI8 { scale: vscale, bytes: vbytes },
+                ) => {
+                    assert_eq!(vscale.to_bits(), scale.to_bits());
+                    assert_eq!(vbytes, bytes.as_slice());
+                }
+                (
+                    WirePayload::QuantizedI8PerTensor { scales, bytes, .. },
+                    WirePayloadView::QuantizedI8PerTensor { scales: vscales, bytes: vbytes },
+                ) => {
+                    assert_eq!(vscales.len(), scales.len() * 4);
+                    for (i, s) in scales.iter().enumerate() {
+                        assert_eq!(
+                            WirePayloadView::read_f32(vscales, i).to_bits(),
+                            s.to_bits()
+                        );
+                    }
+                    assert_eq!(vbytes, bytes.as_slice());
+                }
+                (
+                    WirePayload::TopK { indices, values, .. },
+                    WirePayloadView::TopK { indices: vidx, values: vvals },
+                ) => {
+                    assert_eq!(vidx.len(), indices.len() * 4);
+                    for (i, ix) in indices.iter().enumerate() {
+                        assert_eq!(WirePayloadView::read_u32(vidx, i), *ix);
+                    }
+                    for (i, v) in values.iter().enumerate() {
+                        assert_eq!(
+                            WirePayloadView::read_f32(vvals, i).to_bits(),
+                            v.to_bits()
+                        );
+                    }
+                }
+                (payload, view) => {
+                    panic!("{}: view {view:?} mismatches payload {payload:?}", format.name())
+                }
+            }
+            assert_eq!(
+                WirePayload::decode(format, &layout, &frame).unwrap().frame_items(),
+                match format {
+                    WireFormat::TopK { .. } => p
+                        .layout()
+                        .unwrap()
+                        .entries()
+                        .iter()
+                        .map(|e| codec::topk_budget(e.numel(), 62_500))
+                        .sum::<usize>(),
+                    WireFormat::DenseF32
+                    | WireFormat::PackedSigns
+                    | WireFormat::QuantizedI8
+                    | WireFormat::QuantizedI8PerTensor => 16,
+                },
+                "{}",
+                format.name()
+            );
+        }
+    }
+
+    #[test]
+    fn frame_decode_rejects_truncation_trailing_and_header_drift() {
+        for format in ALL_FORMATS {
+            let (p, layout) = framed_fixture(format);
+            let mut frame = Vec::new();
+            p.encode_into(&mut frame);
+            let needed = frame.len();
+            // every strict prefix is a typed truncation
+            for cut in [0, 1, needed.saturating_sub(1)] {
+                let got = WirePayload::decode(format, &layout, &frame[..cut]);
+                assert_eq!(
+                    got,
+                    Err(WireError::TruncatedFrame { needed, got: cut }),
+                    "{} cut={cut}",
+                    format.name()
+                );
+            }
+            // bytes past the layout's end are a typed rejection too
+            let mut long = frame.clone();
+            long.extend_from_slice(&[0xAB; 3]);
+            assert_eq!(
+                WirePayload::decode(format, &layout, &long),
+                Err(WireError::TrailingBytes { extra: 3 }),
+                "{}",
+                format.name()
+            );
+            // a corrupted length prefix is caught against the contract
+            // (dense frames carry no prefix — their length check IS the
+            // contract)
+            if format != WireFormat::DenseF32 {
+                let mut drifted = frame.clone();
+                drifted[0] ^= 0x01;
+                let got = WirePayload::decode(format, &layout, &drifted);
+                let expected = frame_header(&frame);
+                assert_eq!(
+                    got,
+                    Err(WireError::FrameHeaderMismatch {
+                        expected,
+                        got: frame_header(&drifted),
+                    }),
+                    "{}",
+                    format.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frame_errors_display_their_numbers() {
+        // W1 companion: the new typed rejections render per-variant
+        let e = WireError::TruncatedFrame { needed: 20, got: 12 };
+        assert!(e.to_string().contains("20") && e.to_string().contains("12"));
+        let e = WireError::TrailingBytes { extra: 3 };
+        assert!(e.to_string().contains('3'));
+        let e = WireError::FrameHeaderMismatch { expected: 16, got: 17 };
+        assert!(e.to_string().contains("16") && e.to_string().contains("17"));
+    }
+
+    #[test]
+    fn mean_decode_is_bitwise_identical_to_the_scalar_reference() {
+        // the q8/q8pt mean paths now stream payload-major through
+        // kernels::dequant_accumulate and may split across the pool;
+        // both restructures must keep every output bit. The reference
+        // below is the historical coordinate-major loop, verbatim.
+        let mut rng = Rng::new(515);
+        let layout = two_segment_layout(37, 91);
+        let p = layout.param_count();
+        let start: Vec<f32> = (0..p).map(|_| rng.normal_f32(0.0, 1.0)).collect();
+        let n = 5;
+        for format in [WireFormat::QuantizedI8, WireFormat::QuantizedI8PerTensor] {
+            let payloads: Vec<WirePayload> = (0..n)
+                .map(|_| {
+                    let end: Vec<f32> =
+                        start.iter().map(|s| s - 0.01 * rng.normal_f32(0.0, 1.0)).collect();
+                    let mut pl = WirePayload::with_layout(format, &layout);
+                    pl.pack_end(&start, &end);
+                    pl
+                })
+                .collect();
+            let mut fast = vec![0.0f32; p];
+            WirePayload::mean_end_into(&payloads, &start, &mut fast).unwrap();
+            let inv_n = 1.0f64 / n as f64;
+            let mut reference = vec![0.0f32; p];
+            for (i, o) in reference.iter_mut().enumerate() {
+                let mut acc = 0.0f64;
+                for pl in &payloads {
+                    let (scale, byte) = match pl {
+                        WirePayload::QuantizedI8 { scale, bytes } => (*scale, bytes[i]),
+                        WirePayload::QuantizedI8PerTensor { scales, bytes, .. } => {
+                            let si = usize::from(i >= 37);
+                            (scales[si], bytes[i])
+                        }
+                        WirePayload::DenseF32(_)
+                        | WirePayload::PackedSigns(_)
+                        | WirePayload::TopK { .. } => unreachable!("q8/q8pt only"),
+                    };
+                    acc += codec::dequantize_i8(byte, scale) as f64;
+                }
+                *o = start[i] - (acc * inv_n) as f32;
+            }
+            for (j, (a, b)) in fast.iter().zip(&reference).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} coord {j}", format.name());
+            }
+        }
     }
 
     #[test]

@@ -158,9 +158,10 @@ pub struct RunSummary {
 const CACHE_MODEL_VERSION: &str = "v7";
 
 /// Content hash of everything that determines a run's trajectory.
-/// `cfg.sequential_workers` is deliberately excluded: the parallel and
-/// sequential fleets produce bit-identical trajectories (only measured
-/// wall-clock differs, and measured time was never part of the key).
+/// `cfg.sequential_workers` and `cfg.pin_workers` are deliberately
+/// excluded: the parallel, sequential, and core-pinned fleets produce
+/// bit-identical trajectories (only measured wall-clock differs, and
+/// measured time was never part of the key).
 fn cache_key(cfg: &RunConfig) -> String {
     let desc = format!(
         "{CACHE_MODEL_VERSION}|{}|{:?}|{:?}|{:?}|{}|{}|{}|{}|{}|{}|{}|{}",

@@ -1,0 +1,222 @@
+//! Blocked f32 matmul microkernel shared by the native backends'
+//! transformer forward and backward passes.
+//!
+//! # The fixed-reduction-order contract
+//!
+//! Every routine here computes each output element as a sum over the
+//! contraction index in **ascending order, starting from 0.0** — the
+//! exact per-element order the historical hand-rolled loops in
+//! `runtime/native.rs` used. f32 addition is not associative, so this
+//! order *is* the value: the parallel ≡ sequential differential tests
+//! and the golden trajectories pin these bits, and any reordering (a
+//! split accumulator, a pairwise tree, an FMA contraction) is a
+//! correctness bug here, not an optimization.
+//!
+//! The speed therefore comes only from order-preserving structure:
+//!
+//! * [`axpy`] / [`axpy4`] walk rows of `B` contiguously (unit stride)
+//!   instead of the naive dot's stride-`n` column walk, so the inner
+//!   loop vectorizes;
+//! * [`axpy4`] keeps the output element in a register across four
+//!   consecutive contraction steps (register tiling) — it is bitwise
+//!   identical to four sequential [`axpy`] calls by construction;
+//! * [`matmul_blocked`] tiles the output into column blocks of
+//!   [`NB`] elements so the accumulator row segment and the `B` panel
+//!   stay cache-resident while the contraction streams over `k`.
+//!
+//! [`matmul_naive`] is the scalar reference: the differential tests
+//! below require `matmul_blocked` ≡ `matmul_naive` **bitwise** on every
+//! shape, and `benches/kernels.rs` records the speedup between them.
+
+/// Output-column block width: `NB` f32 accumulators (1 KiB) per row
+/// segment, small enough to stay in L1 across the `k` sweep.
+pub const NB: usize = 256;
+
+/// `acc[i] += a * x[i]` over the whole slice, ascending `i`.
+///
+/// Panics unless `x.len() == acc.len()` (the caller slices exactly).
+pub fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(acc.len(), x.len(), "axpy: acc and x lengths must match");
+    for (av, &xv) in acc.iter_mut().zip(x) {
+        *av += a * xv;
+    }
+}
+
+/// Four fused [`axpy`] steps: for each `i`,
+/// `acc[i] = (((acc[i] + a[0]·x0[i]) + a[1]·x1[i]) + a[2]·x2[i]) + a[3]·x3[i]`
+/// — left to right, so the result is bitwise identical to four
+/// sequential `axpy` calls while the accumulator stays in a register.
+pub fn axpy4(acc: &mut [f32], a: [f32; 4], x0: &[f32], x1: &[f32], x2: &[f32], x3: &[f32]) {
+    let n = acc.len();
+    assert!(
+        x0.len() == n && x1.len() == n && x2.len() == n && x3.len() == n,
+        "axpy4: all operand lengths must match the accumulator"
+    );
+    let (x0, x1, x2, x3) = (&x0[..n], &x1[..n], &x2[..n], &x3[..n]);
+    for i in 0..n {
+        let mut v = acc[i];
+        v += a[0] * x0[i];
+        v += a[1] * x1[i];
+        v += a[2] * x2[i];
+        v += a[3] * x3[i];
+        acc[i] = v;
+    }
+}
+
+/// Scalar reference matmul: `out[i,j] = Σ_kk a[i,kk]·b[kk,j]` with the
+/// per-element sum running `kk`-ascending from 0.0 (row-major `m×k`
+/// times `k×n` into `m×n`). The inner walk reads `b` at stride `n` —
+/// this is the historical dot-product form the blocked kernel must
+/// match bitwise and is expected to beat on throughput.
+pub fn matmul_naive(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul: a must be m×k");
+    assert_eq!(b.len(), k * n, "matmul: b must be k×n");
+    assert_eq!(out.len(), m * n, "matmul: out must be m×n");
+    for i in 0..m {
+        let ar = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for (kk, &av) in ar.iter().enumerate() {
+                acc += av * b[kk * n + j];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+}
+
+/// Blocked matmul, bitwise identical to [`matmul_naive`]: same shapes,
+/// same per-element `kk`-ascending sums, restructured as column blocks
+/// of [`NB`] with a `kk`-by-4 [`axpy4`] register tile and an [`axpy`]
+/// tail. Zeroes `out` (so `k == 0` yields an all-zero product).
+pub fn matmul_blocked(out: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "matmul: a must be m×k");
+    assert_eq!(b.len(), k * n, "matmul: b must be k×n");
+    assert_eq!(out.len(), m * n, "matmul: out must be m×n");
+    if n == 0 {
+        return;
+    }
+    let mut j0 = 0usize;
+    while j0 < n {
+        let jw = NB.min(n - j0);
+        for i in 0..m {
+            let or = &mut out[i * n + j0..i * n + j0 + jw];
+            or.fill(0.0);
+            let ar = &a[i * k..(i + 1) * k];
+            let mut kk = 0usize;
+            while kk + 4 <= k {
+                axpy4(
+                    or,
+                    [ar[kk], ar[kk + 1], ar[kk + 2], ar[kk + 3]],
+                    &b[kk * n + j0..kk * n + j0 + jw],
+                    &b[(kk + 1) * n + j0..(kk + 1) * n + j0 + jw],
+                    &b[(kk + 2) * n + j0..(kk + 2) * n + j0 + jw],
+                    &b[(kk + 3) * n + j0..(kk + 3) * n + j0 + jw],
+                );
+                kk += 4;
+            }
+            while kk < k {
+                axpy(or, ar[kk], &b[kk * n + j0..kk * n + j0 + jw]);
+                kk += 1;
+            }
+        }
+        j0 += NB;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randn(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal_f32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn axpy4_is_bitwise_four_sequential_axpys() {
+        let mut rng = Rng::new(71);
+        for n in [0usize, 1, 3, 8, 257] {
+            let a = [
+                rng.normal_f32(0.0, 1.0),
+                rng.normal_f32(0.0, 1.0),
+                0.0,
+                rng.normal_f32(0.0, 1e-20),
+            ];
+            let xs: Vec<Vec<f32>> = (0..4).map(|_| randn(&mut rng, n)).collect();
+            let base = randn(&mut rng, n);
+            let mut fused = base.clone();
+            axpy4(&mut fused, a, &xs[0], &xs[1], &xs[2], &xs[3]);
+            let mut seq = base.clone();
+            for (av, x) in a.iter().zip(&xs) {
+                axpy(&mut seq, *av, x);
+            }
+            for (f, s) in fused.iter().zip(&seq) {
+                assert_eq!(f.to_bits(), s.to_bits(), "n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitwise_on_every_shape_class() {
+        // Shapes cross every structural case: k tail lengths 0..3, a
+        // column count right at / above / far above one NB block, and
+        // degenerate zero dims.
+        let shapes = [
+            (1usize, 1usize, 1usize),
+            (3, 5, 7),
+            (4, 4, 256),
+            (2, 13, 300),
+            (5, 64, 257),
+            (7, 3, 512),
+            (1, 2, 1000),
+            (0, 3, 4),
+            (3, 0, 4),
+            (3, 4, 0),
+        ];
+        let mut rng = Rng::new(72);
+        for (m, k, n) in shapes {
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let mut naive = vec![f32::NAN; m * n];
+            let mut blocked = vec![f32::NAN; m * n];
+            matmul_naive(&mut naive, &a, &b, m, k, n);
+            matmul_blocked(&mut blocked, &a, &b, m, k, n);
+            for (i, (x, y)) in naive.iter().zip(&blocked).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m},{k},{n}) elem {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_matches_a_hand_computed_product() {
+        // [1 2; 3 4] · [5 6; 7 8] = [19 22; 43 50]
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [5.0f32, 6.0, 7.0, 8.0];
+        let mut out = [0.0f32; 4];
+        matmul_blocked(&mut out, &a, &b, 2, 2, 2);
+        assert_eq!(out, [19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn identity_is_a_fixed_point() {
+        let mut rng = Rng::new(73);
+        let (m, d) = (3usize, 300usize);
+        let a = randn(&mut rng, m * d);
+        let mut eye = vec![0.0f32; d * d];
+        for i in 0..d {
+            eye[i * d + i] = 1.0;
+        }
+        let mut out = vec![0.0f32; m * d];
+        matmul_blocked(&mut out, &a, &eye, m, d, d);
+        for (x, y) in a.iter().zip(&out) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn zero_contraction_zeroes_the_output() {
+        let mut out = vec![f32::NAN; 6];
+        matmul_blocked(&mut out, &[], &[], 2, 0, 3);
+        assert!(out.iter().all(|v| v.to_bits() == 0));
+    }
+}

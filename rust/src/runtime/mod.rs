@@ -24,6 +24,11 @@
 //!   a true multi-layer transformer via [`NativeBundle::transformer`])
 //!   that needs no PJRT at all and whose transformer layout has
 //!   per-block named segments.
+//! * [`gemm`] — the blocked f32 matmul microkernel behind the native
+//!   transformer's forward/backward: faster through unit-stride axpy
+//!   rows, register tiling, and cache blocking, while preserving the
+//!   per-element ascending-`k` reduction order bitwise (the golden
+//!   trajectories pin those bits).
 //!
 //! Interchange is HLO *text*: jax ≥ 0.5 emits 64-bit instruction ids that
 //! xla_extension 0.5.1's proto path rejects; the text parser reassigns
@@ -31,6 +36,7 @@
 
 mod artifacts;
 mod bundle;
+pub mod gemm;
 mod layout;
 mod native;
 mod sign_kernel;

@@ -50,11 +50,15 @@
 //! Every operation is scalar f32 with a fixed accumulation order (loss
 //! accumulates in f64), so both architectures are bit-deterministic for
 //! a given (params, batch) on a given host — the property the
-//! parallel ≡ sequential differential tests pin.
+//! parallel ≡ sequential differential tests pin. The transformer's
+//! matrix products run through the blocked [`super::gemm`] microkernel,
+//! which is bitwise identical to the historical hand-rolled dots
+//! because it preserves each output element's ascending contraction
+//! order (see the `gemm` module docs for the contract).
 
 use anyhow::Result;
 
-use super::{ParamEntry, ParamLayout, PresetInfo, StepBackend, StepOutput};
+use super::{gemm, ParamEntry, ParamLayout, PresetInfo, StepBackend, StepOutput};
 use crate::data::dataset::Batch;
 use crate::util::rng::Rng;
 
@@ -332,7 +336,9 @@ impl NativeBundle {
         let mut hhb = vec![vec![0.0f32; s * f]; n_layer];
         // scratch
         let mut row = vec![0.0f32; s];
-        let mut logits = vec![0.0f32; VOCAB];
+        let mut logits = vec![0.0f32; s * VOCAB];
+        let mut resid = vec![0.0f32; s * d];
+        let mut pre = vec![0.0f32; s * f];
         let mut dx = vec![0.0f32; s * d];
         let mut dxmid = vec![0.0f32; s * d];
         let mut dctx = vec![0.0f32; s * d];
@@ -357,21 +363,12 @@ impl NativeBundle {
             for l in 0..n_layer {
                 let (wq0, wk0, wv0, wo0, w10, w20) = offs(l);
                 xin[l].copy_from_slice(&x);
-                // Q, K, V = X Wq, X Wk, X Wv
-                for t in 0..s {
-                    for j2 in 0..d {
-                        let (mut aq, mut ak, mut av) = (0.0f32, 0.0f32, 0.0f32);
-                        for j in 0..d {
-                            let xv = x[t * d + j];
-                            aq += xv * params[wq0 + j * d + j2];
-                            ak += xv * params[wk0 + j * d + j2];
-                            av += xv * params[wv0 + j * d + j2];
-                        }
-                        qb[l][t * d + j2] = aq;
-                        kb[l][t * d + j2] = ak;
-                        vb[l][t * d + j2] = av;
-                    }
-                }
+                // Q, K, V = X Wq, X Wk, X Wv — blocked GEMM, bitwise
+                // equal to the historical per-element dots (same
+                // j-ascending sum per output element)
+                gemm::matmul_blocked(&mut qb[l], &x, &params[wq0..wq0 + d * d], s, d, d);
+                gemm::matmul_blocked(&mut kb[l], &x, &params[wk0..wk0 + d * d], s, d, d);
+                gemm::matmul_blocked(&mut vb[l], &x, &params[wv0..wv0 + d * d], s, d, d);
                 // causal softmax attention + context
                 for t in 0..s {
                     let mut m = f32::NEG_INFINITY;
@@ -392,75 +389,61 @@ impl NativeBundle {
                     for u in 0..=t {
                         ab[l][t * s + u] = row[u] * inv;
                     }
-                    for j in 0..d {
-                        let mut c = 0.0f32;
-                        for u in 0..=t {
-                            c += ab[l][t * s + u] * vb[l][u * d + j];
-                        }
-                        ctxb[l][t * d + j] = c;
+                    // context row: zero + one axpy per attended position
+                    // (u-ascending — the historical per-element order)
+                    let ctx_row = &mut ctxb[l][t * d..(t + 1) * d];
+                    ctx_row.fill(0.0);
+                    for u in 0..=t {
+                        gemm::axpy(ctx_row, ab[l][t * s + u], &vb[l][u * d..(u + 1) * d]);
                     }
                 }
-                // attention residual: X += Ctx · Wo
-                for t in 0..s {
-                    for j in 0..d {
-                        let mut o = 0.0f32;
-                        for j2 in 0..d {
-                            o += ctxb[l][t * d + j2] * params[wo0 + j2 * d + j];
-                        }
-                        x[t * d + j] += o;
-                    }
+                // attention residual: X += Ctx · Wo (compute the whole
+                // product, then add — per element still "one dot, one
+                // add", so the bits match the fused historical loop)
+                gemm::matmul_blocked(&mut resid, &ctxb[l], &params[wo0..wo0 + d * d], s, d, d);
+                for (xv, &r) in x.iter_mut().zip(resid.iter()) {
+                    *xv += r;
                 }
                 xmidb[l].copy_from_slice(&x);
                 // MLP residual: X += tanh(X W1) W2
-                for t in 0..s {
-                    for mth in 0..f {
-                        let mut pre = 0.0f32;
-                        for j in 0..d {
-                            pre += xmidb[l][t * d + j] * params[w10 + j * f + mth];
-                        }
-                        hhb[l][t * f + mth] = pre.tanh();
-                    }
+                gemm::matmul_blocked(&mut pre, &xmidb[l], &params[w10..w10 + d * f], s, d, f);
+                for (h, &p) in hhb[l].iter_mut().zip(pre.iter()) {
+                    *h = p.tanh();
                 }
-                for t in 0..s {
-                    for j in 0..d {
-                        let mut msum = 0.0f32;
-                        for mth in 0..f {
-                            msum += hhb[l][t * f + mth] * params[w20 + mth * d + j];
-                        }
-                        x[t * d + j] += msum;
-                    }
+                gemm::matmul_blocked(&mut resid, &hhb[l], &params[w20..w20 + f * d], s, f, d);
+                for (xv, &r) in x.iter_mut().zip(resid.iter()) {
+                    *xv += r;
                 }
             }
 
             // ---- head: loss per position (+ dWout, dX when training) ----
+            // one blocked GEMM for every position's logits, then the
+            // softmax/CE runs per row exactly as before
+            gemm::matmul_blocked(&mut logits, &x, &params[head0..head0 + d * VOCAB], s, d, VOCAB);
             for t in 0..s {
                 let y = batch.targets[base + t] as usize;
-                for (c, zc) in logits.iter_mut().enumerate() {
-                    let mut acc = 0.0f32;
-                    for j in 0..d {
-                        acc += x[t * d + j] * params[head0 + j * VOCAB + c];
-                    }
-                    *zc = acc;
-                }
-                let m = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                let zrow = &mut logits[t * VOCAB..(t + 1) * VOCAB];
+                let m = zrow.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
                 let mut z_sum = 0.0f32;
-                for zl in logits.iter_mut() {
+                for zl in zrow.iter_mut() {
                     *zl = (*zl - m).exp();
                     z_sum += *zl;
                 }
-                loss_acc += (z_sum.ln() - logits[y].ln()) as f64;
+                loss_acc += (z_sum.ln() - zrow[y].ln()) as f64;
                 let Some(g) = grads.as_deref_mut() else { continue };
 
                 let inv_z = 1.0 / z_sum;
-                for zl in logits.iter_mut() {
+                for zl in zrow.iter_mut() {
                     *zl *= inv_z * inv_pos;
                 }
-                logits[y] -= inv_pos;
+                zrow[y] -= inv_pos;
+                // the historical fused loop split: dWout rows become
+                // axpys, the dX dot stays a serial c-ascending sum
                 for j in 0..d {
                     let xv = x[t * d + j];
+                    gemm::axpy(&mut g[head0 + j * VOCAB..head0 + (j + 1) * VOCAB], xv, zrow);
                     let mut acc = 0.0f32;
-                    for (c, &dz) in logits.iter().enumerate() {
-                        g[head0 + j * VOCAB + c] += xv * dz;
+                    for (c, &dz) in zrow.iter().enumerate() {
                         acc += params[head0 + j * VOCAB + c] * dz;
                     }
                     dx[t * d + j] = acc;
@@ -471,26 +454,30 @@ impl NativeBundle {
             // ---- backward through the blocks, top down ----
             for l in (0..n_layer).rev() {
                 let (wq0, wk0, wv0, wo0, w10, w20) = offs(l);
-                // MLP: x_out = xmid + tanh(xmid W1) W2
+                // MLP: x_out = xmid + tanh(xmid W1) W2. Each fused
+                // weight-grad + input-grad loop below is split into an
+                // axpy (the weight row) and a serial dot (the input
+                // grad); per-element accumulation orders are unchanged.
                 for t in 0..s {
                     for mth in 0..f {
+                        let h = hhb[l][t * f + mth];
+                        let gw2 = &mut g[w20 + mth * d..w20 + (mth + 1) * d];
+                        gemm::axpy(gw2, h, &dx[t * d..(t + 1) * d]);
                         let mut dh = 0.0f32;
                         for j in 0..d {
-                            let dxj = dx[t * d + j];
-                            g[w20 + mth * d + j] += hhb[l][t * f + mth] * dxj;
-                            dh += params[w20 + mth * d + j] * dxj;
+                            dh += params[w20 + mth * d + j] * dx[t * d + j];
                         }
-                        let h = hhb[l][t * f + mth];
                         dpre[t * f + mth] = dh * (1.0 - h * h);
                     }
                 }
                 for t in 0..s {
                     for j in 0..d {
+                        let xm = xmidb[l][t * d + j];
+                        let gw1 = &mut g[w10 + j * f..w10 + (j + 1) * f];
+                        gemm::axpy(gw1, xm, &dpre[t * f..(t + 1) * f]);
                         let mut acc = 0.0f32;
                         for mth in 0..f {
-                            let dp = dpre[t * f + mth];
-                            g[w10 + j * f + mth] += xmidb[l][t * d + j] * dp;
-                            acc += params[w10 + j * f + mth] * dp;
+                            acc += params[w10 + j * f + mth] * dpre[t * f + mth];
                         }
                         dxmid[t * d + j] = dx[t * d + j] + acc;
                     }
@@ -499,11 +486,11 @@ impl NativeBundle {
                 for t in 0..s {
                     for j2 in 0..d {
                         let c = ctxb[l][t * d + j2];
+                        let gwo = &mut g[wo0 + j2 * d..wo0 + (j2 + 1) * d];
+                        gemm::axpy(gwo, c, &dxmid[t * d..(t + 1) * d]);
                         let mut acc = 0.0f32;
                         for j in 0..d {
-                            let dxm = dxmid[t * d + j];
-                            g[wo0 + j2 * d + j] += c * dxm;
-                            acc += params[wo0 + j2 * d + j] * dxm;
+                            acc += params[wo0 + j2 * d + j] * dxmid[t * d + j];
                         }
                         dctx[t * d + j2] = acc;
                     }
@@ -512,11 +499,10 @@ impl NativeBundle {
                 for t in 0..s {
                     for u in 0..=t {
                         let a_tu = ab[l][t * s + u];
+                        gemm::axpy(&mut dv[u * d..(u + 1) * d], a_tu, &dctx[t * d..(t + 1) * d]);
                         let mut acc = 0.0f32;
                         for j in 0..d {
-                            let dc = dctx[t * d + j];
-                            acc += dc * vb[l][u * d + j];
-                            dv[u * d + j] += a_tu * dc;
+                            acc += dctx[t * d + j] * vb[l][u * d + j];
                         }
                         da[t * s + u] = acc;
                     }
@@ -529,36 +515,45 @@ impl NativeBundle {
                         da[t * s + u] = ab[l][t * s + u] * (da[t * s + u] - dot);
                     }
                 }
+                // dQ rows accumulate u-ascending over K rows, dK rows
+                // mirror as the outer product over Q rows — the same
+                // per-element orders the fused historical loop produced
                 dk.fill(0.0);
                 for t in 0..s {
-                    for j in 0..d {
-                        let mut accq = 0.0f32;
-                        for u in 0..=t {
-                            let ds = da[t * s + u];
-                            accq += ds * kb[l][u * d + j];
-                            dk[u * d + j] += ds * qb[l][t * d + j];
-                        }
-                        dq[t * d + j] = accq * att_scale;
+                    let dq_row = &mut dq[t * d..(t + 1) * d];
+                    dq_row.fill(0.0);
+                    for u in 0..=t {
+                        gemm::axpy(dq_row, da[t * s + u], &kb[l][u * d..(u + 1) * d]);
+                    }
+                    for dqv in dq_row.iter_mut() {
+                        *dqv *= att_scale;
+                    }
+                    let q_row = &qb[l][t * d..(t + 1) * d];
+                    for u in 0..=t {
+                        gemm::axpy(&mut dk[u * d..(u + 1) * d], da[t * s + u], q_row);
                     }
                 }
                 for dkv in dk.iter_mut() {
                     *dkv *= att_scale;
                 }
-                // projections + both residual paths into dX of this block
+                // projections + both residual paths into dX of this
+                // block: the weight-grad rows become axpys; the dx
+                // triple-dot keeps the fused form — its summand
+                // grouping is part of the bit-identity contract
                 for t in 0..s {
+                    let dq_row = &dq[t * d..(t + 1) * d];
+                    let dk_row = &dk[t * d..(t + 1) * d];
+                    let dv_row = &dv[t * d..(t + 1) * d];
                     for j in 0..d {
                         let xi = xin[l][t * d + j];
+                        gemm::axpy(&mut g[wq0 + j * d..wq0 + (j + 1) * d], xi, dq_row);
+                        gemm::axpy(&mut g[wk0 + j * d..wk0 + (j + 1) * d], xi, dk_row);
+                        gemm::axpy(&mut g[wv0 + j * d..wv0 + (j + 1) * d], xi, dv_row);
                         let mut acc = dxmid[t * d + j];
                         for j2 in 0..d {
-                            let dqv = dq[t * d + j2];
-                            let dkv = dk[t * d + j2];
-                            let dvv = dv[t * d + j2];
-                            g[wq0 + j * d + j2] += xi * dqv;
-                            g[wk0 + j * d + j2] += xi * dkv;
-                            g[wv0 + j * d + j2] += xi * dvv;
-                            acc += params[wq0 + j * d + j2] * dqv
-                                + params[wk0 + j * d + j2] * dkv
-                                + params[wv0 + j * d + j2] * dvv;
+                            acc += params[wq0 + j * d + j2] * dq_row[j2]
+                                + params[wk0 + j * d + j2] * dk_row[j2]
+                                + params[wv0 + j * d + j2] * dv_row[j2];
                         }
                         dx[t * d + j] = acc;
                     }

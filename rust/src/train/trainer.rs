@@ -257,6 +257,10 @@ impl Trainer {
     ) -> Result<Trainer> {
         cfg.validate()?;
         anyhow::ensure!(bundle.info().name == cfg.preset, "bundle/preset mismatch");
+        // Best-effort benchmarking knob: helpers pin at spawn, so this
+        // only takes effect if set before the process first touches the
+        // global pool (thread placement cannot change any trajectory).
+        pool::set_pin_workers(cfg.pin_workers);
         let info = bundle.info();
         let p = info.param_count;
         // the layout contract: validated at backend construction, so a
@@ -890,6 +894,17 @@ impl Trainer {
         {
             self.payloads =
                 (0..n).map(|_| WirePayload::with_layout(self.wire, &self.layout)).collect();
+            // Pin the framed-encoding contract at every rebuild in
+            // debug builds: the frame length a rank would put on the
+            // simulated wire is exactly the byte count the clock bills.
+            #[cfg(debug_assertions)]
+            {
+                let mut frame = Vec::new();
+                for pl in &self.payloads {
+                    pl.encode_into(&mut frame);
+                    debug_assert_eq!(frame.len() as u64, pl.wire_bytes());
+                }
+            }
         }
     }
 

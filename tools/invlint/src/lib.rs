@@ -32,6 +32,13 @@
 //! * **W6 — no `.unwrap()` / `.expect(..)`** outside `#[cfg(test)]`.
 //! * **W7 — documented `unsafe`.** Every `unsafe` token needs a
 //!   `// SAFETY:` comment within the six preceding lines.
+//! * **W8 — hot-path codec discipline.** Inside `train/` and `outer/`,
+//!   the allocating codec conveniences (`pack_signs`, `unpack_signs`,
+//!   `quantize_diff_into`) may not be called outside `#[cfg(test)]`:
+//!   the round hot path reuses payload buffers through the exact-lane
+//!   variants (`pack_signs_into`, `quantize_diff_slice`, the
+//!   `PackedVotes`/`dist::kernels` decode paths), so a per-round
+//!   allocation cannot creep back in behind a convenience call.
 //!
 //! A finding can be waived with a comment `invlint: allow(W6)` on the
 //! same or the preceding line; the live tree currently needs no waivers.
@@ -988,6 +995,36 @@ fn w7_safety(f: &SourceFile, out: &mut Vec<Violation>) {
     }
 }
 
+/// W8: no allocating codec entry points on the round hot path — inside
+/// `train/` / `outer/`, calls to `pack_signs` / `unpack_signs` /
+/// `quantize_diff_into` (ident directly followed by `(`) are flagged
+/// outside `#[cfg(test)]`.
+fn w8_codec_hot_path(f: &SourceFile, out: &mut Vec<Violation>) {
+    if !(f.rel.starts_with("train/") || f.rel.starts_with("outer/")) {
+        return;
+    }
+    const BANNED: [&str; 3] = ["pack_signs", "unpack_signs", "quantize_diff_into"];
+    for (i, t) in f.toks.iter().enumerate() {
+        if f.in_test[i] || t.kind != Kind::Ident || !BANNED.contains(&t.text.as_str()) {
+            continue;
+        }
+        if !f.toks.get(i + 1).is_some_and(|n| is_punct(n, "(")) {
+            continue;
+        }
+        push(
+            out,
+            f,
+            "W8",
+            t.line,
+            format!(
+                "allocating codec entry point `{}(..)` on the round hot path: use the \
+                 preallocated `_into`/`_slice` variant over the payload's own buffers",
+                t.text
+            ),
+        );
+    }
+}
+
 // ---------------------------------------------------------------- driver
 
 /// Lint a set of `(relative_path, source_text)` pairs. Paths use `/`
@@ -1004,6 +1041,7 @@ pub fn lint_sources(files: &[(String, String)]) -> Vec<Violation> {
         w5_rng_hygiene(f, &mut out);
         w6_unwrap(f, &mut out);
         w7_safety(f, &mut out);
+        w8_codec_hot_path(f, &mut out);
     }
     w2_reconcile(&ck, &mut out);
     out.sort_by(|a, b| (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule)));

@@ -11,7 +11,7 @@ fn main() -> ExitCode {
     };
     match invlint::lint_tree(&root) {
         Ok(v) if v.is_empty() => {
-            println!("invlint: {} is clean (rules W1-W7)", root.display());
+            println!("invlint: {} is clean (rules W1-W8)", root.display());
             ExitCode::SUCCESS
         }
         Ok(v) => {

@@ -1,0 +1,12 @@
+// W8 true-positive fixture: a round hot path leaning on the allocating
+// codec conveniences (one violation per banned entry point).
+
+use crate::dist::codec;
+
+fn exchange_round(diff: &[f32], start: &[f32], end: &[f32]) -> (Vec<u8>, Vec<f32>, Vec<u8>) {
+    let packed = codec::pack_signs(diff);
+    let decoded = codec::unpack_signs(&packed, diff.len());
+    let mut q = Vec::new();
+    let _scale = codec::quantize_diff_into(start, end, &mut q);
+    (packed, decoded, q)
+}

@@ -1,0 +1,21 @@
+// W8 clean fixture: the hot path reuses preallocated buffers through
+// the exact-lane variants; the allocating conveniences only appear
+// inside #[cfg(test)], where they are exempt.
+
+use crate::dist::codec;
+
+fn exchange_round(diff: &[f32], start: &[f32], end: &[f32], bytes: &mut [u8]) -> f32 {
+    let mut packed = Vec::new();
+    codec::pack_signs_into(diff, &mut packed);
+    codec::quantize_diff_slice(start, end, bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn round_trip() {
+        let packed = crate::dist::codec::pack_signs(&[1.0, -1.0]);
+        let signs = crate::dist::codec::unpack_signs(&packed, 2);
+        assert_eq!(signs.len(), 2);
+    }
+}

@@ -95,6 +95,28 @@ fn w7_requires_safety_comments_on_unsafe() {
 }
 
 #[test]
+fn w8_flags_allocating_codec_calls_on_the_hot_path() {
+    let bad = lint_as("train/trainer.rs", include_str!("fixtures/w8_fail.rs"));
+    let w8 = hits(&bad, "W8");
+    assert_eq!(w8.len(), 3, "{bad:?}");
+    assert!(w8[0].msg.contains("pack_signs"), "{:?}", w8[0]);
+    assert!(w8.iter().any(|v| v.msg.contains("quantize_diff_into")), "{bad:?}");
+
+    // the same text under outer/ is equally hot-path
+    let outer = lint_as("outer/sign_momentum.rs", include_str!("fixtures/w8_fail.rs"));
+    assert_eq!(hits(&outer, "W8").len(), 3, "{outer:?}");
+
+    // the exact-lane variants pass, and test-only convenience use is exempt
+    let good = lint_as("train/trainer.rs", include_str!("fixtures/w8_pass.rs"));
+    assert!(hits(&good, "W8").is_empty(), "{good:?}");
+
+    // scoped: the codec module itself (definitions, round-trip tests)
+    // uses the allocating forms freely
+    let elsewhere = lint_as("dist/codec.rs", include_str!("fixtures/w8_fail.rs"));
+    assert!(hits(&elsewhere, "W8").is_empty(), "{elsewhere:?}");
+}
+
+#[test]
 fn live_tree_is_clean() {
     let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../../rust/src");
     let violations = match invlint::lint_tree(&root) {
